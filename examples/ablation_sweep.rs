@@ -1,0 +1,19 @@
+//! Ablation sweep example: regenerates the τ0/β trade-off curves of paper
+//! Tables 4/5 (and Fig. 8) through the public experiments API.
+//!
+//! ```bash
+//! cargo run --release --example ablation_sweep -- [--quick] [--n 32]
+//! ```
+
+use anyhow::Result;
+use speca::util::cli::Args;
+
+fn main() -> Result<()> {
+    let mut args = Args::from_env();
+    args.positional = vec!["bench".into(), "table5".into()];
+    speca::experiments::tables::run(&args)?;
+    args.positional = vec!["bench".into(), "table4".into()];
+    speca::experiments::tables::run(&args)?;
+    println!("\n(see results/table4.csv and results/table5.csv)");
+    Ok(())
+}

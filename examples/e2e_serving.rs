@@ -1,0 +1,114 @@
+//! END-TO-END serving driver (DESIGN.md §6, EXPERIMENTS.md §E2E): boots
+//! the full stack — PJRT runtime, SpeCa engine, TCP server — then drives
+//! batched client traffic with mixed policies, and reports
+//! latency/throughput plus quality vs the full-compute reference.
+//!
+//! ```bash
+//! cargo run --release --example e2e_serving            # full run
+//! cargo run --release --example e2e_serving -- --quick # CI-sized
+//! ```
+
+use std::thread;
+
+use anyhow::Result;
+use speca::config::Manifest;
+use speca::coordinator::{Engine, EngineConfig};
+use speca::experiments::runner::{evaluate_quality, run_policy};
+use speca::runtime::{ClassifierRuntime, ModelRuntime, Runtime};
+use speca::server::{client, serve, ServerConfig};
+use speca::util::cli::Args;
+use speca::workload::parse_policy;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let quick = args.bool("quick");
+    let n_requests = args.usize("n", if quick { 16 } else { 64 });
+    let model_name = args.str("model", "dit-sim");
+    let addr = args.str("addr", "127.0.0.1:7891");
+
+    let manifest = Manifest::load(&speca::artifacts_dir())?;
+    let entry = manifest.model(&model_name)?;
+    let rt = Runtime::cpu()?;
+    let model = ModelRuntime::load(&rt, entry)?;
+    model.precompile(&["full", "block", "head"], &entry.config.buckets)?;
+    println!("[e2e] artifacts compiled: model={model_name} depth={} tokens={}",
+             entry.config.depth, entry.config.tokens);
+
+    // ---- phase 1: serve mixed-policy traffic over TCP ------------------
+    let policies = ["full", "fora:N=6", "taylorseer:N=5,O=2", "speca:N=5,O=2,tau0=0.3,beta=0.05"];
+    let addr2 = addr.clone();
+    let classes = entry.config.num_classes;
+    let driver = thread::spawn(move || -> Vec<(String, client::LoadReport)> {
+        // wait for the listener
+        for _ in 0..200 {
+            if std::net::TcpStream::connect(&addr2).is_ok() {
+                break;
+            }
+            thread::sleep(std::time::Duration::from_millis(25));
+        }
+        let mut reports = Vec::new();
+        for p in policies {
+            let cfg = client::LoadConfig {
+                addr: addr2.clone(),
+                connections: 4,
+                requests: n_requests / policies.len(),
+                policy: p.to_string(),
+                num_classes: classes,
+            };
+            match client::run_load(&cfg) {
+                Ok(rep) => reports.push((p.to_string(), rep)),
+                Err(e) => eprintln!("[e2e] load {p}: {e}"),
+            }
+        }
+        client::shutdown(&addr2);
+        reports
+    });
+
+    let mut engine = Engine::new(&model, EngineConfig { max_inflight: 8, ..Default::default() });
+    let served = serve(&mut engine, &ServerConfig { addr, max_queue: 256 })?;
+    let reports = driver.join().unwrap();
+
+    println!("\n[e2e] served {served} requests over TCP (4 connections/policy)");
+    println!(
+        "{:<40} {:>6} {:>9} {:>9} {:>9} {:>9} {:>9}",
+        "policy", "n", "rps", "mean ms", "p50 ms", "p99 ms", "speedup"
+    );
+    for (p, mut rep) in reports {
+        let (mean, p50, _, p99) = rep.latency.summary();
+        println!(
+            "{:<40} {:>6} {:>9.2} {:>9.1} {:>9.1} {:>9.1} {:>8.2}x",
+            p, rep.completed, rep.throughput_rps, mean, p50, p99, rep.mean_speedup
+        );
+    }
+
+    // ---- phase 2: quality vs full-compute reference ---------------------
+    let cls = ClassifierRuntime::load(&rt, &manifest.classifier)?;
+    let nq = if quick { 12 } else { 32 };
+    println!("\n[e2e] quality check (n={nq} matched seeds per policy):");
+    let reference = run_policy(
+        &model,
+        &parse_policy("full", entry.config.depth)?,
+        "full",
+        nq,
+        7,
+        8,
+        false,
+    )?;
+    println!(
+        "{:<40} {:>8} {:>8} {:>8} {:>9}",
+        "policy", "FID*", "IS*", "ImgRwd*", "speedup"
+    );
+    for desc in ["full", "fora:N=6", "taylorseer:N=5,O=2", "speca:N=5,O=2,tau0=0.3,beta=0.05"] {
+        let p = parse_policy(desc, entry.config.depth)?;
+        let run = run_policy(&model, &p, desc, nq, 7, 8, false)?;
+        let q = evaluate_quality(&run, &reference, &entry.config, &cls)?;
+        let speed = (nq * entry.config.serve_steps) as f64 * entry.flops.full_step[&1] as f64
+            / run.flops.total().max(1) as f64;
+        println!(
+            "{:<40} {:>8.3} {:>8.2} {:>8.4} {:>8.2}x",
+            desc, q.fid, q.is, q.fidelity, speed
+        );
+    }
+    println!("\n[e2e] OK — full stack (PJRT runtime → engine → TCP) exercised.");
+    Ok(())
+}

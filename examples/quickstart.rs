@@ -1,0 +1,60 @@
+//! Quickstart: load the AOT artifacts, generate a few class-conditional
+//! samples with SpeCa, and print the acceptance/speedup statistics.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+use speca::config::Manifest;
+use speca::coordinator::{Engine, EngineConfig};
+use speca::runtime::{ModelRuntime, Runtime};
+use speca::workload::{batch_requests, parse_policy};
+
+fn main() -> Result<()> {
+    // 1. load the manifest + model weights, compile executables on PJRT CPU
+    let manifest = Manifest::load(&speca::artifacts_dir())?;
+    let entry = manifest.model("dit-sim")?;
+    let rt = Runtime::cpu()?;
+    let model = ModelRuntime::load(&rt, entry)?;
+
+    // 2. build an engine and submit 8 requests under the SpeCa policy
+    let mut engine = Engine::new(&model, EngineConfig::default());
+    let policy = parse_policy("speca:N=5,O=2,tau0=0.3,beta=0.05", entry.config.depth)?;
+    for r in batch_requests(8, entry.config.num_classes, &policy, 0, false) {
+        engine.submit(r);
+    }
+
+    // 3. run the forecast-then-verify loop to completion
+    let completions = engine.run_to_completion()?;
+
+    // 4. inspect per-request statistics
+    let full1 = entry.flops.full_step[&1];
+    let steps = entry.config.serve_steps;
+    println!("{:<4} {:>5} {:>5} {:>4} {:>8} {:>8}", "id", "full", "spec", "rej", "lat ms", "speedup");
+    for c in &completions {
+        println!(
+            "{:<4} {:>5} {:>5} {:>4} {:>8.1} {:>7.2}x",
+            c.id,
+            c.stats.full_steps,
+            c.stats.spec_steps,
+            c.stats.rejects,
+            c.stats.latency_ms,
+            c.stats.speedup(full1, steps)
+        );
+    }
+    let f = &engine.flops;
+    println!(
+        "\nacceptance α={:.3}  verify cost γ={:.4}  FLOPs speedup {:.2}x \
+         (paper law 1/(1−α+αγ) = {:.2}x)",
+        f.acceptance_rate(),
+        f.gamma(),
+        f.speedup(full1),
+        f.predicted_speedup()
+    );
+
+    // 5. dump the generated images as PGM grids
+    speca::experiments::runner::dump_pgm(&completions, &entry.config, "out/quickstart")?;
+    println!("sample images in out/quickstart/*.pgm");
+    Ok(())
+}

@@ -1,0 +1,63 @@
+//! Fig. 9 reproduction + terminal visualization: PCA trajectories of the
+//! last-boundary feature under full / FORA / TaylorSeer / SpeCa policies.
+//! SpeCa's path should hug the full-compute path; reuse-style caches drift.
+//!
+//! ```bash
+//! cargo run --release --example trajectory_viz
+//! ```
+
+use anyhow::Result;
+use speca::util::cli::Args;
+use speca::util::json::Json;
+
+fn main() -> Result<()> {
+    let mut args = Args::from_env();
+    args.positional = vec!["bench".into(), "fig9".into()];
+    speca::experiments::tables::run(&args)?;
+
+    // ASCII-render results/fig9.csv
+    let csv = std::fs::read_to_string("results/fig9.csv")?;
+    let mut pts: Vec<(String, f64, f64)> = Vec::new();
+    for line in csv.lines().skip(1) {
+        let parts: Vec<&str> = line.split(',').collect();
+        if parts.len() == 4 {
+            pts.push((
+                parts[0].to_string(),
+                parts[2].parse().unwrap_or(0.0),
+                parts[3].parse().unwrap_or(0.0),
+            ));
+        }
+    }
+    let (mut min_x, mut max_x) = (f64::MAX, f64::MIN);
+    let (mut min_y, mut max_y) = (f64::MAX, f64::MIN);
+    for (_, x, y) in &pts {
+        min_x = min_x.min(*x);
+        max_x = max_x.max(*x);
+        min_y = min_y.min(*y);
+        max_y = max_y.max(*y);
+    }
+    let (w, h) = (72usize, 24usize);
+    let mut grid = vec![vec![' '; w]; h];
+    let glyph = |p: &str| match p {
+        "full" => 'o',
+        "speca" => '*',
+        "taylorseer" => 't',
+        _ => 'f',
+    };
+    for (p, x, y) in &pts {
+        let cx = ((x - min_x) / (max_x - min_x + 1e-12) * (w - 1) as f64) as usize;
+        let cy = ((y - min_y) / (max_y - min_y + 1e-12) * (h - 1) as f64) as usize;
+        let cell = &mut grid[h - 1 - cy][cx];
+        // full-path marker wins ties so overlap with speca is visible
+        if *cell == ' ' || glyph(p) == 'o' {
+            *cell = glyph(p);
+        }
+    }
+    println!("\nPCA trajectory plane (o=full  *=speca  t=taylorseer  f=fora):");
+    for row in grid {
+        println!("  {}", row.iter().collect::<String>());
+    }
+    let _ = Json::Null; // keep util linked for doc purposes
+    println!("\nraw data: results/fig9.csv");
+    Ok(())
+}

@@ -1,0 +1,381 @@
+"""AOT compile path: train → lower → serialize artifacts for the Rust runtime.
+
+Run once by ``make artifacts`` (no-op when outputs are newer than inputs).
+Python never appears on the request path; everything the Rust coordinator
+needs lands in ``artifacts/``:
+
+* ``<model>/weights.bin``    — trained parameters (mini-safetensors, see
+                               ``write_tensors``; rust/src/weights mirrors it)
+* ``<model>/*.hlo.txt``      — HLO **text** per entry point × batch bucket.
+  Text, not ``.serialize()``: jax ≥ 0.5 emits protos with 64-bit instruction
+  ids that xla_extension 0.5.1 rejects; the text parser reassigns ids
+  (see /opt/xla-example/README.md).
+* ``<model>/goldens.bin``    — reference traces for Rust integration tests
+* ``classifier/...``         — metrics classifier + FID reference stats
+* ``manifest.json``          — shapes, schedules, FLOPs model, artifact map
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import struct
+import sys
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import train as T
+from .configs import CLASSIFIER, CONFIGS, ModelConfig
+from .kernels import ddim as kddim
+from .kernels import ref as kref
+from .kernels import taylor as ktaylor
+from .kernels import verify as kverify
+
+MANIFEST_VERSION = 3
+
+
+# ---------------------------------------------------------------------------
+# HLO text lowering
+# ---------------------------------------------------------------------------
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def lower_to_file(fn, arg_specs, path: str) -> int:
+    text = to_hlo_text(jax.jit(fn, keep_unused=True).lower(*arg_specs))
+    with open(path, "w") as f:
+        f.write(text)
+    return len(text)
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+# ---------------------------------------------------------------------------
+# Tensor container (mini-safetensors; rust/src/weights/mod.rs is the reader)
+# ---------------------------------------------------------------------------
+
+MAGIC = b"SPCA"
+DTYPE_F32, DTYPE_I32 = 0, 1
+
+
+def write_tensors(path: str, tensors: List):
+    """tensors: list of (name, np.ndarray[f32|i32])."""
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<II", 1, len(tensors)))
+        for name, arr in tensors:
+            arr = np.ascontiguousarray(arr)
+            if arr.dtype == np.float32:
+                dt = DTYPE_F32
+            elif arr.dtype == np.int32:
+                dt = DTYPE_I32
+            else:
+                raise ValueError(f"{name}: unsupported dtype {arr.dtype}")
+            nb = name.encode()
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", dt, arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            raw = arr.tobytes()
+            f.write(struct.pack("<Q", len(raw)))
+            f.write(raw)
+
+
+# ---------------------------------------------------------------------------
+# Per-model pipeline
+# ---------------------------------------------------------------------------
+
+def config_hash(cfg: ModelConfig) -> str:
+    return hashlib.sha256(repr(cfg).encode()).hexdigest()[:16]
+
+
+def train_or_load(cfg: ModelConfig, out_dir: str, force: bool):
+    """Training is cached in <out>/<model>/params.npz keyed by config hash."""
+    cache = os.path.join(out_dir, cfg.name, "params.npz")
+    h = config_hash(cfg)
+    if not force and os.path.exists(cache):
+        data = np.load(cache, allow_pickle=False)
+        if data.get("__hash__") is not None and str(data["__hash__"]) == h:
+            print(f"[{cfg.name}] using cached weights ({cache})")
+            params = {n: jnp.asarray(data[n]) for n in M.PARAM_NAMES}
+            losses = data["__losses__"].tolist()
+            return params, losses
+    print(f"[{cfg.name}] training ({cfg.train_steps} steps)...")
+    params, losses = T.train_model(cfg)
+    os.makedirs(os.path.dirname(cache), exist_ok=True)
+    np.savez(cache, __hash__=h, __losses__=np.asarray(losses, np.float32),
+             **{n: np.asarray(v) for n, v in params.items()})
+    return params, losses
+
+
+def lower_model_artifacts(cfg: ModelConfig, out_dir: str) -> Dict:
+    """Lower every entry point for every batch bucket. Returns artifact map
+    of repo-relative paths."""
+    d = cfg.name
+    os.makedirs(os.path.join(out_dir, d), exist_ok=True)
+    latent = cfg.frames * cfg.channels * cfg.image_size ** 2
+    T_, D, L = cfg.tokens, cfg.dim, cfg.depth
+    wspecs = [spec(s) for s in (M.param_shapes(cfg)[n] for n in M.PARAM_NAMES)]
+    arts: Dict = {"full": {}, "full_eps": {}, "block": {}, "head": {}, "full_pallas": {}}
+
+    for B in cfg.buckets:
+        xs, ts = spec([B, latent]), spec([B])
+        ys = spec([B], jnp.int32)
+        fs = spec([B, T_, D])
+
+        def full(*a):
+            p = M.unflatten_params(a[:len(M.PARAM_NAMES)])
+            return M.full_fwd(p, *a[len(M.PARAM_NAMES):], cfg=cfg)
+
+        def blockf(*a):
+            p = M.unflatten_params(a[:len(M.PARAM_NAMES)])
+            layer, feat, t, y = a[len(M.PARAM_NAMES):]
+            return (M.block_fwd(p, layer, feat, t, y, cfg),)
+
+        def headf(*a):
+            p = M.unflatten_params(a[:len(M.PARAM_NAMES)])
+            return (M.head_fwd(p, *a[len(M.PARAM_NAMES):], cfg=cfg),)
+
+        f = os.path.join(d, f"full_b{B}.hlo.txt")
+        lower_to_file(full, wspecs + [xs, ts, ys], os.path.join(out_dir, f))
+        arts["full"][str(B)] = f
+
+        # eps-only variant: skips the [L+1,B,T,D] boundary output transfer
+        # for policies that never read the feature cache (perf pass finding)
+        def full_eps(*a):
+            p = M.unflatten_params(a[:len(M.PARAM_NAMES)])
+            eps, _ = M.full_fwd(p, *a[len(M.PARAM_NAMES):], cfg=cfg)
+            return (eps,)
+
+        f = os.path.join(d, f"full_eps_b{B}.hlo.txt")
+        lower_to_file(full_eps, wspecs + [xs, ts, ys], os.path.join(out_dir, f))
+        arts["full_eps"][str(B)] = f
+
+        f = os.path.join(d, f"block_b{B}.hlo.txt")
+        lower_to_file(blockf, wspecs + [spec([], jnp.int32), fs, ts, ys],
+                      os.path.join(out_dir, f))
+        arts["block"][str(B)] = f
+
+        f = os.path.join(d, f"head_b{B}.hlo.txt")
+        lower_to_file(headf, wspecs + [fs, ts, ys], os.path.join(out_dir, f))
+        arts["head"][str(B)] = f
+
+    # Pallas-attention variant of the full pass (bucket 1): used by the L1
+    # structure benches and the perf comparison in EXPERIMENTS.md §Perf.
+    def full_pallas(*a):
+        p = M.unflatten_params(a[:len(M.PARAM_NAMES)])
+        return M.full_fwd(p, *a[len(M.PARAM_NAMES):], cfg=cfg, use_pallas=True)
+
+    f = os.path.join(d, "full_pallas_b1.hlo.txt")
+    lower_to_file(full_pallas, wspecs + [spec([1, latent]), spec([1]), spec([1], jnp.int32)],
+                  os.path.join(out_dir, f))
+    arts["full_pallas"]["1"] = f
+
+    # Standalone L1 kernel artifacts (parity-checked against the native Rust
+    # implementations; also used by kernel micro-benches).
+    feat_flat = T_ * D
+    f = os.path.join(d, "taylor_predict_m3.hlo.txt")
+    lower_to_file(lambda fac, k, n: (ktaylor.taylor_predict(fac, k, n),),
+                  [spec([3, feat_flat]), spec([]), spec([])], os.path.join(out_dir, f))
+    arts["taylor_predict"] = f
+
+    f = os.path.join(d, "taylor_update_m3.hlo.txt")
+    lower_to_file(lambda fac, ft: (ktaylor.taylor_update(fac, ft),),
+                  [spec([3, feat_flat]), spec([feat_flat])], os.path.join(out_dir, f))
+    arts["taylor_update"] = f
+
+    f = os.path.join(d, "verify_stats.hlo.txt")
+    lower_to_file(lambda a, b: (kverify.verify_stats(a, b),),
+                  [spec([feat_flat]), spec([feat_flat])], os.path.join(out_dir, f))
+    arts["verify_stats"] = f
+
+    f = os.path.join(d, "step.hlo.txt")
+    if cfg.schedule == "ddim":
+        lower_to_file(lambda x, e, a, b: (kddim.ddim_step(x, e, a, b),),
+                      [spec([latent]), spec([latent]), spec([]), spec([])],
+                      os.path.join(out_dir, f))
+    else:
+        lower_to_file(lambda x, v, dt: (kddim.rf_step(x, v, dt),),
+                      [spec([latent]), spec([latent]), spec([])],
+                      os.path.join(out_dir, f))
+    arts["step"] = f
+    return arts
+
+
+def make_goldens(cfg: ModelConfig, params, out_dir: str):
+    """Reference traces the Rust integration tests replay bit-for-bit-ish
+    (1e-3 tolerance across the PJRT text round-trip)."""
+    latent = cfg.frames * cfg.channels * cfg.image_size ** 2
+    sched = T.schedule_for(cfg)
+    key = jax.random.PRNGKey(1234)
+    k1, k2 = jax.random.split(key)
+    x = jax.random.normal(k1, (1, latent), jnp.float32)
+    y = jnp.asarray([3 % cfg.num_classes], jnp.int32)
+    x_T = np.asarray(x[0]).copy()
+
+    eps_all, x_all = [], []
+    boundaries0 = None
+    for i in range(cfg.serve_steps):
+        t = jnp.asarray([sched["t_model"][i]], jnp.float32)
+        eps, bounds = M.full_fwd(params, x, t, y, cfg)
+        if i == 0:
+            boundaries0 = np.asarray(bounds[:, 0])      # [L+1, T, D]
+        eps_all.append(np.asarray(eps[0]))
+        if sched["kind"] == "ddim":
+            x = kref.ddim_step_ref(x, eps, sched["ab_t"][i], sched["ab_prev"][i])
+        else:
+            x = kref.rf_step_ref(x, eps, sched["dt"])
+        x_all.append(np.asarray(x[0]))
+
+    # single-block + head parity points at the first step
+    v = cfg.depth - 1
+    t0 = jnp.asarray([sched["t_model"][0]], jnp.float32)
+    blk_out = M.block_fwd(params, jnp.int32(v), jnp.asarray(boundaries0[v][None]), t0, y, cfg)
+    head_out = M.head_fwd(params, jnp.asarray(boundaries0[cfg.depth][None]), t0, y, cfg)
+
+    tensors = [
+        ("x_T", x_T.astype(np.float32)),
+        ("y", np.asarray([3 % cfg.num_classes], np.int32)),
+        ("eps_all", np.stack(eps_all).astype(np.float32)),
+        ("x_all", np.stack(x_all).astype(np.float32)),
+        ("boundaries0", boundaries0.astype(np.float32)),
+        ("verify_layer", np.asarray([v], np.int32)),
+        ("block_out", np.asarray(blk_out[0], np.float32)),
+        ("head_out", np.asarray(head_out[0], np.float32)),
+    ]
+    path = os.path.join(out_dir, cfg.name, "goldens.bin")
+    write_tensors(path, tensors)
+    return os.path.join(cfg.name, "goldens.bin")
+
+
+def build_model(cfg: ModelConfig, out_dir: str, force_train: bool) -> Dict:
+    params, losses = train_or_load(cfg, out_dir, force_train)
+    weights_rel = os.path.join(cfg.name, "weights.bin")
+    write_tensors(os.path.join(out_dir, weights_rel),
+                  [(n, np.asarray(params[n], np.float32)) for n in M.PARAM_NAMES])
+    print(f"[{cfg.name}] lowering artifacts...", flush=True)
+    arts = lower_model_artifacts(cfg, out_dir)
+    goldens_rel = make_goldens(cfg, params, out_dir)
+    latent = cfg.frames * cfg.channels * cfg.image_size ** 2
+    entry = {
+        "config": {
+            "name": cfg.name, "image_size": cfg.image_size, "channels": cfg.channels,
+            "patch": cfg.patch, "dim": cfg.dim, "depth": cfg.depth, "heads": cfg.heads,
+            "mlp_ratio": cfg.mlp_ratio, "num_classes": cfg.num_classes,
+            "frames": cfg.frames, "schedule": cfg.schedule,
+            "serve_steps": cfg.serve_steps, "train_timesteps": cfg.train_timesteps,
+            "tokens": cfg.tokens, "latent_dim": latent, "buckets": cfg.buckets,
+        },
+        "schedule": T.schedule_for(cfg),
+        "params": [{"name": n, "shape": list(M.param_shapes(cfg)[n])}
+                   for n in M.PARAM_NAMES],
+        "weights": weights_rel,
+        "goldens": goldens_rel,
+        "artifacts": arts,
+        "flops": {
+            "full_step": {str(b): cfg.full_step_flops(b) for b in cfg.buckets},
+            "block": {str(b): cfg.block_flops(b) for b in cfg.buckets},
+            "head": {str(b): cfg.head_flops(b) + cfg.embed_flops(b) for b in cfg.buckets},
+            "predict_per_order": cfg.predict_flops(1, 1) // 2,
+        },
+        "train_losses": losses,
+    }
+    return entry
+
+
+def build_classifier(out_dir: str, force_train: bool) -> Dict:
+    from .configs import DIT_SIM
+    cfg = DIT_SIM
+    cdir = os.path.join(out_dir, "classifier")
+    os.makedirs(cdir, exist_ok=True)
+    cache = os.path.join(cdir, "params.npz")
+    if not force_train and os.path.exists(cache):
+        data = np.load(cache)
+        params = {n: jnp.asarray(data[n]) for n in M.CLS_PARAM_NAMES}
+        acc = float(data["__acc__"])
+        print(f"[classifier] using cached weights (acc {acc:.3f})")
+    else:
+        print("[classifier] training...")
+        params, acc = T.train_classifier(cfg)
+        np.savez(cache, __acc__=acc, **{n: np.asarray(v) for n, v in params.items()})
+
+    mu, cov, mu_p, cov_p = T.reference_stats(params, cfg)
+    latent = cfg.image_size * cfg.image_size * cfg.channels
+    tensors = [(n, np.asarray(params[n], np.float32)) for n in M.CLS_PARAM_NAMES]
+    tensors += [("fid_mu", mu), ("fid_cov", cov), ("sfid_mu", mu_p), ("sfid_cov", cov_p)]
+    write_tensors(os.path.join(cdir, "weights.bin"), tensors)
+
+    arts = {}
+    cc = CLASSIFIER
+    cls_shapes = M.cls_param_shapes(latent, cc.hidden, cc.feat_dim, cc.num_classes)
+    cspecs = [spec(cls_shapes[n]) for n in M.CLS_PARAM_NAMES]
+    for B in (1, 16, 64):
+        def clsf(*a):
+            p = dict(zip(M.CLS_PARAM_NAMES, a[:len(M.CLS_PARAM_NAMES)]))
+            return M.cls_fwd(p, a[-1])
+        f = os.path.join("classifier", f"cls_b{B}.hlo.txt")
+        lower_to_file(clsf, cspecs + [spec([B, latent])], os.path.join(out_dir, f))
+        arts[str(B)] = f
+
+    # goldens
+    k1, k2 = jax.random.split(jax.random.PRNGKey(99))
+    y = jax.random.randint(k1, (4,), 0, cc.num_classes)
+    frame_cfg = cfg
+    x = T.make_samples(ModelConfig(name="_f", image_size=cfg.image_size,
+                                   channels=cfg.channels, frames=1,
+                                   dim=cfg.dim, depth=cfg.depth, heads=cfg.heads),
+                       y, k2)
+    logits, feats = M.cls_fwd(params, x)
+    write_tensors(os.path.join(cdir, "goldens.bin"), [
+        ("cls_in", np.asarray(x, np.float32)),
+        ("cls_logits", np.asarray(logits, np.float32)),
+        ("cls_feats", np.asarray(feats, np.float32)),
+    ])
+
+    return {
+        "weights": "classifier/weights.bin",
+        "goldens": "classifier/goldens.bin",
+        "artifacts": arts,
+        "params": [{"name": n, "shape": list(cls_shapes[n])} for n in M.CLS_PARAM_NAMES],
+        "acc": acc,
+        "feat_dim": cc.feat_dim,
+        "num_classes": cc.num_classes,
+        "latent_dim": latent,
+        "buckets": [1, 16, 64],
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default="dit-sim,flux-sim,video-sim")
+    ap.add_argument("--force-train", action="store_true")
+    args = ap.parse_args()
+    out = os.path.abspath(args.out)
+    os.makedirs(out, exist_ok=True)
+
+    manifest = {"version": MANIFEST_VERSION, "models": {}, "classifier": None}
+    for name in args.models.split(","):
+        cfg = CONFIGS[name.strip()]
+        manifest["models"][cfg.name] = build_model(cfg, out, args.force_train)
+    manifest["classifier"] = build_classifier(out, args.force_train)
+
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {os.path.join(out, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,134 @@
+"""Model + schedule configurations for the SpeCa reproduction.
+
+Three simulated backbones stand in for the paper's FLUX.1-dev / DiT-XL/2 /
+HunyuanVideo (see DESIGN.md §2 for the substitution argument):
+
+* ``dit-sim``   — class-conditional image DiT (paper Table 3, DDIM 50 steps)
+* ``flux-sim``  — "text"-conditional image DiT on a rectified-flow schedule
+                  (paper Table 1; prompts simulated as learned embeddings)
+* ``video-sim`` — 4-frame video DiT, rectified flow (paper Table 2)
+
+All are trained from scratch at build time on the synthetic shapes corpus
+(train.py) so feature trajectories have realistic smoothness; the SpeCa
+mechanism (forecast-then-verify) only depends on those dynamics, not scale.
+"""
+
+from dataclasses import dataclass, field
+from typing import List
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    image_size: int = 16
+    channels: int = 1
+    patch: int = 2
+    dim: int = 128
+    depth: int = 8
+    heads: int = 4
+    mlp_ratio: int = 4
+    num_classes: int = 8          # class labels (dit-sim) or prompt ids
+    frames: int = 1               # >1 => video (tokens = frames * patches)
+    schedule: str = "ddim"        # "ddim" (DDPM-trained) | "rf" (rectified flow)
+    serve_steps: int = 50
+    train_timesteps: int = 1000   # DDPM only
+    t_freq_dim: int = 128         # sinusoidal embedding width
+    # AOT batch buckets the Rust batcher may use.
+    buckets: List[int] = field(default_factory=lambda: [1, 2, 4, 8])
+    # Training hyper-parameters (build path only). Sized for the 2-core CPU
+    # build environment; env SPECA_TRAIN_SCALE multiplies step counts.
+    train_steps: int = 900
+    train_batch: int = 32
+    lr: float = 2e-3
+
+    @property
+    def tokens_per_frame(self) -> int:
+        return (self.image_size // self.patch) ** 2
+
+    @property
+    def tokens(self) -> int:
+        return self.frames * self.tokens_per_frame
+
+    @property
+    def patch_dim(self) -> int:
+        return self.patch * self.patch * self.channels
+
+    @property
+    def head_dim(self) -> int:
+        assert self.dim % self.heads == 0
+        return self.dim // self.heads
+
+    # ------------------------------------------------------------------
+    # Analytic FLOPs model (multiply-accumulate counted as 2 flops),
+    # recorded in the manifest and consumed by rust/src/metrics/flops.rs.
+    # ------------------------------------------------------------------
+    def block_flops(self, batch: int) -> int:
+        T, D, M = self.tokens, self.dim, self.mlp_ratio
+        per_tok = (
+            2 * D * 3 * D          # qkv projection
+            + 2 * D * D            # output projection
+            + 2 * D * M * D * 2    # MLP (two matmuls)
+            + 2 * D * 6 * D        # adaLN modulation from conditioning
+        )
+        attn = 2 * 2 * T * T * D   # QK^T and PV
+        return batch * (T * per_tok + attn)
+
+    def head_flops(self, batch: int) -> int:
+        T, D = self.tokens, self.dim
+        return batch * T * (2 * D * self.patch_dim + 2 * D * 2 * D)
+
+    def embed_flops(self, batch: int) -> int:
+        T, D = self.tokens, self.dim
+        return batch * (T * 2 * self.patch_dim * D + 2 * self.t_freq_dim * D + 2 * D * D)
+
+    def full_step_flops(self, batch: int) -> int:
+        return self.embed_flops(batch) + self.depth * self.block_flops(batch) + self.head_flops(batch)
+
+    def verify_flops(self, batch: int) -> int:
+        """One transformer block (paper: gamma ~= 1/depth of a full pass)."""
+        return self.block_flops(batch)
+
+    def predict_flops(self, batch: int, order: int, taps: int = 3) -> int:
+        feat = self.tokens * self.dim
+        return batch * taps * feat * 2 * (order + 1)
+
+
+def _scaled(steps: int) -> int:
+    import os
+    return max(50, int(steps * float(os.environ.get("SPECA_TRAIN_SCALE", "1.0"))))
+
+
+DIT_SIM = ModelConfig(
+    name="dit-sim",
+    dim=128, depth=8, heads=4, num_classes=8,
+    schedule="ddim", train_steps=_scaled(900),
+)
+
+FLUX_SIM = ModelConfig(
+    name="flux-sim",
+    dim=96, depth=6, heads=4, num_classes=32,  # 32 "prompts"
+    schedule="rf", train_steps=_scaled(700),
+)
+
+VIDEO_SIM = ModelConfig(
+    name="video-sim",
+    dim=96, depth=6, heads=4, num_classes=16, frames=4,
+    schedule="rf", train_steps=_scaled(450), train_batch=16,
+)
+
+CONFIGS = {c.name: c for c in (DIT_SIM, FLUX_SIM, VIDEO_SIM)}
+
+
+@dataclass(frozen=True)
+class ClassifierConfig:
+    """Tiny classifier trained on the shapes corpus; provides FID features
+    (penultimate layer) and class posteriors for the Inception-style score."""
+    hidden: int = 128
+    feat_dim: int = 64
+    num_classes: int = 8
+    train_steps: int = 1500
+    train_batch: int = 256
+    lr: float = 2e-3
+
+
+CLASSIFIER = ClassifierConfig()

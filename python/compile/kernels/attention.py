@@ -1,0 +1,101 @@
+"""L1 Pallas kernel: tiled multi-head attention (the DiT hot-spot).
+
+TPU adaptation of the paper's CUDA attention (DESIGN.md §3): instead of a
+threadblock-per-tile schedule into shared memory, the BlockSpec grid
+expresses the HBM→VMEM pipeline — one (batch·head, q-block) program per
+grid step, with an online-softmax (running max / running sum) loop over
+k/v blocks so the working set per program stays VMEM-resident:
+
+    VMEM bytes ≈ 4 · (blk_q·Dh  +  2·blk_k·Dh  +  blk_q·blk_k  +  2·blk_q)
+
+MXU work is the two tile matmuls (blk_q×Dh)·(Dh×blk_k) and
+(blk_q×blk_k)·(blk_k×Dh) with f32 accumulation.
+
+``interpret=True`` is mandatory on this image: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, so the kernel lowers through the pallas
+interpreter into plain HLO (loops + elementwise + dot), which both pytest
+and the Rust runtime execute. Structure (tiling/fusion/single-pass) is what
+we optimize; real-TPU perf is estimated in DESIGN.md §9.
+"""
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _mha_kernel(q_ref, k_ref, v_ref, o_ref, *, blk_k: int, scale: float):
+    """One program = one (batch·head, q-block). Online softmax over k/v."""
+    q = q_ref[...].astype(jnp.float32) * scale          # [blk_q, dh]
+    blk_q, dh = q.shape
+    kv_len = k_ref.shape[0]
+    n_kv = kv_len // blk_k
+
+    def body(i, carry):
+        acc, m_i, l_i = carry
+        k = k_ref[pl.dslice(i * blk_k, blk_k), :].astype(jnp.float32)
+        v = v_ref[pl.dslice(i * blk_k, blk_k), :].astype(jnp.float32)
+        s = q @ k.T                                      # [blk_q, blk_k]
+        m_new = jnp.maximum(m_i, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_i - m_new)
+        l_new = l_i * alpha + jnp.sum(p, axis=1)
+        acc = acc * alpha[:, None] + p @ v
+        return acc, m_new, l_new
+
+    acc0 = jnp.zeros((blk_q, dh), jnp.float32)
+    m0 = jnp.full((blk_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((blk_q,), jnp.float32)
+    acc, _, l_i = jax.lax.fori_loop(0, n_kv, body, (acc0, m0, l0))
+    o_ref[...] = (acc / l_i[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("blk_q", "blk_k"))
+def mha(q, k, v, blk_q: int = 32, blk_k: int = 32):
+    """Pallas multi-head attention. q,k,v: [B, H, T, Dh] -> [B, H, T, Dh].
+
+    Token count T must be divisible by the block sizes (the DiT token grids
+    here are powers of two; block sizes are clamped to T).
+    """
+    b, h, t, dh = q.shape
+    blk_q = min(blk_q, t)
+    blk_k = min(blk_k, t)
+    assert t % blk_q == 0 and t % blk_k == 0, (t, blk_q, blk_k)
+    scale = 1.0 / math.sqrt(dh)
+
+    qf = q.reshape(b * h, t, dh)
+    kf = k.reshape(b * h, t, dh)
+    vf = v.reshape(b * h, t, dh)
+
+    grid = (b * h, t // blk_q)
+    out = pl.pallas_call(
+        functools.partial(_mha_kernel, blk_k=blk_k, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, blk_q, dh), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((None, t, dh), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((None, t, dh), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, blk_q, dh), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, t, dh), q.dtype),
+        interpret=True,
+    )(qf, kf, vf)
+    return out.reshape(b, h, t, dh)
+
+
+def vmem_bytes(blk_q: int, blk_k: int, dh: int, dtype_bytes: int = 4) -> int:
+    """Static VMEM footprint estimate for one program (DESIGN.md §9)."""
+    return dtype_bytes * (blk_q * dh + 2 * blk_k * dh + blk_q * blk_k + 2 * blk_q)
+
+
+def mxu_utilization_estimate(t: int, dh: int, blk_q: int, blk_k: int) -> float:
+    """Fraction of MXU 128×128 tile MACs doing useful work for this shape."""
+    def eff(m, n, kk):
+        pads = lambda x: 128 * math.ceil(x / 128)
+        return (m * n * kk) / (pads(m) * pads(n) * pads(kk))
+    # two matmuls per kv block: (blk_q×dh)·(dh×blk_k), (blk_q×blk_k)·(blk_k×dh)
+    return 0.5 * (eff(blk_q, blk_k, dh) + eff(blk_q, dh, blk_k))

@@ -1,0 +1,67 @@
+"""L1 Pallas kernels: sampler state updates.
+
+* ``ddim_step`` — deterministic DDIM (η=0) latent update given ε̂ and the
+  (ᾱ_t, ᾱ_prev) pair for the current schedule position.
+* ``rf_step``   — rectified-flow Euler step given the velocity prediction.
+
+Both are elementwise over the latent; blocked so one VMEM tile of x and
+eps is live per grid step, with the scalar schedule constants passed as a
+tiny operand (one compiled artifact serves every timestep).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ddim_kernel(ab_ref, x_ref, e_ref, o_ref):
+    ab = ab_ref[...]
+    ab_t, ab_prev = ab[0], ab[1]
+    x = x_ref[...]
+    e = e_ref[...]
+    x0 = (x - jnp.sqrt(1.0 - ab_t) * e) * jax.lax.rsqrt(ab_t)
+    o_ref[...] = jnp.sqrt(ab_prev) * x0 + jnp.sqrt(1.0 - ab_prev) * e
+
+
+def ddim_step(x, eps, ab_t, ab_prev, blk: int = 4096):
+    """x, eps: [F] flattened latent; ab_*: scalars -> x_{t-1} [F]."""
+    f = x.shape[0]
+    from .taylor import pick_blk
+    blk = pick_blk(f, blk)
+    ab = jnp.stack([jnp.asarray(ab_t, jnp.float32), jnp.asarray(ab_prev, jnp.float32)])
+    return pl.pallas_call(
+        _ddim_kernel,
+        grid=(f // blk,),
+        in_specs=[
+            pl.BlockSpec((2,), lambda i: (0,)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((blk,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((f,), x.dtype),
+        interpret=True,
+    )(ab, x, eps)
+
+
+def _rf_kernel(dt_ref, x_ref, v_ref, o_ref):
+    o_ref[...] = x_ref[...] - dt_ref[0] * v_ref[...]
+
+
+def rf_step(x, v, dt, blk: int = 4096):
+    """x, v: [F]; dt scalar -> x − dt·v."""
+    f = x.shape[0]
+    from .taylor import pick_blk
+    blk = pick_blk(f, blk)
+    dtv = jnp.asarray([dt], jnp.float32)
+    return pl.pallas_call(
+        _rf_kernel,
+        grid=(f // blk,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((blk,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((f,), x.dtype),
+        interpret=True,
+    )(dtv, x, v)

@@ -1,0 +1,116 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+Each ``*_ref`` function is the mathematical definition the corresponding
+kernel in attention.py / taylor.py / verify.py / ddim.py must reproduce to
+float32 tolerance. pytest (python/tests) sweeps shapes and parameters with
+hypothesis and asserts allclose.
+"""
+
+import math
+
+import jax.numpy as jnp
+from jax.scipy.special import logsumexp
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def mha_ref(q, k, v, scale=None):
+    """Multi-head attention. q,k,v: [B, H, T, Dh] -> [B, H, T, Dh]."""
+    dh = q.shape[-1]
+    if scale is None:
+        scale = 1.0 / math.sqrt(dh)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    probs = jnp.exp(logits - logsumexp(logits, axis=-1, keepdims=True))
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+
+
+# ---------------------------------------------------------------------------
+# TaylorSeer draft model (paper §3.3, Eq. 2-3)
+# ---------------------------------------------------------------------------
+
+def taylor_update_ref(factors, feat):
+    """Shift in a new fully-computed feature and rebuild finite differences.
+
+    ``factors``: [m+1, F] raw backward differences Δ^i F at the previous
+    refresh point. ``feat``: [F] freshly computed feature. Returns the new
+    [m+1, F] stack:  Δ^0 = feat,  Δ^i_new = Δ^{i-1}_new − Δ^{i-1}_old.
+    This is the standard rolling backward-difference update realizing the
+    paper's Eq. 3 once ``m+1`` refresh points have been observed.
+    """
+    m1 = factors.shape[0]
+    out = [feat]
+    for i in range(1, m1):
+        out.append(out[i - 1] - factors[i - 1])
+    return jnp.stack(out)
+
+
+def taylor_predict_ref(factors, k, interval):
+    """Paper Eq. 2: F_pred = Σ_{i=0..m} Δ^i F / (i! · N^i) · (−k)^i.
+
+    With backward differences at spacing N and forward extrapolation by k
+    steps from the newest refresh point the signs cancel: coefficient is
+    (k/N)^i / i!.
+    """
+    m1 = factors.shape[0]
+    acc = jnp.zeros_like(factors[0])
+    for i in range(m1):
+        c = (float(k) ** i) / (math.factorial(i) * (float(interval) ** i))
+        acc = acc + factors[i] * c
+    return acc
+
+
+def adams_bashforth_predict_ref(history, k, interval):
+    """Two-point linear-multistep draft used in the Table-7 ablation.
+
+    ``history``: [2, F] features at the last two refresh points (newest
+    first), spaced ``interval`` apart. AB2 with equal steps collapses to
+    F + k·(F − F_prev)/N.
+    """
+    f_new, f_old = history[0], history[1]
+    return f_new + (float(k) / float(interval)) * (f_new - f_old)
+
+
+# ---------------------------------------------------------------------------
+# Verification error norms (paper §3.4 Eq. 4 + Appendix E ablations)
+# ---------------------------------------------------------------------------
+
+def verify_norms_ref(pred, actual):
+    """Returns [‖pred−actual‖₂, ‖actual‖₂] (single conceptual pass)."""
+    d = pred - actual
+    return jnp.stack([jnp.sqrt(jnp.sum(d * d)), jnp.sqrt(jnp.sum(actual * actual))])
+
+
+def rel_l2_ref(pred, actual, eps=1e-8):
+    n = verify_norms_ref(pred, actual)
+    return n[0] / (n[1] + eps)
+
+
+def rel_l1_ref(pred, actual, eps=1e-8):
+    return jnp.sum(jnp.abs(pred - actual)) / (jnp.sum(jnp.abs(actual)) + eps)
+
+
+def rel_linf_ref(pred, actual, eps=1e-8):
+    return jnp.max(jnp.abs(pred - actual)) / (jnp.max(jnp.abs(actual)) + eps)
+
+
+def cosine_err_ref(pred, actual, eps=1e-8):
+    num = jnp.sum(pred * actual)
+    den = jnp.sqrt(jnp.sum(pred * pred)) * jnp.sqrt(jnp.sum(actual * actual)) + eps
+    return 1.0 - num / den
+
+
+# ---------------------------------------------------------------------------
+# Sampler updates
+# ---------------------------------------------------------------------------
+
+def ddim_step_ref(x, eps, ab_t, ab_prev):
+    """Deterministic DDIM (η=0): x_{t-1} from x_t and ε̂."""
+    x0 = (x - jnp.sqrt(1.0 - ab_t) * eps) / jnp.sqrt(ab_t)
+    return jnp.sqrt(ab_prev) * x0 + jnp.sqrt(1.0 - ab_prev) * eps
+
+
+def rf_step_ref(x, v, dt):
+    """Rectified-flow Euler step toward data: x ← x − dt·v (v ≙ x1 − x0)."""
+    return x - dt * v

@@ -1,0 +1,86 @@
+"""L1 Pallas kernels: TaylorSeer draft model (paper §3.3, Eq. 2-3).
+
+Two kernels over flattened feature vectors:
+
+* ``taylor_predict`` — Horner-style evaluation of the truncated Taylor
+  series F + Σ Δ^i F · (k/N)^i / i! over a stack of backward differences.
+  Blocked along the feature axis so each grid step streams one VMEM-sized
+  tile of every order; VPU-bound FMA chain (the paper's C_pred ≪ C).
+* ``taylor_update`` — rolling backward-difference refresh when a full
+  computation lands: Δ^0 ← F_new, Δ^i ← Δ^{i-1}_new − Δ^{i-1}_old.
+
+Runtime scalars (k, N) enter as a length-2 f32 operand so one compiled
+artifact serves every speculative offset.
+"""
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def pick_blk(f: int, blk: int) -> int:
+    """Largest block <= blk that divides f (power-of-two preferred)."""
+    blk = min(blk, f)
+    while f % blk:
+        blk -= 1
+    return blk
+
+
+def _predict_kernel(kn_ref, f_ref, o_ref, *, m1: int):
+    kn = kn_ref[...]
+    ratio = kn[0] / kn[1]                       # k / N
+    # Horner: acc = Δ^m/m!; acc = acc*(ratio/ i) ... evaluate explicitly to
+    # keep coefficients exact: c_i = ratio^i / i!.
+    acc = f_ref[m1 - 1, :] * (1.0 / math.factorial(m1 - 1))
+    for i in range(m1 - 2, -1, -1):
+        acc = acc * ratio + f_ref[i, :] * (1.0 / math.factorial(i))
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("blk",))
+def taylor_predict(factors, k, interval, blk: int = 4096):
+    """factors: [m+1, F]; k, interval: scalars -> predicted feature [F]."""
+    m1, f = factors.shape
+    blk = pick_blk(f, blk)
+    kn = jnp.stack([jnp.asarray(k, jnp.float32), jnp.asarray(interval, jnp.float32)])
+    return pl.pallas_call(
+        functools.partial(_predict_kernel, m1=m1),
+        grid=(f // blk,),
+        in_specs=[
+            pl.BlockSpec((2,), lambda i: (0,)),
+            pl.BlockSpec((m1, blk), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((blk,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((f,), factors.dtype),
+        interpret=True,
+    )(kn, factors)
+
+
+def _update_kernel(f_ref, new_ref, o_ref, *, m1: int):
+    prev = new_ref[...]
+    o_ref[0, :] = prev
+    for i in range(1, m1):
+        cur = prev - f_ref[i - 1, :]
+        o_ref[i, :] = cur
+        prev = cur
+
+
+@functools.partial(jax.jit, static_argnames=("blk",))
+def taylor_update(factors, feat, blk: int = 4096):
+    """factors: [m+1, F] old differences; feat: [F] fresh feature -> [m+1, F]."""
+    m1, f = factors.shape
+    blk = pick_blk(f, blk)
+    return pl.pallas_call(
+        functools.partial(_update_kernel, m1=m1),
+        grid=(f // blk,),
+        in_specs=[
+            pl.BlockSpec((m1, blk), lambda i: (0, i)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((m1, blk), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((m1, f), factors.dtype),
+        interpret=True,
+    )(factors, feat)

@@ -1,0 +1,75 @@
+"""L1 Pallas kernel: fused verification norms (paper §3.4 Eq. 4, App. E).
+
+The acceptance test needs e = ‖pred − actual‖₂ / (‖actual‖₂ + ε). A naive
+implementation reads both operands twice (diff-norm pass + norm pass); this
+kernel computes all partial sums in a single blocked pass — one HBM read of
+each operand — accumulating into a tiny SMEM-resident output across the
+sequential grid. Also emits the ℓ1 / ℓ∞ / dot statistics so every error
+metric of the Appendix-E ablation comes from the same single pass:
+
+    out = [Σd², Σa², Σ|d|, Σ|a|, max|d|, max|a|, Σp·a, Σp²]
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+N_STATS = 8
+
+
+def _verify_kernel(p_ref, a_ref, o_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros((N_STATS,), jnp.float32)
+
+    p = p_ref[...].astype(jnp.float32)
+    a = a_ref[...].astype(jnp.float32)
+    d = p - a
+    o_ref[0] += jnp.sum(d * d)
+    o_ref[1] += jnp.sum(a * a)
+    o_ref[2] += jnp.sum(jnp.abs(d))
+    o_ref[3] += jnp.sum(jnp.abs(a))
+    o_ref[4] = jnp.maximum(o_ref[4], jnp.max(jnp.abs(d)))
+    o_ref[5] = jnp.maximum(o_ref[5], jnp.max(jnp.abs(a)))
+    o_ref[6] += jnp.sum(p * a)
+    o_ref[7] += jnp.sum(p * p)
+
+
+def verify_stats(pred, actual, blk: int = 4096):
+    """pred, actual: [F] -> stats [8] (see module docstring)."""
+    f = pred.shape[0]
+    from .taylor import pick_blk
+    blk = pick_blk(f, blk)
+    return pl.pallas_call(
+        _verify_kernel,
+        grid=(f // blk,),
+        in_specs=[
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((N_STATS,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((N_STATS,), jnp.float32),
+        interpret=True,
+    )(pred, actual)
+
+
+def rel_l2(pred, actual, eps=1e-8):
+    s = verify_stats(pred, actual)
+    return jnp.sqrt(s[0]) / (jnp.sqrt(s[1]) + eps)
+
+
+def rel_l1(pred, actual, eps=1e-8):
+    s = verify_stats(pred, actual)
+    return s[2] / (s[3] + eps)
+
+
+def rel_linf(pred, actual, eps=1e-8):
+    s = verify_stats(pred, actual)
+    return s[4] / (s[5] + eps)
+
+
+def cosine_err(pred, actual, eps=1e-8):
+    s = verify_stats(pred, actual)
+    return 1.0 - s[6] / (jnp.sqrt(s[7]) * jnp.sqrt(s[1]) + eps)

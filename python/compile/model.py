@@ -1,0 +1,269 @@
+"""L2: DiT diffusion transformer in JAX (build path only).
+
+Scan-based adaLN-zero DiT (Peebles & Xie) sized by ``configs.ModelConfig``.
+Block weights are stacked along a leading ``depth`` axis so (a) the whole
+forward lowers to a compact ``lax.scan`` HLO and (b) the Rust side passes
+~22 tensors regardless of depth, and the verification entry point can pick
+a layer with a *runtime* ``layer_idx : i32`` via dynamic slicing — the
+paper's single-block verification (γ ≈ 1/depth of a full pass).
+
+Entry points exported by aot.py:
+
+* ``full_fwd``  (x[B,F_lat], t[B], y[B]) → (eps[B,F_lat], boundaries[L+1,B,T,D])
+* ``block_fwd`` (layer i32, feat[B,T,D], t[B], y[B]) → feat'[B,T,D]
+* ``head_fwd``  (feat[B,T,D], t[B], y[B]) → eps[B,F_lat]
+
+Latents are flat ``[B, frames·channels·H·W]`` at the interface (keeps the
+Rust tensor plumbing trivial); patchify/unpatchify happen inside.
+Attention goes through the L1 Pallas kernel when ``use_pallas=True``
+(exported as the ``*_pallas`` artifact variants; the default variants use
+the fused-jnp path — see DESIGN.md §9 on the interpret-mode trade-off).
+"""
+
+import math
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels import attention as attn_kernel
+from .kernels import ref as kref
+
+# Canonical parameter order — Rust weights.bin and all AOT signatures
+# follow this list exactly.
+PARAM_NAMES: List[str] = [
+    "patch_w", "patch_b", "pos_emb",
+    "t_w1", "t_b1", "t_w2", "t_b2",
+    "y_emb",
+    "blk_adaln_w", "blk_adaln_b",
+    "blk_qkv_w", "blk_qkv_b", "blk_proj_w", "blk_proj_b",
+    "blk_mlp_w1", "blk_mlp_b1", "blk_mlp_w2", "blk_mlp_b2",
+    "head_adaln_w", "head_adaln_b", "head_w", "head_b",
+]
+
+BLOCK_PARAM_NAMES = [n for n in PARAM_NAMES if n.startswith("blk_")]
+
+
+def param_shapes(cfg: ModelConfig) -> Dict[str, Tuple[int, ...]]:
+    D, L, M, T = cfg.dim, cfg.depth, cfg.mlp_ratio, cfg.tokens
+    pd, fd = cfg.patch_dim, cfg.t_freq_dim
+    return {
+        "patch_w": (pd, D), "patch_b": (D,), "pos_emb": (T, D),
+        "t_w1": (fd, D), "t_b1": (D,), "t_w2": (D, D), "t_b2": (D,),
+        "y_emb": (cfg.num_classes, D),
+        "blk_adaln_w": (L, D, 6 * D), "blk_adaln_b": (L, 6 * D),
+        "blk_qkv_w": (L, D, 3 * D), "blk_qkv_b": (L, 3 * D),
+        "blk_proj_w": (L, D, D), "blk_proj_b": (L, D),
+        "blk_mlp_w1": (L, D, M * D), "blk_mlp_b1": (L, M * D),
+        "blk_mlp_w2": (L, M * D, D), "blk_mlp_b2": (L, D),
+        "head_adaln_w": (D, 2 * D), "head_adaln_b": (2 * D,),
+        "head_w": (D, pd), "head_b": (pd,),
+    }
+
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, jnp.ndarray]:
+    """DiT-style init: scaled-normal weights; adaLN modulation and final
+    head zero-initialized (adaLN-zero) so blocks start as identity."""
+    shapes = param_shapes(cfg)
+    zero_init = {"blk_adaln_w", "blk_adaln_b", "head_adaln_w",
+                 "head_adaln_b", "head_w", "head_b"}
+    params = {}
+    keys = jax.random.split(key, len(PARAM_NAMES))
+    for name, k in zip(PARAM_NAMES, keys):
+        shp = shapes[name]
+        if name in zero_init or (name.endswith("_b")):
+            params[name] = jnp.zeros(shp, jnp.float32)
+        elif name in ("pos_emb", "y_emb"):
+            params[name] = 0.02 * jax.random.normal(k, shp, jnp.float32)
+        else:
+            fan_in = shp[-2] if len(shp) >= 2 else shp[0]
+            params[name] = jax.random.normal(k, shp, jnp.float32) / math.sqrt(fan_in)
+    return params
+
+
+def flatten_params(params: Dict[str, jnp.ndarray]) -> List[jnp.ndarray]:
+    return [params[n] for n in PARAM_NAMES]
+
+
+def unflatten_params(flat) -> Dict[str, jnp.ndarray]:
+    return dict(zip(PARAM_NAMES, flat))
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+
+def timestep_embedding(t, freq_dim: int):
+    """Sinusoidal embedding of (possibly fractional) timesteps. t: [B]."""
+    half = freq_dim // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    args = t[:, None].astype(jnp.float32) * freqs[None, :]
+    return jnp.concatenate([jnp.cos(args), jnp.sin(args)], axis=-1)
+
+
+def cond_embed(p: Dict, t, y, cfg: ModelConfig):
+    """Conditioning vector c = MLP(sin-embed(t)) + y_emb[y]. -> [B, D]."""
+    te = timestep_embedding(t, cfg.t_freq_dim)
+    h = jax.nn.silu(te @ p["t_w1"] + p["t_b1"])
+    h = h @ p["t_w2"] + p["t_b2"]
+    return h + p["y_emb"][y]
+
+
+def _ln(x):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-6)
+
+
+def _modulate(x, shift, scale):
+    return x * (1.0 + scale[:, None, :]) + shift[:, None, :]
+
+
+def _mha_dispatch(q, k, v, use_pallas: bool):
+    return attn_kernel.mha(q, k, v) if use_pallas else kref.mha_ref(q, k, v)
+
+
+def dit_block(bp: Dict, x, c, cfg: ModelConfig, use_pallas: bool):
+    """One adaLN-zero DiT block. x: [B,T,D], c: [B,D], bp: per-layer params."""
+    B, T, D = x.shape
+    H, Dh = cfg.heads, cfg.head_dim
+    mod = jax.nn.silu(c) @ bp["blk_adaln_w"] + bp["blk_adaln_b"]
+    (sh1, s1, g1, sh2, s2, g2) = jnp.split(mod, 6, axis=-1)
+    # attention branch
+    h = _modulate(_ln(x), sh1, s1)
+    qkv = h @ bp["blk_qkv_w"] + bp["blk_qkv_b"]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(B, T, H, Dh).transpose(0, 2, 1, 3)
+    k = k.reshape(B, T, H, Dh).transpose(0, 2, 1, 3)
+    v = v.reshape(B, T, H, Dh).transpose(0, 2, 1, 3)
+    o = _mha_dispatch(q, k, v, use_pallas)
+    o = o.transpose(0, 2, 1, 3).reshape(B, T, D)
+    x = x + g1[:, None, :] * (o @ bp["blk_proj_w"] + bp["blk_proj_b"])
+    # MLP branch
+    h = _modulate(_ln(x), sh2, s2)
+    h = jax.nn.silu(h @ bp["blk_mlp_w1"] + bp["blk_mlp_b1"])
+    x = x + g2[:, None, :] * (h @ bp["blk_mlp_w2"] + bp["blk_mlp_b2"])
+    return x
+
+
+def _block_params_at(p: Dict, layer):
+    """Dynamic per-layer slice of the stacked block weights (runtime index)."""
+    return {n: jax.lax.dynamic_index_in_dim(p[n], layer, 0, keepdims=False)
+            for n in BLOCK_PARAM_NAMES}
+
+
+def _block_params_static(p: Dict, layer: int):
+    return {n: p[n][layer] for n in BLOCK_PARAM_NAMES}
+
+
+def patchify(x_flat, cfg: ModelConfig):
+    """[B, frames·C·H·W] -> token patches [B, T, patch_dim]."""
+    B = x_flat.shape[0]
+    F, C, H, W, P = cfg.frames, cfg.channels, cfg.image_size, cfg.image_size, cfg.patch
+    x = x_flat.reshape(B, F, C, H // P, P, W // P, P)
+    x = x.transpose(0, 1, 3, 5, 4, 6, 2)           # B,F,h,w,P,P,C
+    return x.reshape(B, cfg.tokens, cfg.patch_dim)
+
+
+def unpatchify(tok, cfg: ModelConfig):
+    """[B, T, patch_dim] -> [B, frames·C·H·W]."""
+    B = tok.shape[0]
+    F, C, H, W, P = cfg.frames, cfg.channels, cfg.image_size, cfg.image_size, cfg.patch
+    x = tok.reshape(B, F, H // P, W // P, P, P, C)
+    x = x.transpose(0, 1, 6, 2, 4, 3, 5)           # B,F,C,h,P,w,P
+    return x.reshape(B, F * C * H * W)
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+
+def embed_tokens(p: Dict, x_flat, cfg: ModelConfig):
+    return patchify(x_flat, cfg) @ p["patch_w"] + p["patch_b"] + p["pos_emb"][None]
+
+
+def head(p: Dict, x, c):
+    """Final adaLN + linear projection of token features. -> [B,T,patch_dim]."""
+    mod = jax.nn.silu(c) @ p["head_adaln_w"] + p["head_adaln_b"]
+    shift, scale = jnp.split(mod, 2, axis=-1)
+    h = _ln(x) * (1.0 + scale[:, None, :]) + shift[:, None, :]
+    return h @ p["head_w"] + p["head_b"]
+
+
+def full_fwd(p: Dict, x_flat, t, y, cfg: ModelConfig, use_pallas: bool = False,
+             unroll: bool = False):
+    """Complete forward pass. Returns (eps[B,F_lat], boundaries[L+1,B,T,D]).
+
+    boundaries[i] is the input to block i; boundaries[L] is the last block's
+    output (the head input) — the tap points the TaylorSeer cache tracks.
+    """
+    c = cond_embed(p, t, y, cfg)
+    x0 = embed_tokens(p, x_flat, cfg)
+    if unroll:
+        feats = [x0]
+        xc = x0
+        for l in range(cfg.depth):
+            xc = dit_block(_block_params_static(p, l), xc, c, cfg, use_pallas)
+            feats.append(xc)
+        xL = xc
+        boundaries = jnp.stack(feats)
+    else:
+        stacked = {n: p[n] for n in BLOCK_PARAM_NAMES}
+
+        def body(xc, bp):
+            xn = dit_block(bp, xc, c, cfg, use_pallas)
+            return xn, xn
+
+        xL, outs = jax.lax.scan(body, x0, stacked)
+        boundaries = jnp.concatenate([x0[None], outs], axis=0)
+    eps = unpatchify(head(p, xL, c), cfg)
+    return eps, boundaries
+
+
+def block_fwd(p: Dict, layer, feat, t, y, cfg: ModelConfig, use_pallas: bool = False):
+    """Verification entry point: run block ``layer`` (runtime i32) on
+    ``feat`` (the draft-predicted input). Cost ≈ full_fwd / depth."""
+    c = cond_embed(p, t, y, cfg)
+    return dit_block(_block_params_at(p, layer), feat, c, cfg, use_pallas)
+
+
+def head_fwd(p: Dict, feat, t, y, cfg: ModelConfig):
+    """Speculative-step output path: predicted last boundary -> eps."""
+    c = cond_embed(p, t, y, cfg)
+    return unpatchify(head(p, feat, c), cfg)
+
+
+# ---------------------------------------------------------------------------
+# Tiny MLP classifier (FID features + Inception-style score; build-time
+# trained, exported for the Rust metrics pipeline)
+# ---------------------------------------------------------------------------
+
+CLS_PARAM_NAMES = ["c_w1", "c_b1", "c_w2", "c_b2", "c_w3", "c_b3"]
+
+
+def cls_param_shapes(latent_dim: int, hidden: int, feat_dim: int, classes: int):
+    return {
+        "c_w1": (latent_dim, hidden), "c_b1": (hidden,),
+        "c_w2": (hidden, feat_dim), "c_b2": (feat_dim,),
+        "c_w3": (feat_dim, classes), "c_b3": (classes,),
+    }
+
+
+def cls_init(latent_dim, hidden, feat_dim, classes, key):
+    shapes = cls_param_shapes(latent_dim, hidden, feat_dim, classes)
+    out = {}
+    for name, k in zip(CLS_PARAM_NAMES, jax.random.split(key, len(CLS_PARAM_NAMES))):
+        shp = shapes[name]
+        if name.endswith(("b1", "b2", "b3")):
+            out[name] = jnp.zeros(shp, jnp.float32)
+        else:
+            out[name] = jax.random.normal(k, shp, jnp.float32) / math.sqrt(shp[0])
+    return out
+
+
+def cls_fwd(p: Dict, x_flat):
+    """x: [B, latent] -> (logits [B,K], features [B,feat_dim])."""
+    h = jnp.tanh(x_flat @ p["c_w1"] + p["c_b1"])
+    f = jnp.tanh(h @ p["c_w2"] + p["c_b2"])
+    return f @ p["c_w3"] + p["c_b3"], f

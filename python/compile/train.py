@@ -1,0 +1,257 @@
+"""Build-time training on a synthetic shapes corpus (no external data).
+
+The paper serves pretrained FLUX / DiT-XL/2 / HunyuanVideo checkpoints; we
+have no offline checkpoints, so `make artifacts` trains each simulated
+backbone from scratch for a few thousand steps (DESIGN.md §2). What SpeCa
+needs from the model is *realistic feature-trajectory smoothness across
+denoising timesteps*, which a converged tiny DiT exhibits.
+
+Also trains the metrics classifier (FID features + Inception-style score)
+and computes the reference feature statistics used by the Rust FID.
+
+Everything is hand-rolled jax (no optax on this image): Adam + cosine LR.
+"""
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+from .configs import CLASSIFIER, ModelConfig
+
+# ---------------------------------------------------------------------------
+# Synthetic shapes corpus: 16×16 grayscale, 8 base classes, parameterized
+# so every draw is distinct. Values in [-1, 1].
+# ---------------------------------------------------------------------------
+
+def _grid(img: int):
+    c = (jnp.arange(img, dtype=jnp.float32) - (img - 1) / 2) / img * 2.0
+    return jnp.meshgrid(c, c, indexing="ij")
+
+
+def shapes_frame(base_class, p1, p2, img: int = 16):
+    """One 16×16 frame. base_class in 0..7; p1, p2 ∈ [0,1] shape params."""
+    yy, xx = _grid(img)
+
+    def blob(cx, cy, s):
+        return jnp.exp(-(((xx - cx) ** 2 + (yy - cy) ** 2) / (2 * s ** 2)))
+
+    freq = 2.0 + 4.0 * p1
+    phase = 2 * math.pi * p2
+    variants = jnp.stack([
+        2 * blob(-0.4 + 0.3 * p1, -0.4 + 0.3 * p2, 0.25) - 1,         # 0 blob TL
+        2 * blob(0.4 - 0.3 * p1, 0.4 - 0.3 * p2, 0.25) - 1,           # 1 blob BR
+        jnp.sin(freq * math.pi * xx + phase),                          # 2 v-stripes
+        jnp.sin(freq * math.pi * yy + phase),                          # 3 h-stripes
+        jnp.cos(8.0 * jnp.sqrt(xx ** 2 + yy ** 2 + 1e-6) - 4 * p1),    # 4 rings
+        jnp.tanh(2.0 * (xx * (0.5 + p1) + yy * (0.5 + p2))),           # 5 gradient
+        jnp.sign(jnp.sin(freq * math.pi * xx) * jnp.sin(freq * math.pi * yy)) * 0.8,  # 6 checker
+        2 * jnp.maximum(blob(0.0, 0.0, 0.08 + 0.1 * p1) ** 0.5,
+                        blob(0.6 * (p2 - 0.5), 0.0, 0.12)) - 1,        # 7 dot pair
+    ])
+    return variants[base_class]
+
+
+def make_samples(cfg: ModelConfig, y, key):
+    """y: [B] condition ids -> x0 [B, latent]. Videos translate the shape
+    parameters across frames (temporal consistency for VBench*)."""
+    B = y.shape[0]
+    base = jnp.mod(y, 8)
+    k1, k2, k3 = jax.random.split(key, 3)
+    p1 = jax.random.uniform(k1, (B,))
+    p2 = jax.random.uniform(k2, (B,))
+    # condition id deterministically biases the shape params so different
+    # "prompts" (flux/video sims) are visually distinct beyond base class
+    p1 = 0.5 * p1 + 0.5 * (jnp.asarray(y, jnp.float32) % 17.0) / 17.0
+    frames = []
+    for f in range(cfg.frames):
+        drift = 0.15 * f
+        fr = jax.vmap(lambda b, a1, a2: shapes_frame(b, jnp.clip(a1 + drift, 0, 1), a2,
+                                                     cfg.image_size))(base, p1, p2)
+        frames.append(fr)
+    x = jnp.stack(frames, axis=1)  # [B, F, H, W]
+    noise = 0.05 * jax.random.normal(k3, x.shape)
+    x = jnp.clip(x + noise, -1.0, 1.0)
+    return x.reshape(B, cfg.frames * cfg.channels * cfg.image_size * cfg.image_size)
+
+
+# ---------------------------------------------------------------------------
+# Noise schedules
+# ---------------------------------------------------------------------------
+
+def ddpm_alphas_bar(train_timesteps: int):
+    betas = jnp.linspace(1e-4, 2e-2, train_timesteps, dtype=jnp.float32)
+    return jnp.cumprod(1.0 - betas)
+
+
+def ddim_schedule(cfg: ModelConfig) -> Dict:
+    """The 50-step serve-time DDIM subsequence: per step the model-time
+    value t, ᾱ_t and ᾱ_prev (next point toward data; last gets ᾱ=1)."""
+    ab = ddpm_alphas_bar(cfg.train_timesteps)
+    idx = np.linspace(0, cfg.train_timesteps - 1, cfg.serve_steps).round().astype(int)[::-1]
+    ab_t = np.asarray(ab)[idx]
+    ab_prev = np.concatenate([np.asarray(ab)[idx[1:]], [1.0]])
+    return {
+        "kind": "ddim",
+        "t_model": idx.astype(np.float32).tolist(),
+        "ab_t": ab_t.astype(np.float32).tolist(),
+        "ab_prev": ab_prev.astype(np.float32).tolist(),
+    }
+
+
+def rf_schedule(cfg: ModelConfig) -> Dict:
+    """Rectified flow: t from 1 → 0 over serve_steps Euler steps; the model
+    is fed t·1000 for embedding resolution."""
+    ts = np.linspace(1.0, 1.0 / cfg.serve_steps, cfg.serve_steps)
+    return {
+        "kind": "rf",
+        "t_model": (ts * 1000.0).astype(np.float32).tolist(),
+        "dt": float(1.0 / cfg.serve_steps),
+    }
+
+
+def schedule_for(cfg: ModelConfig) -> Dict:
+    return ddim_schedule(cfg) if cfg.schedule == "ddim" else rf_schedule(cfg)
+
+
+# ---------------------------------------------------------------------------
+# Adam (hand-rolled; no optax on this image)
+# ---------------------------------------------------------------------------
+
+def adam_init(params):
+    z = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": z, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_step(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    tf = t.astype(jnp.float32)
+    bc1 = 1 - b1 ** tf
+    bc2 = 1 - b2 ** tf
+    new = jax.tree_util.tree_map(
+        lambda p, m_, v_: p - lr * (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps), params, m, v)
+    return new, {"m": m, "v": v, "t": t}
+
+
+# ---------------------------------------------------------------------------
+# Diffusion training
+# ---------------------------------------------------------------------------
+
+def train_model(cfg: ModelConfig, seed: int = 0, log_every: int = 200):
+    key = jax.random.PRNGKey(seed)
+    key, pk = jax.random.split(key)
+    params = M.init_params(cfg, pk)
+    opt = adam_init(params)
+    ab = ddpm_alphas_bar(cfg.train_timesteps) if cfg.schedule == "ddim" else None
+
+    def loss_fn(p, x0, y, t_raw, noise):
+        if cfg.schedule == "ddim":
+            a = ab[t_raw][:, None]
+            xt = jnp.sqrt(a) * x0 + jnp.sqrt(1 - a) * noise
+            target = noise
+            t_model = t_raw.astype(jnp.float32)
+        else:
+            tt = t_raw.astype(jnp.float32)[:, None]
+            xt = (1 - tt) * x0 + tt * noise
+            target = noise - x0                    # velocity toward noise
+            t_model = t_raw.astype(jnp.float32) * 1000.0
+        pred, _ = M.full_fwd(p, xt, t_model, y, cfg)
+        return jnp.mean((pred - target) ** 2)
+
+    @jax.jit
+    def step(p, o, key, lr):
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        y = jax.random.randint(k1, (cfg.train_batch,), 0, cfg.num_classes)
+        x0 = make_samples(cfg, y, k2)
+        noise = jax.random.normal(k3, x0.shape)
+        if cfg.schedule == "ddim":
+            t_raw = jax.random.randint(k4, (cfg.train_batch,), 0, cfg.train_timesteps)
+        else:
+            t_raw = jax.random.uniform(k4, (cfg.train_batch,))
+        l, g = jax.value_and_grad(loss_fn)(p, x0, y, t_raw, noise)
+        p, o = adam_step(p, g, o, lr)
+        return p, o, l
+
+    losses = []
+    for i in range(cfg.train_steps):
+        key, sk = jax.random.split(key)
+        lr = cfg.lr * 0.5 * (1 + math.cos(math.pi * i / cfg.train_steps))
+        params, opt, l = step(params, opt, sk, lr)
+        if i % log_every == 0 or i == cfg.train_steps - 1:
+            losses.append((i, float(l)))
+            print(f"  [{cfg.name}] step {i:5d} loss {float(l):.4f} lr {lr:.2e}", flush=True)
+    return params, losses
+
+
+# ---------------------------------------------------------------------------
+# Classifier training (FID features + IS posteriors)
+# ---------------------------------------------------------------------------
+
+def train_classifier(cfg: ModelConfig, seed: int = 7):
+    """Trains on single frames of the shapes corpus (8 base classes)."""
+    cc = CLASSIFIER
+    latent = cfg.image_size * cfg.image_size * cfg.channels
+    key = jax.random.PRNGKey(seed)
+    key, pk = jax.random.split(key)
+    params = M.cls_init(latent, cc.hidden, cc.feat_dim, cc.num_classes, pk)
+    opt = adam_init(params)
+    frame_cfg = ModelConfig(name="_frame", image_size=cfg.image_size,
+                            channels=cfg.channels, frames=1,
+                            dim=cfg.dim, depth=cfg.depth, heads=cfg.heads)
+
+    def loss_fn(p, x, y):
+        logits, _ = M.cls_fwd(p, x)
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+    @jax.jit
+    def step(p, o, key, lr):
+        k1, k2 = jax.random.split(key)
+        y = jax.random.randint(k1, (cc.train_batch,), 0, cc.num_classes)
+        x = make_samples(frame_cfg, y, k2)
+        l, g = jax.value_and_grad(loss_fn)(p, x, y)
+        p, o = adam_step(p, g, o, lr)
+        return p, o, l
+
+    for i in range(cc.train_steps):
+        key, sk = jax.random.split(key)
+        lr = cc.lr * 0.5 * (1 + math.cos(math.pi * i / cc.train_steps))
+        params, opt, l = step(params, opt, sk, lr)
+        if i % 300 == 0 or i == cc.train_steps - 1:
+            print(f"  [classifier] step {i:5d} loss {float(l):.4f}", flush=True)
+
+    # held-out accuracy
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed + 1))
+    y = jax.random.randint(k1, (2048,), 0, cc.num_classes)
+    x = make_samples(frame_cfg, y, k2)
+    logits, feats = M.cls_fwd(params, x)
+    acc = float(jnp.mean(jnp.argmax(logits, -1) == y))
+    print(f"  [classifier] held-out acc {acc:.3f}")
+    return params, acc
+
+
+def reference_stats(cls_params, cfg: ModelConfig, n: int = 4096, seed: int = 11):
+    """FID reference: classifier-feature μ/Σ of a held-out real sample set,
+    plus raw-pixel μ/Σ (sFID* analog) of the same set."""
+    frame_cfg = ModelConfig(name="_frame", image_size=cfg.image_size,
+                            channels=cfg.channels, frames=1,
+                            dim=cfg.dim, depth=cfg.depth, heads=cfg.heads)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    y = jax.random.randint(k1, (n,), 0, CLASSIFIER.num_classes)
+    x = make_samples(frame_cfg, y, k2)
+    _, feats = M.cls_fwd(cls_params, x)
+    feats = np.asarray(feats, np.float64)
+    mu = feats.mean(0)
+    cov = np.cov(feats, rowvar=False)
+    # raw-pixel stats on an 8×8 downsample (keeps Σ small for sFID*)
+    xs = np.asarray(x).reshape(n, cfg.image_size, cfg.image_size)
+    ds = xs.reshape(n, 8, cfg.image_size // 8, 8, cfg.image_size // 8).mean((2, 4)).reshape(n, 64)
+    mu_p = ds.mean(0)
+    cov_p = np.cov(ds, rowvar=False)
+    return (mu.astype(np.float32), cov.astype(np.float32),
+            mu_p.astype(np.float32), cov_p.astype(np.float32))

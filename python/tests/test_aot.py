@@ -1,0 +1,126 @@
+"""AOT pipeline: tensor container format, HLO text emission, and (when
+`make artifacts` has run) manifest completeness."""
+
+import json
+import os
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as M
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def read_tensors(path):
+    """Independent decoder for the SPCA container (mirrors rust/src/weights)."""
+    out = {}
+    with open(path, "rb") as f:
+        assert f.read(4) == b"SPCA"
+        version, n = struct.unpack("<II", f.read(8))
+        assert version == 1
+        for _ in range(n):
+            (nlen,) = struct.unpack("<H", f.read(2))
+            name = f.read(nlen).decode()
+            dtype, ndim = struct.unpack("<BB", f.read(2))
+            shape = struct.unpack(f"<{ndim}I", f.read(4 * ndim)) if ndim else ()
+            (nbytes,) = struct.unpack("<Q", f.read(8))
+            raw = f.read(nbytes)
+            dt = np.float32 if dtype == 0 else np.int32
+            out[name] = np.frombuffer(raw, dt).reshape(shape)
+    return out
+
+
+def test_tensor_container_roundtrip(tmp_path):
+    path = tmp_path / "t.bin"
+    a = np.arange(6, dtype=np.float32).reshape(2, 3)
+    b = np.asarray([7, -1], np.int32)
+    aot.write_tensors(str(path), [("a", a), ("b", b)])
+    back = read_tensors(path)
+    np.testing.assert_array_equal(back["a"], a)
+    np.testing.assert_array_equal(back["b"], b)
+    assert back["b"].dtype == np.int32
+
+
+def test_hlo_text_emission(tmp_path):
+    path = tmp_path / "f.hlo.txt"
+    n = aot.lower_to_file(
+        lambda x: (x * 2.0,), [aot.spec([2, 2])], str(path)
+    )
+    text = path.read_text()
+    assert n == len(text)
+    assert "HloModule" in text
+    # text (not proto) is the interchange contract
+    assert text.lstrip().startswith("HloModule")
+
+
+def test_config_hash_stable():
+    from compile.configs import DIT_SIM
+    assert aot.config_hash(DIT_SIM) == aot.config_hash(DIT_SIM)
+
+
+needs_artifacts = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+
+
+@needs_artifacts
+def test_manifest_complete():
+    with open(os.path.join(ARTIFACTS, "manifest.json")) as f:
+        m = json.load(f)
+    assert m["version"] == aot.MANIFEST_VERSION
+    for name, entry in m["models"].items():
+        cfg = entry["config"]
+        for key in ("dim", "depth", "tokens", "latent_dim", "serve_steps", "buckets"):
+            assert key in cfg, (name, key)
+        assert len(entry["schedule"]["t_model"]) == cfg["serve_steps"]
+        for ep in ("full", "block", "head"):
+            for b in cfg["buckets"]:
+                rel = entry["artifacts"][ep][str(b)]
+                assert os.path.exists(os.path.join(ARTIFACTS, rel)), rel
+        for f in (entry["weights"], entry["goldens"]):
+            assert os.path.exists(os.path.join(ARTIFACTS, f))
+        # verification cost ratio gamma ≈ 1/depth (paper §3.5)
+        gamma = entry["flops"]["block"]["1"] / entry["flops"]["full_step"]["1"]
+        assert gamma < 1.5 / cfg["depth"]
+    cls = m["classifier"]
+    assert os.path.exists(os.path.join(ARTIFACTS, cls["weights"]))
+
+
+@needs_artifacts
+def test_weights_match_param_spec():
+    with open(os.path.join(ARTIFACTS, "manifest.json")) as f:
+        m = json.load(f)
+    for name, entry in m["models"].items():
+        tensors = read_tensors(os.path.join(ARTIFACTS, entry["weights"]))
+        for spec in entry["params"]:
+            t = tensors[spec["name"]]
+            assert list(t.shape) == spec["shape"], (name, spec["name"])
+
+
+@needs_artifacts
+def test_goldens_consistent_with_weights():
+    """Replaying the golden trace's first step in python from the stored
+    weights must reproduce the stored eps (guards against stale caches)."""
+    with open(os.path.join(ARTIFACTS, "manifest.json")) as f:
+        m = json.load(f)
+    from compile.configs import CONFIGS
+    for name, entry in m["models"].items():
+        cfg = CONFIGS[name]
+        tensors = read_tensors(os.path.join(ARTIFACTS, entry["weights"]))
+        params = {n: jnp.asarray(tensors[n]) for n in M.PARAM_NAMES}
+        g = read_tensors(os.path.join(ARTIFACTS, entry["goldens"]))
+        t0 = jnp.asarray([entry["schedule"]["t_model"][0]], jnp.float32)
+        y = jnp.asarray(g["y"], jnp.int32)
+        eps, bounds = M.full_fwd(params, jnp.asarray(g["x_T"])[None], t0, y, cfg)
+        np.testing.assert_allclose(
+            np.asarray(eps[0]), g["eps_all"][0], atol=1e-4, err_msg=name
+        )
+        np.testing.assert_allclose(
+            np.asarray(bounds[:, 0]), g["boundaries0"], atol=1e-4, err_msg=name
+        )

@@ -1,0 +1,184 @@
+"""L1 kernel correctness: every Pallas kernel vs its pure-jnp oracle,
+swept over shapes and parameters with hypothesis (the CORE correctness
+signal for the compute layer)."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention, ddim, ref, taylor, verify
+
+SET = dict(max_examples=12, deadline=None)
+
+
+def rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+@settings(**SET)
+@given(
+    b=st.integers(1, 3),
+    h=st.integers(1, 4),
+    t_pow=st.integers(3, 7),        # T in {8..128}
+    dh=st.sampled_from([8, 16, 24, 32]),
+    blk=st.sampled_from([8, 16, 32]),
+)
+def test_mha_matches_ref(b, h, t_pow, dh, blk):
+    t = 1 << t_pow
+    q = rand(1, (b, h, t, dh))
+    k = rand(2, (b, h, t, dh))
+    v = rand(3, (b, h, t, dh))
+    out = attention.mha(q, k, v, blk_q=blk, blk_k=blk)
+    expect = ref.mha_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=2e-5, rtol=2e-5)
+
+
+def test_mha_softmax_rows_convex():
+    # attention output of constant V must be that constant (softmax sums to 1)
+    b, h, t, dh = 1, 2, 16, 8
+    q = rand(4, (b, h, t, dh))
+    k = rand(5, (b, h, t, dh))
+    v = jnp.ones((b, h, t, dh), jnp.float32) * 3.25
+    out = attention.mha(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), 3.25, atol=1e-5)
+
+
+def test_mha_vmem_estimate_positive():
+    assert attention.vmem_bytes(32, 32, 32) == 4 * (32 * 32 + 2 * 32 * 32 + 32 * 32 + 64)
+    u = attention.mxu_utilization_estimate(64, 32, 32, 32)
+    assert 0.0 < u <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# TaylorSeer kernels
+# ---------------------------------------------------------------------------
+
+@settings(**SET)
+@given(
+    m1=st.integers(1, 5),
+    f=st.sampled_from([64, 192, 4096, 6144]),
+    k=st.floats(0.5, 9.0),
+    n=st.floats(1.0, 10.0),
+)
+def test_taylor_predict_matches_ref(m1, f, k, n):
+    fac = rand(11, (m1, f))
+    out = taylor.taylor_predict(fac, k, n)
+    expect = ref.taylor_predict_ref(fac, k, n)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=1e-4, rtol=1e-4)
+
+
+@settings(**SET)
+@given(m1=st.integers(1, 5), f=st.sampled_from([32, 1024, 6144]))
+def test_taylor_update_matches_ref(m1, f):
+    fac = rand(12, (m1, f))
+    feat = rand(13, (f,))
+    out = taylor.taylor_update(fac, feat)
+    expect = ref.taylor_update_ref(fac, feat)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=0, rtol=0)
+
+
+def test_taylor_linear_exactness_and_order_gain():
+    """Paper Eq. 2 is exact on linear feature trajectories; on curved ones
+    higher orders strictly reduce the extrapolation error (the Table-7
+    ordering reuse > AB > Taylor)."""
+    n_interval = 4.0
+    ts = np.arange(4) * n_interval
+    # linear: exact for any k
+    fac = jnp.zeros((2, 1), jnp.float32)
+    for t in ts:
+        fac = taylor.taylor_update(fac, jnp.asarray([2.0 - 3.0 * t], jnp.float32))
+    for k in [1.0, 2.0, 5.0]:
+        expect = 2.0 - 3.0 * (ts[-1] + k)
+        assert abs(float(taylor.taylor_predict(fac, k, n_interval)[0]) - expect) < 1e-3
+    # quadratic: order-2 beats order-1 beats order-0
+    f = lambda t: 1.0 + 2.0 * t + 0.5 * t * t
+    fac = jnp.zeros((3, 1), jnp.float32)
+    for t in ts:
+        fac = taylor.taylor_update(fac, jnp.asarray([f(t)], jnp.float32))
+    truth = f(ts[-1] + 3.0)
+    errs = []
+    for order in [0, 1, 2]:
+        pred = taylor.taylor_predict(fac[: order + 1], 3.0, n_interval)
+        errs.append(abs(float(pred[0]) - truth))
+    assert errs[2] < errs[1] < errs[0]
+
+
+def test_pick_blk_divides():
+    for f in [1, 7, 64, 6144, 8192, 12000]:
+        blk = taylor.pick_blk(f, 4096)
+        assert 1 <= blk <= min(f, 4096)
+        assert f % blk == 0
+
+
+# ---------------------------------------------------------------------------
+# Verification stats
+# ---------------------------------------------------------------------------
+
+@settings(**SET)
+@given(f=st.sampled_from([16, 512, 6144]), scale=st.floats(0.1, 10.0))
+def test_verify_stats_all_metrics(f, scale):
+    a = rand(21, (f,)) * scale
+    b = rand(22, (f,))
+    np.testing.assert_allclose(float(verify.rel_l2(a, b)), float(ref.rel_l2_ref(a, b)), rtol=1e-5)
+    np.testing.assert_allclose(float(verify.rel_l1(a, b)), float(ref.rel_l1_ref(a, b)), rtol=1e-5)
+    np.testing.assert_allclose(float(verify.rel_linf(a, b)), float(ref.rel_linf_ref(a, b)), rtol=1e-5)
+    np.testing.assert_allclose(
+        float(verify.cosine_err(a, b)), float(ref.cosine_err_ref(a, b)), atol=1e-6
+    )
+
+
+def test_verify_stats_single_pass_fields():
+    a = jnp.asarray([1.0, 2.0], jnp.float32)
+    b = jnp.asarray([0.0, 2.0], jnp.float32)
+    s = np.asarray(verify.verify_stats(a, b))
+    assert s[0] == pytest.approx(1.0)     # Σd²
+    assert s[1] == pytest.approx(4.0)     # Σa²
+    assert s[2] == pytest.approx(1.0)     # Σ|d|
+    assert s[3] == pytest.approx(2.0)     # Σ|a|
+    assert s[4] == pytest.approx(1.0)     # max|d|
+    assert s[5] == pytest.approx(2.0)     # max|a|
+    assert s[6] == pytest.approx(4.0)     # Σp·a
+    assert s[7] == pytest.approx(5.0)     # Σp²
+
+
+# ---------------------------------------------------------------------------
+# Sampler kernels
+# ---------------------------------------------------------------------------
+
+@settings(**SET)
+@given(
+    f=st.sampled_from([16, 256, 1024]),
+    ab_t=st.floats(0.01, 0.999),
+    ab_prev=st.floats(0.01, 1.0),
+)
+def test_ddim_step_matches_ref(f, ab_t, ab_prev):
+    x = rand(31, (f,))
+    e = rand(32, (f,))
+    out = ddim.ddim_step(x, e, ab_t, ab_prev)
+    expect = ref.ddim_step_ref(x, e, ab_t, ab_prev)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=1e-4, rtol=1e-4)
+
+
+@settings(**SET)
+@given(f=st.sampled_from([16, 1024]), dt=st.floats(0.001, 0.1))
+def test_rf_step_matches_ref(f, dt):
+    x = rand(33, (f,))
+    v = rand(34, (f,))
+    out = ddim.rf_step(x, v, dt)
+    expect = ref.rf_step_ref(x, v, dt)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=1e-6)
+
+
+def test_ddim_identity_when_ab_one():
+    x = rand(35, (64,))
+    e = rand(36, (64,))
+    out = ddim.ddim_step(x, e, 1.0, 1.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x), atol=1e-6)

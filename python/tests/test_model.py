@@ -1,0 +1,123 @@
+"""L2 model invariants: scan/unroll equivalence, single-block and head
+parity with the full pass (the contract the Rust verification path relies
+on), patchify round-trips, conditioning behaviour."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.configs import DIT_SIM, FLUX_SIM, VIDEO_SIM, ModelConfig
+
+TINY = dataclasses.replace(DIT_SIM, dim=32, depth=3, heads=2, t_freq_dim=16)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    params = M.init_params(TINY, jax.random.PRNGKey(0))
+    # randomize the zero-init tensors so parity tests are non-trivial
+    keys = jax.random.split(jax.random.PRNGKey(1), len(M.PARAM_NAMES))
+    params = {
+        n: p + 0.02 * jax.random.normal(k, p.shape)
+        for (n, p), k in zip(params.items(), keys)
+    }
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, TINY.frames * TINY.image_size ** 2))
+    t = jnp.asarray([10.0, 400.0])
+    y = jnp.asarray([1, 3], jnp.int32)
+    return params, x, t, y
+
+
+def test_scan_equals_unroll(setup):
+    params, x, t, y = setup
+    e1, b1 = M.full_fwd(params, x, t, y, TINY)
+    e2, b2 = M.full_fwd(params, x, t, y, TINY, unroll=True)
+    np.testing.assert_allclose(np.asarray(e1), np.asarray(e2), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(b1), np.asarray(b2), atol=1e-5)
+
+
+def test_block_fwd_parity_every_layer(setup):
+    """block_fwd(l, boundaries[l]) == boundaries[l+1] for every layer —
+    the exact invariant SpeCa verification depends on."""
+    params, x, t, y = setup
+    _, bounds = M.full_fwd(params, x, t, y, TINY)
+    for l in range(TINY.depth):
+        out = M.block_fwd(params, jnp.int32(l), bounds[l], t, y, TINY)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(bounds[l + 1]), atol=1e-5,
+            err_msg=f"layer {l}"
+        )
+
+
+def test_head_fwd_parity(setup):
+    params, x, t, y = setup
+    eps, bounds = M.full_fwd(params, x, t, y, TINY)
+    out = M.head_fwd(params, bounds[TINY.depth], t, y, TINY)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(eps), atol=1e-5)
+
+
+def test_pallas_full_matches_ref_attention(setup):
+    params, x, t, y = setup
+    e1, _ = M.full_fwd(params, x, t, y, TINY, use_pallas=False)
+    e2, _ = M.full_fwd(params, x, t, y, TINY, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(e1), np.asarray(e2), atol=1e-4)
+
+
+@pytest.mark.parametrize("cfg", [DIT_SIM, FLUX_SIM, VIDEO_SIM], ids=lambda c: c.name)
+def test_patchify_roundtrip(cfg):
+    x = jax.random.normal(jax.random.PRNGKey(5), (3, cfg.frames * cfg.channels * cfg.image_size ** 2))
+    tok = M.patchify(x, cfg)
+    assert tok.shape == (3, cfg.tokens, cfg.patch_dim)
+    back = M.unpatchify(tok, cfg)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(x), atol=0)
+
+
+def test_adaln_zero_init_is_identity():
+    """With zero-init adaLN and head, blocks are identity and eps ≡ 0."""
+    params = M.init_params(TINY, jax.random.PRNGKey(7))
+    x = jax.random.normal(jax.random.PRNGKey(8), (1, TINY.frames * TINY.image_size ** 2))
+    t = jnp.asarray([100.0])
+    y = jnp.asarray([0], jnp.int32)
+    eps, bounds = M.full_fwd(params, x, t, y, TINY)
+    np.testing.assert_allclose(np.asarray(eps), 0.0, atol=1e-6)
+    for l in range(TINY.depth):
+        np.testing.assert_allclose(
+            np.asarray(bounds[l]), np.asarray(bounds[l + 1]), atol=1e-6
+        )
+
+
+def test_conditioning_changes_output(setup):
+    params, x, t, y = setup
+    e1, _ = M.full_fwd(params, x, t, y, TINY)
+    e2, _ = M.full_fwd(params, x, t, jnp.asarray([2, 0], jnp.int32), TINY)
+    e3, _ = M.full_fwd(params, x, jnp.asarray([500.0, 90.0]), y, TINY)
+    assert float(jnp.max(jnp.abs(e1 - e2))) > 1e-6
+    assert float(jnp.max(jnp.abs(e1 - e3))) > 1e-6
+
+
+def test_timestep_embedding_distinct():
+    e = M.timestep_embedding(jnp.asarray([0.0, 1.0, 500.0, 999.0]), 64)
+    assert e.shape == (4, 64)
+    d = np.asarray(jnp.abs(e[:, None] - e[None, :]).sum(-1))
+    for i in range(4):
+        for j in range(i + 1, 4):
+            assert d[i, j] > 0.1
+
+
+def test_param_shapes_cover_names():
+    for cfg in (DIT_SIM, FLUX_SIM, VIDEO_SIM):
+        shapes = M.param_shapes(cfg)
+        assert set(shapes.keys()) == set(M.PARAM_NAMES)
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        for n in M.PARAM_NAMES:
+            assert tuple(params[n].shape) == tuple(shapes[n]), n
+
+
+def test_classifier_shapes():
+    p = M.cls_init(256, 64, 32, 8, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (5, 256))
+    logits, feats = M.cls_fwd(p, x)
+    assert logits.shape == (5, 8)
+    assert feats.shape == (5, 32)

@@ -1,0 +1,86 @@
+"""Build-path training utilities: dataset properties, schedules, Adam."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import train as T
+from compile.configs import DIT_SIM, VIDEO_SIM
+
+
+def test_samples_shape_and_range():
+    y = jnp.arange(16) % 8
+    x = T.make_samples(DIT_SIM, y, jax.random.PRNGKey(0))
+    assert x.shape == (16, 256)
+    assert float(x.min()) >= -1.0 and float(x.max()) <= 1.0
+
+
+def test_samples_class_separation():
+    """Same class → similar images; different classes → distinct."""
+    key = jax.random.PRNGKey(1)
+    y_a = jnp.zeros(8, jnp.int32)
+    y_b = jnp.full((8,), 3, jnp.int32)
+    xa = np.asarray(T.make_samples(DIT_SIM, y_a, key))
+    xb = np.asarray(T.make_samples(DIT_SIM, y_b, key))
+    within = np.abs(xa.mean(0) - xa).mean()
+    across = np.abs(xa.mean(0) - xb).mean()
+    assert across > within
+
+
+def test_video_frames_drift_smoothly():
+    y = jnp.zeros(4, jnp.int32)
+    x = np.asarray(T.make_samples(VIDEO_SIM, y, jax.random.PRNGKey(2)))
+    x = x.reshape(4, VIDEO_SIM.frames, -1)
+    d01 = np.abs(x[:, 0] - x[:, 1]).mean()
+    d03 = np.abs(x[:, 0] - x[:, 3]).mean()
+    assert d01 > 0.0            # frames differ (motion)
+    assert d03 >= d01 * 0.9     # and drift accumulates over time
+
+
+def test_ddpm_schedule_monotone():
+    ab = np.asarray(T.ddpm_alphas_bar(1000))
+    assert ab.shape == (1000,)
+    assert np.all(np.diff(ab) < 0)
+    assert 0 < ab[-1] < ab[0] <= 1.0
+
+
+def test_ddim_schedule_contract():
+    s = T.ddim_schedule(DIT_SIM)
+    assert len(s["t_model"]) == DIT_SIM.serve_steps
+    # serve order: noisiest (largest t) first
+    assert s["t_model"][0] > s["t_model"][-1]
+    assert s["ab_prev"][-1] == 1.0
+    # ab_prev[i] corresponds to ab_t[i+1]
+    np.testing.assert_allclose(s["ab_prev"][:-1], s["ab_t"][1:], rtol=1e-6)
+
+
+def test_rf_schedule_contract():
+    cfg = dataclasses.replace(DIT_SIM, schedule="rf")
+    s = T.rf_schedule(cfg)
+    assert s["kind"] == "rf"
+    assert len(s["t_model"]) == cfg.serve_steps
+    assert s["dt"] == pytest.approx(1.0 / cfg.serve_steps)
+    assert s["t_model"][0] == pytest.approx(1000.0)
+
+
+def test_adam_minimizes_quadratic():
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    opt = T.adam_init(params)
+
+    def loss(p):
+        return jnp.sum((p["w"] - jnp.asarray([1.0, 2.0])) ** 2)
+
+    for _ in range(400):
+        g = jax.grad(loss)(params)
+        params, opt = T.adam_step(params, g, opt, 5e-2)
+    np.testing.assert_allclose(np.asarray(params["w"]), [1.0, 2.0], atol=1e-2)
+
+
+def test_training_reduces_loss_quickly():
+    cfg = dataclasses.replace(DIT_SIM, dim=32, depth=2, heads=2, t_freq_dim=16,
+                              train_steps=30, train_batch=8)
+    _, losses = T.train_model(cfg, log_every=29)
+    assert losses[-1][1] < losses[0][1]

@@ -1,0 +1,151 @@
+//! Micro-benchmarks of the serving hot path (EXPERIMENTS.md §Perf source):
+//! per-entry PJRT execution latency across batch buckets, native vs PJRT
+//! draft prediction, pallas-vs-jnp full pass, batching strategies, and the
+//! L3 coordinator overhead split (engine tick time minus PJRT time).
+
+use speca::cache::{DraftKind, TapCache};
+use speca::config::Manifest;
+use speca::coordinator::batcher::BatchStrategy;
+use speca::coordinator::{Engine, EngineConfig};
+use speca::runtime::{In, ModelRuntime, Runtime};
+use speca::util::rng::Rng;
+use speca::util::timing::Bench;
+use speca::workload::{batch_requests, parse_policy};
+
+fn main() -> anyhow::Result<()> {
+    let dir = speca::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built");
+        return Ok(());
+    }
+    let manifest = Manifest::load(&dir)?;
+    let entry = manifest.model("dit-sim")?;
+    let rt = Runtime::cpu()?;
+    let model = ModelRuntime::load(&rt, entry)?;
+    let cfg = &entry.config;
+    let latent = cfg.latent_dim;
+    let feat = cfg.tokens * cfg.dim;
+    let mut rng = Rng::new(0);
+
+    println!("== micro_runtime (dit-sim: dim={} depth={} tokens={}) ==", cfg.dim, cfg.depth, cfg.tokens);
+
+    // --- PJRT execution latency per entry × bucket ------------------------
+    for entry_point in ["full", "block", "head"] {
+        for &b in &cfg.buckets {
+            let x = rng.normal_f32s(b * if entry_point == "full" { latent } else { feat });
+            let t: Vec<f32> = vec![entry.schedule.t_model[0]; b];
+            let y: Vec<i32> = vec![0; b];
+            let r = Bench::new(&format!("pjrt/{entry_point}_b{b}")).min_time_ms(300).run(|| {
+                match entry_point {
+                    "full" => {
+                        model.full(b, &x, &t, &y, false).unwrap();
+                    }
+                    "block" => {
+                        model.block(b, (cfg.depth - 1) as i32, &x, &t, &y).unwrap();
+                    }
+                    _ => {
+                        model.head(b, &x, &t, &y).unwrap();
+                    }
+                }
+            });
+            println!("{}", r.report());
+        }
+    }
+
+    // --- verification cost ratio (measured wall-clock gamma) -------------
+    {
+        let x = rng.normal_f32s(latent);
+        let f = rng.normal_f32s(feat);
+        let t = vec![entry.schedule.t_model[0]];
+        let y = vec![0i32];
+        let full = Bench::new("gamma/full_b1").min_time_ms(300).run(|| {
+            model.full(1, &x, &t, &y, false).unwrap();
+        });
+        let block = Bench::new("gamma/block_b1").min_time_ms(300).run(|| {
+            model.block(1, (cfg.depth - 1) as i32, &f, &t, &y).unwrap();
+        });
+        println!(
+            "gamma: wall-clock block/full = {:.4} (analytic {:.4}, paper expects ~1/depth = {:.4})",
+            block.p50_ns / full.p50_ns,
+            entry.flops.block[&1] as f64 / entry.flops.full_step[&1] as f64,
+            1.0 / cfg.depth as f64
+        );
+    }
+
+    // --- draft prediction: native rust vs PJRT pallas kernel -------------
+    {
+        let mut cache = TapCache::new(2, feat, 5);
+        for s in 0..3u64 {
+            let mut r2 = Rng::new(s);
+            cache.refresh(&r2.normal_f32s(feat));
+        }
+        let mut out = vec![0f32; feat];
+        let native = Bench::new("predict/native_o2").min_time_ms(200).run(|| {
+            cache.predict_into(3.0, DraftKind::Taylor, &mut out);
+        });
+        println!("{}", native.report());
+        let mut flat = Vec::new();
+        for fac in cache.factors() {
+            flat.extend_from_slice(fac);
+        }
+        let exec = model.kernel_exec("taylor_predict")?;
+        let pjrt = Bench::new("predict/pjrt_kernel_o2").min_time_ms(200).run(|| {
+            exec.run(&rt, &[], &[In::F32(&flat, &[3, feat]), In::ScalarF32(3.0), In::ScalarF32(5.0)])
+                .unwrap();
+        });
+        println!("{}", pjrt.report());
+        println!(
+            "predict: native is {:.1}x faster than PJRT dispatch (justifies native hot path)",
+            pjrt.p50_ns / native.p50_ns
+        );
+    }
+
+    // --- L1 pallas-attention artifact vs fused jnp artifact ---------------
+    if entry.artifacts.contains_key("full_pallas") {
+        let x = rng.normal_f32s(latent);
+        let t = vec![entry.schedule.t_model[0]];
+        let y = vec![0i32];
+        let jnp = Bench::new("full/jnp_attention_b1").min_time_ms(300).run(|| {
+            model.full(1, &x, &t, &y, false).unwrap();
+        });
+        println!("{}", jnp.report());
+        let pal = Bench::new("full/pallas_interpret_b1").min_time_ms(300).run(|| {
+            model.full(1, &x, &t, &y, true).unwrap();
+        });
+        println!("{}", pal.report());
+        println!(
+            "pallas interpret-mode overhead: {:.2}x (CPU-only artifact; Mosaic on TPU inverts this)",
+            pal.p50_ns / jnp.p50_ns
+        );
+    }
+
+    // --- batching strategies end-to-end -----------------------------------
+    for (name, strategy) in [("binary", BatchStrategy::Binary), ("padup", BatchStrategy::PadUp)] {
+        let policy = parse_policy("speca:N=5,O=2,tau0=0.3,beta=0.05", cfg.depth)?;
+        let r = Bench::new(&format!("engine/6req_speca_{name}"))
+            .min_time_ms(400)
+            .warmup(1)
+            .run(|| {
+                let mut engine = Engine::new(
+                    &model,
+                    EngineConfig { max_inflight: 6, strategy, use_pallas: false },
+                );
+                for req in batch_requests(6, cfg.num_classes, &policy, 1, false) {
+                    engine.submit(req);
+                }
+                engine.run_to_completion().unwrap();
+            });
+        println!("{}", r.report());
+    }
+
+    // --- coordinator overhead: cache refresh + predict per tick ----------
+    {
+        let mut cache = TapCache::new(2, feat, 5);
+        let f = rng.normal_f32s(feat);
+        let r = Bench::new("cache/refresh_o2").min_time_ms(200).run(|| {
+            cache.refresh(&f);
+        });
+        println!("{}", r.report());
+    }
+    Ok(())
+}

@@ -1,0 +1,18 @@
+//! Paper Table 1: FLUX text-to-image policies x acceleration tiers.
+//! Regenerates the paper artifact via the shared experiments runner;
+//! `cargo bench` runs the CI-sized sweep (SPECA_BENCH_FULL=1 for full n).
+
+use speca::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let mut args = Args::from_env();
+    args.positional = vec!["bench".into(), "table1".into()];
+    args.flags.remove("bench"); // cargo-bench harness flag
+    if std::env::var("SPECA_BENCH_FULL").is_err() && !args.flags.contains_key("n") {
+        args.flags.insert("quick".into(), "true".into());
+    }
+    let t0 = std::time::Instant::now();
+    speca::experiments::tables::run(&args)?;
+    println!("[bench table1_flux] wall {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

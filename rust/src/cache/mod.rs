@@ -1,0 +1,285 @@
+//! TaylorSeer feature-factor cache (paper §3.3) — the per-request state the
+//! draft model predicts from.
+//!
+//! Each request tracks one `TapCache` per tap point (block boundary).
+//! A tap stores the rolling backward differences Δ⁰..Δᵐ of the feature at
+//! successive *refresh* points (full computations), spaced nominally `N`
+//! serve steps apart:
+//!
+//!   refresh:  Δ⁰ ← F_new,  Δⁱ ← Δⁱ⁻¹_new − Δⁱ⁻¹_old        (Eq. 3)
+//!   predict:  F̂(k) = Σ_i Δⁱ · (k/N)ⁱ / i!                    (Eq. 2)
+//!
+//! The effective order is capped by the number of refreshes seen so far, so
+//! predictions during warmup degrade gracefully (reuse → linear → ...).
+
+use crate::tensor::Tensor;
+
+/// Draft-model flavor (paper Table 7 ablation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DraftKind {
+    /// Direct feature reuse (order-0; what FORA-style caches do).
+    Reuse,
+    /// Two-point Adams–Bashforth linear multistep (order-1 extrapolation).
+    AdamsBashforth,
+    /// Truncated Taylor series of the configured order (TaylorSeer).
+    Taylor,
+}
+
+impl DraftKind {
+    pub fn parse(s: &str) -> Option<DraftKind> {
+        match s {
+            "reuse" => Some(DraftKind::Reuse),
+            "adams" | "adams-bashforth" => Some(DraftKind::AdamsBashforth),
+            "taylor" => Some(DraftKind::Taylor),
+            _ => None,
+        }
+    }
+
+    /// Effective series order used for prediction.
+    pub fn order(&self, configured: usize) -> usize {
+        match self {
+            DraftKind::Reuse => 0,
+            DraftKind::AdamsBashforth => 1,
+            DraftKind::Taylor => configured,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TapCache {
+    /// factors[i] = Δⁱ F (raw backward differences), each of length `feat_len`
+    factors: Vec<Vec<f32>>,
+    /// refreshes observed so far (caps the usable order)
+    updates: usize,
+    /// nominal refresh spacing N used in the denominators
+    interval: f32,
+}
+
+impl TapCache {
+    pub fn new(order: usize, feat_len: usize, interval: usize) -> TapCache {
+        TapCache {
+            factors: vec![vec![0.0; feat_len]; order + 1],
+            updates: 0,
+            interval: interval as f32,
+        }
+    }
+
+    pub fn feat_len(&self) -> usize {
+        self.factors[0].len()
+    }
+
+    pub fn max_order(&self) -> usize {
+        self.factors.len() - 1
+    }
+
+    /// Highest difference order currently backed by data.
+    pub fn usable_order(&self) -> usize {
+        self.updates.saturating_sub(1).min(self.max_order())
+    }
+
+    pub fn ready(&self) -> bool {
+        self.updates > 0
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.factors.iter().map(|f| f.len() * 4).sum()
+    }
+
+    /// Rolling backward-difference update with a freshly computed feature
+    /// (mirrors kernels/taylor.py::taylor_update → tested for parity).
+    pub fn refresh(&mut self, feat: &[f32]) {
+        assert_eq!(feat.len(), self.feat_len());
+        let m1 = self.factors.len();
+        let mut prev: Vec<f32> = feat.to_vec();
+        for i in 0..m1 {
+            std::mem::swap(&mut self.factors[i], &mut prev);
+            if i + 1 < m1 {
+                // next difference = new Δⁱ − old Δⁱ (old value now in `prev`)
+                let (cur, _) = (self.factors[i].clone(), ());
+                let mut next = cur;
+                for (n, o) in next.iter_mut().zip(prev.iter()) {
+                    *n -= o;
+                }
+                prev = next;
+            }
+        }
+        self.updates += 1;
+    }
+
+    /// Predict the feature k steps ahead of the last refresh (Eq. 2),
+    /// truncated to `draft.order(configured)` and the usable order.
+    pub fn predict(&self, k: f32, draft: DraftKind) -> Vec<f32> {
+        let order = draft.order(self.max_order()).min(self.usable_order());
+        let mut out = self.factors[0].clone();
+        let ratio = k / self.interval;
+        let mut coeff = 1.0f32;
+        for i in 1..=order {
+            coeff *= ratio / i as f32;
+            Tensor::axpy(coeff, &self.factors[i], &mut out);
+        }
+        out
+    }
+
+    /// Predict into a caller buffer (hot-path variant, no allocation).
+    pub fn predict_into(&self, k: f32, draft: DraftKind, out: &mut [f32]) {
+        let order = draft.order(self.max_order()).min(self.usable_order());
+        out.copy_from_slice(&self.factors[0]);
+        let ratio = k / self.interval;
+        let mut coeff = 1.0f32;
+        for i in 1..=order {
+            coeff *= ratio / i as f32;
+            Tensor::axpy(coeff, &self.factors[i], out);
+        }
+    }
+
+    pub fn factors(&self) -> &[Vec<f32>] {
+        &self.factors
+    }
+}
+
+/// The per-request bundle of tap caches tracked by the SpeCa engine:
+/// boundary v (verify-block input), boundary v+1 (its output), and the last
+/// boundary L (head input) — plus optionally *all* boundaries for the
+/// layer-correlation experiments (Fig. 6).
+#[derive(Debug, Clone)]
+pub struct FeatureCache {
+    pub taps: Vec<TapCache>,
+    /// serve step of the last refresh (for computing k)
+    pub last_refresh_step: Option<usize>,
+}
+
+impl FeatureCache {
+    pub fn new(n_taps: usize, order: usize, feat_len: usize, interval: usize) -> FeatureCache {
+        FeatureCache {
+            taps: (0..n_taps).map(|_| TapCache::new(order, feat_len, interval)).collect(),
+            last_refresh_step: None,
+        }
+    }
+
+    pub fn refresh(&mut self, step: usize, feats: &[&[f32]]) {
+        assert_eq!(feats.len(), self.taps.len());
+        for (tap, feat) in self.taps.iter_mut().zip(feats) {
+            tap.refresh(feat);
+        }
+        self.last_refresh_step = Some(step);
+    }
+
+    /// Steps elapsed since the last refresh when serving step `step`.
+    pub fn k_for_step(&self, step: usize) -> Option<f32> {
+        self.last_refresh_step.map(|s| (step - s) as f32)
+    }
+
+    pub fn ready(&self) -> bool {
+        self.last_refresh_step.is_some() && self.taps.iter().all(|t| t.ready())
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.taps.iter().map(|t| t.bytes()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Python-oracle parity: same update algebra as taylor_update_ref.
+    fn ref_update(factors: &[Vec<f32>], feat: &[f32]) -> Vec<Vec<f32>> {
+        let m1 = factors.len();
+        let mut out = vec![feat.to_vec()];
+        for i in 1..m1 {
+            let prev: Vec<f32> =
+                out[i - 1].iter().zip(&factors[i - 1]).map(|(a, b)| a - b).collect();
+            out.push(prev);
+        }
+        out
+    }
+
+    #[test]
+    fn refresh_matches_reference_algebra() {
+        let mut cache = TapCache::new(3, 4, 5);
+        let mut reference = vec![vec![0.0f32; 4]; 4];
+        for s in 0..6 {
+            let feat: Vec<f32> = (0..4).map(|i| ((s * 7 + i * 3) % 11) as f32).collect();
+            reference = ref_update(&reference, &feat);
+            cache.refresh(&feat);
+            for (a, b) in cache.factors().iter().zip(&reference) {
+                assert_eq!(a, b, "step {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn exact_on_linear_trajectories() {
+        // On a linear feature trajectory the order-1+ Taylor prediction is
+        // exact for any horizon (Δ¹/N is the exact slope).
+        let n = 4.0f32;
+        let f = |t: f32| 2.0 - 3.0 * t;
+        let mut cache = TapCache::new(2, 1, 4);
+        for j in 0..3 {
+            cache.refresh(&[f(j as f32 * n)]);
+        }
+        for k in 1..=6 {
+            let pred = cache.predict(k as f32, DraftKind::Taylor);
+            let expect = f(8.0 + k as f32);
+            assert!((pred[0] - expect).abs() < 1e-4, "k={k}: {} vs {expect}", pred[0]);
+        }
+    }
+
+    #[test]
+    fn higher_order_reduces_error_on_smooth_curves() {
+        // Paper Eq. 2 is a Taylor *approximation* (its backward differences
+        // carry O(N) derivative bias), so degree-2 curves are not exact —
+        // but error must shrink monotonically with draft order, which is
+        // exactly the Table-7 ordering (reuse > Adams-Bashforth > Taylor).
+        let f = |t: f32| 1.0 + 2.0 * t + t * t;
+        let mut cache = TapCache::new(2, 1, 2);
+        for j in 0..4 {
+            cache.refresh(&[f(j as f32 * 2.0)]);
+        }
+        let truth = f(8.0);
+        let reuse = cache.predict(2.0, DraftKind::Reuse)[0];
+        let ab = cache.predict(2.0, DraftKind::AdamsBashforth)[0];
+        let taylor = cache.predict(2.0, DraftKind::Taylor)[0];
+        assert_eq!(reuse, f(6.0)); // pure reuse = last refresh value
+        assert!((taylor - truth).abs() < (ab - truth).abs());
+        assert!((ab - truth).abs() < (reuse - truth).abs());
+        // order-2 error bound: |N·k·f''/2| + higher terms (Thm G.1 flavor)
+        assert!((taylor - truth).abs() <= 2.0 * 2.0 * 2.0 / 2.0 + 1e-3);
+    }
+
+    #[test]
+    fn warmup_caps_order() {
+        let mut cache = TapCache::new(3, 2, 5);
+        assert!(!cache.ready());
+        cache.refresh(&[1.0, 2.0]);
+        assert_eq!(cache.usable_order(), 0);
+        // with a single refresh, Taylor falls back to reuse
+        assert_eq!(cache.predict(3.0, DraftKind::Taylor), vec![1.0, 2.0]);
+        cache.refresh(&[2.0, 4.0]);
+        assert_eq!(cache.usable_order(), 1);
+    }
+
+    #[test]
+    fn predict_into_matches_predict() {
+        let mut cache = TapCache::new(2, 8, 3);
+        for s in 0..3 {
+            let feat: Vec<f32> = (0..8).map(|i| (s * i) as f32 * 0.5).collect();
+            cache.refresh(&feat);
+        }
+        let a = cache.predict(2.0, DraftKind::Taylor);
+        let mut b = vec![0.0; 8];
+        cache.predict_into(2.0, DraftKind::Taylor, &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn feature_cache_bookkeeping() {
+        let mut fc = FeatureCache::new(3, 2, 4, 5);
+        assert!(!fc.ready());
+        let f1 = vec![1.0f32; 4];
+        fc.refresh(10, &[&f1, &f1, &f1]);
+        assert!(fc.ready());
+        assert_eq!(fc.k_for_step(13), Some(3.0));
+        assert!(fc.bytes() > 0);
+    }
+}

@@ -1,0 +1,301 @@
+//! Typed views over `artifacts/manifest.json` (the AOT → runtime contract)
+//! plus serving/policy configuration structs.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+pub const MANIFEST_VERSION: u64 = 3;
+
+/// Model architecture + schedule description (mirrors configs.ModelConfig).
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub name: String,
+    pub image_size: usize,
+    pub channels: usize,
+    pub patch: usize,
+    pub dim: usize,
+    pub depth: usize,
+    pub heads: usize,
+    pub num_classes: usize,
+    pub frames: usize,
+    pub schedule_kind: ScheduleKind,
+    pub serve_steps: usize,
+    pub tokens: usize,
+    pub latent_dim: usize,
+    pub buckets: Vec<usize>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScheduleKind {
+    Ddim,
+    RectifiedFlow,
+}
+
+/// Serve-time noise schedule constants dumped by train.py (exact parity
+/// with the python golden traces).
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    pub kind: ScheduleKind,
+    /// value fed to the model's timestep embedding at each serve step
+    pub t_model: Vec<f32>,
+    /// DDIM: ᾱ_t per step
+    pub ab_t: Vec<f32>,
+    /// DDIM: ᾱ of the next (toward-data) point; last entry 1.0
+    pub ab_prev: Vec<f32>,
+    /// RF: Euler step size
+    pub dt: f32,
+}
+
+/// Analytic FLOPs table (MACs×2) recorded by configs.py.
+#[derive(Debug, Clone)]
+pub struct FlopsTable {
+    pub full_step: BTreeMap<usize, u64>,
+    pub block: BTreeMap<usize, u64>,
+    pub head: BTreeMap<usize, u64>,
+    pub predict_per_order: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub config: ModelConfig,
+    pub schedule: Schedule,
+    pub params: Vec<ParamSpec>,
+    pub weights: PathBuf,
+    pub goldens: PathBuf,
+    /// entry point -> bucket -> hlo path
+    pub artifacts: BTreeMap<String, BTreeMap<usize, PathBuf>>,
+    /// single-file kernel artifacts (taylor_predict, verify_stats, step, ...)
+    pub kernel_artifacts: BTreeMap<String, PathBuf>,
+    pub flops: FlopsTable,
+}
+
+#[derive(Debug, Clone)]
+pub struct ClassifierEntry {
+    pub weights: PathBuf,
+    pub goldens: PathBuf,
+    pub artifacts: BTreeMap<usize, PathBuf>,
+    pub params: Vec<ParamSpec>,
+    pub feat_dim: usize,
+    pub num_classes: usize,
+    pub latent_dim: usize,
+    pub acc: f64,
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub models: BTreeMap<String, ModelEntry>,
+    pub classifier: ClassifierEntry,
+}
+
+fn parse_params(j: &Json) -> Vec<ParamSpec> {
+    j.as_arr()
+        .unwrap_or(&[])
+        .iter()
+        .map(|p| ParamSpec {
+            name: p.req("name").as_str().unwrap().to_string(),
+            shape: p.req("shape").usizes(),
+        })
+        .collect()
+}
+
+fn parse_flops(j: &Json) -> FlopsTable {
+    let tab = |k: &str| -> BTreeMap<usize, u64> {
+        j.req(k)
+            .as_obj()
+            .unwrap()
+            .iter()
+            .map(|(b, v)| (b.parse().unwrap(), v.as_u64().unwrap()))
+            .collect()
+    };
+    FlopsTable {
+        full_step: tab("full_step"),
+        block: tab("block"),
+        head: tab("head"),
+        predict_per_order: j.req("predict_per_order").as_u64().unwrap(),
+    }
+}
+
+impl Manifest {
+    pub fn load(root: &Path) -> Result<Manifest> {
+        let path = root.join("manifest.json");
+        let text = fs::read_to_string(&path)
+            .with_context(|| format!("reading {} — run `make artifacts` first", path.display()))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        let version = j.req("version").as_u64().unwrap_or(0);
+        if version != MANIFEST_VERSION {
+            bail!("manifest version {version} != expected {MANIFEST_VERSION}; re-run `make artifacts`");
+        }
+
+        let mut models = BTreeMap::new();
+        for (name, m) in j.req("models").as_obj().unwrap() {
+            models.insert(name.clone(), Self::parse_model(root, m)?);
+        }
+
+        let c = j.req("classifier");
+        let classifier = ClassifierEntry {
+            weights: root.join(c.req("weights").as_str().unwrap()),
+            goldens: root.join(c.req("goldens").as_str().unwrap()),
+            artifacts: c
+                .req("artifacts")
+                .as_obj()
+                .unwrap()
+                .iter()
+                .map(|(b, p)| (b.parse().unwrap(), root.join(p.as_str().unwrap())))
+                .collect(),
+            params: parse_params(c.req("params")),
+            feat_dim: c.req("feat_dim").as_usize().unwrap(),
+            num_classes: c.req("num_classes").as_usize().unwrap(),
+            latent_dim: c.req("latent_dim").as_usize().unwrap(),
+            acc: c.req("acc").as_f64().unwrap(),
+        };
+
+        Ok(Manifest { root: root.to_path_buf(), models, classifier })
+    }
+
+    fn parse_model(root: &Path, m: &Json) -> Result<ModelEntry> {
+        let c = m.req("config");
+        let schedule_kind = match m.req("schedule").req("kind").as_str().unwrap() {
+            "ddim" => ScheduleKind::Ddim,
+            "rf" => ScheduleKind::RectifiedFlow,
+            k => bail!("unknown schedule kind {k}"),
+        };
+        let config = ModelConfig {
+            name: c.req("name").as_str().unwrap().to_string(),
+            image_size: c.req("image_size").as_usize().unwrap(),
+            channels: c.req("channels").as_usize().unwrap(),
+            patch: c.req("patch").as_usize().unwrap(),
+            dim: c.req("dim").as_usize().unwrap(),
+            depth: c.req("depth").as_usize().unwrap(),
+            heads: c.req("heads").as_usize().unwrap(),
+            num_classes: c.req("num_classes").as_usize().unwrap(),
+            frames: c.req("frames").as_usize().unwrap(),
+            schedule_kind,
+            serve_steps: c.req("serve_steps").as_usize().unwrap(),
+            tokens: c.req("tokens").as_usize().unwrap(),
+            latent_dim: c.req("latent_dim").as_usize().unwrap(),
+            buckets: c.req("buckets").usizes(),
+        };
+        let s = m.req("schedule");
+        let schedule = Schedule {
+            kind: schedule_kind,
+            t_model: s.req("t_model").f32s(),
+            ab_t: s.get("ab_t").map(|x| x.f32s()).unwrap_or_default(),
+            ab_prev: s.get("ab_prev").map(|x| x.f32s()).unwrap_or_default(),
+            dt: s.get("dt").and_then(|x| x.as_f64()).unwrap_or(0.0) as f32,
+        };
+
+        let mut artifacts = BTreeMap::new();
+        let mut kernel_artifacts = BTreeMap::new();
+        for (entry, v) in m.req("artifacts").as_obj().unwrap() {
+            match v {
+                Json::Obj(buckets) => {
+                    let map = buckets
+                        .iter()
+                        .map(|(b, p)| {
+                            (b.parse::<usize>().unwrap(), root.join(p.as_str().unwrap()))
+                        })
+                        .collect();
+                    artifacts.insert(entry.clone(), map);
+                }
+                Json::Str(p) => {
+                    kernel_artifacts.insert(entry.clone(), root.join(p));
+                }
+                _ => bail!("artifact entry {entry}: unexpected json shape"),
+            }
+        }
+
+        Ok(ModelEntry {
+            config,
+            schedule,
+            params: parse_params(m.req("params")),
+            weights: root.join(m.req("weights").as_str().unwrap()),
+            goldens: root.join(m.req("goldens").as_str().unwrap()),
+            artifacts,
+            kernel_artifacts,
+            flops: parse_flops(m.req("flops")),
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelEntry> {
+        self.models
+            .get(name)
+            .with_context(|| format!("model '{name}' not in manifest ({:?})", self.models.keys()))
+    }
+}
+
+impl ModelEntry {
+    /// Smallest compiled bucket that fits `n` requests.
+    pub fn bucket_for(&self, n: usize) -> usize {
+        *self
+            .config
+            .buckets
+            .iter()
+            .find(|b| **b >= n)
+            .unwrap_or(self.config.buckets.last().unwrap())
+    }
+
+    pub fn feat_len(&self) -> usize {
+        self.config.tokens * self.config.dim
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_selection() {
+        let entry = ModelEntry {
+            config: ModelConfig {
+                name: "t".into(),
+                image_size: 16,
+                channels: 1,
+                patch: 2,
+                dim: 8,
+                depth: 2,
+                heads: 2,
+                num_classes: 4,
+                frames: 1,
+                schedule_kind: ScheduleKind::Ddim,
+                serve_steps: 10,
+                tokens: 64,
+                latent_dim: 256,
+                buckets: vec![1, 2, 4, 8],
+            },
+            schedule: Schedule {
+                kind: ScheduleKind::Ddim,
+                t_model: vec![],
+                ab_t: vec![],
+                ab_prev: vec![],
+                dt: 0.0,
+            },
+            params: vec![],
+            weights: PathBuf::new(),
+            goldens: PathBuf::new(),
+            artifacts: BTreeMap::new(),
+            kernel_artifacts: BTreeMap::new(),
+            flops: FlopsTable {
+                full_step: BTreeMap::new(),
+                block: BTreeMap::new(),
+                head: BTreeMap::new(),
+                predict_per_order: 0,
+            },
+        };
+        assert_eq!(entry.bucket_for(1), 1);
+        assert_eq!(entry.bucket_for(3), 4);
+        assert_eq!(entry.bucket_for(8), 8);
+        assert_eq!(entry.bucket_for(20), 8); // clamps to largest
+    }
+}

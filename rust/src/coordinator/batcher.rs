@@ -1,0 +1,193 @@
+//! Dynamic batcher: groups same-phase work into the AOT batch buckets.
+//!
+//! Artifacts are compiled for fixed batch sizes (manifest `buckets`, e.g.
+//! {1, 2, 4, 8}); a tick's worth of same-phase requests is decomposed into
+//! chunks that map 1:1 onto compiled executables. Two strategies:
+//!
+//! * `Binary` — greedy largest-bucket-first decomposition (no padding;
+//!   compute-optimal on CPU where cost scales with batch).
+//! * `PadUp`  — single chunk padded up to the smallest covering bucket
+//!   (fewer dispatches; wins when per-dispatch overhead dominates).
+//!
+//! The perf pass (EXPERIMENTS.md §Perf) quantifies both.
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BatchStrategy {
+    Binary,
+    PadUp,
+}
+
+impl BatchStrategy {
+    pub fn parse(s: &str) -> Option<BatchStrategy> {
+        match s {
+            "binary" => Some(BatchStrategy::Binary),
+            "pad" | "padup" | "pad-up" => Some(BatchStrategy::PadUp),
+            _ => None,
+        }
+    }
+}
+
+/// One executable dispatch: `bucket` slots, the first `used` filled with
+/// the given member indices (the rest padded by replicating member 0).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Chunk {
+    pub bucket: usize,
+    pub members: Vec<usize>,
+}
+
+impl Chunk {
+    pub fn used(&self) -> usize {
+        self.members.len()
+    }
+    pub fn padding(&self) -> usize {
+        self.bucket - self.members.len()
+    }
+}
+
+/// Split `items` (indices into the tick's phase list) into chunks.
+/// `buckets` must be sorted ascending and non-empty.
+pub fn plan_chunks(n_items: usize, buckets: &[usize], strategy: BatchStrategy) -> Vec<Chunk> {
+    assert!(!buckets.is_empty(), "no batch buckets");
+    debug_assert!(buckets.windows(2).all(|w| w[0] < w[1]), "buckets must be sorted");
+    let mut chunks = Vec::new();
+    let mut next = 0usize;
+    let mut remaining = n_items;
+    let largest = *buckets.last().unwrap();
+    while remaining > 0 {
+        let bucket = match strategy {
+            BatchStrategy::Binary => {
+                // largest bucket that fits entirely, else the smallest
+                *buckets.iter().rev().find(|b| **b <= remaining).unwrap_or(&buckets[0])
+            }
+            BatchStrategy::PadUp => {
+                // smallest bucket covering everything left (capped at max)
+                *buckets.iter().find(|b| **b >= remaining).unwrap_or(&largest)
+            }
+        };
+        let take = bucket.min(remaining);
+        chunks.push(Chunk { bucket, members: (next..next + take).collect() });
+        next += take;
+        remaining -= take;
+    }
+    chunks
+}
+
+/// Gather per-member rows into a padded flat buffer of `bucket` rows.
+/// Pads by replicating the first member's row (outputs past `used()` are
+/// discarded by the caller).
+pub fn gather_rows<F: Fn(usize, &mut [f32])>(
+    chunk: &Chunk,
+    row_len: usize,
+    fill: F,
+) -> Vec<f32> {
+    let mut buf = vec![0.0f32; chunk.bucket * row_len];
+    for (slot, m) in chunk.members.iter().enumerate() {
+        let (dst, _) = buf[slot * row_len..].split_at_mut(row_len);
+        fill(*m, dst);
+    }
+    // replicate member 0 into padding slots
+    if chunk.padding() > 0 && !chunk.members.is_empty() {
+        let proto = buf[..row_len].to_vec();
+        for slot in chunk.used()..chunk.bucket {
+            buf[slot * row_len..(slot + 1) * row_len].copy_from_slice(&proto);
+        }
+    }
+    buf
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+
+    const BUCKETS: &[usize] = &[1, 2, 4, 8];
+
+    #[test]
+    fn binary_decomposition() {
+        let chunks = plan_chunks(7, BUCKETS, BatchStrategy::Binary);
+        let sizes: Vec<usize> = chunks.iter().map(|c| c.bucket).collect();
+        assert_eq!(sizes, vec![4, 2, 1]);
+        assert!(chunks.iter().all(|c| c.padding() == 0));
+    }
+
+    #[test]
+    fn padup_single_chunk() {
+        let chunks = plan_chunks(7, BUCKETS, BatchStrategy::PadUp);
+        assert_eq!(chunks.len(), 1);
+        assert_eq!(chunks[0].bucket, 8);
+        assert_eq!(chunks[0].padding(), 1);
+    }
+
+    #[test]
+    fn padup_overflow_splits() {
+        let chunks = plan_chunks(19, BUCKETS, BatchStrategy::PadUp);
+        let total: usize = chunks.iter().map(|c| c.used()).sum();
+        assert_eq!(total, 19);
+        assert!(chunks.iter().all(|c| c.bucket <= 8));
+    }
+
+    #[test]
+    fn empty_is_empty() {
+        assert!(plan_chunks(0, BUCKETS, BatchStrategy::Binary).is_empty());
+    }
+
+    #[test]
+    fn gather_pads_with_first_member() {
+        let chunk = Chunk { bucket: 4, members: vec![10, 11] };
+        let buf = gather_rows(&chunk, 2, |m, dst| {
+            dst[0] = m as f32;
+            dst[1] = m as f32 + 0.5;
+        });
+        assert_eq!(buf, vec![10.0, 10.5, 11.0, 11.5, 10.0, 10.5, 10.0, 10.5]);
+    }
+
+    /// Property: every member appears exactly once, in order, regardless of
+    /// strategy and item count; chunk buckets are always valid.
+    #[test]
+    fn prop_chunks_partition_items() {
+        prop_check(300, 0xBA7C4, |rng| {
+            let n = rng.below(40);
+            let strategy = if rng.below(2) == 0 {
+                BatchStrategy::Binary
+            } else {
+                BatchStrategy::PadUp
+            };
+            let chunks = plan_chunks(n, BUCKETS, strategy);
+            let flat: Vec<usize> = chunks.iter().flat_map(|c| c.members.clone()).collect();
+            if flat != (0..n).collect::<Vec<_>>() {
+                return Err(format!("n={n} {strategy:?}: bad partition {flat:?}"));
+            }
+            for c in &chunks {
+                if !BUCKETS.contains(&c.bucket) {
+                    return Err(format!("invalid bucket {}", c.bucket));
+                }
+                if c.used() > c.bucket {
+                    return Err("overfull chunk".to_string());
+                }
+                if c.used() == 0 {
+                    return Err("empty chunk".to_string());
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Property: binary strategy never pads; padup pads at most
+    /// bucket_max − 1 in total.
+    #[test]
+    fn prop_padding_bounds() {
+        prop_check(200, 0xFADE, |rng| {
+            let n = 1 + rng.below(64);
+            let b = plan_chunks(n, BUCKETS, BatchStrategy::Binary);
+            if b.iter().any(|c| c.padding() != 0) {
+                return Err("binary padded".into());
+            }
+            let p = plan_chunks(n, BUCKETS, BatchStrategy::PadUp);
+            let pad: usize = p.iter().map(|c| c.padding()).sum();
+            if pad >= 8 {
+                return Err(format!("padup wasted {pad}"));
+            }
+            Ok(())
+        });
+    }
+}

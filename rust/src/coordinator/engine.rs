@@ -1,0 +1,617 @@
+//! The SpeCa serving engine (paper §3.2 workflow, Fig. 1).
+//!
+//! One `tick()` advances every in-flight request by exactly one serve step:
+//!
+//! 1. requests planning `Full` run the complete forward pass in dynamic
+//!    batches (bucketed, see batcher.rs) and refresh their Taylor caches;
+//! 2. requests planning `Spec` draft-predict their tap features natively
+//!    (C_pred ≪ C), then — for SpeCa — the *verify block* runs batched on
+//!    the predicted input (γ ≈ 1/depth) and the relative error decides
+//!    accept/reject against τ_t = τ0·β^((T−t)/T);
+//! 3. accepted speculations route the predicted head input through the
+//!    output head; rejections fall back to a full pass in the same step
+//!    (paper Eq. 6: the rejected step and all later predictions are
+//!    discarded — later steps re-plan from the refreshed cache);
+//! 4. Skip/Blend/Elide handle the baseline policies.
+//!
+//! Different policies coexist in one engine; batches group by phase (and
+//! verify layer), not by policy — this is what enables the paper's
+//! sample-adaptive computation allocation to emerge per request.
+
+use std::collections::VecDeque;
+
+use anyhow::Result;
+
+use crate::cache::DraftKind;
+use crate::config::ScheduleKind;
+use crate::coordinator::batcher::{gather_rows, plan_chunks, BatchStrategy};
+use crate::coordinator::policy::{Plan, Policy};
+use crate::coordinator::state::{Completion, ReqState, RequestSpec};
+use crate::metrics::flops::{FlopsCounter, FlopsModel};
+use crate::runtime::ModelRuntime;
+use crate::sampler;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    pub max_inflight: usize,
+    pub strategy: BatchStrategy,
+    /// execute the pallas-attention artifact variant for full passes
+    pub use_pallas: bool,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig { max_inflight: 8, strategy: BatchStrategy::Binary, use_pallas: false }
+    }
+}
+
+pub struct Engine<'rt> {
+    pub model: &'rt ModelRuntime<'rt>,
+    flops_model: FlopsModel,
+    cfg: EngineConfig,
+    queue: VecDeque<RequestSpec>,
+    active: Vec<ReqState>,
+    completions: Vec<Completion>,
+    /// aggregate FLOPs of everything completed so far
+    pub flops: FlopsCounter,
+    pub ticks: u64,
+    /// TeaCache drift signal dimension (heuristic, engine-local)
+    temb_dim: usize,
+}
+
+impl<'rt> Engine<'rt> {
+    pub fn new(model: &'rt ModelRuntime<'rt>, cfg: EngineConfig) -> Engine<'rt> {
+        let flops_model = FlopsModel::new(model.entry.flops.clone());
+        Engine {
+            model,
+            flops_model,
+            cfg,
+            queue: VecDeque::new(),
+            active: Vec::new(),
+            completions: Vec::new(),
+            flops: FlopsCounter::default(),
+            ticks: 0,
+            temb_dim: 64,
+        }
+    }
+
+    pub fn submit(&mut self, spec: RequestSpec) {
+        self.queue.push_back(spec);
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len() + self.active.len()
+    }
+
+    pub fn drain_completions(&mut self) -> Vec<Completion> {
+        std::mem::take(&mut self.completions)
+    }
+
+    /// Run until queue and active set are empty; returns completions.
+    pub fn run_to_completion(&mut self) -> Result<Vec<Completion>> {
+        while self.tick()? {}
+        Ok(self.drain_completions())
+    }
+
+    fn total_steps(&self) -> usize {
+        self.model.entry.config.serve_steps
+    }
+
+    fn admit(&mut self) {
+        let cfg = &self.model.entry.config;
+        while self.active.len() < self.cfg.max_inflight {
+            let Some(spec) = self.queue.pop_front() else { break };
+            let mut rng = Rng::new(spec.seed);
+            let x = rng.normal_f32s(cfg.latent_dim);
+            let st = ReqState::new(spec, x, cfg.depth, cfg.tokens * cfg.dim);
+            self.active.push(st);
+        }
+    }
+
+    /// Advance every in-flight request one serve step. Returns false when
+    /// fully idle.
+    pub fn tick(&mut self) -> Result<bool> {
+        self.admit();
+        if self.active.is_empty() {
+            return Ok(false);
+        }
+        self.ticks += 1;
+        let total = self.total_steps();
+
+        // --- update TeaCache drift accumulators, then plan ---------------
+        for st in self.active.iter_mut() {
+            if let Policy::TeaCache { .. } = st.spec.policy {
+                if st.step > 0 {
+                    let cur = timestep_embedding(
+                        self.model.entry.schedule.t_model[st.step],
+                        self.temb_dim,
+                    );
+                    let prev = timestep_embedding(
+                        self.model.entry.schedule.t_model[st.step - 1],
+                        self.temb_dim,
+                    );
+                    st.tea_accum += rel_l1(&cur, &prev);
+                }
+            }
+        }
+
+        let mut full = Vec::new();
+        let mut spec_verify = Vec::new(); // SpeCa: needs verification
+        let mut spec_direct = Vec::new(); // TaylorSeer: head directly
+        let mut skip = Vec::new();
+        let mut blend = Vec::new();
+        let mut elide = Vec::new();
+        for (i, st) in self.active.iter().enumerate() {
+            let plan = st.spec.policy.plan(st.step, total, st.since_full, st.tea_accum);
+            match plan {
+                Plan::Full => full.push(i),
+                Plan::Spec => {
+                    if !st.cache.ready() {
+                        full.push(i);
+                    } else if matches!(st.spec.policy, Policy::SpeCa(_)) {
+                        spec_verify.push(i)
+                    } else {
+                        spec_direct.push(i)
+                    }
+                }
+                Plan::Skip => skip.push(i),
+                Plan::Blend => blend.push(i),
+                Plan::Elide => elide.push(i),
+            }
+        }
+        for &i in &elide {
+            let st = &mut self.active[i];
+            st.stats.elided_steps += 1;
+            st.step += 1;
+            st.since_full += 1;
+        }
+
+        // --- speculative phase: draft predictions ------------------------
+        for &i in spec_verify.iter().chain(spec_direct.iter()) {
+            let v = self.verify_layer_of(i);
+            let depth = self.model.entry.config.depth;
+            let st = &mut self.active[i];
+            let k = st.cache.k_for_step(st.step).expect("cache ready");
+            let draft = match &st.spec.policy {
+                Policy::SpeCa(c) => c.draft,
+                _ => DraftKind::Taylor,
+            };
+            let order = st.spec.policy.order();
+            let n_taps = st.tap_boundaries.len();
+            if matches!(st.spec.policy, Policy::SpeCa(_)) {
+                let tv = st.tap_of(v);
+                let tvo = st.tap_of(v + 1);
+                let tl = st.tap_of(depth);
+                st.cache.taps[tv].predict_into(k, draft, &mut st.pred_vin);
+                st.cache.taps[tvo].predict_into(k, draft, &mut st.pred_vout);
+                if tl != tvo {
+                    st.cache.taps[tl].predict_into(k, draft, &mut st.pred_last);
+                } else {
+                    st.pred_last.copy_from_slice(&st.pred_vout);
+                }
+            } else {
+                let tl = st.tap_of(depth);
+                st.cache.taps[tl].predict_into(k, draft, &mut st.pred_last);
+            }
+            self.flops_model.book_predict(&mut st.stats.flops, order, n_taps, 1);
+        }
+
+        // --- verification (grouped by verify layer) ----------------------
+        let mut accepted = Vec::new();
+        let mut rejected = Vec::new();
+        if !spec_verify.is_empty() {
+            let mut by_layer: std::collections::BTreeMap<usize, Vec<usize>> =
+                std::collections::BTreeMap::new();
+            for &i in &spec_verify {
+                by_layer.entry(self.verify_layer_of(i)).or_default().push(i);
+            }
+            for (layer, idxs) in by_layer {
+                self.run_verify(layer, &idxs, &mut accepted, &mut rejected)?;
+            }
+        }
+
+        // --- heads for accepted + direct speculations --------------------
+        let mut head_list = accepted;
+        head_list.extend(spec_direct.iter().copied());
+        self.run_heads(&head_list)?;
+
+        // --- skips --------------------------------------------------------
+        for &i in &skip {
+            let total = self.total_steps();
+            let st = &mut self.active[i];
+            let eps = std::mem::take(&mut st.last_eps);
+            Self::apply_model_out(&self.model.entry.schedule, st, &eps, total);
+            st.last_eps = eps;
+            self.flops_model.book_spec_step(&mut st.stats.flops, 1);
+            st.stats.skip_steps += 1;
+            st.step += 1;
+            st.since_full += 1;
+        }
+
+        // --- blends (ToCa/DuCa-sim) ---------------------------------------
+        self.run_blend(&blend)?;
+
+        // --- full passes (planned + rejected fallbacks) -------------------
+        full.extend(rejected.iter().copied());
+        for &i in &rejected {
+            self.active[i].stats.rejects += 1;
+            self.active[i].stats.flops.n_rejects += 1;
+        }
+        self.run_full(&full)?;
+
+        // --- retire completed requests ------------------------------------
+        let total = self.total_steps();
+        let mut i = 0;
+        while i < self.active.len() {
+            if self.active[i].step >= total {
+                let st = self.active.swap_remove(i);
+                self.finish(st);
+            } else {
+                i += 1;
+            }
+        }
+        Ok(true)
+    }
+
+    fn verify_layer_of(&self, i: usize) -> usize {
+        match &self.active[i].spec.policy {
+            Policy::SpeCa(c) => c.verify_layer.min(self.model.entry.config.depth - 1),
+            _ => self.model.entry.config.depth - 1,
+        }
+    }
+
+    fn finish(&mut self, st: ReqState) {
+        let mut st = st;
+        st.stats.latency_ms = st.started.elapsed().as_secs_f64() * 1e3;
+        self.flops.merge(&st.stats.flops);
+        self.completions.push(Completion {
+            id: st.spec.id,
+            cond: st.spec.cond,
+            policy_name: st.spec.policy.name().to_string(),
+            latent: st.x,
+            stats: st.stats,
+            traj: st.traj,
+        });
+    }
+
+    /// Denoising update honoring step-reduction jumps.
+    fn apply_model_out(
+        schedule: &crate::config::Schedule,
+        st: &mut ReqState,
+        model_out: &[f32],
+        total: usize,
+    ) {
+        let i = st.step;
+        // next step this request will actually execute (elides are jumped)
+        let next = (i + 1..total).find(|j| {
+            st.spec.policy.plan(*j, total, 1, f64::INFINITY) != Plan::Elide
+        });
+        match schedule.kind {
+            ScheduleKind::Ddim => {
+                let ab_t = schedule.ab_t[i];
+                let ab_prev = next.map(|j| schedule.ab_t[j]).unwrap_or(1.0);
+                sampler::ddim_step(&mut st.x, model_out, ab_t, ab_prev);
+            }
+            ScheduleKind::RectifiedFlow => {
+                let gap = next.unwrap_or(total) - i;
+                sampler::rf_step(&mut st.x, model_out, schedule.dt * gap as f32);
+            }
+        }
+    }
+
+    /// Execute full forward passes for `idxs`, refresh caches, advance.
+    /// Requests that never read the feature cache take the eps-only
+    /// artifact (no boundary-stack transfer — EXPERIMENTS.md §Perf).
+    fn run_full(&mut self, idxs: &[usize]) -> Result<()> {
+        if idxs.is_empty() {
+            return Ok(());
+        }
+        let has_light = self
+            .model
+            .entry
+            .artifacts
+            .contains_key("full_eps");
+        let (heavy, light): (Vec<usize>, Vec<usize>) = idxs.iter().partition(|&&i| {
+            let st = &self.active[i];
+            !has_light
+                || st.spec.policy.uses_cache()
+                || st.spec.policy.reuse_frac() > 0.0
+                || st.spec.record_traj
+        });
+        self.run_full_light(&light)?;
+        let idxs = &heavy;
+        if idxs.is_empty() {
+            return Ok(());
+        }
+        let cfg = self.model.entry.config.clone();
+        let buckets = cfg.buckets.clone();
+        let latent = cfg.latent_dim;
+        let feat = cfg.tokens * cfg.dim;
+        let total = self.total_steps();
+        for chunk in plan_chunks(idxs.len(), &buckets, self.cfg.strategy) {
+            let members: Vec<usize> = chunk.members.iter().map(|m| idxs[*m]).collect();
+            let x = gather_rows(&chunk, latent, |m, dst| {
+                dst.copy_from_slice(&self.active[idxs[m]].x)
+            });
+            let (t, y) = self.gather_ty(&chunk, idxs);
+            let (eps, bounds) =
+                self.model.full(chunk.bucket, &x, &t, &y, self.cfg.use_pallas)?;
+            // bounds: [L+1, bucket, T, D]
+            for (slot, &ri) in members.iter().enumerate() {
+                let st = &mut self.active[ri];
+                let eps_row = eps.row(slot);
+                if st.spec.policy.uses_cache() {
+                    let taps: Vec<&[f32]> = st
+                        .tap_boundaries
+                        .iter()
+                        .map(|b| {
+                            let off = (b * chunk.bucket + slot) * feat;
+                            &bounds.data[off..off + feat]
+                        })
+                        .collect();
+                    st.cache.refresh(st.step, &taps);
+                }
+                // blend policies cache the last boundary
+                if st.spec.policy.reuse_frac() > 0.0 {
+                    let off = (cfg.depth * chunk.bucket + slot) * feat;
+                    st.blend_feat = bounds.data[off..off + feat].to_vec();
+                }
+                if st.spec.record_traj {
+                    let off = (cfg.depth * chunk.bucket + slot) * feat;
+                    st.traj.push(bounds.data[off..off + feat].to_vec());
+                }
+                st.last_eps = eps_row.to_vec();
+                st.tea_accum = 0.0;
+                Self::apply_model_out(&self.model.entry.schedule, st, eps_row, total);
+                self.flops_model.book_full(&mut st.stats.flops, chunk.bucket, 1);
+                st.stats.full_steps += 1;
+                st.step += 1;
+                st.since_full = 0;
+            }
+        }
+        Ok(())
+    }
+
+    /// Eps-only full passes (no cache refresh needed for these policies).
+    fn run_full_light(&mut self, idxs: &[usize]) -> Result<()> {
+        if idxs.is_empty() {
+            return Ok(());
+        }
+        let cfg = self.model.entry.config.clone();
+        let total = self.total_steps();
+        for chunk in plan_chunks(idxs.len(), &cfg.buckets, self.cfg.strategy) {
+            let members: Vec<usize> = chunk.members.iter().map(|m| idxs[*m]).collect();
+            let x = gather_rows(&chunk, cfg.latent_dim, |m, dst| {
+                dst.copy_from_slice(&self.active[idxs[m]].x)
+            });
+            let (t, y) = self.gather_ty(&chunk, idxs);
+            let eps = self.model.full_eps(chunk.bucket, &x, &t, &y)?;
+            for (slot, &ri) in members.iter().enumerate() {
+                let st = &mut self.active[ri];
+                let eps_row = eps.row(slot);
+                st.last_eps = eps_row.to_vec();
+                st.tea_accum = 0.0;
+                Self::apply_model_out(&self.model.entry.schedule, st, eps_row, total);
+                self.flops_model.book_full(&mut st.stats.flops, chunk.bucket, 1);
+                st.stats.full_steps += 1;
+                st.step += 1;
+                st.since_full = 0;
+            }
+        }
+        Ok(())
+    }
+
+    /// SpeCa verification: run the verify block on predicted inputs, accept
+    /// iff the relative error beats τ_t.
+    fn run_verify(
+        &mut self,
+        layer: usize,
+        idxs: &[usize],
+        accepted: &mut Vec<usize>,
+        rejected: &mut Vec<usize>,
+    ) -> Result<()> {
+        let buckets = self.model.entry.config.buckets.clone();
+        let feat = self.model.entry.feat_len();
+        let total = self.total_steps();
+        for chunk in plan_chunks(idxs.len(), &buckets, self.cfg.strategy) {
+            let members: Vec<usize> = chunk.members.iter().map(|m| idxs[*m]).collect();
+            let fin = gather_rows(&chunk, feat, |m, dst| {
+                dst.copy_from_slice(&self.active[idxs[m]].pred_vin)
+            });
+            let (t, y) = self.gather_ty(&chunk, idxs);
+            let actual = self.model.block(chunk.bucket, layer as i32, &fin, &t, &y)?;
+            for (slot, &ri) in members.iter().enumerate() {
+                let st = &mut self.active[ri];
+                let Policy::SpeCa(c) = &st.spec.policy else { unreachable!() };
+                let e = c.metric.eval(&st.pred_vout, actual.row(slot));
+                let tau = c.tau_at(st.step, total);
+                st.stats.verify_trace.push((st.step, e, tau));
+                self.flops_model.book_verify(&mut st.stats.flops, chunk.bucket, 1);
+                if e <= tau {
+                    accepted.push(ri);
+                } else {
+                    rejected.push(ri);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Output heads over predicted last-boundary features (accepted SpeCa +
+    /// TaylorSeer speculative steps).
+    fn run_heads(&mut self, idxs: &[usize]) -> Result<()> {
+        if idxs.is_empty() {
+            return Ok(());
+        }
+        let buckets = self.model.entry.config.buckets.clone();
+        let feat = self.model.entry.feat_len();
+        let total = self.total_steps();
+        for chunk in plan_chunks(idxs.len(), &buckets, self.cfg.strategy) {
+            let members: Vec<usize> = chunk.members.iter().map(|m| idxs[*m]).collect();
+            let fin = gather_rows(&chunk, feat, |m, dst| {
+                dst.copy_from_slice(&self.active[idxs[m]].pred_last)
+            });
+            let (t, y) = self.gather_ty(&chunk, idxs);
+            let eps = self.model.head(chunk.bucket, &fin, &t, &y)?;
+            for (slot, &ri) in members.iter().enumerate() {
+                let st = &mut self.active[ri];
+                let eps_row = eps.row(slot);
+                if st.spec.record_traj {
+                    st.traj.push(st.pred_last.clone());
+                }
+                st.last_eps = eps_row.to_vec();
+                Self::apply_model_out(&self.model.entry.schedule, st, eps_row, total);
+                self.flops_model.book_head(&mut st.stats.flops, chunk.bucket, 1);
+                self.flops_model.book_spec_step(&mut st.stats.flops, 1);
+                st.stats.spec_steps += 1;
+                st.step += 1;
+                st.since_full += 1;
+            }
+        }
+        Ok(())
+    }
+
+    /// ToCa/DuCa-sim partial steps: recompute fully but emit a token-blended
+    /// head input (reuse_frac of tokens come from the stale cache). FLOPs
+    /// are booked at the simulated (1−R)·C cost — see DESIGN.md §2.
+    fn run_blend(&mut self, idxs: &[usize]) -> Result<()> {
+        if idxs.is_empty() {
+            return Ok(());
+        }
+        let cfg = self.model.entry.config.clone();
+        let buckets = cfg.buckets.clone();
+        let latent = cfg.latent_dim;
+        let feat = cfg.tokens * cfg.dim;
+        let total = self.total_steps();
+        for chunk in plan_chunks(idxs.len(), &buckets, self.cfg.strategy) {
+            let members: Vec<usize> = chunk.members.iter().map(|m| idxs[*m]).collect();
+            let x = gather_rows(&chunk, latent, |m, dst| {
+                dst.copy_from_slice(&self.active[idxs[m]].x)
+            });
+            let (t, y) = self.gather_ty(&chunk, idxs);
+            let (_eps, bounds) = self.model.full(chunk.bucket, &x, &t, &y, false)?;
+            // blend per request, then head over the blended features
+            let mut blended = vec![0.0f32; chunk.bucket * feat];
+            for (slot, &ri) in members.iter().enumerate() {
+                let st = &self.active[ri];
+                let frac = st.spec.policy.reuse_frac();
+                let off = (cfg.depth * chunk.bucket + slot) * feat;
+                let fresh = &bounds.data[off..off + feat];
+                let dst = &mut blended[slot * feat..(slot + 1) * feat];
+                let tok_len = cfg.dim;
+                for tok in 0..cfg.tokens {
+                    let reuse = tok_hash(tok, st.step) < frac && !st.blend_feat.is_empty();
+                    let src = if reuse { &st.blend_feat } else { fresh };
+                    dst[tok * tok_len..(tok + 1) * tok_len]
+                        .copy_from_slice(&src[tok * tok_len..(tok + 1) * tok_len]);
+                }
+            }
+            let eps = self.model.head(chunk.bucket, &blended, &t, &y)?;
+            for (slot, &ri) in members.iter().enumerate() {
+                let st = &mut self.active[ri];
+                let frac = st.spec.policy.reuse_frac();
+                let eps_row = eps.row(slot);
+                st.last_eps = eps_row.to_vec();
+                if st.spec.record_traj {
+                    st.traj
+                        .push(blended[slot * feat..(slot + 1) * feat].to_vec());
+                }
+                Self::apply_model_out(&self.model.entry.schedule, st, eps_row, total);
+                // simulated cost: (1−R) of a full pass + the head
+                let full_per = self.flops_model.table.full_step.get(&1).copied().unwrap_or(0);
+                st.stats.flops.other += ((1.0 - frac) * full_per as f64) as u64;
+                self.flops_model.book_head(&mut st.stats.flops, chunk.bucket, 1);
+                self.flops_model.book_spec_step(&mut st.stats.flops, 1);
+                st.stats.blend_steps += 1;
+                st.step += 1;
+                st.since_full += 1;
+            }
+        }
+        Ok(())
+    }
+
+    fn gather_ty(
+        &self,
+        chunk: &crate::coordinator::batcher::Chunk,
+        idxs: &[usize],
+    ) -> (Vec<f32>, Vec<i32>) {
+        let sched = &self.model.entry.schedule;
+        let mut t = vec![0f32; chunk.bucket];
+        let mut y = vec![0i32; chunk.bucket];
+        for (slot, m) in chunk.members.iter().enumerate() {
+            let st = &self.active[idxs[*m]];
+            t[slot] = sched.t_model[st.step];
+            y[slot] = st.spec.cond;
+        }
+        // padding replicates slot 0
+        for slot in chunk.used()..chunk.bucket {
+            t[slot] = t[0];
+            y[slot] = y[0];
+        }
+        (t, y)
+    }
+}
+
+/// Deterministic per-(token, step) hash in [0, 1) for ToCa-style subsets.
+fn tok_hash(tok: usize, step: usize) -> f64 {
+    let mut h = (tok as u64).wrapping_mul(0x9E3779B97F4A7C15) ^ (step as u64).wrapping_mul(0xC2B2AE3D27D4EB4F);
+    h ^= h >> 33;
+    h = h.wrapping_mul(0xFF51AFD7ED558CCD);
+    h ^= h >> 33;
+    (h >> 11) as f64 / (1u64 << 53) as f64
+}
+
+/// Sinusoidal timestep embedding matching model.py (TeaCache drift signal).
+pub fn timestep_embedding(t: f32, dim: usize) -> Vec<f32> {
+    let half = dim / 2;
+    let mut out = vec![0f32; dim];
+    for i in 0..half {
+        let freq = (-(10000f64.ln()) * i as f64 / half as f64).exp();
+        let arg = t as f64 * freq;
+        out[i] = arg.cos() as f32;
+        out[half + i] = arg.sin() as f32;
+    }
+    out
+}
+
+fn rel_l1(a: &[f32], b: &[f32]) -> f64 {
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for (x, y) in a.iter().zip(b) {
+        num += ((*x - *y) as f64).abs();
+        den += (*y as f64).abs();
+    }
+    num / (den + 1e-8)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tok_hash_uniformish() {
+        let n = 10_000;
+        let mean: f64 = (0..n).map(|i| tok_hash(i, 3)).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.02, "{mean}");
+        // deterministic
+        assert_eq!(tok_hash(5, 7), tok_hash(5, 7));
+        assert_ne!(tok_hash(5, 7), tok_hash(5, 8));
+    }
+
+    #[test]
+    fn temb_shape_and_range() {
+        let e = timestep_embedding(500.0, 64);
+        assert_eq!(e.len(), 64);
+        assert!(e.iter().all(|v| v.abs() <= 1.0 + 1e-6));
+        // embeddings of distinct timesteps differ
+        let e2 = timestep_embedding(400.0, 64);
+        assert!(rel_l1(&e, &e2) > 1e-3);
+    }
+
+    #[test]
+    fn rel_l1_zero_on_equal() {
+        let a = vec![1.0f32, -2.0];
+        assert!(rel_l1(&a, &a) < 1e-12);
+    }
+}

@@ -1,0 +1,12 @@
+//! L3 coordinator — the paper's system contribution: per-request
+//! forecast-then-verify state machines, dynamic batching across the AOT
+//! batch buckets, and the policy zoo used by the evaluation tables.
+
+pub mod batcher;
+pub mod engine;
+pub mod policy;
+pub mod state;
+
+pub use engine::{Engine, EngineConfig};
+pub use policy::{ErrorMetric, Plan, Policy, SpeCaConfig};
+pub use state::{Completion, ReqState, RequestSpec, RequestStats};

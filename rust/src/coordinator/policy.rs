@@ -1,0 +1,360 @@
+//! Acceleration policies: the paper's SpeCa plus every baseline in the
+//! evaluation tables (full compute, DDIM step reduction, FORA, TeaCache,
+//! ToCa/DuCa token-reuse simulations, TaylorSeer).
+//!
+//! A policy decides, per request per serve step, one of
+//!   * `Full`   — complete forward pass (refreshes the feature cache)
+//!   * `Spec`   — draft-predict features; SpeCa additionally verifies and
+//!                may *reject*, falling back to a full pass the same step
+//!   * `Skip`   — reuse the previous ε̂ verbatim (FORA/TeaCache-style)
+//!   * `Blend`  — recompute but reuse a token fraction (ToCa/DuCa-sim)
+//!
+//! SpeCa's acceptance test (paper §3.4): e = ‖F̂−F‖/(‖F‖+ε) against the
+//! adaptive threshold τ_t = τ0·β^((T−t)/T).
+
+use crate::cache::DraftKind;
+
+/// Error metric for verification (paper Appendix E ablation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorMetric {
+    L2,
+    L1,
+    Linf,
+    Cosine,
+}
+
+impl ErrorMetric {
+    pub fn parse(s: &str) -> Option<ErrorMetric> {
+        match s {
+            "l2" => Some(ErrorMetric::L2),
+            "l1" => Some(ErrorMetric::L1),
+            "linf" => Some(ErrorMetric::Linf),
+            "cos" | "cosine" => Some(ErrorMetric::Cosine),
+            _ => None,
+        }
+    }
+
+    /// Relative error between prediction and ground truth, single pass.
+    pub fn eval(&self, pred: &[f32], actual: &[f32]) -> f64 {
+        const EPS: f64 = 1e-8;
+        debug_assert_eq!(pred.len(), actual.len());
+        match self {
+            ErrorMetric::L2 => {
+                let mut dd = 0.0f64;
+                let mut aa = 0.0f64;
+                for (p, a) in pred.iter().zip(actual) {
+                    let d = (*p - *a) as f64;
+                    dd += d * d;
+                    aa += (*a as f64) * (*a as f64);
+                }
+                dd.sqrt() / (aa.sqrt() + EPS)
+            }
+            ErrorMetric::L1 => {
+                let mut dd = 0.0f64;
+                let mut aa = 0.0f64;
+                for (p, a) in pred.iter().zip(actual) {
+                    dd += ((*p - *a) as f64).abs();
+                    aa += (*a as f64).abs();
+                }
+                dd / (aa + EPS)
+            }
+            ErrorMetric::Linf => {
+                let mut dd = 0.0f64;
+                let mut aa = 0.0f64;
+                for (p, a) in pred.iter().zip(actual) {
+                    dd = dd.max(((*p - *a) as f64).abs());
+                    aa = aa.max((*a as f64).abs());
+                }
+                dd / (aa + EPS)
+            }
+            ErrorMetric::Cosine => {
+                let mut pa = 0.0f64;
+                let mut pp = 0.0f64;
+                let mut aa = 0.0f64;
+                for (p, a) in pred.iter().zip(actual) {
+                    pa += (*p as f64) * (*a as f64);
+                    pp += (*p as f64) * (*p as f64);
+                    aa += (*a as f64) * (*a as f64);
+                }
+                1.0 - pa / (pp.sqrt() * aa.sqrt() + EPS)
+            }
+        }
+    }
+}
+
+/// SpeCa hyper-parameters (paper §3.4, Tables 4-8).
+#[derive(Debug, Clone)]
+pub struct SpeCaConfig {
+    /// forced refresh period N (max speculative run length)
+    pub interval: usize,
+    /// Taylor order m
+    pub order: usize,
+    /// base threshold τ0
+    pub tau0: f64,
+    /// decay β ∈ (0, 1]
+    pub beta: f64,
+    /// verification layer v (block index; default depth−1 = last)
+    pub verify_layer: usize,
+    pub draft: DraftKind,
+    pub metric: ErrorMetric,
+}
+
+impl SpeCaConfig {
+    pub fn default_for_depth(depth: usize) -> SpeCaConfig {
+        SpeCaConfig {
+            interval: 5,
+            order: 2,
+            tau0: 0.3,
+            beta: 0.05,
+            verify_layer: depth - 1,
+            draft: DraftKind::Taylor,
+            metric: ErrorMetric::L2,
+        }
+    }
+
+    /// Adaptive threshold at serve step i of T (paper: τ_t = τ0·β^((T−t)/T);
+    /// serve step i runs t = T−i, so the exponent is i/T — loose early,
+    /// strict near the data end).
+    pub fn tau_at(&self, step: usize, total: usize) -> f64 {
+        self.tau0 * self.beta.powf(step as f64 / total as f64)
+    }
+}
+
+/// Per-request acceleration policy.
+#[derive(Debug, Clone)]
+pub enum Policy {
+    /// every step fully computed (the quality reference)
+    Full,
+    /// DDIM/RF with only `keep` of the schedule's steps (uniform subsample)
+    StepReduction { keep: usize },
+    /// FORA: full pass every N steps, reuse ε̂ in between
+    Fora { interval: usize },
+    /// TeaCache: reuse ε̂ until the accumulated timestep-embedding drift
+    /// exceeds `threshold`, then refresh
+    TeaCache { threshold: f64 },
+    /// ToCa-sim: full pass every N steps; between them recompute but keep a
+    /// `reuse_frac` token subset cached (cost ≈ (1−R)·C booked)
+    TocaSim { interval: usize, reuse_frac: f64 },
+    /// DuCa-sim: like ToCa but alternating full-reuse and partial steps
+    DucaSim { interval: usize, reuse_frac: f64 },
+    /// TaylorSeer: draft predictions on a fixed interval, never verified
+    TaylorSeer { interval: usize, order: usize },
+    /// SpeCa: forecast-then-verify (the paper's contribution)
+    SpeCa(SpeCaConfig),
+}
+
+/// What the engine should do for a request at the current step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Plan {
+    Full,
+    Spec,
+    Skip,
+    Blend,
+    /// step-reduction: this schedule step is skipped entirely (the sampler
+    /// jumps across it; no model call, no ε̂ reuse)
+    Elide,
+}
+
+impl Policy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Policy::Full => "full",
+            Policy::StepReduction { .. } => "step-reduction",
+            Policy::Fora { .. } => "fora",
+            Policy::TeaCache { .. } => "teacache",
+            Policy::TocaSim { .. } => "toca-sim",
+            Policy::DucaSim { .. } => "duca-sim",
+            Policy::TaylorSeer { .. } => "taylorseer",
+            Policy::SpeCa(_) => "speca",
+        }
+    }
+
+    /// Does this policy use the TaylorSeer feature cache?
+    pub fn uses_cache(&self) -> bool {
+        matches!(self, Policy::TaylorSeer { .. } | Policy::SpeCa(_))
+    }
+
+    pub fn order(&self) -> usize {
+        match self {
+            Policy::TaylorSeer { order, .. } => *order,
+            Policy::SpeCa(c) => c.order,
+            _ => 0,
+        }
+    }
+
+    pub fn interval(&self) -> usize {
+        match self {
+            Policy::Fora { interval }
+            | Policy::TocaSim { interval, .. }
+            | Policy::DucaSim { interval, .. }
+            | Policy::TaylorSeer { interval, .. } => *interval,
+            Policy::SpeCa(c) => c.interval,
+            _ => 1,
+        }
+    }
+
+    /// Plan the action for serve step `step`, given steps-since-refresh
+    /// (`since_full`, 0 ⇒ the refresh happened this step boundary) and the
+    /// TeaCache drift accumulator.
+    pub fn plan(
+        &self,
+        step: usize,
+        total_steps: usize,
+        since_full: usize,
+        tea_accum: f64,
+    ) -> Plan {
+        match self {
+            Policy::Full => Plan::Full,
+            Policy::StepReduction { keep } => {
+                // uniformly keep `keep` of `total_steps` (always step 0)
+                let keep = (*keep).clamp(1, total_steps);
+                let prev = step.saturating_sub(1) * keep / total_steps;
+                let cur = step * keep / total_steps;
+                if step == 0 || cur != prev {
+                    Plan::Full
+                } else {
+                    Plan::Elide
+                }
+            }
+            Policy::Fora { interval } => {
+                if step % (*interval).max(1) == 0 {
+                    Plan::Full
+                } else {
+                    Plan::Skip
+                }
+            }
+            Policy::TeaCache { threshold } => {
+                if step == 0 || tea_accum > *threshold {
+                    Plan::Full
+                } else {
+                    Plan::Skip
+                }
+            }
+            Policy::TocaSim { interval, .. } => {
+                if step % (*interval).max(1) == 0 {
+                    Plan::Full
+                } else {
+                    Plan::Blend
+                }
+            }
+            Policy::DucaSim { interval, .. } => {
+                let i = (*interval).max(1);
+                if step % i == 0 {
+                    Plan::Full
+                } else if (step % i) % 2 == 1 {
+                    Plan::Blend
+                } else {
+                    Plan::Skip
+                }
+            }
+            Policy::TaylorSeer { interval, .. } | Policy::SpeCa(SpeCaConfig { interval, .. }) => {
+                // Refresh every `interval` steps. TaylorSeer seeds its
+                // differences at successive refresh points (spacing N); the
+                // usable prediction order ramps up as refreshes accumulate,
+                // so no special warmup phase is needed.
+                if step == 0 || since_full >= (*interval).max(1) {
+                    Plan::Full
+                } else {
+                    Plan::Spec
+                }
+            }
+        }
+    }
+
+    pub fn reuse_frac(&self) -> f64 {
+        match self {
+            Policy::TocaSim { reuse_frac, .. } | Policy::DucaSim { reuse_frac, .. } => *reuse_frac,
+            _ => 0.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn metric_l2_matches_definition() {
+        let pred = vec![1.1f32, 2.0, 2.9];
+        let actual = vec![1.0f32, 2.0, 3.0];
+        let e = ErrorMetric::L2.eval(&pred, &actual);
+        let num = (0.01f64 + 0.0 + 0.01).sqrt();
+        let den = (1.0f64 + 4.0 + 9.0).sqrt();
+        // inputs are f32 so the differences carry f32 rounding
+        assert!((e - num / den).abs() < 1e-7, "{e}");
+    }
+
+    #[test]
+    fn metric_zero_on_equal() {
+        let a = vec![0.5f32, -1.0, 2.0];
+        for m in [ErrorMetric::L2, ErrorMetric::L1, ErrorMetric::Linf, ErrorMetric::Cosine] {
+            assert!(m.eval(&a, &a) < 1e-7, "{m:?}");
+        }
+    }
+
+    #[test]
+    fn cosine_orthogonal_is_one() {
+        let e = ErrorMetric::Cosine.eval(&[1.0, 0.0], &[0.0, 1.0]);
+        assert!((e - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tau_decays_monotonically() {
+        let c = SpeCaConfig { beta: 0.05, tau0: 0.3, ..SpeCaConfig::default_for_depth(8) };
+        let total = 50;
+        let mut last = f64::INFINITY;
+        for i in 0..total {
+            let t = c.tau_at(i, total);
+            assert!(t <= last);
+            last = t;
+        }
+        assert!((c.tau_at(0, total) - 0.3).abs() < 1e-12);
+        // endpoint approaches τ0·β
+        assert!(c.tau_at(total, total) - 0.3 * 0.05 < 1e-12);
+    }
+
+    #[test]
+    fn fora_period() {
+        let p = Policy::Fora { interval: 5 };
+        let plans: Vec<Plan> = (0..11).map(|i| p.plan(i, 50, 0, 0.0)).collect();
+        assert_eq!(plans[0], Plan::Full);
+        assert_eq!(plans[5], Plan::Full);
+        assert_eq!(plans[10], Plan::Full);
+        assert!(plans[1..5].iter().all(|p| *p == Plan::Skip));
+    }
+
+    #[test]
+    fn step_reduction_keeps_exactly_k() {
+        for keep in [5, 10, 25, 50] {
+            let p = Policy::StepReduction { keep };
+            let n = (0..50).filter(|i| p.plan(*i, 50, 0, 0.0) == Plan::Full).count();
+            assert_eq!(n, keep, "keep={keep}");
+        }
+    }
+
+    #[test]
+    fn speca_respects_interval_and_refresh() {
+        let p = Policy::SpeCa(SpeCaConfig::default_for_depth(8));
+        assert_eq!(p.plan(0, 50, 0, 0.0), Plan::Full);
+        assert_eq!(p.plan(3, 50, 2, 0.0), Plan::Spec);
+        assert_eq!(p.plan(7, 50, 5, 0.0), Plan::Full); // forced refresh at N=5
+    }
+
+    #[test]
+    fn teacache_triggers_on_accum() {
+        let p = Policy::TeaCache { threshold: 0.5 };
+        assert_eq!(p.plan(0, 50, 0, 0.0), Plan::Full);
+        assert_eq!(p.plan(3, 50, 3, 0.3), Plan::Skip);
+        assert_eq!(p.plan(4, 50, 4, 0.6), Plan::Full);
+    }
+
+    #[test]
+    fn duca_alternates() {
+        let p = Policy::DucaSim { interval: 4, reuse_frac: 0.9 };
+        assert_eq!(p.plan(0, 50, 0, 0.0), Plan::Full);
+        assert_eq!(p.plan(1, 50, 1, 0.0), Plan::Blend);
+        assert_eq!(p.plan(2, 50, 2, 0.0), Plan::Skip);
+        assert_eq!(p.plan(3, 50, 3, 0.0), Plan::Blend);
+        assert_eq!(p.plan(4, 50, 0, 0.0), Plan::Full);
+    }
+}

@@ -1,0 +1,184 @@
+//! Per-request serving state: the latent being denoised, the TaylorSeer
+//! feature cache, policy-specific accumulators and the statistics that feed
+//! the sample-adaptive analysis (paper §4.3 / Table 2).
+
+use std::time::Instant;
+
+use crate::cache::FeatureCache;
+use crate::coordinator::policy::Policy;
+use crate::metrics::flops::FlopsCounter;
+
+/// A generation request as submitted to the router.
+#[derive(Debug, Clone)]
+pub struct RequestSpec {
+    pub id: u64,
+    /// class label (dit-sim) or prompt id (flux-sim / video-sim)
+    pub cond: i32,
+    pub seed: u64,
+    pub policy: Policy,
+    /// record the last-boundary feature every step (Fig. 9 trajectories)
+    pub record_traj: bool,
+}
+
+/// Outcome statistics for one request.
+#[derive(Debug, Clone, Default)]
+pub struct RequestStats {
+    pub full_steps: usize,
+    pub spec_steps: usize,
+    pub skip_steps: usize,
+    pub blend_steps: usize,
+    pub elided_steps: usize,
+    pub rejects: usize,
+    pub latency_ms: f64,
+    pub flops: FlopsCounter,
+    /// verification errors observed on speculative steps (step, e, tau)
+    pub verify_trace: Vec<(usize, f64, f64)>,
+}
+
+impl RequestStats {
+    /// Per-sample FLOPs acceleration vs full computation of all steps.
+    pub fn speedup(&self, full_step_flops: u64, total_steps: usize) -> f64 {
+        if self.flops.total() == 0 {
+            return total_steps as f64
+                / (self.full_steps + self.spec_steps).max(1) as f64;
+        }
+        (total_steps as u64 * full_step_flops) as f64 / self.flops.total() as f64
+    }
+}
+
+/// Live state of one in-flight request.
+pub struct ReqState {
+    pub spec: RequestSpec,
+    /// current latent x_t (flat)
+    pub x: Vec<f32>,
+    /// next serve step to execute (0 = noisiest)
+    pub step: usize,
+    /// steps since the last full computation (0 right after one)
+    pub since_full: usize,
+    /// TaylorSeer factor cache over the configured tap boundaries
+    pub cache: FeatureCache,
+    /// boundary indices the cache taps (sorted, deduped)
+    pub tap_boundaries: Vec<usize>,
+    /// last model output ε̂ (reused by Skip policies)
+    pub last_eps: Vec<f32>,
+    /// cached last-boundary feature for Blend policies
+    pub blend_feat: Vec<f32>,
+    /// TeaCache drift accumulator + embedding at the last refresh
+    pub tea_accum: f64,
+    pub tea_last_temb: Vec<f32>,
+    pub stats: RequestStats,
+    pub traj: Vec<Vec<f32>>,
+    pub started: Instant,
+    /// scratch: draft predictions for the current speculative step
+    pub pred_vin: Vec<f32>,
+    pub pred_vout: Vec<f32>,
+    pub pred_last: Vec<f32>,
+}
+
+impl ReqState {
+    /// Tap layout for a verify layer v over `depth` blocks:
+    /// boundaries [v, v+1, depth] (deduped — v+1 == depth when v is last).
+    pub fn tap_layout(verify_layer: usize, depth: usize) -> Vec<usize> {
+        let mut taps = vec![verify_layer, verify_layer + 1, depth];
+        taps.sort_unstable();
+        taps.dedup();
+        taps
+    }
+
+    pub fn new(
+        spec: RequestSpec,
+        x: Vec<f32>,
+        depth: usize,
+        feat_len: usize,
+    ) -> ReqState {
+        let verify_layer = match &spec.policy {
+            Policy::SpeCa(c) => c.verify_layer,
+            _ => depth - 1,
+        };
+        let taps = Self::tap_layout(verify_layer.min(depth - 1), depth);
+        let order = spec.policy.order();
+        let interval = spec.policy.interval();
+        let cache = FeatureCache::new(taps.len(), order, feat_len, interval.max(1));
+        ReqState {
+            spec,
+            x,
+            step: 0,
+            since_full: 0,
+            cache,
+            tap_boundaries: taps,
+            last_eps: Vec::new(),
+            blend_feat: Vec::new(),
+            tea_accum: 0.0,
+            tea_last_temb: Vec::new(),
+            stats: RequestStats::default(),
+            traj: Vec::new(),
+            started: Instant::now(),
+            pred_vin: vec![0.0; feat_len],
+            pred_vout: vec![0.0; feat_len],
+            pred_last: vec![0.0; feat_len],
+        }
+    }
+
+    /// Cache tap index of a boundary.
+    pub fn tap_of(&self, boundary: usize) -> usize {
+        self.tap_boundaries
+            .iter()
+            .position(|b| *b == boundary)
+            .unwrap_or_else(|| panic!("boundary {boundary} not tapped ({:?})", self.tap_boundaries))
+    }
+}
+
+/// Completed generation.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub id: u64,
+    pub cond: i32,
+    pub policy_name: String,
+    /// final denoised latent x0
+    pub latent: Vec<f32>,
+    pub stats: RequestStats,
+    pub traj: Vec<Vec<f32>>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::policy::SpeCaConfig;
+
+    fn spec(policy: Policy) -> RequestSpec {
+        RequestSpec { id: 1, cond: 0, seed: 42, policy, record_traj: false }
+    }
+
+    #[test]
+    fn tap_layout_last_layer() {
+        // v = depth-1: boundaries v, v+1==depth — two taps
+        assert_eq!(ReqState::tap_layout(7, 8), vec![7, 8]);
+        // v interior: three taps
+        assert_eq!(ReqState::tap_layout(3, 8), vec![3, 4, 8]);
+        assert_eq!(ReqState::tap_layout(0, 8), vec![0, 1, 8]);
+    }
+
+    #[test]
+    fn state_wiring() {
+        let mut cfg = SpeCaConfig::default_for_depth(8);
+        cfg.verify_layer = 3;
+        let st = ReqState::new(spec(Policy::SpeCa(cfg)), vec![0.0; 16], 8, 32);
+        assert_eq!(st.tap_boundaries, vec![3, 4, 8]);
+        assert_eq!(st.tap_of(4), 1);
+        assert_eq!(st.cache.taps.len(), 3);
+        assert_eq!(st.cache.taps[0].feat_len(), 32);
+    }
+
+    #[test]
+    fn non_cache_policy_defaults_to_last_layer() {
+        let st = ReqState::new(spec(Policy::Full), vec![0.0; 16], 8, 32);
+        assert_eq!(st.tap_boundaries, vec![7, 8]);
+    }
+
+    #[test]
+    fn stats_speedup_fallback() {
+        let mut s = RequestStats::default();
+        s.full_steps = 10;
+        assert!((s.speedup(100, 50) - 5.0).abs() < 1e-12);
+    }
+}

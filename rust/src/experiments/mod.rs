@@ -1,0 +1,5 @@
+//! Experiment runners: one per paper table/figure (see DESIGN.md §6).
+//! Shared by the CLI (`speca bench <name>`), `rust/benches/*` and examples.
+
+pub mod runner;
+pub mod tables;

@@ -1,0 +1,250 @@
+//! Shared experiment harness: run a policy over a request batch, compute
+//! the quality metrics of DESIGN.md §2 (FID*/sFID*/IS*, ImageReward*,
+//! GenEval*, VBench*) against golden-seed references, dump artifacts.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::config::ModelConfig;
+use crate::coordinator::policy::Policy;
+use crate::coordinator::state::Completion;
+use crate::coordinator::{Engine, EngineConfig};
+use crate::metrics::flops::FlopsCounter;
+use crate::metrics::frechet::fid_vs_reference;
+use crate::metrics::stats::{
+    class_agreement, fidelity_score, inception_score, vbench_star, Histogram,
+};
+use crate::runtime::{ClassifierRuntime, ModelRuntime};
+use crate::workload::batch_requests;
+
+/// Outcome of one (policy, n-sample) run.
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    pub label: String,
+    pub completions_by_id: BTreeMap<u64, Completion>,
+    pub flops: FlopsCounter,
+    pub wall_s: f64,
+}
+
+/// Drive `n` closed-loop requests with one policy through a fresh engine.
+pub fn run_policy(
+    model: &ModelRuntime<'_>,
+    policy: &Policy,
+    label: &str,
+    n: usize,
+    seed: u64,
+    inflight: usize,
+    record_traj: bool,
+) -> Result<RunResult> {
+    let mut engine = Engine::new(
+        model,
+        EngineConfig { max_inflight: inflight, ..EngineConfig::default() },
+    );
+    for r in batch_requests(n, model.entry.config.num_classes, policy, seed, record_traj) {
+        engine.submit(r);
+    }
+    let t0 = std::time::Instant::now();
+    let completions = engine.run_to_completion()?;
+    let wall_s = t0.elapsed().as_secs_f64();
+    Ok(RunResult {
+        label: label.to_string(),
+        completions_by_id: completions.into_iter().map(|c| (c.id, c)).collect(),
+        flops: engine.flops,
+        wall_s,
+    })
+}
+
+/// Quality metrics of a run, all relative to the paper's estimators.
+#[derive(Debug, Clone, Default)]
+pub struct Quality {
+    /// Fréchet distance of classifier features vs the real-data reference
+    pub fid: f64,
+    /// Fréchet distance of pooled pixels vs reference (sFID analog)
+    pub sfid: f64,
+    /// Inception-style score from classifier posteriors
+    pub is: f64,
+    /// mean reference-fidelity vs the full-compute output (ImageReward*/CLIP*)
+    pub fidelity: f64,
+    /// classifier agreement with the conditioning class (GenEval*)
+    pub agreement: f64,
+    /// VBench* composite (video models only; 0 otherwise)
+    pub vbench: f64,
+}
+
+/// Classify a batch of frames through the metrics classifier, greedily
+/// using the largest compiled buckets.
+pub fn classify_frames(
+    cls: &ClassifierRuntime<'_>,
+    frames: &[f32],
+    n: usize,
+) -> Result<(Vec<f32>, Vec<f32>)> {
+    let latent = cls.entry.latent_dim;
+    let k = cls.entry.num_classes;
+    let fd = cls.entry.feat_dim;
+    let buckets = cls.buckets();
+    let mut logits = vec![0f32; n * k];
+    let mut feats = vec![0f32; n * fd];
+    let mut done = 0usize;
+    while done < n {
+        let remaining = n - done;
+        let b = *buckets.iter().rev().find(|b| **b <= remaining).unwrap_or(&buckets[0]);
+        // pad by replicating the last frame when remaining < smallest bucket
+        let mut chunk = vec![0f32; b * latent];
+        for slot in 0..b {
+            let src = (done + slot).min(n - 1);
+            chunk[slot * latent..(slot + 1) * latent]
+                .copy_from_slice(&frames[src * latent..(src + 1) * latent]);
+        }
+        let (lg, ft) = cls.classify(b, &chunk)?;
+        let take = b.min(remaining);
+        logits[done * k..(done + take) * k].copy_from_slice(&lg.data[..take * k]);
+        feats[done * fd..(done + take) * fd].copy_from_slice(&ft.data[..take * fd]);
+        done += take;
+    }
+    Ok((logits, feats))
+}
+
+/// 2× mean-pool a [img, img] frame to 8×8 (sFID* feature space; mirrors
+/// train.py::reference_stats).
+pub fn pool_to_8x8(frame: &[f32], img: usize) -> Vec<f32> {
+    let f = img / 8;
+    let mut out = vec![0f32; 64];
+    for i in 0..8 {
+        for j in 0..8 {
+            let mut acc = 0.0f32;
+            for di in 0..f {
+                for dj in 0..f {
+                    acc += frame[(i * f + di) * img + (j * f + dj)];
+                }
+            }
+            out[i * 8 + j] = acc / (f * f) as f32;
+        }
+    }
+    out
+}
+
+/// Compute every quality metric for a run, using the matching-seed full
+/// compute run as the reference (`reference` may be the run itself).
+pub fn evaluate_quality(
+    run: &RunResult,
+    reference: &RunResult,
+    cfg: &ModelConfig,
+    cls: &ClassifierRuntime<'_>,
+) -> Result<Quality> {
+    let n = run.completions_by_id.len();
+    let frame_len = cls.entry.latent_dim;
+    let frames_per = cfg.frames;
+    assert_eq!(cfg.latent_dim, frame_len * frames_per);
+
+    // middle frame of every completion → classifier inputs
+    let mid = frames_per / 2;
+    let mut frames = Vec::with_capacity(n * frame_len);
+    let mut labels = Vec::with_capacity(n);
+    let mut fid_sum = 0.0;
+    let mut vb_sum = 0.0;
+    let mut pooled = Vec::with_capacity(n * 64);
+    for (id, c) in &run.completions_by_id {
+        frames.extend_from_slice(&c.latent[mid * frame_len..(mid + 1) * frame_len]);
+        labels.push((c.cond as usize) % cls.entry.num_classes);
+        pooled.extend(pool_to_8x8(
+            &c.latent[mid * frame_len..(mid + 1) * frame_len],
+            cfg.image_size,
+        ));
+        let r = reference
+            .completions_by_id
+            .get(id)
+            .context("reference run missing a completion id")?;
+        fid_sum += fidelity_score(&c.latent, &r.latent);
+        if frames_per > 1 {
+            vb_sum += vbench_star(&c.latent, &r.latent, frames_per);
+        }
+    }
+    let (logits, feats) = classify_frames(cls, &frames, n)?;
+    let fid = fid_vs_reference(&feats, n, cls.entry.feat_dim, &cls.fid_mu.data, &cls.fid_cov.data);
+    let sfid = fid_vs_reference(&pooled, n, 64, &cls.sfid_mu.data, &cls.sfid_cov.data);
+    let is = inception_score(&logits, n, cls.entry.num_classes);
+    let agreement = class_agreement(&logits, &labels, cls.entry.num_classes);
+    Ok(Quality {
+        fid,
+        sfid,
+        is,
+        fidelity: fid_sum / n as f64,
+        agreement,
+        vbench: if frames_per > 1 { vb_sum / n as f64 } else { 0.0 },
+    })
+}
+
+/// Aggregate per-request latency distribution of a run.
+pub fn latency_hist(run: &RunResult) -> Histogram {
+    let mut h = Histogram::new();
+    for c in run.completions_by_id.values() {
+        h.record(c.stats.latency_ms);
+    }
+    h
+}
+
+/// Save completions as PGM grayscale images (Figs. 4/5 qualitative dumps).
+pub fn dump_pgm(completions: &[Completion], cfg: &ModelConfig, dir: &str) -> Result<()> {
+    fs::create_dir_all(dir)?;
+    let img = cfg.image_size;
+    let frame_len = img * img * cfg.channels;
+    for c in completions {
+        for f in 0..cfg.frames {
+            let frame = &c.latent[f * frame_len..(f + 1) * frame_len];
+            let mut pgm = format!("P2\n{img} {img}\n255\n");
+            for row in 0..img {
+                let line: Vec<String> = (0..img)
+                    .map(|col| {
+                        let v = frame[row * img + col].clamp(-1.0, 1.0);
+                        format!("{}", ((v + 1.0) * 127.5) as u8)
+                    })
+                    .collect();
+                pgm.push_str(&line.join(" "));
+                pgm.push('\n');
+            }
+            let name = if cfg.frames > 1 {
+                format!("{dir}/req{:03}_{}_f{f}.pgm", c.id, c.policy_name)
+            } else {
+                format!("{dir}/req{:03}_{}.pgm", c.id, c.policy_name)
+            };
+            fs::write(&name, pgm)?;
+        }
+    }
+    Ok(())
+}
+
+/// Write a CSV file under results/ (creating the directory).
+pub fn write_csv(path: &Path, header: &str, rows: &[String]) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        fs::create_dir_all(parent)?;
+    }
+    let mut out = String::from(header);
+    out.push('\n');
+    for r in rows {
+        out.push_str(r);
+        out.push('\n');
+    }
+    fs::write(path, out)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pooling_means() {
+        // 16×16 constant image pools to constant 8×8
+        let frame = vec![0.5f32; 256];
+        let p = pool_to_8x8(&frame, 16);
+        assert_eq!(p.len(), 64);
+        assert!(p.iter().all(|v| (*v - 0.5).abs() < 1e-6));
+        // gradient image: pooled value = mean of its 2×2 block
+        let g: Vec<f32> = (0..256).map(|i| i as f32).collect();
+        let p = pool_to_8x8(&g, 16);
+        assert!((p[0] - (0.0 + 1.0 + 16.0 + 17.0) / 4.0).abs() < 1e-5);
+    }
+}

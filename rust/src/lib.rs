@@ -1,0 +1,42 @@
+//! SpeCa: Accelerating Diffusion Transformers with Speculative Feature
+//! Caching — Rust + JAX + Pallas reproduction (ACM MM '25,
+//! DOI 10.1145/3746027.3755331).
+//!
+//! Three-layer architecture (see DESIGN.md):
+//! * L3 (this crate): serving coordinator — router, dynamic batcher, the
+//!   SpeCa forecast-then-verify engine, baselines, metrics, TCP server;
+//! * L2: JAX DiT models, AOT-lowered to HLO text (`python/compile/`);
+//! * L1: Pallas kernels for attention / Taylor drafts / verification.
+//!
+//! Python never runs on the request path: `make artifacts` produces
+//! `artifacts/` once, and everything here executes via the PJRT C API.
+
+pub mod cache;
+pub mod config;
+pub mod experiments;
+pub mod coordinator;
+pub mod metrics;
+pub mod runtime;
+pub mod sampler;
+pub mod server;
+pub mod tensor;
+pub mod util;
+pub mod weights;
+pub mod workload;
+
+use std::path::PathBuf;
+
+/// Default artifacts directory: $SPECA_ARTIFACTS or ./artifacts.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("SPECA_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| {
+        // allow running from repo root or a subdirectory
+        let cands = ["artifacts", "../artifacts"];
+        for c in cands {
+            let p = PathBuf::from(c);
+            if p.join("manifest.json").exists() {
+                return p;
+            }
+        }
+        PathBuf::from("artifacts")
+    })
+}

@@ -1,0 +1,201 @@
+//! `speca` CLI — leader entrypoint for the SpeCa serving stack.
+//!
+//! Subcommands:
+//!   info                          — show manifest/model inventory
+//!   generate [--model M] [--policy P] [--n N] ...   — closed-loop batch
+//!   serve    [--model M] [--addr A]                 — TCP JSON-lines server
+//!   load     [--addr A] [--n N] [--conns C]         — load generator
+//!   bench    <table1..8|fig2|fig6|fig8|fig9|speedup-law> — experiment runners
+//!            (micro perf data: `cargo bench --bench micro_runtime`)
+
+use anyhow::{bail, Context, Result};
+
+use speca::config::Manifest;
+use speca::coordinator::{Engine, EngineConfig};
+use speca::coordinator::batcher::BatchStrategy;
+use speca::runtime::{ModelRuntime, Runtime};
+use speca::server::{self, client, ServerConfig};
+use speca::util::cli::Args;
+use speca::workload;
+
+
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "info" => info(&args),
+        "generate" => generate(&args),
+        "serve" => serve(&args),
+        "load" => load(&args),
+        "bench" => speca::experiments::tables::run(&args),
+        _ => {
+            print!("{}", HELP);
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = "\
+speca — speculative feature caching for diffusion transformers (MM'25 repro)
+
+USAGE: speca <command> [--flags]
+
+COMMANDS:
+  info                       manifest inventory (models, artifacts, FLOPs)
+  generate                   run a closed-loop batch through the engine
+      --model dit-sim --policy speca:N=5,O=2,tau0=0.3,beta=0.05 --n 8
+      --inflight 8 --strategy binary --seed 0 --dump-pgm out/
+  serve                      start the TCP JSON-lines server
+      --model dit-sim --addr 127.0.0.1:7433 --inflight 8
+  load                       closed-loop load generator against a server
+      --addr 127.0.0.1:7433 --n 32 --conns 4 --policy speca
+  bench <name>               regenerate a paper table/figure (see DESIGN.md)
+      table1..table8 | fig2|fig6|fig8|fig9 | speedup-law  [--quick] [--n N]
+      (micro perf: cargo bench --bench micro_runtime)
+
+Artifacts default to ./artifacts (override with SPECA_ARTIFACTS).
+";
+
+fn info(_args: &Args) -> Result<()> {
+    let manifest = Manifest::load(&speca::artifacts_dir())?;
+    println!("artifacts: {}", manifest.root.display());
+    for (name, m) in &manifest.models {
+        let c = &m.config;
+        println!(
+            "model {name}: dim={} depth={} heads={} tokens={} latent={} classes={} \
+             schedule={:?} steps={} buckets={:?}",
+            c.dim, c.depth, c.heads, c.tokens, c.latent_dim, c.num_classes,
+            c.schedule_kind, c.serve_steps, c.buckets
+        );
+        println!(
+            "  flops/full-step(b1)={:.3} MF  block={:.3} MF (gamma≈{:.4})",
+            m.flops.full_step[&1] as f64 / 1e6,
+            m.flops.block[&1] as f64 / 1e6,
+            m.flops.block[&1] as f64 / m.flops.full_step[&1] as f64
+        );
+        for (entry, buckets) in &m.artifacts {
+            println!("  artifact {entry}: buckets {:?}", buckets.keys().collect::<Vec<_>>());
+        }
+    }
+    println!(
+        "classifier: feat_dim={} classes={} held-out acc={:.3}",
+        manifest.classifier.feat_dim, manifest.classifier.num_classes, manifest.classifier.acc
+    );
+    Ok(())
+}
+
+fn engine_config(args: &Args) -> Result<EngineConfig> {
+    let strategy = args.str("strategy", "binary");
+    Ok(EngineConfig {
+        max_inflight: args.usize("inflight", 8),
+        strategy: BatchStrategy::parse(&strategy)
+            .with_context(|| format!("unknown strategy '{strategy}'"))?,
+        use_pallas: args.bool("pallas"),
+    })
+}
+
+fn generate(args: &Args) -> Result<()> {
+    let manifest = Manifest::load(&speca::artifacts_dir())?;
+    let model_name = args.str("model", "dit-sim");
+    let entry = manifest.model(&model_name)?;
+    let rt = Runtime::cpu()?;
+    let model = ModelRuntime::load(&rt, entry)?;
+    let mut engine = Engine::new(&model, engine_config(args)?);
+
+    let policy = workload::parse_policy(
+        &args.str("policy", "speca:N=5,O=2,tau0=0.3,beta=0.05"),
+        entry.config.depth,
+    )?;
+    let n = args.usize("n", 8);
+    let reqs = workload::batch_requests(
+        n,
+        entry.config.num_classes,
+        &policy,
+        args.u64("seed", 0),
+        false,
+    );
+    let t0 = std::time::Instant::now();
+    for r in reqs {
+        engine.submit(r);
+    }
+    let completions = engine.run_to_completion()?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    let full_flops = entry.flops.full_step[&1];
+    let steps = entry.config.serve_steps;
+    println!(
+        "{:<6} {:<10} {:>6} {:>6} {:>6} {:>7} {:>9} {:>9}",
+        "id", "policy", "full", "spec", "rej", "lat ms", "GFLOPs", "speedup"
+    );
+    for c in &completions {
+        let s = &c.stats;
+        println!(
+            "{:<6} {:<10} {:>6} {:>6} {:>6} {:>7.1} {:>9.4} {:>8.2}x",
+            c.id,
+            c.policy_name,
+            s.full_steps,
+            s.spec_steps + s.skip_steps + s.blend_steps,
+            s.rejects,
+            s.latency_ms,
+            s.flops.total() as f64 / 1e9,
+            s.speedup(full_flops, steps)
+        );
+    }
+    let f = &engine.flops;
+    println!(
+        "batch: n={n} wall={wall:.2}s throughput={:.2} req/s alpha={:.3} gamma={:.4} \
+         agg-speedup={:.2}x (law predicts {:.2}x)",
+        n as f64 / wall,
+        f.acceptance_rate(),
+        f.gamma(),
+        f.speedup(full_flops),
+        f.predicted_speedup()
+    );
+
+    if let Some(dir) = args.opt("dump-pgm") {
+        speca::experiments::runner::dump_pgm(&completions, &entry.config, dir)?;
+        println!("wrote sample grids to {dir}/");
+    }
+    Ok(())
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let manifest = Manifest::load(&speca::artifacts_dir())?;
+    let model_name = args.str("model", "dit-sim");
+    let entry = manifest.model(&model_name)?;
+    let rt = Runtime::cpu()?;
+    let model = ModelRuntime::load(&rt, entry)?;
+    // compile the hot entry points before admitting traffic
+    model.precompile(&["full", "block", "head"], &entry.config.buckets)?;
+    let mut engine = Engine::new(&model, engine_config(args)?);
+    let cfg = ServerConfig { addr: args.str("addr", "127.0.0.1:7433"), max_queue: 1024 };
+    let done = server::serve(&mut engine, &cfg)?;
+    println!("served {done} requests");
+    Ok(())
+}
+
+fn load(args: &Args) -> Result<()> {
+    let cfg = client::LoadConfig {
+        addr: args.str("addr", "127.0.0.1:7433"),
+        connections: args.usize("conns", 4),
+        requests: args.usize("n", 32),
+        policy: args.str("policy", "speca:N=5,O=2"),
+        num_classes: args.usize("classes", 8),
+    };
+    let mut report = client::run_load(&cfg)?;
+    if report.completed == 0 {
+        bail!("no requests completed (is the server running at {}?)", cfg.addr);
+    }
+    let (mean, p50, p95, p99) = report.latency.summary();
+    println!(
+        "completed={} errors={} wall={:.2}s throughput={:.2} req/s",
+        report.completed, report.errors, report.wall_s, report.throughput_rps
+    );
+    println!(
+        "latency ms: mean={mean:.1} p50={p50:.1} p95={p95:.1} p99={p99:.1}  \
+         mean FLOPs-speedup={:.2}x",
+        report.mean_speedup
+    );
+    Ok(())
+}

@@ -1,0 +1,194 @@
+//! FLOPs accounting (paper §3.5 / Theorem G.3).
+//!
+//! Every engine action books its analytic cost (from the manifest's tables,
+//! derived in configs.py) into a counter; the bench harness reports
+//! FLOPs(T), the acceleration ratio vs full computation, the measured
+//! acceptance rate α and verification cost ratio γ, and checks them against
+//! the paper's speedup law  S = 1 / (1 − α·(1 − γ)).
+
+use crate::config::FlopsTable;
+
+#[derive(Debug, Default, Clone)]
+pub struct FlopsCounter {
+    /// complete forward passes
+    pub full: u64,
+    /// verification block runs
+    pub verify: u64,
+    /// head evaluations on speculative steps
+    pub head: u64,
+    /// draft-model predictions
+    pub predict: u64,
+    /// simulated partial-recompute costs (ToCa/DuCa-sim blend steps)
+    pub other: u64,
+    /// step counts by category (per *sample*, not per batch)
+    pub n_full_steps: u64,
+    pub n_spec_steps: u64,
+    pub n_rejects: u64,
+}
+
+impl FlopsCounter {
+    pub fn total(&self) -> u64 {
+        self.full + self.verify + self.head + self.predict + self.other
+    }
+
+    /// Paper's α: fraction of sampling steps served speculatively.
+    pub fn acceptance_rate(&self) -> f64 {
+        let t = self.n_full_steps + self.n_spec_steps;
+        if t == 0 {
+            0.0
+        } else {
+            self.n_spec_steps as f64 / t as f64
+        }
+    }
+
+    /// Paper's γ: verification cost as a fraction of a full pass, measured
+    /// from booked FLOPs.
+    pub fn gamma(&self) -> f64 {
+        if self.n_spec_steps == 0 || self.n_full_steps == 0 {
+            return 0.0;
+        }
+        let per_verify = self.verify as f64 / self.n_spec_steps as f64;
+        let per_full = self.full as f64 / self.n_full_steps as f64;
+        per_verify / per_full
+    }
+
+    /// Measured FLOPs speedup vs running every step fully.
+    pub fn speedup(&self, full_step_flops: u64) -> f64 {
+        let t = self.n_full_steps + self.n_spec_steps;
+        if self.total() == 0 {
+            return 1.0;
+        }
+        (t * full_step_flops) as f64 / self.total() as f64
+    }
+
+    /// Theoretical speedup from the paper's law (Eq. 8) at this counter's
+    /// measured α and γ.
+    pub fn predicted_speedup(&self) -> f64 {
+        let a = self.acceptance_rate();
+        let g = self.gamma();
+        1.0 / (1.0 - a + a * g)
+    }
+
+    pub fn merge(&mut self, other: &FlopsCounter) {
+        self.full += other.full;
+        self.verify += other.verify;
+        self.head += other.head;
+        self.predict += other.predict;
+        self.other += other.other;
+        self.n_full_steps += other.n_full_steps;
+        self.n_spec_steps += other.n_spec_steps;
+        self.n_rejects += other.n_rejects;
+    }
+}
+
+/// Books analytic per-action costs for one model; batch-aware (per-sample
+/// attribution: a bucket-B batch costs table[B]/B per sample).
+#[derive(Debug, Clone)]
+pub struct FlopsModel {
+    pub table: FlopsTable,
+}
+
+impl FlopsModel {
+    pub fn new(table: FlopsTable) -> FlopsModel {
+        FlopsModel { table }
+    }
+
+    fn per_sample(&self, map: &std::collections::BTreeMap<usize, u64>, bucket: usize) -> u64 {
+        let v = map
+            .get(&bucket)
+            .or_else(|| map.values().next_back())
+            .copied()
+            .unwrap_or(0);
+        v / bucket.max(1) as u64
+    }
+
+    pub fn book_full(&self, c: &mut FlopsCounter, bucket: usize, samples: usize) {
+        c.full += self.per_sample(&self.table.full_step, bucket) * samples as u64;
+        c.n_full_steps += samples as u64;
+    }
+
+    pub fn book_verify(&self, c: &mut FlopsCounter, bucket: usize, samples: usize) {
+        c.verify += self.per_sample(&self.table.block, bucket) * samples as u64;
+    }
+
+    pub fn book_head(&self, c: &mut FlopsCounter, bucket: usize, samples: usize) {
+        c.head += self.per_sample(&self.table.head, bucket) * samples as u64;
+    }
+
+    pub fn book_predict(&self, c: &mut FlopsCounter, order: usize, taps: usize, samples: usize) {
+        c.predict +=
+            self.table.predict_per_order * (order as u64 + 1) * taps as u64 * samples as u64;
+    }
+
+    pub fn book_spec_step(&self, c: &mut FlopsCounter, samples: usize) {
+        c.n_spec_steps += samples as u64;
+    }
+
+    pub fn full_step_flops(&self) -> u64 {
+        self.table.full_step.get(&1).copied().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+
+    fn table() -> FlopsTable {
+        let mut full = BTreeMap::new();
+        full.insert(1, 800u64);
+        full.insert(4, 3200u64);
+        let mut block = BTreeMap::new();
+        block.insert(1, 100u64);
+        block.insert(4, 400u64);
+        let mut head = BTreeMap::new();
+        head.insert(1, 10u64);
+        head.insert(4, 40u64);
+        FlopsTable { full_step: full, block, head, predict_per_order: 2 }
+    }
+
+    #[test]
+    fn speedup_law_identity() {
+        // 1 full step + 9 spec steps with gamma = 100/800 = 0.125:
+        // S = 10·800 / (800 + 9·(100+10+pred))
+        let fm = FlopsModel::new(table());
+        let mut c = FlopsCounter::default();
+        fm.book_full(&mut c, 1, 1);
+        for _ in 0..9 {
+            fm.book_spec_step(&mut c, 1);
+            fm.book_verify(&mut c, 1, 1);
+            fm.book_head(&mut c, 1, 1);
+            fm.book_predict(&mut c, 2, 3, 1);
+        }
+        assert_eq!(c.n_full_steps, 1);
+        assert_eq!(c.n_spec_steps, 9);
+        assert!((c.acceptance_rate() - 0.9).abs() < 1e-12);
+        assert!((c.gamma() - 0.125).abs() < 1e-12);
+        let s = c.speedup(800);
+        let expect = 8000.0 / (800.0 + 9.0 * (100.0 + 10.0 + 18.0)) as f64;
+        assert!((s - expect).abs() < 1e-9);
+        // paper's law ignores head+predict: predicted >= measured
+        assert!(c.predicted_speedup() >= s);
+    }
+
+    #[test]
+    fn batch_attribution_is_per_sample() {
+        let fm = FlopsModel::new(table());
+        let mut c1 = FlopsCounter::default();
+        fm.book_full(&mut c1, 1, 1);
+        let mut c4 = FlopsCounter::default();
+        fm.book_full(&mut c4, 4, 4);
+        assert_eq!(c4.full, 4 * c1.full);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let fm = FlopsModel::new(table());
+        let mut a = FlopsCounter::default();
+        let mut b = FlopsCounter::default();
+        fm.book_full(&mut a, 1, 1);
+        fm.book_full(&mut b, 1, 2);
+        a.merge(&b);
+        assert_eq!(a.n_full_steps, 3);
+    }
+}

@@ -1,0 +1,121 @@
+//! Fréchet distance between Gaussian fits of feature sets — the same
+//! estimator as FID (Heusel et al.), applied to the build-time classifier's
+//! features (FID*) and to downsampled raw pixels (sFID* analog).
+//!
+//!   d² = ‖μ₁−μ₂‖² + Tr(Σ₁ + Σ₂ − 2·(Σ₁Σ₂)^{1/2})
+//!
+//! with Tr((Σ₁Σ₂)^{1/2}) computed stably as Tr(√(√Σ₁·Σ₂·√Σ₁)).
+
+use super::linalg::{matmul, sqrtm_psd, trace};
+
+/// Sample mean + covariance of row-major observations [n, d].
+pub fn mean_cov(rows: &[f32], n: usize, d: usize) -> (Vec<f64>, Vec<f64>) {
+    assert_eq!(rows.len(), n * d);
+    assert!(n > 1, "need at least two samples for covariance");
+    let mut mu = vec![0.0f64; d];
+    for r in 0..n {
+        for j in 0..d {
+            mu[j] += rows[r * d + j] as f64;
+        }
+    }
+    for m in mu.iter_mut() {
+        *m /= n as f64;
+    }
+    let mut cov = vec![0.0f64; d * d];
+    for r in 0..n {
+        for i in 0..d {
+            let di = rows[r * d + i] as f64 - mu[i];
+            for j in i..d {
+                cov[i * d + j] += di * (rows[r * d + j] as f64 - mu[j]);
+            }
+        }
+    }
+    let denom = (n - 1) as f64;
+    for i in 0..d {
+        for j in i..d {
+            cov[i * d + j] /= denom;
+            cov[j * d + i] = cov[i * d + j];
+        }
+    }
+    (mu, cov)
+}
+
+/// Fréchet distance between two Gaussians (μ₁,Σ₁), (μ₂,Σ₂) of dim d.
+pub fn frechet_distance(mu1: &[f64], cov1: &[f64], mu2: &[f64], cov2: &[f64], d: usize) -> f64 {
+    let mean_term: f64 = mu1.iter().zip(mu2).map(|(a, b)| (a - b) * (a - b)).sum();
+    let s1 = sqrtm_psd(cov1, d);
+    let inner = matmul(&matmul(&s1, cov2, d), &s1, d);
+    let sqrt_inner = sqrtm_psd(&inner, d);
+    let tr = trace(cov1, d) + trace(cov2, d) - 2.0 * trace(&sqrt_inner, d);
+    (mean_term + tr).max(0.0)
+}
+
+/// Convenience: Fréchet distance of samples vs a stored reference Gaussian.
+pub fn fid_vs_reference(
+    feats: &[f32],
+    n: usize,
+    d: usize,
+    ref_mu: &[f32],
+    ref_cov: &[f32],
+) -> f64 {
+    let (mu, cov) = mean_cov(feats, n, d);
+    let rmu: Vec<f64> = ref_mu.iter().map(|x| *x as f64).collect();
+    let rcov: Vec<f64> = ref_cov.iter().map(|x| *x as f64).collect();
+    frechet_distance(&mu, &cov, &rmu, &rcov, d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn identical_distributions_are_zero() {
+        let mu = vec![1.0, -2.0];
+        let cov = vec![2.0, 0.3, 0.3, 1.0];
+        let d = frechet_distance(&mu, &cov, &mu, &cov, 2);
+        assert!(d < 1e-9, "{d}");
+    }
+
+    #[test]
+    fn mean_shift_is_squared_distance() {
+        // equal covariances ⇒ d² = ‖Δμ‖²
+        let cov = vec![1.0, 0.0, 0.0, 1.0];
+        let d = frechet_distance(&[0.0, 0.0], &cov, &[3.0, 4.0], &cov, 2);
+        assert!((d - 25.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn scalar_case_closed_form() {
+        // 1-D: d² = (μ₁−μ₂)² + (σ₁−σ₂)²
+        let d = frechet_distance(&[1.0], &[4.0], &[2.0], &[9.0], 1);
+        assert!((d - (1.0 + 1.0)).abs() < 1e-9, "{d}");
+    }
+
+    #[test]
+    fn sampled_estimate_converges() {
+        let mut rng = Rng::new(5);
+        let n = 20_000;
+        let d = 3;
+        let mut a = Vec::with_capacity(n * d);
+        let mut b = Vec::with_capacity(n * d);
+        for _ in 0..n {
+            for j in 0..d {
+                a.push(rng.normal() as f32);
+                b.push((rng.normal() + if j == 0 { 1.0 } else { 0.0 }) as f32);
+            }
+        }
+        let (mu_a, cov_a) = mean_cov(&a, n, d);
+        let (mu_b, cov_b) = mean_cov(&b, n, d);
+        let dist = frechet_distance(&mu_a, &cov_a, &mu_b, &cov_b, d);
+        assert!((dist - 1.0).abs() < 0.1, "{dist}"); // ‖Δμ‖² = 1
+    }
+
+    #[test]
+    fn mean_cov_basics() {
+        let rows = vec![1.0, 2.0, 3.0, 4.0]; // two samples of dim 2
+        let (mu, cov) = mean_cov(&rows, 2, 2);
+        assert_eq!(mu, vec![2.0, 3.0]);
+        assert!((cov[0] - 2.0).abs() < 1e-12); // var of {1,3} (ddof=1)
+    }
+}

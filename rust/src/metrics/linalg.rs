@@ -1,0 +1,159 @@
+//! Small dense linear algebra for the metrics pipeline (no BLAS offline):
+//! symmetric Jacobi eigendecomposition, PSD matrix square root, matmul.
+//! Matrices are row-major `Vec<f64>` of size n×n (n ≤ ~64 here).
+
+/// C ← A·B for n×n row-major matrices.
+pub fn matmul(a: &[f64], b: &[f64], n: usize) -> Vec<f64> {
+    let mut c = vec![0.0; n * n];
+    for i in 0..n {
+        for k in 0..n {
+            let aik = a[i * n + k];
+            if aik == 0.0 {
+                continue;
+            }
+            let brow = &b[k * n..(k + 1) * n];
+            let crow = &mut c[i * n..(i + 1) * n];
+            for j in 0..n {
+                crow[j] += aik * brow[j];
+            }
+        }
+    }
+    c
+}
+
+pub fn transpose(a: &[f64], n: usize) -> Vec<f64> {
+    let mut t = vec![0.0; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            t[j * n + i] = a[i * n + j];
+        }
+    }
+    t
+}
+
+pub fn trace(a: &[f64], n: usize) -> f64 {
+    (0..n).map(|i| a[i * n + i]).sum()
+}
+
+/// Cyclic Jacobi eigendecomposition of a symmetric matrix.
+/// Returns (eigenvalues, eigenvectors as columns of V) with A = V·Λ·Vᵀ.
+pub fn jacobi_eigh(a_in: &[f64], n: usize) -> (Vec<f64>, Vec<f64>) {
+    let mut a = a_in.to_vec();
+    let mut v = vec![0.0; n * n];
+    for i in 0..n {
+        v[i * n + i] = 1.0;
+    }
+    for _sweep in 0..100 {
+        // off-diagonal Frobenius norm
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += a[i * n + j] * a[i * n + j];
+            }
+        }
+        if off.sqrt() < 1e-12 {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = a[p * n + q];
+                if apq.abs() < 1e-15 {
+                    continue;
+                }
+                let app = a[p * n + p];
+                let aqq = a[q * n + q];
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // rotate rows/cols p,q of A
+                for k in 0..n {
+                    let akp = a[k * n + p];
+                    let akq = a[k * n + q];
+                    a[k * n + p] = c * akp - s * akq;
+                    a[k * n + q] = s * akp + c * akq;
+                }
+                for k in 0..n {
+                    let apk = a[p * n + k];
+                    let aqk = a[q * n + k];
+                    a[p * n + k] = c * apk - s * aqk;
+                    a[q * n + k] = s * apk + c * aqk;
+                }
+                // accumulate rotations into V
+                for k in 0..n {
+                    let vkp = v[k * n + p];
+                    let vkq = v[k * n + q];
+                    v[k * n + p] = c * vkp - s * vkq;
+                    v[k * n + q] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+    let eig: Vec<f64> = (0..n).map(|i| a[i * n + i]).collect();
+    (eig, v)
+}
+
+/// Symmetric PSD matrix square root via eigendecomposition; negative
+/// eigenvalues (numerical noise) are clamped to zero.
+pub fn sqrtm_psd(a: &[f64], n: usize) -> Vec<f64> {
+    let (eig, v) = jacobi_eigh(a, n);
+    let mut sv = vec![0.0; n * n];
+    for (i, e) in eig.iter().enumerate() {
+        sv[i * n + i] = e.max(0.0).sqrt();
+    }
+    let vs = matmul(&v, &sv, n);
+    matmul(&vs, &transpose(&v, n), n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eigh_diagonal() {
+        let a = vec![3.0, 0.0, 0.0, 7.0];
+        let (mut eig, _) = jacobi_eigh(&a, 2);
+        eig.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        assert!((eig[0] - 3.0).abs() < 1e-10);
+        assert!((eig[1] - 7.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn eigh_reconstructs() {
+        // A = VΛVᵀ for a random-ish symmetric matrix
+        let n = 4;
+        let a = vec![
+            4.0, 1.0, 0.5, 0.2, //
+            1.0, 3.0, 0.7, 0.1, //
+            0.5, 0.7, 2.0, 0.3, //
+            0.2, 0.1, 0.3, 1.0,
+        ];
+        let (eig, v) = jacobi_eigh(&a, n);
+        let mut lam = vec![0.0; n * n];
+        for i in 0..n {
+            lam[i * n + i] = eig[i];
+        }
+        let rec = matmul(&matmul(&v, &lam, n), &transpose(&v, n), n);
+        for (x, y) in a.iter().zip(&rec) {
+            assert!((x - y).abs() < 1e-8, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn sqrtm_squares_back() {
+        let n = 3;
+        let a = vec![2.0, 0.5, 0.1, 0.5, 1.5, 0.2, 0.1, 0.2, 1.0];
+        let s = sqrtm_psd(&a, n);
+        let sq = matmul(&s, &s, n);
+        for (x, y) in a.iter().zip(&sq) {
+            assert!((x - y).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn trace_and_transpose() {
+        let a = vec![1.0, 2.0, 3.0, 4.0];
+        assert_eq!(trace(&a, 2), 5.0);
+        assert_eq!(transpose(&a, 2), vec![1.0, 3.0, 2.0, 4.0]);
+    }
+}

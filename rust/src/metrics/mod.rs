@@ -1,0 +1,8 @@
+//! Metrics pipeline: FLOPs accounting + quality estimators (FID*, IS*,
+//! reference fidelity, VBench*), correlation and PCA analyses.
+
+pub mod flops;
+pub mod frechet;
+pub mod linalg;
+pub mod pca;
+pub mod stats;

@@ -1,0 +1,131 @@
+//! 2-D PCA projection of per-step feature trajectories (paper Fig. 9).
+//! Top components via power iteration with deflation on the covariance,
+//! evaluated matrix-free (d can be tokens·dim ≈ 10⁴).
+
+use crate::util::rng::Rng;
+
+/// rows: [n, d] observations. Returns (components [2, d], projected [n, 2]).
+pub fn pca2(rows: &[f32], n: usize, d: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
+    assert_eq!(rows.len(), n * d);
+    assert!(n >= 2);
+    let mut mu = vec![0.0f64; d];
+    for r in 0..n {
+        for j in 0..d {
+            mu[j] += rows[r * d + j] as f64;
+        }
+    }
+    for m in mu.iter_mut() {
+        *m /= n as f64;
+    }
+
+    // centered row access
+    let centered = |r: usize, j: usize| rows[r * d + j] as f64 - mu[j];
+
+    // matrix-free covariance-vector product: C v = 1/(n-1) Σ_r x_r (x_rᵀ v)
+    let cov_mul = |v: &[f64], out: &mut Vec<f64>| {
+        out.iter_mut().for_each(|o| *o = 0.0);
+        for r in 0..n {
+            let mut dot = 0.0;
+            for j in 0..d {
+                dot += centered(r, j) * v[j];
+            }
+            for j in 0..d {
+                out[j] += centered(r, j) * dot;
+            }
+        }
+        let s = 1.0 / (n as f64 - 1.0);
+        out.iter_mut().for_each(|o| *o *= s);
+    };
+
+    let mut rng = Rng::new(seed);
+    let mut comps: Vec<Vec<f64>> = Vec::new();
+    for _ in 0..2 {
+        let mut v: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+        normalize(&mut v);
+        let mut tmp = vec![0.0f64; d];
+        for _ in 0..60 {
+            cov_mul(&v, &mut tmp);
+            // deflate previously found components
+            for c in &comps {
+                let dot: f64 = tmp.iter().zip(c).map(|(a, b)| a * b).sum();
+                for (t, ci) in tmp.iter_mut().zip(c) {
+                    *t -= dot * ci;
+                }
+            }
+            let norm = normalize(&mut tmp);
+            std::mem::swap(&mut v, &mut tmp);
+            if norm < 1e-14 {
+                break;
+            }
+        }
+        comps.push(v);
+    }
+
+    let mut proj = vec![0.0f64; n * 2];
+    for r in 0..n {
+        for (ci, c) in comps.iter().enumerate() {
+            let mut dot = 0.0;
+            for j in 0..d {
+                dot += centered(r, j) * c[j];
+            }
+            proj[r * 2 + ci] = dot;
+        }
+    }
+    let mut flat = Vec::with_capacity(2 * d);
+    for c in comps {
+        flat.extend(c);
+    }
+    (flat, proj)
+}
+
+fn normalize(v: &mut [f64]) -> f64 {
+    let norm = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+    if norm > 0.0 {
+        v.iter_mut().for_each(|x| *x /= norm);
+    }
+    norm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn recovers_dominant_direction() {
+        // points along (1, 1, 0)/√2 with small noise: PC1 ≈ that axis
+        let mut rng = Rng::new(3);
+        let n = 200;
+        let d = 3;
+        let mut rows = Vec::with_capacity(n * d);
+        for _ in 0..n {
+            let t = rng.normal() * 10.0;
+            rows.push((t + rng.normal() * 0.01) as f32);
+            rows.push((t + rng.normal() * 0.01) as f32);
+            rows.push((rng.normal() * 0.01) as f32);
+        }
+        let (comps, proj) = pca2(&rows, n, d, 1);
+        let c1 = &comps[..d];
+        let expected = 1.0 / 2.0f64.sqrt();
+        assert!((c1[0].abs() - expected).abs() < 0.01, "{c1:?}");
+        assert!((c1[1].abs() - expected).abs() < 0.01);
+        assert!(c1[2].abs() < 0.05);
+        // PC1 variance should dominate PC2
+        let var = |k: usize| -> f64 {
+            let m: f64 = (0..n).map(|r| proj[r * 2 + k]).sum::<f64>() / n as f64;
+            (0..n).map(|r| (proj[r * 2 + k] - m).powi(2)).sum::<f64>() / n as f64
+        };
+        assert!(var(0) > 100.0 * var(1));
+    }
+
+    #[test]
+    fn components_orthogonal() {
+        let mut rng = Rng::new(9);
+        let n = 50;
+        let d = 6;
+        let rows: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let (comps, _) = pca2(&rows, n, d, 2);
+        let dot: f64 = (0..d).map(|j| comps[j] * comps[d + j]).sum();
+        assert!(dot.abs() < 1e-6, "{dot}");
+    }
+}

@@ -1,0 +1,246 @@
+//! Scalar statistics: Inception-style score, Pearson correlation, latency
+//! histogram, reference-fidelity quality proxies (ImageReward*/VBench*).
+
+/// Inception-style score from classifier logits [n, k]:
+/// IS = exp( E_i KL(p(y|x_i) ‖ p(y)) ).
+pub fn inception_score(logits: &[f32], n: usize, k: usize) -> f64 {
+    assert_eq!(logits.len(), n * k);
+    assert!(n > 0);
+    let mut probs = vec![0.0f64; n * k];
+    for i in 0..n {
+        let row = &logits[i * k..(i + 1) * k];
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+        let mut z = 0.0;
+        for j in 0..k {
+            let e = ((row[j] as f64) - mx).exp();
+            probs[i * k + j] = e;
+            z += e;
+        }
+        for j in 0..k {
+            probs[i * k + j] /= z;
+        }
+    }
+    let mut marginal = vec![0.0f64; k];
+    for i in 0..n {
+        for j in 0..k {
+            marginal[j] += probs[i * k + j] / n as f64;
+        }
+    }
+    let mut kl_sum = 0.0;
+    for i in 0..n {
+        for j in 0..k {
+            let p = probs[i * k + j];
+            if p > 1e-12 {
+                kl_sum += p * (p / marginal[j].max(1e-12)).ln();
+            }
+        }
+    }
+    (kl_sum / n as f64).exp()
+}
+
+/// Fraction of rows whose argmax logit equals the expected label — the
+/// GenEval*/CLIP* conditioning-faithfulness proxy.
+pub fn class_agreement(logits: &[f32], labels: &[usize], k: usize) -> f64 {
+    let n = labels.len();
+    if n == 0 {
+        return 0.0;
+    }
+    let mut hits = 0usize;
+    for (i, lab) in labels.iter().enumerate() {
+        let row = &logits[i * k..(i + 1) * k];
+        let arg = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        if arg == *lab {
+            hits += 1;
+        }
+    }
+    hits as f64 / n as f64
+}
+
+/// Pearson correlation coefficient (Fig. 6 layer-error analysis).
+pub fn pearson(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    let n = x.len() as f64;
+    if x.is_empty() {
+        return 0.0;
+    }
+    let mx = x.iter().sum::<f64>() / n;
+    let my = y.iter().sum::<f64>() / n;
+    let mut sxy = 0.0;
+    let mut sxx = 0.0;
+    let mut syy = 0.0;
+    for (a, b) in x.iter().zip(y) {
+        let dx = a - mx;
+        let dy = b - my;
+        sxy += dx * dy;
+        sxx += dx * dx;
+        syy += dy * dy;
+    }
+    if sxx <= 0.0 || syy <= 0.0 {
+        return 0.0;
+    }
+    sxy / (sxx.sqrt() * syy.sqrt())
+}
+
+/// Reference-fidelity quality proxy in [0, 1]: exp(−rel-L2(output, reference)).
+/// Stands in for ImageReward/CLIP on the flux-sim tables (DESIGN.md §2) —
+/// identical outputs score 1, decorrelated outputs → 0.
+pub fn fidelity_score(out: &[f32], reference: &[f32]) -> f64 {
+    let num = crate::tensor::Tensor::l2_dist(out, reference);
+    let den = crate::tensor::Tensor::l2_norm(reference).max(1e-9);
+    (-(num / den)).exp()
+}
+
+/// Temporal-consistency score for video latents [frames × frame_len]:
+/// penalizes frame-to-frame deltas that deviate from the reference's deltas.
+pub fn temporal_consistency(out: &[f32], reference: &[f32], frames: usize) -> f64 {
+    assert_eq!(out.len(), reference.len());
+    if frames < 2 {
+        return 1.0;
+    }
+    let fl = out.len() / frames;
+    let mut acc = 0.0;
+    for f in 0..frames - 1 {
+        let d_out: Vec<f32> = (0..fl)
+            .map(|i| out[(f + 1) * fl + i] - out[f * fl + i])
+            .collect();
+        let d_ref: Vec<f32> = (0..fl)
+            .map(|i| reference[(f + 1) * fl + i] - reference[f * fl + i])
+            .collect();
+        acc += fidelity_score(&d_out, &d_ref);
+    }
+    acc / (frames - 1) as f64
+}
+
+/// VBench* composite: 70 % per-frame fidelity + 30 % temporal consistency,
+/// scaled to the 0-100 range VBench reports.
+pub fn vbench_star(out: &[f32], reference: &[f32], frames: usize) -> f64 {
+    let fid = fidelity_score(out, reference);
+    let tc = temporal_consistency(out, reference, frames);
+    100.0 * (0.7 * fid + 0.3 * tc)
+}
+
+/// Latency histogram with exact percentiles (stores samples; serving runs
+/// here are ≤ millions of points).
+#[derive(Debug, Default, Clone)]
+pub struct Histogram {
+    samples: Vec<f64>,
+    sorted: bool,
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram::default()
+    }
+
+    pub fn record(&mut self, v: f64) {
+        self.samples.push(v);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn percentile(&mut self, q: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        if !self.sorted {
+            self.samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+        let idx = ((self.samples.len() as f64 - 1.0) * q).round() as usize;
+        self.samples[idx]
+    }
+
+    pub fn summary(&mut self) -> (f64, f64, f64, f64) {
+        (self.mean(), self.percentile(0.5), self.percentile(0.95), self.percentile(0.99))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn is_bounds() {
+        // uniform posteriors -> IS = 1
+        let logits = vec![0.0f32; 4 * 5];
+        let is = inception_score(&logits, 4, 5);
+        assert!((is - 1.0).abs() < 1e-9);
+        // perfectly confident + diverse -> IS = k
+        let mut l = vec![-100.0f32; 4 * 4];
+        for i in 0..4 {
+            l[i * 4 + i] = 100.0;
+        }
+        let is = inception_score(&l, 4, 4);
+        assert!((is - 4.0).abs() < 1e-6, "{is}");
+    }
+
+    #[test]
+    fn agreement() {
+        let logits = vec![
+            1.0, 0.0, //
+            0.0, 1.0, //
+            1.0, 0.0,
+        ];
+        assert!((class_agreement(&logits, &[0, 1, 1], 2) - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pearson_perfect() {
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        let y = vec![2.0, 4.0, 6.0, 8.0];
+        assert!((pearson(&x, &y) - 1.0).abs() < 1e-12);
+        let ny: Vec<f64> = y.iter().map(|v| -v).collect();
+        assert!((pearson(&x, &ny) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pearson_degenerate() {
+        assert_eq!(pearson(&[1.0, 1.0], &[2.0, 3.0]), 0.0);
+    }
+
+    #[test]
+    fn fidelity_endpoints() {
+        let a = vec![1.0f32, 2.0, 3.0];
+        assert!((fidelity_score(&a, &a) - 1.0).abs() < 1e-12);
+        let far = vec![100.0f32, -50.0, 7.0];
+        assert!(fidelity_score(&far, &a) < 0.01);
+    }
+
+    #[test]
+    fn temporal_identity() {
+        let v = vec![0.1f32; 12];
+        assert!((temporal_consistency(&v, &v, 3) - 1.0).abs() < 1e-12);
+        assert!((vbench_star(&v, &v, 3) - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_percentiles() {
+        let mut h = Histogram::new();
+        for i in 1..=100 {
+            h.record(i as f64);
+        }
+        assert_eq!(h.len(), 100);
+        assert!((h.percentile(0.5) - 50.0).abs() <= 1.0);
+        assert!((h.percentile(0.99) - 99.0).abs() <= 1.0);
+        assert!((h.mean() - 50.5).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,146 @@
+//! Load-generating client for the serving benches (open/closed loop over N
+//! TCP connections, latency/throughput reporting).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::thread;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::metrics::stats::Histogram;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct LoadConfig {
+    pub addr: String,
+    pub connections: usize,
+    pub requests: usize,
+    /// policy description string (workload::parse_policy syntax)
+    pub policy: String,
+    pub num_classes: usize,
+}
+
+#[derive(Debug)]
+pub struct LoadReport {
+    pub completed: usize,
+    pub errors: usize,
+    pub wall_s: f64,
+    pub throughput_rps: f64,
+    pub latency: Histogram,
+    /// mean per-request FLOPs speedup reported by the server
+    pub mean_speedup: f64,
+}
+
+/// Issue one generate request on an open connection; returns (latency_ms,
+/// reported speedup).
+pub fn generate_once(
+    stream: &mut TcpStream,
+    reader: &mut BufReader<TcpStream>,
+    cond: i32,
+    seed: u64,
+    policy: &str,
+) -> Result<(f64, f64)> {
+    let req = Json::obj(vec![
+        ("op", Json::str("generate")),
+        ("cond", Json::Num(cond as f64)),
+        ("seed", Json::Num(seed as f64)),
+        ("policy", Json::str(policy)),
+    ]);
+    let t0 = Instant::now();
+    stream.write_all(req.dump().as_bytes())?;
+    stream.write_all(b"\n")?;
+    let mut line = String::new();
+    reader.read_line(&mut line).context("reading response")?;
+    let ms = t0.elapsed().as_secs_f64() * 1e3;
+    let resp = Json::parse(&line).context("parsing response")?;
+    if resp.get("ok").and_then(|b| b.as_bool()) != Some(true) {
+        bail!("server error: {line}");
+    }
+    let speedup = resp
+        .get("stats")
+        .and_then(|s| s.get("speedup"))
+        .and_then(|v| v.as_f64())
+        .unwrap_or(1.0);
+    Ok((ms, speedup))
+}
+
+/// Closed-loop load: `connections` workers, each issuing its share of
+/// `requests` back-to-back.
+pub fn run_load(cfg: &LoadConfig) -> Result<LoadReport> {
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    let per = cfg.requests / cfg.connections.max(1);
+    for w in 0..cfg.connections.max(1) {
+        let addr = cfg.addr.clone();
+        let policy = cfg.policy.clone();
+        let classes = cfg.num_classes.max(1);
+        let n = if w == cfg.connections - 1 { cfg.requests - per * w } else { per };
+        handles.push(thread::spawn(move || -> (Vec<f64>, Vec<f64>, usize) {
+            let mut lats = Vec::new();
+            let mut speeds = Vec::new();
+            let mut errors = 0usize;
+            let Ok(mut stream) = TcpStream::connect(&addr) else {
+                return (lats, speeds, n);
+            };
+            let Ok(rs) = stream.try_clone() else {
+                return (lats, speeds, n);
+            };
+            let mut reader = BufReader::new(rs);
+            for i in 0..n {
+                let cond = ((w * 131 + i * 7) % classes) as i32;
+                let seed = (w * 100_000 + i) as u64;
+                match generate_once(&mut stream, &mut reader, cond, seed, &policy) {
+                    Ok((ms, sp)) => {
+                        lats.push(ms);
+                        speeds.push(sp);
+                    }
+                    Err(_) => errors += 1,
+                }
+            }
+            (lats, speeds, errors)
+        }));
+    }
+    let mut latency = Histogram::new();
+    let mut speeds = Vec::new();
+    let mut errors = 0;
+    for h in handles {
+        let (lats, sps, errs) = h.join().unwrap();
+        for l in lats {
+            latency.record(l);
+        }
+        speeds.extend(sps);
+        errors += errs;
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let completed = latency.len();
+    Ok(LoadReport {
+        completed,
+        errors,
+        wall_s,
+        throughput_rps: completed as f64 / wall_s.max(1e-9),
+        latency,
+        mean_speedup: if speeds.is_empty() {
+            0.0
+        } else {
+            speeds.iter().sum::<f64>() / speeds.len() as f64
+        },
+    })
+}
+
+/// Ask the server to shut down (best effort).
+pub fn shutdown(addr: &str) {
+    if let Ok(mut s) = TcpStream::connect(addr) {
+        let _ = s.write_all(b"{\"op\":\"shutdown\"}\n");
+    }
+}
+
+/// Fetch engine stats.
+pub fn stats(addr: &str) -> Result<Json> {
+    let mut s = TcpStream::connect(addr)?;
+    s.write_all(b"{\"op\":\"stats\"}\n")?;
+    let mut reader = BufReader::new(s.try_clone()?);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    Ok(Json::parse(&line)?)
+}

@@ -1,0 +1,255 @@
+//! TCP JSON-lines serving front-end.
+//!
+//! The PJRT client is not `Send`, so the engine runs on the thread that
+//! calls [`serve`]; connection threads only parse/serialize and exchange
+//! work through channels (vLLM-router-style separation of front-end and
+//! engine loop).
+//!
+//! Protocol (one JSON object per line):
+//!   → {"op":"generate","cond":3,"seed":7,"policy":"speca","tau0":0.3,
+//!      "return_latent":false}
+//!   ← {"id":0,"ok":true,"stats":{...},"latent":[...]?}
+//!   → {"op":"stats"}            ← engine-level counters
+//!   → {"op":"shutdown"}         ← stops the server loop
+//!
+//! See `client.rs` for the load generator used by the serving benches.
+
+pub mod client;
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::coordinator::state::{Completion, RequestSpec};
+use crate::coordinator::Engine;
+use crate::util::json::Json;
+use crate::workload::policy_from_json;
+
+/// A parsed client request paired with its reply channel.
+enum FrontendMsg {
+    Generate { spec_body: Json, reply: Sender<String>, return_latent: bool },
+    Stats { reply: Sender<String> },
+    Shutdown,
+}
+
+pub struct ServerConfig {
+    pub addr: String,
+    /// maximum requests in flight inside the engine
+    pub max_queue: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { addr: "127.0.0.1:7433".into(), max_queue: 1024 }
+    }
+}
+
+fn completion_json(c: &Completion, return_latent: bool, full_flops: u64, steps: usize) -> Json {
+    let s = &c.stats;
+    let mut pairs = vec![
+        ("id", Json::Num(c.id as f64)),
+        ("ok", Json::Bool(true)),
+        ("policy", Json::str(&c.policy_name)),
+        ("cond", Json::Num(c.cond as f64)),
+        (
+            "stats",
+            Json::obj(vec![
+                ("full_steps", Json::Num(s.full_steps as f64)),
+                ("spec_steps", Json::Num(s.spec_steps as f64)),
+                ("skip_steps", Json::Num(s.skip_steps as f64)),
+                ("blend_steps", Json::Num(s.blend_steps as f64)),
+                ("elided_steps", Json::Num(s.elided_steps as f64)),
+                ("rejects", Json::Num(s.rejects as f64)),
+                ("latency_ms", Json::Num(s.latency_ms)),
+                ("flops", Json::Num(s.flops.total() as f64)),
+                ("speedup", Json::Num(s.speedup(full_flops, steps))),
+            ]),
+        ),
+    ];
+    if return_latent {
+        pairs.push(("latent", Json::arr_f32(&c.latent)));
+    }
+    Json::obj(pairs)
+}
+
+fn handle_conn(stream: TcpStream, tx: Sender<FrontendMsg>) {
+    let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_default();
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply_line = match Json::parse(&line) {
+            Err(e) => {
+                format!("{}", Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::str(&e.to_string()))]).dump())
+            }
+            Ok(req) => {
+                let op = req.get("op").and_then(|o| o.as_str()).unwrap_or("generate");
+                match op {
+                    "shutdown" => {
+                        let _ = tx.send(FrontendMsg::Shutdown);
+                        Json::obj(vec![("ok", Json::Bool(true))]).dump()
+                    }
+                    "stats" => {
+                        let (rtx, rrx) = channel();
+                        if tx.send(FrontendMsg::Stats { reply: rtx }).is_err() {
+                            break;
+                        }
+                        rrx.recv().unwrap_or_else(|_| "{\"ok\":false}".to_string())
+                    }
+                    _ => {
+                        let return_latent =
+                            req.get("return_latent").and_then(|b| b.as_bool()).unwrap_or(false);
+                        let (rtx, rrx) = channel();
+                        if tx
+                            .send(FrontendMsg::Generate { spec_body: req, reply: rtx, return_latent })
+                            .is_err()
+                        {
+                            break;
+                        }
+                        rrx.recv().unwrap_or_else(|_| "{\"ok\":false}".to_string())
+                    }
+                }
+            }
+        };
+        if writer.write_all(reply_line.as_bytes()).is_err()
+            || writer.write_all(b"\n").is_err()
+        {
+            break;
+        }
+    }
+    let _ = peer;
+}
+
+/// Run the serving loop on the current thread (owns the engine) until a
+/// shutdown request arrives. Returns total completed requests.
+pub fn serve(engine: &mut Engine<'_>, cfg: &ServerConfig) -> Result<u64> {
+    let listener = TcpListener::bind(&cfg.addr)?;
+    listener.set_nonblocking(false)?;
+    let (tx, rx): (Sender<FrontendMsg>, Receiver<FrontendMsg>) = channel();
+    let ltx = tx.clone();
+    let listener = Arc::new(listener);
+    let l2 = listener.clone();
+    thread::spawn(move || {
+        for stream in l2.incoming() {
+            match stream {
+                Ok(s) => {
+                    let txc = ltx.clone();
+                    thread::spawn(move || handle_conn(s, txc));
+                }
+                Err(_) => break,
+            }
+        }
+    });
+    eprintln!("speca: serving on {}", cfg.addr);
+
+    let depth = engine.model.entry.config.depth;
+    let steps = engine.model.entry.config.serve_steps;
+    let full_flops =
+        engine.model.entry.flops.full_step.get(&1).copied().unwrap_or(0);
+    let mut next_id: u64 = 0;
+    let mut waiting: std::collections::BTreeMap<u64, (Sender<String>, bool)> =
+        std::collections::BTreeMap::new();
+    let mut completed: u64 = 0;
+
+    'outer: loop {
+        // ingest as much frontend work as available without blocking
+        loop {
+            let msg = if engine.pending() > 0 {
+                match rx.try_recv() {
+                    Ok(m) => Some(m),
+                    Err(std::sync::mpsc::TryRecvError::Empty) => None,
+                    Err(std::sync::mpsc::TryRecvError::Disconnected) => break 'outer,
+                }
+            } else {
+                // idle: block briefly so shutdown stays responsive
+                match rx.recv_timeout(Duration::from_millis(50)) {
+                    Ok(m) => Some(m),
+                    Err(std::sync::mpsc::RecvTimeoutError::Timeout) => None,
+                    Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break 'outer,
+                }
+            };
+            let Some(msg) = msg else { break };
+            match msg {
+                FrontendMsg::Shutdown => break 'outer,
+                FrontendMsg::Stats { reply } => {
+                    let f = &engine.flops;
+                    let j = Json::obj(vec![
+                        ("ok", Json::Bool(true)),
+                        ("completed", Json::Num(completed as f64)),
+                        ("inflight", Json::Num(engine.pending() as f64)),
+                        ("ticks", Json::Num(engine.ticks as f64)),
+                        ("alpha", Json::Num(f.acceptance_rate())),
+                        ("gamma", Json::Num(f.gamma())),
+                        ("total_flops", Json::Num(f.total() as f64)),
+                    ]);
+                    let _ = reply.send(j.dump());
+                }
+                FrontendMsg::Generate { spec_body, reply, return_latent } => {
+                    if waiting.len() >= cfg.max_queue {
+                        let _ = reply.send(
+                            Json::obj(vec![
+                                ("ok", Json::Bool(false)),
+                                ("error", Json::str("queue full")),
+                            ])
+                            .dump(),
+                        );
+                        continue;
+                    }
+                    match policy_from_json(&spec_body, depth) {
+                        Err(e) => {
+                            let _ = reply.send(
+                                Json::obj(vec![
+                                    ("ok", Json::Bool(false)),
+                                    ("error", Json::str(&format!("{e}"))),
+                                ])
+                                .dump(),
+                            );
+                        }
+                        Ok(policy) => {
+                            let id = next_id;
+                            next_id += 1;
+                            let spec = RequestSpec {
+                                id,
+                                cond: spec_body
+                                    .get("cond")
+                                    .and_then(|c| c.as_f64())
+                                    .unwrap_or(0.0) as i32,
+                                seed: spec_body
+                                    .get("seed")
+                                    .and_then(|s| s.as_u64())
+                                    .unwrap_or(id),
+                                policy,
+                                record_traj: false,
+                            };
+                            waiting.insert(id, (reply, return_latent));
+                            engine.submit(spec);
+                        }
+                    }
+                }
+            }
+        }
+
+        if engine.pending() > 0 {
+            engine.tick()?;
+            for c in engine.drain_completions() {
+                completed += 1;
+                if let Some((reply, return_latent)) = waiting.remove(&c.id) {
+                    let _ =
+                        reply.send(completion_json(&c, return_latent, full_flops, steps).dump());
+                }
+            }
+        }
+    }
+    Ok(completed)
+}

@@ -1,0 +1,199 @@
+//! Minimal host-side tensor: shape + contiguous f32 storage.
+//!
+//! The Rust coordinator only needs host staging buffers around PJRT
+//! executions plus a handful of reductions (norms, stats) for the
+//! verification fast path and the metrics pipeline — this is deliberately
+//! not a general ndarray.
+
+use std::fmt;
+
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}(len={})", self.shape, self.data.len())
+    }
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} != data len {}",
+            data.len()
+        );
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Size of one index step along axis 0 (row size).
+    pub fn row_len(&self) -> usize {
+        if self.shape.is_empty() {
+            1
+        } else {
+            self.shape[1..].iter().product()
+        }
+    }
+
+    /// Borrow the i-th slice along axis 0.
+    pub fn row(&self, i: usize) -> &[f32] {
+        let r = self.row_len();
+        &self.data[i * r..(i + 1) * r]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let r = self.row_len();
+        &mut self.data[i * r..(i + 1) * r]
+    }
+
+    /// Owned copy of the i-th slice along axis 0 (shape drops the axis).
+    pub fn index0(&self, i: usize) -> Tensor {
+        assert!(i < self.shape[0], "index {i} out of {}", self.shape[0]);
+        Tensor::new(self.shape[1..].to_vec(), self.row(i).to_vec())
+    }
+
+    /// Stack equal-shaped tensors along a new axis 0.
+    pub fn stack(parts: &[&Tensor]) -> Tensor {
+        assert!(!parts.is_empty());
+        let inner = &parts[0].shape;
+        let mut data = Vec::with_capacity(parts.len() * parts[0].len());
+        for p in parts {
+            assert_eq!(&p.shape, inner, "stack shape mismatch");
+            data.extend_from_slice(&p.data);
+        }
+        let mut shape = vec![parts.len()];
+        shape.extend_from_slice(inner);
+        Tensor::new(shape, data)
+    }
+
+    pub fn reshape(mut self, shape: Vec<usize>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape;
+        self
+    }
+
+    // ---- reductions used on the hot path ---------------------------------
+
+    pub fn l2_norm(v: &[f32]) -> f64 {
+        v.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>().sqrt()
+    }
+
+    pub fn l2_dist(a: &[f32], b: &[f32]) -> f64 {
+        debug_assert_eq!(a.len(), b.len());
+        a.iter()
+            .zip(b)
+            .map(|(x, y)| {
+                let d = (*x - *y) as f64;
+                d * d
+            })
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    pub fn mean(v: &[f32]) -> f64 {
+        if v.is_empty() {
+            return 0.0;
+        }
+        v.iter().map(|x| *x as f64).sum::<f64>() / v.len() as f64
+    }
+
+    pub fn mse(a: &[f32], b: &[f32]) -> f64 {
+        if a.is_empty() {
+            return 0.0;
+        }
+        a.iter()
+            .zip(b)
+            .map(|(x, y)| {
+                let d = (*x - *y) as f64;
+                d * d
+            })
+            .sum::<f64>()
+            / a.len() as f64
+    }
+
+    /// axpy: y ← y + alpha·x
+    pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+        debug_assert_eq!(x.len(), y.len());
+        for (yi, xi) in y.iter_mut().zip(x) {
+            *yi += alpha * xi;
+        }
+    }
+
+    /// y ← alpha·y + beta·x
+    pub fn scale_add(alpha: f32, y: &mut [f32], beta: f32, x: &[f32]) {
+        debug_assert_eq!(x.len(), y.len());
+        for (yi, xi) in y.iter_mut().zip(x) {
+            *yi = alpha * *yi + beta * xi;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_and_index() {
+        let t = Tensor::new(vec![3, 2], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.row(1), &[3., 4.]);
+        let r = t.index0(2);
+        assert_eq!(r.shape, vec![2]);
+        assert_eq!(r.data, vec![5., 6.]);
+    }
+
+    #[test]
+    fn stack_roundtrip() {
+        let a = Tensor::new(vec![2], vec![1., 2.]);
+        let b = Tensor::new(vec![2], vec![3., 4.]);
+        let s = Tensor::stack(&[&a, &b]);
+        assert_eq!(s.shape, vec![2, 2]);
+        assert_eq!(s.index0(1).data, vec![3., 4.]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Tensor::new(vec![2, 2], vec![1.0; 3]);
+    }
+
+    #[test]
+    fn norms() {
+        assert!((Tensor::l2_norm(&[3.0, 4.0]) - 5.0).abs() < 1e-12);
+        assert!((Tensor::l2_dist(&[1.0, 1.0], &[4.0, 5.0]) - 5.0).abs() < 1e-12);
+        assert!((Tensor::mse(&[1.0, 2.0], &[2.0, 4.0]) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn blas_like() {
+        let mut y = vec![1.0, 2.0];
+        Tensor::axpy(2.0, &[10.0, 20.0], &mut y);
+        assert_eq!(y, vec![21.0, 42.0]);
+        Tensor::scale_add(0.5, &mut y, 1.0, &[1.0, 0.0]);
+        assert_eq!(y, vec![11.5, 21.0]);
+    }
+}

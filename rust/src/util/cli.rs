@@ -1,0 +1,107 @@
+//! Tiny CLI argument parser (no clap offline): `--key value`, `--flag`,
+//! positional args. Typed getters with defaults.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (exclusive of argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(it: I) -> Args {
+        let mut out = Args::default();
+        let mut iter = it.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.flags.insert(name.to_string(), v);
+                } else {
+                    out.flags.insert(name.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.flags
+            .get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn u64(&self, key: &str, default: u64) -> u64 {
+        self.flags
+            .get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> f64 {
+        self.flags
+            .get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects a number, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        matches!(self.flags.get(key).map(|s| s.as_str()), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn parses_mixed() {
+        let a = argv("serve --port 9000 --verbose --ratio=0.5 extra");
+        assert_eq!(a.positional, vec!["serve", "extra"]);
+        assert_eq!(a.usize("port", 0), 9000);
+        assert!(a.bool("verbose"));
+        assert_eq!(a.f64("ratio", 0.0), 0.5);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = argv("x");
+        assert_eq!(a.str("model", "dit-sim"), "dit-sim");
+        assert_eq!(a.usize("n", 3), 3);
+        assert!(!a.bool("flag"));
+    }
+
+    #[test]
+    fn flag_before_flag() {
+        let a = argv("--a --b 2");
+        assert!(a.bool("a"));
+        assert_eq!(a.usize("b", 0), 2);
+    }
+}

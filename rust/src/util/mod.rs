@@ -1,0 +1,8 @@
+//! Substrate utilities written from scratch for the offline image:
+//! JSON, RNG, CLI parsing, timing/bench harness, property-test helpers.
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod timing;

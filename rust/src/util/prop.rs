@@ -1,0 +1,73 @@
+//! Hand-rolled property-testing harness (proptest is not vendored).
+//!
+//! `prop_check(cases, seed, |rng| ...)` runs a randomized predicate many
+//! times with independent deterministic streams and reports the failing
+//! case's stream id so a failure reproduces with `rng = Rng::new(seed).fork(id)`.
+
+use super::rng::Rng;
+
+/// Run `f` on `cases` independent RNG streams; panic with the failing
+/// stream index on the first counterexample.
+pub fn prop_check<F: FnMut(&mut Rng) -> Result<(), String>>(
+    cases: usize,
+    seed: u64,
+    mut f: F,
+) {
+    let base = Rng::new(seed);
+    for case in 0..cases {
+        let mut rng = base.fork(case as u64);
+        if let Err(msg) = f(&mut rng) {
+            panic!("property failed (seed={seed}, case={case}): {msg}");
+        }
+    }
+}
+
+/// Assert two slices are elementwise close.
+pub fn assert_close(a: &[f32], b: &[f32], tol: f32, ctx: &str) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("{ctx}: length {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let scale = 1.0f32.max(x.abs()).max(y.abs());
+        if (x - y).abs() > tol * scale {
+            return Err(format!("{ctx}: idx {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        prop_check(50, 1, |rng| {
+            let x = rng.uniform();
+            if (0.0..1.0).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("out of range: {x}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn reports_failure() {
+        prop_check(50, 2, |rng| {
+            if rng.uniform() < 0.9 {
+                Ok(())
+            } else {
+                Err("too big".into())
+            }
+        });
+    }
+
+    #[test]
+    fn close_check() {
+        assert!(assert_close(&[1.0, 2.0], &[1.0, 2.0 + 1e-7], 1e-5, "t").is_ok());
+        assert!(assert_close(&[1.0], &[1.1], 1e-5, "t").is_err());
+        assert!(assert_close(&[1.0], &[1.0, 2.0], 1e-5, "t").is_err());
+    }
+}

@@ -1,0 +1,131 @@
+//! Wall-clock helpers + a self-contained micro-bench harness (criterion is
+//! not available offline). Used by `rust/benches/*` and the perf pass.
+
+use std::time::{Duration, Instant};
+
+/// Run `f` until `min_time` has elapsed (after `warmup` iterations) and
+/// report per-iteration statistics.
+pub struct Bench {
+    pub name: String,
+    pub warmup: usize,
+    pub min_time: Duration,
+    pub max_iters: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub min_ns: f64,
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Self {
+        Bench {
+            name: name.to_string(),
+            warmup: 3,
+            min_time: Duration::from_millis(400),
+            max_iters: 10_000,
+        }
+    }
+
+    pub fn warmup(mut self, n: usize) -> Self {
+        self.warmup = n;
+        self
+    }
+
+    pub fn min_time_ms(mut self, ms: u64) -> Self {
+        self.min_time = Duration::from_millis(ms);
+        self
+    }
+
+    pub fn run<F: FnMut()>(&self, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while start.elapsed() < self.min_time && samples.len() < self.max_iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_nanos() as f64);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len().max(1);
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let pick = |q: f64| samples[((n as f64 - 1.0) * q) as usize];
+        BenchResult {
+            name: self.name.clone(),
+            iters: n,
+            mean_ns: mean,
+            p50_ns: if samples.is_empty() { 0.0 } else { pick(0.5) },
+            p99_ns: if samples.is_empty() { 0.0 } else { pick(0.99) },
+            min_ns: samples.first().copied().unwrap_or(0.0),
+        }
+    }
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>8} iters  mean {:>12}  p50 {:>12}  p99 {:>12}",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p99_ns)
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.0} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Simple stopwatch for coarse phases.
+pub struct Stopwatch(Instant);
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch(Instant::now())
+    }
+    pub fn ms(&self) -> f64 {
+        self.0.elapsed().as_secs_f64() * 1e3
+    }
+    pub fn secs(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs() {
+        let r = Bench::new("noop").min_time_ms(10).run(|| {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(r.iters > 10);
+        assert!(r.p50_ns <= r.p99_ns);
+    }
+
+    #[test]
+    fn fmt_scales() {
+        assert!(fmt_ns(500.0).contains("ns"));
+        assert!(fmt_ns(5_000.0).contains("µs"));
+        assert!(fmt_ns(5_000_000.0).contains("ms"));
+        assert!(fmt_ns(5e9).contains(" s"));
+    }
+}

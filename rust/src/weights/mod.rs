@@ -1,0 +1,185 @@
+//! Reader for the AOT tensor container (`weights.bin` / `goldens.bin`).
+//!
+//! Format written by `python/compile/aot.py::write_tensors` (little-endian):
+//!
+//! ```text
+//! magic "SPCA" | u32 version | u32 n_tensors
+//! per tensor: u16 name_len | name | u8 dtype (0=f32,1=i32) | u8 ndim |
+//!             u32 dims[ndim] | u64 byte_len | raw data
+//! ```
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::Tensor;
+
+#[derive(Debug, Clone)]
+pub enum Stored {
+    F32(Tensor),
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+#[derive(Debug, Default)]
+pub struct TensorFile {
+    pub tensors: BTreeMap<String, Stored>,
+    /// insertion order as written by python (PARAM_NAMES order for weights)
+    pub order: Vec<String>,
+}
+
+struct Cursor<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.i + n > self.b.len() {
+            bail!("truncated tensor file at byte {}", self.i);
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+}
+
+impl TensorFile {
+    pub fn load(path: &Path) -> Result<TensorFile> {
+        let bytes = fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&bytes).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    pub fn parse(bytes: &[u8]) -> Result<TensorFile> {
+        let mut c = Cursor { b: bytes, i: 0 };
+        if c.take(4)? != b"SPCA" {
+            bail!("bad magic (not a SPCA tensor file)");
+        }
+        let version = c.u32()?;
+        if version != 1 {
+            bail!("unsupported tensor file version {version}");
+        }
+        let n = c.u32()? as usize;
+        let mut out = TensorFile::default();
+        for _ in 0..n {
+            let name_len = c.u16()? as usize;
+            let name = String::from_utf8(c.take(name_len)?.to_vec())?;
+            let dtype = c.u8()?;
+            let ndim = c.u8()? as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(c.u32()? as usize);
+            }
+            let nbytes = c.u64()? as usize;
+            let raw = c.take(nbytes)?;
+            let numel: usize = shape.iter().product();
+            let stored = match dtype {
+                0 => {
+                    if nbytes != numel * 4 {
+                        bail!("{name}: byte len {nbytes} != 4*{numel}");
+                    }
+                    let mut data = vec![0f32; numel];
+                    for (i, ch) in raw.chunks_exact(4).enumerate() {
+                        data[i] = f32::from_le_bytes(ch.try_into().unwrap());
+                    }
+                    Stored::F32(Tensor::new(shape, data))
+                }
+                1 => {
+                    if nbytes != numel * 4 {
+                        bail!("{name}: byte len {nbytes} != 4*{numel}");
+                    }
+                    let mut data = vec![0i32; numel];
+                    for (i, ch) in raw.chunks_exact(4).enumerate() {
+                        data[i] = i32::from_le_bytes(ch.try_into().unwrap());
+                    }
+                    Stored::I32 { shape, data }
+                }
+                d => bail!("{name}: unknown dtype {d}"),
+            };
+            out.order.push(name.clone());
+            out.tensors.insert(name, stored);
+        }
+        Ok(out)
+    }
+
+    pub fn f32(&self, name: &str) -> Result<&Tensor> {
+        match self.tensors.get(name) {
+            Some(Stored::F32(t)) => Ok(t),
+            Some(_) => bail!("tensor '{name}' is not f32"),
+            None => bail!("tensor '{name}' not found"),
+        }
+    }
+
+    pub fn i32(&self, name: &str) -> Result<&[i32]> {
+        match self.tensors.get(name) {
+            Some(Stored::I32 { data, .. }) => Ok(data),
+            Some(_) => bail!("tensor '{name}' is not i32"),
+            None => bail!("tensor '{name}' not found"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build a file in-memory with the same layout as aot.py.
+    fn encode(tensors: &[(&str, &[usize], Vec<f32>)]) -> Vec<u8> {
+        let mut b = Vec::new();
+        b.extend_from_slice(b"SPCA");
+        b.extend_from_slice(&1u32.to_le_bytes());
+        b.extend_from_slice(&(tensors.len() as u32).to_le_bytes());
+        for (name, shape, data) in tensors {
+            b.extend_from_slice(&(name.len() as u16).to_le_bytes());
+            b.extend_from_slice(name.as_bytes());
+            b.push(0); // f32
+            b.push(shape.len() as u8);
+            for d in *shape {
+                b.extend_from_slice(&(*d as u32).to_le_bytes());
+            }
+            b.extend_from_slice(&((data.len() * 4) as u64).to_le_bytes());
+            for v in data {
+                b.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        b
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        let bytes = encode(&[
+            ("a", &[2, 2], vec![1., 2., 3., 4.]),
+            ("b", &[3], vec![5., 6., 7.]),
+        ]);
+        let tf = TensorFile::parse(&bytes).unwrap();
+        assert_eq!(tf.order, vec!["a", "b"]);
+        assert_eq!(tf.f32("a").unwrap().shape, vec![2, 2]);
+        assert_eq!(tf.f32("b").unwrap().data, vec![5., 6., 7.]);
+        assert!(tf.f32("c").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        assert!(TensorFile::parse(b"XXXX").is_err());
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let mut bytes = encode(&[("a", &[4], vec![1., 2., 3., 4.])]);
+        bytes.truncate(bytes.len() - 3);
+        assert!(TensorFile::parse(&bytes).is_err());
+    }
+}

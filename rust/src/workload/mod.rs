@@ -1,0 +1,190 @@
+//! Workload generation: policy parsing (shared by CLI, server protocol and
+//! the bench harness) and request stream generators (closed-loop batches
+//! and open-loop Poisson arrivals).
+
+use anyhow::{bail, Result};
+
+use crate::cache::DraftKind;
+use crate::coordinator::policy::{ErrorMetric, Policy, SpeCaConfig};
+use crate::coordinator::state::RequestSpec;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Parse a policy description string:
+///   `full`
+///   `steps:keep=10`
+///   `fora:N=6`
+///   `teacache:l=0.8`
+///   `toca:N=8,R=0.9` / `duca:N=8,R=0.9`
+///   `taylorseer:N=5,O=2`
+///   `speca:N=5,O=2,tau0=0.3,beta=0.05,layer=7,draft=taylor,metric=l2`
+/// Unspecified keys take the defaults above (`layer` defaults to depth−1).
+pub fn parse_policy(desc: &str, depth: usize) -> Result<Policy> {
+    let (name, rest) = match desc.split_once(':') {
+        Some((n, r)) => (n, r),
+        None => (desc, ""),
+    };
+    let mut kv = std::collections::BTreeMap::new();
+    for part in rest.split(',').filter(|p| !p.is_empty()) {
+        let Some((k, v)) = part.split_once('=') else {
+            bail!("policy '{desc}': bad key=value '{part}'");
+        };
+        kv.insert(k.trim().to_string(), v.trim().to_string());
+    }
+    let get_f = |k: &str, d: f64| kv.get(k).map(|v| v.parse().unwrap_or(d)).unwrap_or(d);
+    let get_u = |k: &str, d: usize| kv.get(k).map(|v| v.parse().unwrap_or(d)).unwrap_or(d);
+
+    Ok(match name {
+        "full" => Policy::Full,
+        "steps" | "step-reduction" => Policy::StepReduction { keep: get_u("keep", 25) },
+        "fora" => Policy::Fora { interval: get_u("N", 6) },
+        "teacache" => Policy::TeaCache { threshold: get_f("l", 0.8) },
+        "toca" | "toca-sim" => {
+            Policy::TocaSim { interval: get_u("N", 8), reuse_frac: get_f("R", 0.9) }
+        }
+        "duca" | "duca-sim" => {
+            Policy::DucaSim { interval: get_u("N", 8), reuse_frac: get_f("R", 0.9) }
+        }
+        "taylorseer" | "taylor" => {
+            Policy::TaylorSeer { interval: get_u("N", 5), order: get_u("O", 2) }
+        }
+        "speca" => {
+            let mut c = SpeCaConfig::default_for_depth(depth);
+            c.interval = get_u("N", c.interval);
+            c.order = get_u("O", c.order);
+            c.tau0 = get_f("tau0", c.tau0);
+            c.beta = get_f("beta", c.beta);
+            c.verify_layer = get_u("layer", c.verify_layer);
+            if let Some(d) = kv.get("draft") {
+                c.draft = DraftKind::parse(d)
+                    .ok_or_else(|| anyhow::anyhow!("unknown draft '{d}'"))?;
+            }
+            if let Some(m) = kv.get("metric") {
+                c.metric = ErrorMetric::parse(m)
+                    .ok_or_else(|| anyhow::anyhow!("unknown metric '{m}'"))?;
+            }
+            Policy::SpeCa(c)
+        }
+        _ => bail!("unknown policy '{name}'"),
+    })
+}
+
+/// Parse a policy from the server protocol's JSON request body.
+pub fn policy_from_json(j: &Json, depth: usize) -> Result<Policy> {
+    let desc = j.get("policy").and_then(|p| p.as_str()).unwrap_or("speca");
+    // allow structured overrides: {"policy":"speca","tau0":0.5,...}
+    let mut s = desc.to_string();
+    let keys = ["N", "O", "keep", "l", "R", "tau0", "beta", "layer", "draft", "metric"];
+    let mut parts = Vec::new();
+    for k in keys {
+        if let Some(v) = j.get(k) {
+            let vs = match v {
+                Json::Str(x) => x.clone(),
+                Json::Num(x) => format!("{x}"),
+                _ => continue,
+            };
+            parts.push(format!("{k}={vs}"));
+        }
+    }
+    if !parts.is_empty() && !s.contains(':') {
+        s = format!("{s}:{}", parts.join(","));
+    }
+    parse_policy(&s, depth)
+}
+
+/// Closed-loop batch: n requests, conditions round-robin over num_classes,
+/// deterministic seeds derived from `seed`.
+pub fn batch_requests(
+    n: usize,
+    num_classes: usize,
+    policy: &Policy,
+    seed: u64,
+    record_traj: bool,
+) -> Vec<RequestSpec> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|i| RequestSpec {
+            id: i as u64,
+            cond: (i % num_classes) as i32,
+            seed: rng.next_u64(),
+            policy: policy.clone(),
+            record_traj,
+        })
+        .collect()
+}
+
+/// Open-loop Poisson arrival times (seconds) for `n` requests at `rate` rps.
+pub fn poisson_arrivals(n: usize, rate: f64, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0;
+    (0..n)
+        .map(|_| {
+            t += rng.exponential(rate);
+            t
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_all_policies() {
+        for desc in [
+            "full",
+            "steps:keep=10",
+            "fora:N=7",
+            "teacache:l=1.2",
+            "toca:N=8,R=0.9",
+            "duca:N=12,R=0.8",
+            "taylorseer:N=5,O=2",
+            "speca:N=5,O=2,tau0=0.5,beta=0.08,layer=3,draft=adams,metric=cos",
+        ] {
+            let p = parse_policy(desc, 8).unwrap_or_else(|e| panic!("{desc}: {e}"));
+            assert!(!p.name().is_empty());
+        }
+    }
+
+    #[test]
+    fn speca_fields_land() {
+        let p = parse_policy("speca:tau0=0.7,beta=0.1,N=9", 8).unwrap();
+        let Policy::SpeCa(c) = p else { panic!() };
+        assert!((c.tau0 - 0.7).abs() < 1e-12);
+        assert!((c.beta - 0.1).abs() < 1e-12);
+        assert_eq!(c.interval, 9);
+        assert_eq!(c.verify_layer, 7);
+    }
+
+    #[test]
+    fn rejects_unknown() {
+        assert!(parse_policy("warp-drive", 8).is_err());
+        assert!(parse_policy("speca:draft=magic", 8).is_err());
+    }
+
+    #[test]
+    fn json_policy_overrides() {
+        let j = Json::parse(r#"{"policy":"speca","tau0":0.9,"N":7}"#).unwrap();
+        let Policy::SpeCa(c) = policy_from_json(&j, 8).unwrap() else { panic!() };
+        assert!((c.tau0 - 0.9).abs() < 1e-12);
+        assert_eq!(c.interval, 7);
+    }
+
+    #[test]
+    fn batch_round_robin() {
+        let reqs = batch_requests(10, 4, &Policy::Full, 1, false);
+        assert_eq!(reqs.len(), 10);
+        assert_eq!(reqs[5].cond, 1);
+        // distinct seeds
+        assert_ne!(reqs[0].seed, reqs[1].seed);
+    }
+
+    #[test]
+    fn poisson_monotone() {
+        let arr = poisson_arrivals(100, 50.0, 3);
+        assert!(arr.windows(2).all(|w| w[0] < w[1]));
+        // mean gap ≈ 1/rate
+        let mean_gap = arr.last().unwrap() / 100.0;
+        assert!((mean_gap - 0.02).abs() < 0.01, "{mean_gap}");
+    }
+}

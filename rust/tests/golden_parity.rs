@@ -1,0 +1,257 @@
+//! Integration: Rust runtime vs Python golden traces.
+//!
+//! The AOT pipeline dumps, per model, a fully-computed 50-step DDIM/RF
+//! trajectory (x_T, per-step ε̂, per-step x) plus single-block and head
+//! parity points. These tests replay the trajectory through the PJRT
+//! runtime + native sampler and require 1e-3 agreement end-to-end — the
+//! contract that the HLO-text interchange and the Rust step math are
+//! numerically faithful to the Python reference.
+
+use speca::config::{Manifest, ScheduleKind};
+use speca::coordinator::policy::ErrorMetric;
+use speca::runtime::{ClassifierRuntime, In, ModelRuntime, Runtime};
+use speca::sampler;
+use speca::weights::TensorFile;
+
+fn manifest() -> Option<Manifest> {
+    let dir = speca::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Manifest::load(&dir).expect("manifest loads"))
+}
+
+#[test]
+fn golden_trajectory_all_models() {
+    let Some(manifest) = manifest() else { return };
+    let rt = Runtime::cpu().unwrap();
+    for (name, entry) in &manifest.models {
+        let model = ModelRuntime::load(&rt, entry).unwrap();
+        let g = TensorFile::load(&entry.goldens).unwrap();
+        let x_t = g.f32("x_T").unwrap();
+        let y = g.i32("y").unwrap().to_vec();
+        let eps_all = g.f32("eps_all").unwrap();
+        let x_all = g.f32("x_all").unwrap();
+        let sched = &entry.schedule;
+        let steps = entry.config.serve_steps;
+
+        let mut x = x_t.data.clone();
+        for i in 0..steps {
+            let t = vec![sched.t_model[i]];
+            let (eps, _) = model.full(1, &x, &t, &y, false).unwrap();
+            let expect = eps_all.row(i);
+            let max_err = eps
+                .data
+                .iter()
+                .zip(expect)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0f32, f32::max);
+            assert!(max_err < 1e-3, "{name} step {i}: eps err {max_err}");
+            match sched.kind {
+                ScheduleKind::Ddim => {
+                    sampler::ddim_step(&mut x, &eps.data, sched.ab_t[i], sched.ab_prev[i])
+                }
+                ScheduleKind::RectifiedFlow => sampler::rf_step(&mut x, &eps.data, sched.dt),
+            }
+            let expect_x = x_all.row(i);
+            let max_err = x
+                .iter()
+                .zip(expect_x)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0f32, f32::max);
+            assert!(max_err < 1e-2, "{name} step {i}: x err {max_err}");
+        }
+        println!("{name}: {steps}-step golden trajectory OK");
+    }
+}
+
+#[test]
+fn golden_block_and_head_parity() {
+    let Some(manifest) = manifest() else { return };
+    let rt = Runtime::cpu().unwrap();
+    for (name, entry) in &manifest.models {
+        let model = ModelRuntime::load(&rt, entry).unwrap();
+        let g = TensorFile::load(&entry.goldens).unwrap();
+        let bounds = g.f32("boundaries0").unwrap(); // [L+1, T, D]
+        let v = g.i32("verify_layer").unwrap()[0];
+        let y = g.i32("y").unwrap().to_vec();
+        let t = vec![entry.schedule.t_model[0]];
+        let feat = entry.feat_len();
+
+        let out = model
+            .block(1, v, bounds.row(v as usize), &t, &y)
+            .unwrap();
+        let expect = g.f32("block_out").unwrap();
+        let e = ErrorMetric::L2.eval(&out.data, &expect.data);
+        assert!(e < 1e-4, "{name}: block rel err {e}");
+        // block_fwd(v, boundaries[v]) must equal boundaries[v+1]
+        let e2 = ErrorMetric::L2.eval(&out.data, bounds.row(v as usize + 1));
+        assert!(e2 < 1e-4, "{name}: block-vs-boundary rel err {e2}");
+
+        let head = model
+            .head(1, bounds.row(entry.config.depth), &t, &y)
+            .unwrap();
+        let expect = g.f32("head_out").unwrap();
+        let e = ErrorMetric::L2.eval(&head.data, &expect.data);
+        assert!(e < 1e-4, "{name}: head rel err {e}");
+        assert_eq!(head.data.len(), entry.config.latent_dim);
+        let _ = feat;
+    }
+}
+
+#[test]
+fn kernel_artifacts_match_native() {
+    // The standalone Pallas kernel artifacts (taylor predict/update, verify
+    // stats, sampler step) must agree with the native Rust hot-path
+    // implementations they mirror.
+    let Some(manifest) = manifest() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let entry = manifest.models.values().next().unwrap();
+    let model = ModelRuntime::load(&rt, entry).unwrap();
+    let feat = entry.feat_len();
+
+    // taylor predict: PJRT kernel vs native TapCache
+    let mut cache = speca::cache::TapCache::new(2, feat, 5);
+    let mk = |s: u64| -> Vec<f32> {
+        let mut rng = speca::util::rng::Rng::new(s);
+        rng.normal_f32s(feat)
+    };
+    let mut factors_flat = Vec::new();
+    for s in 0..3u64 {
+        cache.refresh(&mk(s));
+    }
+    for f in cache.factors() {
+        factors_flat.extend_from_slice(f);
+    }
+    let exec = model.kernel_exec("taylor_predict").unwrap();
+    let out = exec
+        .run(
+            &rt,
+            &[],
+            &[
+                In::F32(&factors_flat, &[3, feat]),
+                In::ScalarF32(3.0),
+                In::ScalarF32(5.0),
+            ],
+        )
+        .unwrap();
+    let native = cache.predict(3.0, speca::cache::DraftKind::Taylor);
+    let e = ErrorMetric::L2.eval(&out[0].data, &native);
+    assert!(e < 1e-5, "taylor_predict kernel vs native: rel err {e}");
+
+    // verify stats kernel vs native metrics
+    let a = mk(10);
+    let b = mk(11);
+    let exec = model.kernel_exec("verify_stats").unwrap();
+    let stats = exec
+        .run(&rt, &[], &[In::F32(&a, &[feat]), In::F32(&b, &[feat])])
+        .unwrap();
+    let s = &stats[0].data;
+    let rel_l2_kernel = (s[0].sqrt() / (s[1].sqrt() + 1e-8)) as f64;
+    let rel_l2_native = ErrorMetric::L2.eval(&a, &b);
+    assert!((rel_l2_kernel - rel_l2_native).abs() < 1e-5);
+    let rel_l1_kernel = (s[2] / (s[3] + 1e-8)) as f64;
+    assert!((rel_l1_kernel - ErrorMetric::L1.eval(&a, &b)).abs() < 1e-5);
+
+    // sampler step kernel vs native
+    let latent = entry.config.latent_dim;
+    let x = mk(20)[..latent].to_vec();
+    let e_in = mk(21)[..latent].to_vec();
+    let exec = model.kernel_exec("step").unwrap();
+    let (out, mut native) = match entry.config.schedule_kind {
+        ScheduleKind::Ddim => {
+            let out = exec
+                .run(
+                    &rt,
+                    &[],
+                    &[
+                        In::F32(&x, &[latent]),
+                        In::F32(&e_in, &[latent]),
+                        In::ScalarF32(0.5),
+                        In::ScalarF32(0.7),
+                    ],
+                )
+                .unwrap();
+            let mut n = x.clone();
+            sampler::ddim_step(&mut n, &e_in, 0.5, 0.7);
+            (out, n)
+        }
+        ScheduleKind::RectifiedFlow => {
+            let out = exec
+                .run(
+                    &rt,
+                    &[],
+                    &[
+                        In::F32(&x, &[latent]),
+                        In::F32(&e_in, &[latent]),
+                        In::ScalarF32(0.02),
+                    ],
+                )
+                .unwrap();
+            let mut n = x.clone();
+            sampler::rf_step(&mut n, &e_in, 0.02);
+            (out, n)
+        }
+    };
+    let e = ErrorMetric::L2.eval(&out[0].data, &native);
+    assert!(e < 1e-5, "step kernel vs native: rel err {e}");
+    native.clear();
+}
+
+#[test]
+fn classifier_golden_parity() {
+    let Some(manifest) = manifest() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let cls = ClassifierRuntime::load(&rt, &manifest.classifier).unwrap();
+    let g = TensorFile::load(&manifest.classifier.goldens).unwrap();
+    let x = g.f32("cls_in").unwrap();
+    let expect_logits = g.f32("cls_logits").unwrap();
+    let expect_feats = g.f32("cls_feats").unwrap();
+    let n = x.shape[0];
+    for i in 0..n {
+        let (logits, feats) = cls.classify(1, x.row(i)).unwrap();
+        let e1 = ErrorMetric::L2.eval(&logits.data, expect_logits.row(i));
+        let e2 = ErrorMetric::L2.eval(&feats.data, expect_feats.row(i));
+        assert!(e1 < 1e-4 && e2 < 1e-4, "sample {i}: {e1} {e2}");
+    }
+}
+
+#[test]
+fn batched_execution_matches_single() {
+    // Padded/batched execution must be numerically identical per row to
+    // bucket-1 execution (what makes dynamic batching transparent).
+    let Some(manifest) = manifest() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let entry = manifest.models.values().next().unwrap();
+    let model = ModelRuntime::load(&rt, entry).unwrap();
+    let latent = entry.config.latent_dim;
+    let mut rng = speca::util::rng::Rng::new(99);
+    let rows: Vec<Vec<f32>> = (0..4).map(|_| rng.normal_f32s(latent)).collect();
+    let t: Vec<f32> = (0..4).map(|i| entry.schedule.t_model[i * 3]).collect();
+    let y: Vec<i32> = vec![0, 1, 2, 3];
+
+    let mut x4 = Vec::new();
+    for r in &rows {
+        x4.extend_from_slice(r);
+    }
+    let (eps4, bounds4) = model.full(4, &x4, &t, &y, false).unwrap();
+    for i in 0..4 {
+        let (eps1, bounds1) = model
+            .full(1, &rows[i], &t[i..i + 1], &y[i..i + 1], false)
+            .unwrap();
+        let e = ErrorMetric::L2.eval(eps4.row(i), &eps1.data);
+        assert!(e < 1e-4, "row {i}: eps rel err {e}");
+        // boundary slices: bounds4 is [L+1, 4, T, D]
+        let feat = entry.feat_len();
+        for b in 0..=entry.config.depth {
+            let off4 = (b * 4 + i) * feat;
+            let off1 = b * feat;
+            let e = ErrorMetric::L2.eval(
+                &bounds4.data[off4..off4 + feat],
+                &bounds1.data[off1..off1 + feat],
+            );
+            assert!(e < 1e-4, "row {i} boundary {b}: rel err {e}");
+        }
+    }
+}

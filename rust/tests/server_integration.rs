@@ -1,0 +1,91 @@
+//! Integration: TCP JSON-lines server end-to-end over localhost.
+//! The engine (not `Send`) runs on the test thread; a client thread
+//! drives generate/stats/shutdown.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::thread;
+use std::time::Duration;
+
+use speca::config::Manifest;
+use speca::coordinator::{Engine, EngineConfig};
+use speca::runtime::{ModelRuntime, Runtime};
+use speca::server::{serve, ServerConfig};
+use speca::util::json::Json;
+
+#[test]
+fn server_round_trip() {
+    let dir = speca::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    let manifest = Manifest::load(&dir).unwrap();
+    let entry = manifest.model("dit-sim").unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let model = ModelRuntime::load(&rt, entry).unwrap();
+    let mut engine = Engine::new(&model, EngineConfig::default());
+    let addr = "127.0.0.1:17433";
+    let cfg = ServerConfig { addr: addr.to_string(), max_queue: 64 };
+
+    let client = thread::spawn(move || {
+        // wait for the listener
+        let mut stream = None;
+        for _ in 0..100 {
+            match TcpStream::connect(addr) {
+                Ok(s) => {
+                    stream = Some(s);
+                    break;
+                }
+                Err(_) => thread::sleep(Duration::from_millis(50)),
+            }
+        }
+        let mut stream = stream.expect("server came up");
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+
+        // bad request → structured error
+        stream.write_all(b"{\"op\":\"generate\",\"policy\":\"bogus\"}\n").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let resp = Json::parse(&line).unwrap();
+        assert_eq!(resp.req("ok").as_bool(), Some(false));
+
+        // two generations with latents returned
+        let mut latents = Vec::new();
+        for seed in [1u64, 2u64] {
+            let req = format!(
+                "{{\"op\":\"generate\",\"cond\":2,\"seed\":{seed},\
+                 \"policy\":\"speca\",\"N\":5,\"tau0\":0.3,\"return_latent\":true}}\n"
+            );
+            stream.write_all(req.as_bytes()).unwrap();
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            let resp = Json::parse(&line).unwrap();
+            assert_eq!(resp.req("ok").as_bool(), Some(true), "{line}");
+            let stats = resp.req("stats");
+            assert!(stats.req("latency_ms").as_f64().unwrap() > 0.0);
+            assert!(stats.req("speedup").as_f64().unwrap() >= 1.0);
+            let latent = resp.req("latent").f32s();
+            assert!(!latent.is_empty());
+            assert!(latent.iter().all(|v| v.is_finite()));
+            latents.push(latent);
+        }
+        // distinct seeds → distinct outputs
+        assert_ne!(latents[0], latents[1]);
+
+        // stats op
+        stream.write_all(b"{\"op\":\"stats\"}\n").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let resp = Json::parse(&line).unwrap();
+        assert_eq!(resp.req("completed").as_u64(), Some(2));
+
+        stream.write_all(b"{\"op\":\"shutdown\"}\n").unwrap();
+        let mut line = String::new();
+        let _ = reader.read_line(&mut line);
+    });
+
+    let completed = serve(&mut engine, &cfg).unwrap();
+    client.join().unwrap();
+    assert_eq!(completed, 2);
+}
