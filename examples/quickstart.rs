@@ -1,22 +1,23 @@
-//! Quickstart: load the AOT artifacts, generate a few class-conditional
-//! samples with SpeCa, and print the acceptance/speedup statistics.
+//! Quickstart: build the zero-artifact native backend, generate a few
+//! class-conditional samples with SpeCa, and print the acceptance/speedup
+//! statistics. No `make artifacts` needed — swap in the PJRT backend
+//! (`--features pjrt` + Manifest/ModelRuntime) for artifact execution;
+//! the engine code is identical either way (DESIGN.md §3).
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example quickstart
+//! cargo run --release --example quickstart
 //! ```
 
 use anyhow::Result;
-use speca::config::Manifest;
+use speca::config::ModelConfig;
 use speca::coordinator::{Engine, EngineConfig};
-use speca::runtime::{ModelRuntime, Runtime};
+use speca::runtime::{ModelBackend, NativeBackend};
 use speca::workload::{batch_requests, parse_policy};
 
 fn main() -> Result<()> {
-    // 1. load the manifest + model weights, compile executables on PJRT CPU
-    let manifest = Manifest::load(&speca::artifacts_dir())?;
-    let entry = manifest.model("dit-sim")?;
-    let rt = Runtime::cpu()?;
-    let model = ModelRuntime::load(&rt, entry)?;
+    // 1. build a seeded native DiT (pure Rust, no artifacts, Send + Sync)
+    let model = NativeBackend::seeded(ModelConfig::native_dit(), 0x5EED);
+    let entry = model.entry();
 
     // 2. build an engine and submit 8 requests under the SpeCa policy
     let mut engine = Engine::new(&model, EngineConfig::default());

@@ -1,21 +1,241 @@
 //! Micro-benchmarks of the serving hot path (EXPERIMENTS.md §Perf source):
-//! per-entry PJRT execution latency across batch buckets, native vs PJRT
-//! draft prediction, pallas-vs-jnp full pass, batching strategies, and the
-//! L3 coordinator overhead split (engine tick time minus PJRT time).
+//! native-backend entry-point latency across batch buckets, L3 coordinator
+//! tick overhead at batch sizes 1/4/8 (measured against a zero-cost stub
+//! backend, so model time is excluded by construction), draft-prediction
+//! and cache-refresh costs, batching strategies end-to-end, and — when
+//! built with `--features pjrt` over compiled artifacts — the PJRT
+//! execution latencies, native-vs-PJRT draft prediction and the
+//! pallas-vs-jnp full pass.
 
 use speca::cache::{DraftKind, TapCache};
-use speca::config::Manifest;
+use speca::config::{ModelConfig, ModelEntry};
 use speca::coordinator::batcher::BatchStrategy;
 use speca::coordinator::{Engine, EngineConfig};
-use speca::runtime::{In, ModelRuntime, Runtime};
+use speca::runtime::native::{synthetic_entry, NativeArch};
+use speca::runtime::{ModelBackend, NativeBackend};
+use speca::tensor::Tensor;
 use speca::util::rng::Rng;
 use speca::util::timing::Bench;
 use speca::workload::{batch_requests, parse_policy};
 
+/// Zero-cost backend: every entry point returns zeros immediately, so an
+/// engine driving it measures pure coordinator overhead (planning, draft
+/// prediction, gathers, bookkeeping).
+struct StubBackend {
+    entry: ModelEntry,
+}
+
+impl StubBackend {
+    fn new() -> StubBackend {
+        StubBackend {
+            entry: synthetic_entry(&ModelConfig::native_test(), &NativeArch::default()),
+        }
+    }
+}
+
+impl ModelBackend for StubBackend {
+    fn entry(&self) -> &ModelEntry {
+        &self.entry
+    }
+
+    fn kind(&self) -> &'static str {
+        "stub"
+    }
+
+    fn supports(&self, entry_point: &str) -> bool {
+        matches!(entry_point, "full" | "full_eps" | "block" | "head")
+    }
+
+    fn warmup(&self, _e: &[&str], _b: &[usize]) -> anyhow::Result<()> {
+        Ok(())
+    }
+
+    fn full(
+        &self,
+        bucket: usize,
+        _x: &[f32],
+        _t: &[f32],
+        _y: &[i32],
+        _pallas: bool,
+    ) -> anyhow::Result<(Tensor, Tensor)> {
+        let c = &self.entry.config;
+        Ok((
+            Tensor::zeros(vec![bucket, c.latent_dim]),
+            Tensor::zeros(vec![c.depth + 1, bucket, c.tokens, c.dim]),
+        ))
+    }
+
+    fn full_eps(
+        &self,
+        bucket: usize,
+        _x: &[f32],
+        _t: &[f32],
+        _y: &[i32],
+    ) -> anyhow::Result<Tensor> {
+        Ok(Tensor::zeros(vec![bucket, self.entry.config.latent_dim]))
+    }
+
+    fn block(
+        &self,
+        bucket: usize,
+        _layer: i32,
+        _feat: &[f32],
+        _t: &[f32],
+        _y: &[i32],
+    ) -> anyhow::Result<Tensor> {
+        let c = &self.entry.config;
+        Ok(Tensor::zeros(vec![bucket, c.tokens, c.dim]))
+    }
+
+    fn head(&self, bucket: usize, _f: &[f32], _t: &[f32], _y: &[i32]) -> anyhow::Result<Tensor> {
+        Ok(Tensor::zeros(vec![bucket, self.entry.config.latent_dim]))
+    }
+}
+
+/// Steady-state tick benchmark: keep `b` requests in flight forever and
+/// time individual `tick()` calls (resubmission happens outside the timed
+/// closure's hot branch often enough to amortize to noise).
+fn bench_ticks(name: &str, model: &dyn ModelBackend, b: usize) {
+    let cfg = &model.entry().config;
+    let policy = parse_policy("speca:N=5,O=2,tau0=0.3,beta=0.05", cfg.depth).unwrap();
+    let mut engine = Engine::new(
+        model,
+        EngineConfig { max_inflight: b, ..EngineConfig::default() },
+    );
+    let mut seed = 0u64;
+    let r = Bench::new(name).min_time_ms(200).run(|| {
+        if engine.pending() == 0 {
+            seed += 1;
+            for req in batch_requests(b, cfg.num_classes, &policy, seed, false) {
+                engine.submit(req);
+            }
+        }
+        engine.tick().unwrap();
+        engine.drain_completions();
+    });
+    println!("{}", r.report());
+}
+
 fn main() -> anyhow::Result<()> {
+    let model = NativeBackend::seeded(ModelConfig::native_test(), 0xBEEF);
+    let entry = model.entry();
+    let cfg = entry.config.clone();
+    let latent = cfg.latent_dim;
+    let feat = cfg.tokens * cfg.dim;
+    let mut rng = Rng::new(0);
+
+    println!(
+        "== micro_runtime (native {}: dim={} depth={} tokens={}) ==",
+        cfg.name, cfg.dim, cfg.depth, cfg.tokens
+    );
+
+    // --- native execution latency per entry × bucket ----------------------
+    for entry_point in ["full", "block", "head"] {
+        for &b in &cfg.buckets {
+            let x = rng.normal_f32s(b * if entry_point == "full" { latent } else { feat });
+            let t: Vec<f32> = vec![entry.schedule.t_model[0]; b];
+            let y: Vec<i32> = vec![0; b];
+            let r = Bench::new(&format!("native/{entry_point}_b{b}"))
+                .min_time_ms(200)
+                .run(|| match entry_point {
+                    "full" => {
+                        model.full(b, &x, &t, &y, false).unwrap();
+                    }
+                    "block" => {
+                        model.block(b, (cfg.depth - 1) as i32, &x, &t, &y).unwrap();
+                    }
+                    _ => {
+                        model.head(b, &x, &t, &y).unwrap();
+                    }
+                });
+            println!("{}", r.report());
+        }
+    }
+
+    // --- verification cost ratio (measured wall-clock gamma) --------------
+    {
+        let x = rng.normal_f32s(latent);
+        let f = rng.normal_f32s(feat);
+        let t = vec![entry.schedule.t_model[0]];
+        let y = vec![0i32];
+        let full = Bench::new("gamma/full_b1").min_time_ms(200).run(|| {
+            model.full(1, &x, &t, &y, false).unwrap();
+        });
+        let block = Bench::new("gamma/block_b1").min_time_ms(200).run(|| {
+            model.block(1, (cfg.depth - 1) as i32, &f, &t, &y).unwrap();
+        });
+        println!(
+            "gamma: wall-clock block/full = {:.4} (analytic {:.4}, paper expects ~1/depth = {:.4})",
+            block.p50_ns / full.p50_ns,
+            entry.flops.block[&1] as f64 / entry.flops.full_step[&1] as f64,
+            1.0 / cfg.depth as f64
+        );
+    }
+
+    // --- L3 coordinator overhead: tick time at batch sizes 1/4/8 ----------
+    // Stub backend ⇒ model time is zero, so this is the pure per-tick cost
+    // of planning + draft prediction + scratch gathers + bookkeeping.
+    let stub = StubBackend::new();
+    for b in [1usize, 4, 8] {
+        bench_ticks(&format!("engine/tick_overhead_b{b}_stub"), &stub, b);
+    }
+    // Same loop against the real native model for scale.
+    for b in [1usize, 4, 8] {
+        bench_ticks(&format!("engine/tick_b{b}_native"), &model, b);
+    }
+
+    // --- draft prediction + cache refresh (native hot path) ---------------
+    {
+        let mut cache = TapCache::new(2, feat, 5);
+        for s in 0..3u64 {
+            let mut r2 = Rng::new(s);
+            cache.refresh(&r2.normal_f32s(feat));
+        }
+        let mut out = vec![0f32; feat];
+        let native = Bench::new("predict/native_o2").min_time_ms(200).run(|| {
+            cache.predict_into(3.0, DraftKind::Taylor, &mut out);
+        });
+        println!("{}", native.report());
+        let f = rng.normal_f32s(feat);
+        let r = Bench::new("cache/refresh_o2").min_time_ms(200).run(|| {
+            cache.refresh(&f);
+        });
+        println!("{}", r.report());
+    }
+
+    // --- batching strategies end-to-end ------------------------------------
+    for (name, strategy) in [("binary", BatchStrategy::Binary), ("padup", BatchStrategy::PadUp)] {
+        let policy = parse_policy("speca:N=5,O=2,tau0=0.3,beta=0.05", cfg.depth)?;
+        let r = Bench::new(&format!("engine/6req_speca_{name}"))
+            .min_time_ms(300)
+            .warmup(1)
+            .run(|| {
+                let mut engine = Engine::new(
+                    &model,
+                    EngineConfig { max_inflight: 6, strategy, use_pallas: false },
+                );
+                for req in batch_requests(6, cfg.num_classes, &policy, 1, false) {
+                    engine.submit(req);
+                }
+                engine.run_to_completion().unwrap();
+            });
+        println!("{}", r.report());
+    }
+
+    #[cfg(feature = "pjrt")]
+    pjrt_benches()?;
+    Ok(())
+}
+
+/// PJRT-vs-native comparisons; requires `make artifacts`.
+#[cfg(feature = "pjrt")]
+fn pjrt_benches() -> anyhow::Result<()> {
+    use speca::config::Manifest;
+    use speca::runtime::{In, ModelRuntime, Runtime};
+
     let dir = speca::artifacts_dir();
     if !dir.join("manifest.json").exists() {
-        eprintln!("SKIP: artifacts not built");
+        eprintln!("SKIP pjrt benches: artifacts not built");
         return Ok(());
     }
     let manifest = Manifest::load(&dir)?;
@@ -27,7 +247,10 @@ fn main() -> anyhow::Result<()> {
     let feat = cfg.tokens * cfg.dim;
     let mut rng = Rng::new(0);
 
-    println!("== micro_runtime (dit-sim: dim={} depth={} tokens={}) ==", cfg.dim, cfg.depth, cfg.tokens);
+    println!(
+        "== pjrt (dit-sim: dim={} depth={} tokens={}) ==",
+        cfg.dim, cfg.depth, cfg.tokens
+    );
 
     // --- PJRT execution latency per entry × bucket ------------------------
     for entry_point in ["full", "block", "head"] {
@@ -38,38 +261,19 @@ fn main() -> anyhow::Result<()> {
             let r = Bench::new(&format!("pjrt/{entry_point}_b{b}")).min_time_ms(300).run(|| {
                 match entry_point {
                     "full" => {
-                        model.full(b, &x, &t, &y, false).unwrap();
+                        ModelRuntime::full(&model, b, &x, &t, &y, false).unwrap();
                     }
                     "block" => {
-                        model.block(b, (cfg.depth - 1) as i32, &x, &t, &y).unwrap();
+                        ModelRuntime::block(&model, b, (cfg.depth - 1) as i32, &x, &t, &y)
+                            .unwrap();
                     }
                     _ => {
-                        model.head(b, &x, &t, &y).unwrap();
+                        ModelRuntime::head(&model, b, &x, &t, &y).unwrap();
                     }
                 }
             });
             println!("{}", r.report());
         }
-    }
-
-    // --- verification cost ratio (measured wall-clock gamma) -------------
-    {
-        let x = rng.normal_f32s(latent);
-        let f = rng.normal_f32s(feat);
-        let t = vec![entry.schedule.t_model[0]];
-        let y = vec![0i32];
-        let full = Bench::new("gamma/full_b1").min_time_ms(300).run(|| {
-            model.full(1, &x, &t, &y, false).unwrap();
-        });
-        let block = Bench::new("gamma/block_b1").min_time_ms(300).run(|| {
-            model.block(1, (cfg.depth - 1) as i32, &f, &t, &y).unwrap();
-        });
-        println!(
-            "gamma: wall-clock block/full = {:.4} (analytic {:.4}, paper expects ~1/depth = {:.4})",
-            block.p50_ns / full.p50_ns,
-            entry.flops.block[&1] as f64 / entry.flops.full_step[&1] as f64,
-            1.0 / cfg.depth as f64
-        );
     }
 
     // --- draft prediction: native rust vs PJRT pallas kernel -------------
@@ -106,46 +310,17 @@ fn main() -> anyhow::Result<()> {
         let t = vec![entry.schedule.t_model[0]];
         let y = vec![0i32];
         let jnp = Bench::new("full/jnp_attention_b1").min_time_ms(300).run(|| {
-            model.full(1, &x, &t, &y, false).unwrap();
+            ModelRuntime::full(&model, 1, &x, &t, &y, false).unwrap();
         });
         println!("{}", jnp.report());
         let pal = Bench::new("full/pallas_interpret_b1").min_time_ms(300).run(|| {
-            model.full(1, &x, &t, &y, true).unwrap();
+            ModelRuntime::full(&model, 1, &x, &t, &y, true).unwrap();
         });
         println!("{}", pal.report());
         println!(
             "pallas interpret-mode overhead: {:.2}x (CPU-only artifact; Mosaic on TPU inverts this)",
             pal.p50_ns / jnp.p50_ns
         );
-    }
-
-    // --- batching strategies end-to-end -----------------------------------
-    for (name, strategy) in [("binary", BatchStrategy::Binary), ("padup", BatchStrategy::PadUp)] {
-        let policy = parse_policy("speca:N=5,O=2,tau0=0.3,beta=0.05", cfg.depth)?;
-        let r = Bench::new(&format!("engine/6req_speca_{name}"))
-            .min_time_ms(400)
-            .warmup(1)
-            .run(|| {
-                let mut engine = Engine::new(
-                    &model,
-                    EngineConfig { max_inflight: 6, strategy, use_pallas: false },
-                );
-                for req in batch_requests(6, cfg.num_classes, &policy, 1, false) {
-                    engine.submit(req);
-                }
-                engine.run_to_completion().unwrap();
-            });
-        println!("{}", r.report());
-    }
-
-    // --- coordinator overhead: cache refresh + predict per tick ----------
-    {
-        let mut cache = TapCache::new(2, feat, 5);
-        let f = rng.normal_f32s(feat);
-        let r = Bench::new("cache/refresh_o2").min_time_ms(200).run(|| {
-            cache.refresh(&f);
-        });
-        println!("{}", r.report());
     }
     Ok(())
 }

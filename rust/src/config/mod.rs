@@ -235,6 +235,67 @@ impl Manifest {
     }
 }
 
+impl ModelConfig {
+    /// Shared plumbing for the native-backend presets: token/latent counts
+    /// derived from the image geometry, standard buckets.
+    fn native(
+        name: &str,
+        image_size: usize,
+        patch: usize,
+        dim: usize,
+        depth: usize,
+        heads: usize,
+        num_classes: usize,
+        frames: usize,
+        schedule_kind: ScheduleKind,
+        serve_steps: usize,
+    ) -> ModelConfig {
+        let channels = 1;
+        let per_frame = (image_size / patch) * (image_size / patch);
+        ModelConfig {
+            name: name.to_string(),
+            image_size,
+            channels,
+            patch,
+            dim,
+            depth,
+            heads,
+            num_classes,
+            frames,
+            schedule_kind,
+            serve_steps,
+            tokens: frames * per_frame,
+            latent_dim: frames * channels * image_size * image_size,
+            buckets: vec![1, 2, 4, 8],
+        }
+    }
+
+    /// Class-conditional image DiT on DDIM (paper Table 3 analog). Sized
+    /// for interactive CPU serving with the zero-artifact native backend;
+    /// the AOT manifest configs in python/compile/configs.py stay the
+    /// source of truth for the PJRT path.
+    pub fn native_dit() -> ModelConfig {
+        Self::native("dit-sim", 16, 2, 64, 6, 4, 8, 1, ScheduleKind::Ddim, 50)
+    }
+
+    /// "Text"-conditional rectified-flow DiT (paper Table 1 analog).
+    pub fn native_flux() -> ModelConfig {
+        Self::native("flux-sim", 16, 2, 48, 4, 4, 32, 1, ScheduleKind::RectifiedFlow, 28)
+    }
+
+    /// Two-frame video DiT, rectified flow (paper Table 2 analog).
+    pub fn native_video() -> ModelConfig {
+        Self::native("video-sim", 16, 2, 48, 4, 4, 16, 2, ScheduleKind::RectifiedFlow, 16)
+    }
+
+    /// Deliberately tiny model for the integration tests: big enough for
+    /// nontrivial feature dynamics, small enough that a debug-profile
+    /// `cargo test` stays fast.
+    pub fn native_test() -> ModelConfig {
+        Self::native("native-test", 8, 2, 24, 3, 4, 4, 1, ScheduleKind::Ddim, 12)
+    }
+}
+
 impl ModelEntry {
     /// Smallest compiled bucket that fits `n` requests.
     pub fn bucket_for(&self, n: usize) -> usize {

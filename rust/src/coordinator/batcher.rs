@@ -72,27 +72,37 @@ pub fn plan_chunks(n_items: usize, buckets: &[usize], strategy: BatchStrategy) -
     chunks
 }
 
-/// Gather per-member rows into a padded flat buffer of `bucket` rows.
-/// Pads by replicating the first member's row (outputs past `used()` are
-/// discarded by the caller).
-pub fn gather_rows<F: Fn(usize, &mut [f32])>(
+/// Gather per-member rows into a padded flat buffer of `bucket` rows,
+/// reusing `buf`'s capacity (the engine keeps one scratch buffer per
+/// input kind, so the large gathers stop allocating once warmed up —
+/// EXPERIMENTS.md §Perf). Pads by replicating the first member's row
+/// (outputs past `used()` are discarded by the caller).
+pub fn gather_rows_into<F: Fn(usize, &mut [f32])>(
+    buf: &mut Vec<f32>,
     chunk: &Chunk,
     row_len: usize,
     fill: F,
-) -> Vec<f32> {
-    let mut buf = vec![0.0f32; chunk.bucket * row_len];
+) {
+    buf.clear();
+    buf.resize(chunk.bucket * row_len, 0.0);
     for (slot, m) in chunk.members.iter().enumerate() {
         let (dst, _) = buf[slot * row_len..].split_at_mut(row_len);
         fill(*m, dst);
     }
-    // replicate member 0 into padding slots
-    if chunk.padding() > 0 && !chunk.members.is_empty() {
-        let proto = buf[..row_len].to_vec();
-        for slot in chunk.used()..chunk.bucket {
-            buf[slot * row_len..(slot + 1) * row_len].copy_from_slice(&proto);
-        }
+    pad_rows(buf, chunk.used(), chunk.bucket, row_len);
+}
+
+/// Replicate row 0 of `buf` into the padding slots `used..bucket` (the
+/// shared padding policy for every dispatch kind).
+pub fn pad_rows(buf: &mut [f32], used: usize, bucket: usize, row_len: usize) {
+    if used == 0 || used >= bucket {
+        return;
     }
-    buf
+    let (proto, rest) = buf.split_at_mut(row_len);
+    for slot in used..bucket {
+        let off = (slot - 1) * row_len;
+        rest[off..off + row_len].copy_from_slice(proto);
+    }
 }
 
 #[cfg(test)]
@@ -134,11 +144,26 @@ mod tests {
     #[test]
     fn gather_pads_with_first_member() {
         let chunk = Chunk { bucket: 4, members: vec![10, 11] };
-        let buf = gather_rows(&chunk, 2, |m, dst| {
+        let mut buf = Vec::new();
+        gather_rows_into(&mut buf, &chunk, 2, |m, dst| {
             dst[0] = m as f32;
             dst[1] = m as f32 + 0.5;
         });
         assert_eq!(buf, vec![10.0, 10.5, 11.0, 11.5, 10.0, 10.5, 10.0, 10.5]);
+    }
+
+    #[test]
+    fn gather_into_reuses_buffer_across_sizes() {
+        let mut buf = Vec::new();
+        let big = Chunk { bucket: 4, members: vec![0, 1, 2] };
+        gather_rows_into(&mut buf, &big, 3, |m, dst| dst.fill(m as f32));
+        assert_eq!(buf.len(), 12);
+        assert_eq!(&buf[9..12], &[0.0, 0.0, 0.0]); // padded with member 0
+        let cap = buf.capacity();
+        let small = Chunk { bucket: 2, members: vec![5, 6] };
+        gather_rows_into(&mut buf, &small, 3, |m, dst| dst.fill(m as f32));
+        assert_eq!(buf, vec![5.0, 5.0, 5.0, 6.0, 6.0, 6.0]);
+        assert_eq!(buf.capacity(), cap, "no reallocation on shrink");
     }
 
     /// Property: every member appears exactly once, in order, regardless of

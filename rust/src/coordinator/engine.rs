@@ -17,18 +17,26 @@
 //! Different policies coexist in one engine; batches group by phase (and
 //! verify layer), not by policy — this is what enables the paper's
 //! sample-adaptive computation allocation to emerge per request.
+//!
+//! The engine is written against `&dyn ModelBackend` (DESIGN.md §3), so
+//! the same scheduling loop drives the native CPU backend, PJRT artifacts,
+//! and whatever backends later PRs add. Batch staging (the large
+//! latent/feature gather buffers) goes through reusable scratch buffers,
+//! so steady-state ticks avoid the dominant per-tick allocations; small
+//! index bookkeeping (chunk plans, member lists) still allocates —
+//! EXPERIMENTS.md §Perf quantifies the residual overhead.
 
 use std::collections::VecDeque;
 
 use anyhow::Result;
 
 use crate::cache::DraftKind;
-use crate::config::ScheduleKind;
-use crate::coordinator::batcher::{gather_rows, plan_chunks, BatchStrategy};
+use crate::config::{Schedule, ScheduleKind};
+use crate::coordinator::batcher::{gather_rows_into, pad_rows, plan_chunks, BatchStrategy, Chunk};
 use crate::coordinator::policy::{Plan, Policy};
 use crate::coordinator::state::{Completion, ReqState, RequestSpec};
 use crate::metrics::flops::{FlopsCounter, FlopsModel};
-use crate::runtime::ModelRuntime;
+use crate::runtime::ModelBackend;
 use crate::sampler;
 use crate::util::rng::Rng;
 
@@ -37,6 +45,7 @@ pub struct EngineConfig {
     pub max_inflight: usize,
     pub strategy: BatchStrategy,
     /// execute the pallas-attention artifact variant for full passes
+    /// (backends without one fall back to their default attention path)
     pub use_pallas: bool,
 }
 
@@ -46,8 +55,24 @@ impl Default for EngineConfig {
     }
 }
 
-pub struct Engine<'rt> {
-    pub model: &'rt ModelRuntime<'rt>,
+/// Reusable batch-staging buffers. Capacity persists across ticks, so the
+/// per-chunk gathers are pure copies after warmup.
+#[derive(Default)]
+struct Scratch {
+    /// latent rows for full passes
+    x: Vec<f32>,
+    /// feature rows for verify/head dispatches
+    feat: Vec<f32>,
+    /// timestep row
+    t: Vec<f32>,
+    /// condition row
+    y: Vec<i32>,
+    /// token-blended head inputs (ToCa/DuCa-sim)
+    blend: Vec<f32>,
+}
+
+pub struct Engine<'a> {
+    pub model: &'a dyn ModelBackend,
     flops_model: FlopsModel,
     cfg: EngineConfig,
     queue: VecDeque<RequestSpec>,
@@ -58,11 +83,12 @@ pub struct Engine<'rt> {
     pub ticks: u64,
     /// TeaCache drift signal dimension (heuristic, engine-local)
     temb_dim: usize,
+    scratch: Scratch,
 }
 
-impl<'rt> Engine<'rt> {
-    pub fn new(model: &'rt ModelRuntime<'rt>, cfg: EngineConfig) -> Engine<'rt> {
-        let flops_model = FlopsModel::new(model.entry.flops.clone());
+impl<'a> Engine<'a> {
+    pub fn new(model: &'a dyn ModelBackend, cfg: EngineConfig) -> Engine<'a> {
+        let flops_model = FlopsModel::new(model.entry().flops.clone());
         Engine {
             model,
             flops_model,
@@ -73,6 +99,7 @@ impl<'rt> Engine<'rt> {
             flops: FlopsCounter::default(),
             ticks: 0,
             temb_dim: 64,
+            scratch: Scratch::default(),
         }
     }
 
@@ -95,11 +122,12 @@ impl<'rt> Engine<'rt> {
     }
 
     fn total_steps(&self) -> usize {
-        self.model.entry.config.serve_steps
+        self.model.entry().config.serve_steps
     }
 
     fn admit(&mut self) {
-        let cfg = &self.model.entry.config;
+        let model = self.model;
+        let cfg = &model.entry().config;
         while self.active.len() < self.cfg.max_inflight {
             let Some(spec) = self.queue.pop_front() else { break };
             let mut rng = Rng::new(spec.seed);
@@ -117,19 +145,21 @@ impl<'rt> Engine<'rt> {
             return Ok(false);
         }
         self.ticks += 1;
+        let model = self.model;
         let total = self.total_steps();
 
         // --- update TeaCache drift accumulators, then plan ---------------
+        let temb_dim = self.temb_dim;
         for st in self.active.iter_mut() {
             if let Policy::TeaCache { .. } = st.spec.policy {
                 if st.step > 0 {
                     let cur = timestep_embedding(
-                        self.model.entry.schedule.t_model[st.step],
-                        self.temb_dim,
+                        model.entry().schedule.t_model[st.step],
+                        temb_dim,
                     );
                     let prev = timestep_embedding(
-                        self.model.entry.schedule.t_model[st.step - 1],
-                        self.temb_dim,
+                        model.entry().schedule.t_model[st.step - 1],
+                        temb_dim,
                     );
                     st.tea_accum += rel_l1(&cur, &prev);
                 }
@@ -170,7 +200,7 @@ impl<'rt> Engine<'rt> {
         // --- speculative phase: draft predictions ------------------------
         for &i in spec_verify.iter().chain(spec_direct.iter()) {
             let v = self.verify_layer_of(i);
-            let depth = self.model.entry.config.depth;
+            let depth = model.entry().config.depth;
             let st = &mut self.active[i];
             let k = st.cache.k_for_step(st.step).expect("cache ready");
             let draft = match &st.spec.policy {
@@ -218,10 +248,9 @@ impl<'rt> Engine<'rt> {
 
         // --- skips --------------------------------------------------------
         for &i in &skip {
-            let total = self.total_steps();
             let st = &mut self.active[i];
             let eps = std::mem::take(&mut st.last_eps);
-            Self::apply_model_out(&self.model.entry.schedule, st, &eps, total);
+            Self::apply_model_out(&model.entry().schedule, st, &eps, total);
             st.last_eps = eps;
             self.flops_model.book_spec_step(&mut st.stats.flops, 1);
             st.stats.skip_steps += 1;
@@ -256,8 +285,8 @@ impl<'rt> Engine<'rt> {
 
     fn verify_layer_of(&self, i: usize) -> usize {
         match &self.active[i].spec.policy {
-            Policy::SpeCa(c) => c.verify_layer.min(self.model.entry.config.depth - 1),
-            _ => self.model.entry.config.depth - 1,
+            Policy::SpeCa(c) => c.verify_layer.min(self.model.entry().config.depth - 1),
+            _ => self.model.entry().config.depth - 1,
         }
     }
 
@@ -277,7 +306,7 @@ impl<'rt> Engine<'rt> {
 
     /// Denoising update honoring step-reduction jumps.
     fn apply_model_out(
-        schedule: &crate::config::Schedule,
+        schedule: &Schedule,
         st: &mut ReqState,
         model_out: &[f32],
         total: usize,
@@ -300,18 +329,36 @@ impl<'rt> Engine<'rt> {
         }
     }
 
+    /// Gather (t, y) rows for a chunk into the scratch buffers.
+    fn gather_ty(&mut self, chunk: &Chunk, idxs: &[usize]) {
+        let model = self.model;
+        let sched = &model.entry().schedule;
+        let Engine { active, scratch, .. } = self;
+        scratch.t.clear();
+        scratch.t.resize(chunk.bucket, 0.0);
+        scratch.y.clear();
+        scratch.y.resize(chunk.bucket, 0);
+        for (slot, m) in chunk.members.iter().enumerate() {
+            let st = &active[idxs[*m]];
+            scratch.t[slot] = sched.t_model[st.step];
+            scratch.y[slot] = st.spec.cond;
+        }
+        // padding replicates slot 0
+        for slot in chunk.used()..chunk.bucket {
+            scratch.t[slot] = scratch.t[0];
+            scratch.y[slot] = scratch.y[0];
+        }
+    }
+
     /// Execute full forward passes for `idxs`, refresh caches, advance.
     /// Requests that never read the feature cache take the eps-only
-    /// artifact (no boundary-stack transfer — EXPERIMENTS.md §Perf).
+    /// entry point (no boundary-stack transfer — EXPERIMENTS.md §Perf).
     fn run_full(&mut self, idxs: &[usize]) -> Result<()> {
         if idxs.is_empty() {
             return Ok(());
         }
-        let has_light = self
-            .model
-            .entry
-            .artifacts
-            .contains_key("full_eps");
+        let model = self.model;
+        let has_light = model.supports("full_eps");
         let (heavy, light): (Vec<usize>, Vec<usize>) = idxs.iter().partition(|&&i| {
             let st = &self.active[i];
             !has_light
@@ -324,19 +371,28 @@ impl<'rt> Engine<'rt> {
         if idxs.is_empty() {
             return Ok(());
         }
-        let cfg = self.model.entry.config.clone();
-        let buckets = cfg.buckets.clone();
+        let entry = model.entry();
+        let cfg = &entry.config;
         let latent = cfg.latent_dim;
         let feat = cfg.tokens * cfg.dim;
+        let depth = cfg.depth;
         let total = self.total_steps();
-        for chunk in plan_chunks(idxs.len(), &buckets, self.cfg.strategy) {
+        for chunk in plan_chunks(idxs.len(), &cfg.buckets, self.cfg.strategy) {
             let members: Vec<usize> = chunk.members.iter().map(|m| idxs[*m]).collect();
-            let x = gather_rows(&chunk, latent, |m, dst| {
-                dst.copy_from_slice(&self.active[idxs[m]].x)
-            });
-            let (t, y) = self.gather_ty(&chunk, idxs);
-            let (eps, bounds) =
-                self.model.full(chunk.bucket, &x, &t, &y, self.cfg.use_pallas)?;
+            self.gather_ty(&chunk, idxs);
+            {
+                let Engine { active, scratch, .. } = &mut *self;
+                gather_rows_into(&mut scratch.x, &chunk, latent, |m, dst| {
+                    dst.copy_from_slice(&active[idxs[m]].x)
+                });
+            }
+            let (eps, bounds) = model.full(
+                chunk.bucket,
+                &self.scratch.x,
+                &self.scratch.t,
+                &self.scratch.y,
+                self.cfg.use_pallas,
+            )?;
             // bounds: [L+1, bucket, T, D]
             for (slot, &ri) in members.iter().enumerate() {
                 let st = &mut self.active[ri];
@@ -354,16 +410,18 @@ impl<'rt> Engine<'rt> {
                 }
                 // blend policies cache the last boundary
                 if st.spec.policy.reuse_frac() > 0.0 {
-                    let off = (cfg.depth * chunk.bucket + slot) * feat;
-                    st.blend_feat = bounds.data[off..off + feat].to_vec();
+                    let off = (depth * chunk.bucket + slot) * feat;
+                    st.blend_feat.clear();
+                    st.blend_feat.extend_from_slice(&bounds.data[off..off + feat]);
                 }
                 if st.spec.record_traj {
-                    let off = (cfg.depth * chunk.bucket + slot) * feat;
+                    let off = (depth * chunk.bucket + slot) * feat;
                     st.traj.push(bounds.data[off..off + feat].to_vec());
                 }
-                st.last_eps = eps_row.to_vec();
+                st.last_eps.clear();
+                st.last_eps.extend_from_slice(eps_row);
                 st.tea_accum = 0.0;
-                Self::apply_model_out(&self.model.entry.schedule, st, eps_row, total);
+                Self::apply_model_out(&entry.schedule, st, eps_row, total);
                 self.flops_model.book_full(&mut st.stats.flops, chunk.bucket, 1);
                 st.stats.full_steps += 1;
                 st.step += 1;
@@ -378,21 +436,32 @@ impl<'rt> Engine<'rt> {
         if idxs.is_empty() {
             return Ok(());
         }
-        let cfg = self.model.entry.config.clone();
+        let model = self.model;
+        let entry = model.entry();
+        let latent = entry.config.latent_dim;
         let total = self.total_steps();
-        for chunk in plan_chunks(idxs.len(), &cfg.buckets, self.cfg.strategy) {
+        for chunk in plan_chunks(idxs.len(), &entry.config.buckets, self.cfg.strategy) {
             let members: Vec<usize> = chunk.members.iter().map(|m| idxs[*m]).collect();
-            let x = gather_rows(&chunk, cfg.latent_dim, |m, dst| {
-                dst.copy_from_slice(&self.active[idxs[m]].x)
-            });
-            let (t, y) = self.gather_ty(&chunk, idxs);
-            let eps = self.model.full_eps(chunk.bucket, &x, &t, &y)?;
+            self.gather_ty(&chunk, idxs);
+            {
+                let Engine { active, scratch, .. } = &mut *self;
+                gather_rows_into(&mut scratch.x, &chunk, latent, |m, dst| {
+                    dst.copy_from_slice(&active[idxs[m]].x)
+                });
+            }
+            let eps = model.full_eps(
+                chunk.bucket,
+                &self.scratch.x,
+                &self.scratch.t,
+                &self.scratch.y,
+            )?;
             for (slot, &ri) in members.iter().enumerate() {
                 let st = &mut self.active[ri];
                 let eps_row = eps.row(slot);
-                st.last_eps = eps_row.to_vec();
+                st.last_eps.clear();
+                st.last_eps.extend_from_slice(eps_row);
                 st.tea_accum = 0.0;
-                Self::apply_model_out(&self.model.entry.schedule, st, eps_row, total);
+                Self::apply_model_out(&entry.schedule, st, eps_row, total);
                 self.flops_model.book_full(&mut st.stats.flops, chunk.bucket, 1);
                 st.stats.full_steps += 1;
                 st.step += 1;
@@ -411,16 +480,26 @@ impl<'rt> Engine<'rt> {
         accepted: &mut Vec<usize>,
         rejected: &mut Vec<usize>,
     ) -> Result<()> {
-        let buckets = self.model.entry.config.buckets.clone();
-        let feat = self.model.entry.feat_len();
+        let model = self.model;
+        let entry = model.entry();
+        let feat = entry.feat_len();
         let total = self.total_steps();
-        for chunk in plan_chunks(idxs.len(), &buckets, self.cfg.strategy) {
+        for chunk in plan_chunks(idxs.len(), &entry.config.buckets, self.cfg.strategy) {
             let members: Vec<usize> = chunk.members.iter().map(|m| idxs[*m]).collect();
-            let fin = gather_rows(&chunk, feat, |m, dst| {
-                dst.copy_from_slice(&self.active[idxs[m]].pred_vin)
-            });
-            let (t, y) = self.gather_ty(&chunk, idxs);
-            let actual = self.model.block(chunk.bucket, layer as i32, &fin, &t, &y)?;
+            self.gather_ty(&chunk, idxs);
+            {
+                let Engine { active, scratch, .. } = &mut *self;
+                gather_rows_into(&mut scratch.feat, &chunk, feat, |m, dst| {
+                    dst.copy_from_slice(&active[idxs[m]].pred_vin)
+                });
+            }
+            let actual = model.block(
+                chunk.bucket,
+                layer as i32,
+                &self.scratch.feat,
+                &self.scratch.t,
+                &self.scratch.y,
+            )?;
             for (slot, &ri) in members.iter().enumerate() {
                 let st = &mut self.active[ri];
                 let Policy::SpeCa(c) = &st.spec.policy else { unreachable!() };
@@ -444,24 +523,34 @@ impl<'rt> Engine<'rt> {
         if idxs.is_empty() {
             return Ok(());
         }
-        let buckets = self.model.entry.config.buckets.clone();
-        let feat = self.model.entry.feat_len();
+        let model = self.model;
+        let entry = model.entry();
+        let feat = entry.feat_len();
         let total = self.total_steps();
-        for chunk in plan_chunks(idxs.len(), &buckets, self.cfg.strategy) {
+        for chunk in plan_chunks(idxs.len(), &entry.config.buckets, self.cfg.strategy) {
             let members: Vec<usize> = chunk.members.iter().map(|m| idxs[*m]).collect();
-            let fin = gather_rows(&chunk, feat, |m, dst| {
-                dst.copy_from_slice(&self.active[idxs[m]].pred_last)
-            });
-            let (t, y) = self.gather_ty(&chunk, idxs);
-            let eps = self.model.head(chunk.bucket, &fin, &t, &y)?;
+            self.gather_ty(&chunk, idxs);
+            {
+                let Engine { active, scratch, .. } = &mut *self;
+                gather_rows_into(&mut scratch.feat, &chunk, feat, |m, dst| {
+                    dst.copy_from_slice(&active[idxs[m]].pred_last)
+                });
+            }
+            let eps = model.head(
+                chunk.bucket,
+                &self.scratch.feat,
+                &self.scratch.t,
+                &self.scratch.y,
+            )?;
             for (slot, &ri) in members.iter().enumerate() {
                 let st = &mut self.active[ri];
                 let eps_row = eps.row(slot);
                 if st.spec.record_traj {
                     st.traj.push(st.pred_last.clone());
                 }
-                st.last_eps = eps_row.to_vec();
-                Self::apply_model_out(&self.model.entry.schedule, st, eps_row, total);
+                st.last_eps.clear();
+                st.last_eps.extend_from_slice(eps_row);
+                Self::apply_model_out(&entry.schedule, st, eps_row, total);
                 self.flops_model.book_head(&mut st.stats.flops, chunk.bucket, 1);
                 self.flops_model.book_spec_step(&mut st.stats.flops, 1);
                 st.stats.spec_steps += 1;
@@ -479,47 +568,72 @@ impl<'rt> Engine<'rt> {
         if idxs.is_empty() {
             return Ok(());
         }
-        let cfg = self.model.entry.config.clone();
-        let buckets = cfg.buckets.clone();
+        let model = self.model;
+        let entry = model.entry();
+        let cfg = &entry.config;
         let latent = cfg.latent_dim;
         let feat = cfg.tokens * cfg.dim;
+        let depth = cfg.depth;
+        let tokens = cfg.tokens;
+        let tok_len = cfg.dim;
         let total = self.total_steps();
-        for chunk in plan_chunks(idxs.len(), &buckets, self.cfg.strategy) {
+        for chunk in plan_chunks(idxs.len(), &cfg.buckets, self.cfg.strategy) {
             let members: Vec<usize> = chunk.members.iter().map(|m| idxs[*m]).collect();
-            let x = gather_rows(&chunk, latent, |m, dst| {
-                dst.copy_from_slice(&self.active[idxs[m]].x)
-            });
-            let (t, y) = self.gather_ty(&chunk, idxs);
-            let (_eps, bounds) = self.model.full(chunk.bucket, &x, &t, &y, false)?;
-            // blend per request, then head over the blended features
-            let mut blended = vec![0.0f32; chunk.bucket * feat];
-            for (slot, &ri) in members.iter().enumerate() {
-                let st = &self.active[ri];
-                let frac = st.spec.policy.reuse_frac();
-                let off = (cfg.depth * chunk.bucket + slot) * feat;
-                let fresh = &bounds.data[off..off + feat];
-                let dst = &mut blended[slot * feat..(slot + 1) * feat];
-                let tok_len = cfg.dim;
-                for tok in 0..cfg.tokens {
-                    let reuse = tok_hash(tok, st.step) < frac && !st.blend_feat.is_empty();
-                    let src = if reuse { &st.blend_feat } else { fresh };
-                    dst[tok * tok_len..(tok + 1) * tok_len]
-                        .copy_from_slice(&src[tok * tok_len..(tok + 1) * tok_len]);
-                }
+            self.gather_ty(&chunk, idxs);
+            {
+                let Engine { active, scratch, .. } = &mut *self;
+                gather_rows_into(&mut scratch.x, &chunk, latent, |m, dst| {
+                    dst.copy_from_slice(&active[idxs[m]].x)
+                });
             }
-            let eps = self.model.head(chunk.bucket, &blended, &t, &y)?;
+            let (_eps, bounds) = model.full(
+                chunk.bucket,
+                &self.scratch.x,
+                &self.scratch.t,
+                &self.scratch.y,
+                false,
+            )?;
+            // blend per request, then head over the blended features
+            {
+                let Engine { active, scratch, .. } = &mut *self;
+                scratch.blend.clear();
+                scratch.blend.resize(chunk.bucket * feat, 0.0);
+                for (slot, &ri) in members.iter().enumerate() {
+                    let st = &active[ri];
+                    let frac = st.spec.policy.reuse_frac();
+                    let off = (depth * chunk.bucket + slot) * feat;
+                    let fresh = &bounds.data[off..off + feat];
+                    let dst = &mut scratch.blend[slot * feat..(slot + 1) * feat];
+                    for tok in 0..tokens {
+                        let reuse =
+                            tok_hash(tok, st.step) < frac && !st.blend_feat.is_empty();
+                        let src = if reuse { &st.blend_feat } else { fresh };
+                        dst[tok * tok_len..(tok + 1) * tok_len]
+                            .copy_from_slice(&src[tok * tok_len..(tok + 1) * tok_len]);
+                    }
+                }
+                // padding rows replicate slot 0 so every row is well-formed
+                pad_rows(&mut scratch.blend, chunk.used(), chunk.bucket, feat);
+            }
+            let eps = model.head(
+                chunk.bucket,
+                &self.scratch.blend,
+                &self.scratch.t,
+                &self.scratch.y,
+            )?;
+            let full_per = self.flops_model.table.full_step.get(&1).copied().unwrap_or(0);
             for (slot, &ri) in members.iter().enumerate() {
                 let st = &mut self.active[ri];
                 let frac = st.spec.policy.reuse_frac();
                 let eps_row = eps.row(slot);
-                st.last_eps = eps_row.to_vec();
+                st.last_eps.clear();
+                st.last_eps.extend_from_slice(eps_row);
                 if st.spec.record_traj {
                     st.traj
-                        .push(blended[slot * feat..(slot + 1) * feat].to_vec());
+                        .push(self.scratch.blend[slot * feat..(slot + 1) * feat].to_vec());
                 }
-                Self::apply_model_out(&self.model.entry.schedule, st, eps_row, total);
+                Self::apply_model_out(&entry.schedule, st, eps_row, total);
                 // simulated cost: (1−R) of a full pass + the head
-                let full_per = self.flops_model.table.full_step.get(&1).copied().unwrap_or(0);
                 st.stats.flops.other += ((1.0 - frac) * full_per as f64) as u64;
                 self.flops_model.book_head(&mut st.stats.flops, chunk.bucket, 1);
                 self.flops_model.book_spec_step(&mut st.stats.flops, 1);
@@ -530,39 +644,20 @@ impl<'rt> Engine<'rt> {
         }
         Ok(())
     }
-
-    fn gather_ty(
-        &self,
-        chunk: &crate::coordinator::batcher::Chunk,
-        idxs: &[usize],
-    ) -> (Vec<f32>, Vec<i32>) {
-        let sched = &self.model.entry.schedule;
-        let mut t = vec![0f32; chunk.bucket];
-        let mut y = vec![0i32; chunk.bucket];
-        for (slot, m) in chunk.members.iter().enumerate() {
-            let st = &self.active[idxs[*m]];
-            t[slot] = sched.t_model[st.step];
-            y[slot] = st.spec.cond;
-        }
-        // padding replicates slot 0
-        for slot in chunk.used()..chunk.bucket {
-            t[slot] = t[0];
-            y[slot] = y[0];
-        }
-        (t, y)
-    }
 }
 
 /// Deterministic per-(token, step) hash in [0, 1) for ToCa-style subsets.
 fn tok_hash(tok: usize, step: usize) -> f64 {
-    let mut h = (tok as u64).wrapping_mul(0x9E3779B97F4A7C15) ^ (step as u64).wrapping_mul(0xC2B2AE3D27D4EB4F);
+    let mut h = (tok as u64).wrapping_mul(0x9E3779B97F4A7C15)
+        ^ (step as u64).wrapping_mul(0xC2B2AE3D27D4EB4F);
     h ^= h >> 33;
     h = h.wrapping_mul(0xFF51AFD7ED558CCD);
     h ^= h >> 33;
     (h >> 11) as f64 / (1u64 << 53) as f64
 }
 
-/// Sinusoidal timestep embedding matching model.py (TeaCache drift signal).
+/// Sinusoidal timestep embedding matching model.py (TeaCache drift signal,
+/// reused by the native backend's conditioning path).
 pub fn timestep_embedding(t: f32, dim: usize) -> Vec<f32> {
     let half = dim / 2;
     let mut out = vec![0f32; dim];

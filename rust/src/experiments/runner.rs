@@ -17,7 +17,7 @@ use crate::metrics::frechet::fid_vs_reference;
 use crate::metrics::stats::{
     class_agreement, fidelity_score, inception_score, vbench_star, Histogram,
 };
-use crate::runtime::{ClassifierRuntime, ModelRuntime};
+use crate::runtime::{ClassifierBackend, ModelBackend};
 use crate::workload::batch_requests;
 
 /// Outcome of one (policy, n-sample) run.
@@ -31,7 +31,7 @@ pub struct RunResult {
 
 /// Drive `n` closed-loop requests with one policy through a fresh engine.
 pub fn run_policy(
-    model: &ModelRuntime<'_>,
+    model: &dyn ModelBackend,
     policy: &Policy,
     label: &str,
     n: usize,
@@ -43,7 +43,7 @@ pub fn run_policy(
         model,
         EngineConfig { max_inflight: inflight, ..EngineConfig::default() },
     );
-    for r in batch_requests(n, model.entry.config.num_classes, policy, seed, record_traj) {
+    for r in batch_requests(n, model.entry().config.num_classes, policy, seed, record_traj) {
         engine.submit(r);
     }
     let t0 = std::time::Instant::now();
@@ -77,13 +77,13 @@ pub struct Quality {
 /// Classify a batch of frames through the metrics classifier, greedily
 /// using the largest compiled buckets.
 pub fn classify_frames(
-    cls: &ClassifierRuntime<'_>,
+    cls: &dyn ClassifierBackend,
     frames: &[f32],
     n: usize,
 ) -> Result<(Vec<f32>, Vec<f32>)> {
-    let latent = cls.entry.latent_dim;
-    let k = cls.entry.num_classes;
-    let fd = cls.entry.feat_dim;
+    let latent = cls.latent_dim();
+    let k = cls.num_classes();
+    let fd = cls.feat_dim();
     let buckets = cls.buckets();
     let mut logits = vec![0f32; n * k];
     let mut feats = vec![0f32; n * fd];
@@ -132,10 +132,10 @@ pub fn evaluate_quality(
     run: &RunResult,
     reference: &RunResult,
     cfg: &ModelConfig,
-    cls: &ClassifierRuntime<'_>,
+    cls: &dyn ClassifierBackend,
 ) -> Result<Quality> {
     let n = run.completions_by_id.len();
-    let frame_len = cls.entry.latent_dim;
+    let frame_len = cls.latent_dim();
     let frames_per = cfg.frames;
     assert_eq!(cfg.latent_dim, frame_len * frames_per);
 
@@ -148,7 +148,7 @@ pub fn evaluate_quality(
     let mut pooled = Vec::with_capacity(n * 64);
     for (id, c) in &run.completions_by_id {
         frames.extend_from_slice(&c.latent[mid * frame_len..(mid + 1) * frame_len]);
-        labels.push((c.cond as usize) % cls.entry.num_classes);
+        labels.push((c.cond as usize) % cls.num_classes());
         pooled.extend(pool_to_8x8(
             &c.latent[mid * frame_len..(mid + 1) * frame_len],
             cfg.image_size,
@@ -163,10 +163,11 @@ pub fn evaluate_quality(
         }
     }
     let (logits, feats) = classify_frames(cls, &frames, n)?;
-    let fid = fid_vs_reference(&feats, n, cls.entry.feat_dim, &cls.fid_mu.data, &cls.fid_cov.data);
-    let sfid = fid_vs_reference(&pooled, n, 64, &cls.sfid_mu.data, &cls.sfid_cov.data);
-    let is = inception_score(&logits, n, cls.entry.num_classes);
-    let agreement = class_agreement(&logits, &labels, cls.entry.num_classes);
+    let fid =
+        fid_vs_reference(&feats, n, cls.feat_dim(), &cls.fid_mu().data, &cls.fid_cov().data);
+    let sfid = fid_vs_reference(&pooled, n, 64, &cls.sfid_mu().data, &cls.sfid_cov().data);
+    let is = inception_score(&logits, n, cls.num_classes());
+    let agreement = class_agreement(&logits, &labels, cls.num_classes());
     Ok(Quality {
         fid,
         sfid,

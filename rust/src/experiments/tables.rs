@@ -1,21 +1,30 @@
 //! Table/figure regenerators (paper §4 + appendices). Each prints the same
 //! row structure the paper reports and writes a CSV under `results/`.
 //!
-//! Absolute numbers differ from the paper (simulated backbones on CPU
-//! PJRT, DESIGN.md §2); the comparisons to check are the *shapes*: who
-//! wins at matched acceleration, where baselines collapse, how α maps to
-//! speedup (Eq. 8).
+//! Absolute numbers differ from the paper (simulated backbones on CPU,
+//! DESIGN.md §2); the comparisons to check are the *shapes*: who wins at
+//! matched acceleration, where baselines collapse, how α maps to speedup
+//! (Eq. 8).
+//!
+//! Every runner resolves an execution backend first (DESIGN.md §3): PJRT
+//! artifacts when compiled with the `pjrt` feature and `artifacts/` is
+//! present, otherwise the seeded zero-artifact native models — so the
+//! whole harness runs on a bare checkout (`--backend native|pjrt|auto`
+//! overrides, default auto).
 
 use std::path::PathBuf;
 
 use anyhow::{bail, Result};
 
 use crate::cache::{DraftKind, TapCache};
+#[cfg(feature = "pjrt")]
 use crate::config::Manifest;
 use crate::coordinator::policy::ErrorMetric;
 use crate::metrics::pca::pca2;
 use crate::metrics::stats::pearson;
+#[cfg(feature = "pjrt")]
 use crate::runtime::{ClassifierRuntime, ModelRuntime, Runtime};
+use crate::runtime::{ClassifierBackend, ModelBackend, NativeHub};
 use crate::util::cli::Args;
 use crate::util::rng::Rng;
 use crate::workload::parse_policy;
@@ -52,6 +61,55 @@ pub fn results_path(file: &str) -> PathBuf {
     PathBuf::from("results").join(file)
 }
 
+fn native_hub(args: &Args) -> NativeHub {
+    NativeHub::seeded(args.u64("model-seed", NativeHub::DEFAULT_SEED))
+}
+
+/// Should this invocation run on the native backend? Honors `--backend
+/// native|pjrt|auto`; auto prefers PJRT artifacts when available.
+fn want_native(args: &Args) -> Result<bool> {
+    let kind = crate::runtime::select_backend(
+        &args.str("backend", "auto"),
+        crate::artifacts_dir().join("manifest.json").exists(),
+    )?;
+    Ok(kind == crate::runtime::BackendKind::Native)
+}
+
+/// Resolve a model + classifier backend pair and run `f` against it.
+fn with_backends<R>(
+    model_name: &str,
+    args: &Args,
+    f: impl FnOnce(&dyn ModelBackend, &dyn ClassifierBackend) -> Result<R>,
+) -> Result<R> {
+    if want_native(args)? {
+        let hub = native_hub(args);
+        let model = hub.model(model_name)?;
+        return f(model, &hub.classifier);
+    }
+    #[cfg(feature = "pjrt")]
+    {
+        let manifest = Manifest::load(&crate::artifacts_dir())?;
+        let entry = manifest.model(model_name)?;
+        let rt = Runtime::cpu()?;
+        let model = ModelRuntime::load(&rt, entry)?;
+        let cls = ClassifierRuntime::load(&rt, &manifest.classifier)?;
+        return f(&model, &cls);
+    }
+    #[cfg(not(feature = "pjrt"))]
+    {
+        unreachable!("want_native is always true without the pjrt feature");
+    }
+}
+
+/// Model-only variant for the figure runners that need no classifier.
+fn with_model<R>(
+    model_name: &str,
+    args: &Args,
+    f: impl FnOnce(&dyn ModelBackend) -> Result<R>,
+) -> Result<R> {
+    with_backends(model_name, args, |model, _cls| f(model))
+}
+
 fn sample_count(args: &Args, default: usize) -> usize {
     if args.bool("quick") {
         (default / 4).max(8)
@@ -73,8 +131,8 @@ pub struct Row {
 }
 
 pub fn eval_row(
-    model: &ModelRuntime<'_>,
-    cls: &ClassifierRuntime<'_>,
+    model: &dyn ModelBackend,
+    cls: &dyn ClassifierBackend,
     reference: &RunResult,
     desc: &str,
     label: &str,
@@ -82,12 +140,12 @@ pub fn eval_row(
     seed: u64,
     inflight: usize,
 ) -> Result<Row> {
-    let policy = parse_policy(desc, model.entry.config.depth)?;
+    let policy = parse_policy(desc, model.entry().config.depth)?;
     let run = run_policy(model, &policy, label, n, seed, inflight, false)?;
-    let q = evaluate_quality(&run, reference, &model.entry.config, cls)?;
+    let q = evaluate_quality(&run, reference, &model.entry().config, cls)?;
     let mut lat = latency_hist(&run);
-    let full1 = model.entry.flops.full_step[&1];
-    let steps = model.entry.config.serve_steps;
+    let full1 = model.entry().flops.full_step[&1];
+    let steps = model.entry().config.serve_steps;
     let ideal = (n * steps) as u64 * full1;
     Ok(Row {
         label: label.to_string(),
@@ -175,58 +233,69 @@ fn table_quality(
     rows: &[(&str, &str)],
     args: &Args,
 ) -> Result<()> {
-    let manifest = Manifest::load(&crate::artifacts_dir())?;
-    let entry = manifest.model(model_name)?;
-    let rt = Runtime::cpu()?;
-    let model = ModelRuntime::load(&rt, entry)?;
-    let cls = ClassifierRuntime::load(&rt, &manifest.classifier)?;
-    let n = sample_count(args, 48);
-    let seed = args.u64("seed", 0);
-    let inflight = args.usize("inflight", 8);
-    let video = entry.config.frames > 1;
+    with_backends(model_name, args, |model, cls| {
+        let entry = model.entry();
+        let n = sample_count(args, 48);
+        let seed = args.u64("seed", 0);
+        let inflight = args.usize("inflight", 8);
+        let video = entry.config.frames > 1;
 
-    println!("== {name} ({model_name}, n={n} samples/policy) ==");
-    let reference = run_policy(
-        &model,
-        &parse_policy("full", entry.config.depth)?,
-        "full",
-        n,
-        seed,
-        inflight,
-        false,
-    )?;
+        println!("== {name} ({model_name} on {}, n={n} samples/policy) ==", model.kind());
+        let reference = run_policy(
+            model,
+            &parse_policy("full", entry.config.depth)?,
+            "full",
+            n,
+            seed,
+            inflight,
+            false,
+        )?;
 
-    let hdr = if video {
-        format!(
-            "{:<22} {:>8} {:>9} {:>7} {:>7} {:>8} {:>8} {:>8}",
-            "method", "lat ms", "GFLOPs", "speed", "VBench*", "fid*", "alpha", "rejects"
-        )
-    } else {
-        format!(
-            "{:<22} {:>8} {:>9} {:>7} {:>8} {:>8} {:>8} {:>8} {:>7}",
-            "method", "lat ms", "GFLOPs", "speed", "FID*", "sFID*", "IS*", "ImgRwd*", "GenEv*"
-        )
-    };
-    println!("{hdr}");
-    let mut csv = Vec::new();
-    for (label, desc) in rows {
-        let row = eval_row(&model, &cls, &reference, desc, label, n, seed, inflight)?;
-        if video {
-            println!(
-                "{:<22} {:>8.1} {:>9.3} {:>6.2}x {:>7.2} {:>8.4} {:>8.3} {:>8}",
-                row.label,
-                row.latency_ms,
-                row.gflops_total,
-                row.speed,
-                row.q.vbench,
-                row.q.fidelity,
-                row.alpha,
-                row.rejects
-            );
+        let hdr = if video {
+            format!(
+                "{:<22} {:>8} {:>9} {:>7} {:>7} {:>8} {:>8} {:>8}",
+                "method", "lat ms", "GFLOPs", "speed", "VBench*", "fid*", "alpha", "rejects"
+            )
         } else {
-            println!(
-                "{:<22} {:>8.1} {:>9.3} {:>6.2}x {:>8.3} {:>8.3} {:>8.2} {:>8.4} {:>7.3}",
-                row.label,
+            format!(
+                "{:<22} {:>8} {:>9} {:>7} {:>8} {:>8} {:>8} {:>8} {:>7}",
+                "method", "lat ms", "GFLOPs", "speed", "FID*", "sFID*", "IS*", "ImgRwd*", "GenEv*"
+            )
+        };
+        println!("{hdr}");
+        let mut csv = Vec::new();
+        for (label, desc) in rows {
+            let row = eval_row(model, cls, &reference, desc, label, n, seed, inflight)?;
+            if video {
+                println!(
+                    "{:<22} {:>8.1} {:>9.3} {:>6.2}x {:>7.2} {:>8.4} {:>8.3} {:>8}",
+                    row.label,
+                    row.latency_ms,
+                    row.gflops_total,
+                    row.speed,
+                    row.q.vbench,
+                    row.q.fidelity,
+                    row.alpha,
+                    row.rejects
+                );
+            } else {
+                println!(
+                    "{:<22} {:>8.1} {:>9.3} {:>6.2}x {:>8.3} {:>8.3} {:>8.2} {:>8.4} {:>7.3}",
+                    row.label,
+                    row.latency_ms,
+                    row.gflops_total,
+                    row.speed,
+                    row.q.fid,
+                    row.q.sfid,
+                    row.q.is,
+                    row.q.fidelity,
+                    row.q.agreement
+                );
+            }
+            csv.push(format!(
+                "{},{},{:.2},{:.4},{:.3},{:.4},{:.4},{:.4},{:.4},{:.4},{:.4},{:.4},{}",
+                row.label.replace(',', ";"),
+                desc.replace(',', ";"),
                 row.latency_ms,
                 row.gflops_total,
                 row.speed,
@@ -234,33 +303,20 @@ fn table_quality(
                 row.q.sfid,
                 row.q.is,
                 row.q.fidelity,
-                row.q.agreement
-            );
+                row.q.agreement,
+                row.q.vbench,
+                row.alpha,
+                row.rejects
+            ));
         }
-        csv.push(format!(
-            "{},{},{:.2},{:.4},{:.3},{:.4},{:.4},{:.4},{:.4},{:.4},{:.4},{:.4},{}",
-            row.label.replace(',', ";"),
-            desc,
-            row.latency_ms,
-            row.gflops_total,
-            row.speed,
-            row.q.fid,
-            row.q.sfid,
-            row.q.is,
-            row.q.fidelity,
-            row.q.agreement,
-            row.q.vbench,
-            row.alpha,
-            row.rejects
-        ));
-    }
-    write_csv(
-        &results_path(&format!("{name}.csv")),
-        "label,policy,latency_ms,gflops,speed,fid,sfid,is,fidelity,agreement,vbench,alpha,rejects",
-        &csv,
-    )?;
-    println!("wrote results/{name}.csv");
-    Ok(())
+        write_csv(
+            &results_path(&format!("{name}.csv")),
+            "label,policy,latency_ms,gflops,speed,fid,sfid,is,fidelity,agreement,vbench,alpha,rejects",
+            &csv,
+        )?;
+        println!("wrote results/{name}.csv");
+        Ok(())
+    })
 }
 
 enum SweepKind {
@@ -268,111 +324,113 @@ enum SweepKind {
     Tau0,
 }
 
-/// Tables 4 & 5: β / τ0 ablations on dit-sim at N=6, O=2.
+/// Tables 4 & 5: β / τ0 ablations on dit-sim at N=12, O=2.
 fn table_sweep(name: &str, args: &Args, kind: SweepKind) -> Result<()> {
-    let manifest = Manifest::load(&crate::artifacts_dir())?;
-    let entry = manifest.model("dit-sim")?;
-    let rt = Runtime::cpu()?;
-    let model = ModelRuntime::load(&rt, entry)?;
-    let cls = ClassifierRuntime::load(&rt, &manifest.classifier)?;
-    let n = sample_count(args, 48);
-    let seed = args.u64("seed", 0);
-    let inflight = args.usize("inflight", 8);
+    with_backends("dit-sim", args, |model, cls| {
+        let entry = model.entry();
+        let n = sample_count(args, 48);
+        let seed = args.u64("seed", 0);
+        let inflight = args.usize("inflight", 8);
 
-    let reference =
-        run_policy(&model, &parse_policy("full", entry.config.depth)?, "full", n, seed, inflight, false)?;
+        let reference = run_policy(
+            model,
+            &parse_policy("full", entry.config.depth)?,
+            "full",
+            n,
+            seed,
+            inflight,
+            false,
+        )?;
 
-    let (title, grid): (&str, Vec<(String, String)>) = match kind {
-        SweepKind::Beta => (
-            "decay rate β (τ0=0.5)",
-            [0.12, 0.10, 0.08, 0.05, 0.03, 0.01]
-                .iter()
-                .map(|b| {
-                    (format!("beta={b}"), format!("speca:N=12,O=2,tau0=0.5,beta={b}"))
-                })
-                .collect(),
-        ),
-        SweepKind::Tau0 => (
-            "base threshold τ0 (β=0.05)",
-            [0.1, 0.3, 0.5, 0.8, 1.0, 1.2]
-                .iter()
-                .map(|t| {
-                    (format!("tau0={t}"), format!("speca:N=12,O=2,tau0={t},beta=0.05"))
-                })
-                .collect(),
-        ),
-    };
-    println!("== {name}: {title} (n={n}) ==");
-    println!(
-        "{:<12} {:>9} {:>7} {:>8} {:>8} {:>8} {:>8} {:>8} {:>8}",
-        "param", "GFLOPs", "speed", "FID*", "sFID*", "IS*", "ImgRwd*", "alpha", "rejects"
-    );
-    let mut csv = Vec::new();
-    for (label, desc) in &grid {
-        let row = eval_row(&model, &cls, &reference, desc, label, n, seed, inflight)?;
+        let (title, grid): (&str, Vec<(String, String)>) = match kind {
+            SweepKind::Beta => (
+                "decay rate β (τ0=0.5)",
+                [0.12, 0.10, 0.08, 0.05, 0.03, 0.01]
+                    .iter()
+                    .map(|b| {
+                        (format!("beta={b}"), format!("speca:N=12,O=2,tau0=0.5,beta={b}"))
+                    })
+                    .collect(),
+            ),
+            SweepKind::Tau0 => (
+                "base threshold τ0 (β=0.05)",
+                [0.1, 0.3, 0.5, 0.8, 1.0, 1.2]
+                    .iter()
+                    .map(|t| {
+                        (format!("tau0={t}"), format!("speca:N=12,O=2,tau0={t},beta=0.05"))
+                    })
+                    .collect(),
+            ),
+        };
+        println!("== {name}: {title} (n={n}) ==");
         println!(
-            "{:<12} {:>9.3} {:>6.2}x {:>8.3} {:>8.3} {:>8.2} {:>8.4} {:>8.3} {:>8}",
-            row.label, row.gflops_total, row.speed, row.q.fid, row.q.sfid, row.q.is,
-            row.q.fidelity, row.alpha, row.rejects
+            "{:<12} {:>9} {:>7} {:>8} {:>8} {:>8} {:>8} {:>8} {:>8}",
+            "param", "GFLOPs", "speed", "FID*", "sFID*", "IS*", "ImgRwd*", "alpha", "rejects"
         );
-        csv.push(format!(
-            "{},{:.4},{:.3},{:.4},{:.4},{:.4},{:.4},{:.4},{}",
-            row.label, row.gflops_total, row.speed, row.q.fid, row.q.sfid, row.q.is,
-            row.q.fidelity, row.alpha, row.rejects
-        ));
-    }
-    write_csv(
-        &results_path(&format!("{name}.csv")),
-        "param,gflops,speed,fid,sfid,is,fidelity,alpha,rejects",
-        &csv,
-    )?;
-    println!("wrote results/{name}.csv");
-    Ok(())
+        let mut csv = Vec::new();
+        for (label, desc) in &grid {
+            let row = eval_row(model, cls, &reference, desc, label, n, seed, inflight)?;
+            println!(
+                "{:<12} {:>9.3} {:>6.2}x {:>8.3} {:>8.3} {:>8.2} {:>8.4} {:>8.3} {:>8}",
+                row.label, row.gflops_total, row.speed, row.q.fid, row.q.sfid, row.q.is,
+                row.q.fidelity, row.alpha, row.rejects
+            );
+            csv.push(format!(
+                "{},{:.4},{:.3},{:.4},{:.4},{:.4},{:.4},{:.4},{}",
+                row.label, row.gflops_total, row.speed, row.q.fid, row.q.sfid, row.q.is,
+                row.q.fidelity, row.alpha, row.rejects
+            ));
+        }
+        write_csv(
+            &results_path(&format!("{name}.csv")),
+            "param,gflops,speed,fid,sfid,is,fidelity,alpha,rejects",
+            &csv,
+        )?;
+        println!("wrote results/{name}.csv");
+        Ok(())
+    })
 }
 
 /// Table 6: verification-layer ablation at ~5× on dit-sim.
 fn table6(args: &Args) -> Result<()> {
-    let manifest = Manifest::load(&crate::artifacts_dir())?;
-    let entry = manifest.model("dit-sim")?;
-    let rt = Runtime::cpu()?;
-    let model = ModelRuntime::load(&rt, entry)?;
-    let cls = ClassifierRuntime::load(&rt, &manifest.classifier)?;
-    let n = sample_count(args, 48);
-    let seed = args.u64("seed", 0);
-    let inflight = args.usize("inflight", 8);
-    let depth = entry.config.depth;
+    with_backends("dit-sim", args, |model, cls| {
+        let n = sample_count(args, 48);
+        let seed = args.u64("seed", 0);
+        let inflight = args.usize("inflight", 8);
+        let depth = model.entry().config.depth;
 
-    let reference =
-        run_policy(&model, &parse_policy("full", depth)?, "full", n, seed, inflight, false)?;
-    let layers = [0usize, depth / 4, 2 * depth / 3, depth - 1];
-    println!("== table6: verify-layer ablation (depth={depth}, n={n}) ==");
-    println!(
-        "{:<16} {:>8} {:>8} {:>8} {:>7} {:>8}",
-        "verify layer", "FID*", "sFID*", "IS*", "speed", "rejects"
-    );
-    let mut csv = Vec::new();
-    for v in layers {
-        let desc = format!("speca:N=6,O=2,tau0=0.3,beta=0.05,layer={v}");
-        let label = if v == depth - 1 {
-            format!("layer{v} (last)")
-        } else if v == 0 {
-            "layer0 (first)".to_string()
-        } else {
-            format!("layer{v}")
-        };
-        let row = eval_row(&model, &cls, &reference, &desc, &label, n, seed, inflight)?;
+        let reference =
+            run_policy(model, &parse_policy("full", depth)?, "full", n, seed, inflight, false)?;
+        let layers = [0usize, depth / 4, 2 * depth / 3, depth - 1];
+        println!("== table6: verify-layer ablation (depth={depth}, n={n}) ==");
         println!(
-            "{:<16} {:>8.3} {:>8.3} {:>8.2} {:>6.2}x {:>8}",
-            row.label, row.q.fid, row.q.sfid, row.q.is, row.speed, row.rejects
+            "{:<16} {:>8} {:>8} {:>8} {:>7} {:>8}",
+            "verify layer", "FID*", "sFID*", "IS*", "speed", "rejects"
         );
-        csv.push(format!(
-            "{v},{:.4},{:.4},{:.4},{:.3},{}",
-            row.q.fid, row.q.sfid, row.q.is, row.speed, row.rejects
-        ));
-    }
-    write_csv(&results_path("table6.csv"), "layer,fid,sfid,is,speed,rejects", &csv)?;
-    println!("wrote results/table6.csv");
-    Ok(())
+        let mut csv = Vec::new();
+        for v in layers {
+            let desc = format!("speca:N=6,O=2,tau0=0.3,beta=0.05,layer={v}");
+            let label = if v == depth - 1 {
+                format!("layer{v} (last)")
+            } else if v == 0 {
+                "layer0 (first)".to_string()
+            } else {
+                format!("layer{v}")
+            };
+            let row = eval_row(model, cls, &reference, &desc, &label, n, seed, inflight)?;
+            println!(
+                "{:<16} {:>8.3} {:>8.3} {:>8.2} {:>6.2}x {:>8}",
+                row.label, row.q.fid, row.q.sfid, row.q.is, row.speed, row.rejects
+            );
+            csv.push(format!(
+                "{v},{:.4},{:.4},{:.4},{:.3},{}",
+                row.q.fid, row.q.sfid, row.q.is, row.speed, row.rejects
+            ));
+        }
+        write_csv(&results_path("table6.csv"), "layer,fid,sfid,is,speed,rejects", &csv)?;
+        println!("wrote results/table6.csv");
+        Ok(())
+    })
 }
 
 /// Table 7: draft-model ablation on flux-sim (reuse / AB / Taylor, ±verify).
@@ -403,315 +461,317 @@ fn small_flux_table(
     rows: &[(&str, &str)],
     args: &Args,
 ) -> Result<()> {
-    let manifest = Manifest::load(&crate::artifacts_dir())?;
-    let entry = manifest.model("flux-sim")?;
-    let rt = Runtime::cpu()?;
-    let model = ModelRuntime::load(&rt, entry)?;
-    let cls = ClassifierRuntime::load(&rt, &manifest.classifier)?;
-    let n = sample_count(args, 48);
-    let seed = args.u64("seed", 0);
-    let inflight = args.usize("inflight", 8);
-    let reference = run_policy(
-        &model,
-        &parse_policy("full", entry.config.depth)?,
-        "full",
-        n,
-        seed,
-        inflight,
-        false,
-    )?;
-    println!("== {name}: {title} (flux-sim, n={n}) ==");
-    println!(
-        "{:<26} {:>8} {:>8} {:>7} {:>8}",
-        "variant", "CLIP*", "ImgRwd*", "speed", "rejects"
-    );
-    let mut csv = Vec::new();
-    for (label, desc) in rows {
-        let row = eval_row(&model, &cls, &reference, desc, label, n, seed, inflight)?;
+    with_backends("flux-sim", args, |model, cls| {
+        let n = sample_count(args, 48);
+        let seed = args.u64("seed", 0);
+        let inflight = args.usize("inflight", 8);
+        let reference = run_policy(
+            model,
+            &parse_policy("full", model.entry().config.depth)?,
+            "full",
+            n,
+            seed,
+            inflight,
+            false,
+        )?;
+        println!("== {name}: {title} (flux-sim, n={n}) ==");
         println!(
-            "{:<26} {:>8.3} {:>8.4} {:>6.2}x {:>8}",
-            row.label, row.q.agreement, row.q.fidelity, row.speed, row.rejects
+            "{:<26} {:>8} {:>8} {:>7} {:>8}",
+            "variant", "CLIP*", "ImgRwd*", "speed", "rejects"
         );
-        csv.push(format!(
-            "{},{:.4},{:.4},{:.3},{}",
-            row.label.replace(',', ";"),
-            row.q.agreement,
-            row.q.fidelity,
-            row.speed,
-            row.rejects
-        ));
-    }
-    write_csv(
-        &results_path(&format!("{name}.csv")),
-        "variant,agreement,fidelity,speed,rejects",
-        &csv,
-    )?;
-    println!("wrote results/{name}.csv");
-    Ok(())
+        let mut csv = Vec::new();
+        for (label, desc) in rows {
+            let row = eval_row(model, cls, &reference, desc, label, n, seed, inflight)?;
+            println!(
+                "{:<26} {:>8.3} {:>8.4} {:>6.2}x {:>8}",
+                row.label, row.q.agreement, row.q.fidelity, row.speed, row.rejects
+            );
+            csv.push(format!(
+                "{},{:.4},{:.4},{:.3},{}",
+                row.label.replace(',', ";"),
+                row.q.agreement,
+                row.q.fidelity,
+                row.speed,
+                row.rejects
+            ));
+        }
+        write_csv(
+            &results_path(&format!("{name}.csv")),
+            "variant,agreement,fidelity,speed,rejects",
+            &csv,
+        )?;
+        println!("wrote results/{name}.csv");
+        Ok(())
+    })
 }
 
 /// Fig. 2: FID*/IS* vs acceleration curves per method family (dit-sim).
 fn fig2(args: &Args) -> Result<()> {
-    let manifest = Manifest::load(&crate::artifacts_dir())?;
-    let entry = manifest.model("dit-sim")?;
-    let rt = Runtime::cpu()?;
-    let model = ModelRuntime::load(&rt, entry)?;
-    let cls = ClassifierRuntime::load(&rt, &manifest.classifier)?;
-    let n = sample_count(args, 32);
-    let seed = args.u64("seed", 0);
-    let inflight = args.usize("inflight", 8);
-    let reference = run_policy(
-        &model,
-        &parse_policy("full", entry.config.depth)?,
-        "full",
-        n,
-        seed,
-        inflight,
-        false,
-    )?;
+    with_backends("dit-sim", args, |model, cls| {
+        let n = sample_count(args, 32);
+        let seed = args.u64("seed", 0);
+        let inflight = args.usize("inflight", 8);
+        let reference = run_policy(
+            model,
+            &parse_policy("full", model.entry().config.depth)?,
+            "full",
+            n,
+            seed,
+            inflight,
+            false,
+        )?;
 
-    let families: Vec<(&str, Vec<String>)> = vec![
-        ("ddim", (0..5).map(|i| format!("steps:keep={}", [25, 15, 10, 8, 7][i])).collect()),
-        ("fora", (0..5).map(|i| format!("fora:N={}", [3, 5, 6, 7, 9][i])).collect()),
-        ("taylorseer", (0..5).map(|i| format!("taylorseer:N={},O=2", [3, 5, 6, 8, 9][i])).collect()),
-        (
-            "speca",
-            (0..5)
-                .map(|i| {
-                    format!(
-                        "speca:N={},O=2,tau0={},beta=0.05",
-                        [3, 5, 6, 8, 9][i],
-                        [0.2, 0.3, 0.3, 0.5, 0.5][i]
-                    )
-                })
-                .collect(),
-        ),
-    ];
-    println!("== fig2: quality vs acceleration curves (n={n}) ==");
-    let mut csv = Vec::new();
-    for (family, descs) in &families {
-        for desc in descs {
-            let row = eval_row(&model, &cls, &reference, desc, desc, n, seed, inflight)?;
-            println!(
-                "{:<12} {:<34} speed={:>5.2}x FID*={:>7.3} IS*={:>6.2}",
-                family, desc, row.speed, row.q.fid, row.q.is
-            );
-            csv.push(format!(
-                "{family},{desc},{:.3},{:.4},{:.4},{:.4}",
-                row.speed, row.q.fid, row.q.sfid, row.q.is
-            ));
+        let families: Vec<(&str, Vec<String>)> = vec![
+            ("ddim", (0..5).map(|i| format!("steps:keep={}", [25, 15, 10, 8, 7][i])).collect()),
+            ("fora", (0..5).map(|i| format!("fora:N={}", [3, 5, 6, 7, 9][i])).collect()),
+            (
+                "taylorseer",
+                (0..5).map(|i| format!("taylorseer:N={},O=2", [3, 5, 6, 8, 9][i])).collect(),
+            ),
+            (
+                "speca",
+                (0..5)
+                    .map(|i| {
+                        format!(
+                            "speca:N={},O=2,tau0={},beta=0.05",
+                            [3, 5, 6, 8, 9][i],
+                            [0.2, 0.3, 0.3, 0.5, 0.5][i]
+                        )
+                    })
+                    .collect(),
+            ),
+        ];
+        println!("== fig2: quality vs acceleration curves (n={n}) ==");
+        let mut csv = Vec::new();
+        for (family, descs) in &families {
+            for desc in descs {
+                let row = eval_row(model, cls, &reference, desc, desc, n, seed, inflight)?;
+                println!(
+                    "{:<12} {:<34} speed={:>5.2}x FID*={:>7.3} IS*={:>6.2}",
+                    family, desc, row.speed, row.q.fid, row.q.is
+                );
+                csv.push(format!(
+                    "{family},{},{:.3},{:.4},{:.4},{:.4}",
+                    desc.replace(',', ";"),
+                    row.speed,
+                    row.q.fid,
+                    row.q.sfid,
+                    row.q.is
+                ));
+            }
         }
-    }
-    write_csv(&results_path("fig2.csv"), "family,policy,speed,fid,sfid,is", &csv)?;
-    println!("wrote results/fig2.csv");
-    Ok(())
+        write_csv(&results_path("fig2.csv"), "family,policy,speed,fid,sfid,is", &csv)?;
+        println!("wrote results/fig2.csv");
+        Ok(())
+    })
 }
 
 /// Fig. 6: correlation between per-layer activation error and final output
 /// error. Runs a TaylorSeer trajectory with shadow full computes so every
 /// boundary's prediction error is measured against its true value.
 fn fig6(args: &Args) -> Result<()> {
-    let manifest = Manifest::load(&crate::artifacts_dir())?;
-    let entry = manifest.model("dit-sim")?;
-    let rt = Runtime::cpu()?;
-    let model = ModelRuntime::load(&rt, entry)?;
-    let cfg = &entry.config;
-    let depth = cfg.depth;
-    let feat = cfg.tokens * cfg.dim;
-    let steps = cfg.serve_steps;
-    let m = sample_count(args, 32).max(24);
-    let interval = args.usize("interval", 5);
-    let order = args.usize("order", 2);
-    let sched = &entry.schedule;
+    with_model("dit-sim", args, |model| {
+        let entry = model.entry();
+        let cfg = &entry.config;
+        let depth = cfg.depth;
+        let feat = cfg.tokens * cfg.dim;
+        let steps = cfg.serve_steps;
+        let m = sample_count(args, 32).max(24);
+        let interval = args.usize("interval", 5);
+        let order = args.usize("order", 2);
+        let sched = &entry.schedule;
 
-    println!("== fig6: layer-error ↔ final-error correlation ({m} samples) ==");
-    let mut per_layer_err = vec![Vec::with_capacity(m); depth + 1];
-    let mut final_err = Vec::with_capacity(m);
-    for s in 0..m {
-        let seed = 1000 + s as u64;
-        let mut rng = Rng::new(seed);
-        let x_init = rng.normal_f32s(cfg.latent_dim);
-        let y = vec![(s % cfg.num_classes) as i32];
+        println!("== fig6: layer-error ↔ final-error correlation ({m} samples) ==");
+        let mut per_layer_err = vec![Vec::with_capacity(m); depth + 1];
+        let mut final_err = Vec::with_capacity(m);
+        for s in 0..m {
+            let seed = 1000 + s as u64;
+            let mut rng = Rng::new(seed);
+            let x_init = rng.normal_f32s(cfg.latent_dim);
+            let y = vec![(s % cfg.num_classes) as i32];
 
-        // reference trajectory (full compute)
-        let mut x_ref = x_init.clone();
-        for i in 0..steps {
-            let t = vec![sched.t_model[i]];
-            let (eps, _) = model.full(1, &x_ref, &t, &y, false)?;
-            apply(sched, i, steps, &mut x_ref, &eps.data);
-        }
-
-        // TaylorSeer trajectory with shadow full computes on spec steps
-        let mut caches: Vec<TapCache> =
-            (0..=depth).map(|_| TapCache::new(order, feat, interval)).collect();
-        let mut x = x_init.clone();
-        let mut last_refresh = 0usize;
-        let mut errs = vec![0.0f64; depth + 1];
-        let mut n_spec = 0usize;
-        for i in 0..steps {
-            let t = vec![sched.t_model[i]];
-            if i % interval == 0 {
-                let (eps, bounds) = model.full(1, &x, &t, &y, false)?;
-                for (b, cache) in caches.iter_mut().enumerate() {
-                    cache.refresh(&bounds.data[b * feat..(b + 1) * feat]);
-                }
-                last_refresh = i;
-                apply(sched, i, steps, &mut x, &eps.data);
-            } else {
-                let k = (i - last_refresh) as f32;
-                // shadow: true boundaries at the current x
-                let (_, bounds) = model.full(1, &x, &t, &y, false)?;
-                let mut pred_last = vec![0.0f32; feat];
-                for (b, cache) in caches.iter().enumerate() {
-                    let pred = cache.predict(k, DraftKind::Taylor);
-                    let actual = &bounds.data[b * feat..(b + 1) * feat];
-                    errs[b] += ErrorMetric::L2.eval(&pred, actual);
-                    if b == depth {
-                        pred_last = pred;
-                    }
-                }
-                n_spec += 1;
-                let eps = model.head(1, &pred_last, &t, &y)?;
-                apply(sched, i, steps, &mut x, &eps.data);
+            // reference trajectory (full compute)
+            let mut x_ref = x_init.clone();
+            for i in 0..steps {
+                let t = vec![sched.t_model[i]];
+                let (eps, _) = model.full(1, &x_ref, &t, &y, false)?;
+                apply(sched, i, steps, &mut x_ref, &eps.data);
             }
-        }
-        for b in 0..=depth {
-            per_layer_err[b].push(errs[b] / n_spec.max(1) as f64);
-        }
-        final_err.push(ErrorMetric::L2.eval(&x, &x_ref));
-    }
 
-    let mut csv = Vec::new();
-    println!("{:<10} {:>9}", "boundary", "pearson r");
-    for b in 0..=depth {
-        let r = pearson(&per_layer_err[b], &final_err);
-        let tag = if b == depth {
-            " (deepest block output)"
-        } else if b == 0 {
-            " (raw embedding of x_t — trivially tracks latent drift)"
-        } else {
-            ""
-        };
-        println!("{:<10} {:>9.3}{tag}", b, r);
-        csv.push(format!("{b},{r:.4}"));
-    }
-    write_csv(&results_path("fig6.csv"), "boundary,pearson_r", &csv)?;
-    println!("wrote results/fig6.csv");
-    Ok(())
+            // TaylorSeer trajectory with shadow full computes on spec steps
+            let mut caches: Vec<TapCache> =
+                (0..=depth).map(|_| TapCache::new(order, feat, interval)).collect();
+            let mut x = x_init.clone();
+            let mut last_refresh = 0usize;
+            let mut errs = vec![0.0f64; depth + 1];
+            let mut n_spec = 0usize;
+            for i in 0..steps {
+                let t = vec![sched.t_model[i]];
+                if i % interval == 0 {
+                    let (eps, bounds) = model.full(1, &x, &t, &y, false)?;
+                    for (b, cache) in caches.iter_mut().enumerate() {
+                        cache.refresh(&bounds.data[b * feat..(b + 1) * feat]);
+                    }
+                    last_refresh = i;
+                    apply(sched, i, steps, &mut x, &eps.data);
+                } else {
+                    let k = (i - last_refresh) as f32;
+                    // shadow: true boundaries at the current x
+                    let (_, bounds) = model.full(1, &x, &t, &y, false)?;
+                    let mut pred_last = vec![0.0f32; feat];
+                    for (b, cache) in caches.iter().enumerate() {
+                        let pred = cache.predict(k, DraftKind::Taylor);
+                        let actual = &bounds.data[b * feat..(b + 1) * feat];
+                        errs[b] += ErrorMetric::L2.eval(&pred, actual);
+                        if b == depth {
+                            pred_last = pred;
+                        }
+                    }
+                    n_spec += 1;
+                    let eps = model.head(1, &pred_last, &t, &y)?;
+                    apply(sched, i, steps, &mut x, &eps.data);
+                }
+            }
+            for b in 0..=depth {
+                per_layer_err[b].push(errs[b] / n_spec.max(1) as f64);
+            }
+            final_err.push(ErrorMetric::L2.eval(&x, &x_ref));
+        }
+
+        let mut csv = Vec::new();
+        println!("{:<10} {:>9}", "boundary", "pearson r");
+        for b in 0..=depth {
+            let r = pearson(&per_layer_err[b], &final_err);
+            let tag = if b == depth {
+                " (deepest block output)"
+            } else if b == 0 {
+                " (raw embedding of x_t — trivially tracks latent drift)"
+            } else {
+                ""
+            };
+            println!("{:<10} {:>9.3}{tag}", b, r);
+            csv.push(format!("{b},{r:.4}"));
+        }
+        write_csv(&results_path("fig6.csv"), "boundary,pearson_r", &csv)?;
+        println!("wrote results/fig6.csv");
+        Ok(())
+    })
 }
 
 /// Fig. 8: τ0 × β sensitivity surface (denser grid over Tables 4/5).
 fn fig8(args: &Args) -> Result<()> {
-    let manifest = Manifest::load(&crate::artifacts_dir())?;
-    let entry = manifest.model("dit-sim")?;
-    let rt = Runtime::cpu()?;
-    let model = ModelRuntime::load(&rt, entry)?;
-    let cls = ClassifierRuntime::load(&rt, &manifest.classifier)?;
-    let n = sample_count(args, 24);
-    let seed = args.u64("seed", 0);
-    let inflight = args.usize("inflight", 8);
-    let reference = run_policy(
-        &model,
-        &parse_policy("full", entry.config.depth)?,
-        "full",
-        n,
-        seed,
-        inflight,
-        false,
-    )?;
-    let taus = [0.1, 0.3, 0.5, 0.8, 1.2];
-    let betas = [0.01, 0.05, 0.12];
-    println!("== fig8: τ0×β sensitivity (n={n}) ==");
-    let mut csv = Vec::new();
-    for b in betas {
-        for t in taus {
-            let desc = format!("speca:N=12,O=2,tau0={t},beta={b}");
-            let row = eval_row(&model, &cls, &reference, &desc, &desc, n, seed, inflight)?;
-            println!(
-                "tau0={t:<4} beta={b:<5} speed={:>5.2}x FID*={:>7.3} sFID*={:>7.3}",
-                row.speed, row.q.fid, row.q.sfid
-            );
-            csv.push(format!("{t},{b},{:.3},{:.4},{:.4},{:.4}", row.speed, row.q.fid, row.q.sfid, row.q.is));
+    with_backends("dit-sim", args, |model, cls| {
+        let n = sample_count(args, 24);
+        let seed = args.u64("seed", 0);
+        let inflight = args.usize("inflight", 8);
+        let reference = run_policy(
+            model,
+            &parse_policy("full", model.entry().config.depth)?,
+            "full",
+            n,
+            seed,
+            inflight,
+            false,
+        )?;
+        let taus = [0.1, 0.3, 0.5, 0.8, 1.2];
+        let betas = [0.01, 0.05, 0.12];
+        println!("== fig8: τ0×β sensitivity (n={n}) ==");
+        let mut csv = Vec::new();
+        for b in betas {
+            for t in taus {
+                let desc = format!("speca:N=12,O=2,tau0={t},beta={b}");
+                let row = eval_row(model, cls, &reference, &desc, &desc, n, seed, inflight)?;
+                println!(
+                    "tau0={t:<4} beta={b:<5} speed={:>5.2}x FID*={:>7.3} sFID*={:>7.3}",
+                    row.speed, row.q.fid, row.q.sfid
+                );
+                csv.push(format!(
+                    "{t},{b},{:.3},{:.4},{:.4},{:.4}",
+                    row.speed, row.q.fid, row.q.sfid, row.q.is
+                ));
+            }
         }
-    }
-    write_csv(&results_path("fig8.csv"), "tau0,beta,speed,fid,sfid,is", &csv)?;
-    println!("wrote results/fig8.csv");
-    Ok(())
+        write_csv(&results_path("fig8.csv"), "tau0,beta,speed,fid,sfid,is", &csv)?;
+        println!("wrote results/fig8.csv");
+        Ok(())
+    })
 }
 
 /// Fig. 9: PCA trajectories of the last-boundary feature per policy.
 fn fig9(args: &Args) -> Result<()> {
-    let manifest = Manifest::load(&crate::artifacts_dir())?;
-    let entry = manifest.model("dit-sim")?;
-    let rt = Runtime::cpu()?;
-    let model = ModelRuntime::load(&rt, entry)?;
-    let seed = args.u64("seed", 4);
-    let policies: &[(&str, &str)] = &[
-        ("full", "full"),
-        ("fora", "fora:N=5"),
-        ("taylorseer", "taylorseer:N=5,O=2"),
-        ("speca", "speca:N=5,O=2,tau0=0.3,beta=0.05"),
-    ];
-    println!("== fig9: PCA feature trajectories ==");
-    let mut all_rows: Vec<f32> = Vec::new();
-    let mut meta: Vec<(String, usize)> = Vec::new();
-    let feat = entry.config.tokens * entry.config.dim;
-    for (label, desc) in policies {
-        let policy = parse_policy(desc, entry.config.depth)?;
-        let run = run_policy(&model, &policy, label, 1, seed, 1, true)?;
-        let c = run.completions_by_id.values().next().unwrap();
-        for row in &c.traj {
-            all_rows.extend_from_slice(row);
+    with_model("dit-sim", args, |model| {
+        let entry = model.entry();
+        let seed = args.u64("seed", 4);
+        let policies: &[(&str, &str)] = &[
+            ("full", "full"),
+            ("fora", "fora:N=5"),
+            ("taylorseer", "taylorseer:N=5,O=2"),
+            ("speca", "speca:N=5,O=2,tau0=0.3,beta=0.05"),
+        ];
+        println!("== fig9: PCA feature trajectories ==");
+        let mut all_rows: Vec<f32> = Vec::new();
+        let mut meta: Vec<(String, usize)> = Vec::new();
+        let feat = entry.config.tokens * entry.config.dim;
+        for (label, desc) in policies {
+            let policy = parse_policy(desc, entry.config.depth)?;
+            let run = run_policy(model, &policy, label, 1, seed, 1, true)?;
+            let c = run.completions_by_id.values().next().unwrap();
+            for row in &c.traj {
+                all_rows.extend_from_slice(row);
+            }
+            meta.push((label.to_string(), c.traj.len()));
+            println!("  {label}: {} recorded steps", c.traj.len());
         }
-        meta.push((label.to_string(), c.traj.len()));
-        println!("  {label}: {} recorded steps", c.traj.len());
-    }
-    let n = all_rows.len() / feat;
-    let (_, proj) = pca2(&all_rows, n, feat, 7);
-    let mut csv = Vec::new();
-    let mut at = 0usize;
-    for (label, steps) in &meta {
-        for s in 0..*steps {
-            csv.push(format!("{label},{s},{:.5},{:.5}", proj[(at + s) * 2], proj[(at + s) * 2 + 1]));
+        let n = all_rows.len() / feat;
+        let (_, proj) = pca2(&all_rows, n, feat, 7);
+        let mut csv = Vec::new();
+        let mut at = 0usize;
+        for (label, steps) in &meta {
+            for s in 0..*steps {
+                csv.push(format!(
+                    "{label},{s},{:.5},{:.5}",
+                    proj[(at + s) * 2],
+                    proj[(at + s) * 2 + 1]
+                ));
+            }
+            at += steps;
         }
-        at += steps;
-    }
-    write_csv(&results_path("fig9.csv"), "policy,step,pc1,pc2", &csv)?;
-    println!("wrote results/fig9.csv ({n} points)");
-    Ok(())
+        write_csv(&results_path("fig9.csv"), "policy,step,pc1,pc2", &csv)?;
+        println!("wrote results/fig9.csv ({n} points)");
+        Ok(())
+    })
 }
 
 /// §G.3: measured acceptance α vs the speedup law S = 1/(1−α+αγ).
 fn speedup_law(args: &Args) -> Result<()> {
-    let manifest = Manifest::load(&crate::artifacts_dir())?;
-    let entry = manifest.model("dit-sim")?;
-    let rt = Runtime::cpu()?;
-    let model = ModelRuntime::load(&rt, entry)?;
-    let n = sample_count(args, 16);
-    let seed = args.u64("seed", 0);
-    let full1 = entry.flops.full_step[&1];
-    println!("== speedup law: S vs 1/(1−α+αγ) ==");
-    println!(
-        "{:<34} {:>7} {:>8} {:>9} {:>10}",
-        "policy", "alpha", "gamma", "S (meas)", "S (law)"
-    );
-    let mut csv = Vec::new();
-    for tau in [0.1, 0.2, 0.3, 0.5, 0.8, 1.2] {
-        for interval in [4usize, 6, 9] {
-            let desc = format!("speca:N={interval},O=2,tau0={tau},beta=0.05");
-            let policy = parse_policy(&desc, entry.config.depth)?;
-            let run = run_policy(&model, &policy, &desc, n, seed, 8, false)?;
-            let a = run.flops.acceptance_rate();
-            let g = run.flops.gamma();
-            let s = run.flops.speedup(full1);
-            let law = run.flops.predicted_speedup();
-            println!("{desc:<34} {a:>7.3} {g:>8.4} {s:>8.2}x {law:>9.2}x");
-            csv.push(format!("{desc},{a:.4},{g:.4},{s:.4},{law:.4}"));
+    with_model("dit-sim", args, |model| {
+        let entry = model.entry();
+        let n = sample_count(args, 16);
+        let seed = args.u64("seed", 0);
+        let full1 = entry.flops.full_step[&1];
+        println!("== speedup law: S vs 1/(1−α+αγ) ==");
+        println!(
+            "{:<34} {:>7} {:>8} {:>9} {:>10}",
+            "policy", "alpha", "gamma", "S (meas)", "S (law)"
+        );
+        let mut csv = Vec::new();
+        for tau in [0.1, 0.2, 0.3, 0.5, 0.8, 1.2] {
+            for interval in [4usize, 6, 9] {
+                let desc = format!("speca:N={interval},O=2,tau0={tau},beta=0.05");
+                let policy = parse_policy(&desc, entry.config.depth)?;
+                let run = run_policy(model, &policy, &desc, n, seed, 8, false)?;
+                let a = run.flops.acceptance_rate();
+                let g = run.flops.gamma();
+                let s = run.flops.speedup(full1);
+                let law = run.flops.predicted_speedup();
+                println!("{desc:<34} {a:>7.3} {g:>8.4} {s:>8.2}x {law:>9.2}x");
+                csv.push(format!("{},{a:.4},{g:.4},{s:.4},{law:.4}", desc.replace(',', ";")));
+            }
         }
-    }
-    write_csv(&results_path("speedup_law.csv"), "policy,alpha,gamma,measured,law", &csv)?;
-    println!("wrote results/speedup_law.csv");
-    Ok(())
+        write_csv(&results_path("speedup_law.csv"), "policy,alpha,gamma,measured,law", &csv)?;
+        println!("wrote results/speedup_law.csv");
+        Ok(())
+    })
 }
 
 fn apply(

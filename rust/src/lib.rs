@@ -2,14 +2,19 @@
 //! Caching — Rust + JAX + Pallas reproduction (ACM MM '25,
 //! DOI 10.1145/3746027.3755331).
 //!
-//! Three-layer architecture (see DESIGN.md):
+//! Three-layer architecture (see DESIGN.md §1):
 //! * L3 (this crate): serving coordinator — router, dynamic batcher, the
 //!   SpeCa forecast-then-verify engine, baselines, metrics, TCP server;
-//! * L2: JAX DiT models, AOT-lowered to HLO text (`python/compile/`);
-//! * L1: Pallas kernels for attention / Taylor drafts / verification.
+//! * L2: the DiT forward pass, behind the `runtime::ModelBackend` trait —
+//!   either the pure-Rust native backend (default, zero artifacts) or JAX
+//!   models AOT-lowered to HLO text (`python/compile/`, cargo feature
+//!   `pjrt`);
+//! * L1: Pallas kernels for attention / Taylor drafts / verification
+//!   (PJRT artifacts only).
 //!
 //! Python never runs on the request path: `make artifacts` produces
-//! `artifacts/` once, and everything here executes via the PJRT C API.
+//! `artifacts/` once; the default build does not need Python or XLA at
+//! all (DESIGN.md §3).
 
 pub mod cache;
 pub mod config;

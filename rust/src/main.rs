@@ -1,24 +1,29 @@
 //! `speca` CLI — leader entrypoint for the SpeCa serving stack.
 //!
 //! Subcommands:
-//!   info                          — show manifest/model inventory
+//!   info                          — show backend/model inventory
 //!   generate [--model M] [--policy P] [--n N] ...   — closed-loop batch
 //!   serve    [--model M] [--addr A]                 — TCP JSON-lines server
 //!   load     [--addr A] [--n N] [--conns C]         — load generator
 //!   bench    <table1..8|fig2|fig6|fig8|fig9|speedup-law> — experiment runners
 //!            (micro perf data: `cargo bench --bench micro_runtime`)
+//!
+//! Every command takes `--backend native|pjrt|auto` (default auto): the
+//! pure-Rust native backend needs no artifacts at all; the PJRT backend
+//! (cargo feature `pjrt`) executes the AOT HLO artifacts (DESIGN.md §3).
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
 
+#[cfg(feature = "pjrt")]
 use speca::config::Manifest;
-use speca::coordinator::{Engine, EngineConfig};
 use speca::coordinator::batcher::BatchStrategy;
+use speca::coordinator::{Engine, EngineConfig};
+use speca::runtime::{select_backend, BackendKind, ClassifierBackend, ModelBackend, NativeHub};
+#[cfg(feature = "pjrt")]
 use speca::runtime::{ModelRuntime, Runtime};
 use speca::server::{self, client, ServerConfig};
 use speca::util::cli::Args;
 use speca::workload;
-
-
 
 fn main() -> Result<()> {
     let args = Args::from_env();
@@ -42,7 +47,7 @@ speca — speculative feature caching for diffusion transformers (MM'25 repro)
 USAGE: speca <command> [--flags]
 
 COMMANDS:
-  info                       manifest inventory (models, artifacts, FLOPs)
+  info                       backend + model inventory (configs, FLOPs)
   generate                   run a closed-loop batch through the engine
       --model dit-sim --policy speca:N=5,O=2,tau0=0.3,beta=0.05 --n 8
       --inflight 8 --strategy binary --seed 0 --dump-pgm out/
@@ -54,10 +59,66 @@ COMMANDS:
       table1..table8 | fig2|fig6|fig8|fig9 | speedup-law  [--quick] [--n N]
       (micro perf: cargo bench --bench micro_runtime)
 
-Artifacts default to ./artifacts (override with SPECA_ARTIFACTS).
+BACKENDS (--backend native|pjrt|auto, default auto):
+  native   pure-Rust DiT forward, seeded weights, zero artifacts needed
+  pjrt     AOT HLO artifacts via PJRT (requires --features pjrt build and
+           ./artifacts from `make artifacts`; override with SPECA_ARTIFACTS)
+  --model-seed N             seed for the native models (default fixed)
 ";
 
-fn info(_args: &Args) -> Result<()> {
+fn backend_kind(args: &Args) -> Result<BackendKind> {
+    select_backend(
+        &args.str("backend", "auto"),
+        speca::artifacts_dir().join("manifest.json").exists(),
+    )
+}
+
+fn info(args: &Args) -> Result<()> {
+    match backend_kind(args)? {
+        BackendKind::Native => {
+            let hub = NativeHub::seeded(args.u64("model-seed", NativeHub::DEFAULT_SEED));
+            println!("backend: native (seeded, zero artifacts)");
+            for (name, m) in hub.models() {
+                print_model(name, m);
+            }
+            println!(
+                "classifier: native feat_dim={} classes={}",
+                hub.classifier.feat_dim(),
+                hub.classifier.num_classes(),
+            );
+            Ok(())
+        }
+        BackendKind::Pjrt => pjrt_info(),
+    }
+}
+
+fn print_model(name: &str, m: &dyn ModelBackend) {
+    let e = m.entry();
+    let c = &e.config;
+    println!(
+        "model {name} [{}]: dim={} depth={} heads={} tokens={} latent={} classes={} \
+         schedule={:?} steps={} buckets={:?}",
+        m.kind(),
+        c.dim,
+        c.depth,
+        c.heads,
+        c.tokens,
+        c.latent_dim,
+        c.num_classes,
+        c.schedule_kind,
+        c.serve_steps,
+        c.buckets
+    );
+    println!(
+        "  flops/full-step(b1)={:.3} MF  block={:.3} MF (gamma≈{:.4})",
+        e.flops.full_step[&1] as f64 / 1e6,
+        e.flops.block[&1] as f64 / 1e6,
+        e.flops.block[&1] as f64 / e.flops.full_step[&1] as f64
+    );
+}
+
+#[cfg(feature = "pjrt")]
+fn pjrt_info() -> Result<()> {
     let manifest = Manifest::load(&speca::artifacts_dir())?;
     println!("artifacts: {}", manifest.root.display());
     for (name, m) in &manifest.models {
@@ -85,94 +146,122 @@ fn info(_args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_info() -> Result<()> {
+    unreachable!("select_backend rejects pjrt without the feature")
+}
+
 fn engine_config(args: &Args) -> Result<EngineConfig> {
     let strategy = args.str("strategy", "binary");
+    let Some(strategy) = BatchStrategy::parse(&strategy) else {
+        bail!("unknown strategy '{strategy}'");
+    };
     Ok(EngineConfig {
         max_inflight: args.usize("inflight", 8),
-        strategy: BatchStrategy::parse(&strategy)
-            .with_context(|| format!("unknown strategy '{strategy}'"))?,
+        strategy,
         use_pallas: args.bool("pallas"),
     })
 }
 
-fn generate(args: &Args) -> Result<()> {
-    let manifest = Manifest::load(&speca::artifacts_dir())?;
+/// Run `f` against the model backend the flags select.
+fn with_model(args: &Args, f: impl FnOnce(&dyn ModelBackend, &Args) -> Result<()>) -> Result<()> {
     let model_name = args.str("model", "dit-sim");
-    let entry = manifest.model(&model_name)?;
-    let rt = Runtime::cpu()?;
-    let model = ModelRuntime::load(&rt, entry)?;
-    let mut engine = Engine::new(&model, engine_config(args)?);
-
-    let policy = workload::parse_policy(
-        &args.str("policy", "speca:N=5,O=2,tau0=0.3,beta=0.05"),
-        entry.config.depth,
-    )?;
-    let n = args.usize("n", 8);
-    let reqs = workload::batch_requests(
-        n,
-        entry.config.num_classes,
-        &policy,
-        args.u64("seed", 0),
-        false,
-    );
-    let t0 = std::time::Instant::now();
-    for r in reqs {
-        engine.submit(r);
+    match backend_kind(args)? {
+        BackendKind::Native => {
+            let hub = NativeHub::seeded(args.u64("model-seed", NativeHub::DEFAULT_SEED));
+            return f(hub.model(&model_name)?, args);
+        }
+        BackendKind::Pjrt => {
+            #[cfg(feature = "pjrt")]
+            {
+                let manifest = Manifest::load(&speca::artifacts_dir())?;
+                let entry = manifest.model(&model_name)?;
+                let rt = Runtime::cpu()?;
+                let model = ModelRuntime::load(&rt, entry)?;
+                return f(&model, args);
+            }
+            #[cfg(not(feature = "pjrt"))]
+            {
+                unreachable!("select_backend rejects pjrt without the feature");
+            }
+        }
     }
-    let completions = engine.run_to_completion()?;
-    let wall = t0.elapsed().as_secs_f64();
+}
 
-    let full_flops = entry.flops.full_step[&1];
-    let steps = entry.config.serve_steps;
-    println!(
-        "{:<6} {:<10} {:>6} {:>6} {:>6} {:>7} {:>9} {:>9}",
-        "id", "policy", "full", "spec", "rej", "lat ms", "GFLOPs", "speedup"
-    );
-    for c in &completions {
-        let s = &c.stats;
-        println!(
-            "{:<6} {:<10} {:>6} {:>6} {:>6} {:>7.1} {:>9.4} {:>8.2}x",
-            c.id,
-            c.policy_name,
-            s.full_steps,
-            s.spec_steps + s.skip_steps + s.blend_steps,
-            s.rejects,
-            s.latency_ms,
-            s.flops.total() as f64 / 1e9,
-            s.speedup(full_flops, steps)
+fn generate(args: &Args) -> Result<()> {
+    with_model(args, |model, args| {
+        let entry = model.entry();
+        let mut engine = Engine::new(model, engine_config(args)?);
+
+        let policy = workload::parse_policy(
+            &args.str("policy", "speca:N=5,O=2,tau0=0.3,beta=0.05"),
+            entry.config.depth,
+        )?;
+        let n = args.usize("n", 8);
+        let reqs = workload::batch_requests(
+            n,
+            entry.config.num_classes,
+            &policy,
+            args.u64("seed", 0),
+            false,
         );
-    }
-    let f = &engine.flops;
-    println!(
-        "batch: n={n} wall={wall:.2}s throughput={:.2} req/s alpha={:.3} gamma={:.4} \
-         agg-speedup={:.2}x (law predicts {:.2}x)",
-        n as f64 / wall,
-        f.acceptance_rate(),
-        f.gamma(),
-        f.speedup(full_flops),
-        f.predicted_speedup()
-    );
+        let t0 = std::time::Instant::now();
+        for r in reqs {
+            engine.submit(r);
+        }
+        let completions = engine.run_to_completion()?;
+        let wall = t0.elapsed().as_secs_f64();
 
-    if let Some(dir) = args.opt("dump-pgm") {
-        speca::experiments::runner::dump_pgm(&completions, &entry.config, dir)?;
-        println!("wrote sample grids to {dir}/");
-    }
-    Ok(())
+        let full_flops = entry.flops.full_step[&1];
+        let steps = entry.config.serve_steps;
+        println!(
+            "{:<6} {:<10} {:>6} {:>6} {:>6} {:>7} {:>9} {:>9}",
+            "id", "policy", "full", "spec", "rej", "lat ms", "GFLOPs", "speedup"
+        );
+        for c in &completions {
+            let s = &c.stats;
+            println!(
+                "{:<6} {:<10} {:>6} {:>6} {:>6} {:>7.1} {:>9.4} {:>8.2}x",
+                c.id,
+                c.policy_name,
+                s.full_steps,
+                s.spec_steps + s.skip_steps + s.blend_steps,
+                s.rejects,
+                s.latency_ms,
+                s.flops.total() as f64 / 1e9,
+                s.speedup(full_flops, steps)
+            );
+        }
+        let f = &engine.flops;
+        println!(
+            "batch: n={n} backend={} wall={wall:.2}s throughput={:.2} req/s alpha={:.3} \
+             gamma={:.4} agg-speedup={:.2}x (law predicts {:.2}x)",
+            model.kind(),
+            n as f64 / wall,
+            f.acceptance_rate(),
+            f.gamma(),
+            f.speedup(full_flops),
+            f.predicted_speedup()
+        );
+
+        if let Some(dir) = args.opt("dump-pgm") {
+            speca::experiments::runner::dump_pgm(&completions, &entry.config, dir)?;
+            println!("wrote sample grids to {dir}/");
+        }
+        Ok(())
+    })
 }
 
 fn serve(args: &Args) -> Result<()> {
-    let manifest = Manifest::load(&speca::artifacts_dir())?;
-    let model_name = args.str("model", "dit-sim");
-    let entry = manifest.model(&model_name)?;
-    let rt = Runtime::cpu()?;
-    let model = ModelRuntime::load(&rt, entry)?;
-    // compile the hot entry points before admitting traffic
-    model.precompile(&["full", "block", "head"], &entry.config.buckets)?;
-    let mut engine = Engine::new(&model, engine_config(args)?);
-    let cfg = ServerConfig { addr: args.str("addr", "127.0.0.1:7433"), max_queue: 1024 };
-    let done = server::serve(&mut engine, &cfg)?;
-    println!("served {done} requests");
-    Ok(())
+    with_model(args, |model, args| {
+        // prepare the hot entry points before admitting traffic
+        model.warmup(&["full", "block", "head"], &model.entry().config.buckets)?;
+        let mut engine = Engine::new(model, engine_config(args)?);
+        let cfg = ServerConfig { addr: args.str("addr", "127.0.0.1:7433"), max_queue: 1024 };
+        let done = server::serve(&mut engine, &cfg)?;
+        println!("served {done} requests");
+        Ok(())
+    })
 }
 
 fn load(args: &Args) -> Result<()> {

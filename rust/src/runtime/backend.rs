@@ -1,0 +1,94 @@
+//! Execution-backend traits — the seam between the serving coordinator and
+//! whatever actually runs the DiT forward pass (DESIGN.md §3).
+//!
+//! The engine, server, experiment runners and benches are written against
+//! `&dyn ModelBackend`; concrete implementations are
+//! [`crate::runtime::native::NativeBackend`] (pure Rust, `Send`, zero
+//! artifacts) and, behind the `pjrt` cargo feature,
+//! [`crate::runtime::pjrt::ModelRuntime`] (AOT HLO via the PJRT C API).
+//! Draft-strategy plugins and sharded/multi-threaded engines plug in at
+//! this same seam in later PRs.
+
+use anyhow::Result;
+
+use crate::config::ModelEntry;
+use crate::tensor::Tensor;
+
+/// One diffusion-transformer model with the four entry points the SpeCa
+/// engine schedules (paper §3.2): the full pass, its eps-only perf
+/// variant, the single verification block, and the output head.
+///
+/// Contract (shapes are row-major, flat `f32`):
+/// * `full(b, x[b·latent], t[b], y[b])` → `(eps [b, latent],
+///   boundaries [depth+1, b, tokens·dim])`; `boundaries[i]` is the input
+///   to block `i`, `boundaries[depth]` the head input;
+/// * `full_eps` returns only `eps` (backends may skip the boundary-stack
+///   transfer — EXPERIMENTS.md §Perf);
+/// * `block(b, layer, feat[b·tokens·dim], ..)` runs exactly block `layer`
+///   (runtime index) on the given features;
+/// * `head(b, feat, ..)` maps a last-boundary feature to `eps`;
+/// * batching must be transparent: row `i` of a bucket-`b` call equals the
+///   same input run at bucket 1 (padding rows are ignored by callers);
+/// * all calls are `&self`: backends are internally synchronized or
+///   immutable, so a `Send + Sync` backend can serve multiple engines.
+pub trait ModelBackend {
+    /// Model description: config, schedule and FLOPs tables. For artifact
+    /// backends this mirrors the manifest; native backends synthesize it.
+    fn entry(&self) -> &ModelEntry;
+
+    /// Short backend tag for logs and `speca info` ("native", "pjrt").
+    fn kind(&self) -> &'static str;
+
+    /// Whether an entry point ("full", "full_eps", "full_pallas", "block",
+    /// "head") is available on this backend.
+    fn supports(&self, entry_point: &str) -> bool;
+
+    /// Prepare the given entry points across batch buckets (compile and
+    /// memoize for AOT backends; a no-op for native execution). Called
+    /// before admitting traffic so the hot path never pays startup cost.
+    fn warmup(&self, entry_points: &[&str], buckets: &[usize]) -> Result<()>;
+
+    /// Full forward pass: `(eps, boundaries)`. `pallas` selects the
+    /// pallas-attention artifact variant where supported; backends without
+    /// one fall back to their default attention path.
+    fn full(
+        &self,
+        bucket: usize,
+        x: &[f32],
+        t: &[f32],
+        y: &[i32],
+        pallas: bool,
+    ) -> Result<(Tensor, Tensor)>;
+
+    /// Eps-only full pass (no boundary stack materialized).
+    fn full_eps(&self, bucket: usize, x: &[f32], t: &[f32], y: &[i32]) -> Result<Tensor>;
+
+    /// Verification block: feat [b, tokens·dim] → block(`layer`) output.
+    fn block(&self, bucket: usize, layer: i32, feat: &[f32], t: &[f32], y: &[i32])
+        -> Result<Tensor>;
+
+    /// Output head on a (predicted) last-boundary feature → eps.
+    fn head(&self, bucket: usize, feat: &[f32], t: &[f32], y: &[i32]) -> Result<Tensor>;
+}
+
+/// Metrics classifier (FID* features + IS* posteriors, DESIGN.md §2).
+///
+/// `classify(b, x[b·latent])` → `(logits [b, num_classes],
+/// feats [b, feat_dim])`, batching-transparent like [`ModelBackend`]. The
+/// `fid_*`/`sfid_*` tensors are the stored reference Gaussians
+/// (mean [d], covariance [d, d]) the Fréchet metrics compare against.
+pub trait ClassifierBackend {
+    fn latent_dim(&self) -> usize;
+    fn num_classes(&self) -> usize;
+    fn feat_dim(&self) -> usize;
+
+    /// Available batch buckets, sorted ascending.
+    fn buckets(&self) -> Vec<usize>;
+
+    fn classify(&self, bucket: usize, x: &[f32]) -> Result<(Tensor, Tensor)>;
+
+    fn fid_mu(&self) -> &Tensor;
+    fn fid_cov(&self) -> &Tensor;
+    fn sfid_mu(&self) -> &Tensor;
+    fn sfid_cov(&self) -> &Tensor;
+}

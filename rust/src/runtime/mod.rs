@@ -1,317 +1,68 @@
-//! PJRT runtime: load AOT HLO-text artifacts and execute them on the CPU
-//! client from the Rust request path (adapted from /opt/xla-example/load_hlo).
+//! Execution backends (DESIGN.md §3).
 //!
-//! Performance notes (EXPERIMENTS.md §Perf):
-//! * model weights are uploaded to device buffers **once** at load time and
-//!   passed by handle via `execute_b` — the per-step host→device traffic is
-//!   only the latent/feature inputs;
-//! * executables are compiled lazily per (entry, bucket) and memoized;
-//! * `PjRtClient` is `Rc`-based (not `Send`) so the engine owns the runtime
-//!   on a single thread; server threads talk to it over channels.
+//! * [`backend`] — the `ModelBackend` / `ClassifierBackend` traits every
+//!   layer above (engine, server, experiments, benches) is written
+//!   against;
+//! * [`native`] — pure-Rust, `Send + Sync` CPU reference of the DiT
+//!   forward pass; runs with zero artifacts (always compiled, the
+//!   default);
+//! * [`pjrt`] — AOT HLO artifacts executed through the PJRT C API;
+//!   compiled only with the `pjrt` cargo feature.
 
-use std::cell::RefCell;
-use std::collections::BTreeMap;
-use std::path::Path;
-use std::rc::Rc;
+pub mod backend;
+pub mod native;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 
-use anyhow::{anyhow, bail, Context, Result};
+pub use backend::{ClassifierBackend, ModelBackend};
+pub use native::{NativeBackend, NativeClassifier, NativeHub};
+#[cfg(feature = "pjrt")]
+pub use pjrt::{ClassifierRuntime, Exec, In, ModelRuntime, Runtime};
 
-use crate::config::{ClassifierEntry, ModelEntry};
-use crate::tensor::Tensor;
-use crate::weights::TensorFile;
-
-/// Convert an xla crate error into anyhow (xla::Error is not Send+Sync).
-macro_rules! xerr {
-    ($e:expr, $ctx:expr) => {
-        $e.map_err(|e| anyhow!("{}: {e:?}", $ctx))
-    };
+/// Which backend a CLI/bench invocation should use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    Native,
+    Pjrt,
 }
 
-pub struct Runtime {
-    pub client: xla::PjRtClient,
-}
-
-impl Runtime {
-    pub fn cpu() -> Result<Runtime> {
-        let client = xerr!(xla::PjRtClient::cpu(), "creating PJRT CPU client")?;
-        Ok(Runtime { client })
-    }
-
-    /// Parse HLO text and compile on this client.
-    pub fn compile_hlo(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
-        let proto = xerr!(
-            xla::HloModuleProto::from_text_file(path),
-            format!("parsing HLO text {}", path.display())
-        )?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        xerr!(self.client.compile(&comp), format!("compiling {}", path.display()))
-    }
-
-    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
-        xerr!(self.client.buffer_from_host_buffer(data, dims, None), "uploading f32 buffer")
-    }
-
-    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
-        xerr!(self.client.buffer_from_host_buffer(data, dims, None), "uploading i32 buffer")
-    }
-}
-
-/// One positional input for a generic execution.
-pub enum In<'a> {
-    F32(&'a [f32], &'a [usize]),
-    I32(&'a [i32], &'a [usize]),
-    ScalarF32(f32),
-    ScalarI32(i32),
-}
-
-fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
-    let shape = xerr!(lit.array_shape(), "output shape")?;
-    let dims: Vec<usize> = shape.dims().iter().map(|d| *d as usize).collect();
-    let data = xerr!(lit.to_vec::<f32>(), "output to_vec")?;
-    Ok(Tensor::new(dims, data))
-}
-
-/// A compiled artifact; weights (if any) are passed in per call as
-/// device-buffer handles.
-pub struct Exec {
-    exe: xla::PjRtLoadedExecutable,
-    name: String,
-}
-
-impl Exec {
-    /// Execute with `weights ++ inputs`; returns every tuple output.
-    pub fn run(
-        &self,
-        rt: &Runtime,
-        weights: &[xla::PjRtBuffer],
-        inputs: &[In<'_>],
-    ) -> Result<Vec<Tensor>> {
-        let mut owned: Vec<xla::PjRtBuffer> = Vec::with_capacity(inputs.len());
-        for inp in inputs {
-            let b = match inp {
-                In::F32(d, dims) => rt.upload_f32(d, dims)?,
-                In::I32(d, dims) => rt.upload_i32(d, dims)?,
-                In::ScalarF32(v) => rt.upload_f32(std::slice::from_ref(v), &[])?,
-                In::ScalarI32(v) => rt.upload_i32(std::slice::from_ref(v), &[])?,
-            };
-            owned.push(b);
-        }
-        let mut bufs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(weights.len() + owned.len());
-        bufs.extend(weights.iter());
-        bufs.extend(owned.iter());
-        let out = xerr!(self.exe.execute_b(&bufs), format!("executing {}", self.name))?;
-        let lit = xerr!(out[0][0].to_literal_sync(), "fetching output")?;
-        let parts = xerr!(lit.to_tuple(), "untupling output")?;
-        parts.iter().map(literal_to_tensor).collect()
-    }
-}
-
-/// All executables + device-resident weights for one model.
-pub struct ModelRuntime<'rt> {
-    rt: &'rt Runtime,
-    pub entry: ModelEntry,
-    weights: Vec<xla::PjRtBuffer>,
-    execs: RefCell<BTreeMap<(String, usize), Rc<Exec>>>,
-}
-
-impl<'rt> ModelRuntime<'rt> {
-    pub fn load(rt: &'rt Runtime, entry: &ModelEntry) -> Result<ModelRuntime<'rt>> {
-        let wf = TensorFile::load(&entry.weights)?;
-        let mut weights = Vec::new();
-        for spec in &entry.params {
-            let t = wf
-                .f32(&spec.name)
-                .with_context(|| format!("weights.bin missing {}", spec.name))?;
-            if t.shape != spec.shape {
-                bail!("weight {}: shape {:?} != manifest {:?}", spec.name, t.shape, spec.shape);
-            }
-            weights.push(rt.upload_f32(&t.data, &t.shape)?);
-        }
-        Ok(ModelRuntime {
-            rt,
-            entry: entry.clone(),
-            weights,
-            execs: RefCell::new(BTreeMap::new()),
-        })
-    }
-
-    /// Compile (or fetch memoized) executable for (entry_point, bucket).
-    pub fn exec(&self, entry_point: &str, bucket: usize) -> Result<Rc<Exec>> {
-        let key = (entry_point.to_string(), bucket);
-        if let Some(e) = self.execs.borrow().get(&key) {
-            return Ok(e.clone());
-        }
-        let path = self
-            .entry
-            .artifacts
-            .get(entry_point)
-            .and_then(|m| m.get(&bucket))
-            .with_context(|| format!("no artifact for {entry_point} bucket {bucket}"))?;
-        let exe = self.rt.compile_hlo(path)?;
-        let e = Rc::new(Exec { exe, name: format!("{entry_point}_b{bucket}") });
-        self.execs.borrow_mut().insert(key, e.clone());
-        Ok(e)
-    }
-
-    /// Compile a standalone kernel artifact (no weight closure).
-    pub fn kernel_exec(&self, name: &str) -> Result<Exec> {
-        let path = self
-            .entry
-            .kernel_artifacts
-            .get(name)
-            .with_context(|| format!("no kernel artifact {name}"))?;
-        Ok(Exec { exe: self.rt.compile_hlo(path)?, name: name.to_string() })
-    }
-
-    /// Warm up the executables the serving engine needs (compile is the
-    /// expensive part; do it before admitting traffic).
-    pub fn precompile(&self, entries: &[&str], buckets: &[usize]) -> Result<()> {
-        for e in entries {
-            for b in buckets {
-                self.exec(e, *b)?;
+/// Resolve a `--backend native|pjrt|auto` request. `auto` prefers PJRT
+/// when the feature is compiled in and artifacts are present; `pjrt` is
+/// rejected outright on builds without the feature.
+pub fn select_backend(requested: &str, artifacts_present: bool) -> anyhow::Result<BackendKind> {
+    match requested {
+        "native" => Ok(BackendKind::Native),
+        "pjrt" => {
+            if cfg!(feature = "pjrt") {
+                Ok(BackendKind::Pjrt)
+            } else {
+                anyhow::bail!("--backend pjrt requires building with --features pjrt")
             }
         }
-        Ok(())
-    }
-
-    /// Eps-only full pass: skips the boundary-stack device→host transfer
-    /// (perf-pass variant for policies that never read the feature cache).
-    pub fn full_eps(&self, bucket: usize, x: &[f32], t: &[f32], y: &[i32]) -> Result<Tensor> {
-        debug_assert_eq!(x.len(), bucket * self.entry.config.latent_dim);
-        let e = self.exec("full_eps", bucket)?;
-        let latent = self.entry.config.latent_dim;
-        let out = e.run(
-            self.rt,
-            &self.weights,
-            &[In::F32(x, &[bucket, latent]), In::F32(t, &[bucket]), In::I32(y, &[bucket])],
-        )?;
-        out.into_iter().next().context("missing eps output")
-    }
-
-    /// Full forward pass: (eps [B, latent], boundaries [L+1, B, T, D]).
-    pub fn full(
-        &self,
-        bucket: usize,
-        x: &[f32],
-        t: &[f32],
-        y: &[i32],
-        pallas: bool,
-    ) -> Result<(Tensor, Tensor)> {
-        let entry_point = if pallas { "full_pallas" } else { "full" };
-        debug_assert_eq!(x.len(), bucket * self.entry.config.latent_dim);
-        let e = self.exec(entry_point, bucket)?;
-        let latent = self.entry.config.latent_dim;
-        let out = e.run(
-            self.rt,
-            &self.weights,
-            &[In::F32(x, &[bucket, latent]), In::F32(t, &[bucket]), In::I32(y, &[bucket])],
-        )?;
-        let mut it = out.into_iter();
-        let eps = it.next().context("missing eps output")?;
-        let bounds = it.next().context("missing boundaries output")?;
-        Ok((eps, bounds))
-    }
-
-    /// Verification block: feat [B, T, D] -> block(layer) output [B, T, D].
-    pub fn block(
-        &self,
-        bucket: usize,
-        layer: i32,
-        feat: &[f32],
-        t: &[f32],
-        y: &[i32],
-    ) -> Result<Tensor> {
-        let cfg = &self.entry.config;
-        let e = self.exec("block", bucket)?;
-        let out = e.run(
-            self.rt,
-            &self.weights,
-            &[
-                In::ScalarI32(layer),
-                In::F32(feat, &[bucket, cfg.tokens, cfg.dim]),
-                In::F32(t, &[bucket]),
-                In::I32(y, &[bucket]),
-            ],
-        )?;
-        out.into_iter().next().context("missing block output")
-    }
-
-    /// Output head on a (predicted) last-boundary feature.
-    pub fn head(&self, bucket: usize, feat: &[f32], t: &[f32], y: &[i32]) -> Result<Tensor> {
-        let cfg = &self.entry.config;
-        let e = self.exec("head", bucket)?;
-        let out = e.run(
-            self.rt,
-            &self.weights,
-            &[
-                In::F32(feat, &[bucket, cfg.tokens, cfg.dim]),
-                In::F32(t, &[bucket]),
-                In::I32(y, &[bucket]),
-            ],
-        )?;
-        out.into_iter().next().context("missing head output")
+        "auto" => Ok(if cfg!(feature = "pjrt") && artifacts_present {
+            BackendKind::Pjrt
+        } else {
+            BackendKind::Native
+        }),
+        other => anyhow::bail!("unknown backend '{other}' (expected native|pjrt|auto)"),
     }
 }
 
-/// Metrics classifier runtime (FID features + IS posteriors).
-pub struct ClassifierRuntime<'rt> {
-    rt: &'rt Runtime,
-    pub entry: ClassifierEntry,
-    weights: Vec<xla::PjRtBuffer>,
-    execs: RefCell<BTreeMap<usize, Rc<Exec>>>,
-    pub fid_mu: Tensor,
-    pub fid_cov: Tensor,
-    pub sfid_mu: Tensor,
-    pub sfid_cov: Tensor,
-}
+#[cfg(test)]
+mod tests {
+    use super::*;
 
-impl<'rt> ClassifierRuntime<'rt> {
-    pub fn load(rt: &'rt Runtime, entry: &ClassifierEntry) -> Result<ClassifierRuntime<'rt>> {
-        let wf = TensorFile::load(&entry.weights)?;
-        let mut weights = Vec::new();
-        for spec in &entry.params {
-            let t = wf.f32(&spec.name)?;
-            weights.push(rt.upload_f32(&t.data, &t.shape)?);
+    #[test]
+    fn backend_selection_rules() {
+        assert_eq!(select_backend("native", true).unwrap(), BackendKind::Native);
+        assert!(select_backend("warp", false).is_err());
+        if cfg!(feature = "pjrt") {
+            assert_eq!(select_backend("pjrt", false).unwrap(), BackendKind::Pjrt);
+            assert_eq!(select_backend("auto", true).unwrap(), BackendKind::Pjrt);
+        } else {
+            assert!(select_backend("pjrt", false).is_err());
+            assert_eq!(select_backend("auto", true).unwrap(), BackendKind::Native);
         }
-        Ok(ClassifierRuntime {
-            rt,
-            entry: entry.clone(),
-            weights,
-            execs: RefCell::new(BTreeMap::new()),
-            fid_mu: wf.f32("fid_mu")?.clone(),
-            fid_cov: wf.f32("fid_cov")?.clone(),
-            sfid_mu: wf.f32("sfid_mu")?.clone(),
-            sfid_cov: wf.f32("sfid_cov")?.clone(),
-        })
-    }
-
-    fn exec(&self, bucket: usize) -> Result<Rc<Exec>> {
-        if let Some(e) = self.execs.borrow().get(&bucket) {
-            return Ok(e.clone());
-        }
-        let path = self
-            .entry
-            .artifacts
-            .get(&bucket)
-            .with_context(|| format!("no classifier artifact for bucket {bucket}"))?;
-        let e = Rc::new(Exec { exe: self.rt.compile_hlo(path)?, name: format!("cls_b{bucket}") });
-        self.execs.borrow_mut().insert(bucket, e.clone());
-        Ok(e)
-    }
-
-    pub fn buckets(&self) -> Vec<usize> {
-        self.entry.artifacts.keys().copied().collect()
-    }
-
-    /// x: [B, latent] -> (logits [B, K], feats [B, feat_dim]).
-    pub fn classify(&self, bucket: usize, x: &[f32]) -> Result<(Tensor, Tensor)> {
-        debug_assert_eq!(x.len(), bucket * self.entry.latent_dim);
-        let e = self.exec(bucket)?;
-        let out =
-            e.run(self.rt, &self.weights, &[In::F32(x, &[bucket, self.entry.latent_dim])])?;
-        let mut it = out.into_iter();
-        let logits = it.next().context("missing logits")?;
-        let feats = it.next().context("missing feats")?;
-        Ok((logits, feats))
+        assert_eq!(select_backend("auto", false).unwrap(), BackendKind::Native);
     }
 }

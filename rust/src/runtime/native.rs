@@ -1,0 +1,1120 @@
+//! Native execution backend: a pure-Rust, `Send + Sync` CPU reference of
+//! the DiT forward pass, faithful to `python/compile/model.py` (patchify /
+//! embed, adaLN-modulated attention + MLP blocks with boundary taps, adaLN
+//! head). It runs with **zero artifacts** — weights come either from an
+//! AOT `weights.bin` ([`NativeBackend::from_entry`]) or from a seeded
+//! deterministic initializer ([`NativeBackend::seeded`]) — which is what
+//! lets the engine tests, the server and the bench harness execute on a
+//! bare checkout, and what removes the single-thread PJRT constraint from
+//! the serving path (DESIGN.md §3).
+//!
+//! Numerical contract: batching is transparent (each sample is computed
+//! independently, so bucket-B row `i` is bitwise equal to a bucket-1 run),
+//! and the entry points satisfy `block(l, boundaries[l]) == boundaries[l+1]`
+//! and `head(boundaries[depth]) == eps` — the invariants the golden-parity
+//! suite asserts for the PJRT backend.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{
+    FlopsTable, ModelConfig, ModelEntry, ParamSpec, Schedule, ScheduleKind,
+};
+use crate::coordinator::engine::timestep_embedding;
+use crate::runtime::backend::{ClassifierBackend, ModelBackend};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+use crate::weights::TensorFile;
+
+/// Architecture knobs not captured by [`ModelConfig`] (the AOT manifest
+/// folds them into the compiled artifacts; the native backend needs them
+/// explicitly). Derived from tensor shapes when loading `weights.bin`.
+#[derive(Debug, Clone, Copy)]
+pub struct NativeArch {
+    pub mlp_ratio: usize,
+    pub t_freq_dim: usize,
+}
+
+impl Default for NativeArch {
+    fn default() -> Self {
+        NativeArch { mlp_ratio: 4, t_freq_dim: 64 }
+    }
+}
+
+struct BlockW {
+    adaln_w: Vec<f32>, // [D, 6D]
+    adaln_b: Vec<f32>, // [6D]
+    qkv_w: Vec<f32>,   // [D, 3D]
+    qkv_b: Vec<f32>,   // [3D]
+    proj_w: Vec<f32>,  // [D, D]
+    proj_b: Vec<f32>,  // [D]
+    mlp_w1: Vec<f32>,  // [D, M·D]
+    mlp_b1: Vec<f32>,  // [M·D]
+    mlp_w2: Vec<f32>,  // [M·D, D]
+    mlp_b2: Vec<f32>,  // [D]
+}
+
+struct Weights {
+    patch_w: Vec<f32>,      // [pd, D]
+    patch_b: Vec<f32>,      // [D]
+    pos_emb: Vec<f32>,      // [T, D]
+    t_w1: Vec<f32>,         // [fd, D]
+    t_b1: Vec<f32>,         // [D]
+    t_w2: Vec<f32>,         // [D, D]
+    t_b2: Vec<f32>,         // [D]
+    y_emb: Vec<f32>,        // [K, D]
+    blocks: Vec<BlockW>,    // depth entries
+    head_adaln_w: Vec<f32>, // [D, 2D]
+    head_adaln_b: Vec<f32>, // [2D]
+    head_w: Vec<f32>,       // [D, pd]
+    head_b: Vec<f32>,       // [pd]
+}
+
+pub struct NativeBackend {
+    entry: ModelEntry,
+    arch: NativeArch,
+    w: Weights,
+}
+
+// ---------------------------------------------------------------------------
+// Dense math helpers (row-major, f32)
+// ---------------------------------------------------------------------------
+
+/// out[m, n] = a[m, k] @ w[k, n] + bias[n] (ikj loop order: the inner loop
+/// runs down contiguous rows of `w` and `out`, which vectorizes).
+fn matmul_add(a: &[f32], w: &[f32], bias: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(w.len(), k * n);
+    debug_assert_eq!(bias.len(), n);
+    debug_assert_eq!(out.len(), m * n);
+    for i in 0..m {
+        let out_row = &mut out[i * n..(i + 1) * n];
+        out_row.copy_from_slice(bias);
+        let a_row = &a[i * k..(i + 1) * k];
+        for (kk, &aik) in a_row.iter().enumerate() {
+            let w_row = &w[kk * n..(kk + 1) * n];
+            for (o, &wv) in out_row.iter_mut().zip(w_row) {
+                *o += aik * wv;
+            }
+        }
+    }
+}
+
+fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// Per-token LayerNorm (population variance, eps 1e-6 — matches model.py).
+fn layer_norm(x: &[f32], out: &mut [f32], tokens: usize, d: usize) {
+    for t in 0..tokens {
+        let row = &x[t * d..(t + 1) * d];
+        let mu: f32 = row.iter().sum::<f32>() / d as f32;
+        let var: f32 = row.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
+        let rs = 1.0 / (var + 1e-6).sqrt();
+        for (o, &v) in out[t * d..(t + 1) * d].iter_mut().zip(row) {
+            *o = (v - mu) * rs;
+        }
+    }
+}
+
+/// x ← x·(1 + scale) + shift, broadcast over tokens.
+fn modulate(x: &mut [f32], shift: &[f32], scale: &[f32], tokens: usize, d: usize) {
+    for t in 0..tokens {
+        for (j, v) in x[t * d..(t + 1) * d].iter_mut().enumerate() {
+            *v = *v * (1.0 + scale[j]) + shift[j];
+        }
+    }
+}
+
+/// Softmax attention over an interleaved qkv buffer [T, 3D], writing [T, D].
+fn attention(qkv: &[f32], tokens: usize, d: usize, heads: usize, o: &mut [f32]) {
+    let dh = d / heads;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let row = 3 * d;
+    let mut probs = vec![0f32; tokens];
+    o.fill(0.0);
+    for h in 0..heads {
+        let off = h * dh;
+        for tq in 0..tokens {
+            let q_row = &qkv[tq * row + off..tq * row + off + dh];
+            let mut maxv = f32::NEG_INFINITY;
+            for (tk, p) in probs.iter_mut().enumerate() {
+                let k_row = &qkv[tk * row + d + off..tk * row + d + off + dh];
+                let dot: f32 = q_row.iter().zip(k_row).map(|(a, b)| a * b).sum();
+                *p = dot * scale;
+                maxv = maxv.max(*p);
+            }
+            let mut denom = 0f32;
+            for p in probs.iter_mut() {
+                *p = (*p - maxv).exp();
+                denom += *p;
+            }
+            let inv = 1.0 / denom;
+            let o_row = &mut o[tq * d + off..tq * d + off + dh];
+            for (tk, &p) in probs.iter().enumerate() {
+                let v_row = &qkv[tk * row + 2 * d + off..tk * row + 2 * d + off + dh];
+                let pw = p * inv;
+                for (ov, &vv) in o_row.iter_mut().zip(v_row) {
+                    *ov += pw * vv;
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Synthetic model description (zero-artifact path)
+// ---------------------------------------------------------------------------
+
+/// Serve schedule for a synthetic native model: cosine ᾱ over the serve
+/// steps for DDIM (clamped away from 0/1 so untrained nets stay finite),
+/// uniform Euler steps for rectified flow.
+fn synth_schedule(cfg: &ModelConfig) -> Schedule {
+    let steps = cfg.serve_steps;
+    match cfg.schedule_kind {
+        ScheduleKind::Ddim => {
+            let mut t_model = Vec::with_capacity(steps);
+            let mut ab_t = Vec::with_capacity(steps);
+            for i in 0..steps {
+                let frac = (steps - i) as f64 / steps as f64; // 1 = noisiest
+                t_model.push((1000.0 * frac) as f32);
+                let a = (((frac + 0.008) / 1.008) * std::f64::consts::FRAC_PI_2).cos();
+                ab_t.push((a * a).clamp(0.01, 0.9995) as f32);
+            }
+            let mut ab_prev = Vec::with_capacity(steps);
+            for i in 0..steps {
+                ab_prev.push(if i + 1 < steps { ab_t[i + 1] } else { 1.0 });
+            }
+            Schedule { kind: cfg.schedule_kind, t_model, ab_t, ab_prev, dt: 0.0 }
+        }
+        ScheduleKind::RectifiedFlow => {
+            let t_model =
+                (0..steps).map(|i| (steps - i) as f32 / steps as f32).collect();
+            Schedule {
+                kind: cfg.schedule_kind,
+                t_model,
+                ab_t: Vec::new(),
+                ab_prev: Vec::new(),
+                dt: 1.0 / steps as f32,
+            }
+        }
+    }
+}
+
+/// Analytic FLOPs tables, mirroring `python/compile/configs.py` (MACs×2).
+fn synth_flops(cfg: &ModelConfig, arch: &NativeArch) -> FlopsTable {
+    let (t, d, m) = (cfg.tokens as u64, cfg.dim as u64, arch.mlp_ratio as u64);
+    let pd = (cfg.patch * cfg.patch * cfg.channels) as u64;
+    let fd = arch.t_freq_dim as u64;
+    let per_tok = 2 * d * 3 * d + 2 * d * d + 2 * d * m * d * 2 + 2 * d * 6 * d;
+    let attn = 2 * 2 * t * t * d;
+    let block1 = t * per_tok + attn;
+    let head1 = t * (2 * d * pd + 2 * d * 2 * d);
+    let embed1 = t * 2 * pd * d + 2 * fd * d + 2 * d * d;
+    let full1 = embed1 + cfg.depth as u64 * block1 + head1;
+    let tab = |per: u64| -> BTreeMap<usize, u64> {
+        cfg.buckets.iter().map(|b| (*b, per * *b as u64)).collect()
+    };
+    FlopsTable {
+        full_step: tab(full1),
+        block: tab(block1),
+        head: tab(head1),
+        // Matches aot.py's manifest value (predict_flops(1, 1)//2 =
+        // 6·T·D, taps folded in) so alpha/gamma/speedup bookkeeping is
+        // identical across native and PJRT backends.
+        predict_per_order: 6 * t * d,
+    }
+}
+
+fn param_specs(cfg: &ModelConfig, arch: &NativeArch) -> Vec<ParamSpec> {
+    let (d, l, t) = (cfg.dim, cfg.depth, cfg.tokens);
+    let m = arch.mlp_ratio;
+    let pd = cfg.patch * cfg.patch * cfg.channels;
+    let fd = arch.t_freq_dim;
+    let spec = |name: &str, shape: Vec<usize>| ParamSpec { name: name.to_string(), shape };
+    vec![
+        spec("patch_w", vec![pd, d]),
+        spec("patch_b", vec![d]),
+        spec("pos_emb", vec![t, d]),
+        spec("t_w1", vec![fd, d]),
+        spec("t_b1", vec![d]),
+        spec("t_w2", vec![d, d]),
+        spec("t_b2", vec![d]),
+        spec("y_emb", vec![cfg.num_classes, d]),
+        spec("blk_adaln_w", vec![l, d, 6 * d]),
+        spec("blk_adaln_b", vec![l, 6 * d]),
+        spec("blk_qkv_w", vec![l, d, 3 * d]),
+        spec("blk_qkv_b", vec![l, 3 * d]),
+        spec("blk_proj_w", vec![l, d, d]),
+        spec("blk_proj_b", vec![l, d]),
+        spec("blk_mlp_w1", vec![l, d, m * d]),
+        spec("blk_mlp_b1", vec![l, m * d]),
+        spec("blk_mlp_w2", vec![l, m * d, d]),
+        spec("blk_mlp_b2", vec![l, d]),
+        spec("head_adaln_w", vec![d, 2 * d]),
+        spec("head_adaln_b", vec![2 * d]),
+        spec("head_w", vec![d, pd]),
+        spec("head_b", vec![pd]),
+    ]
+}
+
+/// Synthesize a complete [`ModelEntry`] (config + schedule + FLOPs tables,
+/// no artifact paths) for a native model. Public so harness code (e.g. the
+/// coordinator-overhead bench) can build stub backends against it.
+pub fn synthetic_entry(cfg: &ModelConfig, arch: &NativeArch) -> ModelEntry {
+    ModelEntry {
+        schedule: synth_schedule(cfg),
+        params: param_specs(cfg, arch),
+        weights: PathBuf::new(),
+        goldens: PathBuf::new(),
+        artifacts: BTreeMap::new(),
+        kernel_artifacts: BTreeMap::new(),
+        flops: synth_flops(cfg, arch),
+        config: cfg.clone(),
+    }
+}
+
+impl NativeBackend {
+    /// Deterministic random model (DiT-style init, but with *non-zero*
+    /// adaLN/head weights: adaLN-zero would make every block the identity,
+    /// which is the right training init but a degenerate serving fixture —
+    /// feature trajectories would carry no layer dynamics to forecast).
+    pub fn seeded(cfg: ModelConfig, seed: u64) -> NativeBackend {
+        let arch = NativeArch::default();
+        let entry = synthetic_entry(&cfg, &arch);
+        let (d, fd, m) = (cfg.dim, arch.t_freq_dim, arch.mlp_ratio);
+        let pd = cfg.patch * cfg.patch * cfg.channels;
+        let mut rng = Rng::new(seed);
+        let mut randn = |n: usize, scale: f32| -> Vec<f32> {
+            (0..n).map(|_| rng.normal() as f32 * scale).collect()
+        };
+        let inv = |fan_in: usize| 1.0 / (fan_in as f32).sqrt();
+        let patch_w = randn(pd * d, inv(pd));
+        let pos_emb = randn(cfg.tokens * d, 0.02);
+        let t_w1 = randn(fd * d, inv(fd));
+        let t_w2 = randn(d * d, inv(d));
+        let y_emb = randn(cfg.num_classes * d, 0.02);
+        let mut blocks = Vec::with_capacity(cfg.depth);
+        for _ in 0..cfg.depth {
+            blocks.push(BlockW {
+                adaln_w: randn(d * 6 * d, 0.2 * inv(d)),
+                adaln_b: vec![0.0; 6 * d],
+                qkv_w: randn(d * 3 * d, inv(d)),
+                qkv_b: vec![0.0; 3 * d],
+                proj_w: randn(d * d, inv(d)),
+                proj_b: vec![0.0; d],
+                mlp_w1: randn(d * m * d, inv(d)),
+                mlp_b1: vec![0.0; m * d],
+                mlp_w2: randn(m * d * d, inv(m * d)),
+                mlp_b2: vec![0.0; d],
+            });
+        }
+        let head_adaln_w = randn(d * 2 * d, 0.2 * inv(d));
+        let head_w = randn(d * pd, inv(d));
+        let w = Weights {
+            patch_w,
+            patch_b: vec![0.0; d],
+            pos_emb,
+            t_w1,
+            t_b1: vec![0.0; d],
+            t_w2,
+            t_b2: vec![0.0; d],
+            y_emb,
+            blocks,
+            head_adaln_w,
+            head_adaln_b: vec![0.0; 2 * d],
+            head_w,
+            head_b: vec![0.0; pd],
+        };
+        NativeBackend { entry, arch, w }
+    }
+
+    /// Load trained weights from an AOT manifest entry's `weights.bin`
+    /// (same tensor names/stacking as `python/compile/model.py`).
+    pub fn from_entry(entry: &ModelEntry) -> Result<NativeBackend> {
+        let tf = TensorFile::load(&entry.weights)?;
+        Self::from_tensor_file(entry.clone(), &tf)
+    }
+
+    fn from_tensor_file(entry: ModelEntry, tf: &TensorFile) -> Result<NativeBackend> {
+        let cfg = &entry.config;
+        let (d, l) = (cfg.dim, cfg.depth);
+        let pd = cfg.patch * cfg.patch * cfg.channels;
+        let t_w1 = tf.f32("t_w1")?;
+        let fd = *t_w1.shape.first().context("t_w1 has no shape")?;
+        let mlp_w1 = tf.f32("blk_mlp_w1")?;
+        if mlp_w1.shape.len() != 3 || mlp_w1.shape[0] != l || mlp_w1.shape[1] != d {
+            bail!("blk_mlp_w1 shape {:?} inconsistent with depth {l} / dim {d}", mlp_w1.shape);
+        }
+        let m = mlp_w1.shape[2] / d;
+        let arch = NativeArch { mlp_ratio: m, t_freq_dim: fd };
+
+        let full = |name: &str, len: usize| -> Result<Vec<f32>> {
+            let t = tf.f32(name)?;
+            if t.data.len() != len {
+                bail!("weight {name}: {} elements, expected {len}", t.data.len());
+            }
+            Ok(t.data.clone())
+        };
+        // Stacked per-layer tensors [L, ...] are sliced into per-block rows.
+        let layer = |name: &str, per: usize, li: usize| -> Result<Vec<f32>> {
+            let t = tf.f32(name)?;
+            if t.data.len() != l * per {
+                bail!("weight {name}: {} elements, expected {}", t.data.len(), l * per);
+            }
+            Ok(t.data[li * per..(li + 1) * per].to_vec())
+        };
+        let mut blocks = Vec::with_capacity(l);
+        for li in 0..l {
+            blocks.push(BlockW {
+                adaln_w: layer("blk_adaln_w", d * 6 * d, li)?,
+                adaln_b: layer("blk_adaln_b", 6 * d, li)?,
+                qkv_w: layer("blk_qkv_w", d * 3 * d, li)?,
+                qkv_b: layer("blk_qkv_b", 3 * d, li)?,
+                proj_w: layer("blk_proj_w", d * d, li)?,
+                proj_b: layer("blk_proj_b", d, li)?,
+                mlp_w1: layer("blk_mlp_w1", d * m * d, li)?,
+                mlp_b1: layer("blk_mlp_b1", m * d, li)?,
+                mlp_w2: layer("blk_mlp_w2", m * d * d, li)?,
+                mlp_b2: layer("blk_mlp_b2", d, li)?,
+            });
+        }
+        let w = Weights {
+            patch_w: full("patch_w", pd * d)?,
+            patch_b: full("patch_b", d)?,
+            pos_emb: full("pos_emb", cfg.tokens * d)?,
+            t_w1: full("t_w1", fd * d)?,
+            t_b1: full("t_b1", d)?,
+            t_w2: full("t_w2", d * d)?,
+            t_b2: full("t_b2", d)?,
+            y_emb: full("y_emb", cfg.num_classes * d)?,
+            blocks,
+            head_adaln_w: full("head_adaln_w", d * 2 * d)?,
+            head_adaln_b: full("head_adaln_b", 2 * d)?,
+            head_w: full("head_w", d * pd)?,
+            head_b: full("head_b", pd)?,
+        };
+        Ok(NativeBackend { entry, arch, w })
+    }
+
+    pub fn arch(&self) -> &NativeArch {
+        &self.arch
+    }
+
+    fn patch_dim(&self) -> usize {
+        let cfg = &self.entry.config;
+        cfg.patch * cfg.patch * cfg.channels
+    }
+
+    /// [latent] -> token patches [T, pd] (layout mirrors model.py).
+    fn patchify(&self, x: &[f32]) -> Vec<f32> {
+        let cfg = &self.entry.config;
+        let (fr, ch, img, p) = (cfg.frames, cfg.channels, cfg.image_size, cfg.patch);
+        let hb = img / p;
+        let pd = self.patch_dim();
+        let mut out = vec![0f32; cfg.tokens * pd];
+        for f in 0..fr {
+            for bi in 0..hb {
+                for bj in 0..hb {
+                    let tok = (f * hb + bi) * hb + bj;
+                    for pi in 0..p {
+                        for pj in 0..p {
+                            for c in 0..ch {
+                                let src = ((f * ch + c) * img + (bi * p + pi)) * img
+                                    + (bj * p + pj);
+                                out[tok * pd + (pi * p + pj) * ch + c] = x[src];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// [T, pd] -> [latent] (exact inverse of `patchify`).
+    fn unpatchify(&self, tok: &[f32]) -> Vec<f32> {
+        let cfg = &self.entry.config;
+        let (fr, ch, img, p) = (cfg.frames, cfg.channels, cfg.image_size, cfg.patch);
+        let hb = img / p;
+        let pd = self.patch_dim();
+        let mut out = vec![0f32; cfg.latent_dim];
+        for f in 0..fr {
+            for bi in 0..hb {
+                for bj in 0..hb {
+                    let t = (f * hb + bi) * hb + bj;
+                    for pi in 0..p {
+                        for pj in 0..p {
+                            for c in 0..ch {
+                                let dst = ((f * ch + c) * img + (bi * p + pi)) * img
+                                    + (bj * p + pj);
+                                out[dst] = tok[t * pd + (pi * p + pj) * ch + c];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// silu(conditioning vector) for one sample: silu(MLP(sin-embed(t)) +
+    /// y_emb[y]). The silu is pre-applied because every consumer
+    /// (block adaLN, head adaLN) immediately feeds it through silu.
+    fn cond_silu(&self, t: f32, y: i32) -> Vec<f32> {
+        let d = self.entry.config.dim;
+        let fd = self.arch.t_freq_dim;
+        let te = timestep_embedding(t, fd);
+        let mut h = vec![0f32; d];
+        matmul_add(&te, &self.w.t_w1, &self.w.t_b1, 1, fd, d, &mut h);
+        for v in h.iter_mut() {
+            *v = silu(*v);
+        }
+        let mut c = vec![0f32; d];
+        matmul_add(&h, &self.w.t_w2, &self.w.t_b2, 1, d, d, &mut c);
+        let k = (y.rem_euclid(self.entry.config.num_classes as i32)) as usize;
+        for (cv, ev) in c.iter_mut().zip(&self.w.y_emb[k * d..(k + 1) * d]) {
+            *cv += ev;
+        }
+        for v in c.iter_mut() {
+            *v = silu(*v);
+        }
+        c
+    }
+
+    /// [latent] -> embedded tokens [T, D].
+    fn embed_tokens(&self, x_flat: &[f32]) -> Vec<f32> {
+        let cfg = &self.entry.config;
+        let (t, d) = (cfg.tokens, cfg.dim);
+        let pd = self.patch_dim();
+        let patches = self.patchify(x_flat);
+        let mut xt = vec![0f32; t * d];
+        matmul_add(&patches, &self.w.patch_w, &self.w.patch_b, t, pd, d, &mut xt);
+        for (v, p) in xt.iter_mut().zip(&self.w.pos_emb) {
+            *v += p;
+        }
+        xt
+    }
+
+    /// One adaLN-zero DiT block in place on [T, D] tokens.
+    fn block_apply(&self, l: usize, x: &mut [f32], c_silu: &[f32]) {
+        let cfg = &self.entry.config;
+        let (t, d) = (cfg.tokens, cfg.dim);
+        let feat = t * d;
+        let bw = &self.w.blocks[l];
+        let mut mod6 = vec![0f32; 6 * d];
+        matmul_add(c_silu, &bw.adaln_w, &bw.adaln_b, 1, d, 6 * d, &mut mod6);
+        let (sh1, rest) = mod6.split_at(d);
+        let (s1, rest) = rest.split_at(d);
+        let (g1, rest) = rest.split_at(d);
+        let (sh2, rest) = rest.split_at(d);
+        let (s2, g2) = rest.split_at(d);
+        // attention branch
+        let mut h = vec![0f32; feat];
+        layer_norm(x, &mut h, t, d);
+        modulate(&mut h, sh1, s1, t, d);
+        let mut qkv = vec![0f32; t * 3 * d];
+        matmul_add(&h, &bw.qkv_w, &bw.qkv_b, t, d, 3 * d, &mut qkv);
+        let mut o = vec![0f32; feat];
+        attention(&qkv, t, d, cfg.heads, &mut o);
+        let mut proj = vec![0f32; feat];
+        matmul_add(&o, &bw.proj_w, &bw.proj_b, t, d, d, &mut proj);
+        for tok in 0..t {
+            for j in 0..d {
+                x[tok * d + j] += g1[j] * proj[tok * d + j];
+            }
+        }
+        // MLP branch
+        layer_norm(x, &mut h, t, d);
+        modulate(&mut h, sh2, s2, t, d);
+        let md = self.arch.mlp_ratio * d;
+        let mut m1 = vec![0f32; t * md];
+        matmul_add(&h, &bw.mlp_w1, &bw.mlp_b1, t, d, md, &mut m1);
+        for v in m1.iter_mut() {
+            *v = silu(*v);
+        }
+        let mut m2 = vec![0f32; feat];
+        matmul_add(&m1, &bw.mlp_w2, &bw.mlp_b2, t, md, d, &mut m2);
+        for tok in 0..t {
+            for j in 0..d {
+                x[tok * d + j] += g2[j] * m2[tok * d + j];
+            }
+        }
+    }
+
+    /// Final adaLN + linear head on [T, D] tokens -> eps [latent].
+    fn head_tokens(&self, x: &[f32], c_silu: &[f32]) -> Vec<f32> {
+        let cfg = &self.entry.config;
+        let (t, d) = (cfg.tokens, cfg.dim);
+        let pd = self.patch_dim();
+        let mut mod2 = vec![0f32; 2 * d];
+        matmul_add(c_silu, &self.w.head_adaln_w, &self.w.head_adaln_b, 1, d, 2 * d, &mut mod2);
+        let (shift, scale) = mod2.split_at(d);
+        let mut h = vec![0f32; t * d];
+        layer_norm(x, &mut h, t, d);
+        modulate(&mut h, shift, scale, t, d);
+        let mut tok_out = vec![0f32; t * pd];
+        matmul_add(&h, &self.w.head_w, &self.w.head_b, t, d, pd, &mut tok_out);
+        self.unpatchify(&tok_out)
+    }
+
+    fn check_batch(&self, bucket: usize, t: &[f32], y: &[i32]) -> Result<()> {
+        if bucket == 0 || t.len() != bucket || y.len() != bucket {
+            bail!(
+                "batch mismatch: bucket {bucket}, t len {}, y len {}",
+                t.len(),
+                y.len()
+            );
+        }
+        Ok(())
+    }
+
+    /// Shared full pass; materializes boundaries only when requested.
+    fn forward(
+        &self,
+        bucket: usize,
+        x: &[f32],
+        t: &[f32],
+        y: &[i32],
+        with_bounds: bool,
+    ) -> Result<(Tensor, Option<Tensor>)> {
+        self.check_batch(bucket, t, y)?;
+        let cfg = &self.entry.config;
+        let (tokens, d, depth, latent) = (cfg.tokens, cfg.dim, cfg.depth, cfg.latent_dim);
+        if x.len() != bucket * latent {
+            bail!("full: x len {} != bucket {bucket} · latent {latent}", x.len());
+        }
+        let feat = tokens * d;
+        let mut eps = vec![0f32; bucket * latent];
+        let mut bounds =
+            if with_bounds { vec![0f32; (depth + 1) * bucket * feat] } else { Vec::new() };
+        for s in 0..bucket {
+            let c = self.cond_silu(t[s], y[s]);
+            let mut xt = self.embed_tokens(&x[s * latent..(s + 1) * latent]);
+            if with_bounds {
+                bounds[s * feat..(s + 1) * feat].copy_from_slice(&xt);
+            }
+            for l in 0..depth {
+                self.block_apply(l, &mut xt, &c);
+                if with_bounds {
+                    let off = ((l + 1) * bucket + s) * feat;
+                    bounds[off..off + feat].copy_from_slice(&xt);
+                }
+            }
+            eps[s * latent..(s + 1) * latent].copy_from_slice(&self.head_tokens(&xt, &c));
+        }
+        let eps = Tensor::new(vec![bucket, latent], eps);
+        let bounds = if with_bounds {
+            Some(Tensor::new(vec![depth + 1, bucket, tokens, d], bounds))
+        } else {
+            None
+        };
+        Ok((eps, bounds))
+    }
+}
+
+impl ModelBackend for NativeBackend {
+    fn entry(&self) -> &ModelEntry {
+        &self.entry
+    }
+
+    fn kind(&self) -> &'static str {
+        "native"
+    }
+
+    fn supports(&self, entry_point: &str) -> bool {
+        matches!(entry_point, "full" | "full_eps" | "block" | "head")
+    }
+
+    fn warmup(&self, _entry_points: &[&str], _buckets: &[usize]) -> Result<()> {
+        Ok(())
+    }
+
+    fn full(
+        &self,
+        bucket: usize,
+        x: &[f32],
+        t: &[f32],
+        y: &[i32],
+        _pallas: bool,
+    ) -> Result<(Tensor, Tensor)> {
+        let (eps, bounds) = self.forward(bucket, x, t, y, true)?;
+        Ok((eps, bounds.expect("boundaries requested")))
+    }
+
+    fn full_eps(&self, bucket: usize, x: &[f32], t: &[f32], y: &[i32]) -> Result<Tensor> {
+        Ok(self.forward(bucket, x, t, y, false)?.0)
+    }
+
+    fn block(
+        &self,
+        bucket: usize,
+        layer: i32,
+        feat: &[f32],
+        t: &[f32],
+        y: &[i32],
+    ) -> Result<Tensor> {
+        self.check_batch(bucket, t, y)?;
+        let cfg = &self.entry.config;
+        let flen = cfg.tokens * cfg.dim;
+        if layer < 0 || layer as usize >= cfg.depth {
+            bail!("block layer {layer} out of range (depth {})", cfg.depth);
+        }
+        if feat.len() != bucket * flen {
+            bail!("block: feat len {} != bucket {bucket} · feat {flen}", feat.len());
+        }
+        let mut out = vec![0f32; bucket * flen];
+        for s in 0..bucket {
+            let c = self.cond_silu(t[s], y[s]);
+            let row = &mut out[s * flen..(s + 1) * flen];
+            row.copy_from_slice(&feat[s * flen..(s + 1) * flen]);
+            self.block_apply(layer as usize, row, &c);
+        }
+        Ok(Tensor::new(vec![bucket, cfg.tokens, cfg.dim], out))
+    }
+
+    fn head(&self, bucket: usize, feat: &[f32], t: &[f32], y: &[i32]) -> Result<Tensor> {
+        self.check_batch(bucket, t, y)?;
+        let cfg = &self.entry.config;
+        let flen = cfg.tokens * cfg.dim;
+        if feat.len() != bucket * flen {
+            bail!("head: feat len {} != bucket {bucket} · feat {flen}", feat.len());
+        }
+        let mut out = vec![0f32; bucket * cfg.latent_dim];
+        for s in 0..bucket {
+            let c = self.cond_silu(t[s], y[s]);
+            let eps = self.head_tokens(&feat[s * flen..(s + 1) * flen], &c);
+            out[s * cfg.latent_dim..(s + 1) * cfg.latent_dim].copy_from_slice(&eps);
+        }
+        Ok(Tensor::new(vec![bucket, cfg.latent_dim], out))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Native metrics classifier
+// ---------------------------------------------------------------------------
+
+/// Seeded tanh-MLP classifier (cls_fwd in model.py) with identity-Gaussian
+/// FID references — meaningless in absolute terms but finite, smooth and
+/// deterministic, so the experiment harness runs end-to-end with zero
+/// artifacts.
+pub struct NativeClassifier {
+    latent: usize,
+    hidden: usize,
+    feat: usize,
+    classes: usize,
+    w1: Vec<f32>,
+    b1: Vec<f32>,
+    w2: Vec<f32>,
+    b2: Vec<f32>,
+    w3: Vec<f32>,
+    b3: Vec<f32>,
+    fid_mu: Tensor,
+    fid_cov: Tensor,
+    sfid_mu: Tensor,
+    sfid_cov: Tensor,
+}
+
+fn identity_gaussian(d: usize) -> (Tensor, Tensor) {
+    let mut cov = vec![0f32; d * d];
+    for i in 0..d {
+        cov[i * d + i] = 1.0;
+    }
+    (Tensor::zeros(vec![d]), Tensor::new(vec![d, d], cov))
+}
+
+impl NativeClassifier {
+    pub fn seeded(latent: usize, classes: usize, seed: u64) -> NativeClassifier {
+        let (hidden, feat) = (64, 32);
+        let mut rng = Rng::new(seed);
+        let mut randn = |n: usize, scale: f32| -> Vec<f32> {
+            (0..n).map(|_| rng.normal() as f32 * scale).collect()
+        };
+        let inv = |fan_in: usize| 1.0 / (fan_in as f32).sqrt();
+        let w1 = randn(latent * hidden, inv(latent));
+        let w2 = randn(hidden * feat, inv(hidden));
+        let w3 = randn(feat * classes, inv(feat));
+        let (fid_mu, fid_cov) = identity_gaussian(feat);
+        let (sfid_mu, sfid_cov) = identity_gaussian(64);
+        NativeClassifier {
+            latent,
+            hidden,
+            feat,
+            classes,
+            w1,
+            b1: vec![0.0; hidden],
+            w2,
+            b2: vec![0.0; feat],
+            w3,
+            b3: vec![0.0; classes],
+            fid_mu,
+            fid_cov,
+            sfid_mu,
+            sfid_cov,
+        }
+    }
+}
+
+impl ClassifierBackend for NativeClassifier {
+    fn latent_dim(&self) -> usize {
+        self.latent
+    }
+
+    fn num_classes(&self) -> usize {
+        self.classes
+    }
+
+    fn feat_dim(&self) -> usize {
+        self.feat
+    }
+
+    fn buckets(&self) -> Vec<usize> {
+        vec![1, 2, 4, 8]
+    }
+
+    fn classify(&self, bucket: usize, x: &[f32]) -> Result<(Tensor, Tensor)> {
+        if x.len() != bucket * self.latent {
+            bail!("classify: x len {} != bucket {bucket} · latent {}", x.len(), self.latent);
+        }
+        let mut logits = vec![0f32; bucket * self.classes];
+        let mut feats = vec![0f32; bucket * self.feat];
+        let mut h = vec![0f32; self.hidden];
+        let mut f = vec![0f32; self.feat];
+        for s in 0..bucket {
+            let row = &x[s * self.latent..(s + 1) * self.latent];
+            matmul_add(row, &self.w1, &self.b1, 1, self.latent, self.hidden, &mut h);
+            for v in h.iter_mut() {
+                *v = v.tanh();
+            }
+            matmul_add(&h, &self.w2, &self.b2, 1, self.hidden, self.feat, &mut f);
+            for v in f.iter_mut() {
+                *v = v.tanh();
+            }
+            matmul_add(
+                &f,
+                &self.w3,
+                &self.b3,
+                1,
+                self.feat,
+                self.classes,
+                &mut logits[s * self.classes..(s + 1) * self.classes],
+            );
+            feats[s * self.feat..(s + 1) * self.feat].copy_from_slice(&f);
+        }
+        Ok((
+            Tensor::new(vec![bucket, self.classes], logits),
+            Tensor::new(vec![bucket, self.feat], feats),
+        ))
+    }
+
+    fn fid_mu(&self) -> &Tensor {
+        &self.fid_mu
+    }
+
+    fn fid_cov(&self) -> &Tensor {
+        &self.fid_cov
+    }
+
+    fn sfid_mu(&self) -> &Tensor {
+        &self.sfid_mu
+    }
+
+    fn sfid_cov(&self) -> &Tensor {
+        &self.sfid_cov
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Hub: the native analog of the artifact manifest
+// ---------------------------------------------------------------------------
+
+/// The zero-artifact inventory: one seeded native model per simulated
+/// backbone name (mirroring the AOT manifest's `dit-sim` / `flux-sim` /
+/// `video-sim`) plus the metrics classifier.
+pub struct NativeHub {
+    models: BTreeMap<String, NativeBackend>,
+    pub classifier: NativeClassifier,
+}
+
+impl NativeHub {
+    /// Default seed for the zero-artifact models (`--model-seed` overrides).
+    pub const DEFAULT_SEED: u64 = 0x5EC_A001;
+
+    pub fn seeded(seed: u64) -> NativeHub {
+        let mut models = BTreeMap::new();
+        // classifier latent = one frame of the (shared) image geometry,
+        // derived from the presets so the two can't silently diverge
+        let dit = ModelConfig::native_dit();
+        let frame_latent = dit.latent_dim / dit.frames;
+        let classes = dit.num_classes;
+        for (i, cfg) in [dit, ModelConfig::native_flux(), ModelConfig::native_video()]
+            .into_iter()
+            .enumerate()
+        {
+            debug_assert_eq!(cfg.latent_dim / cfg.frames, frame_latent, "{}", cfg.name);
+            let name = cfg.name.clone();
+            models.insert(name, NativeBackend::seeded(cfg, seed ^ ((i as u64 + 1) << 32)));
+        }
+        let classifier = NativeClassifier::seeded(frame_latent, classes, seed ^ 0xC1A5_51F1);
+        NativeHub { models, classifier }
+    }
+
+    pub fn model(&self, name: &str) -> Result<&NativeBackend> {
+        self.models.get(name).with_context(|| {
+            format!("model '{name}' not in native hub ({:?})", self.models.keys())
+        })
+    }
+
+    pub fn models(&self) -> impl Iterator<Item = (&String, &NativeBackend)> {
+        self.models.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::weights::Stored;
+
+    fn tiny() -> NativeBackend {
+        NativeBackend::seeded(ModelConfig::native_test(), 7)
+    }
+
+    fn rand_inputs(b: usize, n: usize, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<i32>) {
+        let mut rng = Rng::new(seed);
+        let x = rng.normal_f32s(b * n);
+        let t: Vec<f32> = (0..b).map(|i| 1000.0 - 37.0 * i as f32).collect();
+        let y: Vec<i32> = (0..b).map(|i| i as i32).collect();
+        (x, t, y)
+    }
+
+    #[test]
+    fn backend_is_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<NativeBackend>();
+        assert_send_sync::<NativeClassifier>();
+    }
+
+    #[test]
+    fn shapes_and_finiteness() {
+        let m = tiny();
+        let cfg = &m.entry().config;
+        let (x, t, y) = rand_inputs(2, cfg.latent_dim, 1);
+        let (eps, bounds) = ModelBackend::full(&m, 2, &x, &t, &y, false).unwrap();
+        assert_eq!(eps.shape, vec![2, cfg.latent_dim]);
+        assert_eq!(bounds.shape, vec![cfg.depth + 1, 2, cfg.tokens, cfg.dim]);
+        assert!(eps.data.iter().all(|v| v.is_finite()));
+        assert!(bounds.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn deterministic_across_instances() {
+        let a = tiny();
+        let b = tiny();
+        let cfg = &a.entry().config;
+        let (x, t, y) = rand_inputs(1, cfg.latent_dim, 2);
+        let (ea, _) = ModelBackend::full(&a, 1, &x, &t, &y, false).unwrap();
+        let (eb, _) = ModelBackend::full(&b, 1, &x, &t, &y, false).unwrap();
+        assert_eq!(ea.data, eb.data);
+    }
+
+    #[test]
+    fn batching_is_transparent() {
+        let m = tiny();
+        let cfg = &m.entry().config;
+        let latent = cfg.latent_dim;
+        let (x, t, y) = rand_inputs(4, latent, 3);
+        let (eps4, bounds4) = ModelBackend::full(&m, 4, &x, &t, &y, false).unwrap();
+        let feat = cfg.tokens * cfg.dim;
+        for i in 0..4 {
+            let (eps1, bounds1) = ModelBackend::full(
+                &m,
+                1,
+                &x[i * latent..(i + 1) * latent],
+                &t[i..i + 1],
+                &y[i..i + 1],
+                false,
+            )
+            .unwrap();
+            assert_eq!(eps4.row(i), &eps1.data[..], "row {i}");
+            for b in 0..=cfg.depth {
+                let off4 = (b * 4 + i) * feat;
+                let off1 = b * feat;
+                assert_eq!(
+                    &bounds4.data[off4..off4 + feat],
+                    &bounds1.data[off1..off1 + feat],
+                    "row {i} boundary {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn block_and_head_match_full_boundaries() {
+        // The same invariants golden_parity.rs asserts over PJRT artifacts:
+        // block(l, boundaries[l]) == boundaries[l+1], head(last) == eps.
+        let m = tiny();
+        let cfg = &m.entry().config;
+        let feat = cfg.tokens * cfg.dim;
+        let (x, t, y) = rand_inputs(1, cfg.latent_dim, 4);
+        let (eps, bounds) = ModelBackend::full(&m, 1, &x, &t, &y, false).unwrap();
+        for l in 0..cfg.depth {
+            let out = m
+                .block(1, l as i32, &bounds.data[l * feat..(l + 1) * feat], &t, &y)
+                .unwrap();
+            let expect = &bounds.data[(l + 1) * feat..(l + 2) * feat];
+            let err: f32 = out
+                .data
+                .iter()
+                .zip(expect)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0, f32::max);
+            assert!(err < 1e-5, "block {l}: max err {err}");
+        }
+        let depth = cfg.depth;
+        let head = m
+            .head(1, &bounds.data[depth * feat..(depth + 1) * feat], &t, &y)
+            .unwrap();
+        let err: f32 = head
+            .data
+            .iter()
+            .zip(&eps.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max);
+        assert!(err < 1e-5, "head max err {err}");
+    }
+
+    #[test]
+    fn full_eps_matches_full() {
+        let m = tiny();
+        let cfg = &m.entry().config;
+        let (x, t, y) = rand_inputs(2, cfg.latent_dim, 5);
+        let (eps, _) = ModelBackend::full(&m, 2, &x, &t, &y, false).unwrap();
+        let eps_only = ModelBackend::full_eps(&m, 2, &x, &t, &y).unwrap();
+        assert_eq!(eps.data, eps_only.data);
+    }
+
+    #[test]
+    fn patchify_roundtrip() {
+        let m = NativeBackend::seeded(ModelConfig::native_video(), 11);
+        let mut rng = Rng::new(9);
+        let x = rng.normal_f32s(m.entry().config.latent_dim);
+        let back = m.unpatchify(&m.patchify(&x));
+        assert_eq!(x, back);
+    }
+
+    #[test]
+    fn synthetic_schedule_is_consistent() {
+        let cfg = ModelConfig::native_test();
+        let e = synthetic_entry(&cfg, &NativeArch::default());
+        let s = &e.schedule;
+        assert_eq!(s.t_model.len(), cfg.serve_steps);
+        assert_eq!(s.ab_t.len(), cfg.serve_steps);
+        assert!(s.ab_t.windows(2).all(|w| w[0] <= w[1]), "ab_t must increase");
+        for i in 0..cfg.serve_steps - 1 {
+            assert_eq!(s.ab_prev[i], s.ab_t[i + 1]);
+        }
+        assert_eq!(*s.ab_prev.last().unwrap(), 1.0);
+        let rf = synthetic_entry(&ModelConfig::native_flux(), &NativeArch::default());
+        assert!(rf.schedule.dt > 0.0);
+        assert_eq!(rf.schedule.t_model.len(), ModelConfig::native_flux().serve_steps);
+    }
+
+    #[test]
+    fn flops_tables_scale_linearly() {
+        let e = synthetic_entry(&ModelConfig::native_test(), &NativeArch::default());
+        let f1 = e.flops.full_step[&1];
+        assert!(f1 > 0);
+        assert_eq!(e.flops.full_step[&4], 4 * f1);
+        // verification is one block: gamma ≈ 1/depth
+        let gamma = e.flops.block[&1] as f64 / f1 as f64;
+        assert!(gamma < 0.5, "gamma {gamma}");
+    }
+
+    #[test]
+    fn loads_from_tensor_file() {
+        // Export a seeded model's weights in the stacked AOT layout and
+        // reload them through the weights.bin path; forwards must agree.
+        let a = tiny();
+        let cfg = &a.entry().config;
+        let (d, l) = (cfg.dim, cfg.depth);
+        let m = a.arch.mlp_ratio;
+        let pd = a.patch_dim();
+        let fd = a.arch.t_freq_dim;
+        let mut tf = TensorFile::default();
+        let mut put = |name: &str, shape: Vec<usize>, data: Vec<f32>| {
+            tf.order.push(name.to_string());
+            tf.tensors.insert(name.to_string(), Stored::F32(Tensor::new(shape, data)));
+        };
+        let stack = |get: &dyn Fn(&BlockW) -> &Vec<f32>| -> Vec<f32> {
+            a.w.blocks.iter().flat_map(|b| get(b).clone()).collect()
+        };
+        put("patch_w", vec![pd, d], a.w.patch_w.clone());
+        put("patch_b", vec![d], a.w.patch_b.clone());
+        put("pos_emb", vec![cfg.tokens, d], a.w.pos_emb.clone());
+        put("t_w1", vec![fd, d], a.w.t_w1.clone());
+        put("t_b1", vec![d], a.w.t_b1.clone());
+        put("t_w2", vec![d, d], a.w.t_w2.clone());
+        put("t_b2", vec![d], a.w.t_b2.clone());
+        put("y_emb", vec![cfg.num_classes, d], a.w.y_emb.clone());
+        put("blk_adaln_w", vec![l, d, 6 * d], stack(&|b| &b.adaln_w));
+        put("blk_adaln_b", vec![l, 6 * d], stack(&|b| &b.adaln_b));
+        put("blk_qkv_w", vec![l, d, 3 * d], stack(&|b| &b.qkv_w));
+        put("blk_qkv_b", vec![l, 3 * d], stack(&|b| &b.qkv_b));
+        put("blk_proj_w", vec![l, d, d], stack(&|b| &b.proj_w));
+        put("blk_proj_b", vec![l, d], stack(&|b| &b.proj_b));
+        put("blk_mlp_w1", vec![l, d, m * d], stack(&|b| &b.mlp_w1));
+        put("blk_mlp_b1", vec![l, m * d], stack(&|b| &b.mlp_b1));
+        put("blk_mlp_w2", vec![l, m * d, d], stack(&|b| &b.mlp_w2));
+        put("blk_mlp_b2", vec![l, d], stack(&|b| &b.mlp_b2));
+        put("head_adaln_w", vec![d, 2 * d], a.w.head_adaln_w.clone());
+        put("head_adaln_b", vec![2 * d], a.w.head_adaln_b.clone());
+        put("head_w", vec![d, pd], a.w.head_w.clone());
+        put("head_b", vec![pd], a.w.head_b.clone());
+        let b = NativeBackend::from_tensor_file(a.entry.clone(), &tf).unwrap();
+        let (x, t, y) = rand_inputs(1, cfg.latent_dim, 6);
+        let (ea, _) = ModelBackend::full(&a, 1, &x, &t, &y, false).unwrap();
+        let (eb, _) = ModelBackend::full(&b, 1, &x, &t, &y, false).unwrap();
+        assert_eq!(ea.data, eb.data);
+    }
+
+    #[test]
+    fn classifier_is_batch_transparent() {
+        let cls = NativeClassifier::seeded(64, 8, 3);
+        let mut rng = Rng::new(8);
+        let x = rng.normal_f32s(4 * 64);
+        let (l4, f4) = cls.classify(4, &x).unwrap();
+        for i in 0..4 {
+            let (l1, f1) = cls.classify(1, &x[i * 64..(i + 1) * 64]).unwrap();
+            assert_eq!(l4.row(i), &l1.data[..]);
+            assert_eq!(f4.row(i), &f1.data[..]);
+        }
+        assert!(l4.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn hub_has_all_simulated_backbones() {
+        let hub = NativeHub::seeded(1);
+        for name in ["dit-sim", "flux-sim", "video-sim"] {
+            let m = hub.model(name).unwrap();
+            assert_eq!(m.entry().config.name, name);
+            // classifier latent = one frame of every model
+            let frame = m.entry().config.latent_dim / m.entry().config.frames;
+            assert_eq!(frame, hub.classifier.latent_dim());
+        }
+        assert!(hub.model("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        let m = tiny();
+        let cfg = &m.entry().config;
+        let (x, t, y) = rand_inputs(1, cfg.latent_dim, 10);
+        assert!(ModelBackend::full(&m, 2, &x, &t, &y, false).is_err());
+        let feat = vec![0f32; cfg.tokens * cfg.dim];
+        assert!(m.block(1, cfg.depth as i32, &feat, &t, &y).is_err());
+        assert!(m.block(1, -1, &feat, &t, &y).is_err());
+        assert!(m.head(1, &feat[..10], &t, &y).is_err());
+    }
+}

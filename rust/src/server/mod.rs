@@ -1,9 +1,12 @@
 //! TCP JSON-lines serving front-end.
 //!
-//! The PJRT client is not `Send`, so the engine runs on the thread that
-//! calls [`serve`]; connection threads only parse/serialize and exchange
-//! work through channels (vLLM-router-style separation of front-end and
-//! engine loop).
+//! The engine runs on the thread that calls [`serve`]; connection threads
+//! only parse/serialize and exchange work through channels (vLLM-router-
+//! style separation of front-end and engine loop). This layout is forced
+//! by the PJRT backend (its client is `Rc`-based, not `Send`) and merely
+//! convenient for the native backend, which is `Send + Sync` — moving the
+//! engine loop onto a worker pool is the follow-up the backend seam
+//! enables (DESIGN.md §3, ROADMAP).
 //!
 //! Protocol (one JSON object per line):
 //!   → {"op":"generate","cond":3,"seed":7,"policy":"speca","tau0":0.3,
@@ -107,7 +110,7 @@ fn handle_conn(stream: TcpStream, tx: Sender<FrontendMsg>) {
                         }
                         rrx.recv().unwrap_or_else(|_| "{\"ok\":false}".to_string())
                     }
-                    _ => {
+                    "generate" => {
                         let return_latent =
                             req.get("return_latent").and_then(|b| b.as_bool()).unwrap_or(false);
                         let (rtx, rrx) = channel();
@@ -119,6 +122,15 @@ fn handle_conn(stream: TcpStream, tx: Sender<FrontendMsg>) {
                         }
                         rrx.recv().unwrap_or_else(|_| "{\"ok\":false}".to_string())
                     }
+                    // A request without an "op" key defaults to generate
+                    // (matched above); anything else is a protocol error —
+                    // falling through to generate would silently burn a
+                    // full denoising run on a typo.
+                    other => Json::obj(vec![
+                        ("ok", Json::Bool(false)),
+                        ("error", Json::str(&format!("unknown op '{other}'"))),
+                    ])
+                    .dump(),
                 }
             }
         };
@@ -153,10 +165,10 @@ pub fn serve(engine: &mut Engine<'_>, cfg: &ServerConfig) -> Result<u64> {
     });
     eprintln!("speca: serving on {}", cfg.addr);
 
-    let depth = engine.model.entry.config.depth;
-    let steps = engine.model.entry.config.serve_steps;
-    let full_flops =
-        engine.model.entry.flops.full_step.get(&1).copied().unwrap_or(0);
+    let entry = engine.model.entry();
+    let depth = entry.config.depth;
+    let steps = entry.config.serve_steps;
+    let full_flops = entry.flops.full_step.get(&1).copied().unwrap_or(0);
     let mut next_id: u64 = 0;
     let mut waiting: std::collections::BTreeMap<u64, (Sender<String>, bool)> =
         std::collections::BTreeMap::new();

@@ -1,36 +1,37 @@
-//! Integration: the SpeCa engine end-to-end over real artifacts —
-//! policy behaviour, conservation invariants, batching transparency,
-//! accept/reject bookkeeping, sample-adaptive allocation.
+//! Integration: the SpeCa engine end-to-end — policy behaviour,
+//! conservation invariants, batching transparency, accept/reject
+//! bookkeeping, sample-adaptive allocation.
+//!
+//! Every invariant is a check function over `&dyn ModelBackend`. The
+//! top-level tests assert them unconditionally against the zero-artifact
+//! [`NativeBackend`]; the `pjrt` module re-runs the identical checks over
+//! AOT artifacts when built with `--features pjrt` (skipping, as before,
+//! if `make artifacts` has not produced them).
 
-use speca::config::Manifest;
+use speca::config::ModelConfig;
 use speca::coordinator::batcher::BatchStrategy;
 use speca::coordinator::policy::{ErrorMetric, Policy};
-use speca::coordinator::{Engine, EngineConfig};
-use speca::runtime::{ModelRuntime, Runtime};
+use speca::coordinator::{Completion, Engine, EngineConfig};
+use speca::runtime::{ModelBackend, NativeBackend};
 use speca::workload::{batch_requests, parse_policy};
 
-fn manifest() -> Option<Manifest> {
-    let dir = speca::artifacts_dir();
-    if !dir.join("manifest.json").exists() {
-        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
-        return None;
-    }
-    Some(Manifest::load(&dir).expect("manifest loads"))
+fn native_model() -> NativeBackend {
+    NativeBackend::seeded(ModelConfig::native_test(), 0x5EED)
 }
 
 fn run(
-    model: &ModelRuntime<'_>,
+    model: &dyn ModelBackend,
     desc: &str,
     n: usize,
     seed: u64,
     strategy: BatchStrategy,
-) -> Vec<speca::coordinator::Completion> {
-    let policy = parse_policy(desc, model.entry.config.depth).unwrap();
+) -> Vec<Completion> {
+    let policy = parse_policy(desc, model.entry().config.depth).unwrap();
     let mut engine = Engine::new(
         model,
         EngineConfig { max_inflight: 4, strategy, use_pallas: false },
     );
-    for r in batch_requests(n, model.entry.config.num_classes, &policy, seed, false) {
+    for r in batch_requests(n, model.entry().config.num_classes, &policy, seed, false) {
         engine.submit(r);
     }
     let mut done = engine.run_to_completion().unwrap();
@@ -38,14 +39,9 @@ fn run(
     done
 }
 
-#[test]
-fn step_conservation_across_policies() {
-    // Every request must account for exactly serve_steps actions.
-    let Some(manifest) = manifest() else { return };
-    let rt = Runtime::cpu().unwrap();
-    let entry = manifest.model("dit-sim").unwrap();
-    let model = ModelRuntime::load(&rt, entry).unwrap();
-    let steps = entry.config.serve_steps;
+/// Every request must account for exactly serve_steps actions.
+fn check_step_conservation(model: &dyn ModelBackend) {
+    let steps = model.entry().config.serve_steps;
     for desc in [
         "full",
         "steps:keep=10",
@@ -57,7 +53,7 @@ fn step_conservation_across_policies() {
         "speca:N=5,O=2,tau0=0.3,beta=0.05",
         "speca:N=5,O=2,tau0=0.01,beta=0.05", // strict: many rejects
     ] {
-        let done = run(&model, desc, 3, 7, BatchStrategy::Binary);
+        let done = run(model, desc, 3, 7, BatchStrategy::Binary);
         assert_eq!(done.len(), 3, "{desc}");
         for c in &done {
             let s = &c.stats;
@@ -74,15 +70,11 @@ fn step_conservation_across_policies() {
     }
 }
 
-#[test]
-fn full_policy_is_reference_quality() {
-    // full-policy engine output must equal a bucket-1 manual loop (the
-    // engine adds no numerical noise).
-    let Some(manifest) = manifest() else { return };
-    let rt = Runtime::cpu().unwrap();
-    let entry = manifest.model("dit-sim").unwrap();
-    let model = ModelRuntime::load(&rt, entry).unwrap();
-    let done = run(&model, "full", 2, 3, BatchStrategy::Binary);
+/// full-policy engine output must equal a bucket-1 manual loop (the
+/// engine adds no numerical noise).
+fn check_full_policy_is_reference_quality(model: &dyn ModelBackend) {
+    let entry = model.entry();
+    let done = run(model, "full", 2, 3, BatchStrategy::Binary);
 
     // manual replay of request 0
     let spec = batch_requests(2, entry.config.num_classes, &Policy::Full, 3, false);
@@ -106,15 +98,10 @@ fn full_policy_is_reference_quality() {
     assert!(e < 1e-4, "engine-vs-manual rel err {e}");
 }
 
-#[test]
-fn batching_strategy_is_transparent() {
-    // binary vs pad-up batching must give identical outputs per request.
-    let Some(manifest) = manifest() else { return };
-    let rt = Runtime::cpu().unwrap();
-    let entry = manifest.model("dit-sim").unwrap();
-    let model = ModelRuntime::load(&rt, entry).unwrap();
-    let a = run(&model, "speca:N=5,O=2,tau0=0.3,beta=0.05", 3, 11, BatchStrategy::Binary);
-    let b = run(&model, "speca:N=5,O=2,tau0=0.3,beta=0.05", 3, 11, BatchStrategy::PadUp);
+/// binary vs pad-up batching must give identical outputs per request.
+fn check_batching_strategy_is_transparent(model: &dyn ModelBackend) {
+    let a = run(model, "speca:N=5,O=2,tau0=0.3,beta=0.05", 3, 11, BatchStrategy::Binary);
+    let b = run(model, "speca:N=5,O=2,tau0=0.3,beta=0.05", 3, 11, BatchStrategy::PadUp);
     for (ca, cb) in a.iter().zip(&b) {
         let e = ErrorMetric::L2.eval(&ca.latent, &cb.latent);
         assert!(e < 1e-4, "req {}: strategies diverge ({e})", ca.id);
@@ -123,17 +110,11 @@ fn batching_strategy_is_transparent() {
     }
 }
 
-#[test]
-fn speca_threshold_controls_acceptance() {
-    // Tight τ0 ⇒ rejects dominate ⇒ cost near full compute; loose τ0 ⇒
-    // acceptance near the interval bound.
-    let Some(manifest) = manifest() else { return };
-    let rt = Runtime::cpu().unwrap();
-    let entry = manifest.model("dit-sim").unwrap();
-    let model = ModelRuntime::load(&rt, entry).unwrap();
-
-    let strict = run(&model, "speca:N=5,O=2,tau0=0.001,beta=1.0", 2, 5, BatchStrategy::Binary);
-    let loose = run(&model, "speca:N=5,O=2,tau0=50.0,beta=1.0", 2, 5, BatchStrategy::Binary);
+/// Tight τ0 ⇒ rejects dominate ⇒ cost near full compute; loose τ0 ⇒
+/// acceptance near the interval bound.
+fn check_speca_threshold_controls_acceptance(model: &dyn ModelBackend) {
+    let strict = run(model, "speca:N=5,O=2,tau0=0.001,beta=1.0", 2, 5, BatchStrategy::Binary);
+    let loose = run(model, "speca:N=5,O=2,tau0=50.0,beta=1.0", 2, 5, BatchStrategy::Binary);
     let strict_spec: usize = strict.iter().map(|c| c.stats.spec_steps).sum();
     let loose_spec: usize = loose.iter().map(|c| c.stats.spec_steps).sum();
     assert!(loose_spec > strict_spec, "loose {loose_spec} vs strict {strict_spec}");
@@ -144,20 +125,15 @@ fn speca_threshold_controls_acceptance() {
     assert_eq!(loose_rej, 0);
 }
 
-#[test]
-fn speca_beats_taylorseer_at_matched_budget() {
-    // The paper's core claim in miniature: at the same refresh interval,
-    // SpeCa's verified trajectory stays closer to the reference than
-    // unverified TaylorSeer at high acceleration.
-    let Some(manifest) = manifest() else { return };
-    let rt = Runtime::cpu().unwrap();
-    let entry = manifest.model("dit-sim").unwrap();
-    let model = ModelRuntime::load(&rt, entry).unwrap();
+/// The paper's core claim in miniature: at the same refresh interval,
+/// SpeCa's verified trajectory stays at least as close to the reference as
+/// unverified TaylorSeer.
+fn check_speca_beats_taylorseer_at_matched_budget(model: &dyn ModelBackend) {
     let n = 4;
-    let reference = run(&model, "full", n, 21, BatchStrategy::Binary);
-    let taylor = run(&model, "taylorseer:N=9,O=2", n, 21, BatchStrategy::Binary);
-    let speca = run(&model, "speca:N=9,O=2,tau0=0.3,beta=0.05", n, 21, BatchStrategy::Binary);
-    let mean_err = |runs: &[speca::coordinator::Completion]| -> f64 {
+    let reference = run(model, "full", n, 21, BatchStrategy::Binary);
+    let taylor = run(model, "taylorseer:N=9,O=2", n, 21, BatchStrategy::Binary);
+    let speca = run(model, "speca:N=9,O=2,tau0=0.3,beta=0.05", n, 21, BatchStrategy::Binary);
+    let mean_err = |runs: &[Completion]| -> f64 {
         runs.iter()
             .zip(&reference)
             .map(|(c, r)| ErrorMetric::L2.eval(&c.latent, &r.latent))
@@ -172,15 +148,10 @@ fn speca_beats_taylorseer_at_matched_budget() {
     );
 }
 
-#[test]
-fn sample_adaptive_allocation_varies() {
-    // Different samples should receive different computation (paper §4.3)
-    // under a mid-range threshold.
-    let Some(manifest) = manifest() else { return };
-    let rt = Runtime::cpu().unwrap();
-    let entry = manifest.model("dit-sim").unwrap();
-    let model = ModelRuntime::load(&rt, entry).unwrap();
-    let done = run(&model, "speca:N=8,O=2,tau0=0.12,beta=0.3", 6, 31, BatchStrategy::Binary);
+/// Different samples should receive different computation (paper §4.3)
+/// under a mid-range threshold.
+fn check_sample_adaptive_allocation_varies(model: &dyn ModelBackend) {
+    let done = run(model, "speca:N=8,O=2,tau0=0.12,beta=0.3", 6, 31, BatchStrategy::Binary);
     // the acceptance signal is sample-dependent: per-request mean verify
     // errors must differ (this is what drives the paper's per-sample accel
     // distribution at scale)
@@ -201,15 +172,10 @@ fn sample_adaptive_allocation_varies() {
     assert!(done.iter().all(|c| !c.stats.verify_trace.is_empty()));
 }
 
-#[test]
-fn verify_trace_is_prefix_consistent() {
-    // Eq. 5/6: within one speculative run, once a step is rejected no
-    // later speculative step may be recorded before the next refresh.
-    let Some(manifest) = manifest() else { return };
-    let rt = Runtime::cpu().unwrap();
-    let entry = manifest.model("dit-sim").unwrap();
-    let model = ModelRuntime::load(&rt, entry).unwrap();
-    let done = run(&model, "speca:N=6,O=2,tau0=0.05,beta=0.5", 3, 17, BatchStrategy::Binary);
+/// Eq. 5/6: within one speculative run, once a step is rejected no later
+/// speculative step may be recorded before the next refresh.
+fn check_verify_trace_is_prefix_consistent(model: &dyn ModelBackend) {
+    let done = run(model, "speca:N=6,O=2,tau0=0.05,beta=0.5", 3, 17, BatchStrategy::Binary);
     for c in &done {
         for w in c.stats.verify_trace.windows(2) {
             let (s0, e0, t0) = w[0];
@@ -224,13 +190,9 @@ fn verify_trace_is_prefix_consistent() {
     }
 }
 
-#[test]
-fn mixed_policies_coexist() {
-    let Some(manifest) = manifest() else { return };
-    let rt = Runtime::cpu().unwrap();
-    let entry = manifest.model("dit-sim").unwrap();
-    let model = ModelRuntime::load(&rt, entry).unwrap();
-    let mut engine = Engine::new(&model, EngineConfig::default());
+fn check_mixed_policies_coexist(model: &dyn ModelBackend) {
+    let entry = model.entry();
+    let mut engine = Engine::new(model, EngineConfig::default());
     let descs = ["full", "fora:N=5", "speca:N=5,O=2,tau0=0.3,beta=0.05", "taylorseer:N=5,O=2"];
     for (i, d) in descs.iter().enumerate() {
         let policy = parse_policy(d, entry.config.depth).unwrap();
@@ -247,4 +209,122 @@ fn mixed_policies_coexist() {
     let names: std::collections::BTreeSet<String> =
         done.iter().map(|c| c.policy_name.clone()).collect();
     assert_eq!(names.len(), 4);
+}
+
+// --- native backend: every invariant asserts unconditionally --------------
+
+#[test]
+fn step_conservation_across_policies() {
+    check_step_conservation(&native_model());
+}
+
+#[test]
+fn full_policy_is_reference_quality() {
+    check_full_policy_is_reference_quality(&native_model());
+}
+
+#[test]
+fn batching_strategy_is_transparent() {
+    check_batching_strategy_is_transparent(&native_model());
+}
+
+#[test]
+fn speca_threshold_controls_acceptance() {
+    check_speca_threshold_controls_acceptance(&native_model());
+}
+
+#[test]
+fn speca_beats_taylorseer_at_matched_budget() {
+    check_speca_beats_taylorseer_at_matched_budget(&native_model());
+}
+
+#[test]
+fn sample_adaptive_allocation_varies() {
+    check_sample_adaptive_allocation_varies(&native_model());
+}
+
+#[test]
+fn verify_trace_is_prefix_consistent() {
+    check_verify_trace_is_prefix_consistent(&native_model());
+}
+
+#[test]
+fn mixed_policies_coexist() {
+    check_mixed_policies_coexist(&native_model());
+}
+
+/// The engine must also run a rectified-flow schedule end-to-end (the
+/// flux/video simulated backbones use RF) — same tiny geometry as the
+/// DDIM fixture to keep the debug-profile test fast.
+#[test]
+fn rectified_flow_schedule_end_to_end() {
+    let mut cfg = ModelConfig::native_test();
+    cfg.name = "rf-test".to_string();
+    cfg.schedule_kind = speca::config::ScheduleKind::RectifiedFlow;
+    cfg.serve_steps = 10;
+    let model = NativeBackend::seeded(cfg, 0xF10F);
+    check_step_conservation(&model);
+    check_full_policy_is_reference_quality(&model);
+}
+
+// --- PJRT backend: same checks, gated on feature + artifacts --------------
+
+#[cfg(feature = "pjrt")]
+mod pjrt {
+    use super::*;
+    use speca::config::Manifest;
+    use speca::runtime::{ModelRuntime, Runtime};
+
+    fn with_artifacts(f: impl FnOnce(&dyn ModelBackend)) {
+        let dir = speca::artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+            return;
+        }
+        let manifest = Manifest::load(&dir).expect("manifest loads");
+        let entry = manifest.model("dit-sim").unwrap();
+        let rt = Runtime::cpu().unwrap();
+        let model = ModelRuntime::load(&rt, entry).unwrap();
+        f(&model);
+    }
+
+    #[test]
+    fn step_conservation_across_policies() {
+        with_artifacts(check_step_conservation);
+    }
+
+    #[test]
+    fn full_policy_is_reference_quality() {
+        with_artifacts(check_full_policy_is_reference_quality);
+    }
+
+    #[test]
+    fn batching_strategy_is_transparent() {
+        with_artifacts(check_batching_strategy_is_transparent);
+    }
+
+    #[test]
+    fn speca_threshold_controls_acceptance() {
+        with_artifacts(check_speca_threshold_controls_acceptance);
+    }
+
+    #[test]
+    fn speca_beats_taylorseer_at_matched_budget() {
+        with_artifacts(check_speca_beats_taylorseer_at_matched_budget);
+    }
+
+    #[test]
+    fn sample_adaptive_allocation_varies() {
+        with_artifacts(check_sample_adaptive_allocation_varies);
+    }
+
+    #[test]
+    fn verify_trace_is_prefix_consistent() {
+        with_artifacts(check_verify_trace_is_prefix_consistent);
+    }
+
+    #[test]
+    fn mixed_policies_coexist() {
+        with_artifacts(check_mixed_policies_coexist);
+    }
 }

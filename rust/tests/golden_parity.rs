@@ -6,6 +6,12 @@
 //! runtime + native sampler and require 1e-3 agreement end-to-end — the
 //! contract that the HLO-text interchange and the Rust step math are
 //! numerically faithful to the Python reference.
+//!
+//! PJRT-only by construction (it validates artifact execution), so the
+//! whole suite is gated on the `pjrt` feature; the native backend's
+//! equivalents live in `runtime/native.rs` unit tests and run always.
+
+#![cfg(feature = "pjrt")]
 
 use speca::config::{Manifest, ScheduleKind};
 use speca::coordinator::policy::ErrorMetric;

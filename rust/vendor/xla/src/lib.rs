@@ -1,0 +1,127 @@
+//! Compile-surface stub of the `xla` (xla-rs) PJRT bindings.
+//!
+//! The offline build image has no XLA toolchain, so this crate lets the
+//! `pjrt` feature *compile* without it: every entry point type-checks
+//! against the API subset `speca::runtime::pjrt` uses, and the only
+//! reachable constructor ([`PjRtClient::cpu`]) returns an error telling
+//! the operator to link the real bindings. To run on actual PJRT, replace
+//! this directory with a checkout of xla-rs (same crate name, superset
+//! API) — no source change in `speca` is needed.
+
+use std::path::Path;
+
+const UNAVAILABLE: &str =
+    "PJRT runtime unavailable: built against the stub `xla` crate; \
+     replace rust/vendor/xla with the real xla-rs bindings (DESIGN.md §3) \
+     or rerun with --backend native";
+
+/// Error type mirroring xla-rs: only `Debug` formatting is relied upon.
+pub struct Error(String);
+
+impl std::fmt::Debug for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl Error {
+    fn unavailable() -> Error {
+        Error(UNAVAILABLE.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types transferable to device buffers.
+pub trait Element: Copy {}
+impl Element for f32 {}
+impl Element for i32 {}
+
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    /// Always fails in the stub: there is no PJRT C API to bind.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::unavailable())
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable())
+    }
+
+    pub fn buffer_from_host_buffer<T: Element>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        Err(Error::unavailable())
+    }
+}
+
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<HloModuleProto> {
+        Err(Error::unavailable())
+    }
+}
+
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable())
+    }
+}
+
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable())
+    }
+}
+
+pub struct Literal(());
+
+impl Literal {
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Err(Error::unavailable())
+    }
+
+    pub fn to_vec<T: Element>(&self) -> Result<Vec<T>> {
+        Err(Error::unavailable())
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(Error::unavailable())
+    }
+}
+
+pub struct ArrayShape(Vec<i64>);
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_unavailable() {
+        let err = PjRtClient::cpu().err().expect("stub must not create clients");
+        assert!(format!("{err:?}").contains("stub"));
+    }
+}
