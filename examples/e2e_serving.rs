@@ -13,8 +13,8 @@ use std::thread;
 use anyhow::Result;
 use speca::config::Manifest;
 use speca::coordinator::{Engine, EngineConfig};
-use speca::experiments::runner::{evaluate_quality, run_policy};
-use speca::runtime::{ClassifierRuntime, ModelRuntime, Runtime};
+use speca::experiments::runner::{evaluate_quality, run_policy, RunOpts};
+use speca::runtime::{ClassifierRuntime, ModelRuntime, ResolvedModel, Runtime};
 use speca::server::{client, serve, ServerConfig};
 use speca::util::cli::Args;
 use speca::workload::parse_policy;
@@ -64,8 +64,10 @@ fn main() -> Result<()> {
         reports
     });
 
-    let mut engine = Engine::new(&model, EngineConfig { max_inflight: 8, ..Default::default() });
-    let served = serve(&mut engine, &ServerConfig { addr, max_queue: 256 })?;
+    let mut engine =
+        Engine::from_ref(&model, EngineConfig { max_inflight: 8, ..Default::default() });
+    let served =
+        serve(&mut engine, &ServerConfig { addr, max_queue: 256, ..ServerConfig::default() })?;
     let reports = driver.join().unwrap();
 
     println!("\n[e2e] served {served} requests over TCP (4 connections/policy)");
@@ -85,22 +87,17 @@ fn main() -> Result<()> {
     let cls = ClassifierRuntime::load(&rt, &manifest.classifier)?;
     let nq = if quick { 12 } else { 32 };
     println!("\n[e2e] quality check (n={nq} matched seeds per policy):");
-    let reference = run_policy(
-        &model,
-        &parse_policy("full", entry.config.depth)?,
-        "full",
-        nq,
-        7,
-        8,
-        false,
-    )?;
+    let resolved = ResolvedModel::Local(std::sync::Arc::new(&model));
+    let opts = RunOpts { n: nq, seed: 7, ..RunOpts::default() };
+    let reference =
+        run_policy(&resolved, &parse_policy("full", entry.config.depth)?, "full", &opts)?;
     println!(
         "{:<40} {:>8} {:>8} {:>8} {:>9}",
         "policy", "FID*", "IS*", "ImgRwd*", "speedup"
     );
     for desc in ["full", "fora:N=6", "taylorseer:N=5,O=2", "speca:N=5,O=2,tau0=0.3,beta=0.05"] {
         let p = parse_policy(desc, entry.config.depth)?;
-        let run = run_policy(&model, &p, desc, nq, 7, 8, false)?;
+        let run = run_policy(&resolved, &p, desc, &opts)?;
         let q = evaluate_quality(&run, &reference, &entry.config, &cls)?;
         let speed = (nq * entry.config.serve_steps) as f64 * entry.flops.full_step[&1] as f64
             / run.flops.total().max(1) as f64;

@@ -20,7 +20,9 @@ fn main() -> Result<()> {
     let entry = model.entry();
 
     // 2. build an engine and submit 8 requests under the SpeCa policy
-    let mut engine = Engine::new(&model, EngineConfig::default());
+    // (Engine owns an Arc<dyn ModelBackend>; from_ref wraps a borrow —
+    //  see coordinator::pool::EngineShardPool for the multi-shard form)
+    let mut engine = Engine::from_ref(&model, EngineConfig::default());
     let policy = parse_policy("speca:N=5,O=2,tau0=0.3,beta=0.05", entry.config.depth)?;
     for r in batch_requests(8, entry.config.num_classes, &policy, 0, false) {
         engine.submit(r);

@@ -2,18 +2,26 @@
 //! native-backend entry-point latency across batch buckets, L3 coordinator
 //! tick overhead at batch sizes 1/4/8 (measured against a zero-cost stub
 //! backend, so model time is excluded by construction), draft-prediction
-//! and cache-refresh costs, batching strategies end-to-end, and — when
-//! built with `--features pjrt` over compiled artifacts — the PJRT
-//! execution latencies, native-vs-PJRT draft prediction and the
-//! pallas-vs-jnp full pass.
+//! and cache-refresh costs, batching strategies end-to-end, the shard-pool
+//! scaling sweep at 1/2/4 shards, and — when built with `--features pjrt`
+//! over compiled artifacts — the PJRT execution latencies, native-vs-PJRT
+//! draft prediction and the pallas-vs-jnp full pass.
+//!
+//! `--quick` (the CI bench-smoke leg: `cargo bench --bench micro_runtime
+//! -- --quick`) shrinks measurement windows and workload sizes so the
+//! whole suite exercises every path in seconds.
+
+use std::sync::Arc;
+use std::time::Instant;
 
 use speca::cache::{DraftKind, TapCache};
 use speca::config::{ModelConfig, ModelEntry};
 use speca::coordinator::batcher::BatchStrategy;
-use speca::coordinator::{Engine, EngineConfig};
+use speca::coordinator::{Engine, EngineConfig, EngineShardPool, PoolConfig, RouterPolicy};
 use speca::runtime::native::{synthetic_entry, NativeArch};
 use speca::runtime::{ModelBackend, NativeBackend};
 use speca::tensor::Tensor;
+use speca::util::cli::Args;
 use speca::util::rng::Rng;
 use speca::util::timing::Bench;
 use speca::workload::{batch_requests, parse_policy};
@@ -95,15 +103,15 @@ impl ModelBackend for StubBackend {
 /// Steady-state tick benchmark: keep `b` requests in flight forever and
 /// time individual `tick()` calls (resubmission happens outside the timed
 /// closure's hot branch often enough to amortize to noise).
-fn bench_ticks(name: &str, model: &dyn ModelBackend, b: usize) {
+fn bench_ticks(name: &str, model: &dyn ModelBackend, b: usize, ms: u64) {
     let cfg = &model.entry().config;
     let policy = parse_policy("speca:N=5,O=2,tau0=0.3,beta=0.05", cfg.depth).unwrap();
-    let mut engine = Engine::new(
+    let mut engine = Engine::from_ref(
         model,
         EngineConfig { max_inflight: b, ..EngineConfig::default() },
     );
     let mut seed = 0u64;
-    let r = Bench::new(name).min_time_ms(200).run(|| {
+    let r = Bench::new(name).min_time_ms(ms).run(|| {
         if engine.pending() == 0 {
             seed += 1;
             for req in batch_requests(b, cfg.num_classes, &policy, seed, false) {
@@ -116,8 +124,54 @@ fn bench_ticks(name: &str, model: &dyn ModelBackend, b: usize) {
     println!("{}", r.report());
 }
 
+/// Shard-scaling sweep: push one fixed closed-loop workload through the
+/// pool at 1/2/4 shards and report wall time, merged tick count and tick
+/// throughput. With a shared `Send + Sync` backend this should scale until
+/// the host runs out of cores.
+fn bench_shard_sweep(model: &Arc<NativeBackend>, quick: bool) -> anyhow::Result<()> {
+    let cfg = model.entry().config.clone();
+    let policy = parse_policy("speca:N=5,O=2,tau0=0.3,beta=0.05", cfg.depth).unwrap();
+    let n = if quick { 8 } else { 32 };
+    let mut base_wall = 0.0f64;
+    for shards in [1usize, 2, 4] {
+        let pool = EngineShardPool::new(
+            model.clone(),
+            PoolConfig {
+                shards,
+                router: RouterPolicy::LeastLoaded,
+                engine: EngineConfig { max_inflight: 4, ..EngineConfig::default() },
+            },
+        );
+        let t0 = Instant::now();
+        for req in batch_requests(n, cfg.num_classes, &policy, 7, false) {
+            pool.submit(req)?;
+        }
+        let out = pool.shutdown(true)?;
+        let wall = t0.elapsed().as_secs_f64();
+        assert_eq!(out.completions.len(), n, "shard sweep lost completions");
+        if shards == 1 {
+            base_wall = wall;
+        }
+        println!(
+            "pool/shard_sweep_s{shards}: n={n} wall {:.1} ms  ticks {}  \
+             {:.0} ticks/s  {:.1} req/s  speedup vs 1 shard {:.2}x",
+            wall * 1e3,
+            out.stats.ticks,
+            out.stats.ticks as f64 / wall,
+            n as f64 / wall,
+            base_wall / wall
+        );
+    }
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
-    let model = NativeBackend::seeded(ModelConfig::native_test(), 0xBEEF);
+    let args = Args::from_env();
+    let quick = args.bool("quick");
+    // measurement window per bench: long enough for stable p50s normally,
+    // just-touch-every-path in the CI bench-smoke leg
+    let ms: u64 = if quick { 10 } else { 200 };
+    let model = Arc::new(NativeBackend::seeded(ModelConfig::native_test(), 0xBEEF));
     let entry = model.entry();
     let cfg = entry.config.clone();
     let latent = cfg.latent_dim;
@@ -125,8 +179,12 @@ fn main() -> anyhow::Result<()> {
     let mut rng = Rng::new(0);
 
     println!(
-        "== micro_runtime (native {}: dim={} depth={} tokens={}) ==",
-        cfg.name, cfg.dim, cfg.depth, cfg.tokens
+        "== micro_runtime (native {}: dim={} depth={} tokens={}{}) ==",
+        cfg.name,
+        cfg.dim,
+        cfg.depth,
+        cfg.tokens,
+        if quick { ", quick mode" } else { "" }
     );
 
     // --- native execution latency per entry × bucket ----------------------
@@ -136,7 +194,7 @@ fn main() -> anyhow::Result<()> {
             let t: Vec<f32> = vec![entry.schedule.t_model[0]; b];
             let y: Vec<i32> = vec![0; b];
             let r = Bench::new(&format!("native/{entry_point}_b{b}"))
-                .min_time_ms(200)
+                .min_time_ms(ms)
                 .run(|| match entry_point {
                     "full" => {
                         model.full(b, &x, &t, &y, false).unwrap();
@@ -158,10 +216,10 @@ fn main() -> anyhow::Result<()> {
         let f = rng.normal_f32s(feat);
         let t = vec![entry.schedule.t_model[0]];
         let y = vec![0i32];
-        let full = Bench::new("gamma/full_b1").min_time_ms(200).run(|| {
+        let full = Bench::new("gamma/full_b1").min_time_ms(ms).run(|| {
             model.full(1, &x, &t, &y, false).unwrap();
         });
-        let block = Bench::new("gamma/block_b1").min_time_ms(200).run(|| {
+        let block = Bench::new("gamma/block_b1").min_time_ms(ms).run(|| {
             model.block(1, (cfg.depth - 1) as i32, &f, &t, &y).unwrap();
         });
         println!(
@@ -177,11 +235,11 @@ fn main() -> anyhow::Result<()> {
     // of planning + draft prediction + scratch gathers + bookkeeping.
     let stub = StubBackend::new();
     for b in [1usize, 4, 8] {
-        bench_ticks(&format!("engine/tick_overhead_b{b}_stub"), &stub, b);
+        bench_ticks(&format!("engine/tick_overhead_b{b}_stub"), &stub, b, ms);
     }
     // Same loop against the real native model for scale.
     for b in [1usize, 4, 8] {
-        bench_ticks(&format!("engine/tick_b{b}_native"), &model, b);
+        bench_ticks(&format!("engine/tick_b{b}_native"), &*model, b, ms);
     }
 
     // --- draft prediction + cache refresh (native hot path) ---------------
@@ -192,12 +250,12 @@ fn main() -> anyhow::Result<()> {
             cache.refresh(&r2.normal_f32s(feat));
         }
         let mut out = vec![0f32; feat];
-        let native = Bench::new("predict/native_o2").min_time_ms(200).run(|| {
+        let native = Bench::new("predict/native_o2").min_time_ms(ms).run(|| {
             cache.predict_into(3.0, DraftKind::Taylor, &mut out);
         });
         println!("{}", native.report());
         let f = rng.normal_f32s(feat);
-        let r = Bench::new("cache/refresh_o2").min_time_ms(200).run(|| {
+        let r = Bench::new("cache/refresh_o2").min_time_ms(ms).run(|| {
             cache.refresh(&f);
         });
         println!("{}", r.report());
@@ -207,11 +265,11 @@ fn main() -> anyhow::Result<()> {
     for (name, strategy) in [("binary", BatchStrategy::Binary), ("padup", BatchStrategy::PadUp)] {
         let policy = parse_policy("speca:N=5,O=2,tau0=0.3,beta=0.05", cfg.depth)?;
         let r = Bench::new(&format!("engine/6req_speca_{name}"))
-            .min_time_ms(300)
+            .min_time_ms(ms)
             .warmup(1)
             .run(|| {
-                let mut engine = Engine::new(
-                    &model,
+                let mut engine = Engine::from_ref(
+                    &*model,
                     EngineConfig { max_inflight: 6, strategy, use_pallas: false },
                 );
                 for req in batch_requests(6, cfg.num_classes, &policy, 1, false) {
@@ -221,6 +279,9 @@ fn main() -> anyhow::Result<()> {
             });
         println!("{}", r.report());
     }
+
+    // --- shard-pool scaling: 1/2/4 engine workers over one backend --------
+    bench_shard_sweep(&model, quick)?;
 
     #[cfg(feature = "pjrt")]
     pjrt_benches()?;

@@ -18,15 +18,18 @@
 //! verify layer), not by policy — this is what enables the paper's
 //! sample-adaptive computation allocation to emerge per request.
 //!
-//! The engine is written against `&dyn ModelBackend` (DESIGN.md §3), so
-//! the same scheduling loop drives the native CPU backend, PJRT artifacts,
-//! and whatever backends later PRs add. Batch staging (the large
-//! latent/feature gather buffers) goes through reusable scratch buffers,
-//! so steady-state ticks avoid the dominant per-tick allocations; small
-//! index bookkeeping (chunk plans, member lists) still allocates —
-//! EXPERIMENTS.md §Perf quantifies the residual overhead.
+//! The engine owns an `Arc<dyn ModelBackend>` (DESIGN.md §3), so the same
+//! scheduling loop drives the native CPU backend, PJRT artifacts, and
+//! whatever backends later PRs add — and N engines can share one
+//! `Send + Sync` backend from worker threads (the shard pool in
+//! `coordinator::pool`). Batch staging (the large latent/feature gather
+//! buffers) goes through reusable scratch buffers, so steady-state ticks
+//! avoid the dominant per-tick allocations; small index bookkeeping
+//! (chunk plans, member lists) still allocates — EXPERIMENTS.md §Perf
+//! quantifies the residual overhead.
 
 use std::collections::VecDeque;
+use std::sync::Arc;
 
 use anyhow::Result;
 
@@ -35,6 +38,7 @@ use crate::config::{Schedule, ScheduleKind};
 use crate::coordinator::batcher::{gather_rows_into, pad_rows, plan_chunks, BatchStrategy, Chunk};
 use crate::coordinator::policy::{Plan, Policy};
 use crate::coordinator::state::{Completion, ReqState, RequestSpec};
+use crate::math::{rel_l1, timestep_embedding};
 use crate::metrics::flops::{FlopsCounter, FlopsModel};
 use crate::runtime::ModelBackend;
 use crate::sampler;
@@ -72,7 +76,7 @@ struct Scratch {
 }
 
 pub struct Engine<'a> {
-    pub model: &'a dyn ModelBackend,
+    model: Arc<dyn ModelBackend + 'a>,
     flops_model: FlopsModel,
     cfg: EngineConfig,
     queue: VecDeque<RequestSpec>,
@@ -87,7 +91,8 @@ pub struct Engine<'a> {
 }
 
 impl<'a> Engine<'a> {
-    pub fn new(model: &'a dyn ModelBackend, cfg: EngineConfig) -> Engine<'a> {
+    /// Build an engine over a shared (possibly thread-shared) backend.
+    pub fn new(model: Arc<dyn ModelBackend + 'a>, cfg: EngineConfig) -> Engine<'a> {
         let flops_model = FlopsModel::new(model.entry().flops.clone());
         Engine {
             model,
@@ -101,6 +106,17 @@ impl<'a> Engine<'a> {
             temb_dim: 64,
             scratch: Scratch::default(),
         }
+    }
+
+    /// Build an engine over a borrowed backend (tests, benches, the
+    /// single-threaded PJRT serving loop).
+    pub fn from_ref(model: &'a dyn ModelBackend, cfg: EngineConfig) -> Engine<'a> {
+        Engine::new(Arc::new(model), cfg)
+    }
+
+    /// The backend this engine dispatches to.
+    pub fn model(&self) -> &dyn ModelBackend {
+        &*self.model
     }
 
     pub fn submit(&mut self, spec: RequestSpec) {
@@ -125,8 +141,7 @@ impl<'a> Engine<'a> {
         self.model.entry().config.serve_steps
     }
 
-    fn admit(&mut self) {
-        let model = self.model;
+    fn admit(&mut self, model: &dyn ModelBackend) {
         let cfg = &model.entry().config;
         while self.active.len() < self.cfg.max_inflight {
             let Some(spec) = self.queue.pop_front() else { break };
@@ -140,12 +155,14 @@ impl<'a> Engine<'a> {
     /// Advance every in-flight request one serve step. Returns false when
     /// fully idle.
     pub fn tick(&mut self) -> Result<bool> {
-        self.admit();
+        // one refcount bump per tick; helpers borrow this local so the
+        // hot path adds no per-dispatch atomic traffic
+        let model = Arc::clone(&self.model);
+        self.admit(&*model);
         if self.active.is_empty() {
             return Ok(false);
         }
         self.ticks += 1;
-        let model = self.model;
         let total = self.total_steps();
 
         // --- update TeaCache drift accumulators, then plan ---------------
@@ -237,14 +254,14 @@ impl<'a> Engine<'a> {
                 by_layer.entry(self.verify_layer_of(i)).or_default().push(i);
             }
             for (layer, idxs) in by_layer {
-                self.run_verify(layer, &idxs, &mut accepted, &mut rejected)?;
+                self.run_verify(&*model, layer, &idxs, &mut accepted, &mut rejected)?;
             }
         }
 
         // --- heads for accepted + direct speculations --------------------
         let mut head_list = accepted;
         head_list.extend(spec_direct.iter().copied());
-        self.run_heads(&head_list)?;
+        self.run_heads(&*model, &head_list)?;
 
         // --- skips --------------------------------------------------------
         for &i in &skip {
@@ -259,7 +276,7 @@ impl<'a> Engine<'a> {
         }
 
         // --- blends (ToCa/DuCa-sim) ---------------------------------------
-        self.run_blend(&blend)?;
+        self.run_blend(&*model, &blend)?;
 
         // --- full passes (planned + rejected fallbacks) -------------------
         full.extend(rejected.iter().copied());
@@ -267,7 +284,7 @@ impl<'a> Engine<'a> {
             self.active[i].stats.rejects += 1;
             self.active[i].stats.flops.n_rejects += 1;
         }
-        self.run_full(&full)?;
+        self.run_full(&*model, &full)?;
 
         // --- retire completed requests ------------------------------------
         let total = self.total_steps();
@@ -330,9 +347,7 @@ impl<'a> Engine<'a> {
     }
 
     /// Gather (t, y) rows for a chunk into the scratch buffers.
-    fn gather_ty(&mut self, chunk: &Chunk, idxs: &[usize]) {
-        let model = self.model;
-        let sched = &model.entry().schedule;
+    fn gather_ty(&mut self, sched: &Schedule, chunk: &Chunk, idxs: &[usize]) {
         let Engine { active, scratch, .. } = self;
         scratch.t.clear();
         scratch.t.resize(chunk.bucket, 0.0);
@@ -353,11 +368,10 @@ impl<'a> Engine<'a> {
     /// Execute full forward passes for `idxs`, refresh caches, advance.
     /// Requests that never read the feature cache take the eps-only
     /// entry point (no boundary-stack transfer — EXPERIMENTS.md §Perf).
-    fn run_full(&mut self, idxs: &[usize]) -> Result<()> {
+    fn run_full(&mut self, model: &dyn ModelBackend, idxs: &[usize]) -> Result<()> {
         if idxs.is_empty() {
             return Ok(());
         }
-        let model = self.model;
         let has_light = model.supports("full_eps");
         let (heavy, light): (Vec<usize>, Vec<usize>) = idxs.iter().partition(|&&i| {
             let st = &self.active[i];
@@ -366,7 +380,7 @@ impl<'a> Engine<'a> {
                 || st.spec.policy.reuse_frac() > 0.0
                 || st.spec.record_traj
         });
-        self.run_full_light(&light)?;
+        self.run_full_light(model, &light)?;
         let idxs = &heavy;
         if idxs.is_empty() {
             return Ok(());
@@ -379,7 +393,7 @@ impl<'a> Engine<'a> {
         let total = self.total_steps();
         for chunk in plan_chunks(idxs.len(), &cfg.buckets, self.cfg.strategy) {
             let members: Vec<usize> = chunk.members.iter().map(|m| idxs[*m]).collect();
-            self.gather_ty(&chunk, idxs);
+            self.gather_ty(&entry.schedule, &chunk, idxs);
             {
                 let Engine { active, scratch, .. } = &mut *self;
                 gather_rows_into(&mut scratch.x, &chunk, latent, |m, dst| {
@@ -432,17 +446,16 @@ impl<'a> Engine<'a> {
     }
 
     /// Eps-only full passes (no cache refresh needed for these policies).
-    fn run_full_light(&mut self, idxs: &[usize]) -> Result<()> {
+    fn run_full_light(&mut self, model: &dyn ModelBackend, idxs: &[usize]) -> Result<()> {
         if idxs.is_empty() {
             return Ok(());
         }
-        let model = self.model;
         let entry = model.entry();
         let latent = entry.config.latent_dim;
         let total = self.total_steps();
         for chunk in plan_chunks(idxs.len(), &entry.config.buckets, self.cfg.strategy) {
             let members: Vec<usize> = chunk.members.iter().map(|m| idxs[*m]).collect();
-            self.gather_ty(&chunk, idxs);
+            self.gather_ty(&entry.schedule, &chunk, idxs);
             {
                 let Engine { active, scratch, .. } = &mut *self;
                 gather_rows_into(&mut scratch.x, &chunk, latent, |m, dst| {
@@ -475,18 +488,18 @@ impl<'a> Engine<'a> {
     /// iff the relative error beats τ_t.
     fn run_verify(
         &mut self,
+        model: &dyn ModelBackend,
         layer: usize,
         idxs: &[usize],
         accepted: &mut Vec<usize>,
         rejected: &mut Vec<usize>,
     ) -> Result<()> {
-        let model = self.model;
         let entry = model.entry();
         let feat = entry.feat_len();
         let total = self.total_steps();
         for chunk in plan_chunks(idxs.len(), &entry.config.buckets, self.cfg.strategy) {
             let members: Vec<usize> = chunk.members.iter().map(|m| idxs[*m]).collect();
-            self.gather_ty(&chunk, idxs);
+            self.gather_ty(&entry.schedule, &chunk, idxs);
             {
                 let Engine { active, scratch, .. } = &mut *self;
                 gather_rows_into(&mut scratch.feat, &chunk, feat, |m, dst| {
@@ -519,17 +532,16 @@ impl<'a> Engine<'a> {
 
     /// Output heads over predicted last-boundary features (accepted SpeCa +
     /// TaylorSeer speculative steps).
-    fn run_heads(&mut self, idxs: &[usize]) -> Result<()> {
+    fn run_heads(&mut self, model: &dyn ModelBackend, idxs: &[usize]) -> Result<()> {
         if idxs.is_empty() {
             return Ok(());
         }
-        let model = self.model;
         let entry = model.entry();
         let feat = entry.feat_len();
         let total = self.total_steps();
         for chunk in plan_chunks(idxs.len(), &entry.config.buckets, self.cfg.strategy) {
             let members: Vec<usize> = chunk.members.iter().map(|m| idxs[*m]).collect();
-            self.gather_ty(&chunk, idxs);
+            self.gather_ty(&entry.schedule, &chunk, idxs);
             {
                 let Engine { active, scratch, .. } = &mut *self;
                 gather_rows_into(&mut scratch.feat, &chunk, feat, |m, dst| {
@@ -564,11 +576,10 @@ impl<'a> Engine<'a> {
     /// ToCa/DuCa-sim partial steps: recompute fully but emit a token-blended
     /// head input (reuse_frac of tokens come from the stale cache). FLOPs
     /// are booked at the simulated (1−R)·C cost — see DESIGN.md §2.
-    fn run_blend(&mut self, idxs: &[usize]) -> Result<()> {
+    fn run_blend(&mut self, model: &dyn ModelBackend, idxs: &[usize]) -> Result<()> {
         if idxs.is_empty() {
             return Ok(());
         }
-        let model = self.model;
         let entry = model.entry();
         let cfg = &entry.config;
         let latent = cfg.latent_dim;
@@ -579,7 +590,7 @@ impl<'a> Engine<'a> {
         let total = self.total_steps();
         for chunk in plan_chunks(idxs.len(), &cfg.buckets, self.cfg.strategy) {
             let members: Vec<usize> = chunk.members.iter().map(|m| idxs[*m]).collect();
-            self.gather_ty(&chunk, idxs);
+            self.gather_ty(&entry.schedule, &chunk, idxs);
             {
                 let Engine { active, scratch, .. } = &mut *self;
                 gather_rows_into(&mut scratch.x, &chunk, latent, |m, dst| {
@@ -656,30 +667,6 @@ fn tok_hash(tok: usize, step: usize) -> f64 {
     (h >> 11) as f64 / (1u64 << 53) as f64
 }
 
-/// Sinusoidal timestep embedding matching model.py (TeaCache drift signal,
-/// reused by the native backend's conditioning path).
-pub fn timestep_embedding(t: f32, dim: usize) -> Vec<f32> {
-    let half = dim / 2;
-    let mut out = vec![0f32; dim];
-    for i in 0..half {
-        let freq = (-(10000f64.ln()) * i as f64 / half as f64).exp();
-        let arg = t as f64 * freq;
-        out[i] = arg.cos() as f32;
-        out[half + i] = arg.sin() as f32;
-    }
-    out
-}
-
-fn rel_l1(a: &[f32], b: &[f32]) -> f64 {
-    let mut num = 0.0f64;
-    let mut den = 0.0f64;
-    for (x, y) in a.iter().zip(b) {
-        num += ((*x - *y) as f64).abs();
-        den += (*y as f64).abs();
-    }
-    num / (den + 1e-8)
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -692,21 +679,5 @@ mod tests {
         // deterministic
         assert_eq!(tok_hash(5, 7), tok_hash(5, 7));
         assert_ne!(tok_hash(5, 7), tok_hash(5, 8));
-    }
-
-    #[test]
-    fn temb_shape_and_range() {
-        let e = timestep_embedding(500.0, 64);
-        assert_eq!(e.len(), 64);
-        assert!(e.iter().all(|v| v.abs() <= 1.0 + 1e-6));
-        // embeddings of distinct timesteps differ
-        let e2 = timestep_embedding(400.0, 64);
-        assert!(rel_l1(&e, &e2) > 1e-3);
-    }
-
-    #[test]
-    fn rel_l1_zero_on_equal() {
-        let a = vec![1.0f32, -2.0];
-        assert!(rel_l1(&a, &a) < 1e-12);
     }
 }

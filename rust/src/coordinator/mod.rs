@@ -5,8 +5,10 @@
 pub mod batcher;
 pub mod engine;
 pub mod policy;
+pub mod pool;
 pub mod state;
 
 pub use engine::{Engine, EngineConfig};
 pub use policy::{ErrorMetric, Plan, Policy, SpeCaConfig};
+pub use pool::{EngineShardPool, PoolConfig, PoolOutcome, RouterPolicy, ShardRouter, ShardStats};
 pub use state::{Completion, ReqState, RequestSpec, RequestStats};

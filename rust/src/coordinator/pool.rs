@@ -1,0 +1,384 @@
+//! Sharded serving: N worker threads, each owning an [`Engine`] over one
+//! shared `Send + Sync` backend, fed by a round-robin / least-loaded
+//! router (DESIGN.md §8).
+//!
+//! Threading model:
+//! * every shard worker runs the same loop the single-threaded server
+//!   used — ingest without blocking while there is work, tick, drain —
+//!   so per-request behaviour is identical to a lone engine;
+//! * the router picks a shard at submit time from a load snapshot
+//!   (per-shard `AtomicUsize` of requests in flight) and is `Clone`, so
+//!   any number of connection threads can submit concurrently without a
+//!   central funnel;
+//! * completions from all shards merge onto one channel. They arrive in
+//!   nondeterministic order across shards, but every [`Completion`]
+//!   carries its request id, so callers re-order (or route replies) by
+//!   id — and because backends are batching-transparent and requests
+//!   share no state, a request's completion is *identical* regardless of
+//!   shard count (the parity suite in `tests/shard_pool.rs` asserts it).
+//!
+//! Shutdown is two-mode: `drain` stops ingestion and finishes everything
+//! already routed; `halt` abandons in-flight work. Both join every
+//! worker before returning.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::Arc;
+use std::thread::{self, JoinHandle};
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::state::{Completion, RequestSpec};
+use crate::coordinator::{Engine, EngineConfig};
+use crate::metrics::flops::FlopsCounter;
+use crate::runtime::ModelBackend;
+
+/// How the router spreads requests over shards.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouterPolicy {
+    /// Cycle through shards regardless of load.
+    RoundRobin,
+    /// Pick the shard with the fewest requests in flight (ties go to the
+    /// lowest index, so routing is deterministic for a given load state).
+    LeastLoaded,
+}
+
+impl RouterPolicy {
+    pub fn parse(s: &str) -> Option<RouterPolicy> {
+        match s {
+            "rr" | "round-robin" => Some(RouterPolicy::RoundRobin),
+            "ll" | "least-loaded" => Some(RouterPolicy::LeastLoaded),
+            _ => None,
+        }
+    }
+
+    /// Pure routing decision over a load snapshot (`rr_ticket` is the
+    /// submission ordinal for round-robin).
+    pub fn pick(&self, loads: &[usize], rr_ticket: usize) -> usize {
+        let n = loads.len().max(1);
+        match self {
+            RouterPolicy::RoundRobin => rr_ticket % n,
+            RouterPolicy::LeastLoaded => loads
+                .iter()
+                .enumerate()
+                .min_by_key(|(i, l)| (**l, *i))
+                .map(|(i, _)| i)
+                .unwrap_or(0),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct PoolConfig {
+    /// worker threads (each owns one engine); clamped to ≥ 1
+    pub shards: usize,
+    pub router: RouterPolicy,
+    /// per-shard engine configuration (`max_inflight` is per shard)
+    pub engine: EngineConfig,
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        PoolConfig {
+            shards: 1,
+            router: RouterPolicy::LeastLoaded,
+            engine: EngineConfig::default(),
+        }
+    }
+}
+
+enum ShardMsg {
+    Submit(RequestSpec),
+    Stats(Sender<ShardStats>),
+    /// stop ingesting, finish everything already routed, exit
+    Drain,
+    /// exit now, abandoning in-flight requests
+    Halt,
+}
+
+/// Counter snapshot of one shard (or, merged, of the whole pool).
+#[derive(Debug, Clone, Default)]
+pub struct ShardStats {
+    pub completed: u64,
+    pub inflight: usize,
+    pub ticks: u64,
+    pub flops: FlopsCounter,
+}
+
+impl ShardStats {
+    fn merge(&mut self, other: &ShardStats) {
+        self.completed += other.completed;
+        self.inflight += other.inflight;
+        self.ticks += other.ticks;
+        self.flops.merge(&other.flops);
+    }
+}
+
+/// Cloneable submission handle: connection threads route directly to
+/// shard queues — no single-engine channel funnel in between.
+#[derive(Clone)]
+pub struct ShardRouter {
+    policy: RouterPolicy,
+    txs: Vec<Sender<ShardMsg>>,
+    loads: Vec<Arc<AtomicUsize>>,
+    rr: Arc<AtomicUsize>,
+}
+
+impl ShardRouter {
+    pub fn shards(&self) -> usize {
+        self.txs.len()
+    }
+
+    /// Requests in flight per shard (admitted + queued on the shard).
+    pub fn loads(&self) -> Vec<usize> {
+        self.loads.iter().map(|l| l.load(Ordering::SeqCst)).collect()
+    }
+
+    /// Total requests in flight across the pool.
+    pub fn inflight(&self) -> usize {
+        self.loads().iter().sum()
+    }
+
+    /// Route one request; returns the shard index it landed on.
+    pub fn submit(&self, spec: RequestSpec) -> Result<usize> {
+        let shard = self.policy.pick(&self.loads(), self.rr.fetch_add(1, Ordering::SeqCst));
+        self.loads[shard].fetch_add(1, Ordering::SeqCst);
+        if self.txs[shard].send(ShardMsg::Submit(spec)).is_err() {
+            self.loads[shard].fetch_sub(1, Ordering::SeqCst);
+            bail!("shard {shard} worker is gone");
+        }
+        Ok(shard)
+    }
+
+    /// Merged counter snapshot across all live shards (request/reply to
+    /// each worker; a worker replies between ticks).
+    pub fn stats(&self) -> ShardStats {
+        let mut agg = ShardStats::default();
+        for tx in &self.txs {
+            let (rtx, rrx) = channel();
+            if tx.send(ShardMsg::Stats(rtx)).is_err() {
+                continue;
+            }
+            if let Ok(s) = rrx.recv_timeout(Duration::from_secs(10)) {
+                agg.merge(&s);
+            }
+        }
+        agg
+    }
+}
+
+/// Everything a finished pool hands back.
+pub struct PoolOutcome {
+    /// completions not consumed through [`EngineShardPool::take_completion_rx`]
+    pub completions: Vec<Completion>,
+    pub stats: ShardStats,
+}
+
+/// N engines over one shared backend. See module docs for the threading
+/// model.
+pub struct EngineShardPool {
+    router: ShardRouter,
+    workers: Vec<JoinHandle<(ShardStats, Option<String>)>>,
+    completions: Option<Receiver<Completion>>,
+}
+
+impl EngineShardPool {
+    pub fn new(model: Arc<dyn ModelBackend + Send + Sync>, cfg: PoolConfig) -> EngineShardPool {
+        let shards = cfg.shards.max(1);
+        let (ctx, crx) = channel();
+        let mut txs = Vec::with_capacity(shards);
+        let mut loads = Vec::with_capacity(shards);
+        let mut workers = Vec::with_capacity(shards);
+        for shard in 0..shards {
+            let (tx, rx) = channel();
+            let load = Arc::new(AtomicUsize::new(0));
+            let worker_model = model.clone();
+            let worker_cfg = cfg.engine.clone();
+            let worker_load = load.clone();
+            let worker_ctx = ctx.clone();
+            workers.push(
+                thread::Builder::new()
+                    .name(format!("speca-shard-{shard}"))
+                    .spawn(move || {
+                        shard_worker(worker_model, worker_cfg, rx, worker_load, worker_ctx)
+                    })
+                    .expect("spawning shard worker"),
+            );
+            txs.push(tx);
+            loads.push(load);
+        }
+        EngineShardPool {
+            router: ShardRouter {
+                policy: cfg.router,
+                txs,
+                loads,
+                rr: Arc::new(AtomicUsize::new(0)),
+            },
+            workers,
+            completions: Some(crx),
+        }
+    }
+
+    /// A cloneable submission handle (connection threads each keep one).
+    pub fn router(&self) -> ShardRouter {
+        self.router.clone()
+    }
+
+    pub fn submit(&self, spec: RequestSpec) -> Result<usize> {
+        self.router.submit(spec)
+    }
+
+    pub fn stats(&self) -> ShardStats {
+        self.router.stats()
+    }
+
+    /// Take ownership of the merged completion stream (e.g. for a server
+    /// dispatcher thread). If never taken, [`Self::shutdown`] drains it
+    /// into [`PoolOutcome::completions`].
+    pub fn take_completion_rx(&mut self) -> Option<Receiver<Completion>> {
+        self.completions.take()
+    }
+
+    /// Stop the pool and join every worker. `drain` finishes all work
+    /// already submitted first; `!drain` abandons it. A worker that hit a
+    /// backend error (or panicked) surfaces here as `Err`, mirroring the
+    /// single-engine path where `tick()?` propagates.
+    pub fn shutdown(mut self, drain: bool) -> Result<PoolOutcome> {
+        for tx in &self.router.txs {
+            let _ = tx.send(if drain { ShardMsg::Drain } else { ShardMsg::Halt });
+        }
+        let rx = self.completions.take();
+        // drop the router's senders so a worker that missed the message
+        // still observes the disconnect and exits
+        let EngineShardPool { router, workers, .. } = self;
+        drop(router);
+        let mut stats = ShardStats::default();
+        let mut errors = Vec::new();
+        let mut panicked = 0usize;
+        for w in workers {
+            match w.join() {
+                Ok((s, err)) => {
+                    stats.merge(&s);
+                    errors.extend(err);
+                }
+                Err(_) => panicked += 1,
+            }
+        }
+        let mut completions = Vec::new();
+        if let Some(rx) = rx {
+            while let Ok(c) = rx.try_recv() {
+                completions.push(c);
+            }
+        }
+        if panicked > 0 {
+            bail!("{panicked} shard worker(s) panicked");
+        }
+        if !errors.is_empty() {
+            bail!("shard worker error(s): {}", errors.join("; "));
+        }
+        Ok(PoolOutcome { completions, stats })
+    }
+}
+
+fn snapshot(engine: &Engine<'_>, completed: u64) -> ShardStats {
+    ShardStats {
+        completed,
+        inflight: engine.pending(),
+        ticks: engine.ticks,
+        flops: engine.flops.clone(),
+    }
+}
+
+fn shard_worker(
+    model: Arc<dyn ModelBackend + Send + Sync>,
+    cfg: EngineConfig,
+    rx: Receiver<ShardMsg>,
+    load: Arc<AtomicUsize>,
+    completions: Sender<Completion>,
+) -> ShardStats {
+    let model: Arc<dyn ModelBackend> = model;
+    let mut engine = Engine::new(model, cfg);
+    let mut completed = 0u64;
+    let mut draining = false;
+    let mut disconnected = false;
+    loop {
+        // ingest everything available; block briefly only when idle so
+        // drain/halt stay responsive without busy-waiting
+        loop {
+            let msg = if engine.pending() > 0 || draining || disconnected {
+                match rx.try_recv() {
+                    Ok(m) => Some(m),
+                    Err(TryRecvError::Empty) => None,
+                    Err(TryRecvError::Disconnected) => {
+                        disconnected = true;
+                        None
+                    }
+                }
+            } else {
+                match rx.recv_timeout(Duration::from_millis(20)) {
+                    Ok(m) => Some(m),
+                    Err(RecvTimeoutError::Timeout) => None,
+                    Err(RecvTimeoutError::Disconnected) => {
+                        disconnected = true;
+                        None
+                    }
+                }
+            };
+            let Some(msg) = msg else { break };
+            match msg {
+                ShardMsg::Submit(spec) => engine.submit(spec),
+                ShardMsg::Stats(reply) => {
+                    let _ = reply.send(snapshot(&engine, completed));
+                }
+                ShardMsg::Drain => draining = true,
+                ShardMsg::Halt => return snapshot(&engine, completed),
+            }
+        }
+        if engine.pending() > 0 {
+            if let Err(e) = engine.tick() {
+                // a backend failure poisons this shard only; in-flight
+                // requests are reported as abandoned via the load gauge
+                eprintln!("speca: shard worker tick failed: {e:#}");
+                return snapshot(&engine, completed);
+            }
+            for c in engine.drain_completions() {
+                completed += 1;
+                load.fetch_sub(1, Ordering::SeqCst);
+                let _ = completions.send(c);
+            }
+        } else if draining || disconnected {
+            return snapshot(&engine, completed);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn least_loaded_picks_min_with_deterministic_ties() {
+        let p = RouterPolicy::LeastLoaded;
+        assert_eq!(p.pick(&[3, 1, 2], 0), 1);
+        assert_eq!(p.pick(&[2, 0, 0, 1], 7), 1, "tie breaks to lowest index");
+        assert_eq!(p.pick(&[0], 5), 0);
+        assert_eq!(p.pick(&[], 5), 0, "degenerate snapshot is safe");
+    }
+
+    #[test]
+    fn round_robin_cycles_regardless_of_load() {
+        let p = RouterPolicy::RoundRobin;
+        let picks: Vec<usize> = (0..5).map(|t| p.pick(&[9, 0, 0], t)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1]);
+    }
+
+    #[test]
+    fn router_policy_parses() {
+        assert_eq!(RouterPolicy::parse("least-loaded"), Some(RouterPolicy::LeastLoaded));
+        assert_eq!(RouterPolicy::parse("ll"), Some(RouterPolicy::LeastLoaded));
+        assert_eq!(RouterPolicy::parse("round-robin"), Some(RouterPolicy::RoundRobin));
+        assert_eq!(RouterPolicy::parse("rr"), Some(RouterPolicy::RoundRobin));
+        assert_eq!(RouterPolicy::parse("hash"), None);
+    }
+}

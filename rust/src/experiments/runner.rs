@@ -6,18 +6,20 @@ use std::collections::BTreeMap;
 use std::fs;
 use std::path::Path;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::config::ModelConfig;
+use crate::coordinator::batcher::BatchStrategy;
 use crate::coordinator::policy::Policy;
 use crate::coordinator::state::Completion;
-use crate::coordinator::{Engine, EngineConfig};
+use crate::coordinator::{Engine, EngineConfig, EngineShardPool, PoolConfig, RouterPolicy};
 use crate::metrics::flops::FlopsCounter;
 use crate::metrics::frechet::fid_vs_reference;
 use crate::metrics::stats::{
     class_agreement, fidelity_score, inception_score, vbench_star, Histogram,
 };
-use crate::runtime::{ClassifierBackend, ModelBackend};
+use crate::runtime::{ClassifierBackend, ResolvedModel};
+use crate::util::cli::Args;
 use crate::workload::batch_requests;
 
 /// Outcome of one (policy, n-sample) run.
@@ -29,30 +31,109 @@ pub struct RunResult {
     pub wall_s: f64,
 }
 
-/// Drive `n` closed-loop requests with one policy through a fresh engine.
+/// How to drive a policy run: workload size, engine shape, sharding.
+#[derive(Debug, Clone)]
+pub struct RunOpts {
+    pub n: usize,
+    pub seed: u64,
+    /// per-engine (per-shard) admission cap
+    pub inflight: usize,
+    /// engine worker threads; > 1 requires a `Send + Sync` backend
+    pub shards: usize,
+    pub router: RouterPolicy,
+    pub strategy: BatchStrategy,
+    pub use_pallas: bool,
+    pub record_traj: bool,
+}
+
+impl Default for RunOpts {
+    fn default() -> Self {
+        RunOpts {
+            n: 8,
+            seed: 0,
+            inflight: 8,
+            shards: 1,
+            router: RouterPolicy::LeastLoaded,
+            strategy: BatchStrategy::Binary,
+            use_pallas: false,
+            record_traj: false,
+        }
+    }
+}
+
+impl RunOpts {
+    /// Read the shared engine/workload flags (`--seed`, `--inflight`,
+    /// `--shards`, `--router`) with `n` supplied by the caller.
+    pub fn from_args(args: &Args, n: usize) -> Result<RunOpts> {
+        let router = args.str("router", "least-loaded");
+        let Some(router) = RouterPolicy::parse(&router) else {
+            bail!("unknown router '{router}' (expected least-loaded|round-robin)");
+        };
+        Ok(RunOpts {
+            n,
+            seed: args.u64("seed", 0),
+            inflight: args.usize("inflight", 8),
+            shards: args.usize("shards", 1),
+            router,
+            ..RunOpts::default()
+        })
+    }
+
+    pub fn engine_config(&self) -> EngineConfig {
+        EngineConfig {
+            max_inflight: self.inflight,
+            strategy: self.strategy,
+            use_pallas: self.use_pallas,
+        }
+    }
+}
+
+/// Drive `n` closed-loop requests with one policy through a fresh engine
+/// (or, with `opts.shards > 1`, through a fresh shard pool).
 pub fn run_policy(
-    model: &dyn ModelBackend,
+    model: &ResolvedModel<'_>,
     policy: &Policy,
     label: &str,
-    n: usize,
-    seed: u64,
-    inflight: usize,
-    record_traj: bool,
+    opts: &RunOpts,
 ) -> Result<RunResult> {
-    let mut engine = Engine::new(
-        model,
-        EngineConfig { max_inflight: inflight, ..EngineConfig::default() },
+    let reqs = batch_requests(
+        opts.n,
+        model.entry().config.num_classes,
+        policy,
+        opts.seed,
+        opts.record_traj,
     );
-    for r in batch_requests(n, model.entry().config.num_classes, policy, seed, record_traj) {
-        engine.submit(r);
-    }
     let t0 = std::time::Instant::now();
-    let completions = engine.run_to_completion()?;
+    let (completions, flops) = if opts.shards > 1 {
+        let Some(shared) = model.shared() else {
+            bail!(
+                "--shards {} needs a Send + Sync backend; the PJRT runtime is \
+                 single-threaded (use --backend native)",
+                opts.shards
+            );
+        };
+        let pool = EngineShardPool::new(
+            shared,
+            PoolConfig { shards: opts.shards, router: opts.router, engine: opts.engine_config() },
+        );
+        for r in reqs {
+            pool.submit(r)?;
+        }
+        let out = pool.shutdown(true)?;
+        (out.completions, out.stats.flops)
+    } else {
+        let mut engine = Engine::new(model.backend(), opts.engine_config());
+        for r in reqs {
+            engine.submit(r);
+        }
+        let completions = engine.run_to_completion()?;
+        (completions, engine.flops.clone())
+    };
     let wall_s = t0.elapsed().as_secs_f64();
     Ok(RunResult {
         label: label.to_string(),
         completions_by_id: completions.into_iter().map(|c| (c.id, c)).collect(),
-        flops: engine.flops,
+        flops,
         wall_s,
     })
 }

@@ -6,31 +6,30 @@
 //! matched acceleration, where baselines collapse, how α maps to speedup
 //! (Eq. 8).
 //!
-//! Every runner resolves an execution backend first (DESIGN.md §3): PJRT
-//! artifacts when compiled with the `pjrt` feature and `artifacts/` is
+//! Every runner resolves an execution backend through
+//! `runtime::resolve` first (DESIGN.md §3): PJRT artifacts when compiled
+//! with the `pjrt` feature, a working runtime and `artifacts/` are
 //! present, otherwise the seeded zero-artifact native models — so the
 //! whole harness runs on a bare checkout (`--backend native|pjrt|auto`
-//! overrides, default auto).
+//! overrides, default auto). `--shards N` fans a runner's engine out over
+//! the shard pool (native backend only).
 
 use std::path::PathBuf;
 
 use anyhow::{bail, Result};
 
 use crate::cache::{DraftKind, TapCache};
-#[cfg(feature = "pjrt")]
-use crate::config::Manifest;
 use crate::coordinator::policy::ErrorMetric;
 use crate::metrics::pca::pca2;
 use crate::metrics::stats::pearson;
-#[cfg(feature = "pjrt")]
-use crate::runtime::{ClassifierRuntime, ModelRuntime, Runtime};
-use crate::runtime::{ClassifierBackend, ModelBackend, NativeHub};
+use crate::runtime::resolve::{self, BackendRequest};
+use crate::runtime::{ClassifierBackend, ModelBackend, ResolvedModel};
 use crate::util::cli::Args;
 use crate::util::rng::Rng;
 use crate::workload::parse_policy;
 
 use super::runner::{
-    evaluate_quality, latency_hist, run_policy, write_csv, Quality, RunResult,
+    evaluate_quality, latency_hist, run_policy, write_csv, Quality, RunOpts, RunResult,
 };
 
 pub fn run(args: &Args) -> Result<()> {
@@ -61,51 +60,22 @@ pub fn results_path(file: &str) -> PathBuf {
     PathBuf::from("results").join(file)
 }
 
-fn native_hub(args: &Args) -> NativeHub {
-    NativeHub::seeded(args.u64("model-seed", NativeHub::DEFAULT_SEED))
-}
-
-/// Should this invocation run on the native backend? Honors `--backend
-/// native|pjrt|auto`; auto prefers PJRT artifacts when available.
-fn want_native(args: &Args) -> Result<bool> {
-    let kind = crate::runtime::select_backend(
-        &args.str("backend", "auto"),
-        crate::artifacts_dir().join("manifest.json").exists(),
-    )?;
-    Ok(kind == crate::runtime::BackendKind::Native)
-}
-
-/// Resolve a model + classifier backend pair and run `f` against it.
+/// Resolve a model + classifier backend pair and run `f` against it
+/// (the shared resolver with the runner's pinned model name).
 fn with_backends<R>(
     model_name: &str,
     args: &Args,
-    f: impl FnOnce(&dyn ModelBackend, &dyn ClassifierBackend) -> Result<R>,
+    f: impl FnOnce(&ResolvedModel<'_>, &dyn ClassifierBackend) -> Result<R>,
 ) -> Result<R> {
-    if want_native(args)? {
-        let hub = native_hub(args);
-        let model = hub.model(model_name)?;
-        return f(model, &hub.classifier);
-    }
-    #[cfg(feature = "pjrt")]
-    {
-        let manifest = Manifest::load(&crate::artifacts_dir())?;
-        let entry = manifest.model(model_name)?;
-        let rt = Runtime::cpu()?;
-        let model = ModelRuntime::load(&rt, entry)?;
-        let cls = ClassifierRuntime::load(&rt, &manifest.classifier)?;
-        return f(&model, &cls);
-    }
-    #[cfg(not(feature = "pjrt"))]
-    {
-        unreachable!("want_native is always true without the pjrt feature");
-    }
+    let req = BackendRequest::from_args(args).with_model(model_name);
+    resolve::with_backends(&req, |model, cls| f(&model, cls))
 }
 
 /// Model-only variant for the figure runners that need no classifier.
 fn with_model<R>(
     model_name: &str,
     args: &Args,
-    f: impl FnOnce(&dyn ModelBackend) -> Result<R>,
+    f: impl FnOnce(&ResolvedModel<'_>) -> Result<R>,
 ) -> Result<R> {
     with_backends(model_name, args, |model, _cls| f(model))
 }
@@ -131,22 +101,20 @@ pub struct Row {
 }
 
 pub fn eval_row(
-    model: &dyn ModelBackend,
+    model: &ResolvedModel<'_>,
     cls: &dyn ClassifierBackend,
     reference: &RunResult,
     desc: &str,
     label: &str,
-    n: usize,
-    seed: u64,
-    inflight: usize,
+    opts: &RunOpts,
 ) -> Result<Row> {
     let policy = parse_policy(desc, model.entry().config.depth)?;
-    let run = run_policy(model, &policy, label, n, seed, inflight, false)?;
+    let run = run_policy(model, &policy, label, opts)?;
     let q = evaluate_quality(&run, reference, &model.entry().config, cls)?;
     let mut lat = latency_hist(&run);
     let full1 = model.entry().flops.full_step[&1];
     let steps = model.entry().config.serve_steps;
-    let ideal = (n * steps) as u64 * full1;
+    let ideal = (opts.n * steps) as u64 * full1;
     Ok(Row {
         label: label.to_string(),
         latency_ms: lat.percentile(0.5),
@@ -236,20 +204,12 @@ fn table_quality(
     with_backends(model_name, args, |model, cls| {
         let entry = model.entry();
         let n = sample_count(args, 48);
-        let seed = args.u64("seed", 0);
-        let inflight = args.usize("inflight", 8);
+        let opts = RunOpts::from_args(args, n)?;
         let video = entry.config.frames > 1;
 
         println!("== {name} ({model_name} on {}, n={n} samples/policy) ==", model.kind());
-        let reference = run_policy(
-            model,
-            &parse_policy("full", entry.config.depth)?,
-            "full",
-            n,
-            seed,
-            inflight,
-            false,
-        )?;
+        let reference =
+            run_policy(model, &parse_policy("full", entry.config.depth)?, "full", &opts)?;
 
         let hdr = if video {
             format!(
@@ -265,7 +225,7 @@ fn table_quality(
         println!("{hdr}");
         let mut csv = Vec::new();
         for (label, desc) in rows {
-            let row = eval_row(model, cls, &reference, desc, label, n, seed, inflight)?;
+            let row = eval_row(model, cls, &reference, desc, label, &opts)?;
             if video {
                 println!(
                     "{:<22} {:>8.1} {:>9.3} {:>6.2}x {:>7.2} {:>8.4} {:>8.3} {:>8}",
@@ -329,18 +289,10 @@ fn table_sweep(name: &str, args: &Args, kind: SweepKind) -> Result<()> {
     with_backends("dit-sim", args, |model, cls| {
         let entry = model.entry();
         let n = sample_count(args, 48);
-        let seed = args.u64("seed", 0);
-        let inflight = args.usize("inflight", 8);
+        let opts = RunOpts::from_args(args, n)?;
 
-        let reference = run_policy(
-            model,
-            &parse_policy("full", entry.config.depth)?,
-            "full",
-            n,
-            seed,
-            inflight,
-            false,
-        )?;
+        let reference =
+            run_policy(model, &parse_policy("full", entry.config.depth)?, "full", &opts)?;
 
         let (title, grid): (&str, Vec<(String, String)>) = match kind {
             SweepKind::Beta => (
@@ -369,7 +321,7 @@ fn table_sweep(name: &str, args: &Args, kind: SweepKind) -> Result<()> {
         );
         let mut csv = Vec::new();
         for (label, desc) in &grid {
-            let row = eval_row(model, cls, &reference, desc, label, n, seed, inflight)?;
+            let row = eval_row(model, cls, &reference, desc, label, &opts)?;
             println!(
                 "{:<12} {:>9.3} {:>6.2}x {:>8.3} {:>8.3} {:>8.2} {:>8.4} {:>8.3} {:>8}",
                 row.label, row.gflops_total, row.speed, row.q.fid, row.q.sfid, row.q.is,
@@ -395,12 +347,10 @@ fn table_sweep(name: &str, args: &Args, kind: SweepKind) -> Result<()> {
 fn table6(args: &Args) -> Result<()> {
     with_backends("dit-sim", args, |model, cls| {
         let n = sample_count(args, 48);
-        let seed = args.u64("seed", 0);
-        let inflight = args.usize("inflight", 8);
+        let opts = RunOpts::from_args(args, n)?;
         let depth = model.entry().config.depth;
 
-        let reference =
-            run_policy(model, &parse_policy("full", depth)?, "full", n, seed, inflight, false)?;
+        let reference = run_policy(model, &parse_policy("full", depth)?, "full", &opts)?;
         let layers = [0usize, depth / 4, 2 * depth / 3, depth - 1];
         println!("== table6: verify-layer ablation (depth={depth}, n={n}) ==");
         println!(
@@ -417,7 +367,7 @@ fn table6(args: &Args) -> Result<()> {
             } else {
                 format!("layer{v}")
             };
-            let row = eval_row(model, cls, &reference, &desc, &label, n, seed, inflight)?;
+            let row = eval_row(model, cls, &reference, &desc, &label, &opts)?;
             println!(
                 "{:<16} {:>8.3} {:>8.3} {:>8.2} {:>6.2}x {:>8}",
                 row.label, row.q.fid, row.q.sfid, row.q.is, row.speed, row.rejects
@@ -463,16 +413,12 @@ fn small_flux_table(
 ) -> Result<()> {
     with_backends("flux-sim", args, |model, cls| {
         let n = sample_count(args, 48);
-        let seed = args.u64("seed", 0);
-        let inflight = args.usize("inflight", 8);
+        let opts = RunOpts::from_args(args, n)?;
         let reference = run_policy(
             model,
             &parse_policy("full", model.entry().config.depth)?,
             "full",
-            n,
-            seed,
-            inflight,
-            false,
+            &opts,
         )?;
         println!("== {name}: {title} (flux-sim, n={n}) ==");
         println!(
@@ -481,7 +427,7 @@ fn small_flux_table(
         );
         let mut csv = Vec::new();
         for (label, desc) in rows {
-            let row = eval_row(model, cls, &reference, desc, label, n, seed, inflight)?;
+            let row = eval_row(model, cls, &reference, desc, label, &opts)?;
             println!(
                 "{:<26} {:>8.3} {:>8.4} {:>6.2}x {:>8}",
                 row.label, row.q.agreement, row.q.fidelity, row.speed, row.rejects
@@ -509,16 +455,12 @@ fn small_flux_table(
 fn fig2(args: &Args) -> Result<()> {
     with_backends("dit-sim", args, |model, cls| {
         let n = sample_count(args, 32);
-        let seed = args.u64("seed", 0);
-        let inflight = args.usize("inflight", 8);
+        let opts = RunOpts::from_args(args, n)?;
         let reference = run_policy(
             model,
             &parse_policy("full", model.entry().config.depth)?,
             "full",
-            n,
-            seed,
-            inflight,
-            false,
+            &opts,
         )?;
 
         let families: Vec<(&str, Vec<String>)> = vec![
@@ -545,7 +487,7 @@ fn fig2(args: &Args) -> Result<()> {
         let mut csv = Vec::new();
         for (family, descs) in &families {
             for desc in descs {
-                let row = eval_row(model, cls, &reference, desc, desc, n, seed, inflight)?;
+                let row = eval_row(model, cls, &reference, desc, desc, &opts)?;
                 println!(
                     "{:<12} {:<34} speed={:>5.2}x FID*={:>7.3} IS*={:>6.2}",
                     family, desc, row.speed, row.q.fid, row.q.is
@@ -571,6 +513,7 @@ fn fig2(args: &Args) -> Result<()> {
 /// boundary's prediction error is measured against its true value.
 fn fig6(args: &Args) -> Result<()> {
     with_model("dit-sim", args, |model| {
+        let model = model.backend();
         let entry = model.entry();
         let cfg = &entry.config;
         let depth = cfg.depth;
@@ -662,16 +605,12 @@ fn fig6(args: &Args) -> Result<()> {
 fn fig8(args: &Args) -> Result<()> {
     with_backends("dit-sim", args, |model, cls| {
         let n = sample_count(args, 24);
-        let seed = args.u64("seed", 0);
-        let inflight = args.usize("inflight", 8);
+        let opts = RunOpts::from_args(args, n)?;
         let reference = run_policy(
             model,
             &parse_policy("full", model.entry().config.depth)?,
             "full",
-            n,
-            seed,
-            inflight,
-            false,
+            &opts,
         )?;
         let taus = [0.1, 0.3, 0.5, 0.8, 1.2];
         let betas = [0.01, 0.05, 0.12];
@@ -680,7 +619,7 @@ fn fig8(args: &Args) -> Result<()> {
         for b in betas {
             for t in taus {
                 let desc = format!("speca:N=12,O=2,tau0={t},beta={b}");
-                let row = eval_row(model, cls, &reference, &desc, &desc, n, seed, inflight)?;
+                let row = eval_row(model, cls, &reference, &desc, &desc, &opts)?;
                 println!(
                     "tau0={t:<4} beta={b:<5} speed={:>5.2}x FID*={:>7.3} sFID*={:>7.3}",
                     row.speed, row.q.fid, row.q.sfid
@@ -712,9 +651,11 @@ fn fig9(args: &Args) -> Result<()> {
         let mut all_rows: Vec<f32> = Vec::new();
         let mut meta: Vec<(String, usize)> = Vec::new();
         let feat = entry.config.tokens * entry.config.dim;
+        let opts =
+            RunOpts { n: 1, seed, inflight: 1, record_traj: true, ..RunOpts::default() };
         for (label, desc) in policies {
             let policy = parse_policy(desc, entry.config.depth)?;
-            let run = run_policy(model, &policy, label, 1, seed, 1, true)?;
+            let run = run_policy(model, &policy, label, &opts)?;
             let c = run.completions_by_id.values().next().unwrap();
             for row in &c.traj {
                 all_rows.extend_from_slice(row);
@@ -747,7 +688,7 @@ fn speedup_law(args: &Args) -> Result<()> {
     with_model("dit-sim", args, |model| {
         let entry = model.entry();
         let n = sample_count(args, 16);
-        let seed = args.u64("seed", 0);
+        let opts = RunOpts::from_args(args, n)?;
         let full1 = entry.flops.full_step[&1];
         println!("== speedup law: S vs 1/(1−α+αγ) ==");
         println!(
@@ -759,7 +700,7 @@ fn speedup_law(args: &Args) -> Result<()> {
             for interval in [4usize, 6, 9] {
                 let desc = format!("speca:N={interval},O=2,tau0={tau},beta=0.05");
                 let policy = parse_policy(&desc, entry.config.depth)?;
-                let run = run_policy(model, &policy, &desc, n, seed, 8, false)?;
+                let run = run_policy(model, &policy, &desc, &opts)?;
                 let a = run.flops.acceptance_rate();
                 let g = run.flops.gamma();
                 let s = run.flops.speedup(full1);

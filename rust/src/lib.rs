@@ -20,6 +20,7 @@ pub mod cache;
 pub mod config;
 pub mod experiments;
 pub mod coordinator;
+pub mod math;
 pub mod metrics;
 pub mod runtime;
 pub mod sampler;

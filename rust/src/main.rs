@@ -2,25 +2,25 @@
 //!
 //! Subcommands:
 //!   info                          — show backend/model inventory
-//!   generate [--model M] [--policy P] [--n N] ...   — closed-loop batch
-//!   serve    [--model M] [--addr A]                 — TCP JSON-lines server
-//!   load     [--addr A] [--n N] [--conns C]         — load generator
-//!   bench    <table1..8|fig2|fig6|fig8|fig9|speedup-law> — experiment runners
+//!   generate [--model M] [--policy P] [--n N] [--shards S] ...  — closed-loop batch
+//!   serve    [--model M] [--addr A] [--shards S]                — TCP JSON-lines server
+//!   load     [--addr A] [--n N] [--conns C]                     — load generator
+//!   bench    <table1..8|fig2|fig6|fig8|fig9|speedup-law>        — experiment runners
 //!            (micro perf data: `cargo bench --bench micro_runtime`)
 //!
 //! Every command takes `--backend native|pjrt|auto` (default auto): the
 //! pure-Rust native backend needs no artifacts at all; the PJRT backend
 //! (cargo feature `pjrt`) executes the AOT HLO artifacts (DESIGN.md §3).
+//! `--shards N` runs N engine worker threads over one shared backend
+//! (native only — the PJRT client is single-threaded).
 
 use anyhow::{bail, Result};
 
-#[cfg(feature = "pjrt")]
-use speca::config::Manifest;
 use speca::coordinator::batcher::BatchStrategy;
-use speca::coordinator::{Engine, EngineConfig};
-use speca::runtime::{select_backend, BackendKind, ClassifierBackend, ModelBackend, NativeHub};
-#[cfg(feature = "pjrt")]
-use speca::runtime::{ModelRuntime, Runtime};
+use speca::coordinator::Engine;
+use speca::experiments::runner::{run_policy, RunOpts};
+use speca::runtime::resolve::{self, BackendRequest};
+use speca::runtime::{BackendKind, ModelBackend, NativeHub};
 use speca::server::{self, client, ServerConfig};
 use speca::util::cli::Args;
 use speca::workload;
@@ -50,36 +50,33 @@ COMMANDS:
   info                       backend + model inventory (configs, FLOPs)
   generate                   run a closed-loop batch through the engine
       --model dit-sim --policy speca:N=5,O=2,tau0=0.3,beta=0.05 --n 8
-      --inflight 8 --strategy binary --seed 0 --dump-pgm out/
+      --inflight 8 --shards 1 --strategy binary --seed 0 --dump-pgm out/
   serve                      start the TCP JSON-lines server
-      --model dit-sim --addr 127.0.0.1:7433 --inflight 8
+      --model dit-sim --addr 127.0.0.1:7433 --inflight 8 --shards 4
+      --router least-loaded|round-robin
   load                       closed-loop load generator against a server
       --addr 127.0.0.1:7433 --n 32 --conns 4 --policy speca
   bench <name>               regenerate a paper table/figure (see DESIGN.md)
       table1..table8 | fig2|fig6|fig8|fig9 | speedup-law  [--quick] [--n N]
-      (micro perf: cargo bench --bench micro_runtime)
+      [--shards S]  (micro perf: cargo bench --bench micro_runtime)
 
 BACKENDS (--backend native|pjrt|auto, default auto):
   native   pure-Rust DiT forward, seeded weights, zero artifacts needed
   pjrt     AOT HLO artifacts via PJRT (requires --features pjrt build and
            ./artifacts from `make artifacts`; override with SPECA_ARTIFACTS)
   --model-seed N             seed for the native models (default fixed)
+  --shards N                 engine worker threads sharing one backend
+                             (native only; default 1)
 ";
 
-fn backend_kind(args: &Args) -> Result<BackendKind> {
-    select_backend(
-        &args.str("backend", "auto"),
-        speca::artifacts_dir().join("manifest.json").exists(),
-    )
-}
-
 fn info(args: &Args) -> Result<()> {
-    match backend_kind(args)? {
+    let req = BackendRequest::from_args(args);
+    match req.kind()? {
         BackendKind::Native => {
-            let hub = NativeHub::seeded(args.u64("model-seed", NativeHub::DEFAULT_SEED));
+            let hub = NativeHub::seeded(req.model_seed);
             println!("backend: native (seeded, zero artifacts)");
             for (name, m) in hub.models() {
-                print_model(name, m);
+                print_model(name, m.as_ref());
             }
             println!(
                 "classifier: native feat_dim={} classes={}",
@@ -119,7 +116,7 @@ fn print_model(name: &str, m: &dyn ModelBackend) {
 
 #[cfg(feature = "pjrt")]
 fn pjrt_info() -> Result<()> {
-    let manifest = Manifest::load(&speca::artifacts_dir())?;
+    let manifest = speca::config::Manifest::load(&speca::artifacts_dir())?;
     println!("artifacts: {}", manifest.root.display());
     for (name, m) in &manifest.models {
         let c = &m.config;
@@ -151,66 +148,26 @@ fn pjrt_info() -> Result<()> {
     unreachable!("select_backend rejects pjrt without the feature")
 }
 
-fn engine_config(args: &Args) -> Result<EngineConfig> {
+/// The engine/workload options every driving command shares.
+fn run_opts(args: &Args, n: usize) -> Result<RunOpts> {
     let strategy = args.str("strategy", "binary");
     let Some(strategy) = BatchStrategy::parse(&strategy) else {
         bail!("unknown strategy '{strategy}'");
     };
-    Ok(EngineConfig {
-        max_inflight: args.usize("inflight", 8),
-        strategy,
-        use_pallas: args.bool("pallas"),
-    })
-}
-
-/// Run `f` against the model backend the flags select.
-fn with_model(args: &Args, f: impl FnOnce(&dyn ModelBackend, &Args) -> Result<()>) -> Result<()> {
-    let model_name = args.str("model", "dit-sim");
-    match backend_kind(args)? {
-        BackendKind::Native => {
-            let hub = NativeHub::seeded(args.u64("model-seed", NativeHub::DEFAULT_SEED));
-            return f(hub.model(&model_name)?, args);
-        }
-        BackendKind::Pjrt => {
-            #[cfg(feature = "pjrt")]
-            {
-                let manifest = Manifest::load(&speca::artifacts_dir())?;
-                let entry = manifest.model(&model_name)?;
-                let rt = Runtime::cpu()?;
-                let model = ModelRuntime::load(&rt, entry)?;
-                return f(&model, args);
-            }
-            #[cfg(not(feature = "pjrt"))]
-            {
-                unreachable!("select_backend rejects pjrt without the feature");
-            }
-        }
-    }
+    Ok(RunOpts { strategy, use_pallas: args.bool("pallas"), ..RunOpts::from_args(args, n)? })
 }
 
 fn generate(args: &Args) -> Result<()> {
-    with_model(args, |model, args| {
+    let req = BackendRequest::from_args(args);
+    resolve::with_model(&req, |model| {
         let entry = model.entry();
-        let mut engine = Engine::new(model, engine_config(args)?);
-
         let policy = workload::parse_policy(
             &args.str("policy", "speca:N=5,O=2,tau0=0.3,beta=0.05"),
             entry.config.depth,
         )?;
-        let n = args.usize("n", 8);
-        let reqs = workload::batch_requests(
-            n,
-            entry.config.num_classes,
-            &policy,
-            args.u64("seed", 0),
-            false,
-        );
-        let t0 = std::time::Instant::now();
-        for r in reqs {
-            engine.submit(r);
-        }
-        let completions = engine.run_to_completion()?;
-        let wall = t0.elapsed().as_secs_f64();
+        let opts = run_opts(args, args.usize("n", 8))?;
+        let run = run_policy(&model, &policy, "generate", &opts)?;
+        let n = opts.n;
 
         let full_flops = entry.flops.full_step[&1];
         let steps = entry.config.serve_steps;
@@ -218,7 +175,7 @@ fn generate(args: &Args) -> Result<()> {
             "{:<6} {:<10} {:>6} {:>6} {:>6} {:>7} {:>9} {:>9}",
             "id", "policy", "full", "spec", "rej", "lat ms", "GFLOPs", "speedup"
         );
-        for c in &completions {
+        for c in run.completions_by_id.values() {
             let s = &c.stats;
             println!(
                 "{:<6} {:<10} {:>6} {:>6} {:>6} {:>7.1} {:>9.4} {:>8.2}x",
@@ -232,12 +189,14 @@ fn generate(args: &Args) -> Result<()> {
                 s.speedup(full_flops, steps)
             );
         }
-        let f = &engine.flops;
+        let f = &run.flops;
         println!(
-            "batch: n={n} backend={} wall={wall:.2}s throughput={:.2} req/s alpha={:.3} \
-             gamma={:.4} agg-speedup={:.2}x (law predicts {:.2}x)",
+            "batch: n={n} backend={} shards={} wall={:.2}s throughput={:.2} req/s \
+             alpha={:.3} gamma={:.4} agg-speedup={:.2}x (law predicts {:.2}x)",
             model.kind(),
-            n as f64 / wall,
+            opts.shards,
+            run.wall_s,
+            n as f64 / run.wall_s,
             f.acceptance_rate(),
             f.gamma(),
             f.speedup(full_flops),
@@ -245,6 +204,7 @@ fn generate(args: &Args) -> Result<()> {
         );
 
         if let Some(dir) = args.opt("dump-pgm") {
+            let completions: Vec<_> = run.completions_by_id.into_values().collect();
             speca::experiments::runner::dump_pgm(&completions, &entry.config, dir)?;
             println!("wrote sample grids to {dir}/");
         }
@@ -253,12 +213,31 @@ fn generate(args: &Args) -> Result<()> {
 }
 
 fn serve(args: &Args) -> Result<()> {
-    with_model(args, |model, args| {
+    let req = BackendRequest::from_args(args);
+    resolve::with_model(&req, |model| {
         // prepare the hot entry points before admitting traffic
-        model.warmup(&["full", "block", "head"], &model.entry().config.buckets)?;
-        let mut engine = Engine::new(model, engine_config(args)?);
-        let cfg = ServerConfig { addr: args.str("addr", "127.0.0.1:7433"), max_queue: 1024 };
-        let done = server::serve(&mut engine, &cfg)?;
+        let backend = model.backend();
+        backend.warmup(&["full", "block", "head"], &backend.entry().config.buckets)?;
+        let opts = run_opts(args, 0)?;
+        let cfg = ServerConfig {
+            addr: args.str("addr", "127.0.0.1:7433"),
+            max_queue: args.usize("max-queue", 1024),
+            shards: opts.shards.max(1),
+            router: opts.router,
+        };
+        let done = match model.shared() {
+            Some(shared) => server::serve_sharded(shared, opts.engine_config(), &cfg)?,
+            None => {
+                if cfg.shards > 1 {
+                    eprintln!(
+                        "speca: --shards needs a Send + Sync backend; \
+                         PJRT falls back to the single-threaded loop"
+                    );
+                }
+                let mut engine = Engine::new(backend, opts.engine_config());
+                server::serve(&mut engine, &cfg)?
+            }
+        };
         println!("served {done} requests");
         Ok(())
     })

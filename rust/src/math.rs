@@ -1,0 +1,49 @@
+//! Shared numeric helpers used across layers: the sinusoidal timestep
+//! embedding (conditioning path of the native backend, TeaCache drift
+//! signal in the engine) and the relative-L1 drift metric. Lives outside
+//! `coordinator` so L2 (`runtime/native.rs`) never imports from L3.
+
+/// Sinusoidal timestep embedding matching `python/compile/model.py`.
+pub fn timestep_embedding(t: f32, dim: usize) -> Vec<f32> {
+    let half = dim / 2;
+    let mut out = vec![0f32; dim];
+    for i in 0..half {
+        let freq = (-(10000f64.ln()) * i as f64 / half as f64).exp();
+        let arg = t as f64 * freq;
+        out[i] = arg.cos() as f32;
+        out[half + i] = arg.sin() as f32;
+    }
+    out
+}
+
+/// Relative L1 distance `‖a − b‖₁ / (‖b‖₁ + ε)` (TeaCache's drift signal).
+pub fn rel_l1(a: &[f32], b: &[f32]) -> f64 {
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for (x, y) in a.iter().zip(b) {
+        num += ((*x - *y) as f64).abs();
+        den += (*y as f64).abs();
+    }
+    num / (den + 1e-8)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn temb_shape_and_range() {
+        let e = timestep_embedding(500.0, 64);
+        assert_eq!(e.len(), 64);
+        assert!(e.iter().all(|v| v.abs() <= 1.0 + 1e-6));
+        // embeddings of distinct timesteps differ
+        let e2 = timestep_embedding(400.0, 64);
+        assert!(rel_l1(&e, &e2) > 1e-3);
+    }
+
+    #[test]
+    fn rel_l1_zero_on_equal() {
+        let a = vec![1.0f32, -2.0];
+        assert!(rel_l1(&a, &a) < 1e-12);
+    }
+}

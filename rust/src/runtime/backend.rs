@@ -71,6 +71,51 @@ pub trait ModelBackend {
     fn head(&self, bucket: usize, feat: &[f32], t: &[f32], y: &[i32]) -> Result<Tensor>;
 }
 
+/// References delegate, so a stack-owned backend can be handed to an
+/// `Arc<dyn ModelBackend>`-owning [`crate::coordinator::Engine`] without
+/// giving up ownership (`Engine::from_ref`).
+impl<B: ModelBackend + ?Sized> ModelBackend for &B {
+    fn entry(&self) -> &ModelEntry {
+        (**self).entry()
+    }
+
+    fn kind(&self) -> &'static str {
+        (**self).kind()
+    }
+
+    fn supports(&self, entry_point: &str) -> bool {
+        (**self).supports(entry_point)
+    }
+
+    fn warmup(&self, entry_points: &[&str], buckets: &[usize]) -> Result<()> {
+        (**self).warmup(entry_points, buckets)
+    }
+
+    fn full(
+        &self,
+        bucket: usize,
+        x: &[f32],
+        t: &[f32],
+        y: &[i32],
+        pallas: bool,
+    ) -> Result<(Tensor, Tensor)> {
+        (**self).full(bucket, x, t, y, pallas)
+    }
+
+    fn full_eps(&self, bucket: usize, x: &[f32], t: &[f32], y: &[i32]) -> Result<Tensor> {
+        (**self).full_eps(bucket, x, t, y)
+    }
+
+    fn block(&self, bucket: usize, layer: i32, feat: &[f32], t: &[f32], y: &[i32])
+        -> Result<Tensor> {
+        (**self).block(bucket, layer, feat, t, y)
+    }
+
+    fn head(&self, bucket: usize, feat: &[f32], t: &[f32], y: &[i32]) -> Result<Tensor> {
+        (**self).head(bucket, feat, t, y)
+    }
+}
+
 /// Metrics classifier (FID* features + IS* posteriors, DESIGN.md §2).
 ///
 /// `classify(b, x[b·latent])` → `(logits [b, num_classes],

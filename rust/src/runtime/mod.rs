@@ -7,15 +7,19 @@
 //!   forward pass; runs with zero artifacts (always compiled, the
 //!   default);
 //! * [`pjrt`] — AOT HLO artifacts executed through the PJRT C API;
-//!   compiled only with the `pjrt` cargo feature.
+//!   compiled only with the `pjrt` cargo feature;
+//! * [`resolve`] — the shared `--backend native|pjrt|auto` resolver used
+//!   by the CLI and every experiment runner.
 
 pub mod backend;
 pub mod native;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
+pub mod resolve;
 
 pub use backend::{ClassifierBackend, ModelBackend};
 pub use native::{NativeBackend, NativeClassifier, NativeHub};
+pub use resolve::{BackendRequest, ResolvedModel};
 #[cfg(feature = "pjrt")]
 pub use pjrt::{ClassifierRuntime, Exec, In, ModelRuntime, Runtime};
 

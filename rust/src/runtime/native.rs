@@ -16,13 +16,14 @@
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
 use crate::config::{
     FlopsTable, ModelConfig, ModelEntry, ParamSpec, Schedule, ScheduleKind,
 };
-use crate::coordinator::engine::timestep_embedding;
+use crate::math::timestep_embedding;
 use crate::runtime::backend::{ClassifierBackend, ModelBackend};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
@@ -832,9 +833,11 @@ impl ClassifierBackend for NativeClassifier {
 
 /// The zero-artifact inventory: one seeded native model per simulated
 /// backbone name (mirroring the AOT manifest's `dit-sim` / `flux-sim` /
-/// `video-sim`) plus the metrics classifier.
+/// `video-sim`) plus the metrics classifier. Models are stored behind
+/// `Arc` so the shard pool (and any other thread) can share one instance
+/// without the hub outliving the caller.
 pub struct NativeHub {
-    models: BTreeMap<String, NativeBackend>,
+    models: BTreeMap<String, Arc<NativeBackend>>,
     pub classifier: NativeClassifier,
 }
 
@@ -855,19 +858,29 @@ impl NativeHub {
         {
             debug_assert_eq!(cfg.latent_dim / cfg.frames, frame_latent, "{}", cfg.name);
             let name = cfg.name.clone();
-            models.insert(name, NativeBackend::seeded(cfg, seed ^ ((i as u64 + 1) << 32)));
+            models
+                .insert(name, Arc::new(NativeBackend::seeded(cfg, seed ^ ((i as u64 + 1) << 32))));
         }
         let classifier = NativeClassifier::seeded(frame_latent, classes, seed ^ 0xC1A5_51F1);
         NativeHub { models, classifier }
     }
 
     pub fn model(&self, name: &str) -> Result<&NativeBackend> {
+        Ok(self.lookup(name)?.as_ref())
+    }
+
+    /// Owning handle to a model, shareable across shard worker threads.
+    pub fn model_shared(&self, name: &str) -> Result<Arc<NativeBackend>> {
+        Ok(self.lookup(name)?.clone())
+    }
+
+    fn lookup(&self, name: &str) -> Result<&Arc<NativeBackend>> {
         self.models.get(name).with_context(|| {
             format!("model '{name}' not in native hub ({:?})", self.models.keys())
         })
     }
 
-    pub fn models(&self) -> impl Iterator<Item = (&String, &NativeBackend)> {
+    pub fn models(&self) -> impl Iterator<Item = (&String, &Arc<NativeBackend>)> {
         self.models.iter()
     }
 }

@@ -1,0 +1,195 @@
+//! Backend resolution shared by the CLI and the experiment runners —
+//! the one place that turns `--backend native|pjrt|auto` (+ `--model`,
+//! `--model-seed`) into live backend objects. Replaces the ladder that
+//! was previously duplicated in `main.rs` and `experiments/tables.rs`.
+//!
+//! `--backend auto` behaviour: prefer PJRT when the feature is compiled
+//! in and artifacts are present, but *probe* the runtime first — a build
+//! against the stub `xla` crate (rust/vendor/xla) fails at
+//! `Runtime::cpu()`, and auto falls back to the native backend with a
+//! warning instead of erroring. An explicit `--backend pjrt` still fails
+//! loudly.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::config::ModelEntry;
+use crate::runtime::{select_backend, BackendKind, ClassifierBackend, ModelBackend, NativeHub};
+use crate::util::cli::Args;
+
+/// The backend-selection flags of one CLI/bench invocation.
+#[derive(Debug, Clone)]
+pub struct BackendRequest {
+    pub backend: String,
+    pub model: String,
+    pub model_seed: u64,
+}
+
+impl BackendRequest {
+    pub fn from_args(args: &Args) -> BackendRequest {
+        BackendRequest {
+            backend: args.str("backend", "auto"),
+            model: args.str("model", "dit-sim"),
+            model_seed: args.u64("model-seed", NativeHub::DEFAULT_SEED),
+        }
+    }
+
+    /// Same request, different model name (experiment runners pin one).
+    pub fn with_model(mut self, model: &str) -> BackendRequest {
+        self.model = model.to_string();
+        self
+    }
+
+    /// Which backend the flags select, before any runtime probing.
+    pub fn kind(&self) -> Result<BackendKind> {
+        select_backend(&self.backend, artifacts_present())
+    }
+}
+
+pub fn artifacts_present() -> bool {
+    crate::artifacts_dir().join("manifest.json").exists()
+}
+
+/// A resolved model backend. `Shared` (native) can fan out across shard
+/// worker threads; `Local` (PJRT — `Rc`-based client) is pinned to the
+/// resolving thread.
+pub enum ResolvedModel<'env> {
+    Shared(Arc<dyn ModelBackend + Send + Sync>),
+    Local(Arc<dyn ModelBackend + 'env>),
+}
+
+impl<'env> ResolvedModel<'env> {
+    /// The backend as a uniform `Arc` handle (engine constructor input).
+    pub fn backend(&self) -> Arc<dyn ModelBackend + 'env> {
+        match self {
+            ResolvedModel::Shared(m) => m.clone(),
+            ResolvedModel::Local(m) => m.clone(),
+        }
+    }
+
+    /// The thread-shareable handle, when this backend supports one
+    /// (required by `--shards > 1`).
+    pub fn shared(&self) -> Option<Arc<dyn ModelBackend + Send + Sync>> {
+        match self {
+            ResolvedModel::Shared(m) => Some(m.clone()),
+            ResolvedModel::Local(_) => None,
+        }
+    }
+
+    pub fn entry(&self) -> &ModelEntry {
+        match self {
+            ResolvedModel::Shared(m) => m.entry(),
+            ResolvedModel::Local(m) => m.entry(),
+        }
+    }
+
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ResolvedModel::Shared(m) => m.kind(),
+            ResolvedModel::Local(m) => m.kind(),
+        }
+    }
+}
+
+/// Resolve a model + classifier pair and run `f` against them.
+pub fn with_backends<R>(
+    req: &BackendRequest,
+    f: impl FnOnce(ResolvedModel<'_>, &dyn ClassifierBackend) -> Result<R>,
+) -> Result<R> {
+    match req.kind()? {
+        BackendKind::Native => native_backends(req, f),
+        BackendKind::Pjrt => pjrt_backends(req, f),
+    }
+}
+
+/// Model-only variant for callers that need no classifier.
+pub fn with_model<R>(
+    req: &BackendRequest,
+    f: impl FnOnce(ResolvedModel<'_>) -> Result<R>,
+) -> Result<R> {
+    with_backends(req, |model, _cls| f(model))
+}
+
+fn native_backends<R>(
+    req: &BackendRequest,
+    f: impl FnOnce(ResolvedModel<'_>, &dyn ClassifierBackend) -> Result<R>,
+) -> Result<R> {
+    let hub = NativeHub::seeded(req.model_seed);
+    let model = hub.model_shared(&req.model)?;
+    f(ResolvedModel::Shared(model), &hub.classifier)
+}
+
+#[cfg(feature = "pjrt")]
+fn pjrt_backends<R>(
+    req: &BackendRequest,
+    f: impl FnOnce(ResolvedModel<'_>, &dyn ClassifierBackend) -> Result<R>,
+) -> Result<R> {
+    use crate::config::Manifest;
+    use crate::runtime::{ClassifierRuntime, ModelRuntime, Runtime};
+
+    let rt = match Runtime::cpu() {
+        Ok(rt) => rt,
+        Err(e) if req.backend == "auto" => {
+            eprintln!(
+                "speca: PJRT runtime unavailable ({e:#}); --backend auto falling back to native"
+            );
+            return native_backends(req, f);
+        }
+        Err(e) => return Err(e),
+    };
+    let manifest = Manifest::load(&crate::artifacts_dir())?;
+    let entry = manifest.model(&req.model)?;
+    let model = ModelRuntime::load(&rt, entry)?;
+    let cls = ClassifierRuntime::load(&rt, &manifest.classifier)?;
+    f(ResolvedModel::Local(Arc::new(model)), &cls)
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_backends<R>(
+    _req: &BackendRequest,
+    _f: impl FnOnce(ResolvedModel<'_>, &dyn ClassifierBackend) -> Result<R>,
+) -> Result<R> {
+    unreachable!("select_backend rejects pjrt without the feature")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::cli::Args;
+
+    fn argv(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn request_reads_flags_with_defaults() {
+        let r = BackendRequest::from_args(&argv("bench --backend native --model flux-sim"));
+        assert_eq!(r.backend, "native");
+        assert_eq!(r.model, "flux-sim");
+        assert_eq!(r.model_seed, NativeHub::DEFAULT_SEED);
+        let d = BackendRequest::from_args(&argv("serve"));
+        assert_eq!(d.backend, "auto");
+        assert_eq!(d.model, "dit-sim");
+        assert_eq!(d.with_model("video-sim").model, "video-sim");
+    }
+
+    #[test]
+    fn native_resolution_is_shared_and_shardable() {
+        let req = BackendRequest::from_args(&argv("x --backend native --model dit-sim"));
+        with_backends(&req, |model, cls| {
+            assert_eq!(model.kind(), "native");
+            assert!(model.shared().is_some(), "native must support sharding");
+            assert_eq!(model.entry().config.name, "dit-sim");
+            assert!(cls.num_classes() > 0);
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn unknown_backend_is_rejected() {
+        let req = BackendRequest::from_args(&argv("x --backend warp"));
+        assert!(with_model(&req, |_| Ok(())).is_err());
+    }
+}

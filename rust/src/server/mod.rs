@@ -1,39 +1,48 @@
 //! TCP JSON-lines serving front-end.
 //!
-//! The engine runs on the thread that calls [`serve`]; connection threads
-//! only parse/serialize and exchange work through channels (vLLM-router-
-//! style separation of front-end and engine loop). This layout is forced
-//! by the PJRT backend (its client is `Rc`-based, not `Send`) and merely
-//! convenient for the native backend, which is `Send + Sync` — moving the
-//! engine loop onto a worker pool is the follow-up the backend seam
-//! enables (DESIGN.md §3, ROADMAP).
+//! Two serving modes (DESIGN.md §8):
+//!
+//! * [`serve_sharded`] — the default for `Send + Sync` backends (native).
+//!   An [`EngineShardPool`] runs N engine loops over one shared backend;
+//!   connection threads route requests straight to shard queues through a
+//!   cloned [`ShardRouter`] (round-robin or least-loaded), and a single
+//!   dispatcher thread merges per-shard completion streams back to the
+//!   per-request reply channels. There is no central engine funnel.
+//! * [`serve`] — the legacy single-threaded loop, kept for backends whose
+//!   client is not `Send` (PJRT's is `Rc`-based): the engine runs on the
+//!   calling thread and connection threads hand work over one channel.
 //!
 //! Protocol (one JSON object per line):
 //!   → {"op":"generate","cond":3,"seed":7,"policy":"speca","tau0":0.3,
 //!      "return_latent":false}
 //!   ← {"id":0,"ok":true,"stats":{...},"latent":[...]?}
-//!   → {"op":"stats"}            ← engine-level counters
-//!   → {"op":"shutdown"}         ← stops the server loop
+//!   → {"op":"stats"}            ← engine/pool-level counters
+//!   → {"op":"shutdown"}         ← drains in-flight work, then stops
 //!
 //! See `client.rs` for the load generator used by the serving benches.
 
 pub mod client;
 
+use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread;
 use std::time::Duration;
 
 use anyhow::Result;
 
 use crate::coordinator::state::{Completion, RequestSpec};
-use crate::coordinator::Engine;
+use crate::coordinator::{
+    Engine, EngineConfig, EngineShardPool, PoolConfig, RouterPolicy, ShardRouter,
+};
+use crate::runtime::ModelBackend;
 use crate::util::json::Json;
 use crate::workload::policy_from_json;
 
-/// A parsed client request paired with its reply channel.
+/// A parsed client request paired with its reply channel (legacy loop).
 enum FrontendMsg {
     Generate { spec_body: Json, reply: Sender<String>, return_latent: bool },
     Stats { reply: Sender<String> },
@@ -42,13 +51,21 @@ enum FrontendMsg {
 
 pub struct ServerConfig {
     pub addr: String,
-    /// maximum requests in flight inside the engine
+    /// maximum requests in flight inside the engine(s)
     pub max_queue: usize,
+    /// engine worker threads for [`serve_sharded`]
+    pub shards: usize,
+    pub router: RouterPolicy,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { addr: "127.0.0.1:7433".into(), max_queue: 1024 }
+        ServerConfig {
+            addr: "127.0.0.1:7433".into(),
+            max_queue: 1024,
+            shards: 1,
+            router: RouterPolicy::LeastLoaded,
+        }
     }
 }
 
@@ -80,8 +97,226 @@ fn completion_json(c: &Completion, return_latent: bool, full_flops: u64, steps: 
     Json::obj(pairs)
 }
 
+fn error_json(msg: &str) -> String {
+    Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::str(msg))]).dump()
+}
+
+// ---------------------------------------------------------------------------
+// Sharded serving (native / any Send + Sync backend)
+// ---------------------------------------------------------------------------
+
+/// A reply slot for one in-flight request.
+struct Waiter {
+    reply: Sender<String>,
+    return_latent: bool,
+}
+
+/// Everything a connection thread needs; cloned per connection.
+#[derive(Clone)]
+struct ConnCtx {
+    router: ShardRouter,
+    waiting: Arc<Mutex<HashMap<u64, Waiter>>>,
+    accepting: Arc<AtomicBool>,
+    shutdown: Sender<()>,
+    completed: Arc<AtomicU64>,
+    next_id: Arc<AtomicU64>,
+    max_queue: usize,
+    depth: usize,
+}
+
+fn handle_generate(ctx: &ConnCtx, req: &Json) -> String {
+    if !ctx.accepting.load(Ordering::SeqCst) {
+        return error_json("server is shutting down");
+    }
+    if ctx.router.inflight() >= ctx.max_queue {
+        return error_json("queue full");
+    }
+    let return_latent = req.get("return_latent").and_then(|b| b.as_bool()).unwrap_or(false);
+    let policy = match policy_from_json(req, ctx.depth) {
+        Ok(p) => p,
+        Err(e) => return error_json(&format!("{e}")),
+    };
+    let id = ctx.next_id.fetch_add(1, Ordering::SeqCst);
+    let spec = RequestSpec {
+        id,
+        cond: req.get("cond").and_then(|c| c.as_f64()).unwrap_or(0.0) as i32,
+        seed: req.get("seed").and_then(|s| s.as_u64()).unwrap_or(id),
+        policy,
+        record_traj: false,
+    };
+    let (rtx, rrx) = channel();
+    // register the reply slot *before* submitting: the completion can
+    // race ahead of this thread once the spec is on a shard queue
+    ctx.waiting.lock().unwrap().insert(id, Waiter { reply: rtx, return_latent });
+    if let Err(e) = ctx.router.submit(spec) {
+        ctx.waiting.lock().unwrap().remove(&id);
+        return error_json(&format!("{e}"));
+    }
+    rrx.recv().unwrap_or_else(|_| error_json("server stopped"))
+}
+
+fn handle_stats(ctx: &ConnCtx) -> String {
+    let s = ctx.router.stats();
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("completed", Json::Num(ctx.completed.load(Ordering::SeqCst) as f64)),
+        ("inflight", Json::Num(s.inflight as f64)),
+        ("shards", Json::Num(ctx.router.shards() as f64)),
+        ("ticks", Json::Num(s.ticks as f64)),
+        ("alpha", Json::Num(s.flops.acceptance_rate())),
+        ("gamma", Json::Num(s.flops.gamma())),
+        ("total_flops", Json::Num(s.flops.total() as f64)),
+    ])
+    .dump()
+}
+
+fn handle_conn_sharded(stream: TcpStream, ctx: ConnCtx) {
+    let Ok(mut writer) = stream.try_clone() else { return };
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply_line = match Json::parse(&line) {
+            Err(e) => error_json(&e.to_string()),
+            Ok(req) => {
+                let op = req.get("op").and_then(|o| o.as_str()).unwrap_or("generate");
+                match op {
+                    "shutdown" => {
+                        ctx.accepting.store(false, Ordering::SeqCst);
+                        let _ = ctx.shutdown.send(());
+                        Json::obj(vec![("ok", Json::Bool(true))]).dump()
+                    }
+                    "stats" => handle_stats(&ctx),
+                    "generate" => handle_generate(&ctx, &req),
+                    // A request without an "op" key defaults to generate
+                    // (matched above); anything else is a protocol error —
+                    // falling through to generate would silently burn a
+                    // full denoising run on a typo.
+                    other => error_json(&format!("unknown op '{other}'")),
+                }
+            }
+        };
+        if writer.write_all(reply_line.as_bytes()).is_err() || writer.write_all(b"\n").is_err() {
+            break;
+        }
+    }
+}
+
+/// Serve over an [`EngineShardPool`]: N engine loops on worker threads,
+/// direct connection→shard routing, merged completion dispatch. Blocks
+/// until a shutdown request arrives, drains in-flight work, then joins
+/// every thread. Every accepted request gets a reply: its completion
+/// under normal drain, or an explicit error if it raced the shutdown
+/// edge or its shard died — never a hang. Returns total completed
+/// requests.
+pub fn serve_sharded(
+    model: Arc<dyn ModelBackend + Send + Sync>,
+    engine_cfg: EngineConfig,
+    cfg: &ServerConfig,
+) -> Result<u64> {
+    let (depth, steps, full_flops) = {
+        let entry = model.entry();
+        (
+            entry.config.depth,
+            entry.config.serve_steps,
+            entry.flops.full_step.get(&1).copied().unwrap_or(0),
+        )
+    };
+
+    let mut pool = EngineShardPool::new(
+        model,
+        PoolConfig { shards: cfg.shards.max(1), router: cfg.router, engine: engine_cfg },
+    );
+    let router = pool.router();
+    let completions = pool.take_completion_rx().expect("fresh pool has its completion stream");
+
+    let listener = TcpListener::bind(&cfg.addr)?;
+    let accepting = Arc::new(AtomicBool::new(true));
+    let waiting: Arc<Mutex<HashMap<u64, Waiter>>> = Arc::new(Mutex::new(HashMap::new()));
+    let completed = Arc::new(AtomicU64::new(0));
+    let (shutdown_tx, shutdown_rx) = channel::<()>();
+
+    // dispatcher: merge per-shard completions back to connection threads
+    let dispatcher = {
+        let waiting = waiting.clone();
+        let completed = completed.clone();
+        thread::spawn(move || {
+            for c in completions.iter() {
+                completed.fetch_add(1, Ordering::SeqCst);
+                let waiter = waiting.lock().unwrap().remove(&c.id);
+                if let Some(w) = waiter {
+                    let _ = w
+                        .reply
+                        .send(completion_json(&c, w.return_latent, full_flops, steps).dump());
+                }
+            }
+        })
+    };
+
+    // acceptor: one thread per connection, each with its own router clone
+    let acceptor = {
+        let ctx = ConnCtx {
+            router: router.clone(),
+            waiting: waiting.clone(),
+            accepting: accepting.clone(),
+            shutdown: shutdown_tx.clone(),
+            completed: completed.clone(),
+            next_id: Arc::new(AtomicU64::new(0)),
+            max_queue: cfg.max_queue,
+            depth,
+        };
+        let accepting = accepting.clone();
+        let listener = listener.try_clone()?;
+        thread::spawn(move || {
+            for stream in listener.incoming() {
+                if !accepting.load(Ordering::SeqCst) {
+                    break;
+                }
+                match stream {
+                    Ok(s) => {
+                        let conn_ctx = ctx.clone();
+                        thread::spawn(move || handle_conn_sharded(s, conn_ctx));
+                    }
+                    Err(_) => break,
+                }
+            }
+        })
+    };
+    drop(shutdown_tx);
+    eprintln!(
+        "speca: serving on {} ({} shard(s), {:?} router)",
+        cfg.addr,
+        router.shards(),
+        cfg.router
+    );
+
+    // block until a shutdown op (or the acceptor and every connection die)
+    let _ = shutdown_rx.recv();
+    accepting.store(false, Ordering::SeqCst);
+    // wake the acceptor so it observes the flag and exits
+    let _ = TcpStream::connect(&cfg.addr);
+    let _ = acceptor.join();
+
+    // drain the shards (in-flight requests finish and reply), then stop
+    let drained = pool.shutdown(true);
+    let _ = dispatcher.join();
+    // backstop: no waiter may hang. Anything still in the map (a request
+    // that raced the shutdown edge, or one stranded on a shard that died
+    // with an error) gets an explicit error reply instead of silence.
+    for (_, w) in waiting.lock().unwrap().drain() {
+        let _ = w.reply.send(error_json("server stopped before completion"));
+    }
+    drained?;
+    Ok(completed.load(Ordering::SeqCst))
+}
+
+// ---------------------------------------------------------------------------
+// Legacy single-threaded serving (non-Send backends, e.g. PJRT)
+// ---------------------------------------------------------------------------
+
 fn handle_conn(stream: TcpStream, tx: Sender<FrontendMsg>) {
-    let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_default();
     let mut writer = match stream.try_clone() {
         Ok(w) => w,
         Err(_) => return,
@@ -93,9 +328,7 @@ fn handle_conn(stream: TcpStream, tx: Sender<FrontendMsg>) {
             continue;
         }
         let reply_line = match Json::parse(&line) {
-            Err(e) => {
-                format!("{}", Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::str(&e.to_string()))]).dump())
-            }
+            Err(e) => error_json(&e.to_string()),
             Ok(req) => {
                 let op = req.get("op").and_then(|o| o.as_str()).unwrap_or("generate");
                 match op {
@@ -122,15 +355,8 @@ fn handle_conn(stream: TcpStream, tx: Sender<FrontendMsg>) {
                         }
                         rrx.recv().unwrap_or_else(|_| "{\"ok\":false}".to_string())
                     }
-                    // A request without an "op" key defaults to generate
-                    // (matched above); anything else is a protocol error —
-                    // falling through to generate would silently burn a
-                    // full denoising run on a typo.
-                    other => Json::obj(vec![
-                        ("ok", Json::Bool(false)),
-                        ("error", Json::str(&format!("unknown op '{other}'"))),
-                    ])
-                    .dump(),
+                    // see handle_conn_sharded for why unknown ops are errors
+                    other => error_json(&format!("unknown op '{other}'")),
                 }
             }
         };
@@ -140,11 +366,11 @@ fn handle_conn(stream: TcpStream, tx: Sender<FrontendMsg>) {
             break;
         }
     }
-    let _ = peer;
 }
 
 /// Run the serving loop on the current thread (owns the engine) until a
-/// shutdown request arrives. Returns total completed requests.
+/// shutdown request arrives. Returns total completed requests. Kept for
+/// backends that are not `Send` — prefer [`serve_sharded`] elsewhere.
 pub fn serve(engine: &mut Engine<'_>, cfg: &ServerConfig) -> Result<u64> {
     let listener = TcpListener::bind(&cfg.addr)?;
     listener.set_nonblocking(false)?;
@@ -163,12 +389,16 @@ pub fn serve(engine: &mut Engine<'_>, cfg: &ServerConfig) -> Result<u64> {
             }
         }
     });
-    eprintln!("speca: serving on {}", cfg.addr);
+    eprintln!("speca: serving on {} (single-threaded engine loop)", cfg.addr);
 
-    let entry = engine.model.entry();
-    let depth = entry.config.depth;
-    let steps = entry.config.serve_steps;
-    let full_flops = entry.flops.full_step.get(&1).copied().unwrap_or(0);
+    let (depth, steps, full_flops) = {
+        let entry = engine.model().entry();
+        (
+            entry.config.depth,
+            entry.config.serve_steps,
+            entry.flops.full_step.get(&1).copied().unwrap_or(0),
+        )
+    };
     let mut next_id: u64 = 0;
     let mut waiting: std::collections::BTreeMap<u64, (Sender<String>, bool)> =
         std::collections::BTreeMap::new();
@@ -200,6 +430,7 @@ pub fn serve(engine: &mut Engine<'_>, cfg: &ServerConfig) -> Result<u64> {
                         ("ok", Json::Bool(true)),
                         ("completed", Json::Num(completed as f64)),
                         ("inflight", Json::Num(engine.pending() as f64)),
+                        ("shards", Json::Num(1.0)),
                         ("ticks", Json::Num(engine.ticks as f64)),
                         ("alpha", Json::Num(f.acceptance_rate())),
                         ("gamma", Json::Num(f.gamma())),
@@ -209,24 +440,12 @@ pub fn serve(engine: &mut Engine<'_>, cfg: &ServerConfig) -> Result<u64> {
                 }
                 FrontendMsg::Generate { spec_body, reply, return_latent } => {
                     if waiting.len() >= cfg.max_queue {
-                        let _ = reply.send(
-                            Json::obj(vec![
-                                ("ok", Json::Bool(false)),
-                                ("error", Json::str("queue full")),
-                            ])
-                            .dump(),
-                        );
+                        let _ = reply.send(error_json("queue full"));
                         continue;
                     }
                     match policy_from_json(&spec_body, depth) {
                         Err(e) => {
-                            let _ = reply.send(
-                                Json::obj(vec![
-                                    ("ok", Json::Bool(false)),
-                                    ("error", Json::str(&format!("{e}"))),
-                                ])
-                                .dump(),
-                            );
+                            let _ = reply.send(error_json(&format!("{e}")));
                         }
                         Ok(policy) => {
                             let id = next_id;

@@ -27,7 +27,7 @@ fn run(
     strategy: BatchStrategy,
 ) -> Vec<Completion> {
     let policy = parse_policy(desc, model.entry().config.depth).unwrap();
-    let mut engine = Engine::new(
+    let mut engine = Engine::from_ref(
         model,
         EngineConfig { max_inflight: 4, strategy, use_pallas: false },
     );
@@ -192,7 +192,7 @@ fn check_verify_trace_is_prefix_consistent(model: &dyn ModelBackend) {
 
 fn check_mixed_policies_coexist(model: &dyn ModelBackend) {
     let entry = model.entry();
-    let mut engine = Engine::new(model, EngineConfig::default());
+    let mut engine = Engine::from_ref(model, EngineConfig::default());
     let descs = ["full", "fora:N=5", "speca:N=5,O=2,tau0=0.3,beta=0.05", "taylorseer:N=5,O=2"];
     for (i, d) in descs.iter().enumerate() {
         let policy = parse_policy(d, entry.config.depth).unwrap();

@@ -1,17 +1,21 @@
 //! Integration: TCP JSON-lines server end-to-end over localhost, running
 //! the engine on the zero-artifact native backend (no feature flags, no
-//! `make artifacts`). The engine runs on the test thread; a client thread
-//! drives generate/stats/shutdown and protocol error paths.
+//! `make artifacts`). Covers both serving modes: the legacy
+//! single-threaded loop (engine on the test thread, client thread drives
+//! generate/stats/shutdown and protocol error paths) and the sharded
+//! pool front-end (concurrent clients, shard routing, graceful shutdown
+//! with a request in flight).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
+use std::sync::Arc;
 use std::thread;
 use std::time::Duration;
 
 use speca::config::ModelConfig;
 use speca::coordinator::{Engine, EngineConfig};
 use speca::runtime::NativeBackend;
-use speca::server::{serve, ServerConfig};
+use speca::server::{serve, serve_sharded, ServerConfig};
 use speca::util::json::Json;
 
 fn send(stream: &mut TcpStream, reader: &mut BufReader<TcpStream>, req: &str) -> Json {
@@ -25,9 +29,9 @@ fn send(stream: &mut TcpStream, reader: &mut BufReader<TcpStream>, req: &str) ->
 #[test]
 fn server_round_trip() {
     let model = NativeBackend::seeded(ModelConfig::native_test(), 0x5EED);
-    let mut engine = Engine::new(&model, EngineConfig::default());
+    let mut engine = Engine::from_ref(&model, EngineConfig::default());
     let addr = "127.0.0.1:17435";
-    let cfg = ServerConfig { addr: addr.to_string(), max_queue: 64 };
+    let cfg = ServerConfig { addr: addr.to_string(), max_queue: 64, ..ServerConfig::default() };
 
     let client = thread::spawn(move || {
         // wait for the listener
@@ -92,4 +96,97 @@ fn server_round_trip() {
     let completed = serve(&mut engine, &cfg).unwrap();
     client.join().unwrap();
     assert_eq!(completed, 3);
+}
+
+/// Sharded front-end: two shards over one shared native backend,
+/// concurrent clients, per-shard completion dispatch, stats aggregation,
+/// and a graceful shutdown that still answers the request in flight.
+#[test]
+fn sharded_server_round_trip_and_graceful_shutdown() {
+    let model = Arc::new(NativeBackend::seeded(ModelConfig::native_test(), 0x5EED));
+    let addr = "127.0.0.1:17436";
+    let server = {
+        let model = model.clone();
+        thread::spawn(move || {
+            let cfg = ServerConfig {
+                addr: addr.to_string(),
+                max_queue: 64,
+                shards: 2,
+                ..ServerConfig::default()
+            };
+            serve_sharded(model, EngineConfig::default(), &cfg).unwrap()
+        })
+    };
+
+    // two concurrent clients, two generates each, routed across shards
+    let mut clients = Vec::new();
+    for w in 0..2u64 {
+        clients.push(thread::spawn(move || {
+            let mut stream = connect_for_test(addr);
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            let mut latents = Vec::new();
+            for i in 0..2u64 {
+                let req = format!(
+                    "{{\"op\":\"generate\",\"cond\":1,\"seed\":{},\
+                     \"policy\":\"speca\",\"N\":5,\"return_latent\":true}}",
+                    10 + w * 2 + i
+                );
+                let resp = send(&mut stream, &mut reader, &req);
+                assert_eq!(resp.req("ok").as_bool(), Some(true), "{resp:?}");
+                let latent = resp.req("latent").f32s();
+                assert!(latent.iter().all(|v| v.is_finite()));
+                latents.push(latent);
+            }
+            latents
+        }));
+    }
+    let mut all: Vec<Vec<f32>> = Vec::new();
+    for c in clients {
+        all.extend(c.join().unwrap());
+    }
+    // distinct seeds → distinct outputs, across shards too
+    all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    all.dedup();
+    assert_eq!(all.len(), 4, "four distinct seeds must give four distinct latents");
+
+    let mut stream = connect_for_test(addr);
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let resp = send(&mut stream, &mut reader, "{\"op\":\"stats\"}");
+    assert_eq!(resp.req("ok").as_bool(), Some(true));
+    assert_eq!(resp.req("completed").as_u64(), Some(4));
+    assert_eq!(resp.req("shards").as_u64(), Some(2));
+    // unknown ops stay rejected in the sharded path
+    let resp = send(&mut stream, &mut reader, "{\"op\":\"frobnicate\"}");
+    assert_eq!(resp.req("ok").as_bool(), Some(false));
+
+    // graceful shutdown with a request in flight: submit without reading
+    // the reply, give the server a moment to route it, then shut down from
+    // another connection — the drain must still answer the first request.
+    let mut inflight = connect_for_test(addr);
+    let mut inflight_reader = BufReader::new(inflight.try_clone().unwrap());
+    inflight
+        .write_all(b"{\"op\":\"generate\",\"seed\":99,\"policy\":\"speca\",\"N\":5}\n")
+        .unwrap();
+    thread::sleep(Duration::from_millis(100));
+    let mut shutter = connect_for_test(addr);
+    let mut shutter_reader = BufReader::new(shutter.try_clone().unwrap());
+    let resp = send(&mut shutter, &mut shutter_reader, "{\"op\":\"shutdown\"}");
+    assert_eq!(resp.req("ok").as_bool(), Some(true));
+    let mut line = String::new();
+    inflight_reader.read_line(&mut line).unwrap();
+    let resp = Json::parse(&line).unwrap();
+    assert_eq!(resp.req("ok").as_bool(), Some(true), "draining must answer in-flight work");
+
+    let completed = server.join().unwrap();
+    assert_eq!(completed, 5);
+}
+
+fn connect_for_test(addr: &str) -> TcpStream {
+    for _ in 0..100 {
+        if let Ok(s) = TcpStream::connect(addr) {
+            return s;
+        }
+        thread::sleep(Duration::from_millis(50));
+    }
+    panic!("server did not come up at {addr}");
 }

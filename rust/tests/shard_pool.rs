@@ -1,0 +1,302 @@
+//! Integration: the sharded engine pool. The load-bearing guarantee is
+//! *parity* — a K-request workload must produce identical per-request
+//! completions (accept/reject decisions, step counts, outputs) on 1 shard
+//! and on N shards, so sharding is a pure throughput win with no semantic
+//! drift. Also covered: least-loaded routing under skewed request sizes,
+//! pool stats aggregation, and clean shutdown (drain and halt) with
+//! requests in flight.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use speca::config::{ModelConfig, ModelEntry};
+use speca::coordinator::state::{Completion, RequestSpec};
+use speca::coordinator::{EngineConfig, EngineShardPool, PoolConfig, RouterPolicy};
+use speca::runtime::native::{synthetic_entry, NativeArch};
+use speca::runtime::{ModelBackend, NativeBackend};
+use speca::tensor::Tensor;
+use speca::workload::parse_policy;
+
+fn pool_config(shards: usize) -> PoolConfig {
+    PoolConfig {
+        shards,
+        router: RouterPolicy::LeastLoaded,
+        engine: EngineConfig::default(),
+    }
+}
+
+/// Mixed-policy workload with per-request ids/seeds/conds.
+fn workload(depth: usize, classes: usize) -> Vec<RequestSpec> {
+    let descs = [
+        "speca:N=5,O=2,tau0=0.3,beta=0.05",
+        "speca:N=5,O=2,tau0=0.01,beta=0.05", // strict: rejects happen
+        "taylorseer:N=5,O=2",
+        "fora:N=4",
+        "full",
+        "steps:keep=6",
+        "speca:N=4,O=1,tau0=0.5,beta=0.1",
+        "teacache:l=0.6",
+    ];
+    descs
+        .iter()
+        .enumerate()
+        .map(|(i, d)| RequestSpec {
+            id: i as u64,
+            cond: (i % classes) as i32,
+            seed: 1000 + i as u64,
+            policy: parse_policy(d, depth).unwrap(),
+            record_traj: false,
+        })
+        .collect()
+}
+
+/// Run the same mixed workload through an N-shard pool; completions
+/// sorted by request id.
+fn run_workload(model: &Arc<NativeBackend>, shards: usize) -> Vec<Completion> {
+    let depth = model.entry().config.depth;
+    let classes = model.entry().config.num_classes;
+    let pool = EngineShardPool::new(model.clone(), pool_config(shards));
+    for spec in workload(depth, classes) {
+        pool.submit(spec).unwrap();
+    }
+    let out = pool.shutdown(true).unwrap();
+    let mut completions = out.completions;
+    completions.sort_by_key(|c| c.id);
+    completions
+}
+
+#[test]
+fn one_vs_four_shard_parity() {
+    let model = Arc::new(NativeBackend::seeded(ModelConfig::native_test(), 0x5EED));
+    let one = run_workload(&model, 1);
+    let four = run_workload(&model, 4);
+    assert_eq!(one.len(), 8);
+    assert_eq!(four.len(), 8);
+    for (a, b) in one.iter().zip(&four) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.policy_name, b.policy_name);
+        // outputs: bitwise-identical latents (native batching transparency
+        // makes per-request math independent of co-batched neighbours)
+        assert_eq!(a.latent, b.latent, "request {} latent drifted across shard counts", a.id);
+        // step accounting: identical plan execution
+        let (sa, sb) = (&a.stats, &b.stats);
+        assert_eq!(sa.full_steps, sb.full_steps, "request {}", a.id);
+        assert_eq!(sa.spec_steps, sb.spec_steps, "request {}", a.id);
+        assert_eq!(sa.skip_steps, sb.skip_steps, "request {}", a.id);
+        assert_eq!(sa.blend_steps, sb.blend_steps, "request {}", a.id);
+        assert_eq!(sa.elided_steps, sb.elided_steps, "request {}", a.id);
+        // accept/reject decisions: identical verification traces
+        assert_eq!(sa.rejects, sb.rejects, "request {}", a.id);
+        assert_eq!(sa.verify_trace, sb.verify_trace, "request {}", a.id);
+        // booked FLOPs are per-sample (table[B]/B with linear tables), so
+        // they must not depend on how requests were co-batched either
+        assert_eq!(sa.flops.total(), sb.flops.total(), "request {}", a.id);
+    }
+}
+
+#[test]
+fn shard_counts_between_one_and_four_agree() {
+    // 2 and 3 shards (uneven split) must match the 1-shard reference too
+    let model = Arc::new(NativeBackend::seeded(ModelConfig::native_test(), 0xA11CE));
+    let reference = run_workload(&model, 1);
+    for shards in [2usize, 3] {
+        let got = run_workload(&model, shards);
+        for (a, b) in reference.iter().zip(&got) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.latent, b.latent, "{shards} shards, request {}", a.id);
+            assert_eq!(a.stats.rejects, b.stats.rejects);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Routing + shutdown behaviour over a slow deterministic stub backend
+// ---------------------------------------------------------------------------
+
+/// Zero-math backend whose full pass sleeps: makes request lifetimes long
+/// and measurable so routing/shutdown interleavings are deterministic.
+struct SlowBackend {
+    entry: ModelEntry,
+    delay: Duration,
+}
+
+impl SlowBackend {
+    fn new(delay_ms: u64) -> SlowBackend {
+        SlowBackend {
+            entry: synthetic_entry(&ModelConfig::native_test(), &NativeArch::default()),
+            delay: Duration::from_millis(delay_ms),
+        }
+    }
+}
+
+impl ModelBackend for SlowBackend {
+    fn entry(&self) -> &ModelEntry {
+        &self.entry
+    }
+
+    fn kind(&self) -> &'static str {
+        "slow-stub"
+    }
+
+    fn supports(&self, entry_point: &str) -> bool {
+        matches!(entry_point, "full" | "full_eps" | "block" | "head")
+    }
+
+    fn warmup(&self, _e: &[&str], _b: &[usize]) -> anyhow::Result<()> {
+        Ok(())
+    }
+
+    fn full(
+        &self,
+        bucket: usize,
+        _x: &[f32],
+        _t: &[f32],
+        _y: &[i32],
+        _pallas: bool,
+    ) -> anyhow::Result<(Tensor, Tensor)> {
+        std::thread::sleep(self.delay);
+        let c = &self.entry.config;
+        Ok((
+            Tensor::zeros(vec![bucket, c.latent_dim]),
+            Tensor::zeros(vec![c.depth + 1, bucket, c.tokens, c.dim]),
+        ))
+    }
+
+    fn full_eps(
+        &self,
+        bucket: usize,
+        _x: &[f32],
+        _t: &[f32],
+        _y: &[i32],
+    ) -> anyhow::Result<Tensor> {
+        std::thread::sleep(self.delay);
+        Ok(Tensor::zeros(vec![bucket, self.entry.config.latent_dim]))
+    }
+
+    fn block(
+        &self,
+        bucket: usize,
+        _layer: i32,
+        _feat: &[f32],
+        _t: &[f32],
+        _y: &[i32],
+    ) -> anyhow::Result<Tensor> {
+        let c = &self.entry.config;
+        Ok(Tensor::zeros(vec![bucket, c.tokens, c.dim]))
+    }
+
+    fn head(&self, bucket: usize, _f: &[f32], _t: &[f32], _y: &[i32]) -> anyhow::Result<Tensor> {
+        Ok(Tensor::zeros(vec![bucket, self.entry.config.latent_dim]))
+    }
+}
+
+fn slow_spec(id: u64, depth: usize, desc: &str) -> RequestSpec {
+    RequestSpec {
+        id,
+        cond: 0,
+        seed: id,
+        policy: parse_policy(desc, depth).unwrap(),
+        record_traj: false,
+    }
+}
+
+#[test]
+fn least_loaded_routing_skews_toward_idle_shards() {
+    // full-policy requests occupy a shard for ~steps × delay, so the load
+    // gauge is a faithful busy signal at submission time
+    let model = Arc::new(SlowBackend::new(5));
+    let depth = model.entry().config.depth;
+    let mut pool = EngineShardPool::new(model.clone(), pool_config(2));
+    let rx = pool.take_completion_rx().unwrap();
+
+    // heavy request (12 full steps) → shard 0 (all idle, lowest index)
+    let s0 = pool.submit(slow_spec(0, depth, "full")).unwrap();
+    assert_eq!(s0, 0);
+    // cheap request (2 kept steps, rest elided) → least-loaded picks shard 1
+    let s1 = pool.submit(slow_spec(1, depth, "steps:keep=2")).unwrap();
+    assert_eq!(s1, 1);
+    // both shards hold one request → [1, 1] ties to the lowest index
+    let s2 = pool.submit(slow_spec(2, depth, "steps:keep=2")).unwrap();
+    assert_eq!(s2, 0);
+
+    // wait for the first cheap request to finish; the heavy one (60 ms of
+    // sleeps minimum) is still running, so shard 1 is idle again
+    let first_done = rx.recv_timeout(Duration::from_secs(20)).expect("a completion");
+    assert_eq!(first_done.id, 1, "the cheap request on the idle shard finishes first");
+    let s3 = pool.submit(slow_spec(3, depth, "steps:keep=2")).unwrap();
+    assert_eq!(s3, 1, "least-loaded must route to the drained shard");
+
+    let out = pool.shutdown(true).unwrap();
+    // 1 completion consumed above, 3 left over
+    assert_eq!(out.completions.len(), 3);
+    assert_eq!(out.stats.completed, 4);
+}
+
+#[test]
+fn round_robin_ignores_load() {
+    let model = Arc::new(SlowBackend::new(2));
+    let depth = model.entry().config.depth;
+    let pool = EngineShardPool::new(
+        model,
+        PoolConfig { shards: 3, router: RouterPolicy::RoundRobin, ..pool_config(3) },
+    );
+    let shards: Vec<usize> = (0..6)
+        .map(|i| pool.submit(slow_spec(i, depth, "steps:keep=2")).unwrap())
+        .collect();
+    assert_eq!(shards, vec![0, 1, 2, 0, 1, 2]);
+    let out = pool.shutdown(true).unwrap();
+    assert_eq!(out.completions.len(), 6);
+}
+
+#[test]
+fn drain_shutdown_finishes_requests_in_flight() {
+    let model = Arc::new(SlowBackend::new(3));
+    let depth = model.entry().config.depth;
+    let pool = EngineShardPool::new(model.clone(), pool_config(2));
+    for i in 0..6 {
+        pool.submit(slow_spec(i, depth, "full")).unwrap();
+    }
+    // immediately drain: every submitted request must still complete
+    let out = pool.shutdown(true).unwrap();
+    assert_eq!(out.completions.len(), 6);
+    assert_eq!(out.stats.completed, 6);
+    assert_eq!(out.stats.inflight, 0);
+    let mut ids: Vec<u64> = out.completions.iter().map(|c| c.id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, vec![0, 1, 2, 3, 4, 5]);
+}
+
+#[test]
+fn halt_shutdown_joins_cleanly_with_requests_in_flight() {
+    let model = Arc::new(SlowBackend::new(10));
+    let depth = model.entry().config.depth;
+    let pool = EngineShardPool::new(model.clone(), pool_config(2));
+    for i in 0..4 {
+        pool.submit(slow_spec(i, depth, "full")).unwrap();
+    }
+    // halt abandons work but must join without hanging or panicking
+    let out = pool.shutdown(false).unwrap();
+    assert!(out.completions.len() <= 4);
+    assert!(out.stats.completed as usize == out.completions.len());
+}
+
+#[test]
+fn pool_stats_aggregate_across_shards() {
+    let model = Arc::new(NativeBackend::seeded(ModelConfig::native_test(), 0x57A7));
+    let depth = model.entry().config.depth;
+    let classes = model.entry().config.num_classes;
+    let pool = EngineShardPool::new(model.clone(), pool_config(3));
+    for spec in workload(depth, classes) {
+        pool.submit(spec).unwrap();
+    }
+    let live = pool.stats();
+    // live snapshot sums over shards: nothing lost, nothing double-counted
+    // (submits and the stats probe share each shard's FIFO queue, so every
+    // request is either completed or inflight by the time a shard replies)
+    assert_eq!(live.completed as usize + live.inflight, 8);
+    let out = pool.shutdown(true).unwrap();
+    assert_eq!(out.stats.completed, 8);
+    assert_eq!(out.stats.inflight, 0);
+    assert!(out.stats.ticks > 0);
+    assert!(out.stats.flops.total() > 0, "native runs must book FLOPs");
+}
