@@ -131,6 +131,21 @@ impl<'a> Engine<'a> {
         std::mem::take(&mut self.completions)
     }
 
+    /// Drop every queued and active request, returning their ids. Shard
+    /// workers use this on exit paths that abandon work (backend error,
+    /// halt) so the pool can release load accounting and notify waiters.
+    pub fn abandon(&mut self) -> Vec<u64> {
+        let ids = self
+            .queue
+            .iter()
+            .map(|s| s.id)
+            .chain(self.active.iter().map(|r| r.spec.id))
+            .collect();
+        self.queue.clear();
+        self.active.clear();
+        ids
+    }
+
     /// Run until queue and active set are empty; returns completions.
     pub fn run_to_completion(&mut self) -> Result<Vec<Completion>> {
         while self.tick()? {}

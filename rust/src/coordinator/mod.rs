@@ -10,5 +10,7 @@ pub mod state;
 
 pub use engine::{Engine, EngineConfig};
 pub use policy::{ErrorMetric, Plan, Policy, SpeCaConfig};
-pub use pool::{EngineShardPool, PoolConfig, PoolOutcome, RouterPolicy, ShardRouter, ShardStats};
+pub use pool::{
+    EngineShardPool, PoolConfig, PoolEvent, PoolOutcome, RouterPolicy, ShardRouter, ShardStats,
+};
 pub use state::{Completion, ReqState, RequestSpec, RequestStats};

@@ -10,8 +10,8 @@
 //!   (per-shard `AtomicUsize` of requests in flight) and is `Clone`, so
 //!   any number of connection threads can submit concurrently without a
 //!   central funnel;
-//! * completions from all shards merge onto one channel. They arrive in
-//!   nondeterministic order across shards, but every [`Completion`]
+//! * events from all shards merge onto one channel. They arrive in
+//!   nondeterministic order across shards, but every [`PoolEvent`]
 //!   carries its request id, so callers re-order (or route replies) by
 //!   id — and because backends are batching-transparent and requests
 //!   share no state, a request's completion is *identical* regardless of
@@ -20,6 +20,15 @@
 //! Shutdown is two-mode: `drain` stops ingestion and finishes everything
 //! already routed; `halt` abandons in-flight work. Both join every
 //! worker before returning.
+//!
+//! Failure containment: a backend error poisons only the shard that hit
+//! it. The dying worker tombstones its load gauge (releasing its
+//! in-flight accounting so admission control never counts dead
+//! requests, and steering the router away), drains its channel one last
+//! time, and emits a [`PoolEvent::Aborted`] per abandoned request (so
+//! waiters get an error reply, never a hang — see `abandon_inflight`
+//! for why the tombstone-then-drain order makes this race-free); the
+//! error itself resurfaces as `Err` from [`EngineShardPool::shutdown`].
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
@@ -97,6 +106,17 @@ enum ShardMsg {
     Halt,
 }
 
+/// What the pool's merged event stream carries: completions in the happy
+/// path, plus an abort notice per request abandoned by a dying shard so
+/// the consumer can error-reply instead of waiting forever. Completions
+/// are boxed: they dwarf the abort variant (latent + stats + trace), and
+/// boxing keeps channel sends and matches a pointer move.
+#[derive(Debug, Clone)]
+pub enum PoolEvent {
+    Completed(Box<Completion>),
+    Aborted { id: u64, error: String },
+}
+
 /// Counter snapshot of one shard (or, merged, of the whole pool).
 #[derive(Debug, Clone, Default)]
 pub struct ShardStats {
@@ -115,6 +135,14 @@ impl ShardStats {
     }
 }
 
+/// Load-gauge tombstone. A dying worker stores this into its gauge
+/// *before* its final channel drain; real in-flight counts stay far
+/// below it, and transient ±1 traffic around a tombstone stays ≥ DEAD.
+/// The tombstone is what makes shard death race-free: a submitter
+/// re-checks the gauge after a successful send, so a request can never
+/// be silently stranded on a channel nobody will read (see `submit`).
+const DEAD: usize = usize::MAX / 2;
+
 /// Cloneable submission handle: connection threads route directly to
 /// shard queues — no single-engine channel funnel in between.
 #[derive(Clone)]
@@ -130,36 +158,95 @@ impl ShardRouter {
         self.txs.len()
     }
 
-    /// Requests in flight per shard (admitted + queued on the shard).
+    /// Requests in flight per shard (admitted + queued on the shard). A
+    /// shard whose worker has died reports `usize::MAX`.
     pub fn loads(&self) -> Vec<usize> {
-        self.loads.iter().map(|l| l.load(Ordering::SeqCst)).collect()
+        self.loads
+            .iter()
+            .map(|l| {
+                let v = l.load(Ordering::SeqCst);
+                if v >= DEAD { usize::MAX } else { v }
+            })
+            .collect()
     }
 
-    /// Total requests in flight across the pool.
+    /// Total requests in flight across live shards (a dead shard has
+    /// released its in-flight accounting).
     pub fn inflight(&self) -> usize {
-        self.loads().iter().sum()
+        self.loads().iter().filter(|l| **l != usize::MAX).sum()
     }
 
-    /// Route one request; returns the shard index it landed on.
+    /// Route one request; returns the shard index it landed on. Dead
+    /// shards (tombstoned gauge) are excluded and the pick retried, so
+    /// one dead shard never blackholes new submissions while live shards
+    /// have capacity; when every worker is gone this fails fast.
     pub fn submit(&self, spec: RequestSpec) -> Result<usize> {
-        let shard = self.policy.pick(&self.loads(), self.rr.fetch_add(1, Ordering::SeqCst));
-        self.loads[shard].fetch_add(1, Ordering::SeqCst);
-        if self.txs[shard].send(ShardMsg::Submit(spec)).is_err() {
-            self.loads[shard].fetch_sub(1, Ordering::SeqCst);
-            bail!("shard {shard} worker is gone");
-        }
-        Ok(shard)
-    }
-
-    /// Merged counter snapshot across all live shards (request/reply to
-    /// each worker; a worker replies between ticks).
-    pub fn stats(&self) -> ShardStats {
-        let mut agg = ShardStats::default();
-        for tx in &self.txs {
-            let (rtx, rrx) = channel();
-            if tx.send(ShardMsg::Stats(rtx)).is_err() {
+        let mut spec = spec;
+        let n = self.txs.len();
+        let mut loads = self.loads();
+        loop {
+            let mut shard = self.policy.pick(&loads, self.rr.fetch_add(1, Ordering::SeqCst));
+            if loads[shard] == usize::MAX {
+                // round-robin ignores load, so its pick can land on a
+                // known-dead shard; fall forward to the next live one
+                match (0..n).map(|k| (shard + k) % n).find(|&s| loads[s] != usize::MAX) {
+                    Some(live) => shard = live,
+                    None => bail!("all shard workers are gone"),
+                }
+            }
+            // reserve a slot on the gauge before handing over; a
+            // tombstone means the worker died — undo and retry elsewhere
+            if self.loads[shard].fetch_add(1, Ordering::SeqCst) >= DEAD {
+                self.loads[shard].fetch_sub(1, Ordering::SeqCst);
+                loads[shard] = usize::MAX;
                 continue;
             }
+            match self.txs[shard].send(ShardMsg::Submit(spec)) {
+                Ok(()) => {
+                    // Close the death race: the worker tombstones its
+                    // gauge *before* its final channel drain, so a live
+                    // gauge here proves our message lands before that
+                    // drain (it will be aborted, not lost). A tombstone
+                    // means the message may never be read — report
+                    // failure; the caller's error reply at worst
+                    // duplicates the worker's abort notice, never hangs.
+                    if self.loads[shard].load(Ordering::SeqCst) >= DEAD {
+                        bail!("shard {shard} worker died during submit");
+                    }
+                    return Ok(shard);
+                }
+                Err(unsent) => {
+                    // undo the reservation — unless the dying worker has
+                    // tombstoned the gauge since our reservation, which
+                    // absorbed it (decrementing would leave DEAD-1: an
+                    // absurd *live* load that wedges admission control)
+                    let _ = self.loads[shard].fetch_update(
+                        Ordering::SeqCst,
+                        Ordering::SeqCst,
+                        |v| if v >= DEAD { None } else { Some(v - 1) },
+                    );
+                    loads[shard] = usize::MAX;
+                    let ShardMsg::Submit(s) = unsent.0 else { unreachable!() };
+                    spec = s;
+                }
+            }
+        }
+    }
+
+    /// Merged counter snapshot across all live shards. All probes go out
+    /// before any reply is awaited (a worker replies between ticks), so
+    /// the wall time is the slowest single shard, not the sum.
+    pub fn stats(&self) -> ShardStats {
+        let probes: Vec<_> = self
+            .txs
+            .iter()
+            .filter_map(|tx| {
+                let (rtx, rrx) = channel();
+                tx.send(ShardMsg::Stats(rtx)).ok().map(|_| rrx)
+            })
+            .collect();
+        let mut agg = ShardStats::default();
+        for rrx in probes {
             if let Ok(s) = rrx.recv_timeout(Duration::from_secs(10)) {
                 agg.merge(&s);
             }
@@ -170,8 +257,11 @@ impl ShardRouter {
 
 /// Everything a finished pool hands back.
 pub struct PoolOutcome {
-    /// completions not consumed through [`EngineShardPool::take_completion_rx`]
+    /// completions not consumed through [`EngineShardPool::take_event_rx`]
     pub completions: Vec<Completion>,
+    /// `(id, error)` of requests abandoned by dead/halted shards, not
+    /// consumed through [`EngineShardPool::take_event_rx`]
+    pub aborted: Vec<(u64, String)>,
     pub stats: ShardStats,
 }
 
@@ -180,7 +270,7 @@ pub struct PoolOutcome {
 pub struct EngineShardPool {
     router: ShardRouter,
     workers: Vec<JoinHandle<(ShardStats, Option<String>)>>,
-    completions: Option<Receiver<Completion>>,
+    events: Option<Receiver<PoolEvent>>,
 }
 
 impl EngineShardPool {
@@ -216,7 +306,7 @@ impl EngineShardPool {
                 rr: Arc::new(AtomicUsize::new(0)),
             },
             workers,
-            completions: Some(crx),
+            events: Some(crx),
         }
     }
 
@@ -233,11 +323,11 @@ impl EngineShardPool {
         self.router.stats()
     }
 
-    /// Take ownership of the merged completion stream (e.g. for a server
+    /// Take ownership of the merged event stream (e.g. for a server
     /// dispatcher thread). If never taken, [`Self::shutdown`] drains it
-    /// into [`PoolOutcome::completions`].
-    pub fn take_completion_rx(&mut self) -> Option<Receiver<Completion>> {
-        self.completions.take()
+    /// into [`PoolOutcome::completions`] / [`PoolOutcome::aborted`].
+    pub fn take_event_rx(&mut self) -> Option<Receiver<PoolEvent>> {
+        self.events.take()
     }
 
     /// Stop the pool and join every worker. `drain` finishes all work
@@ -248,7 +338,7 @@ impl EngineShardPool {
         for tx in &self.router.txs {
             let _ = tx.send(if drain { ShardMsg::Drain } else { ShardMsg::Halt });
         }
-        let rx = self.completions.take();
+        let rx = self.events.take();
         // drop the router's senders so a worker that missed the message
         // still observes the disconnect and exits
         let EngineShardPool { router, workers, .. } = self;
@@ -266,9 +356,13 @@ impl EngineShardPool {
             }
         }
         let mut completions = Vec::new();
+        let mut aborted = Vec::new();
         if let Some(rx) = rx {
-            while let Ok(c) = rx.try_recv() {
-                completions.push(c);
+            while let Ok(ev) = rx.try_recv() {
+                match ev {
+                    PoolEvent::Completed(c) => completions.push(*c),
+                    PoolEvent::Aborted { id, error } => aborted.push((id, error)),
+                }
             }
         }
         if panicked > 0 {
@@ -277,7 +371,7 @@ impl EngineShardPool {
         if !errors.is_empty() {
             bail!("shard worker error(s): {}", errors.join("; "));
         }
-        Ok(PoolOutcome { completions, stats })
+        Ok(PoolOutcome { completions, aborted, stats })
     }
 }
 
@@ -290,13 +384,55 @@ fn snapshot(engine: &Engine<'_>, completed: u64) -> ShardStats {
     }
 }
 
+/// Pull every message still queued on the shard channel into the engine
+/// (so work the router already counted is accounted for) and answer any
+/// pending stats probes. Used on the abandon paths only.
+fn ingest_remaining(engine: &mut Engine<'_>, rx: &Receiver<ShardMsg>, completed: u64) {
+    while let Ok(msg) = rx.try_recv() {
+        match msg {
+            ShardMsg::Submit(spec) => engine.submit(spec),
+            ShardMsg::Stats(reply) => {
+                let _ = reply.send(snapshot(engine, completed));
+            }
+            ShardMsg::Drain | ShardMsg::Halt => {}
+        }
+    }
+}
+
+/// Abandon everything in flight on an exiting shard: tombstone the load
+/// gauge (releasing this shard's in-flight accounting and steering the
+/// router away), pull in whatever the channel still holds, and emit one
+/// [`PoolEvent::Aborted`] per abandoned request so waiters get an
+/// explicit error instead of hanging.
+///
+/// Ordering is load-bearing: the tombstone goes in *before* the final
+/// channel drain. A submitter whose post-send gauge check still reads
+/// live therefore sent before the tombstone, which means its message is
+/// in the channel before this drain runs — it is ingested and aborted
+/// here, never silently lost. A submitter that reads the tombstone
+/// reports failure itself (`ShardRouter::submit`).
+fn abandon_inflight(
+    engine: &mut Engine<'_>,
+    rx: &Receiver<ShardMsg>,
+    load: &AtomicUsize,
+    events: &Sender<PoolEvent>,
+    completed: u64,
+    error: &str,
+) {
+    load.store(DEAD, Ordering::SeqCst);
+    ingest_remaining(engine, rx, completed);
+    for id in engine.abandon() {
+        let _ = events.send(PoolEvent::Aborted { id, error: error.to_string() });
+    }
+}
+
 fn shard_worker(
     model: Arc<dyn ModelBackend + Send + Sync>,
     cfg: EngineConfig,
     rx: Receiver<ShardMsg>,
     load: Arc<AtomicUsize>,
-    completions: Sender<Completion>,
-) -> ShardStats {
+    events: Sender<PoolEvent>,
+) -> (ShardStats, Option<String>) {
     let model: Arc<dyn ModelBackend> = model;
     let mut engine = Engine::new(model, cfg);
     let mut completed = 0u64;
@@ -332,23 +468,34 @@ fn shard_worker(
                     let _ = reply.send(snapshot(&engine, completed));
                 }
                 ShardMsg::Drain => draining = true,
-                ShardMsg::Halt => return snapshot(&engine, completed),
+                ShardMsg::Halt => {
+                    abandon_inflight(&mut engine, &rx, &load, &events, completed, "shard halted");
+                    return (snapshot(&engine, completed), None);
+                }
             }
         }
         if engine.pending() > 0 {
             if let Err(e) = engine.tick() {
-                // a backend failure poisons this shard only; in-flight
-                // requests are reported as abandoned via the load gauge
-                eprintln!("speca: shard worker tick failed: {e:#}");
-                return snapshot(&engine, completed);
+                // a backend failure poisons this shard only; abandoned
+                // requests are abort-notified and the error resurfaces
+                // from shutdown()
+                let err = format!("{e:#}");
+                eprintln!("speca: shard worker tick failed: {err}");
+                abandon_inflight(&mut engine, &rx, &load, &events, completed, &err);
+                return (snapshot(&engine, completed), Some(err));
             }
             for c in engine.drain_completions() {
                 completed += 1;
                 load.fetch_sub(1, Ordering::SeqCst);
-                let _ = completions.send(c);
+                let _ = events.send(PoolEvent::Completed(Box::new(c)));
             }
         } else if draining || disconnected {
-            return snapshot(&engine, completed);
+            // same tombstone + final-drain protocol as the error exit: a
+            // submit racing this edge is aborted with an explicit event,
+            // not silently destroyed with the channel (when nothing
+            // raced, the engine and channel are empty — no events fire)
+            abandon_inflight(&mut engine, &rx, &load, &events, completed, "shard shutting down");
+            return (snapshot(&engine, completed), None);
         }
     }
 }

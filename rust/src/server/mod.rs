@@ -36,7 +36,8 @@ use anyhow::Result;
 
 use crate::coordinator::state::{Completion, RequestSpec};
 use crate::coordinator::{
-    Engine, EngineConfig, EngineShardPool, PoolConfig, RouterPolicy, ShardRouter,
+    Engine, EngineConfig, EngineShardPool, Policy, PoolConfig, PoolEvent, RouterPolicy,
+    ShardRouter,
 };
 use crate::runtime::ModelBackend;
 use crate::util::json::Json;
@@ -101,6 +102,19 @@ fn error_json(msg: &str) -> String {
     Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::str(msg))]).dump()
 }
 
+/// Build a [`RequestSpec`] from a protocol request. Shared by both
+/// serving modes so the wire defaults (cond 0, seed = request id) cannot
+/// drift between them.
+fn spec_from_json(req: &Json, id: u64, policy: Policy) -> RequestSpec {
+    RequestSpec {
+        id,
+        cond: req.get("cond").and_then(|c| c.as_f64()).unwrap_or(0.0) as i32,
+        seed: req.get("seed").and_then(|s| s.as_u64()).unwrap_or(id),
+        policy,
+        record_traj: false,
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Sharded serving (native / any Send + Sync backend)
 // ---------------------------------------------------------------------------
@@ -128,26 +142,28 @@ fn handle_generate(ctx: &ConnCtx, req: &Json) -> String {
     if !ctx.accepting.load(Ordering::SeqCst) {
         return error_json("server is shutting down");
     }
-    if ctx.router.inflight() >= ctx.max_queue {
-        return error_json("queue full");
-    }
     let return_latent = req.get("return_latent").and_then(|b| b.as_bool()).unwrap_or(false);
     let policy = match policy_from_json(req, ctx.depth) {
         Ok(p) => p,
         Err(e) => return error_json(&format!("{e}")),
     };
     let id = ctx.next_id.fetch_add(1, Ordering::SeqCst);
-    let spec = RequestSpec {
-        id,
-        cond: req.get("cond").and_then(|c| c.as_f64()).unwrap_or(0.0) as i32,
-        seed: req.get("seed").and_then(|s| s.as_u64()).unwrap_or(id),
-        policy,
-        record_traj: false,
-    };
+    let spec = spec_from_json(req, id, policy);
     let (rtx, rrx) = channel();
-    // register the reply slot *before* submitting: the completion can
-    // race ahead of this thread once the spec is on a shard queue
-    ctx.waiting.lock().unwrap().insert(id, Waiter { reply: rtx, return_latent });
+    // admission + reply-slot registration are one critical section: the
+    // waiting map is exactly the set of admitted-but-unanswered requests,
+    // so checking its size under the lock enforces max_queue precisely
+    // even with many connection threads racing (check-then-submit on the
+    // router's load gauges would overshoot). Registering before
+    // submitting also means the completion can race ahead of this thread
+    // once the spec is on a shard queue.
+    {
+        let mut waiting = ctx.waiting.lock().unwrap();
+        if waiting.len() >= ctx.max_queue {
+            return error_json("queue full");
+        }
+        waiting.insert(id, Waiter { reply: rtx, return_latent });
+    }
     if let Err(e) = ctx.router.submit(spec) {
         ctx.waiting.lock().unwrap().remove(&id);
         return error_json(&format!("{e}"));
@@ -230,7 +246,7 @@ pub fn serve_sharded(
         PoolConfig { shards: cfg.shards.max(1), router: cfg.router, engine: engine_cfg },
     );
     let router = pool.router();
-    let completions = pool.take_completion_rx().expect("fresh pool has its completion stream");
+    let events = pool.take_event_rx().expect("fresh pool has its event stream");
 
     let listener = TcpListener::bind(&cfg.addr)?;
     let accepting = Arc::new(AtomicBool::new(true));
@@ -238,18 +254,31 @@ pub fn serve_sharded(
     let completed = Arc::new(AtomicU64::new(0));
     let (shutdown_tx, shutdown_rx) = channel::<()>();
 
-    // dispatcher: merge per-shard completions back to connection threads
+    // dispatcher: merge per-shard events back to connection threads.
+    // Completions answer their waiter; aborts (a shard died on a backend
+    // error with this request in flight) answer with an explicit error,
+    // so no connection thread ever hangs on a dead shard.
     let dispatcher = {
         let waiting = waiting.clone();
         let completed = completed.clone();
         thread::spawn(move || {
-            for c in completions.iter() {
-                completed.fetch_add(1, Ordering::SeqCst);
-                let waiter = waiting.lock().unwrap().remove(&c.id);
-                if let Some(w) = waiter {
-                    let _ = w
-                        .reply
-                        .send(completion_json(&c, w.return_latent, full_flops, steps).dump());
+            for ev in events.iter() {
+                match ev {
+                    PoolEvent::Completed(c) => {
+                        completed.fetch_add(1, Ordering::SeqCst);
+                        let waiter = waiting.lock().unwrap().remove(&c.id);
+                        if let Some(w) = waiter {
+                            let line =
+                                completion_json(&c, w.return_latent, full_flops, steps).dump();
+                            let _ = w.reply.send(line);
+                        }
+                    }
+                    PoolEvent::Aborted { id, error } => {
+                        let waiter = waiting.lock().unwrap().remove(&id);
+                        if let Some(w) = waiter {
+                            let _ = w.reply.send(error_json(&format!("request aborted: {error}")));
+                        }
+                    }
                 }
             }
         })
@@ -423,7 +452,22 @@ pub fn serve(engine: &mut Engine<'_>, cfg: &ServerConfig) -> Result<u64> {
             };
             let Some(msg) = msg else { break };
             match msg {
-                FrontendMsg::Shutdown => break 'outer,
+                FrontendMsg::Shutdown => {
+                    // drain: finish everything already admitted so
+                    // in-flight clients get their completions (the same
+                    // contract serve_sharded's drain shutdown honors)
+                    while engine.pending() > 0 {
+                        engine.tick()?;
+                        for c in engine.drain_completions() {
+                            completed += 1;
+                            if let Some((reply, rl)) = waiting.remove(&c.id) {
+                                let line = completion_json(&c, rl, full_flops, steps).dump();
+                                let _ = reply.send(line);
+                            }
+                        }
+                    }
+                    break 'outer;
+                }
                 FrontendMsg::Stats { reply } => {
                     let f = &engine.flops;
                     let j = Json::obj(vec![
@@ -450,21 +494,8 @@ pub fn serve(engine: &mut Engine<'_>, cfg: &ServerConfig) -> Result<u64> {
                         Ok(policy) => {
                             let id = next_id;
                             next_id += 1;
-                            let spec = RequestSpec {
-                                id,
-                                cond: spec_body
-                                    .get("cond")
-                                    .and_then(|c| c.as_f64())
-                                    .unwrap_or(0.0) as i32,
-                                seed: spec_body
-                                    .get("seed")
-                                    .and_then(|s| s.as_u64())
-                                    .unwrap_or(id),
-                                policy,
-                                record_traj: false,
-                            };
                             waiting.insert(id, (reply, return_latent));
-                            engine.submit(spec);
+                            engine.submit(spec_from_json(&spec_body, id, policy));
                         }
                     }
                 }

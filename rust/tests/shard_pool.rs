@@ -11,7 +11,7 @@ use std::time::Duration;
 
 use speca::config::{ModelConfig, ModelEntry};
 use speca::coordinator::state::{Completion, RequestSpec};
-use speca::coordinator::{EngineConfig, EngineShardPool, PoolConfig, RouterPolicy};
+use speca::coordinator::{EngineConfig, EngineShardPool, PoolConfig, PoolEvent, RouterPolicy};
 use speca::runtime::native::{synthetic_entry, NativeArch};
 use speca::runtime::{ModelBackend, NativeBackend};
 use speca::tensor::Tensor;
@@ -207,7 +207,7 @@ fn least_loaded_routing_skews_toward_idle_shards() {
     let model = Arc::new(SlowBackend::new(5));
     let depth = model.entry().config.depth;
     let mut pool = EngineShardPool::new(model.clone(), pool_config(2));
-    let rx = pool.take_completion_rx().unwrap();
+    let rx = pool.take_event_rx().unwrap();
 
     // heavy request (12 full steps) → shard 0 (all idle, lowest index)
     let s0 = pool.submit(slow_spec(0, depth, "full")).unwrap();
@@ -221,15 +221,27 @@ fn least_loaded_routing_skews_toward_idle_shards() {
 
     // wait for the first cheap request to finish; the heavy one (60 ms of
     // sleeps minimum) is still running, so shard 1 is idle again
-    let first_done = rx.recv_timeout(Duration::from_secs(20)).expect("a completion");
+    let first_done = match rx.recv_timeout(Duration::from_secs(20)).expect("an event") {
+        PoolEvent::Completed(c) => c,
+        PoolEvent::Aborted { id, error } => panic!("request {id} aborted: {error}"),
+    };
     assert_eq!(first_done.id, 1, "the cheap request on the idle shard finishes first");
     let s3 = pool.submit(slow_spec(3, depth, "steps:keep=2")).unwrap();
     assert_eq!(s3, 1, "least-loaded must route to the drained shard");
 
     let out = pool.shutdown(true).unwrap();
-    // 1 completion consumed above, 3 left over
-    assert_eq!(out.completions.len(), 3);
     assert_eq!(out.stats.completed, 4);
+    // the event stream was taken, so the other 3 completions sit on it
+    // (shutdown already joined every worker: the channel is fully buffered)
+    let mut leftover = Vec::new();
+    while let Ok(ev) = rx.try_recv() {
+        match ev {
+            PoolEvent::Completed(c) => leftover.push(c.id),
+            PoolEvent::Aborted { id, error } => panic!("request {id} aborted: {error}"),
+        }
+    }
+    leftover.sort_unstable();
+    assert_eq!(leftover, vec![0, 2, 3]);
 }
 
 #[test]
@@ -278,6 +290,123 @@ fn halt_shutdown_joins_cleanly_with_requests_in_flight() {
     let out = pool.shutdown(false).unwrap();
     assert!(out.completions.len() <= 4);
     assert!(out.stats.completed as usize == out.completions.len());
+    // every submitted request is accounted for: completed or aborted
+    assert_eq!(out.completions.len() + out.aborted.len(), 4);
+    for (_, reason) in &out.aborted {
+        assert_eq!(reason, "shard halted");
+    }
+}
+
+/// Backend whose forward passes always fail (after a generous sleep, so
+/// the test's submits land well before the first tick errors out even on
+/// a heavily loaded runner).
+struct FailingBackend {
+    entry: ModelEntry,
+}
+
+impl FailingBackend {
+    fn new() -> FailingBackend {
+        FailingBackend {
+            entry: synthetic_entry(&ModelConfig::native_test(), &NativeArch::default()),
+        }
+    }
+}
+
+impl ModelBackend for FailingBackend {
+    fn entry(&self) -> &ModelEntry {
+        &self.entry
+    }
+
+    fn kind(&self) -> &'static str {
+        "failing-stub"
+    }
+
+    fn supports(&self, entry_point: &str) -> bool {
+        matches!(entry_point, "full" | "full_eps" | "block" | "head")
+    }
+
+    fn warmup(&self, _e: &[&str], _b: &[usize]) -> anyhow::Result<()> {
+        Ok(())
+    }
+
+    fn full(
+        &self,
+        _bucket: usize,
+        _x: &[f32],
+        _t: &[f32],
+        _y: &[i32],
+        _pallas: bool,
+    ) -> anyhow::Result<(Tensor, Tensor)> {
+        std::thread::sleep(Duration::from_millis(100));
+        anyhow::bail!("injected backend failure")
+    }
+
+    fn full_eps(
+        &self,
+        _bucket: usize,
+        _x: &[f32],
+        _t: &[f32],
+        _y: &[i32],
+    ) -> anyhow::Result<Tensor> {
+        std::thread::sleep(Duration::from_millis(100));
+        anyhow::bail!("injected backend failure")
+    }
+
+    fn block(
+        &self,
+        _bucket: usize,
+        _layer: i32,
+        _feat: &[f32],
+        _t: &[f32],
+        _y: &[i32],
+    ) -> anyhow::Result<Tensor> {
+        anyhow::bail!("injected backend failure")
+    }
+
+    fn head(&self, _b: usize, _f: &[f32], _t: &[f32], _y: &[i32]) -> anyhow::Result<Tensor> {
+        anyhow::bail!("injected backend failure")
+    }
+}
+
+#[test]
+fn dead_shard_releases_load_gauge_and_aborts_waiters() {
+    let model = Arc::new(FailingBackend::new());
+    let depth = model.entry().config.depth;
+    let mut pool = EngineShardPool::new(model, pool_config(1));
+    let events = pool.take_event_rx().unwrap();
+    let router = pool.router();
+
+    // both land before the first (slow) tick fails and kills the shard
+    pool.submit(slow_spec(0, depth, "full")).unwrap();
+    pool.submit(slow_spec(1, depth, "full")).unwrap();
+
+    // every abandoned request gets an abort notice carrying the error
+    let mut aborted_ids = Vec::new();
+    for _ in 0..2 {
+        match events.recv_timeout(Duration::from_secs(20)).expect("an abort event") {
+            PoolEvent::Aborted { id, error } => {
+                assert!(error.contains("injected backend failure"), "got: {error}");
+                aborted_ids.push(id);
+            }
+            PoolEvent::Completed(c) => panic!("request {} completed on a failing backend", c.id),
+        }
+    }
+    aborted_ids.sort_unstable();
+    assert_eq!(aborted_ids, vec![0, 1]);
+
+    // the gauge was tombstoned before the aborts were emitted, so
+    // admission control sees a free pool again (no permanent "queue full")
+    // and the dead shard reports as such
+    assert_eq!(router.inflight(), 0, "dead shard must not pin the load gauge");
+    assert_eq!(router.loads(), vec![usize::MAX], "dead shard must be tombstoned");
+
+    // with every worker dead, submission fails fast instead of hanging
+    let err = pool.submit(slow_spec(2, depth, "full")).unwrap_err().to_string();
+    assert!(err.contains("all shard workers are gone"), "got: {err}");
+
+    // the backend error resurfaces from shutdown
+    let err = pool.shutdown(true).unwrap_err().to_string();
+    assert!(err.contains("shard worker error"), "got: {err}");
 }
 
 #[test]
