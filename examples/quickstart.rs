@@ -4,11 +4,17 @@
 //! (`--features pjrt` + Manifest/ModelRuntime) for artifact execution;
 //! the engine code is identical either way (DESIGN.md §3).
 //!
+//! The *draft* — how features are forecast between full computes — is
+//! pluggable (DESIGN.md §10): `draft=<name>` in the policy string (or
+//! `--draft` on the CLI) resolves through `cache::DraftRegistry`;
+//! `speca --list-drafts` prints what is registered.
+//!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
 
 use anyhow::Result;
+use speca::cache::DraftRegistry;
 use speca::config::ModelConfig;
 use speca::coordinator::{Engine, EngineConfig};
 use speca::runtime::{ModelBackend, NativeBackend};
@@ -19,19 +25,29 @@ fn main() -> Result<()> {
     let model = NativeBackend::seeded(ModelConfig::native_dit(), 0x5EED);
     let entry = model.entry();
 
-    // 2. build an engine and submit 8 requests under the SpeCa policy
+    // 2. pick a draft strategy by name — `taylor` is the default; try
+    //    `richardson` or `learned-linear` and watch α/rejects move
+    //    (full comparison: `speca bench drafts`, EXPERIMENTS.md §Drafts)
+    println!("registered drafts:");
+    for (name, blurb) in DraftRegistry::global().list() {
+        println!("  {name:<16} {blurb}");
+    }
+    let policy =
+        parse_policy("speca:N=5,O=2,tau0=0.3,beta=0.05,draft=taylor", entry.config.depth)?;
+
+    // 3. build an engine and submit 8 requests under the SpeCa policy
     // (Engine owns an Arc<dyn ModelBackend>; from_ref wraps a borrow —
     //  see coordinator::pool::EngineShardPool for the multi-shard form)
     let mut engine = Engine::from_ref(&model, EngineConfig::default());
-    let policy = parse_policy("speca:N=5,O=2,tau0=0.3,beta=0.05", entry.config.depth)?;
     for r in batch_requests(8, entry.config.num_classes, &policy, 0, false) {
         engine.submit(r);
     }
 
-    // 3. run the forecast-then-verify loop to completion
+    // 4. run the forecast-then-verify loop to completion
     let completions = engine.run_to_completion()?;
 
-    // 4. inspect per-request statistics
+    // 5. inspect per-request statistics (each completion carries the
+    //    draft name, so acceptance-per-draft is directly reportable)
     let full1 = entry.flops.full_step[&1];
     let steps = entry.config.serve_steps;
     println!("{:<4} {:>5} {:>5} {:>4} {:>8} {:>8}", "id", "full", "spec", "rej", "lat ms", "speedup");
@@ -56,7 +72,7 @@ fn main() -> Result<()> {
         f.predicted_speedup()
     );
 
-    // 5. dump the generated images as PGM grids
+    // 6. dump the generated images as PGM grids
     speca::experiments::runner::dump_pgm(&completions, &entry.config, "out/quickstart")?;
     println!("sample images in out/quickstart/*.pgm");
     Ok(())

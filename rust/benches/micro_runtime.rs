@@ -14,7 +14,7 @@
 use std::sync::Arc;
 use std::time::Instant;
 
-use speca::cache::{DraftKind, TapCache};
+use speca::cache::{DraftKind, DraftRegistry, TapCache};
 use speca::config::{ModelConfig, ModelEntry};
 use speca::coordinator::batcher::BatchStrategy;
 use speca::coordinator::{Engine, EngineConfig, EngineShardPool, PoolConfig, RouterPolicy};
@@ -254,6 +254,17 @@ fn main() -> anyhow::Result<()> {
             cache.predict_into(3.0, DraftKind::Taylor, &mut out);
         });
         println!("{}", native.report());
+        // every registered strategy through the trait-object path
+        // (EXPERIMENTS.md §Drafts: trait-dispatch overhead vs the enum
+        // path, and the relative cost of the new richardson /
+        // learned-linear drafts, read straight off these rows)
+        for name in DraftRegistry::global().names() {
+            let strategy = DraftRegistry::global().resolve(name).unwrap();
+            let r = Bench::new(&format!("predict/strategy_{name}")).min_time_ms(ms).run(|| {
+                cache.predict_with(&*strategy, 3.0, &mut out);
+            });
+            println!("{}", r.report());
+        }
         let f = rng.normal_f32s(feat);
         let r = Bench::new("cache/refresh_o2").min_time_ms(ms).run(|| {
             cache.refresh(&f);

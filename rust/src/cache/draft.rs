@@ -1,0 +1,644 @@
+//! Pluggable draft strategies — the forecasting half of SpeCa's
+//! forecast-then-verify loop, lifted behind an object-safe trait so new
+//! drafts (learned, low-rank, higher-order) plug in without touching the
+//! engine (DESIGN.md §10).
+//!
+//! A [`DraftStrategy`] maps one tap's cached trajectory state (a
+//! [`TapHistory`] view over the rolling backward differences Δ⁰..Δᵐ kept
+//! by [`TapCache`](crate::cache::TapCache)) plus a horizon `k` to a
+//! predicted feature. Five strategies ship:
+//!
+//! * `reuse` — F̂(k) = Δ⁰ (order-0, FORA-style);
+//! * `adams-bashforth` — F̂(k) = Δ⁰ + r·Δ¹ with r = k/N (2-point linear
+//!   multistep);
+//! * `taylor` — F̂(k) = Σᵢ Δⁱ·rⁱ/i! truncated at the configured order
+//!   (TaylorSeer, the paper's draft; the default);
+//! * `richardson` — two linear extrapolations at refresh spacings N and
+//!   2N combined to cancel the leading error term:
+//!   F̂(k) = 2·L_N(k) − L_2N(k) = Δ⁰ + r·Δ¹ + (r/2)·Δ²;
+//! * `learned-linear` — SpecDiff-flavored online ridge fit: per channel,
+//!   a line anchored at the newest snapshot is fit over the reconstructed
+//!   refresh-point history and extrapolated to `k` (no offline training,
+//!   no artifacts).
+//!
+//! Strategies are resolved by name through a [`DraftRegistry`]
+//! (case-insensitive, with aliases), shared across engine shards as
+//! `Arc<dyn DraftStrategy + Send + Sync>` inside a cloneable [`Draft`]
+//! handle, and carried per request by
+//! [`SpeCaConfig`](crate::coordinator::policy::SpeCaConfig). The exact
+//! update equations and the trait contract are documented in
+//! DESIGN.md §10; `tests/draft_parity.rs` asserts the shipped strategies
+//! are bitwise-identical to the legacy [`DraftKind`](super::DraftKind)
+//! enum paths.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::sync::{Arc, OnceLock};
+
+use anyhow::{anyhow, Result};
+
+use crate::tensor::Tensor;
+
+/// Read-only view of one tap's cached trajectory state, handed to
+/// [`DraftStrategy::predict_into`].
+///
+/// `factor(i)` is the i-th rolling backward difference ΔⁱF at the last
+/// refresh (Eq. 3); `usable_order()` caps how many of them are backed by
+/// data (it ramps up as refreshes accumulate, so drafts degrade
+/// gracefully during warmup); `interval()` is the nominal refresh
+/// spacing N that normalizes the horizon (`r = k / N`).
+pub struct TapHistory<'a> {
+    factors: &'a [Vec<f32>],
+    usable_order: usize,
+    interval: f32,
+}
+
+impl<'a> TapHistory<'a> {
+    /// Wrap raw difference factors (mostly used by tests and benches;
+    /// engine code goes through
+    /// [`TapCache::history`](crate::cache::TapCache::history)).
+    pub fn new(factors: &'a [Vec<f32>], usable_order: usize, interval: f32) -> TapHistory<'a> {
+        debug_assert!(!factors.is_empty());
+        debug_assert!(usable_order < factors.len());
+        TapHistory { factors, usable_order, interval }
+    }
+
+    /// The i-th backward difference ΔⁱF (length [`Self::feat_len`]).
+    pub fn factor(&self, i: usize) -> &[f32] {
+        &self.factors[i]
+    }
+
+    /// Highest difference order the cache allocates (Δ⁰..Δᵐ ⇒ m).
+    pub fn max_order(&self) -> usize {
+        self.factors.len() - 1
+    }
+
+    /// Highest difference order currently backed by observed refreshes.
+    pub fn usable_order(&self) -> usize {
+        self.usable_order
+    }
+
+    /// Nominal refresh spacing N (serve steps between full computes).
+    pub fn interval(&self) -> f32 {
+        self.interval
+    }
+
+    /// Feature length of every factor.
+    pub fn feat_len(&self) -> usize {
+        self.factors[0].len()
+    }
+}
+
+/// One draft model: predicts a tap's feature `k` serve steps past its
+/// last refresh from the cached difference history.
+///
+/// Contract (DESIGN.md §10):
+/// * object-safe and `Send + Sync` — an instance may be shared by every
+///   engine shard and every in-flight request (registry-resolved drafts
+///   are), exactly like the model backend, so implementations must be
+///   stateless or keep only thread-safe *aggregate* interior state
+///   (tuning statistics across all traffic — never per-request state,
+///   which a shared instance cannot key). A draft that needs genuinely
+///   per-request state must be instantiated per request
+///   ([`Draft::new`] on a fresh `Arc` in that request's `SpeCaConfig`)
+///   rather than resolved from the shared registry;
+/// * `predict_into` fully overwrites `out` (`out.len() ==
+///   history.feat_len()`) and must not allocate per call beyond what the
+///   strategy itself owns — callers pass reusable scratch buffers;
+/// * predictions must degrade gracefully: when
+///   `history.usable_order()` is below what the strategy wants, it uses
+///   what is available (every shipped strategy falls back to reuse at
+///   usable order 0);
+/// * `reset` is an advisory, instance-wide signal: the engine invokes it
+///   on a request's strategy when that request's speculation run ends in
+///   rejection. On a shared (registry) instance this means "some
+///   speculation run was just rejected" — decay aggregate adaptation;
+///   only a per-request instance may treat it as "clear this run's
+///   state". Shipped strategies are stateless and inherit the no-op
+///   default.
+pub trait DraftStrategy: Send + Sync {
+    /// Registry key and reporting label (lowercase kebab-case).
+    fn name(&self) -> &str;
+
+    /// Highest difference order this strategy reads when the policy asks
+    /// for order `configured`; sizes the per-tap cache allocation.
+    fn max_order(&self, configured: usize) -> usize;
+
+    /// Write the prediction for horizon `k` (serve steps since the last
+    /// refresh) into `out`.
+    fn predict_into(&self, history: &TapHistory<'_>, k: f32, out: &mut [f32]);
+
+    /// Notify the strategy that a speculative run was rejected (see the
+    /// trait docs). No-op by default.
+    fn reset(&self) {}
+}
+
+/// Truncated-Taylor evaluation shared by every polynomial strategy *and*
+/// the legacy [`DraftKind`](super::DraftKind) enum path, so the two stay
+/// bitwise-identical by construction: out = Σ_{i≤order} Δⁱ·rⁱ/i!.
+pub(crate) fn eval_taylor_into(factors: &[Vec<f32>], order: usize, ratio: f32, out: &mut [f32]) {
+    out.copy_from_slice(&factors[0]);
+    let mut coeff = 1.0f32;
+    for (i, factor) in factors.iter().enumerate().take(order + 1).skip(1) {
+        coeff *= ratio / i as f32;
+        Tensor::axpy(coeff, factor, out);
+    }
+}
+
+/// Order-0 feature reuse: F̂(k) = Δ⁰ (what FORA-style caches do).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ReuseDraft;
+
+impl DraftStrategy for ReuseDraft {
+    fn name(&self) -> &str {
+        "reuse"
+    }
+
+    fn max_order(&self, _configured: usize) -> usize {
+        0
+    }
+
+    fn predict_into(&self, history: &TapHistory<'_>, _k: f32, out: &mut [f32]) {
+        out.copy_from_slice(history.factor(0));
+    }
+}
+
+/// Two-point Adams–Bashforth linear multistep: F̂(k) = Δ⁰ + (k/N)·Δ¹.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AdamsBashforthDraft;
+
+impl DraftStrategy for AdamsBashforthDraft {
+    fn name(&self) -> &str {
+        "adams-bashforth"
+    }
+
+    fn max_order(&self, _configured: usize) -> usize {
+        1
+    }
+
+    fn predict_into(&self, history: &TapHistory<'_>, k: f32, out: &mut [f32]) {
+        let order = history.usable_order().min(1);
+        eval_taylor_into(history.factors, order, k / history.interval(), out);
+    }
+}
+
+/// Truncated Taylor series of the configured order (TaylorSeer; the
+/// paper's draft model and the registry default).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TaylorDraft;
+
+impl DraftStrategy for TaylorDraft {
+    fn name(&self) -> &str {
+        "taylor"
+    }
+
+    fn max_order(&self, configured: usize) -> usize {
+        configured
+    }
+
+    fn predict_into(&self, history: &TapHistory<'_>, k: f32, out: &mut [f32]) {
+        let order = history.max_order().min(history.usable_order());
+        eval_taylor_into(history.factors, order, k / history.interval(), out);
+    }
+}
+
+/// Richardson extrapolation over two refresh spacings.
+///
+/// Linear extrapolation at the fine spacing N uses (F₀, F₋₁):
+/// L_N(k) = Δ⁰ + r·Δ¹; at the coarse spacing 2N it uses (F₀, F₋₂):
+/// L_2N(k) = Δ⁰ + (r/2)·(2Δ¹ − Δ²). The Richardson combination
+/// 2·L_N − L_2N cancels the O(N) slope bias shared by both and leaves
+///
+///   F̂(k) = Δ⁰ + r·Δ¹ + (r/2)·Δ²,  r = k/N
+///
+/// — a genuinely different Δ² weighting than Taylor's r²/2 (linear
+/// rather than quadratic in the horizon, so curvature is damped for
+/// long speculative runs). Always a fixed order-2 scheme; with fewer
+/// refreshes observed it degrades to Adams–Bashforth, then reuse.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RichardsonDraft;
+
+impl DraftStrategy for RichardsonDraft {
+    fn name(&self) -> &str {
+        "richardson"
+    }
+
+    fn max_order(&self, _configured: usize) -> usize {
+        2
+    }
+
+    fn predict_into(&self, history: &TapHistory<'_>, k: f32, out: &mut [f32]) {
+        let r = k / history.interval();
+        out.copy_from_slice(history.factor(0));
+        let usable = history.usable_order().min(history.max_order());
+        if usable >= 1 {
+            Tensor::axpy(r, history.factor(1), out);
+        }
+        if usable >= 2 {
+            Tensor::axpy(r * 0.5, history.factor(2), out);
+        }
+    }
+}
+
+/// SpecDiff-style learned linear draft: an online per-channel ridge fit
+/// over the reconstructed refresh-point history, no offline training and
+/// no artifacts.
+///
+/// The cached differences reconstruct the raw snapshots at the last m+1
+/// refresh points (F₋ⱼ = Σᵢ (−1)ⁱ·C(j,i)·Δⁱ at normalized time t = −j).
+/// Per channel, fit the line F ≈ F₀ + b·t anchored at the newest
+/// snapshot by ridge regression on the slope:
+///
+///   b = Σⱼ tⱼ·(F₋ⱼ − F₀) / (Σⱼ tⱼ² + λ),   then   F̂(k) = F₀ + b·r
+///
+/// with r = k/N. Because every F₋ⱼ is a fixed linear combination of the
+/// factors, the whole fit collapses to scalar weights over Δ¹..Δᵐ
+/// computed once per call — the per-channel work is the same axpy sweep
+/// the polynomial drafts do. λ = 0 recovers exact least squares (exact
+/// on linear trajectories); λ → ∞ shrinks the slope to zero and the
+/// draft degrades to reuse. "Trained online" means exactly this: the fit
+/// is recomputed from the live trajectory at every prediction, so it
+/// adapts within a request with zero cross-request state.
+#[derive(Debug, Clone, Copy)]
+pub struct LearnedLinearDraft {
+    /// Ridge penalty λ on the slope (in units of squared refresh
+    /// intervals).
+    lambda: f32,
+}
+
+impl LearnedLinearDraft {
+    /// Draft with an explicit ridge penalty λ ≥ 0.
+    pub fn new(lambda: f32) -> LearnedLinearDraft {
+        LearnedLinearDraft { lambda }
+    }
+
+    /// The ridge penalty this instance fits with.
+    pub fn lambda(&self) -> f32 {
+        self.lambda
+    }
+}
+
+impl Default for LearnedLinearDraft {
+    /// The registry default: λ = 0.1, a light shrink toward reuse.
+    fn default() -> LearnedLinearDraft {
+        LearnedLinearDraft::new(0.1)
+    }
+}
+
+/// Binomial coefficient C(j, i) for the small j ≤ m orders used here.
+fn binom(j: usize, i: usize) -> f32 {
+    let mut c = 1.0f64;
+    for step in 0..i {
+        c = c * (j - step) as f64 / (step + 1) as f64;
+    }
+    c as f32
+}
+
+impl DraftStrategy for LearnedLinearDraft {
+    fn name(&self) -> &str {
+        "learned-linear"
+    }
+
+    fn max_order(&self, configured: usize) -> usize {
+        configured
+    }
+
+    fn predict_into(&self, history: &TapHistory<'_>, k: f32, out: &mut [f32]) {
+        out.copy_from_slice(history.factor(0));
+        let m = history.usable_order().min(history.max_order());
+        if m == 0 {
+            return;
+        }
+        let r = k / history.interval();
+        // denom = Σ_{j=1..m} tⱼ² + λ with tⱼ = −j
+        let denom: f32 = (1..=m).map(|j| (j * j) as f32).sum::<f32>() + self.lambda;
+        if denom <= 0.0 {
+            return;
+        }
+        // slope weights per snapshot, folded into per-factor scalars:
+        // b = Σⱼ wⱼ·(F₋ⱼ − F₀) with wⱼ = −j/denom and
+        // F₋ⱼ − F₀ = Σ_{i≥1} (−1)ⁱ·C(j,i)·Δⁱ
+        for i in 1..=m {
+            let sign = if i % 2 == 0 { 1.0f32 } else { -1.0 };
+            let mut coef = 0.0f32;
+            for j in i..=m {
+                coef += -(j as f32) / denom * sign * binom(j, i);
+            }
+            Tensor::axpy(r * coef, history.factor(i), out);
+        }
+    }
+}
+
+/// The process-wide default Taylor strategy (what non-SpeCa cache
+/// policies such as TaylorSeer draft with).
+pub fn taylor_default() -> &'static (dyn DraftStrategy + Send + Sync) {
+    static TAYLOR: TaylorDraft = TaylorDraft;
+    &TAYLOR
+}
+
+/// A cloneable, shard-shareable handle to one strategy instance.
+///
+/// This is what [`SpeCaConfig`](crate::coordinator::policy::SpeCaConfig)
+/// carries per request: cloning is an `Arc` bump, so every shard worker
+/// predicting for the same request family reads one shared instance —
+/// the same sharing model as the execution backend.
+#[derive(Clone)]
+pub struct Draft(Arc<dyn DraftStrategy + Send + Sync>);
+
+impl Draft {
+    /// Wrap a strategy instance.
+    pub fn new(strategy: Arc<dyn DraftStrategy + Send + Sync>) -> Draft {
+        Draft(strategy)
+    }
+
+    /// Resolve a strategy by name through the global registry
+    /// (case-insensitive; the error lists every valid name).
+    pub fn named(name: &str) -> Result<Draft> {
+        DraftRegistry::global().resolve(name)
+    }
+
+    /// The default draft: the paper's truncated Taylor series (the
+    /// registry's shared instance, so it compares equal to
+    /// `Draft::named("taylor")`).
+    pub fn taylor() -> Draft {
+        DraftRegistry::global().resolve("taylor").expect("taylor is a builtin")
+    }
+
+    /// The wrapped strategy's reporting name.
+    pub fn name(&self) -> &str {
+        self.0.name()
+    }
+}
+
+impl std::ops::Deref for Draft {
+    type Target = dyn DraftStrategy + Send + Sync;
+
+    fn deref(&self) -> &Self::Target {
+        &*self.0
+    }
+}
+
+impl fmt::Debug for Draft {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Draft({})", self.0.name())
+    }
+}
+
+impl PartialEq for Draft {
+    /// Drafts compare by *instance identity* (the same shared strategy
+    /// object), not by name — two `learned-linear` drafts with different
+    /// ridge penalties are different drafts. Handles resolved from the
+    /// same registry entry compare equal because they clone one `Arc`.
+    fn eq(&self, other: &Draft) -> bool {
+        Arc::ptr_eq(&self.0, &other.0)
+    }
+}
+
+struct RegEntry {
+    draft: Draft,
+    blurb: String,
+}
+
+/// String-keyed draft-strategy registry — the one place `draft=<name>`
+/// in policy descriptions, the per-request `draft` field on the wire
+/// protocol and the `--draft` CLI flag all resolve through.
+///
+/// Lookups are case-insensitive and follow aliases; unknown names error
+/// with the full list of valid strategies. [`DraftRegistry::global`]
+/// holds the built-in five; build a custom registry with
+/// [`DraftRegistry::empty`] + [`DraftRegistry::register`] to plug in
+/// experimental drafts without touching the engine.
+///
+/// # Examples
+///
+/// ```
+/// use speca::cache::draft::DraftRegistry;
+///
+/// let reg = DraftRegistry::global();
+/// assert_eq!(reg.resolve("Taylor").unwrap().name(), "taylor");
+/// // aliases resolve to their canonical strategy
+/// assert_eq!(reg.resolve("adams").unwrap().name(), "adams-bashforth");
+/// // unknown names list what would have worked
+/// let err = reg.resolve("magic").unwrap_err().to_string();
+/// assert!(err.contains("taylor") && err.contains("richardson"));
+/// ```
+pub struct DraftRegistry {
+    entries: BTreeMap<String, RegEntry>,
+    aliases: BTreeMap<String, String>,
+}
+
+impl DraftRegistry {
+    /// A registry with no strategies (plugin construction).
+    pub fn empty() -> DraftRegistry {
+        DraftRegistry { entries: BTreeMap::new(), aliases: BTreeMap::new() }
+    }
+
+    /// A registry holding the five built-in strategies and their aliases.
+    pub fn with_builtins() -> DraftRegistry {
+        let mut reg = DraftRegistry::empty();
+        reg.register(
+            "order-0 feature reuse (FORA-style; ignores the horizon)",
+            Arc::new(ReuseDraft),
+        );
+        reg.register(
+            "2-point Adams-Bashforth linear multistep (order 1)",
+            Arc::new(AdamsBashforthDraft),
+        );
+        reg.register(
+            "truncated Taylor series at the configured order (TaylorSeer; default)",
+            Arc::new(TaylorDraft),
+        );
+        reg.register(
+            "Richardson extrapolation over spacings N and 2N (fixed order 2)",
+            Arc::new(RichardsonDraft),
+        );
+        reg.register(
+            "online per-channel ridge line fit over the tap history (SpecDiff-style)",
+            Arc::new(LearnedLinearDraft::default()),
+        );
+        reg.alias("adams", "adams-bashforth");
+        reg.alias("ab", "adams-bashforth");
+        reg.alias("taylorseer", "taylor");
+        reg.alias("learned", "learned-linear");
+        reg.alias("specdiff", "learned-linear");
+        reg
+    }
+
+    /// Register a strategy under its own (lowercased) name with a short
+    /// description for `--list-drafts`.
+    pub fn register(&mut self, blurb: &str, strategy: Arc<dyn DraftStrategy + Send + Sync>) {
+        let key = strategy.name().to_ascii_lowercase();
+        self.entries.insert(key, RegEntry { draft: Draft(strategy), blurb: blurb.to_string() });
+    }
+
+    /// Register an alternate lookup name for a canonical strategy.
+    pub fn alias(&mut self, alias: &str, canonical: &str) {
+        debug_assert!(self.entries.contains_key(canonical), "alias to unknown '{canonical}'");
+        self.aliases.insert(alias.to_ascii_lowercase(), canonical.to_ascii_lowercase());
+    }
+
+    /// Resolve a name or alias (case-insensitive) to a shared handle.
+    pub fn resolve(&self, name: &str) -> Result<Draft> {
+        let key = name.trim().to_ascii_lowercase();
+        let canonical = self.aliases.get(&key).map(|s| s.as_str()).unwrap_or(&key);
+        match self.entries.get(canonical) {
+            Some(e) => Ok(e.draft.clone()),
+            None => Err(anyhow!(
+                "unknown draft strategy '{name}' (expected one of: {})",
+                self.names().join(", ")
+            )),
+        }
+    }
+
+    /// Canonical strategy names, sorted.
+    pub fn names(&self) -> Vec<&str> {
+        self.entries.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// `(name, description)` pairs for every canonical strategy, sorted
+    /// by name (`speca --list-drafts` output).
+    pub fn list(&self) -> Vec<(&str, &str)> {
+        self.entries.iter().map(|(k, e)| (k.as_str(), e.blurb.as_str())).collect()
+    }
+
+    /// The process-wide registry of built-in strategies.
+    pub fn global() -> &'static DraftRegistry {
+        static GLOBAL: OnceLock<DraftRegistry> = OnceLock::new();
+        GLOBAL.get_or_init(DraftRegistry::with_builtins)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A fabricated history: factors Δ⁰..Δᵐ with distinct contents.
+    fn factors(m: usize, feat: usize) -> Vec<Vec<f32>> {
+        (0..=m)
+            .map(|i| (0..feat).map(|c| (i * 10 + c) as f32 * 0.25 - 1.0).collect())
+            .collect()
+    }
+
+    #[test]
+    fn registry_resolves_builtins_case_insensitively() {
+        let reg = DraftRegistry::global();
+        for (name, expect) in [
+            ("reuse", "reuse"),
+            ("REUSE", "reuse"),
+            ("Adams-Bashforth", "adams-bashforth"),
+            ("ab", "adams-bashforth"),
+            ("taylor", "taylor"),
+            ("TaylorSeer", "taylor"),
+            ("richardson", "richardson"),
+            ("Learned", "learned-linear"),
+            ("specdiff", "learned-linear"),
+            (" taylor ", "taylor"),
+        ] {
+            assert_eq!(reg.resolve(name).unwrap().name(), expect, "{name}");
+        }
+        assert_eq!(reg.names().len(), 5);
+        assert_eq!(reg.list().len(), 5);
+    }
+
+    #[test]
+    fn registry_error_lists_names() {
+        let err = DraftRegistry::global().resolve("warp").unwrap_err().to_string();
+        for name in DraftRegistry::global().names() {
+            assert!(err.contains(name), "error should list '{name}': {err}");
+        }
+    }
+
+    #[test]
+    fn richardson_matches_closed_form() {
+        let f = factors(3, 4);
+        let h = TapHistory::new(&f, 3, 5.0);
+        let mut out = vec![0.0f32; 4];
+        RichardsonDraft.predict_into(&h, 3.0, &mut out);
+        let r = 3.0f32 / 5.0;
+        for c in 0..4 {
+            let expect = f[0][c] + r * f[1][c] + r * 0.5 * f[2][c];
+            assert!((out[c] - expect).abs() < 1e-6, "channel {c}");
+        }
+    }
+
+    #[test]
+    fn richardson_degrades_with_short_history() {
+        let f = factors(2, 3);
+        let mut out = vec![0.0f32; 3];
+        // usable 0 → reuse
+        RichardsonDraft.predict_into(&TapHistory::new(&f, 0, 4.0), 2.0, &mut out);
+        assert_eq!(out, f[0]);
+        // usable 1 → Adams–Bashforth
+        let mut ab = vec![0.0f32; 3];
+        AdamsBashforthDraft.predict_into(&TapHistory::new(&f, 1, 4.0), 2.0, &mut ab);
+        RichardsonDraft.predict_into(&TapHistory::new(&f, 1, 4.0), 2.0, &mut out);
+        assert_eq!(out, ab);
+    }
+
+    #[test]
+    fn learned_linear_exact_on_linear_trajectories() {
+        // A linear feature F(t) = a + s·t sampled at refreshes N apart has
+        // Δ¹ = s·N and Δⁱ = 0 for i ≥ 2; the λ=0 fit must extrapolate it
+        // exactly for any usable order.
+        let n = 4.0f32;
+        let (a, s) = (2.0f32, -0.75f32);
+        for m in 1..=3usize {
+            let mut f = vec![vec![a; 1]; m + 1];
+            f[1][0] = s * n;
+            for fac in f.iter_mut().skip(2) {
+                fac[0] = 0.0;
+            }
+            let h = TapHistory::new(&f, m, n);
+            let mut out = vec![0.0f32];
+            LearnedLinearDraft::new(0.0).predict_into(&h, 3.0, &mut out);
+            let expect = a + s * 3.0;
+            assert!((out[0] - expect).abs() < 1e-4, "m={m}: {} vs {expect}", out[0]);
+        }
+    }
+
+    #[test]
+    fn learned_linear_large_lambda_degrades_to_reuse() {
+        let f = factors(2, 3);
+        let h = TapHistory::new(&f, 2, 5.0);
+        let mut out = vec![0.0f32; 3];
+        LearnedLinearDraft::new(1e12).predict_into(&h, 4.0, &mut out);
+        for c in 0..3 {
+            assert!((out[c] - f[0][c]).abs() < 1e-4, "channel {c}");
+        }
+    }
+
+    #[test]
+    fn learned_linear_m1_equals_adams_bashforth_at_lambda_zero() {
+        let f = factors(1, 4);
+        let h = TapHistory::new(&f, 1, 3.0);
+        let mut lin = vec![0.0f32; 4];
+        let mut ab = vec![0.0f32; 4];
+        LearnedLinearDraft::new(0.0).predict_into(&h, 2.0, &mut lin);
+        AdamsBashforthDraft.predict_into(&h, 2.0, &mut ab);
+        for c in 0..4 {
+            assert!((lin[c] - ab[c]).abs() < 1e-5, "channel {c}");
+        }
+    }
+
+    #[test]
+    fn draft_handle_semantics() {
+        let d = Draft::named("taylor").unwrap();
+        assert_eq!(d.name(), "taylor");
+        assert_eq!(format!("{d:?}"), "Draft(taylor)");
+        assert_eq!(d, Draft::taylor());
+        assert_ne!(d, Draft::named("reuse").unwrap());
+        // Deref reaches the trait surface
+        assert_eq!(d.max_order(4), 4);
+        d.reset(); // no-op, must not panic
+        assert_eq!(Draft::named("richardson").unwrap().max_order(0), 2);
+        assert_eq!(Draft::named("reuse").unwrap().max_order(9), 0);
+    }
+
+    #[test]
+    fn binom_small_values() {
+        assert_eq!(binom(3, 0), 1.0);
+        assert_eq!(binom(3, 1), 3.0);
+        assert_eq!(binom(3, 2), 3.0);
+        assert_eq!(binom(4, 2), 6.0);
+    }
+}

@@ -11,10 +11,26 @@
 //!
 //! The effective order is capped by the number of refreshes seen so far, so
 //! predictions during warmup degrade gracefully (reuse → linear → ...).
+//!
+//! *How* a prediction is formed from the cached differences is pluggable:
+//! the [`draft`] submodule defines the object-safe
+//! [`DraftStrategy`](draft::DraftStrategy) trait, the five shipped
+//! strategies, and the name-keyed [`DraftRegistry`](draft::DraftRegistry)
+//! (DESIGN.md §10). The [`DraftKind`] enum is kept as the legacy reference
+//! implementation of the original three drafts; `tests/draft_parity.rs`
+//! asserts the trait impls are bitwise-identical to it.
 
-use crate::tensor::Tensor;
+pub mod draft;
 
-/// Draft-model flavor (paper Table 7 ablation).
+pub use draft::{Draft, DraftRegistry, DraftStrategy, TapHistory};
+
+use crate::cache::draft::eval_taylor_into;
+
+/// Draft-model flavor (paper Table 7 ablation) — the legacy enum form of
+/// the three original strategies, kept as the bitwise reference for the
+/// trait-based [`draft`] subsystem (and for hot paths that want a `Copy`
+/// selector). New code should resolve a [`Draft`] through the
+/// [`DraftRegistry`] instead.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum DraftKind {
     /// Direct feature reuse (order-0; what FORA-style caches do).
@@ -26,11 +42,14 @@ pub enum DraftKind {
 }
 
 impl DraftKind {
+    /// Parse one of the three legacy names (case-insensitive). Strategy
+    /// names beyond these resolve through [`DraftRegistry`], whose errors
+    /// list every registered name.
     pub fn parse(s: &str) -> Option<DraftKind> {
-        match s {
+        match s.trim().to_ascii_lowercase().as_str() {
             "reuse" => Some(DraftKind::Reuse),
-            "adams" | "adams-bashforth" => Some(DraftKind::AdamsBashforth),
-            "taylor" => Some(DraftKind::Taylor),
+            "adams" | "ab" | "adams-bashforth" => Some(DraftKind::AdamsBashforth),
+            "taylor" | "taylorseer" => Some(DraftKind::Taylor),
             _ => None,
         }
     }
@@ -45,6 +64,26 @@ impl DraftKind {
     }
 }
 
+/// Rolling backward-difference cache for one tap point (block boundary).
+///
+/// # Examples
+///
+/// On a linear trajectory the order-1 prediction is exact for any
+/// horizon, whichever way you ask for it:
+///
+/// ```
+/// use speca::cache::{Draft, DraftKind, TapCache};
+///
+/// let mut cache = TapCache::new(2, 1, 4); // order 2, 1 channel, N = 4
+/// for j in 0..3 {
+///     cache.refresh(&[2.0 - 3.0 * (j as f32 * 4.0)]); // F(t) = 2 − 3t
+/// }
+/// let legacy = cache.predict(2.0, DraftKind::Taylor);
+/// let mut out = vec![0.0];
+/// cache.predict_with(&*Draft::named("taylor").unwrap(), 2.0, &mut out);
+/// assert_eq!(legacy, out);
+/// assert!((out[0] - (2.0 - 3.0 * 10.0)).abs() < 1e-4); // exact at t = 8 + 2
+/// ```
 #[derive(Debug, Clone)]
 pub struct TapCache {
     /// factors[i] = Δⁱ F (raw backward differences), each of length `feat_len`
@@ -56,6 +95,8 @@ pub struct TapCache {
 }
 
 impl TapCache {
+    /// Cache holding differences Δ⁰..Δ^order of a `feat_len`-channel
+    /// feature refreshed nominally every `interval` serve steps.
     pub fn new(order: usize, feat_len: usize, interval: usize) -> TapCache {
         TapCache {
             factors: vec![vec![0.0; feat_len]; order + 1],
@@ -64,10 +105,12 @@ impl TapCache {
         }
     }
 
+    /// Channels per factor.
     pub fn feat_len(&self) -> usize {
         self.factors[0].len()
     }
 
+    /// Highest difference order allocated (Δ⁰..Δᵐ ⇒ m).
     pub fn max_order(&self) -> usize {
         self.factors.len() - 1
     }
@@ -77,10 +120,12 @@ impl TapCache {
         self.updates.saturating_sub(1).min(self.max_order())
     }
 
+    /// Whether at least one refresh has populated the cache.
     pub fn ready(&self) -> bool {
         self.updates > 0
     }
 
+    /// Resident bytes of the factor storage.
     pub fn bytes(&self) -> usize {
         self.factors.iter().map(|f| f.len() * 4).sum()
     }
@@ -109,29 +154,29 @@ impl TapCache {
     /// Predict the feature k steps ahead of the last refresh (Eq. 2),
     /// truncated to `draft.order(configured)` and the usable order.
     pub fn predict(&self, k: f32, draft: DraftKind) -> Vec<f32> {
-        let order = draft.order(self.max_order()).min(self.usable_order());
-        let mut out = self.factors[0].clone();
-        let ratio = k / self.interval;
-        let mut coeff = 1.0f32;
-        for i in 1..=order {
-            coeff *= ratio / i as f32;
-            Tensor::axpy(coeff, &self.factors[i], &mut out);
-        }
+        let mut out = vec![0.0; self.feat_len()];
+        self.predict_into(k, draft, &mut out);
         out
     }
 
     /// Predict into a caller buffer (hot-path variant, no allocation).
     pub fn predict_into(&self, k: f32, draft: DraftKind, out: &mut [f32]) {
         let order = draft.order(self.max_order()).min(self.usable_order());
-        out.copy_from_slice(&self.factors[0]);
-        let ratio = k / self.interval;
-        let mut coeff = 1.0f32;
-        for i in 1..=order {
-            coeff *= ratio / i as f32;
-            Tensor::axpy(coeff, &self.factors[i], out);
-        }
+        eval_taylor_into(&self.factors, order, k / self.interval, out);
     }
 
+    /// Predict into a caller buffer through a trait-object draft strategy
+    /// (what the engine dispatches; see [`draft`]).
+    pub fn predict_with(&self, strategy: &dyn DraftStrategy, k: f32, out: &mut [f32]) {
+        strategy.predict_into(&self.history(), k, out);
+    }
+
+    /// The read-only trajectory view draft strategies predict from.
+    pub fn history(&self) -> TapHistory<'_> {
+        TapHistory::new(&self.factors, self.usable_order(), self.interval)
+    }
+
+    /// The raw difference factors Δ⁰..Δᵐ.
     pub fn factors(&self) -> &[Vec<f32>] {
         &self.factors
     }
@@ -143,12 +188,14 @@ impl TapCache {
 /// layer-correlation experiments (Fig. 6).
 #[derive(Debug, Clone)]
 pub struct FeatureCache {
+    /// One [`TapCache`] per tapped boundary, in tap-layout order.
     pub taps: Vec<TapCache>,
     /// serve step of the last refresh (for computing k)
     pub last_refresh_step: Option<usize>,
 }
 
 impl FeatureCache {
+    /// `n_taps` identically-shaped tap caches (see [`TapCache::new`]).
     pub fn new(n_taps: usize, order: usize, feat_len: usize, interval: usize) -> FeatureCache {
         FeatureCache {
             taps: (0..n_taps).map(|_| TapCache::new(order, feat_len, interval)).collect(),
@@ -156,6 +203,7 @@ impl FeatureCache {
         }
     }
 
+    /// Refresh every tap with its freshly computed boundary feature.
     pub fn refresh(&mut self, step: usize, feats: &[&[f32]]) {
         assert_eq!(feats.len(), self.taps.len());
         for (tap, feat) in self.taps.iter_mut().zip(feats) {
@@ -169,10 +217,12 @@ impl FeatureCache {
         self.last_refresh_step.map(|s| (step - s) as f32)
     }
 
+    /// Whether every tap has observed at least one refresh.
     pub fn ready(&self) -> bool {
         self.last_refresh_step.is_some() && self.taps.iter().all(|t| t.ready())
     }
 
+    /// Total resident bytes across taps.
     pub fn bytes(&self) -> usize {
         self.taps.iter().map(|t| t.bytes()).sum()
     }
@@ -270,6 +320,27 @@ mod tests {
         let mut b = vec![0.0; 8];
         cache.predict_into(2.0, DraftKind::Taylor, &mut b);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn case_insensitive_legacy_parse() {
+        assert_eq!(DraftKind::parse("Taylor"), Some(DraftKind::Taylor));
+        assert_eq!(DraftKind::parse("AB"), Some(DraftKind::AdamsBashforth));
+        assert_eq!(DraftKind::parse(" REUSE "), Some(DraftKind::Reuse));
+        assert_eq!(DraftKind::parse("richardson"), None); // trait-only strategy
+    }
+
+    #[test]
+    fn history_view_mirrors_cache() {
+        let mut cache = TapCache::new(2, 4, 5);
+        cache.refresh(&[1.0; 4]);
+        cache.refresh(&[2.0; 4]);
+        let h = cache.history();
+        assert_eq!(h.max_order(), 2);
+        assert_eq!(h.usable_order(), 1);
+        assert_eq!(h.interval(), 5.0);
+        assert_eq!(h.feat_len(), 4);
+        assert_eq!(h.factor(0), cache.factors()[0].as_slice());
     }
 
     #[test]

@@ -9,30 +9,48 @@ use anyhow::{bail, Context, Result};
 
 use crate::util::json::Json;
 
+/// Manifest schema version this build understands.
 pub const MANIFEST_VERSION: u64 = 3;
 
 /// Model architecture + schedule description (mirrors configs.ModelConfig).
 #[derive(Debug, Clone)]
 pub struct ModelConfig {
+    /// Model name (manifest key / native preset).
     pub name: String,
+    /// Square image edge length.
     pub image_size: usize,
+    /// Image channels.
     pub channels: usize,
+    /// Patch edge length (patchify stride).
     pub patch: usize,
+    /// Transformer width.
     pub dim: usize,
+    /// Transformer blocks.
     pub depth: usize,
+    /// Attention heads.
     pub heads: usize,
+    /// Conditioning classes (or prompt ids).
     pub num_classes: usize,
+    /// Frames per sample (1 for images).
     pub frames: usize,
+    /// Noise-schedule family.
     pub schedule_kind: ScheduleKind,
+    /// Serve steps per request.
     pub serve_steps: usize,
+    /// Sequence length (frames × patches).
     pub tokens: usize,
+    /// Flat latent length (frames × channels × image²).
     pub latent_dim: usize,
+    /// Compiled batch buckets, sorted ascending.
     pub buckets: Vec<usize>,
 }
 
+/// Noise-schedule family.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ScheduleKind {
+    /// Deterministic DDIM (η = 0) over an ᾱ table.
     Ddim,
+    /// Rectified-flow Euler integration.
     RectifiedFlow,
 }
 
@@ -40,6 +58,7 @@ pub enum ScheduleKind {
 /// with the python golden traces).
 #[derive(Debug, Clone)]
 pub struct Schedule {
+    /// Which update rule the constants drive.
     pub kind: ScheduleKind,
     /// value fed to the model's timestep embedding at each serve step
     pub t_model: Vec<f32>,
@@ -54,48 +73,75 @@ pub struct Schedule {
 /// Analytic FLOPs table (MACs×2) recorded by configs.py.
 #[derive(Debug, Clone)]
 pub struct FlopsTable {
+    /// Full forward pass cost per batch bucket.
     pub full_step: BTreeMap<usize, u64>,
+    /// Single-block (verification) cost per batch bucket.
     pub block: BTreeMap<usize, u64>,
+    /// Output-head cost per batch bucket.
     pub head: BTreeMap<usize, u64>,
+    /// Draft-prediction cost per series order per tap.
     pub predict_per_order: u64,
 }
 
+/// Name + shape of one stored parameter tensor.
 #[derive(Debug, Clone)]
 pub struct ParamSpec {
+    /// Parameter name (weights.bin key).
     pub name: String,
+    /// Tensor shape.
     pub shape: Vec<usize>,
 }
 
+/// One model's manifest entry (or its native-synthesized equivalent).
 #[derive(Debug, Clone)]
 pub struct ModelEntry {
+    /// Architecture + schedule description.
     pub config: ModelConfig,
+    /// Serve-time schedule constants.
     pub schedule: Schedule,
+    /// Stored parameter inventory.
     pub params: Vec<ParamSpec>,
+    /// Path of `weights.bin`.
     pub weights: PathBuf,
+    /// Path of the golden traces file.
     pub goldens: PathBuf,
     /// entry point -> bucket -> hlo path
     pub artifacts: BTreeMap<String, BTreeMap<usize, PathBuf>>,
     /// single-file kernel artifacts (taylor_predict, verify_stats, step, ...)
     pub kernel_artifacts: BTreeMap<String, PathBuf>,
+    /// Analytic cost tables.
     pub flops: FlopsTable,
 }
 
+/// The metrics classifier's manifest entry.
 #[derive(Debug, Clone)]
 pub struct ClassifierEntry {
+    /// Path of the classifier weights file.
     pub weights: PathBuf,
+    /// Path of the classifier golden traces.
     pub goldens: PathBuf,
+    /// Compiled executable per batch bucket.
     pub artifacts: BTreeMap<usize, PathBuf>,
+    /// Stored parameter inventory.
     pub params: Vec<ParamSpec>,
+    /// Feature dimension (FID* space).
     pub feat_dim: usize,
+    /// Output classes.
     pub num_classes: usize,
+    /// Input latent length (one frame).
     pub latent_dim: usize,
+    /// Held-out accuracy recorded at train time.
     pub acc: f64,
 }
 
+/// Typed view of `artifacts/manifest.json`.
 #[derive(Debug)]
 pub struct Manifest {
+    /// Artifacts directory the paths below are rooted at.
     pub root: PathBuf,
+    /// Model entries by name.
     pub models: BTreeMap<String, ModelEntry>,
+    /// The metrics classifier entry.
     pub classifier: ClassifierEntry,
 }
 
@@ -128,6 +174,7 @@ fn parse_flops(j: &Json) -> FlopsTable {
 }
 
 impl Manifest {
+    /// Load and validate `<root>/manifest.json`.
     pub fn load(root: &Path) -> Result<Manifest> {
         let path = root.join("manifest.json");
         let text = fs::read_to_string(&path)
@@ -228,6 +275,7 @@ impl Manifest {
         })
     }
 
+    /// Entry of a model by name (error lists what exists).
     pub fn model(&self, name: &str) -> Result<&ModelEntry> {
         self.models
             .get(name)
@@ -307,6 +355,7 @@ impl ModelEntry {
             .unwrap_or(self.config.buckets.last().unwrap())
     }
 
+    /// Flat boundary-feature length (tokens × dim).
     pub fn feat_len(&self) -> usize {
         self.config.tokens * self.config.dim
     }

@@ -11,13 +11,17 @@
 //!
 //! The perf pass (EXPERIMENTS.md §Perf) quantifies both.
 
+/// How a tick's same-phase work decomposes into compiled batch buckets.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum BatchStrategy {
+    /// Greedy largest-bucket-first decomposition (no padding).
     Binary,
+    /// Single chunk padded up to the smallest covering bucket.
     PadUp,
 }
 
 impl BatchStrategy {
+    /// Parse `binary` / `pad` / `padup` / `pad-up`.
     pub fn parse(s: &str) -> Option<BatchStrategy> {
         match s {
             "binary" => Some(BatchStrategy::Binary),
@@ -31,14 +35,18 @@ impl BatchStrategy {
 /// the given member indices (the rest padded by replicating member 0).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Chunk {
+    /// Compiled batch size this chunk dispatches at.
     pub bucket: usize,
+    /// Indices (into the phase list) of the occupied slots.
     pub members: Vec<usize>,
 }
 
 impl Chunk {
+    /// Occupied slots.
     pub fn used(&self) -> usize {
         self.members.len()
     }
+    /// Padded (replicated) slots.
     pub fn padding(&self) -> usize {
         self.bucket - self.members.len()
     }

@@ -33,7 +33,7 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::cache::DraftKind;
+use crate::cache::draft::{self, DraftStrategy};
 use crate::config::{Schedule, ScheduleKind};
 use crate::coordinator::batcher::{gather_rows_into, pad_rows, plan_chunks, BatchStrategy, Chunk};
 use crate::coordinator::policy::{Plan, Policy};
@@ -44,9 +44,12 @@ use crate::runtime::ModelBackend;
 use crate::sampler;
 use crate::util::rng::Rng;
 
+/// Engine shape knobs (per shard when run under the pool).
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
+    /// Admission cap: requests concurrently in flight.
     pub max_inflight: usize,
+    /// How same-phase work maps onto the compiled batch buckets.
     pub strategy: BatchStrategy,
     /// execute the pallas-attention artifact variant for full passes
     /// (backends without one fall back to their default attention path)
@@ -75,6 +78,8 @@ struct Scratch {
     blend: Vec<f32>,
 }
 
+/// The SpeCa serving engine: one forecast-then-verify scheduling loop
+/// over an owned (possibly thread-shared) [`ModelBackend`].
 pub struct Engine<'a> {
     model: Arc<dyn ModelBackend + 'a>,
     flops_model: FlopsModel,
@@ -84,6 +89,7 @@ pub struct Engine<'a> {
     completions: Vec<Completion>,
     /// aggregate FLOPs of everything completed so far
     pub flops: FlopsCounter,
+    /// ticks executed since construction
     pub ticks: u64,
     /// TeaCache drift signal dimension (heuristic, engine-local)
     temb_dim: usize,
@@ -119,14 +125,17 @@ impl<'a> Engine<'a> {
         &*self.model
     }
 
+    /// Enqueue a request (admitted on a later tick when a slot frees up).
     pub fn submit(&mut self, spec: RequestSpec) {
         self.queue.push_back(spec);
     }
 
+    /// Requests queued or in flight.
     pub fn pending(&self) -> usize {
         self.queue.len() + self.active.len()
     }
 
+    /// Take everything completed since the last drain.
     pub fn drain_completions(&mut self) -> Vec<Completion> {
         std::mem::take(&mut self.completions)
     }
@@ -230,31 +239,38 @@ impl<'a> Engine<'a> {
         }
 
         // --- speculative phase: draft predictions ------------------------
+        // The strategy is a trait object shared across shards (SpeCa
+        // carries its `Draft` handle in the policy; cache policies
+        // without one draft with the default Taylor strategy).
         for &i in spec_verify.iter().chain(spec_direct.iter()) {
             let v = self.verify_layer_of(i);
             let depth = model.entry().config.depth;
             let st = &mut self.active[i];
             let k = st.cache.k_for_step(st.step).expect("cache ready");
-            let draft = match &st.spec.policy {
-                Policy::SpeCa(c) => c.draft,
-                _ => DraftKind::Taylor,
+            let strategy: &dyn DraftStrategy = match &st.spec.policy {
+                Policy::SpeCa(c) => &*c.draft,
+                _ => draft::taylor_default(),
             };
-            let order = st.spec.policy.order();
+            // book prediction cost at the strategy's effective order, not
+            // the policy's configured one (reuse does order-0 work no
+            // matter what O= says; richardson always does order-2) — the
+            // per-draft FLOPs comparison depends on this being honest
+            let order = strategy.max_order(st.spec.policy.order());
             let n_taps = st.tap_boundaries.len();
             if matches!(st.spec.policy, Policy::SpeCa(_)) {
                 let tv = st.tap_of(v);
                 let tvo = st.tap_of(v + 1);
                 let tl = st.tap_of(depth);
-                st.cache.taps[tv].predict_into(k, draft, &mut st.pred_vin);
-                st.cache.taps[tvo].predict_into(k, draft, &mut st.pred_vout);
+                st.cache.taps[tv].predict_with(strategy, k, &mut st.pred_vin);
+                st.cache.taps[tvo].predict_with(strategy, k, &mut st.pred_vout);
                 if tl != tvo {
-                    st.cache.taps[tl].predict_into(k, draft, &mut st.pred_last);
+                    st.cache.taps[tl].predict_with(strategy, k, &mut st.pred_last);
                 } else {
                     st.pred_last.copy_from_slice(&st.pred_vout);
                 }
             } else {
                 let tl = st.tap_of(depth);
-                st.cache.taps[tl].predict_into(k, draft, &mut st.pred_last);
+                st.cache.taps[tl].predict_with(strategy, k, &mut st.pred_last);
             }
             self.flops_model.book_predict(&mut st.stats.flops, order, n_taps, 1);
         }
@@ -298,6 +314,12 @@ impl<'a> Engine<'a> {
         for &i in &rejected {
             self.active[i].stats.rejects += 1;
             self.active[i].stats.flops.n_rejects += 1;
+            // the speculative run ended in rejection: fire the advisory
+            // reset hook on this request's strategy (instance-wide —
+            // DESIGN.md §10; no-op for the shipped stateless strategies)
+            if let Policy::SpeCa(c) = &self.active[i].spec.policy {
+                c.draft.reset();
+            }
         }
         self.run_full(&*model, &full)?;
 
@@ -330,6 +352,7 @@ impl<'a> Engine<'a> {
             id: st.spec.id,
             cond: st.spec.cond,
             policy_name: st.spec.policy.name().to_string(),
+            draft_name: st.spec.policy.draft_name().to_string(),
             latent: st.x,
             stats: st.stats,
             traj: st.traj,

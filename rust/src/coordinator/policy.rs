@@ -12,18 +12,23 @@
 //! SpeCa's acceptance test (paper §3.4): e = ‖F̂−F‖/(‖F‖+ε) against the
 //! adaptive threshold τ_t = τ0·β^((T−t)/T).
 
-use crate::cache::DraftKind;
+use crate::cache::Draft;
 
 /// Error metric for verification (paper Appendix E ablation).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ErrorMetric {
+    /// Relative L2 (the paper's default: ‖F̂−F‖₂/(‖F‖₂+ε)).
     L2,
+    /// Relative L1.
     L1,
+    /// Relative L∞ (max-abs ratio).
     Linf,
+    /// Cosine distance 1 − cos(F̂, F).
     Cosine,
 }
 
 impl ErrorMetric {
+    /// Parse a metric name (`l2`, `l1`, `linf`, `cos`/`cosine`).
     pub fn parse(s: &str) -> Option<ErrorMetric> {
         match s {
             "l2" => Some(ErrorMetric::L2),
@@ -95,11 +100,16 @@ pub struct SpeCaConfig {
     pub beta: f64,
     /// verification layer v (block index; default depth−1 = last)
     pub verify_layer: usize,
-    pub draft: DraftKind,
+    /// draft strategy shared across shards (DESIGN.md §10; resolve by
+    /// name through [`crate::cache::DraftRegistry`])
+    pub draft: Draft,
+    /// relative-error metric the acceptance test evaluates
     pub metric: ErrorMetric,
 }
 
 impl SpeCaConfig {
+    /// The paper's default hyper-parameters with the verify layer pinned
+    /// to the last block of a `depth`-block model.
     pub fn default_for_depth(depth: usize) -> SpeCaConfig {
         SpeCaConfig {
             interval: 5,
@@ -107,7 +117,7 @@ impl SpeCaConfig {
             tau0: 0.3,
             beta: 0.05,
             verify_layer: depth - 1,
-            draft: DraftKind::Taylor,
+            draft: Draft::taylor(),
             metric: ErrorMetric::L2,
         }
     }
@@ -146,9 +156,13 @@ pub enum Policy {
 /// What the engine should do for a request at the current step.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Plan {
+    /// complete forward pass (refreshes the feature cache)
     Full,
+    /// draft-predict (SpeCa additionally verifies and may reject)
     Spec,
+    /// reuse the previous ε̂ verbatim
     Skip,
+    /// recompute but reuse a token fraction (ToCa/DuCa-sim)
     Blend,
     /// step-reduction: this schedule step is skipped entirely (the sampler
     /// jumps across it; no model call, no ε̂ reuse)
@@ -156,6 +170,7 @@ pub enum Plan {
 }
 
 impl Policy {
+    /// Reporting label of the policy family.
     pub fn name(&self) -> &'static str {
         match self {
             Policy::Full => "full",
@@ -174,6 +189,7 @@ impl Policy {
         matches!(self, Policy::TaylorSeer { .. } | Policy::SpeCa(_))
     }
 
+    /// Configured prediction order (0 for policies without a draft).
     pub fn order(&self) -> usize {
         match self {
             Policy::TaylorSeer { order, .. } => *order,
@@ -182,6 +198,18 @@ impl Policy {
         }
     }
 
+    /// Name of the draft strategy this policy predicts with (`-` for
+    /// policies that never draft) — the per-request reporting axis of
+    /// the draft-comparison experiments.
+    pub fn draft_name(&self) -> &str {
+        match self {
+            Policy::SpeCa(c) => c.draft.name(),
+            Policy::TaylorSeer { .. } => "taylor",
+            _ => "-",
+        }
+    }
+
+    /// Nominal refresh interval N (1 for policies without one).
     pub fn interval(&self) -> usize {
         match self {
             Policy::Fora { interval }
@@ -261,6 +289,7 @@ impl Policy {
         }
     }
 
+    /// Token-reuse fraction R of the blend-simulation policies (0 elsewhere).
     pub fn reuse_frac(&self) -> f64 {
         match self {
             Policy::TocaSim { reuse_frac, .. } | Policy::DucaSim { reuse_frac, .. } => *reuse_frac,

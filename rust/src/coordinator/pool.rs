@@ -54,6 +54,7 @@ pub enum RouterPolicy {
 }
 
 impl RouterPolicy {
+    /// Parse `rr` / `round-robin` / `ll` / `least-loaded`.
     pub fn parse(s: &str) -> Option<RouterPolicy> {
         match s {
             "rr" | "round-robin" => Some(RouterPolicy::RoundRobin),
@@ -78,10 +79,12 @@ impl RouterPolicy {
     }
 }
 
+/// Shard-pool shape.
 #[derive(Debug, Clone)]
 pub struct PoolConfig {
     /// worker threads (each owns one engine); clamped to ≥ 1
     pub shards: usize,
+    /// How submissions spread over shards.
     pub router: RouterPolicy,
     /// per-shard engine configuration (`max_inflight` is per shard)
     pub engine: EngineConfig,
@@ -113,16 +116,27 @@ enum ShardMsg {
 /// boxing keeps channel sends and matches a pointer move.
 #[derive(Debug, Clone)]
 pub enum PoolEvent {
+    /// A request finished normally.
     Completed(Box<Completion>),
-    Aborted { id: u64, error: String },
+    /// A request was abandoned by a dying/halting shard.
+    Aborted {
+        /// Id of the abandoned request.
+        id: u64,
+        /// Why the shard abandoned it.
+        error: String,
+    },
 }
 
 /// Counter snapshot of one shard (or, merged, of the whole pool).
 #[derive(Debug, Clone, Default)]
 pub struct ShardStats {
+    /// Requests completed.
     pub completed: u64,
+    /// Requests admitted or queued right now.
     pub inflight: usize,
+    /// Engine ticks executed.
     pub ticks: u64,
+    /// Aggregate booked FLOPs.
     pub flops: FlopsCounter,
 }
 
@@ -145,6 +159,27 @@ const DEAD: usize = usize::MAX / 2;
 
 /// Cloneable submission handle: connection threads route directly to
 /// shard queues — no single-engine channel funnel in between.
+///
+/// # Examples
+///
+/// ```
+/// use std::sync::Arc;
+/// use speca::config::ModelConfig;
+/// use speca::coordinator::{EngineShardPool, PoolConfig};
+/// use speca::runtime::{ModelBackend, NativeBackend};
+/// use speca::workload::{batch_requests, parse_policy};
+///
+/// let model = Arc::new(NativeBackend::seeded(ModelConfig::native_test(), 1));
+/// let depth = model.entry().config.depth;
+/// let pool = EngineShardPool::new(model, PoolConfig { shards: 2, ..PoolConfig::default() });
+/// let router = pool.router(); // cloneable; each connection thread keeps one
+/// let policy = parse_policy("speca:N=4,O=2", depth).unwrap();
+/// for spec in batch_requests(4, 4, &policy, 0, false) {
+///     router.submit(spec).unwrap();
+/// }
+/// let out = pool.shutdown(true).unwrap(); // drain: finish everything routed
+/// assert_eq!(out.completions.len(), 4);
+/// ```
 #[derive(Clone)]
 pub struct ShardRouter {
     policy: RouterPolicy,
@@ -154,6 +189,7 @@ pub struct ShardRouter {
 }
 
 impl ShardRouter {
+    /// Number of shards this router feeds (dead ones included).
     pub fn shards(&self) -> usize {
         self.txs.len()
     }
@@ -262,6 +298,7 @@ pub struct PoolOutcome {
     /// `(id, error)` of requests abandoned by dead/halted shards, not
     /// consumed through [`EngineShardPool::take_event_rx`]
     pub aborted: Vec<(u64, String)>,
+    /// Merged counter snapshot across workers.
     pub stats: ShardStats,
 }
 
@@ -274,6 +311,7 @@ pub struct EngineShardPool {
 }
 
 impl EngineShardPool {
+    /// Spawn `cfg.shards` worker threads over one shared backend.
     pub fn new(model: Arc<dyn ModelBackend + Send + Sync>, cfg: PoolConfig) -> EngineShardPool {
         let shards = cfg.shards.max(1);
         let (ctx, crx) = channel();
@@ -315,10 +353,12 @@ impl EngineShardPool {
         self.router.clone()
     }
 
+    /// Route one request to a shard (see [`ShardRouter::submit`]).
     pub fn submit(&self, spec: RequestSpec) -> Result<usize> {
         self.router.submit(spec)
     }
 
+    /// Merged counter snapshot (see [`ShardRouter::stats`]).
     pub fn stats(&self) -> ShardStats {
         self.router.stats()
     }

@@ -11,10 +11,14 @@ use crate::metrics::flops::FlopsCounter;
 /// A generation request as submitted to the router.
 #[derive(Debug, Clone)]
 pub struct RequestSpec {
+    /// Request id (unique within one engine/pool run).
     pub id: u64,
     /// class label (dit-sim) or prompt id (flux-sim / video-sim)
     pub cond: i32,
+    /// Seed of the initial latent noise.
     pub seed: u64,
+    /// Acceleration policy driving this request (carries the draft
+    /// strategy for SpeCa — an `Arc` clone, shared across shards).
     pub policy: Policy,
     /// record the last-boundary feature every step (Fig. 9 trajectories)
     pub record_traj: bool,
@@ -23,13 +27,21 @@ pub struct RequestSpec {
 /// Outcome statistics for one request.
 #[derive(Debug, Clone, Default)]
 pub struct RequestStats {
+    /// Serve steps that ran the complete forward pass.
     pub full_steps: usize,
+    /// Speculative steps served from draft predictions.
     pub spec_steps: usize,
+    /// Steps that reused the previous ε̂ verbatim.
     pub skip_steps: usize,
+    /// Token-blend (ToCa/DuCa-sim) steps.
     pub blend_steps: usize,
+    /// Schedule steps jumped entirely (step reduction).
     pub elided_steps: usize,
+    /// SpeCa verifications that failed and fell back to a full pass.
     pub rejects: usize,
+    /// End-to-end request latency.
     pub latency_ms: f64,
+    /// Booked analytic cost of everything this request dispatched.
     pub flops: FlopsCounter,
     /// verification errors observed on speculative steps (step, e, tau)
     pub verify_trace: Vec<(usize, f64, f64)>,
@@ -48,6 +60,7 @@ impl RequestStats {
 
 /// Live state of one in-flight request.
 pub struct ReqState {
+    /// The submitted request.
     pub spec: RequestSpec,
     /// current latent x_t (flat)
     pub x: Vec<f32>,
@@ -65,13 +78,19 @@ pub struct ReqState {
     pub blend_feat: Vec<f32>,
     /// TeaCache drift accumulator + embedding at the last refresh
     pub tea_accum: f64,
+    /// Timestep embedding at the last TeaCache refresh.
     pub tea_last_temb: Vec<f32>,
+    /// Running outcome statistics.
     pub stats: RequestStats,
+    /// Recorded last-boundary features (when `spec.record_traj`).
     pub traj: Vec<Vec<f32>>,
+    /// Admission time (latency measurement).
     pub started: Instant,
     /// scratch: draft predictions for the current speculative step
     pub pred_vin: Vec<f32>,
+    /// scratch: predicted verify-block output.
     pub pred_vout: Vec<f32>,
+    /// scratch: predicted head input.
     pub pred_last: Vec<f32>,
 }
 
@@ -85,6 +104,10 @@ impl ReqState {
         taps
     }
 
+    /// Fresh per-request state: tap layout from the policy's verify
+    /// layer, cache order sized by the draft strategy
+    /// ([`DraftStrategy::max_order`](crate::cache::DraftStrategy::max_order)
+    /// of the configured order), scratch buffers preallocated.
     pub fn new(
         spec: RequestSpec,
         x: Vec<f32>,
@@ -96,7 +119,10 @@ impl ReqState {
             _ => depth - 1,
         };
         let taps = Self::tap_layout(verify_layer.min(depth - 1), depth);
-        let order = spec.policy.order();
+        let order = match &spec.policy {
+            Policy::SpeCa(c) => c.draft.max_order(c.order),
+            _ => spec.policy.order(),
+        };
         let interval = spec.policy.interval();
         let cache = FeatureCache::new(taps.len(), order, feat_len, interval.max(1));
         ReqState {
@@ -131,12 +157,21 @@ impl ReqState {
 /// Completed generation.
 #[derive(Debug, Clone)]
 pub struct Completion {
+    /// Request id (matches [`RequestSpec::id`]).
     pub id: u64,
+    /// Conditioning class/prompt id.
     pub cond: i32,
+    /// Policy family label ([`Policy::name`]).
     pub policy_name: String,
+    /// Draft strategy the request predicted with ([`Policy::draft_name`];
+    /// `-` for policies that never draft). Labels the verify trace so
+    /// acceptance-rate-per-draft is a reportable axis.
+    pub draft_name: String,
     /// final denoised latent x0
     pub latent: Vec<f32>,
+    /// Outcome statistics (incl. the verify trace).
     pub stats: RequestStats,
+    /// Recorded feature trajectory (empty unless requested).
     pub traj: Vec<Vec<f32>>,
 }
 

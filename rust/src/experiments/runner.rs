@@ -8,6 +8,7 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+use crate::cache::{Draft, DraftRegistry};
 use crate::config::ModelConfig;
 use crate::coordinator::batcher::BatchStrategy;
 use crate::coordinator::policy::Policy;
@@ -25,25 +26,38 @@ use crate::workload::batch_requests;
 /// Outcome of one (policy, n-sample) run.
 #[derive(Debug, Clone)]
 pub struct RunResult {
+    /// Row label the run was evaluated under.
     pub label: String,
+    /// Completions keyed by request id (deterministic iteration order).
     pub completions_by_id: BTreeMap<u64, Completion>,
+    /// Aggregate booked FLOPs across the run.
     pub flops: FlopsCounter,
+    /// Wall-clock seconds of the whole run.
     pub wall_s: f64,
 }
 
 /// How to drive a policy run: workload size, engine shape, sharding.
 #[derive(Debug, Clone)]
 pub struct RunOpts {
+    /// Closed-loop request count.
     pub n: usize,
+    /// Workload seed (request seeds derive from it).
     pub seed: u64,
     /// per-engine (per-shard) admission cap
     pub inflight: usize,
     /// engine worker threads; > 1 requires a `Send + Sync` backend
     pub shards: usize,
+    /// How submissions spread over shards.
     pub router: RouterPolicy,
+    /// Batch decomposition strategy.
     pub strategy: BatchStrategy,
+    /// Run the pallas-attention artifact variant for full passes.
     pub use_pallas: bool,
+    /// Record per-step feature trajectories (Fig. 9).
     pub record_traj: bool,
+    /// `--draft <name>`: override the draft strategy of every SpeCa
+    /// policy driven through [`run_policy`] (resolved via the registry).
+    pub draft: Option<Draft>,
 }
 
 impl Default for RunOpts {
@@ -57,17 +71,22 @@ impl Default for RunOpts {
             strategy: BatchStrategy::Binary,
             use_pallas: false,
             record_traj: false,
+            draft: None,
         }
     }
 }
 
 impl RunOpts {
     /// Read the shared engine/workload flags (`--seed`, `--inflight`,
-    /// `--shards`, `--router`) with `n` supplied by the caller.
+    /// `--shards`, `--router`, `--draft`) with `n` supplied by the caller.
     pub fn from_args(args: &Args, n: usize) -> Result<RunOpts> {
         let router = args.str("router", "least-loaded");
         let Some(router) = RouterPolicy::parse(&router) else {
             bail!("unknown router '{router}' (expected least-loaded|round-robin)");
+        };
+        let draft = match args.opt("draft") {
+            Some(name) => Some(DraftRegistry::global().resolve(name)?),
+            None => None,
         };
         Ok(RunOpts {
             n,
@@ -75,10 +94,12 @@ impl RunOpts {
             inflight: args.usize("inflight", 8),
             shards: args.usize("shards", 1),
             router,
+            draft,
             ..RunOpts::default()
         })
     }
 
+    /// The engine configuration these options describe.
     pub fn engine_config(&self) -> EngineConfig {
         EngineConfig {
             max_inflight: self.inflight,
@@ -96,10 +117,14 @@ pub fn run_policy(
     label: &str,
     opts: &RunOpts,
 ) -> Result<RunResult> {
+    let mut policy = policy.clone();
+    if let Some(d) = &opts.draft {
+        crate::workload::apply_draft(&mut policy, d);
+    }
     let reqs = batch_requests(
         opts.n,
         model.entry().config.num_classes,
-        policy,
+        &policy,
         opts.seed,
         opts.record_traj,
     );

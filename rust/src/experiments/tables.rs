@@ -18,7 +18,7 @@ use std::path::PathBuf;
 
 use anyhow::{bail, Result};
 
-use crate::cache::{DraftKind, TapCache};
+use crate::cache::{DraftKind, DraftRegistry, TapCache};
 use crate::coordinator::policy::ErrorMetric;
 use crate::metrics::pca::pca2;
 use crate::metrics::stats::pearson;
@@ -32,6 +32,7 @@ use super::runner::{
     evaluate_quality, latency_hist, run_policy, write_csv, Quality, RunOpts, RunResult,
 };
 
+/// Dispatch `speca bench <name>` to its table/figure runner.
 pub fn run(args: &Args) -> Result<()> {
     let name = args
         .positional
@@ -47,6 +48,7 @@ pub fn run(args: &Args) -> Result<()> {
         "table6" => table6(args),
         "table7" => table7(args),
         "table8" => table8(args),
+        "drafts" => drafts_table(args),
         "fig2" => fig2(args),
         "fig6" => fig6(args),
         "fig8" => fig8(args),
@@ -56,6 +58,7 @@ pub fn run(args: &Args) -> Result<()> {
     }
 }
 
+/// Path of a CSV artifact under `results/`.
 pub fn results_path(file: &str) -> PathBuf {
     PathBuf::from("results").join(file)
 }
@@ -90,16 +93,32 @@ fn sample_count(args: &Args, default: usize) -> usize {
 
 /// One measured row of a quality table.
 pub struct Row {
+    /// Row label.
     pub label: String,
+    /// Draft strategy the run predicted with (`-` for non-draft policies).
+    pub draft: String,
+    /// Median request latency (ms).
     pub latency_ms: f64,
+    /// Total booked GFLOPs across the run.
     pub gflops_total: f64,
+    /// FLOPs acceleration vs full computation of every step.
     pub speed: f64,
+    /// Measured acceptance rate α.
     pub alpha: f64,
+    /// Measured verification cost ratio γ.
     pub gamma: f64,
+    /// Verification rejections across the run.
     pub rejects: u64,
+    /// Mean relative error observed at verification (over every entry of
+    /// every request's verify trace; 0 when nothing was verified). In the
+    /// policy's verification metric — run with `metric=l1` for rel-L1.
+    pub verify_err: f64,
+    /// Quality metrics vs the matching-seed full-compute reference.
     pub q: Quality,
 }
 
+/// Run one policy row and evaluate every reported metric against the
+/// shared full-compute reference run.
 pub fn eval_row(
     model: &ResolvedModel<'_>,
     cls: &dyn ClassifierBackend,
@@ -115,14 +134,29 @@ pub fn eval_row(
     let full1 = model.entry().flops.full_step[&1];
     let steps = model.entry().config.serve_steps;
     let ideal = (opts.n * steps) as u64 * full1;
+    let (mut err_sum, mut err_n) = (0.0f64, 0usize);
+    for c in run.completions_by_id.values() {
+        for (_, e, _) in &c.stats.verify_trace {
+            err_sum += *e;
+            err_n += 1;
+        }
+    }
+    let draft = run
+        .completions_by_id
+        .values()
+        .next()
+        .map(|c| c.draft_name.clone())
+        .unwrap_or_else(|| "-".to_string());
     Ok(Row {
         label: label.to_string(),
+        draft,
         latency_ms: lat.percentile(0.5),
         gflops_total: run.flops.total() as f64 / 1e9,
         speed: ideal as f64 / run.flops.total().max(1) as f64,
         alpha: run.flops.acceptance_rate(),
         gamma: run.flops.gamma(),
         rejects: run.flops.n_rejects,
+        verify_err: if err_n > 0 { err_sum / err_n as f64 } else { 0.0 },
         q,
     })
 }
@@ -385,6 +419,12 @@ fn table6(args: &Args) -> Result<()> {
 
 /// Table 7: draft-model ablation on flux-sim (reuse / AB / Taylor, ±verify).
 fn table7(args: &Args) -> Result<()> {
+    if args.opt("draft").is_some() {
+        // the global --draft override (RunOpts) would silently replace
+        // every row's explicit draft= key and mislabel the ablation —
+        // same guard as `bench drafts`
+        bail!("table7 is the draft-model ablation; drop --draft");
+    }
     let rows: &[(&str, &str)] = &[
         ("AB (w/o SpeCa)", "taylorseer:N=5,O=1"),
         ("SpeCa (reuse draft)", "speca:N=5,O=2,tau0=0.3,beta=0.05,draft=reuse"),
@@ -403,6 +443,70 @@ fn table8(args: &Args) -> Result<()> {
         ("linf", "speca:N=5,O=2,tau0=0.6,beta=0.05,metric=linf"),
     ];
     small_flux_table("table8", "error-metric ablation", rows, args)
+}
+
+/// Draft-strategy comparison (EXPERIMENTS.md §Drafts): sweep every
+/// strategy in [`DraftRegistry::global`] under one SpeCa operating point
+/// on the native backend and report acceptance rate, the mean relative
+/// L1 error observed at verification (`metric=l1`, so the verify trace
+/// *is* rel-L1), FLOPs saved vs full compute, and quality. Rows are
+/// generated from the registry, so a newly registered strategy shows up
+/// without touching this runner.
+fn drafts_table(args: &Args) -> Result<()> {
+    if args.opt("draft").is_some() {
+        // RunOpts::from_args would thread --draft into every run_policy
+        // call, collapsing all five rows onto one strategy — reject it
+        // rather than emit a table that silently compares X with itself
+        bail!("`bench drafts` sweeps every registered strategy; drop --draft");
+    }
+    with_backends("dit-sim", args, |model, cls| {
+        let n = sample_count(args, 32);
+        let opts = RunOpts::from_args(args, n)?;
+        let depth = model.entry().config.depth;
+        let reference = run_policy(model, &parse_policy("full", depth)?, "full", &opts)?;
+        let point = "N=6,O=2,tau0=0.3,beta=0.05,metric=l1";
+        println!("== drafts: strategy comparison (dit-sim, speca:{point}, n={n}) ==");
+        println!(
+            "{:<18} {:>7} {:>10} {:>8} {:>9} {:>8} {:>8} {:>8}",
+            "draft", "alpha", "relL1@ver", "rejects", "GFLOPs", "saved", "speed", "FID*"
+        );
+        let mut csv = Vec::new();
+        for name in DraftRegistry::global().names() {
+            let desc = format!("speca:{point},draft={name}");
+            let row = eval_row(model, cls, &reference, &desc, name, &opts)?;
+            let saved = 1.0 - 1.0 / row.speed.max(1e-9);
+            println!(
+                "{:<18} {:>7.3} {:>10.4} {:>8} {:>9.3} {:>7.1}% {:>7.2}x {:>8.3}",
+                row.draft,
+                row.alpha,
+                row.verify_err,
+                row.rejects,
+                row.gflops_total,
+                saved * 100.0,
+                row.speed,
+                row.q.fid
+            );
+            csv.push(format!(
+                "{},{:.4},{:.5},{},{:.4},{:.4},{:.3},{:.4},{:.4}",
+                row.draft,
+                row.alpha,
+                row.verify_err,
+                row.rejects,
+                row.gflops_total,
+                saved,
+                row.speed,
+                row.q.fid,
+                row.q.fidelity
+            ));
+        }
+        write_csv(
+            &results_path("drafts.csv"),
+            "draft,alpha,rel_l1_at_verify,rejects,gflops,flops_saved,speed,fid,fidelity",
+            &csv,
+        )?;
+        println!("wrote results/drafts.csv");
+        Ok(())
+    })
 }
 
 fn small_flux_table(

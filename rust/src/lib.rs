@@ -15,6 +15,11 @@
 //! Python never runs on the request path: `make artifacts` produces
 //! `artifacts/` once; the default build does not need Python or XLA at
 //! all (DESIGN.md §3).
+//!
+//! Draft models (the forecasting half of forecast-then-verify) are
+//! pluggable: see [`cache::draft`] and DESIGN.md §10.
+
+#![warn(missing_docs)]
 
 pub mod cache;
 pub mod config;

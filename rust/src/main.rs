@@ -27,6 +27,9 @@ use speca::workload;
 
 fn main() -> Result<()> {
     let args = Args::from_env();
+    if args.bool("list-drafts") {
+        return list_drafts();
+    }
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "info" => info(&args),
@@ -39,6 +42,16 @@ fn main() -> Result<()> {
             Ok(())
         }
     }
+}
+
+/// `speca --list-drafts`: print the draft-strategy registry.
+fn list_drafts() -> Result<()> {
+    println!("registered draft strategies (--draft <name> / policy draft=<name>):");
+    for (name, blurb) in speca::cache::DraftRegistry::global().list() {
+        println!("  {name:<16} {blurb}");
+    }
+    println!("\nmath + trait contract: DESIGN.md §10; comparison table: EXPERIMENTS.md §Drafts");
+    Ok(())
 }
 
 const HELP: &str = "\
@@ -57,8 +70,19 @@ COMMANDS:
   load                       closed-loop load generator against a server
       --addr 127.0.0.1:7433 --n 32 --conns 4 --policy speca
   bench <name>               regenerate a paper table/figure (see DESIGN.md)
-      table1..table8 | fig2|fig6|fig8|fig9 | speedup-law  [--quick] [--n N]
-      [--shards S]  (micro perf: cargo bench --bench micro_runtime)
+      table1..table8 | drafts | fig2|fig6|fig8|fig9 | speedup-law
+      [--quick] [--n N] [--shards S]
+      (micro perf: cargo bench --bench micro_runtime)
+
+DRAFT STRATEGIES (DESIGN.md §10):
+  --draft <name>             draft strategy for SpeCa policies: on generate
+                             and bench it overrides every SpeCa row (the
+                             draft-comparison runners `drafts` and `table7`
+                             reject it); on serve it is the default for
+                             requests that name none (per-request
+                             draft=<name> wins)
+  --list-drafts              print the strategy registry and exit
+  policy syntax              speca:...,draft=<name> (case-insensitive)
 
 BACKENDS (--backend native|pjrt|auto, default auto):
   native   pure-Rust DiT forward, seeded weights, zero artifacts needed
@@ -172,15 +196,16 @@ fn generate(args: &Args) -> Result<()> {
         let full_flops = entry.flops.full_step[&1];
         let steps = entry.config.serve_steps;
         println!(
-            "{:<6} {:<10} {:>6} {:>6} {:>6} {:>7} {:>9} {:>9}",
-            "id", "policy", "full", "spec", "rej", "lat ms", "GFLOPs", "speedup"
+            "{:<6} {:<10} {:<16} {:>6} {:>6} {:>6} {:>7} {:>9} {:>9}",
+            "id", "policy", "draft", "full", "spec", "rej", "lat ms", "GFLOPs", "speedup"
         );
         for c in run.completions_by_id.values() {
             let s = &c.stats;
             println!(
-                "{:<6} {:<10} {:>6} {:>6} {:>6} {:>7.1} {:>9.4} {:>8.2}x",
+                "{:<6} {:<10} {:<16} {:>6} {:>6} {:>6} {:>7.1} {:>9.4} {:>8.2}x",
                 c.id,
                 c.policy_name,
+                c.draft_name,
                 s.full_steps,
                 s.spec_steps + s.skip_steps + s.blend_steps,
                 s.rejects,
@@ -224,6 +249,7 @@ fn serve(args: &Args) -> Result<()> {
             max_queue: args.usize("max-queue", 1024),
             shards: opts.shards.max(1),
             router: opts.router,
+            default_draft: opts.draft.clone(),
         };
         let done = match model.shared() {
             Some(shared) => server::serve_sharded(shared, opts.engine_config(), &cfg)?,

@@ -8,6 +8,7 @@
 
 use crate::config::FlopsTable;
 
+/// Booked analytic FLOPs + step counts for one request or aggregate.
 #[derive(Debug, Default, Clone)]
 pub struct FlopsCounter {
     /// complete forward passes
@@ -22,11 +23,14 @@ pub struct FlopsCounter {
     pub other: u64,
     /// step counts by category (per *sample*, not per batch)
     pub n_full_steps: u64,
+    /// Speculative steps served (accepted SpeCa + TaylorSeer + skips).
     pub n_spec_steps: u64,
+    /// SpeCa verifications that rejected.
     pub n_rejects: u64,
 }
 
 impl FlopsCounter {
+    /// Total booked FLOPs across categories.
     pub fn total(&self) -> u64 {
         self.full + self.verify + self.head + self.predict + self.other
     }
@@ -69,6 +73,7 @@ impl FlopsCounter {
         1.0 / (1.0 - a + a * g)
     }
 
+    /// Accumulate another counter into this one.
     pub fn merge(&mut self, other: &FlopsCounter) {
         self.full += other.full;
         self.verify += other.verify;
@@ -85,10 +90,12 @@ impl FlopsCounter {
 /// attribution: a bucket-B batch costs table[B]/B per sample).
 #[derive(Debug, Clone)]
 pub struct FlopsModel {
+    /// Per-bucket analytic cost tables (from the manifest / configs.py).
     pub table: FlopsTable,
 }
 
 impl FlopsModel {
+    /// Model over one cost table.
     pub fn new(table: FlopsTable) -> FlopsModel {
         FlopsModel { table }
     }
@@ -102,28 +109,34 @@ impl FlopsModel {
         v / bucket.max(1) as u64
     }
 
+    /// Book `samples` full forward passes dispatched at `bucket`.
     pub fn book_full(&self, c: &mut FlopsCounter, bucket: usize, samples: usize) {
         c.full += self.per_sample(&self.table.full_step, bucket) * samples as u64;
         c.n_full_steps += samples as u64;
     }
 
+    /// Book `samples` verification-block runs dispatched at `bucket`.
     pub fn book_verify(&self, c: &mut FlopsCounter, bucket: usize, samples: usize) {
         c.verify += self.per_sample(&self.table.block, bucket) * samples as u64;
     }
 
+    /// Book `samples` head evaluations dispatched at `bucket`.
     pub fn book_head(&self, c: &mut FlopsCounter, bucket: usize, samples: usize) {
         c.head += self.per_sample(&self.table.head, bucket) * samples as u64;
     }
 
+    /// Book draft predictions of the given order across `taps` taps.
     pub fn book_predict(&self, c: &mut FlopsCounter, order: usize, taps: usize, samples: usize) {
         c.predict +=
             self.table.predict_per_order * (order as u64 + 1) * taps as u64 * samples as u64;
     }
 
+    /// Count `samples` speculative serve steps.
     pub fn book_spec_step(&self, c: &mut FlopsCounter, samples: usize) {
         c.n_spec_steps += samples as u64;
     }
 
+    /// Bucket-1 cost of one full step (the speedup baseline).
     pub fn full_step_flops(&self) -> u64 {
         self.table.full_step.get(&1).copied().unwrap_or(0)
     }

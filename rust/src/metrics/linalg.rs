@@ -21,6 +21,7 @@ pub fn matmul(a: &[f64], b: &[f64], n: usize) -> Vec<f64> {
     c
 }
 
+/// Transpose of an n×n row-major matrix.
 pub fn transpose(a: &[f64], n: usize) -> Vec<f64> {
     let mut t = vec![0.0; n * n];
     for i in 0..n {
@@ -31,6 +32,7 @@ pub fn transpose(a: &[f64], n: usize) -> Vec<f64> {
     t
 }
 
+/// Trace of an n×n row-major matrix.
 pub fn trace(a: &[f64], n: usize) -> f64 {
     (0..n).map(|i| a[i * n + i]).sum()
 }

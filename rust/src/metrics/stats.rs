@@ -133,23 +133,28 @@ pub struct Histogram {
 }
 
 impl Histogram {
+    /// Empty histogram.
     pub fn new() -> Histogram {
         Histogram::default()
     }
 
+    /// Record one sample.
     pub fn record(&mut self, v: f64) {
         self.samples.push(v);
         self.sorted = false;
     }
 
+    /// Samples recorded.
     pub fn len(&self) -> usize {
         self.samples.len()
     }
 
+    /// Whether no samples were recorded.
     pub fn is_empty(&self) -> bool {
         self.samples.is_empty()
     }
 
+    /// Mean of the recorded samples (0 when empty).
     pub fn mean(&self) -> f64 {
         if self.samples.is_empty() {
             return 0.0;
@@ -157,6 +162,7 @@ impl Histogram {
         self.samples.iter().sum::<f64>() / self.samples.len() as f64
     }
 
+    /// Exact q-quantile (sorts lazily; 0 when empty).
     pub fn percentile(&mut self, q: f64) -> f64 {
         if self.samples.is_empty() {
             return 0.0;
@@ -169,6 +175,7 @@ impl Histogram {
         self.samples[idx]
     }
 
+    /// `(mean, p50, p95, p99)` of the recorded samples.
     pub fn summary(&mut self) -> (f64, f64, f64, f64) {
         (self.mean(), self.percentile(0.5), self.percentile(0.95), self.percentile(0.99))
     }

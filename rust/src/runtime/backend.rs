@@ -123,17 +123,25 @@ impl<B: ModelBackend + ?Sized> ModelBackend for &B {
 /// `fid_*`/`sfid_*` tensors are the stored reference Gaussians
 /// (mean [d], covariance [d, d]) the Fréchet metrics compare against.
 pub trait ClassifierBackend {
+    /// Input latent length (one frame).
     fn latent_dim(&self) -> usize;
+    /// Output classes.
     fn num_classes(&self) -> usize;
+    /// Feature dimension of the FID* space.
     fn feat_dim(&self) -> usize;
 
     /// Available batch buckets, sorted ascending.
     fn buckets(&self) -> Vec<usize>;
 
+    /// Classify a batch: `(logits, features)`.
     fn classify(&self, bucket: usize, x: &[f32]) -> Result<(Tensor, Tensor)>;
 
+    /// Reference feature mean for FID*.
     fn fid_mu(&self) -> &Tensor;
+    /// Reference feature covariance for FID*.
     fn fid_cov(&self) -> &Tensor;
+    /// Reference pooled-pixel mean for sFID*.
     fn sfid_mu(&self) -> &Tensor;
+    /// Reference pooled-pixel covariance for sFID*.
     fn sfid_cov(&self) -> &Tensor;
 }

@@ -26,7 +26,9 @@ pub use pjrt::{ClassifierRuntime, Exec, In, ModelRuntime, Runtime};
 /// Which backend a CLI/bench invocation should use.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum BackendKind {
+    /// Pure-Rust CPU backend (zero artifacts).
     Native,
+    /// AOT HLO artifacts via the PJRT C API.
     Pjrt,
 }
 

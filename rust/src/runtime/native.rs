@@ -34,7 +34,9 @@ use crate::weights::TensorFile;
 /// explicitly). Derived from tensor shapes when loading `weights.bin`.
 #[derive(Debug, Clone, Copy)]
 pub struct NativeArch {
+    /// MLP hidden width as a multiple of `dim`.
     pub mlp_ratio: usize,
+    /// Sinusoidal timestep-embedding frequency count.
     pub t_freq_dim: usize,
 }
 
@@ -73,6 +75,8 @@ struct Weights {
     head_b: Vec<f32>,       // [pd]
 }
 
+/// Pure-Rust, `Send + Sync` CPU implementation of the DiT forward pass
+/// (faithful to `python/compile/model.py`; zero artifacts needed).
 pub struct NativeBackend {
     entry: ModelEntry,
     arch: NativeArch,
@@ -400,6 +404,7 @@ impl NativeBackend {
         Ok(NativeBackend { entry, arch, w })
     }
 
+    /// The architecture knobs this backend was built with.
     pub fn arch(&self) -> &NativeArch {
         &self.arch
     }
@@ -701,6 +706,8 @@ impl ModelBackend for NativeBackend {
 /// FID references — meaningless in absolute terms but finite, smooth and
 /// deterministic, so the experiment harness runs end-to-end with zero
 /// artifacts.
+/// Pure-Rust metrics classifier (three dense layers; see
+/// [`crate::runtime::backend::ClassifierBackend`]).
 pub struct NativeClassifier {
     latent: usize,
     hidden: usize,
@@ -727,6 +734,8 @@ fn identity_gaussian(d: usize) -> (Tensor, Tensor) {
 }
 
 impl NativeClassifier {
+    /// Deterministically initialized classifier (identity reference
+    /// Gaussians; quality numbers are comparative only).
     pub fn seeded(latent: usize, classes: usize, seed: u64) -> NativeClassifier {
         let (hidden, feat) = (64, 32);
         let mut rng = Rng::new(seed);
@@ -838,6 +847,7 @@ impl ClassifierBackend for NativeClassifier {
 /// without the hub outliving the caller.
 pub struct NativeHub {
     models: BTreeMap<String, Arc<NativeBackend>>,
+    /// The metrics classifier shared by every experiment runner.
     pub classifier: NativeClassifier,
 }
 
@@ -845,6 +855,7 @@ impl NativeHub {
     /// Default seed for the zero-artifact models (`--model-seed` overrides).
     pub const DEFAULT_SEED: u64 = 0x5EC_A001;
 
+    /// Build the full inventory from one seed.
     pub fn seeded(seed: u64) -> NativeHub {
         let mut models = BTreeMap::new();
         // classifier latent = one frame of the (shared) image geometry,
@@ -865,6 +876,7 @@ impl NativeHub {
         NativeHub { models, classifier }
     }
 
+    /// Borrow a model by name (error lists what exists).
     pub fn model(&self, name: &str) -> Result<&NativeBackend> {
         Ok(self.lookup(name)?.as_ref())
     }
@@ -880,6 +892,7 @@ impl NativeHub {
         })
     }
 
+    /// Iterate the inventory (name, shared backend).
     pub fn models(&self) -> impl Iterator<Item = (&String, &Arc<NativeBackend>)> {
         self.models.iter()
     }

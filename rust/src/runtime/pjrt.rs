@@ -31,11 +31,14 @@ macro_rules! xerr {
     };
 }
 
+/// A live PJRT client (CPU plugin).
 pub struct Runtime {
+    /// The underlying PJRT client handle.
     pub client: xla::PjRtClient,
 }
 
 impl Runtime {
+    /// Create the CPU PJRT client.
     pub fn cpu() -> Result<Runtime> {
         let client = xerr!(xla::PjRtClient::cpu(), "creating PJRT CPU client")?;
         Ok(Runtime { client })
@@ -51,10 +54,12 @@ impl Runtime {
         xerr!(self.client.compile(&comp), format!("compiling {}", path.display()))
     }
 
+    /// Upload an f32 host buffer to the device.
     pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
         xerr!(self.client.buffer_from_host_buffer(data, dims, None), "uploading f32 buffer")
     }
 
+    /// Upload an i32 host buffer to the device.
     pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
         xerr!(self.client.buffer_from_host_buffer(data, dims, None), "uploading i32 buffer")
     }
@@ -62,9 +67,13 @@ impl Runtime {
 
 /// One positional input for a generic execution.
 pub enum In<'a> {
+    /// f32 tensor: data + dims.
     F32(&'a [f32], &'a [usize]),
+    /// i32 tensor: data + dims.
     I32(&'a [i32], &'a [usize]),
+    /// Rank-0 f32.
     ScalarF32(f32),
+    /// Rank-0 i32.
     ScalarI32(i32),
 }
 
@@ -113,12 +122,14 @@ impl Exec {
 /// All executables + device-resident weights for one model.
 pub struct ModelRuntime<'rt> {
     rt: &'rt Runtime,
+    /// The manifest entry this runtime executes.
     pub entry: ModelEntry,
     weights: Vec<xla::PjRtBuffer>,
     execs: RefCell<BTreeMap<(String, usize), Rc<Exec>>>,
 }
 
 impl<'rt> ModelRuntime<'rt> {
+    /// Upload weights and prepare lazy per-(entry, bucket) compilation.
     pub fn load(rt: &'rt Runtime, entry: &ModelEntry) -> Result<ModelRuntime<'rt>> {
         let wf = TensorFile::load(&entry.weights)?;
         let mut weights = Vec::new();
@@ -308,16 +319,22 @@ impl ModelBackend for ModelRuntime<'_> {
 /// Metrics classifier runtime (FID features + IS posteriors).
 pub struct ClassifierRuntime<'rt> {
     rt: &'rt Runtime,
+    /// The manifest entry this runtime executes.
     pub entry: ClassifierEntry,
     weights: Vec<xla::PjRtBuffer>,
     execs: RefCell<BTreeMap<usize, Rc<Exec>>>,
+    /// Stored FID* reference mean.
     pub fid_mu: Tensor,
+    /// Stored FID* reference covariance.
     pub fid_cov: Tensor,
+    /// Stored sFID* reference mean.
     pub sfid_mu: Tensor,
+    /// Stored sFID* reference covariance.
     pub sfid_cov: Tensor,
 }
 
 impl<'rt> ClassifierRuntime<'rt> {
+    /// Upload classifier weights and reference Gaussians.
     pub fn load(rt: &'rt Runtime, entry: &ClassifierEntry) -> Result<ClassifierRuntime<'rt>> {
         let wf = TensorFile::load(&entry.weights)?;
         let mut weights = Vec::new();
@@ -351,6 +368,7 @@ impl<'rt> ClassifierRuntime<'rt> {
         Ok(e)
     }
 
+    /// Compiled classifier batch buckets.
     pub fn buckets(&self) -> Vec<usize> {
         self.entry.artifacts.keys().copied().collect()
     }

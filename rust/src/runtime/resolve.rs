@@ -21,12 +21,16 @@ use crate::util::cli::Args;
 /// The backend-selection flags of one CLI/bench invocation.
 #[derive(Debug, Clone)]
 pub struct BackendRequest {
+    /// `--backend` value (`native` / `pjrt` / `auto`).
     pub backend: String,
+    /// `--model` name.
     pub model: String,
+    /// `--model-seed` for the native weights.
     pub model_seed: u64,
 }
 
 impl BackendRequest {
+    /// Read the backend-selection flags (with defaults).
     pub fn from_args(args: &Args) -> BackendRequest {
         BackendRequest {
             backend: args.str("backend", "auto"),
@@ -47,6 +51,7 @@ impl BackendRequest {
     }
 }
 
+/// Whether an artifacts manifest exists at the configured location.
 pub fn artifacts_present() -> bool {
     crate::artifacts_dir().join("manifest.json").exists()
 }
@@ -55,7 +60,9 @@ pub fn artifacts_present() -> bool {
 /// worker threads; `Local` (PJRT — `Rc`-based client) is pinned to the
 /// resolving thread.
 pub enum ResolvedModel<'env> {
+    /// Thread-shareable backend (native) — shard pools fan out over it.
     Shared(Arc<dyn ModelBackend + Send + Sync>),
+    /// Thread-pinned backend (PJRT's `Rc`-based client).
     Local(Arc<dyn ModelBackend + 'env>),
 }
 
@@ -77,6 +84,7 @@ impl<'env> ResolvedModel<'env> {
         }
     }
 
+    /// The model's config/schedule/FLOPs description.
     pub fn entry(&self) -> &ModelEntry {
         match self {
             ResolvedModel::Shared(m) => m.entry(),
@@ -84,6 +92,7 @@ impl<'env> ResolvedModel<'env> {
         }
     }
 
+    /// Backend tag ("native" / "pjrt").
     pub fn kind(&self) -> &'static str {
         match self {
             ResolvedModel::Shared(m) => m.kind(),

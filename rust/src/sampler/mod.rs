@@ -32,14 +32,17 @@ pub fn rf_step(x: &mut [f32], v: &[f32], dt: f32) {
 
 /// Serve-time sampler driving one latent through the schedule.
 pub struct Sampler<'a> {
+    /// The serve-time schedule constants driving every update.
     pub schedule: &'a Schedule,
 }
 
 impl<'a> Sampler<'a> {
+    /// Sampler over a schedule.
     pub fn new(schedule: &'a Schedule) -> Self {
         Sampler { schedule }
     }
 
+    /// Serve steps in the schedule.
     pub fn steps(&self) -> usize {
         self.schedule.t_model.len()
     }

@@ -12,21 +12,32 @@ use crate::metrics::stats::Histogram;
 use crate::util::json::Json;
 
 #[derive(Debug, Clone)]
+/// Load-generator parameters.
 pub struct LoadConfig {
+    /// Server address to hit.
     pub addr: String,
+    /// Concurrent connections.
     pub connections: usize,
+    /// Total requests across connections.
     pub requests: usize,
     /// policy description string (workload::parse_policy syntax)
     pub policy: String,
+    /// Conditioning classes cycled round-robin.
     pub num_classes: usize,
 }
 
 #[derive(Debug)]
+/// Aggregated outcome of one load run.
 pub struct LoadReport {
+    /// Requests that completed successfully.
     pub completed: usize,
+    /// Requests that errored.
     pub errors: usize,
+    /// Wall-clock seconds of the whole load run.
     pub wall_s: f64,
+    /// Completed requests per second.
     pub throughput_rps: f64,
+    /// Per-request latency distribution.
     pub latency: Histogram,
     /// mean per-request FLOPs speedup reported by the server
     pub mean_speedup: f64,

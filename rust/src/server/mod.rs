@@ -34,6 +34,7 @@ use std::time::Duration;
 
 use anyhow::Result;
 
+use crate::cache::Draft;
 use crate::coordinator::state::{Completion, RequestSpec};
 use crate::coordinator::{
     Engine, EngineConfig, EngineShardPool, Policy, PoolConfig, PoolEvent, RouterPolicy,
@@ -41,7 +42,7 @@ use crate::coordinator::{
 };
 use crate::runtime::ModelBackend;
 use crate::util::json::Json;
-use crate::workload::policy_from_json;
+use crate::workload::policy_from_json_with;
 
 /// A parsed client request paired with its reply channel (legacy loop).
 enum FrontendMsg {
@@ -50,13 +51,19 @@ enum FrontendMsg {
     Shutdown,
 }
 
+/// Serving front-end configuration.
 pub struct ServerConfig {
+    /// TCP listen address.
     pub addr: String,
     /// maximum requests in flight inside the engine(s)
     pub max_queue: usize,
     /// engine worker threads for [`serve_sharded`]
     pub shards: usize,
+    /// How submissions spread over shards.
     pub router: RouterPolicy,
+    /// Default draft strategy for SpeCa requests that name none
+    /// (`--draft` on `speca serve`; an explicit per-request draft wins).
+    pub default_draft: Option<Draft>,
 }
 
 impl Default for ServerConfig {
@@ -66,6 +73,7 @@ impl Default for ServerConfig {
             max_queue: 1024,
             shards: 1,
             router: RouterPolicy::LeastLoaded,
+            default_draft: None,
         }
     }
 }
@@ -76,6 +84,7 @@ fn completion_json(c: &Completion, return_latent: bool, full_flops: u64, steps: 
         ("id", Json::Num(c.id as f64)),
         ("ok", Json::Bool(true)),
         ("policy", Json::str(&c.policy_name)),
+        ("draft", Json::str(&c.draft_name)),
         ("cond", Json::Num(c.cond as f64)),
         (
             "stats",
@@ -136,6 +145,7 @@ struct ConnCtx {
     next_id: Arc<AtomicU64>,
     max_queue: usize,
     depth: usize,
+    default_draft: Option<Draft>,
 }
 
 fn handle_generate(ctx: &ConnCtx, req: &Json) -> String {
@@ -143,7 +153,7 @@ fn handle_generate(ctx: &ConnCtx, req: &Json) -> String {
         return error_json("server is shutting down");
     }
     let return_latent = req.get("return_latent").and_then(|b| b.as_bool()).unwrap_or(false);
-    let policy = match policy_from_json(req, ctx.depth) {
+    let policy = match policy_from_json_with(req, ctx.depth, ctx.default_draft.as_ref()) {
         Ok(p) => p,
         Err(e) => return error_json(&format!("{e}")),
     };
@@ -295,6 +305,7 @@ pub fn serve_sharded(
             next_id: Arc::new(AtomicU64::new(0)),
             max_queue: cfg.max_queue,
             depth,
+            default_draft: cfg.default_draft.clone(),
         };
         let accepting = accepting.clone();
         let listener = listener.try_clone()?;
@@ -487,7 +498,7 @@ pub fn serve(engine: &mut Engine<'_>, cfg: &ServerConfig) -> Result<u64> {
                         let _ = reply.send(error_json("queue full"));
                         continue;
                     }
-                    match policy_from_json(&spec_body, depth) {
+                    match policy_from_json_with(&spec_body, depth, cfg.default_draft.as_ref()) {
                         Err(e) => {
                             let _ = reply.send(error_json(&format!("{e}")));
                         }

@@ -7,9 +7,12 @@
 
 use std::fmt;
 
+/// Shape + contiguous row-major `f32` storage.
 #[derive(Clone, PartialEq)]
 pub struct Tensor {
+    /// Dimension sizes, outermost first (empty = scalar).
     pub shape: Vec<usize>,
+    /// Flat element storage (`shape.iter().product()` values).
     pub data: Vec<f32>,
 }
 
@@ -20,6 +23,7 @@ impl fmt::Debug for Tensor {
 }
 
 impl Tensor {
+    /// Tensor from a shape and matching flat data (panics on mismatch).
     pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
         assert_eq!(
             shape.iter().product::<usize>(),
@@ -30,23 +34,28 @@ impl Tensor {
         Tensor { shape, data }
     }
 
+    /// Zero-filled tensor of the given shape.
     pub fn zeros(shape: Vec<usize>) -> Tensor {
         let n = shape.iter().product();
         Tensor { shape, data: vec![0.0; n] }
     }
 
+    /// Rank-0 tensor holding one value.
     pub fn scalar(v: f32) -> Tensor {
         Tensor { shape: vec![], data: vec![v] }
     }
 
+    /// Total element count.
     pub fn len(&self) -> usize {
         self.data.len()
     }
 
+    /// Whether the tensor holds no elements.
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }
 
+    /// Number of axes.
     pub fn ndim(&self) -> usize {
         self.shape.len()
     }
@@ -66,6 +75,7 @@ impl Tensor {
         &self.data[i * r..(i + 1) * r]
     }
 
+    /// Mutably borrow the i-th slice along axis 0.
     pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
         let r = self.row_len();
         &mut self.data[i * r..(i + 1) * r]
@@ -91,6 +101,7 @@ impl Tensor {
         Tensor::new(shape, data)
     }
 
+    /// Same data under a new shape (panics if sizes differ).
     pub fn reshape(mut self, shape: Vec<usize>) -> Tensor {
         assert_eq!(shape.iter().product::<usize>(), self.data.len());
         self.shape = shape;
@@ -99,10 +110,12 @@ impl Tensor {
 
     // ---- reductions used on the hot path ---------------------------------
 
+    /// Euclidean norm of a slice (f64 accumulation).
     pub fn l2_norm(v: &[f32]) -> f64 {
         v.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>().sqrt()
     }
 
+    /// Euclidean distance between two equal-length slices.
     pub fn l2_dist(a: &[f32], b: &[f32]) -> f64 {
         debug_assert_eq!(a.len(), b.len());
         a.iter()
@@ -115,6 +128,7 @@ impl Tensor {
             .sqrt()
     }
 
+    /// Arithmetic mean (0 for an empty slice).
     pub fn mean(v: &[f32]) -> f64 {
         if v.is_empty() {
             return 0.0;
@@ -122,6 +136,7 @@ impl Tensor {
         v.iter().map(|x| *x as f64).sum::<f64>() / v.len() as f64
     }
 
+    /// Mean squared error between two equal-length slices.
     pub fn mse(a: &[f32], b: &[f32]) -> f64 {
         if a.is_empty() {
             return 0.0;

@@ -3,9 +3,12 @@
 
 use std::collections::BTreeMap;
 
+/// Parsed command line.
 #[derive(Debug, Default, Clone)]
 pub struct Args {
+    /// Non-flag arguments, in order.
     pub positional: Vec<String>,
+    /// `--key value` / `--key=value` / bare `--flag` (stored as "true").
     pub flags: BTreeMap<String, String>,
 }
 
@@ -35,18 +38,22 @@ impl Args {
         out
     }
 
+    /// Parse the process arguments.
     pub fn from_env() -> Args {
         Args::parse(std::env::args().skip(1))
     }
 
+    /// String flag with a default.
     pub fn str(&self, key: &str, default: &str) -> String {
         self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
     }
 
+    /// Optional string flag.
     pub fn opt(&self, key: &str) -> Option<&str> {
         self.flags.get(key).map(|s| s.as_str())
     }
 
+    /// Integer flag with a default (panics on a malformed value).
     pub fn usize(&self, key: &str, default: usize) -> usize {
         self.flags
             .get(key)
@@ -54,6 +61,7 @@ impl Args {
             .unwrap_or(default)
     }
 
+    /// u64 flag with a default (panics on a malformed value).
     pub fn u64(&self, key: &str, default: u64) -> u64 {
         self.flags
             .get(key)
@@ -61,6 +69,7 @@ impl Args {
             .unwrap_or(default)
     }
 
+    /// Float flag with a default (panics on a malformed value).
     pub fn f64(&self, key: &str, default: f64) -> f64 {
         self.flags
             .get(key)
@@ -68,6 +77,7 @@ impl Args {
             .unwrap_or(default)
     }
 
+    /// Boolean flag (`--x`, `--x true|1|yes`).
     pub fn bool(&self, key: &str) -> bool {
         matches!(self.flags.get(key).map(|s| s.as_str()), Some("true") | Some("1") | Some("yes"))
     }

@@ -7,19 +7,29 @@
 use std::collections::BTreeMap;
 use std::fmt;
 
+/// A parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any number (kept as f64).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (sorted keys).
     Obj(BTreeMap<String, Json>),
 }
 
+/// Parse failure with its byte offset.
 #[derive(Debug)]
 pub struct JsonError {
+    /// What went wrong.
     pub msg: String,
+    /// Byte offset of the failure.
     pub pos: usize,
 }
 
@@ -32,6 +42,7 @@ impl fmt::Display for JsonError {
 impl std::error::Error for JsonError {}
 
 impl Json {
+    /// Parse a complete JSON document.
     pub fn parse(s: &str) -> Result<Json, JsonError> {
         let mut p = Parser { b: s.as_bytes(), i: 0 };
         p.ws();
@@ -44,57 +55,68 @@ impl Json {
     }
 
     // ---- typed accessors -------------------------------------------------
+    /// Object member by key (None for non-objects).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
             _ => None,
         }
     }
+    /// Object member by key; panics when missing (manifest loading).
     pub fn req(&self, key: &str) -> &Json {
         self.get(key)
             .unwrap_or_else(|| panic!("missing json key '{key}'"))
     }
+    /// Numeric value, if a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
             _ => None,
         }
     }
+    /// Numeric value truncated to u64.
     pub fn as_u64(&self) -> Option<u64> {
         self.as_f64().map(|f| f as u64)
     }
+    /// Numeric value truncated to usize.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|f| f as usize)
     }
+    /// String value, if a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
             _ => None,
         }
     }
+    /// Boolean value, if a bool.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
             _ => None,
         }
     }
+    /// Array elements, if an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
             _ => None,
         }
     }
+    /// Object map, if an object.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Some(m),
             _ => None,
         }
     }
+    /// Array of numbers as f32 (empty for non-arrays).
     pub fn f32s(&self) -> Vec<f32> {
         self.as_arr()
             .map(|a| a.iter().filter_map(|v| v.as_f64()).map(|f| f as f32).collect())
             .unwrap_or_default()
     }
+    /// Array of numbers as usize (empty for non-arrays).
     pub fn usizes(&self) -> Vec<usize> {
         self.as_arr()
             .map(|a| a.iter().filter_map(|v| v.as_usize()).collect())
@@ -102,19 +124,24 @@ impl Json {
     }
 
     // ---- builders ----------------------------------------------------------
+    /// Build an object from key/value pairs.
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
+    /// Build a numeric array from f64s.
     pub fn arr_f64(v: &[f64]) -> Json {
         Json::Arr(v.iter().map(|x| Json::Num(*x)).collect())
     }
+    /// Build a numeric array from f32s.
     pub fn arr_f32(v: &[f32]) -> Json {
         Json::Arr(v.iter().map(|x| Json::Num(*x as f64)).collect())
     }
+    /// Build a string value.
     pub fn str(s: &str) -> Json {
         Json::Str(s.to_string())
     }
 
+    /// Serialize to compact JSON text.
     pub fn dump(&self) -> String {
         let mut out = String::new();
         self.write(&mut out);

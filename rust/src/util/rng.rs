@@ -4,6 +4,7 @@
 //! harness. Seeded streams are stable across runs so every experiment in
 //! EXPERIMENTS.md is reproducible.
 
+/// Deterministic xoshiro256** stream seeded via SplitMix64.
 #[derive(Debug, Clone)]
 pub struct Rng {
     s: [u64; 4],
@@ -20,6 +21,7 @@ fn splitmix64(state: &mut u64) -> u64 {
 }
 
 impl Rng {
+    /// Stream from a 64-bit seed.
     pub fn new(seed: u64) -> Self {
         let mut sm = seed;
         Rng {
@@ -41,6 +43,7 @@ impl Rng {
         r
     }
 
+    /// Next raw 64-bit output.
     pub fn next_u64(&mut self) -> u64 {
         let x = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
         let t = self.s[1] << 17;
@@ -64,6 +67,7 @@ impl Rng {
         (self.uniform() * n as f64) as usize % n
     }
 
+    /// Uniform in [lo, hi).
     pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
         lo + (hi - lo) * self.uniform()
     }
@@ -80,6 +84,7 @@ impl Rng {
         r * th.cos()
     }
 
+    /// n standard-normal samples as f32.
     pub fn normal_f32s(&mut self, n: usize) -> Vec<f32> {
         (0..n).map(|_| self.normal() as f32).collect()
     }
@@ -90,6 +95,7 @@ impl Rng {
         -self.uniform().max(1e-300).ln() / lambda
     }
 
+    /// Fisher–Yates shuffle in place.
     pub fn shuffle<T>(&mut self, v: &mut [T]) {
         for i in (1..v.len()).rev() {
             let j = self.below(i + 1);
@@ -97,6 +103,7 @@ impl Rng {
         }
     }
 
+    /// Uniformly random element (panics on an empty slice).
     pub fn choice<'a, T>(&mut self, v: &'a [T]) -> &'a T {
         &v[self.below(v.len())]
     }

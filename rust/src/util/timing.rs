@@ -6,23 +6,35 @@ use std::time::{Duration, Instant};
 /// Run `f` until `min_time` has elapsed (after `warmup` iterations) and
 /// report per-iteration statistics.
 pub struct Bench {
+    /// Report label.
     pub name: String,
+    /// Untimed warmup iterations.
     pub warmup: usize,
+    /// Minimum total measurement time.
     pub min_time: Duration,
+    /// Hard iteration cap.
     pub max_iters: usize,
 }
 
+/// Per-iteration timing statistics of one bench.
 #[derive(Debug, Clone)]
 pub struct BenchResult {
+    /// Report label.
     pub name: String,
+    /// Timed iterations.
     pub iters: usize,
+    /// Mean nanoseconds per iteration.
     pub mean_ns: f64,
+    /// Median nanoseconds per iteration.
     pub p50_ns: f64,
+    /// 99th-percentile nanoseconds per iteration.
     pub p99_ns: f64,
+    /// Fastest iteration.
     pub min_ns: f64,
 }
 
 impl Bench {
+    /// Bench with the default window (400 ms, 3 warmups).
     pub fn new(name: &str) -> Self {
         Bench {
             name: name.to_string(),
@@ -32,16 +44,19 @@ impl Bench {
         }
     }
 
+    /// Set the warmup iteration count.
     pub fn warmup(mut self, n: usize) -> Self {
         self.warmup = n;
         self
     }
 
+    /// Set the minimum measurement window.
     pub fn min_time_ms(mut self, ms: u64) -> Self {
         self.min_time = Duration::from_millis(ms);
         self
     }
 
+    /// Measure `f` until the window elapses; returns the statistics.
     pub fn run<F: FnMut()>(&self, mut f: F) -> BenchResult {
         for _ in 0..self.warmup {
             f();
@@ -69,6 +84,7 @@ impl Bench {
 }
 
 impl BenchResult {
+    /// One formatted report line.
     pub fn report(&self) -> String {
         format!(
             "{:<44} {:>8} iters  mean {:>12}  p50 {:>12}  p99 {:>12}",
@@ -81,6 +97,7 @@ impl BenchResult {
     }
 }
 
+/// Human-scale a nanosecond count (ns/µs/ms/s).
 pub fn fmt_ns(ns: f64) -> String {
     if ns < 1_000.0 {
         format!("{ns:.0} ns")
@@ -97,12 +114,15 @@ pub fn fmt_ns(ns: f64) -> String {
 pub struct Stopwatch(Instant);
 
 impl Stopwatch {
+    /// Start timing now.
     pub fn start() -> Self {
         Stopwatch(Instant::now())
     }
+    /// Elapsed milliseconds.
     pub fn ms(&self) -> f64 {
         self.0.elapsed().as_secs_f64() * 1e3
     }
+    /// Elapsed seconds.
     pub fn secs(&self) -> f64 {
         self.0.elapsed().as_secs_f64()
     }

@@ -16,14 +16,24 @@ use anyhow::{bail, Context, Result};
 
 use crate::tensor::Tensor;
 
+/// One stored tensor, by element type.
 #[derive(Debug, Clone)]
 pub enum Stored {
+    /// Float tensor.
     F32(Tensor),
-    I32 { shape: Vec<usize>, data: Vec<i32> },
+    /// Integer tensor.
+    I32 {
+        /// Dimension sizes.
+        shape: Vec<usize>,
+        /// Flat element storage.
+        data: Vec<i32>,
+    },
 }
 
+/// Parsed SPCA tensor file (`weights.bin` / golden traces).
 #[derive(Debug, Default)]
 pub struct TensorFile {
+    /// Stored tensors by name.
     pub tensors: BTreeMap<String, Stored>,
     /// insertion order as written by python (PARAM_NAMES order for weights)
     pub order: Vec<String>,
@@ -58,11 +68,13 @@ impl<'a> Cursor<'a> {
 }
 
 impl TensorFile {
+    /// Read and parse a tensor file from disk.
     pub fn load(path: &Path) -> Result<TensorFile> {
         let bytes = fs::read(path).with_context(|| format!("reading {}", path.display()))?;
         Self::parse(&bytes).with_context(|| format!("parsing {}", path.display()))
     }
 
+    /// Parse the SPCA binary format from memory.
     pub fn parse(bytes: &[u8]) -> Result<TensorFile> {
         let mut c = Cursor { b: bytes, i: 0 };
         if c.take(4)? != b"SPCA" {
@@ -115,6 +127,7 @@ impl TensorFile {
         Ok(out)
     }
 
+    /// Float tensor by name (errors on missing or wrong type).
     pub fn f32(&self, name: &str) -> Result<&Tensor> {
         match self.tensors.get(name) {
             Some(Stored::F32(t)) => Ok(t),
@@ -123,6 +136,7 @@ impl TensorFile {
         }
     }
 
+    /// Integer tensor data by name (errors on missing or wrong type).
     pub fn i32(&self, name: &str) -> Result<&[i32]> {
         match self.tensors.get(name) {
             Some(Stored::I32 { data, .. }) => Ok(data),

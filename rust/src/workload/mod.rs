@@ -4,7 +4,7 @@
 
 use anyhow::{bail, Result};
 
-use crate::cache::DraftKind;
+use crate::cache::{Draft, DraftRegistry};
 use crate::coordinator::policy::{ErrorMetric, Policy, SpeCaConfig};
 use crate::coordinator::state::RequestSpec;
 use crate::util::json::Json;
@@ -19,6 +19,9 @@ use crate::util::rng::Rng;
 ///   `taylorseer:N=5,O=2`
 ///   `speca:N=5,O=2,tau0=0.3,beta=0.05,layer=7,draft=taylor,metric=l2`
 /// Unspecified keys take the defaults above (`layer` defaults to depth−1).
+/// `draft=<name>` resolves through [`DraftRegistry::global`]
+/// (case-insensitive; unknown names error with the list of registered
+/// strategies).
 pub fn parse_policy(desc: &str, depth: usize) -> Result<Policy> {
     let (name, rest) = match desc.split_once(':') {
         Some((n, r)) => (n, r),
@@ -56,8 +59,7 @@ pub fn parse_policy(desc: &str, depth: usize) -> Result<Policy> {
             c.beta = get_f("beta", c.beta);
             c.verify_layer = get_u("layer", c.verify_layer);
             if let Some(d) = kv.get("draft") {
-                c.draft = DraftKind::parse(d)
-                    .ok_or_else(|| anyhow::anyhow!("unknown draft '{d}'"))?;
+                c.draft = DraftRegistry::global().resolve(d)?;
             }
             if let Some(m) = kv.get("metric") {
                 c.metric = ErrorMetric::parse(m)
@@ -71,10 +73,28 @@ pub fn parse_policy(desc: &str, depth: usize) -> Result<Policy> {
 
 /// Parse a policy from the server protocol's JSON request body.
 pub fn policy_from_json(j: &Json, depth: usize) -> Result<Policy> {
+    policy_from_json_with(j, depth, None)
+}
+
+/// [`policy_from_json`] with a server-side default draft strategy: when
+/// the request names no draft (neither a `draft` JSON field nor a
+/// `draft=` key inside the policy string) and the policy is SpeCa, the
+/// default is applied — how `speca serve --draft <name>` works.
+///
+/// Unlike the other structured overrides (which are ignored when the
+/// policy string already carries a `key=value` section), a `draft` JSON
+/// field is honored for *any* policy string without a `draft=` key, so
+/// `{"policy":"speca:N=5","draft":"reuse"}` runs the reuse draft rather
+/// than silently dropping the field.
+pub fn policy_from_json_with(
+    j: &Json,
+    depth: usize,
+    default_draft: Option<&Draft>,
+) -> Result<Policy> {
     let desc = j.get("policy").and_then(|p| p.as_str()).unwrap_or("speca");
     // allow structured overrides: {"policy":"speca","tau0":0.5,...}
     let mut s = desc.to_string();
-    let keys = ["N", "O", "keep", "l", "R", "tau0", "beta", "layer", "draft", "metric"];
+    let keys = ["N", "O", "keep", "l", "R", "tau0", "beta", "layer", "metric"];
     let mut parts = Vec::new();
     for k in keys {
         if let Some(v) = j.get(k) {
@@ -89,7 +109,34 @@ pub fn policy_from_json(j: &Json, depth: usize) -> Result<Policy> {
     if !parts.is_empty() && !s.contains(':') {
         s = format!("{s}:{}", parts.join(","));
     }
-    parse_policy(&s, depth)
+    let mut policy = parse_policy(&s, depth)?;
+    // a `draft=` key inside the policy string wins; otherwise the JSON
+    // field, otherwise the server default
+    if !desc.contains("draft=") {
+        match j.get("draft") {
+            Some(v) => {
+                let Some(name) = v.as_str() else {
+                    bail!("request 'draft' field must be a strategy name string");
+                };
+                apply_draft(&mut policy, &DraftRegistry::global().resolve(name)?);
+            }
+            None => {
+                if let Some(d) = default_draft {
+                    apply_draft(&mut policy, d);
+                }
+            }
+        }
+    }
+    Ok(policy)
+}
+
+/// Override the draft strategy of a SpeCa policy in place (no-op for
+/// policies without a pluggable draft). Shared by `--draft` handling on
+/// generate, serve and the bench runners.
+pub fn apply_draft(policy: &mut Policy, draft: &Draft) {
+    if let Policy::SpeCa(c) = policy {
+        c.draft = draft.clone();
+    }
 }
 
 /// Closed-loop batch: n requests, conditions round-robin over num_classes,
@@ -159,7 +206,58 @@ mod tests {
     #[test]
     fn rejects_unknown() {
         assert!(parse_policy("warp-drive", 8).is_err());
-        assert!(parse_policy("speca:draft=magic", 8).is_err());
+        let err = parse_policy("speca:draft=magic", 8).unwrap_err().to_string();
+        // the registry error names every valid strategy
+        for name in DraftRegistry::global().names() {
+            assert!(err.contains(name), "'{name}' missing from: {err}");
+        }
+        assert!(parse_policy("speca:metric=magic", 8).is_err());
+    }
+
+    #[test]
+    fn draft_names_resolve_case_insensitively() {
+        for (desc, expect) in [
+            ("speca:draft=Taylor", "taylor"),
+            ("speca:draft=ADAMS", "adams-bashforth"),
+            ("speca:draft=richardson", "richardson"),
+            ("speca:draft=Learned-Linear", "learned-linear"),
+            ("speca:draft=specdiff", "learned-linear"),
+        ] {
+            let p = parse_policy(desc, 8).unwrap_or_else(|e| panic!("{desc}: {e}"));
+            assert_eq!(p.draft_name(), expect, "{desc}");
+        }
+    }
+
+    #[test]
+    fn server_default_draft_applies_only_when_unspecified() {
+        let default = Draft::named("richardson").unwrap();
+        let j = Json::parse(r#"{"policy":"speca","tau0":0.9}"#).unwrap();
+        let p = policy_from_json_with(&j, 8, Some(&default)).unwrap();
+        assert_eq!(p.draft_name(), "richardson");
+        // explicit JSON field wins over the server default
+        let j = Json::parse(r#"{"policy":"speca","draft":"reuse"}"#).unwrap();
+        let p = policy_from_json_with(&j, 8, Some(&default)).unwrap();
+        assert_eq!(p.draft_name(), "reuse");
+        // explicit key inside the policy string wins too
+        let j = Json::parse(r#"{"policy":"speca:N=5,draft=taylor"}"#).unwrap();
+        let p = policy_from_json_with(&j, 8, Some(&default)).unwrap();
+        assert_eq!(p.draft_name(), "taylor");
+        // a JSON draft field applies even to a compound policy string
+        // (where the other structured overrides are ignored) — and it
+        // beats the server default
+        let j = Json::parse(r#"{"policy":"speca:N=5","draft":"reuse"}"#).unwrap();
+        let p = policy_from_json_with(&j, 8, Some(&default)).unwrap();
+        assert_eq!(p.draft_name(), "reuse");
+        // malformed / unknown JSON draft fields error instead of silently
+        // falling back
+        let j = Json::parse(r#"{"policy":"speca","draft":7}"#).unwrap();
+        assert!(policy_from_json_with(&j, 8, Some(&default)).is_err());
+        let j = Json::parse(r#"{"policy":"speca","draft":"magic"}"#).unwrap();
+        assert!(policy_from_json_with(&j, 8, None).is_err());
+        // non-draft policies are untouched
+        let j = Json::parse(r#"{"policy":"fora"}"#).unwrap();
+        let p = policy_from_json_with(&j, 8, Some(&default)).unwrap();
+        assert_eq!(p.draft_name(), "-");
     }
 
     #[test]

@@ -1,0 +1,181 @@
+//! Parity suite for the draft-strategy refactor (ISSUE 3 acceptance):
+//! the trait-based `reuse` / `adams-bashforth` / `taylor` strategies must
+//! be **bitwise identical** to the legacy [`DraftKind`] enum paths — per
+//! prediction over fuzzed histories, and end-to-end through the engine
+//! (latents + verify traces) — and the two new strategies must be
+//! registered and behave per their documented math (DESIGN.md §10).
+
+use speca::cache::{Draft, DraftKind, DraftRegistry, TapCache};
+use speca::config::ModelConfig;
+use speca::coordinator::policy::{Policy, SpeCaConfig};
+use speca::coordinator::state::Completion;
+use speca::coordinator::{Engine, EngineConfig};
+use speca::runtime::{ModelBackend, NativeBackend};
+use speca::util::prop::prop_check;
+use speca::util::rng::Rng;
+use speca::workload::{batch_requests, parse_policy};
+
+/// Enum ↔ trait bitwise parity over fuzzed cache histories: every order,
+/// warmup depth and horizon must produce the exact same f32 outputs.
+#[test]
+fn strategy_outputs_match_enum_paths_bitwise() {
+    let pairs = [
+        (DraftKind::Reuse, "reuse"),
+        (DraftKind::AdamsBashforth, "adams-bashforth"),
+        (DraftKind::Taylor, "taylor"),
+    ];
+    prop_check(200, 0xD2AF7, |rng| {
+        let order = rng.below(4);
+        let feat = 1 + rng.below(16);
+        let interval = 1 + rng.below(8);
+        let refreshes = 1 + rng.below(6);
+        let mut cache = TapCache::new(order, feat, interval);
+        for _ in 0..refreshes {
+            cache.refresh(&rng.normal_f32s(feat));
+        }
+        let k = rng.range_f64(0.0, 2.0 * interval as f64) as f32;
+        for (kind, name) in pairs {
+            let strategy = Draft::named(name).map_err(|e| e.to_string())?;
+            let mut via_enum = vec![0.0f32; feat];
+            let mut via_trait = vec![0.0f32; feat];
+            cache.predict_into(k, kind, &mut via_enum);
+            cache.predict_with(&*strategy, k, &mut via_trait);
+            if via_enum != via_trait {
+                return Err(format!(
+                    "{name}: order={order} refreshes={refreshes} k={k}: {via_enum:?} != {via_trait:?}"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+fn run_engine(model: &NativeBackend, policy: &Policy, n: usize) -> Vec<Completion> {
+    let mut engine = Engine::from_ref(model, EngineConfig::default());
+    for r in batch_requests(n, 4, policy, 7, false) {
+        engine.submit(r);
+    }
+    let mut done = engine.run_to_completion().unwrap();
+    done.sort_by_key(|c| c.id);
+    done
+}
+
+fn assert_runs_identical(a: &[Completion], b: &[Completion]) {
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.id, y.id);
+        assert_eq!(x.latent, y.latent, "latents diverged for request {}", x.id);
+        assert_eq!(
+            x.stats.verify_trace,
+            y.stats.verify_trace,
+            "verify traces diverged for request {}",
+            x.id
+        );
+        assert_eq!(x.stats.full_steps, y.stats.full_steps);
+        assert_eq!(x.stats.rejects, y.stats.rejects);
+        assert_eq!(x.stats.flops.total(), y.stats.flops.total());
+    }
+}
+
+/// End-to-end parity: an engine run whose SpeCa policy resolves each
+/// legacy draft through the registry is bitwise identical (latents,
+/// verify traces, step/FLOPs accounting) to one whose config is built
+/// with the same strategy directly — and the registry default (`taylor`)
+/// matches a policy that names no draft at all.
+#[test]
+fn engine_runs_are_identical_across_resolution_paths() {
+    let model = NativeBackend::seeded(ModelConfig::native_test(), 0xBEEF);
+    let depth = model.entry().config.depth;
+    for name in ["reuse", "adams-bashforth", "taylor"] {
+        let by_name =
+            parse_policy(&format!("speca:N=4,O=2,tau0=0.2,beta=0.3,draft={name}"), depth)
+                .unwrap();
+        let mut cfg = SpeCaConfig::default_for_depth(depth);
+        cfg.interval = 4;
+        cfg.order = 2;
+        cfg.tau0 = 0.2;
+        cfg.beta = 0.3;
+        cfg.draft = DraftRegistry::global().resolve(name).unwrap();
+        let direct = Policy::SpeCa(cfg);
+        assert_runs_identical(&run_engine(&model, &by_name, 3), &run_engine(&model, &direct, 3));
+    }
+    let implicit = parse_policy("speca:N=4,O=2,tau0=0.2,beta=0.3", depth).unwrap();
+    let explicit = parse_policy("speca:N=4,O=2,tau0=0.2,beta=0.3,draft=taylor", depth).unwrap();
+    assert_runs_identical(&run_engine(&model, &implicit, 3), &run_engine(&model, &explicit, 3));
+}
+
+/// The two new strategies run end-to-end through the engine, label their
+/// completions, and actually change what is predicted (they are not
+/// aliases of the existing drafts).
+#[test]
+fn new_strategies_serve_and_differ() {
+    let model = NativeBackend::seeded(ModelConfig::native_test(), 0xBEEF);
+    let depth = model.entry().config.depth;
+    let point = "speca:N=4,O=2,tau0=0.2,beta=0.3";
+    let mut by_draft = Vec::new();
+    for name in ["taylor", "richardson", "learned-linear"] {
+        let policy = parse_policy(&format!("{point},draft={name}"), depth).unwrap();
+        let done = run_engine(&model, &policy, 2);
+        assert_eq!(done.len(), 2);
+        for c in &done {
+            assert_eq!(c.draft_name, name, "completion must carry the strategy name");
+            assert!(!c.stats.verify_trace.is_empty(), "{name}: nothing was verified");
+        }
+        by_draft.push((name, done));
+    }
+    // distinct drafts ⇒ distinct verify-error sequences (same seeds, same
+    // schedule — only the predictor changed)
+    let trace_of = |i: usize| {
+        by_draft[i].1[0].stats.verify_trace.iter().map(|(_, e, _)| *e).collect::<Vec<f64>>()
+    };
+    assert_ne!(trace_of(0), trace_of(1), "richardson must not equal taylor");
+    assert_ne!(trace_of(0), trace_of(2), "learned-linear must not equal taylor");
+    assert_ne!(trace_of(1), trace_of(2), "richardson must not equal learned-linear");
+}
+
+/// Fuzzed determinism of the new strategies: identical histories produce
+/// identical outputs (no hidden per-call state), and `reset()` does not
+/// perturb subsequent predictions.
+#[test]
+fn new_strategies_are_deterministic_and_reset_safe() {
+    prop_check(100, 0x5EED5, |rng| {
+        let feat = 1 + rng.below(12);
+        let mut cache = TapCache::new(3, feat, 5);
+        for _ in 0..(1 + rng.below(5)) {
+            cache.refresh(&rng.normal_f32s(feat));
+        }
+        let k = rng.range_f64(0.5, 8.0) as f32;
+        for name in ["richardson", "learned-linear"] {
+            let d = Draft::named(name).map_err(|e| e.to_string())?;
+            let mut a = vec![0.0f32; feat];
+            let mut b = vec![0.0f32; feat];
+            cache.predict_with(&*d, k, &mut a);
+            d.reset();
+            cache.predict_with(&*d, k, &mut b);
+            if a != b {
+                return Err(format!("{name}: reset() changed a stateless prediction"));
+            }
+            if !a.iter().all(|v| v.is_finite()) {
+                return Err(format!("{name}: non-finite prediction"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Warmup degradation contract: with a single refresh every registered
+/// strategy predicts exactly the cached feature (reuse).
+#[test]
+fn all_strategies_degrade_to_reuse_during_warmup() {
+    let mut rng = Rng::new(3);
+    let feat = 6;
+    let first = rng.normal_f32s(feat);
+    let mut cache = TapCache::new(3, feat, 5);
+    cache.refresh(&first);
+    for name in DraftRegistry::global().names() {
+        let d = DraftRegistry::global().resolve(name).unwrap();
+        let mut out = vec![0.0f32; feat];
+        cache.predict_with(&*d, 3.0, &mut out);
+        assert_eq!(out, first, "{name} must reuse with one refresh observed");
+    }
+}
