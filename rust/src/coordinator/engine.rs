@@ -18,6 +18,13 @@
 //! verify layer), not by policy — this is what enables the paper's
 //! sample-adaptive computation allocation to emerge per request.
 //!
+//! Requests carry job-lifecycle metadata (`coordinator::job`): admission
+//! pops the highest priority class first (FIFO within a class), and a
+//! step-boundary sweep at the top of every tick drops requests whose
+//! cancel token fired (freeing their slot mid-flight) or whose deadline
+//! expired while still queued — reported via [`Engine::drain_terminations`]
+//! so the serving layer can notify waiters.
+//!
 //! The engine owns an `Arc<dyn ModelBackend>` (DESIGN.md §3), so the same
 //! scheduling loop drives the native CPU backend, PJRT artifacts, and
 //! whatever backends later PRs add — and N engines can share one
@@ -30,12 +37,14 @@
 
 use std::collections::VecDeque;
 use std::sync::Arc;
+use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::cache::draft::{self, DraftStrategy};
 use crate::config::{Schedule, ScheduleKind};
 use crate::coordinator::batcher::{gather_rows_into, pad_rows, plan_chunks, BatchStrategy, Chunk};
+use crate::coordinator::job::{JobProgress, Priority, Termination, TerminationCause};
 use crate::coordinator::policy::{Plan, Policy};
 use crate::coordinator::state::{Completion, ReqState, RequestSpec};
 use crate::math::{rel_l1, timestep_embedding};
@@ -84,9 +93,17 @@ pub struct Engine<'a> {
     model: Arc<dyn ModelBackend + 'a>,
     flops_model: FlopsModel,
     cfg: EngineConfig,
-    queue: VecDeque<RequestSpec>,
+    /// admission queues, one FIFO per priority class (admit pops the
+    /// highest non-empty class — see `pop_next`)
+    queues: [VecDeque<RequestSpec>; Priority::LEVELS],
     active: Vec<ReqState>,
     completions: Vec<Completion>,
+    /// requests dropped at a step boundary (cancel / queued-deadline)
+    terminations: Vec<Termination>,
+    /// set once any submitted request could actually cancel or expire;
+    /// until then the per-tick lifecycle sweep is skipped, so
+    /// fire-and-forget batch runs pay nothing for it
+    lifecycle_sensitive: bool,
     /// aggregate FLOPs of everything completed so far
     pub flops: FlopsCounter,
     /// ticks executed since construction
@@ -104,9 +121,11 @@ impl<'a> Engine<'a> {
             model,
             flops_model,
             cfg,
-            queue: VecDeque::new(),
+            queues: std::array::from_fn(|_| VecDeque::new()),
             active: Vec::new(),
             completions: Vec::new(),
+            terminations: Vec::new(),
+            lifecycle_sensitive: false,
             flops: FlopsCounter::default(),
             ticks: 0,
             temb_dim: 64,
@@ -125,14 +144,21 @@ impl<'a> Engine<'a> {
         &*self.model
     }
 
-    /// Enqueue a request (admitted on a later tick when a slot frees up).
+    /// Enqueue a request into its priority class (admitted on a later
+    /// tick when a slot frees up; higher classes admit first).
     pub fn submit(&mut self, spec: RequestSpec) {
-        self.queue.push_back(spec);
+        // a deadline can expire on its own; a cancel token can only
+        // fire if some other handle shares it — otherwise this request
+        // never needs the per-tick lifecycle sweep
+        if spec.meta.deadline.is_some() || spec.meta.cancel.is_shared() {
+            self.lifecycle_sensitive = true;
+        }
+        self.queues[spec.meta.priority.index()].push_back(spec);
     }
 
     /// Requests queued or in flight.
     pub fn pending(&self) -> usize {
-        self.queue.len() + self.active.len()
+        self.queues.iter().map(|q| q.len()).sum::<usize>() + self.active.len()
     }
 
     /// Take everything completed since the last drain.
@@ -140,19 +166,88 @@ impl<'a> Engine<'a> {
         std::mem::take(&mut self.completions)
     }
 
+    /// Take every request dropped at a step boundary since the last
+    /// drain (fired cancel tokens, deadlines that expired while
+    /// queued). Shard workers turn these into lifecycle events and
+    /// release load accounting.
+    pub fn drain_terminations(&mut self) -> Vec<Termination> {
+        std::mem::take(&mut self.terminations)
+    }
+
+    /// Progress snapshot of every in-flight request (step, accepted
+    /// speculations, rejections) — the source of
+    /// [`JobEvent::Progress`](crate::coordinator::job::JobEvent) events.
+    /// Lazy: callers that throttle emission pay nothing for the
+    /// snapshots they skip.
+    pub fn progress(&self) -> impl Iterator<Item = JobProgress> + '_ {
+        self.active.iter().map(|st| JobProgress {
+            id: st.spec.id,
+            step: st.step,
+            accepts: st.stats.spec_steps,
+            rejects: st.stats.rejects,
+        })
+    }
+
     /// Drop every queued and active request, returning their ids. Shard
     /// workers use this on exit paths that abandon work (backend error,
     /// halt) so the pool can release load accounting and notify waiters.
     pub fn abandon(&mut self) -> Vec<u64> {
         let ids = self
-            .queue
+            .queues
             .iter()
-            .map(|s| s.id)
+            .flat_map(|q| q.iter().map(|s| s.id))
             .chain(self.active.iter().map(|r| r.spec.id))
             .collect();
-        self.queue.clear();
+        for q in &mut self.queues {
+            q.clear();
+        }
         self.active.clear();
         ids
+    }
+
+    /// Pop the next request to admit: highest priority class first,
+    /// FIFO within a class.
+    fn pop_next(&mut self) -> Option<RequestSpec> {
+        self.queues.iter_mut().rev().find_map(|q| q.pop_front())
+    }
+
+    /// Step-boundary lifecycle sweep: drop queued/active requests whose
+    /// cancel token fired, and queued requests whose deadline passed
+    /// (deadline-aware admission — doomed work never occupies a slot).
+    /// Runs at the top of every tick, i.e. right after the previous
+    /// step's verification, so a cancelled job frees its slot mid-flight
+    /// without waiting for its remaining steps.
+    fn reap(&mut self) {
+        if !self.lifecycle_sensitive {
+            return;
+        }
+        let now = Instant::now();
+        let Engine { queues, active, terminations, .. } = self;
+        for q in queues {
+            // in-place retain keeps FIFO order without rotating every
+            // queued spec through the deque on every tick
+            q.retain(|spec| {
+                let cause = if spec.meta.cancel.is_cancelled() {
+                    TerminationCause::Cancelled
+                } else if spec.meta.expired(now) {
+                    TerminationCause::DeadlineExpired
+                } else {
+                    return true;
+                };
+                terminations.push(Termination { id: spec.id, cause });
+                false
+            });
+        }
+        let mut i = 0;
+        while i < active.len() {
+            if active[i].spec.meta.cancel.is_cancelled() {
+                let st = active.swap_remove(i);
+                let cause = TerminationCause::Cancelled;
+                terminations.push(Termination { id: st.spec.id, cause });
+            } else {
+                i += 1;
+            }
+        }
     }
 
     /// Run until queue and active set are empty; returns completions.
@@ -168,7 +263,7 @@ impl<'a> Engine<'a> {
     fn admit(&mut self, model: &dyn ModelBackend) {
         let cfg = &model.entry().config;
         while self.active.len() < self.cfg.max_inflight {
-            let Some(spec) = self.queue.pop_front() else { break };
+            let Some(spec) = self.pop_next() else { break };
             let mut rng = Rng::new(spec.seed);
             let x = rng.normal_f32s(cfg.latent_dim);
             let st = ReqState::new(spec, x, cfg.depth, cfg.tokens * cfg.dim);
@@ -179,6 +274,9 @@ impl<'a> Engine<'a> {
     /// Advance every in-flight request one serve step. Returns false when
     /// fully idle.
     pub fn tick(&mut self) -> Result<bool> {
+        // lifecycle sweep first: cancelled/expired requests must not
+        // occupy a slot or be admitted this tick
+        self.reap();
         // one refcount bump per tick; helpers borrow this local so the
         // hot path adds no per-dispatch atomic traffic
         let model = Arc::clone(&self.model);

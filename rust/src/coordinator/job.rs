@@ -1,0 +1,1122 @@
+//! First-class job lifecycle for the serving stack (DESIGN.md §8).
+//!
+//! SpeCa's sample-adaptive computation makes per-request cost
+//! unpredictable *by design* — two requests with identical shapes can
+//! differ by the whole accept/reject trajectory. A blocking
+//! request/reply channel is the wrong surface for that: callers need to
+//! submit, observe, shed and abandon work. This module is that surface:
+//!
+//! * [`JobManager`] — the submission front door over an
+//!   [`EngineShardPool`]: assigns [`JobId`]s, applies the admission
+//!   rules (queue cap, deadline feasibility), tracks every job in a
+//!   shared [`JobTable`], and turns the pool's merged [`JobEvent`]
+//!   stream into per-job status transitions.
+//! * [`JobHandle`] — what a submitter holds: `poll` (non-blocking
+//!   status snapshot), `wait` (block until terminal), `cancel` (fire
+//!   the job's [`CancelToken`]; the engine observes it at the next step
+//!   boundary and frees the shard slot mid-flight).
+//! * [`JobEvent`] — the pool's event stream, subsuming the old
+//!   completion-or-abort pair with the full lifecycle: `Admitted`,
+//!   `Progress`, `Completed`, `Rejected`, `Cancelled`, `Aborted`.
+//!
+//! The state machine (every job ends in exactly one terminal state):
+//!
+//! ```text
+//! Queued ──► Admitted{shard} ──► Running{step,accepts,rejects} ──► Completed
+//!   │not admitted: queue full /        │ cancel token observed at a
+//!   │deadline infeasible / expired     │ step boundary, or shard death
+//!   ▼                                  ▼
+//! Rejected{reason}                 Cancelled / Aborted{error}
+//! ```
+//!
+//! Admission sheds load *before* queueing doomed work: a submit against
+//! a full queue or with a deadline the current service-time estimate
+//! says cannot be met terminates immediately as
+//! [`JobStatus::Rejected`], and a queued job whose deadline passes
+//! before a shard picks it up is rejected with
+//! [`RejectReason::DeadlineExpired`] instead of burning a slot.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::Receiver;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::cache::Draft;
+use crate::coordinator::policy::Policy;
+use crate::coordinator::pool::{EngineShardPool, PoolConfig, ShardRouter, ShardStats};
+use crate::coordinator::state::{Completion, RequestSpec};
+use crate::runtime::ModelBackend;
+
+/// Identifier of one submitted job (unique within one manager/server).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct JobId(pub u64);
+
+impl fmt::Display for JobId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "job-{}", self.0)
+    }
+}
+
+/// Scheduling class of a job. Shard queues admit strictly by priority
+/// (FIFO within a class), so a `High` job overtakes every queued
+/// `Normal`/`Low` job but never preempts work already in flight.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub enum Priority {
+    /// Admitted only when no normal/high work is queued.
+    Low,
+    /// The default class.
+    #[default]
+    Normal,
+    /// Overtakes queued normal/low jobs at admission time.
+    High,
+}
+
+impl Priority {
+    /// Number of priority classes (sizes the engine's queue array).
+    pub const LEVELS: usize = 3;
+
+    /// Queue index of this class (ascending urgency).
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    /// Parse `low` / `normal` / `high` (case-insensitive).
+    pub fn parse(s: &str) -> Option<Priority> {
+        match s.to_ascii_lowercase().as_str() {
+            "low" => Some(Priority::Low),
+            "normal" => Some(Priority::Normal),
+            "high" => Some(Priority::High),
+            _ => None,
+        }
+    }
+
+    /// Wire/report label.
+    pub fn label(self) -> &'static str {
+        match self {
+            Priority::Low => "low",
+            Priority::Normal => "normal",
+            Priority::High => "high",
+        }
+    }
+}
+
+/// Shared cancellation flag. Cloning shares the flag (an `Arc` bump), so
+/// a handle, the wire layer and the in-flight request state all observe
+/// one cancel. The engine checks it at every step boundary — a
+/// cancelled job frees its shard slot mid-flight instead of running its
+/// remaining steps to completion.
+#[derive(Debug, Clone, Default)]
+pub struct CancelToken(Arc<AtomicBool>);
+
+impl CancelToken {
+    /// A fresh, un-cancelled token.
+    pub fn new() -> CancelToken {
+        CancelToken::default()
+    }
+
+    /// Fire the token. Idempotent; never blocks.
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::SeqCst);
+    }
+
+    /// Whether the token has been fired.
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::SeqCst)
+    }
+
+    /// Whether any other handle shares this token (someone who could
+    /// still fire it). A token nobody else holds can never be
+    /// cancelled, which lets the engine skip its lifecycle sweep for
+    /// fire-and-forget work.
+    pub fn is_shared(&self) -> bool {
+        Arc::strong_count(&self.0) > 1
+    }
+}
+
+/// Job-lifecycle metadata carried by every [`RequestSpec`] into the
+/// engine: the scheduling class, the absolute deadline (if any) and the
+/// shared cancellation token. `Default` is a normal-priority,
+/// deadline-less, un-cancelled job — exactly the old fire-and-forget
+/// request semantics.
+#[derive(Debug, Clone, Default)]
+pub struct JobMeta {
+    /// Scheduling class (shard queues admit by priority).
+    pub priority: Priority,
+    /// Absolute deadline; a job still queued past it is rejected.
+    pub deadline: Option<Instant>,
+    /// Cancellation flag, checked at every step boundary.
+    pub cancel: CancelToken,
+}
+
+impl JobMeta {
+    /// Whether the deadline (if any) has passed at `now`.
+    pub fn expired(&self, now: Instant) -> bool {
+        self.deadline.map(|d| now >= d).unwrap_or(false)
+    }
+}
+
+/// Per-submission options for [`JobManager::submit`].
+#[derive(Debug, Clone, Default)]
+pub struct SubmitOptions {
+    /// Scheduling class (default [`Priority::Normal`]).
+    pub priority: Priority,
+    /// Relative deadline in milliseconds from submission. Admission
+    /// rejects a deadline the service-time estimate says cannot be met;
+    /// a queued job whose deadline passes is rejected before admission.
+    pub deadline_ms: Option<u64>,
+    /// Cancellation token to share (e.g. one token over a job group);
+    /// `None` mints a fresh token, reachable via [`JobHandle::cancel`].
+    pub cancel: Option<CancelToken>,
+    /// Draft-strategy override for SpeCa policies (the same override
+    /// surface as the wire `draft` field).
+    pub draft: Option<Draft>,
+    /// Keep the final latent in the job record so `poll`/`wait` can
+    /// return it (the wire `return_latent` field).
+    pub return_latent: bool,
+}
+
+/// Why a job was rejected instead of queued or served.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RejectReason {
+    /// The manager-wide live-job cap (`max_queue`) was reached.
+    QueueFull,
+    /// The requested deadline is shorter than the current backlog-scaled
+    /// service-time estimate — queueing it would be doomed work.
+    DeadlineInfeasible,
+    /// The deadline passed while the job was still queued on its shard.
+    DeadlineExpired,
+}
+
+impl fmt::Display for RejectReason {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            // exactly the v1 wire string, so the compat shim's error
+            // reply is byte-identical to the old queue-full reply
+            RejectReason::QueueFull => write!(f, "queue full"),
+            RejectReason::DeadlineInfeasible => {
+                write!(f, "deadline infeasible under current load")
+            }
+            RejectReason::DeadlineExpired => {
+                write!(f, "deadline expired before admission")
+            }
+        }
+    }
+}
+
+/// Why the engine dropped a request at a step boundary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TerminationCause {
+    /// The request's [`CancelToken`] fired.
+    Cancelled,
+    /// The request was still queued when its deadline passed.
+    DeadlineExpired,
+}
+
+/// One request dropped by the engine (cancellation or deadline expiry),
+/// reported through [`Engine::drain_terminations`](crate::coordinator::Engine::drain_terminations)
+/// so the shard worker can release load accounting and notify waiters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Termination {
+    /// Id of the dropped request.
+    pub id: u64,
+    /// Why it was dropped.
+    pub cause: TerminationCause,
+}
+
+/// Progress snapshot of one in-flight request (engine → shard worker →
+/// [`JobEvent::Progress`]).
+#[derive(Debug, Clone, Copy)]
+pub struct JobProgress {
+    /// Request id.
+    pub id: u64,
+    /// Next serve step to execute.
+    pub step: usize,
+    /// Speculative steps accepted so far.
+    pub accepts: usize,
+    /// Verifications that failed so far.
+    pub rejects: usize,
+}
+
+/// The shard pool's merged event stream: every lifecycle transition of
+/// every job, in per-shard order (cross-shard order is nondeterministic;
+/// every event carries its job id).
+#[derive(Debug, Clone)]
+pub enum JobEvent {
+    /// The job landed on a shard's queue.
+    Admitted {
+        /// Job id.
+        id: u64,
+        /// Index of the shard that ingested it.
+        shard: usize,
+    },
+    /// Periodic progress of an in-flight job (shard workers throttle
+    /// emission to every few steps — `poll` freshness, not a tick log).
+    Progress(JobProgress),
+    /// The job finished normally. Boxed: completions dwarf the other
+    /// variants (latent + stats + trace), and boxing keeps channel
+    /// sends and matches a pointer move.
+    Completed(Box<Completion>),
+    /// The job was shed without running (admission or queued-deadline).
+    Rejected {
+        /// Job id.
+        id: u64,
+        /// Structured reason (also the wire error string).
+        reason: RejectReason,
+    },
+    /// The job's cancel token fired and the engine dropped it at a step
+    /// boundary, freeing its shard slot.
+    Cancelled {
+        /// Job id.
+        id: u64,
+    },
+    /// The job was abandoned by a dying/halting shard.
+    Aborted {
+        /// Job id.
+        id: u64,
+        /// Why the shard abandoned it.
+        error: String,
+    },
+}
+
+/// Where a job currently is in its lifecycle. `Completed`, `Rejected`,
+/// `Cancelled` and `Aborted` are terminal: once reached, the status
+/// never changes again.
+#[derive(Debug, Clone)]
+pub enum JobStatus {
+    /// Accepted by the manager, not yet on a shard.
+    Queued,
+    /// On a shard's queue / active set.
+    Admitted {
+        /// Index of the shard serving it.
+        shard: usize,
+    },
+    /// In flight: the engine is advancing it step by step.
+    Running {
+        /// Next serve step to execute.
+        step: usize,
+        /// Speculative steps accepted so far.
+        accepts: usize,
+        /// Verifications that failed so far.
+        rejects: usize,
+    },
+    /// Finished; carries the full completion (latent, stats, trace).
+    /// `Arc`'d so polling a finished job clones a refcount, not the
+    /// latent tensor.
+    Completed(Arc<Completion>),
+    /// Shed by admission control or queued-deadline expiry.
+    Rejected {
+        /// Structured reason.
+        reason: RejectReason,
+    },
+    /// Dropped at a step boundary after its cancel token fired.
+    Cancelled,
+    /// Abandoned by a dying/halting shard (or unroutable).
+    Aborted {
+        /// What went wrong.
+        error: String,
+    },
+}
+
+impl JobStatus {
+    /// Whether this status is final.
+    pub fn is_terminal(&self) -> bool {
+        matches!(
+            self,
+            JobStatus::Completed(_)
+                | JobStatus::Rejected { .. }
+                | JobStatus::Cancelled
+                | JobStatus::Aborted { .. }
+        )
+    }
+
+    /// Wire/report label (`queued` … `aborted`).
+    pub fn label(&self) -> &'static str {
+        match self {
+            JobStatus::Queued => "queued",
+            JobStatus::Admitted { .. } => "admitted",
+            JobStatus::Running { .. } => "running",
+            JobStatus::Completed(_) => "completed",
+            JobStatus::Rejected { .. } => "rejected",
+            JobStatus::Cancelled => "cancelled",
+            JobStatus::Aborted { .. } => "aborted",
+        }
+    }
+}
+
+/// Monotonic job counters (snapshot via [`JobManager::counts`]). The
+/// lifecycle invariant every shutdown path preserves:
+/// `completed + rejected + cancelled + aborted == submitted` once the
+/// pool has drained — no job is ever silently lost.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct JobCounts {
+    /// Jobs handed to [`JobManager::submit`].
+    pub submitted: u64,
+    /// Jobs that finished normally.
+    pub completed: u64,
+    /// Jobs shed by admission or queued-deadline expiry.
+    pub rejected: u64,
+    /// Jobs dropped after their cancel token fired.
+    pub cancelled: u64,
+    /// Jobs abandoned by dead/halted shards.
+    pub aborted: u64,
+}
+
+impl JobCounts {
+    /// Jobs that reached a terminal state.
+    pub fn terminal(&self) -> u64 {
+        self.completed + self.rejected + self.cancelled + self.aborted
+    }
+}
+
+#[derive(Default)]
+struct Counters {
+    submitted: AtomicU64,
+    completed: AtomicU64,
+    rejected: AtomicU64,
+    cancelled: AtomicU64,
+    aborted: AtomicU64,
+}
+
+impl Counters {
+    fn snapshot(&self) -> JobCounts {
+        JobCounts {
+            submitted: self.submitted.load(Ordering::SeqCst),
+            completed: self.completed.load(Ordering::SeqCst),
+            rejected: self.rejected.load(Ordering::SeqCst),
+            cancelled: self.cancelled.load(Ordering::SeqCst),
+            aborted: self.aborted.load(Ordering::SeqCst),
+        }
+    }
+
+    /// Bump the counter matching a terminal status. Called while the
+    /// job-table lock is held, so a waiter woken by the transition can
+    /// never observe a stale counter (reply-then-stats reads line up).
+    fn bump_terminal(&self, status: &JobStatus) {
+        let counter = match status {
+            JobStatus::Completed(_) => &self.completed,
+            JobStatus::Rejected { .. } => &self.rejected,
+            JobStatus::Cancelled => &self.cancelled,
+            JobStatus::Aborted { .. } => &self.aborted,
+            _ => return,
+        };
+        counter.fetch_add(1, Ordering::SeqCst);
+    }
+}
+
+struct JobEntry {
+    status: JobStatus,
+    return_latent: bool,
+    cancel: CancelToken,
+    /// waiters currently parked on this record; eviction never removes
+    /// a record a blocked `wait` still needs
+    waiters: usize,
+}
+
+struct TableInner {
+    jobs: HashMap<u64, JobEntry>,
+    /// jobs in a non-terminal state (the `max_queue` admission gauge).
+    /// Every record is either live or terminal, so the retained
+    /// terminal count is always `jobs.len() - live` — derived, never
+    /// hand-synchronized.
+    live: usize,
+    /// retained terminal record ids, oldest first (eviction order; may
+    /// hold stale ids for records a consuming wait already removed)
+    terminal_order: std::collections::VecDeque<u64>,
+}
+
+impl TableInner {
+    /// Terminal records still retained (not yet consumed/forgotten).
+    fn retained_terminal(&self) -> usize {
+        self.jobs.len() - self.live
+    }
+}
+
+/// Shared registry of every job the manager has seen: status snapshots
+/// for `poll`, a condvar for `wait`, cancel-token lookup for `cancel`.
+/// Completed/failed records stay until a consuming wait removes them
+/// (the v1 shim and the open-loop client always consume), so repeated
+/// polls of a finished job are idempotent — but at most `terminal_cap`
+/// terminal records are retained: beyond that the *oldest* unconsumed
+/// terminal record is evicted (a later poll/wait of it reports an
+/// unknown job). Together with the live-job cap this bounds table
+/// memory even against clients that submit and never collect.
+pub struct JobTable {
+    inner: Mutex<TableInner>,
+    cv: Condvar,
+    terminal_cap: usize,
+}
+
+impl Default for JobTable {
+    fn default() -> Self {
+        JobTable::new(1024)
+    }
+}
+
+impl JobTable {
+    /// Empty table retaining at most `terminal_cap` uncollected
+    /// terminal records (clamped to ≥ 1).
+    pub fn new(terminal_cap: usize) -> JobTable {
+        JobTable {
+            inner: Mutex::new(TableInner {
+                jobs: HashMap::new(),
+                live: 0,
+                terminal_order: std::collections::VecDeque::new(),
+            }),
+            cv: Condvar::new(),
+            terminal_cap: terminal_cap.max(1),
+        }
+    }
+
+    /// Record that `id` just became a retained terminal record, then
+    /// evict oldest-first down to the cap. Records a blocked `wait` is
+    /// parked on are kept (re-queued for later eviction), so the cap
+    /// can be exceeded transiently by at most the number of parked
+    /// waiters — bounded by connection threads. Caller holds the lock.
+    fn note_terminal(&self, g: &mut TableInner, id: u64) {
+        g.terminal_order.push_back(id);
+        let mut scans = g.terminal_order.len();
+        while g.retained_terminal() > self.terminal_cap && scans > 0 {
+            scans -= 1;
+            let Some(old) = g.terminal_order.pop_front() else { break };
+            // None: stale id (record already consumed/forgotten or the
+            // id re-examined is live — impossible for pushed ids)
+            let keep = match g.jobs.get(&old) {
+                Some(e) if e.status.is_terminal() => Some(e.waiters > 0),
+                _ => None,
+            };
+            match keep {
+                Some(true) => g.terminal_order.push_back(old),
+                Some(false) => {
+                    g.jobs.remove(&old);
+                }
+                None => {}
+            }
+        }
+        // consuming waits / forget remove records without touching the
+        // deque, so stale ids accumulate between cap-pressure pops —
+        // compact when they dominate (amortized O(1) per terminal), so
+        // the deque tracks retained records, not all-time history
+        if g.terminal_order.len() > 2 * self.terminal_cap + 16 {
+            let TableInner { jobs, terminal_order, .. } = g;
+            terminal_order
+                .retain(|i| jobs.get(i).map(|e| e.status.is_terminal()).unwrap_or(false));
+        }
+    }
+
+    /// Jobs currently in a non-terminal state.
+    pub fn live(&self) -> usize {
+        self.inner.lock().unwrap().live
+    }
+
+    /// Register a job as `Queued` unless the live-job count has reached
+    /// `max_live` (the admission check and the registration are one
+    /// critical section, so the cap holds exactly under concurrent
+    /// submitters). Returns whether the job was registered.
+    fn try_insert(
+        &self,
+        id: u64,
+        return_latent: bool,
+        cancel: CancelToken,
+        max_live: usize,
+    ) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        if g.live >= max_live {
+            return false;
+        }
+        g.live += 1;
+        g.jobs
+            .insert(id, JobEntry { status: JobStatus::Queued, return_latent, cancel, waiters: 0 });
+        true
+    }
+
+    /// Record a non-terminal transition; ignored once the job is
+    /// terminal (events can race completion) or unknown.
+    fn advance(&self, id: u64, status: JobStatus) {
+        debug_assert!(!status.is_terminal());
+        let mut g = self.inner.lock().unwrap();
+        if let Some(e) = g.jobs.get_mut(&id) {
+            if !e.status.is_terminal() {
+                e.status = status;
+            }
+        }
+    }
+
+    /// Record a terminal transition, bumping the matching counter
+    /// inside the critical section (a waiter woken by this transition
+    /// reacquires the lock, so it can never read a stale counter).
+    /// Returns true iff this call moved the job out of a live state
+    /// (duplicate terminal events — e.g. a submit-failure abort racing
+    /// a worker abort — are dropped, so counters never double-count).
+    fn finish(&self, id: u64, status: JobStatus, counters: &Counters) -> bool {
+        debug_assert!(status.is_terminal());
+        let mut g = self.inner.lock().unwrap();
+        let Some(e) = g.jobs.get_mut(&id) else { return false };
+        if e.status.is_terminal() {
+            return false;
+        }
+        counters.bump_terminal(&status);
+        e.status = status;
+        g.live -= 1;
+        self.note_terminal(&mut g, id);
+        self.cv.notify_all();
+        true
+    }
+
+    /// Status snapshot plus the job's `return_latent` flag.
+    pub fn status(&self, id: u64) -> Option<(JobStatus, bool)> {
+        let g = self.inner.lock().unwrap();
+        g.jobs.get(&id).map(|e| (e.status.clone(), e.return_latent))
+    }
+
+    /// Remove a job's record if (and only if) it is already terminal;
+    /// returns whether a record was removed. The wire layer uses this
+    /// after a terminal submit ack: such a job was answered in the ack
+    /// itself and will never receive the consuming `wait`, so keeping
+    /// its record would leak one entry per shed request under overload.
+    pub fn forget(&self, id: u64) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        let removable = g
+            .jobs
+            .get(&id)
+            .map(|e| e.status.is_terminal() && e.waiters == 0)
+            .unwrap_or(false);
+        if removable {
+            g.jobs.remove(&id);
+            return true;
+        }
+        false
+    }
+
+    /// Fire a job's cancel token; returns its status at that instant
+    /// (`None` for unknown ids). The engine observes the token at the
+    /// next step boundary; a job that is already terminal is unaffected.
+    pub fn cancel(&self, id: u64) -> Option<JobStatus> {
+        let g = self.inner.lock().unwrap();
+        g.jobs.get(&id).map(|e| {
+            e.cancel.cancel();
+            e.status.clone()
+        })
+    }
+
+    /// Block until the job reaches a terminal state (or the timeout
+    /// elapses — then the current non-terminal status is returned; check
+    /// [`JobStatus::is_terminal`]). `consume` removes a terminal record,
+    /// freeing its memory; polls of a consumed job return `None`.
+    pub fn wait(
+        &self,
+        id: u64,
+        timeout: Option<Duration>,
+        consume: bool,
+    ) -> Option<(JobStatus, bool)> {
+        let deadline = timeout.map(|t| Instant::now() + t);
+        let mut g = self.inner.lock().unwrap();
+        let mut registered = false;
+        loop {
+            let (terminal, rl) = match g.jobs.get(&id) {
+                // record gone (another waiter consumed it) — the entry
+                // took our registration with it, nothing to undo
+                None => return None,
+                Some(e) => (e.status.is_terminal(), e.return_latent),
+            };
+            if terminal {
+                if consume {
+                    let status = g.jobs.remove(&id).map(|e| e.status).unwrap();
+                    return Some((status, rl));
+                }
+                let e = g.jobs.get_mut(&id).unwrap();
+                if registered {
+                    e.waiters -= 1;
+                }
+                return Some((e.status.clone(), rl));
+            }
+            // mark the record waited-on before parking, so terminal-cap
+            // eviction cannot reclaim it between its completion and this
+            // thread re-acquiring the lock
+            if !registered {
+                g.jobs.get_mut(&id).unwrap().waiters += 1;
+                registered = true;
+            }
+            match deadline {
+                None => g = self.cv.wait(g).unwrap(),
+                Some(dl) => {
+                    let now = Instant::now();
+                    if now >= dl {
+                        let e = g.jobs.get_mut(&id).unwrap();
+                        if registered {
+                            e.waiters -= 1;
+                        }
+                        return Some((e.status.clone(), e.return_latent));
+                    }
+                    let (g2, _) = self.cv.wait_timeout(g, dl - now).unwrap();
+                    g = g2;
+                }
+            }
+        }
+    }
+}
+
+/// What a submitter holds: the job id, a view into the shared
+/// [`JobTable`], and the job's cancel token. Cloning shares all three.
+#[derive(Clone)]
+pub struct JobHandle {
+    id: JobId,
+    table: Arc<JobTable>,
+    cancel: CancelToken,
+    /// Terminal verdict delivered at submission time (admission
+    /// rejection). Such a job never enters the table — a transient
+    /// reject record would churn terminal-cap eviction and could evict
+    /// a genuine uncollected completion — so the handle carries the
+    /// status itself.
+    early: Option<JobStatus>,
+}
+
+impl JobHandle {
+    /// The job's id.
+    pub fn id(&self) -> JobId {
+        self.id
+    }
+
+    /// Fire the job's cancel token. The engine drops the job at its
+    /// next step boundary (freeing the shard slot); terminal jobs are
+    /// unaffected. Idempotent; never blocks.
+    pub fn cancel(&self) {
+        self.cancel.cancel();
+    }
+
+    /// The submission-time terminal verdict, or "record consumed" for a
+    /// job whose table record a consuming wait already collected.
+    fn early_or_consumed(&self) -> JobStatus {
+        self.early
+            .clone()
+            .unwrap_or(JobStatus::Aborted { error: "job record consumed".into() })
+    }
+
+    /// Non-blocking status snapshot.
+    pub fn poll(&self) -> JobStatus {
+        match self.table.status(self.id.0) {
+            Some((s, _)) => s,
+            None => self.early_or_consumed(),
+        }
+    }
+
+    /// Block until the job reaches a terminal state.
+    pub fn wait(&self) -> JobStatus {
+        match self.table.wait(self.id.0, None, false) {
+            Some((s, _)) => s,
+            None => self.early_or_consumed(),
+        }
+    }
+
+    /// [`Self::wait`] with a timeout; a non-terminal return means the
+    /// timeout elapsed first.
+    pub fn wait_timeout(&self, timeout: Duration) -> JobStatus {
+        match self.table.wait(self.id.0, Some(timeout), false) {
+            Some((s, _)) => s,
+            None => self.early_or_consumed(),
+        }
+    }
+}
+
+/// Outcome of a [`JobManager::shutdown`].
+#[derive(Debug, Clone)]
+pub struct JobOutcome {
+    /// Merged engine counters across shard workers.
+    pub stats: ShardStats,
+    /// Final lifecycle accounting
+    /// (`counts.terminal() == counts.submitted` after a clean shutdown).
+    pub counts: JobCounts,
+}
+
+/// The job-lifecycle front door: an [`EngineShardPool`] plus the shared
+/// [`JobTable`], admission control and the dispatcher thread that folds
+/// the pool's [`JobEvent`] stream into per-job status.
+///
+/// # Examples
+///
+/// ```
+/// use std::sync::Arc;
+/// use speca::config::ModelConfig;
+/// use speca::coordinator::job::{JobManager, JobStatus, SubmitOptions};
+/// use speca::coordinator::PoolConfig;
+/// use speca::runtime::{ModelBackend, NativeBackend};
+/// use speca::workload::parse_policy;
+///
+/// let model = Arc::new(NativeBackend::seeded(ModelConfig::native_test(), 1));
+/// let depth = model.entry().config.depth;
+/// let mgr = JobManager::new(model, PoolConfig::default(), 64);
+/// let policy = parse_policy("speca:N=4,O=2", depth).unwrap();
+/// let handle = mgr.submit(0, Some(7), policy, SubmitOptions::default());
+/// let status = handle.wait();
+/// assert!(matches!(status, JobStatus::Completed(_)));
+/// let out = mgr.shutdown(true).unwrap();
+/// assert_eq!(out.counts.completed, 1);
+/// assert_eq!(out.counts.terminal(), out.counts.submitted);
+/// ```
+pub struct JobManager {
+    router: ShardRouter,
+    table: Arc<JobTable>,
+    counters: Arc<Counters>,
+    /// EWMA of completed-job latency, stored as f64 bits (0 ⇒ no data).
+    est_service_ms: Arc<AtomicU64>,
+    pool: Mutex<Option<EngineShardPool>>,
+    dispatcher: Mutex<Option<JoinHandle<()>>>,
+    next_id: AtomicU64,
+    max_queue: usize,
+    /// per-shard engine concurrency (`max_inflight`), so the deadline
+    /// feasibility estimate accounts for requests running in parallel
+    slots_per_shard: usize,
+}
+
+impl JobManager {
+    /// Spawn the shard pool and the event dispatcher. `max_queue` caps
+    /// jobs in a non-terminal state across the whole manager.
+    pub fn new(
+        model: Arc<dyn ModelBackend + Send + Sync>,
+        cfg: PoolConfig,
+        max_queue: usize,
+    ) -> JobManager {
+        let slots_per_shard = cfg.engine.max_inflight.max(1);
+        let mut pool = EngineShardPool::new(model, cfg);
+        let events = pool.take_event_rx().expect("fresh pool has its event stream");
+        let router = pool.router();
+        // live jobs and retained terminal records are capped alike, so
+        // table memory is bounded even against submit-and-never-collect
+        // clients (at most 2·max_queue records)
+        let table = Arc::new(JobTable::new(max_queue.max(1)));
+        let counters = Arc::new(Counters::default());
+        let est = Arc::new(AtomicU64::new(0));
+        let dispatcher = {
+            let table = table.clone();
+            let counters = counters.clone();
+            let est = est.clone();
+            std::thread::Builder::new()
+                .name("speca-job-dispatcher".into())
+                .spawn(move || dispatch_events(events, &table, &counters, &est))
+                .expect("spawning job dispatcher")
+        };
+        JobManager {
+            router,
+            table,
+            counters,
+            est_service_ms: est,
+            pool: Mutex::new(Some(pool)),
+            dispatcher: Mutex::new(Some(dispatcher)),
+            next_id: AtomicU64::new(0),
+            max_queue: max_queue.max(1),
+            slots_per_shard,
+        }
+    }
+
+    /// Submit one generation job. `seed` defaults to the assigned job id
+    /// (the v1 wire default). Never blocks: when admission sheds the job
+    /// the returned handle is already terminal (`Rejected`, carried on
+    /// the handle itself — a shed job never enters the table), and an
+    /// unroutable submit (all shards dead) ends `Aborted`.
+    pub fn submit(
+        &self,
+        cond: i32,
+        seed: Option<u64>,
+        policy: Policy,
+        opts: SubmitOptions,
+    ) -> JobHandle {
+        let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+        self.counters.submitted.fetch_add(1, Ordering::SeqCst);
+        let cancel = opts.cancel.clone().unwrap_or_default();
+
+        // deadline-aware admission: don't queue doomed work. The engine
+        // serves up to `slots_per_shard` requests concurrently and the
+        // EWMA latency is measured under that same concurrency, so the
+        // projection counts *waves* of backlog ahead of this job, not
+        // individual requests (est · backlog would over-reject ~8×).
+        if let Some(ms) = opts.deadline_ms {
+            let est = f64::from_bits(self.est_service_ms.load(Ordering::SeqCst));
+            if est > 0.0 {
+                // backlog per *live* shard: a dead shard serves nothing,
+                // so its slot must not dilute the estimate
+                let loads = self.router.loads();
+                let live = loads.iter().filter(|l| **l != usize::MAX).count().max(1);
+                let inflight: usize = loads.iter().filter(|l| **l != usize::MAX).sum();
+                let backlog = inflight as f64 / live as f64;
+                let waves = (backlog / self.slots_per_shard as f64).ceil();
+                if est * (waves + 1.0) > ms as f64 {
+                    return self.rejected_handle(id, cancel, RejectReason::DeadlineInfeasible);
+                }
+            }
+        }
+        // queue cap: check-and-register is one critical section
+        if !self.table.try_insert(id, opts.return_latent, cancel.clone(), self.max_queue) {
+            return self.rejected_handle(id, cancel, RejectReason::QueueFull);
+        }
+
+        let mut policy = policy;
+        if let Some(d) = &opts.draft {
+            crate::workload::apply_draft(&mut policy, d);
+        }
+        let spec = RequestSpec {
+            id,
+            cond,
+            seed: seed.unwrap_or(id),
+            policy,
+            record_traj: false,
+            meta: JobMeta {
+                priority: opts.priority,
+                deadline: opts.deadline_ms.map(|ms| Instant::now() + Duration::from_millis(ms)),
+                cancel: cancel.clone(),
+            },
+        };
+        if let Err(e) = self.router.submit(spec) {
+            let status = JobStatus::Aborted { error: format!("{e:#}") };
+            self.table.finish(id, status, &self.counters);
+        }
+        JobHandle { id: JobId(id), table: self.table.clone(), cancel, early: None }
+    }
+
+    /// A handle for a job shed at admission: the rejection is counted
+    /// and carried on the handle; the table is never touched (transient
+    /// reject records would churn terminal-cap eviction).
+    fn rejected_handle(&self, id: u64, cancel: CancelToken, reason: RejectReason) -> JobHandle {
+        self.counters.rejected.fetch_add(1, Ordering::SeqCst);
+        JobHandle {
+            id: JobId(id),
+            table: self.table.clone(),
+            cancel,
+            early: Some(JobStatus::Rejected { reason }),
+        }
+    }
+
+    /// Status snapshot plus the job's `return_latent` flag (`None` for
+    /// unknown/consumed ids).
+    pub fn poll(&self, id: u64) -> Option<(JobStatus, bool)> {
+        self.table.status(id)
+    }
+
+    /// Block until job `id` is terminal (see [`JobTable::wait`]).
+    pub fn wait(
+        &self,
+        id: u64,
+        timeout: Option<Duration>,
+        consume: bool,
+    ) -> Option<(JobStatus, bool)> {
+        self.table.wait(id, timeout, consume)
+    }
+
+    /// Fire job `id`'s cancel token; returns its status at that instant.
+    pub fn cancel(&self, id: u64) -> Option<JobStatus> {
+        self.table.cancel(id)
+    }
+
+    /// Drop job `id`'s record if it is already terminal (see
+    /// [`JobTable::forget`]).
+    pub fn forget(&self, id: u64) -> bool {
+        self.table.forget(id)
+    }
+
+    /// Lifecycle counter snapshot.
+    pub fn counts(&self) -> JobCounts {
+        self.counters.snapshot()
+    }
+
+    /// Jobs currently in a non-terminal state.
+    pub fn live(&self) -> usize {
+        self.table.live()
+    }
+
+    /// Requests in flight per shard (`usize::MAX` marks a dead shard).
+    pub fn shard_loads(&self) -> Vec<usize> {
+        self.router.loads()
+    }
+
+    /// Total requests in flight across live shards.
+    pub fn inflight(&self) -> usize {
+        self.router.inflight()
+    }
+
+    /// Number of shards (dead ones included).
+    pub fn shards(&self) -> usize {
+        self.router.shards()
+    }
+
+    /// Merged engine counter snapshot across live shards.
+    pub fn stats(&self) -> ShardStats {
+        self.router.stats()
+    }
+
+    /// Current EWMA of completed-job latency in ms (0 before any
+    /// completion) — the signal behind deadline-feasibility admission.
+    pub fn est_service_ms(&self) -> f64 {
+        f64::from_bits(self.est_service_ms.load(Ordering::SeqCst))
+    }
+
+    /// Stop the pool (`drain`: finish everything admitted; `!drain`:
+    /// abandon it) and join the dispatcher. Every live job reaches a
+    /// terminal state before this returns, so blocked `wait`ers always
+    /// wake. Safe to call once; later calls error.
+    pub fn shutdown(&self, drain: bool) -> Result<JobOutcome> {
+        let pool = self.pool.lock().unwrap().take();
+        let Some(pool) = pool else { bail!("job manager already shut down") };
+        let res = pool.shutdown(drain);
+        // workers are joined, so their event senders are gone and the
+        // dispatcher's loop ends once it finishes folding the stream
+        if let Some(d) = self.dispatcher.lock().unwrap().take() {
+            let _ = d.join();
+        }
+        let out = res?;
+        Ok(JobOutcome { stats: out.stats, counts: self.counts() })
+    }
+}
+
+/// Fold the pool's event stream into table transitions + counters.
+fn dispatch_events(
+    events: Receiver<JobEvent>,
+    table: &JobTable,
+    counters: &Counters,
+    est_service_ms: &AtomicU64,
+) {
+    for ev in events.iter() {
+        match ev {
+            JobEvent::Admitted { id, shard } => {
+                table.advance(id, JobStatus::Admitted { shard });
+            }
+            JobEvent::Progress(p) => {
+                let running =
+                    JobStatus::Running { step: p.step, accepts: p.accepts, rejects: p.rejects };
+                table.advance(p.id, running);
+            }
+            JobEvent::Completed(c) => {
+                let lat = c.stats.latency_ms;
+                let prev = f64::from_bits(est_service_ms.load(Ordering::SeqCst));
+                let next = if prev <= 0.0 { lat } else { 0.8 * prev + 0.2 * lat };
+                est_service_ms.store(next.to_bits(), Ordering::SeqCst);
+                let id = c.id;
+                table.finish(id, JobStatus::Completed(Arc::from(c)), counters);
+            }
+            JobEvent::Rejected { id, reason } => {
+                table.finish(id, JobStatus::Rejected { reason }, counters);
+            }
+            JobEvent::Cancelled { id } => {
+                table.finish(id, JobStatus::Cancelled, counters);
+            }
+            JobEvent::Aborted { id, error } => {
+                table.finish(id, JobStatus::Aborted { error }, counters);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn priority_parses_and_orders() {
+        assert_eq!(Priority::parse("HIGH"), Some(Priority::High));
+        assert_eq!(Priority::parse("normal"), Some(Priority::Normal));
+        assert_eq!(Priority::parse("Low"), Some(Priority::Low));
+        assert_eq!(Priority::parse("urgent"), None);
+        assert!(Priority::High > Priority::Normal);
+        assert!(Priority::Normal > Priority::Low);
+        assert_eq!(Priority::default(), Priority::Normal);
+        assert_eq!(Priority::High.index(), 2);
+    }
+
+    #[test]
+    fn cancel_token_is_shared_across_clones() {
+        let t = CancelToken::new();
+        assert!(!t.is_shared(), "a lone token can never be fired by anyone else");
+        let u = t.clone();
+        assert!(t.is_shared() && u.is_shared());
+        assert!(!u.is_cancelled());
+        t.cancel();
+        assert!(u.is_cancelled());
+        drop(t);
+        assert!(!u.is_shared(), "sharing ends when the other handle drops");
+    }
+
+    #[test]
+    fn job_meta_deadline_expiry() {
+        let now = Instant::now();
+        let mut m = JobMeta::default();
+        assert!(!m.expired(now), "no deadline never expires");
+        m.deadline = Some(now + Duration::from_secs(60));
+        assert!(!m.expired(now));
+        assert!(m.expired(now + Duration::from_secs(61)));
+    }
+
+    #[test]
+    fn table_wait_consume_and_cap() {
+        let table = JobTable::new(8);
+        let counters = Counters::default();
+        assert!(table.try_insert(1, false, CancelToken::new(), 1));
+        assert!(!table.try_insert(2, false, CancelToken::new(), 1), "cap holds");
+        assert_eq!(table.live(), 1);
+        assert!(table.finish(1, JobStatus::Cancelled, &counters));
+        assert!(!table.finish(1, JobStatus::Cancelled, &counters), "duplicate terminal dropped");
+        assert_eq!(counters.snapshot().cancelled, 1, "duplicates must not double-count");
+        assert_eq!(table.live(), 0);
+        let (s, _) = table.wait(1, None, true).unwrap();
+        assert!(matches!(s, JobStatus::Cancelled));
+        assert!(table.status(1).is_none(), "consumed record is gone");
+    }
+
+    #[test]
+    fn forget_reclaims_only_terminal_records() {
+        let table = JobTable::new(8);
+        let counters = Counters::default();
+        assert!(table.try_insert(1, false, CancelToken::new(), 8));
+        assert!(!table.forget(1), "live records must not be reclaimed");
+        assert!(table.finish(1, JobStatus::Cancelled, &counters));
+        assert!(table.forget(1));
+        assert!(table.status(1).is_none());
+        assert!(!table.forget(1), "idempotent on missing records");
+    }
+
+    #[test]
+    fn terminal_records_evict_oldest_beyond_the_cap() {
+        let table = JobTable::new(2);
+        let counters = Counters::default();
+        for id in 0..3u64 {
+            assert!(table.try_insert(id, false, CancelToken::new(), 8));
+            assert!(table.finish(id, JobStatus::Cancelled, &counters));
+        }
+        // cap 2: the oldest unconsumed terminal record was evicted
+        assert!(table.status(0).is_none(), "oldest terminal record must be evicted");
+        assert!(table.status(1).is_some());
+        assert!(table.status(2).is_some());
+        // consuming one frees headroom for the next terminal record
+        assert!(table.wait(1, None, true).is_some());
+        assert!(table.try_insert(3, false, CancelToken::new(), 8));
+        assert!(table.finish(3, JobStatus::Cancelled, &counters));
+        assert!(table.status(2).is_some(), "within cap — nothing evicted");
+        assert!(table.status(3).is_some());
+    }
+
+    #[test]
+    fn table_wait_timeout_returns_nonterminal() {
+        let table = JobTable::new(8);
+        assert!(table.try_insert(7, true, CancelToken::new(), 8));
+        let (s, rl) = table.wait(7, Some(Duration::from_millis(10)), true).unwrap();
+        assert!(!s.is_terminal());
+        assert!(rl);
+        assert!(table.status(7).is_some(), "timeout must not consume");
+    }
+
+    #[test]
+    fn reject_reason_wire_strings() {
+        assert_eq!(RejectReason::QueueFull.to_string(), "queue full");
+        assert!(RejectReason::DeadlineExpired.to_string().contains("deadline"));
+    }
+
+    #[test]
+    fn status_labels() {
+        assert_eq!(JobStatus::Queued.label(), "queued");
+        assert_eq!(JobStatus::Cancelled.label(), "cancelled");
+        assert!(JobStatus::Cancelled.is_terminal());
+        assert!(!JobStatus::Running { step: 1, accepts: 0, rejects: 0 }.is_terminal());
+        assert_eq!(format!("{}", JobId(4)), "job-4");
+    }
+}

@@ -1,16 +1,21 @@
 //! L3 coordinator — the paper's system contribution: per-request
 //! forecast-then-verify state machines, dynamic batching across the AOT
-//! batch buckets, and the policy zoo used by the evaluation tables.
+//! batch buckets, the policy zoo used by the evaluation tables, and the
+//! job-lifecycle layer (priorities, deadlines, cancellation) the serving
+//! front-end is built on.
 
 pub mod batcher;
 pub mod engine;
+pub mod job;
 pub mod policy;
 pub mod pool;
 pub mod state;
 
 pub use engine::{Engine, EngineConfig};
-pub use policy::{ErrorMetric, Plan, Policy, SpeCaConfig};
-pub use pool::{
-    EngineShardPool, PoolConfig, PoolEvent, PoolOutcome, RouterPolicy, ShardRouter, ShardStats,
+pub use job::{
+    CancelToken, JobCounts, JobEvent, JobHandle, JobId, JobManager, JobMeta, JobOutcome,
+    JobProgress, JobStatus, Priority, RejectReason, SubmitOptions, Termination, TerminationCause,
 };
+pub use policy::{ErrorMetric, Plan, Policy, SpeCaConfig};
+pub use pool::{EngineShardPool, PoolConfig, PoolOutcome, RouterPolicy, ShardRouter, ShardStats};
 pub use state::{Completion, ReqState, RequestSpec, RequestStats};

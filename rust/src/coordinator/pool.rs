@@ -10,12 +10,22 @@
 //!   (per-shard `AtomicUsize` of requests in flight) and is `Clone`, so
 //!   any number of connection threads can submit concurrently without a
 //!   central funnel;
-//! * events from all shards merge onto one channel. They arrive in
-//!   nondeterministic order across shards, but every [`PoolEvent`]
-//!   carries its request id, so callers re-order (or route replies) by
-//!   id — and because backends are batching-transparent and requests
-//!   share no state, a request's completion is *identical* regardless of
-//!   shard count (the parity suite in `tests/shard_pool.rs` asserts it).
+//! * events from all shards merge onto one [`JobEvent`] stream (the
+//!   full job lifecycle: admission onto a shard, per-tick progress,
+//!   completion, rejection, cancellation, abort). Events arrive in
+//!   nondeterministic order across shards but in lifecycle order per
+//!   shard, and every event carries its request id, so callers re-order
+//!   (or route replies) by id — and because backends are
+//!   batching-transparent and requests share no state, a request's
+//!   completion is *identical* regardless of shard count (the parity
+//!   suite in `tests/shard_pool.rs` asserts it).
+//!
+//! Job lifecycle on a shard: the engine's queue is priority-ordered, a
+//! fired cancel token frees the request's slot at the next step
+//! boundary ([`JobEvent::Cancelled`]), and a deadline that expires
+//! while the request is still queued sheds it with a structured
+//! [`JobEvent::Rejected`] instead of running doomed work — see
+//! `coordinator::job` for the state machine.
 //!
 //! Shutdown is two-mode: `drain` stops ingestion and finishes everything
 //! already routed; `halt` abandons in-flight work. Both join every
@@ -25,12 +35,12 @@
 //! it. The dying worker tombstones its load gauge (releasing its
 //! in-flight accounting so admission control never counts dead
 //! requests, and steering the router away), drains its channel one last
-//! time, and emits a [`PoolEvent::Aborted`] per abandoned request (so
+//! time, and emits a [`JobEvent::Aborted`] per abandoned request (so
 //! waiters get an error reply, never a hang — see `abandon_inflight`
 //! for why the tombstone-then-drain order makes this race-free); the
 //! error itself resurfaces as `Err` from [`EngineShardPool::shutdown`].
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::Arc;
 use std::thread::{self, JoinHandle};
@@ -38,6 +48,7 @@ use std::time::Duration;
 
 use anyhow::{bail, Result};
 
+use crate::coordinator::job::{JobEvent, RejectReason, TerminationCause};
 use crate::coordinator::state::{Completion, RequestSpec};
 use crate::coordinator::{Engine, EngineConfig};
 use crate::metrics::flops::FlopsCounter;
@@ -107,24 +118,6 @@ enum ShardMsg {
     Drain,
     /// exit now, abandoning in-flight requests
     Halt,
-}
-
-/// What the pool's merged event stream carries: completions in the happy
-/// path, plus an abort notice per request abandoned by a dying shard so
-/// the consumer can error-reply instead of waiting forever. Completions
-/// are boxed: they dwarf the abort variant (latent + stats + trace), and
-/// boxing keeps channel sends and matches a pointer move.
-#[derive(Debug, Clone)]
-pub enum PoolEvent {
-    /// A request finished normally.
-    Completed(Box<Completion>),
-    /// A request was abandoned by a dying/halting shard.
-    Aborted {
-        /// Id of the abandoned request.
-        id: u64,
-        /// Why the shard abandoned it.
-        error: String,
-    },
 }
 
 /// Counter snapshot of one shard (or, merged, of the whole pool).
@@ -291,13 +284,20 @@ impl ShardRouter {
     }
 }
 
-/// Everything a finished pool hands back.
+/// Everything a finished pool hands back. The per-request vectors hold
+/// only events not consumed through [`EngineShardPool::take_event_rx`];
+/// a consumer that took the stream (e.g. a
+/// [`JobManager`](crate::coordinator::job::JobManager) dispatcher) sees
+/// them there instead.
 pub struct PoolOutcome {
-    /// completions not consumed through [`EngineShardPool::take_event_rx`]
+    /// Requests that finished normally.
     pub completions: Vec<Completion>,
-    /// `(id, error)` of requests abandoned by dead/halted shards, not
-    /// consumed through [`EngineShardPool::take_event_rx`]
+    /// `(id, error)` of requests abandoned by dead/halted shards.
     pub aborted: Vec<(u64, String)>,
+    /// `(id, reason)` of requests shed by queued-deadline expiry.
+    pub rejected: Vec<(u64, RejectReason)>,
+    /// Ids of requests dropped after their cancel token fired.
+    pub cancelled: Vec<u64>,
     /// Merged counter snapshot across workers.
     pub stats: ShardStats,
 }
@@ -307,7 +307,12 @@ pub struct PoolOutcome {
 pub struct EngineShardPool {
     router: ShardRouter,
     workers: Vec<JoinHandle<(ShardStats, Option<String>)>>,
-    events: Option<Receiver<PoolEvent>>,
+    events: Option<Receiver<JobEvent>>,
+    /// set once [`Self::take_event_rx`] hands the stream to a consumer;
+    /// until then workers skip the Admitted/Progress chatter so a
+    /// closed-loop user (bench runners, parity tests) does not buffer
+    /// requests × steps events nobody will read
+    chatter: Arc<AtomicBool>,
 }
 
 impl EngineShardPool {
@@ -315,6 +320,7 @@ impl EngineShardPool {
     pub fn new(model: Arc<dyn ModelBackend + Send + Sync>, cfg: PoolConfig) -> EngineShardPool {
         let shards = cfg.shards.max(1);
         let (ctx, crx) = channel();
+        let chatter = Arc::new(AtomicBool::new(false));
         let mut txs = Vec::with_capacity(shards);
         let mut loads = Vec::with_capacity(shards);
         let mut workers = Vec::with_capacity(shards);
@@ -325,11 +331,20 @@ impl EngineShardPool {
             let worker_cfg = cfg.engine.clone();
             let worker_load = load.clone();
             let worker_ctx = ctx.clone();
+            let worker_chatter = chatter.clone();
             workers.push(
                 thread::Builder::new()
                     .name(format!("speca-shard-{shard}"))
                     .spawn(move || {
-                        shard_worker(worker_model, worker_cfg, rx, worker_load, worker_ctx)
+                        shard_worker(
+                            worker_model,
+                            worker_cfg,
+                            shard,
+                            rx,
+                            worker_load,
+                            worker_ctx,
+                            worker_chatter,
+                        )
                     })
                     .expect("spawning shard worker"),
             );
@@ -345,6 +360,7 @@ impl EngineShardPool {
             },
             workers,
             events: Some(crx),
+            chatter,
         }
     }
 
@@ -363,11 +379,18 @@ impl EngineShardPool {
         self.router.stats()
     }
 
-    /// Take ownership of the merged event stream (e.g. for a server
-    /// dispatcher thread). If never taken, [`Self::shutdown`] drains it
-    /// into [`PoolOutcome::completions`] / [`PoolOutcome::aborted`].
-    pub fn take_event_rx(&mut self) -> Option<Receiver<PoolEvent>> {
-        self.events.take()
+    /// Take ownership of the merged [`JobEvent`] stream (e.g. for a job
+    /// dispatcher thread). Taking it also turns on the per-tick
+    /// Admitted/Progress lifecycle chatter, which is suppressed while
+    /// nobody consumes the stream. If never taken, [`Self::shutdown`]
+    /// drains the buffered terminal events into the [`PoolOutcome`]
+    /// vectors.
+    pub fn take_event_rx(&mut self) -> Option<Receiver<JobEvent>> {
+        let rx = self.events.take();
+        if rx.is_some() {
+            self.chatter.store(true, Ordering::SeqCst);
+        }
+        rx
     }
 
     /// Stop the pool and join every worker. `drain` finishes all work
@@ -397,11 +420,16 @@ impl EngineShardPool {
         }
         let mut completions = Vec::new();
         let mut aborted = Vec::new();
+        let mut rejected = Vec::new();
+        let mut cancelled = Vec::new();
         if let Some(rx) = rx {
             while let Ok(ev) = rx.try_recv() {
                 match ev {
-                    PoolEvent::Completed(c) => completions.push(*c),
-                    PoolEvent::Aborted { id, error } => aborted.push((id, error)),
+                    JobEvent::Completed(c) => completions.push(*c),
+                    JobEvent::Aborted { id, error } => aborted.push((id, error)),
+                    JobEvent::Rejected { id, reason } => rejected.push((id, reason)),
+                    JobEvent::Cancelled { id } => cancelled.push(id),
+                    JobEvent::Admitted { .. } | JobEvent::Progress(_) => {}
                 }
             }
         }
@@ -411,7 +439,7 @@ impl EngineShardPool {
         if !errors.is_empty() {
             bail!("shard worker error(s): {}", errors.join("; "));
         }
-        Ok(PoolOutcome { completions, aborted, stats })
+        Ok(PoolOutcome { completions, aborted, rejected, cancelled, stats })
     }
 }
 
@@ -439,11 +467,35 @@ fn ingest_remaining(engine: &mut Engine<'_>, rx: &Receiver<ShardMsg>, completed:
     }
 }
 
+/// Turn the engine's pending terminations (fired cancel tokens, queued
+/// deadlines) into lifecycle events. `release_load` decrements the load
+/// gauge per termination — true on the live path, false once the gauge
+/// is tombstoned (the tombstone already released all accounting).
+fn emit_terminations(
+    engine: &mut Engine<'_>,
+    load: &AtomicUsize,
+    events: &Sender<JobEvent>,
+    release_load: bool,
+) {
+    for t in engine.drain_terminations() {
+        if release_load {
+            load.fetch_sub(1, Ordering::SeqCst);
+        }
+        let _ = events.send(match t.cause {
+            TerminationCause::Cancelled => JobEvent::Cancelled { id: t.id },
+            TerminationCause::DeadlineExpired => {
+                JobEvent::Rejected { id: t.id, reason: RejectReason::DeadlineExpired }
+            }
+        });
+    }
+}
+
 /// Abandon everything in flight on an exiting shard: tombstone the load
 /// gauge (releasing this shard's in-flight accounting and steering the
 /// router away), pull in whatever the channel still holds, and emit one
-/// [`PoolEvent::Aborted`] per abandoned request so waiters get an
-/// explicit error instead of hanging.
+/// [`JobEvent::Aborted`] per abandoned request so waiters get an
+/// explicit error instead of hanging (terminations already reaped by
+/// the engine keep their precise cancelled/rejected cause).
 ///
 /// Ordering is load-bearing: the tombstone goes in *before* the final
 /// channel drain. A submitter whose post-send gauge check still reads
@@ -455,23 +507,26 @@ fn abandon_inflight(
     engine: &mut Engine<'_>,
     rx: &Receiver<ShardMsg>,
     load: &AtomicUsize,
-    events: &Sender<PoolEvent>,
+    events: &Sender<JobEvent>,
     completed: u64,
     error: &str,
 ) {
     load.store(DEAD, Ordering::SeqCst);
     ingest_remaining(engine, rx, completed);
+    emit_terminations(engine, load, events, false);
     for id in engine.abandon() {
-        let _ = events.send(PoolEvent::Aborted { id, error: error.to_string() });
+        let _ = events.send(JobEvent::Aborted { id, error: error.to_string() });
     }
 }
 
 fn shard_worker(
     model: Arc<dyn ModelBackend + Send + Sync>,
     cfg: EngineConfig,
+    shard: usize,
     rx: Receiver<ShardMsg>,
     load: Arc<AtomicUsize>,
-    events: Sender<PoolEvent>,
+    events: Sender<JobEvent>,
+    chatter: Arc<AtomicBool>,
 ) -> (ShardStats, Option<String>) {
     let model: Arc<dyn ModelBackend> = model;
     let mut engine = Engine::new(model, cfg);
@@ -503,7 +558,13 @@ fn shard_worker(
             };
             let Some(msg) = msg else { break };
             match msg {
-                ShardMsg::Submit(spec) => engine.submit(spec),
+                ShardMsg::Submit(spec) => {
+                    let id = spec.id;
+                    engine.submit(spec);
+                    if chatter.load(Ordering::SeqCst) {
+                        let _ = events.send(JobEvent::Admitted { id, shard });
+                    }
+                }
                 ShardMsg::Stats(reply) => {
                     let _ = reply.send(snapshot(&engine, completed));
                 }
@@ -527,7 +588,19 @@ fn shard_worker(
             for c in engine.drain_completions() {
                 completed += 1;
                 load.fetch_sub(1, Ordering::SeqCst);
-                let _ = events.send(PoolEvent::Completed(Box::new(c)));
+                let _ = events.send(JobEvent::Completed(Box::new(c)));
+            }
+            // cancelled / deadline-expired requests free their slot here
+            emit_terminations(&mut engine, &load, &events, true);
+            if chatter.load(Ordering::SeqCst) {
+                // throttled to every 4th step (first included): `poll`
+                // needs coarse freshness, and one event per request per
+                // tick would serialize on the job-table mutex for nothing
+                for p in engine.progress() {
+                    if p.step % 4 == 1 {
+                        let _ = events.send(JobEvent::Progress(p));
+                    }
+                }
             }
         } else if draining || disconnected {
             // same tombstone + final-drain protocol as the error exit: a

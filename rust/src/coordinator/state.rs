@@ -5,6 +5,7 @@
 use std::time::Instant;
 
 use crate::cache::FeatureCache;
+use crate::coordinator::job::JobMeta;
 use crate::coordinator::policy::Policy;
 use crate::metrics::flops::FlopsCounter;
 
@@ -22,6 +23,10 @@ pub struct RequestSpec {
     pub policy: Policy,
     /// record the last-boundary feature every step (Fig. 9 trajectories)
     pub record_traj: bool,
+    /// Job-lifecycle metadata: priority class, absolute deadline and
+    /// the shared cancel token (`Default` = the old fire-and-forget
+    /// semantics — normal priority, no deadline, never cancelled).
+    pub meta: JobMeta,
 }
 
 /// Outcome statistics for one request.
@@ -181,7 +186,8 @@ mod tests {
     use crate::coordinator::policy::SpeCaConfig;
 
     fn spec(policy: Policy) -> RequestSpec {
-        RequestSpec { id: 1, cond: 0, seed: 42, policy, record_traj: false }
+        let meta = JobMeta::default();
+        RequestSpec { id: 1, cond: 0, seed: 42, policy, record_traj: false, meta }
     }
 
     #[test]

@@ -14,7 +14,11 @@
 //! overrides, default auto). `--shards N` fans a runner's engine out over
 //! the shard pool (native backend only).
 
+use std::io::BufReader;
+use std::net::TcpStream;
 use std::path::PathBuf;
+use std::thread;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
@@ -24,6 +28,7 @@ use crate::metrics::pca::pca2;
 use crate::metrics::stats::pearson;
 use crate::runtime::resolve::{self, BackendRequest};
 use crate::runtime::{ClassifierBackend, ModelBackend, ResolvedModel};
+use crate::server::{self, client, ServerConfig};
 use crate::util::cli::Args;
 use crate::util::rng::Rng;
 use crate::workload::parse_policy;
@@ -49,6 +54,7 @@ pub fn run(args: &Args) -> Result<()> {
         "table7" => table7(args),
         "table8" => table8(args),
         "drafts" => drafts_table(args),
+        "serve-openloop" => serve_openloop(args),
         "fig2" => fig2(args),
         "fig6" => fig6(args),
         "fig8" => fig8(args),
@@ -505,6 +511,170 @@ fn drafts_table(args: &Args) -> Result<()> {
             &csv,
         )?;
         println!("wrote results/drafts.csv");
+        Ok(())
+    })
+}
+
+/// Open-loop serving bench (EXPERIMENTS.md §Open-loop): spin up the
+/// sharded server in-process, calibrate per-request service time with a
+/// few closed-loop generates, then sweep Poisson arrival rates as
+/// multiples of the measured capacity, recording queueing-inclusive
+/// p50/p99/p999 latency and the rejection rate (deadline shedding +
+/// queue-full) per rate to `results/openloop.csv`. Rejection rising and
+/// tail latency staying bounded as offered load passes capacity is the
+/// behaviour the job-lifecycle admission rules exist to produce.
+fn serve_openloop(args: &Args) -> Result<()> {
+    with_model(&args.str("model", "dit-sim"), args, |model| {
+        let Some(shared) = model.shared() else {
+            bail!("serve-openloop needs a Send + Sync backend (use --backend native)");
+        };
+        let quick = args.bool("quick");
+        let shards = args.usize("shards", 2);
+        let addr = args.str("addr", "127.0.0.1:17452");
+        let opts = RunOpts::from_args(args, 0)?;
+        let policy = args.str("policy", "speca:N=5,O=2,tau0=0.3,beta=0.05");
+
+        let server_cfg = ServerConfig {
+            addr: addr.clone(),
+            max_queue: args.usize("max-queue", 256),
+            shards,
+            router: opts.router,
+            default_draft: opts.draft.clone(),
+        };
+        let engine_cfg = opts.engine_config();
+        let srv = thread::spawn(move || {
+            server::serve_sharded(shared, engine_cfg, &server_cfg).map_err(|e| format!("{e:#}"))
+        });
+
+        // everything that talks to the server runs inside this closure,
+        // so the shutdown + join below execute on every exit path — an
+        // early `?` must not leak the listening server thread
+        let mut csv = Vec::new();
+        let sweep = |csv: &mut Vec<String>| -> Result<()> {
+            // wait for the listener, then calibrate the service time
+            let mut stream = None;
+            for _ in 0..200 {
+                match TcpStream::connect(&addr) {
+                    Ok(s) => {
+                        stream = Some(s);
+                        break;
+                    }
+                    Err(_) => thread::sleep(Duration::from_millis(25)),
+                }
+            }
+            let Some(mut stream) = stream else { bail!("server did not come up at {addr}") };
+            let mut reader = BufReader::new(stream.try_clone()?);
+            let calib = if quick { 2u64 } else { 4 };
+            let t0 = Instant::now();
+            for i in 0..calib {
+                client::generate_once(&mut stream, &mut reader, 0, 9_000 + i, &policy)?;
+            }
+            let service_s = t0.elapsed().as_secs_f64() / calib as f64;
+            let capacity = shards as f64 / service_s.max(1e-6);
+
+            let mults: Vec<f64> = match args.opt("rates") {
+                Some(list) => {
+                    let mut v = Vec::new();
+                    for s in list.split(',').filter(|s| !s.is_empty()) {
+                        let Ok(m) = s.trim().parse::<f64>() else {
+                            bail!("--rates expects comma-separated capacity multiples, got '{s}'");
+                        };
+                        if m <= 0.0 || !m.is_finite() {
+                            bail!("--rates multiples must be positive and finite, got '{s}'");
+                        }
+                        v.push(m);
+                    }
+                    v
+                }
+                None if quick => vec![0.5, 2.0],
+                None => vec![0.25, 0.5, 1.0, 2.0, 4.0],
+            };
+            let n = sample_count(args, 48);
+            // default deadline: 8 service times — generous at low load,
+            // infeasible once the backlog grows, so shedding is observable
+            let deadline_ms = if args.opt("deadline-ms").is_some() {
+                args.u64("deadline-ms", 0)
+            } else {
+                ((8.0 * service_s * 1e3).ceil() as u64).max(1)
+            };
+
+            println!(
+                "== serve-openloop: {shards} shard(s), service≈{:.1} ms, capacity≈{:.2} req/s, \
+                 deadline={deadline_ms} ms, n={n} per rate ==",
+                service_s * 1e3,
+                capacity
+            );
+            println!(
+                "{:<8} {:>9} {:>9} {:>6} {:>6} {:>6} {:>9} {:>9} {:>9} {:>9}",
+                "load", "offered", "achieved", "done", "rej", "abrt", "p50 ms", "p99 ms",
+                "p999 ms", "rej-rate"
+            );
+            for m in &mults {
+                let cfg = client::OpenLoopConfig {
+                    addr: addr.clone(),
+                    rate: capacity * m,
+                    requests: n,
+                    policy: policy.clone(),
+                    num_classes: 8,
+                    seed: args.u64("seed", 0) + (m * 1000.0) as u64,
+                    deadline_ms: Some(deadline_ms),
+                    priority: None,
+                    waiters: 8,
+                };
+                let mut r = client::run_open_loop(&cfg)?;
+                let p50 = r.latency.percentile(0.5);
+                let p99 = r.latency.percentile(0.99);
+                // a p999 over < 1000 samples is just the sample max — leave
+                // the column blank rather than report an unsupported stat
+                let p999 = if r.completed >= 1000 {
+                    format!("{:.3}", r.latency.percentile(0.999))
+                } else {
+                    String::new()
+                };
+                println!(
+                    "{:<8} {:>9.2} {:>9.2} {:>6} {:>6} {:>6} {:>9.1} {:>9.1} {:>9} {:>9.3}",
+                    format!("{m}x"),
+                    r.offered_rps,
+                    r.achieved_rps,
+                    r.completed,
+                    r.rejected,
+                    r.aborted,
+                    p50,
+                    p99,
+                    if p999.is_empty() { "-".to_string() } else { p999.clone() },
+                    r.reject_rate()
+                );
+                csv.push(format!(
+                    "{m},{:.4},{:.4},{},{},{},{},{:.3},{:.3},{p999},{:.5}",
+                    r.offered_rps,
+                    r.achieved_rps,
+                    r.submitted,
+                    r.completed,
+                    r.rejected,
+                    r.aborted,
+                    p50,
+                    p99,
+                    r.reject_rate()
+                ));
+            }
+            Ok(())
+        };
+        let outcome = sweep(&mut csv);
+        client::shutdown(&addr);
+        match srv.join() {
+            Ok(res) => {
+                res.map_err(|e| anyhow::anyhow!("server error: {e}"))?;
+            }
+            Err(_) => bail!("server thread panicked"),
+        }
+        outcome?;
+        write_csv(
+            &results_path("openloop.csv"),
+            "load_mult,offered_rps,achieved_rps,submitted,completed,rejected,aborted,\
+             p50_ms,p99_ms,p999_ms,reject_rate",
+            &csv,
+        )?;
+        println!("wrote results/openloop.csv");
         Ok(())
     })
 }

@@ -64,13 +64,20 @@ COMMANDS:
   generate                   run a closed-loop batch through the engine
       --model dit-sim --policy speca:N=5,O=2,tau0=0.3,beta=0.05 --n 8
       --inflight 8 --shards 1 --strategy binary --seed 0 --dump-pgm out/
-  serve                      start the TCP JSON-lines server
+  serve                      start the TCP JSON-lines server (protocol v2:
       --model dit-sim --addr 127.0.0.1:7433 --inflight 8 --shards 4
-      --router least-loaded|round-robin
-  load                       closed-loop load generator against a server
+      --router least-loaded|round-robin --max-queue 1024
+                             async op=submit/poll/wait/cancel + job ids,
+                             priorities, deadlines; v1 op=generate shim)
+  load                       load generator against a server
       --addr 127.0.0.1:7433 --n 32 --conns 4 --policy speca
+      --rate R               open-loop mode: Poisson arrivals at R req/s
+                             (ignores --conns; plus --deadline-ms N,
+                             --priority low|normal|high, --waiters W)
   bench <name>               regenerate a paper table/figure (see DESIGN.md)
       table1..table8 | drafts | fig2|fig6|fig8|fig9 | speedup-law
+      | serve-openloop (p50/p99/p999 + rejection rate vs arrival rate
+        → results/openloop.csv; --rates 0.5,1,2,4 --shards S)
       [--quick] [--n N] [--shards S]
       (micro perf: cargo bench --bench micro_runtime)
 
@@ -270,6 +277,9 @@ fn serve(args: &Args) -> Result<()> {
 }
 
 fn load(args: &Args) -> Result<()> {
+    if args.opt("rate").is_some() {
+        return load_open_loop(args);
+    }
     let cfg = client::LoadConfig {
         addr: args.str("addr", "127.0.0.1:7433"),
         connections: args.usize("conns", 4),
@@ -290,6 +300,45 @@ fn load(args: &Args) -> Result<()> {
         "latency ms: mean={mean:.1} p50={p50:.1} p95={p95:.1} p99={p99:.1}  \
          mean FLOPs-speedup={:.2}x",
         report.mean_speedup
+    );
+    Ok(())
+}
+
+/// `speca load --rate R`: open-loop mode — protocol v2 submits at Poisson
+/// arrival times, concurrent waiters, queueing-inclusive latency.
+fn load_open_loop(args: &Args) -> Result<()> {
+    let cfg = client::OpenLoopConfig {
+        addr: args.str("addr", "127.0.0.1:7433"),
+        rate: args.f64("rate", 1.0),
+        requests: args.usize("n", 32),
+        policy: args.str("policy", "speca:N=5,O=2"),
+        num_classes: args.usize("classes", 8),
+        seed: args.u64("seed", 0),
+        deadline_ms: args.opt("deadline-ms").map(|_| args.u64("deadline-ms", 0)),
+        priority: args.opt("priority").map(|s| s.to_string()),
+        waiters: args.usize("waiters", 8),
+    };
+    if cfg.rate <= 0.0 {
+        bail!("--rate expects a positive arrival rate in req/s");
+    }
+    let mut r = client::run_open_loop(&cfg)?;
+    println!(
+        "open-loop: offered={:.2} req/s achieved={:.2} req/s wall={:.2}s",
+        r.offered_rps, r.achieved_rps, r.wall_s
+    );
+    println!(
+        "submitted={} completed={} rejected={} aborted={} errors={} reject-rate={:.3}",
+        r.submitted,
+        r.completed,
+        r.rejected,
+        r.aborted,
+        r.errors,
+        r.reject_rate()
+    );
+    let (mean, p50, _p95, p99) = r.latency.summary();
+    println!(
+        "arrival→completion ms: mean={mean:.1} p50={p50:.1} p99={p99:.1} p999={:.1}",
+        r.latency.percentile(0.999)
     );
     Ok(())
 }

@@ -1,15 +1,21 @@
-//! Load-generating client for the serving benches (open/closed loop over N
-//! TCP connections, latency/throughput reporting).
+//! Load-generating client for the serving benches: closed-loop
+//! ([`run_load`] — N connections issuing blocking v1 generates
+//! back-to-back) and open-loop ([`run_open_loop`] — protocol v2 submits
+//! fired at Poisson arrival times regardless of completions, the
+//! arrival process the server cannot push back on), with
+//! latency/throughput/rejection reporting.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
+use std::sync::mpsc::{channel, Sender};
 use std::thread;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
 use crate::metrics::stats::Histogram;
 use crate::util::json::Json;
+use crate::workload::poisson_arrivals;
 
 #[derive(Debug, Clone)]
 /// Load-generator parameters.
@@ -136,6 +142,242 @@ pub fn run_load(cfg: &LoadConfig) -> Result<LoadReport> {
         } else {
             speeds.iter().sum::<f64>() / speeds.len() as f64
         },
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Open-loop load (protocol v2)
+// ---------------------------------------------------------------------------
+
+/// Open-loop load-generator parameters.
+#[derive(Debug, Clone)]
+pub struct OpenLoopConfig {
+    /// Server address to hit.
+    pub addr: String,
+    /// Target arrival rate in requests/second (Poisson process).
+    pub rate: f64,
+    /// Total requests to submit.
+    pub requests: usize,
+    /// policy description string (workload::parse_policy syntax)
+    pub policy: String,
+    /// Conditioning classes cycled round-robin.
+    pub num_classes: usize,
+    /// Seed of the arrival process (and of request seeds).
+    pub seed: u64,
+    /// Per-request relative deadline forwarded to the server (admission
+    /// sheds infeasible work; queued work past it is rejected).
+    pub deadline_ms: Option<u64>,
+    /// Priority class forwarded with every submit (`low|normal|high`).
+    pub priority: Option<String>,
+    /// Connections collecting completions via `op:"wait"` (jobs are
+    /// distributed round-robin; waits run concurrently with submission).
+    pub waiters: usize,
+}
+
+impl Default for OpenLoopConfig {
+    fn default() -> Self {
+        OpenLoopConfig {
+            addr: "127.0.0.1:7433".into(),
+            rate: 1.0,
+            requests: 32,
+            policy: "speca:N=5,O=2".into(),
+            num_classes: 8,
+            seed: 0,
+            deadline_ms: None,
+            priority: None,
+            waiters: 8,
+        }
+    }
+}
+
+/// Aggregated outcome of one open-loop run. Latency is measured from
+/// each request's *scheduled arrival time* to the return of its `wait`
+/// (so queueing delay counts, the open-loop convention). Each waiter
+/// connection waits its assigned jobs serially, so a job that finished
+/// while its waiter was still blocked on an earlier, slower job is
+/// attributed the later wait-return — recorded latency is an *upper
+/// bound*, tight when completions are roughly in submission order
+/// (FIFO shard queues) and when `waiters` comfortably exceeds the
+/// completion disorder; raise `waiters` to tighten tail percentiles.
+#[derive(Debug)]
+pub struct OpenLoopReport {
+    /// Submits attempted.
+    pub submitted: usize,
+    /// Jobs that completed.
+    pub completed: usize,
+    /// Jobs the server shed (admission or queued-deadline expiry).
+    pub rejected: usize,
+    /// Jobs cancelled/aborted server-side.
+    pub aborted: usize,
+    /// Protocol/transport failures.
+    pub errors: usize,
+    /// Wall-clock seconds of the whole run.
+    pub wall_s: f64,
+    /// Offered arrival rate: requests over the span the submits
+    /// actually covered (the ideal Poisson schedule, stretched when
+    /// submit-ack round-trips throttled it — so this is the attained
+    /// rate, not the requested one).
+    pub offered_rps: f64,
+    /// Completed requests per wall second.
+    pub achieved_rps: f64,
+    /// Arrival-to-completion latency distribution (ms).
+    pub latency: Histogram,
+}
+
+impl OpenLoopReport {
+    /// Fraction of submitted jobs the server shed.
+    pub fn reject_rate(&self) -> f64 {
+        if self.submitted == 0 {
+            return 0.0;
+        }
+        self.rejected as f64 / self.submitted as f64
+    }
+}
+
+/// Build the v2 submit line for one open-loop request.
+fn submit_line(cfg: &OpenLoopConfig, i: usize) -> String {
+    let mut pairs = vec![
+        ("op", Json::str("submit")),
+        ("cond", Json::Num((i % cfg.num_classes.max(1)) as f64)),
+        ("seed", Json::Num((cfg.seed.wrapping_mul(1_000_000) + i as u64) as f64)),
+        ("policy", Json::str(&cfg.policy)),
+    ];
+    if let Some(ms) = cfg.deadline_ms {
+        pairs.push(("deadline_ms", Json::Num(ms as f64)));
+    }
+    if let Some(p) = &cfg.priority {
+        pairs.push(("priority", Json::str(p)));
+    }
+    Json::obj(pairs).dump()
+}
+
+/// Waiter thread: collect terminal states for its share of the jobs.
+/// Returns (latencies ms, rejected, aborted, errors).
+fn open_loop_waiter(
+    addr: String,
+    rx: std::sync::mpsc::Receiver<(u64, Instant)>,
+) -> (Vec<f64>, usize, usize, usize) {
+    let (mut lats, mut rejected, mut aborted, mut errors) = (Vec::new(), 0usize, 0usize, 0usize);
+    let stream = TcpStream::connect(&addr).ok();
+    let mut io = stream.and_then(|s| {
+        let r = s.try_clone().ok()?;
+        Some((s, BufReader::new(r)))
+    });
+    for (job, sched) in rx.iter() {
+        let Some((stream, reader)) = io.as_mut() else {
+            errors += 1;
+            continue;
+        };
+        let ok = stream
+            .write_all(format!("{{\"op\":\"wait\",\"job\":{job}}}\n").as_bytes())
+            .is_ok();
+        let mut line = String::new();
+        if !ok || reader.read_line(&mut line).is_err() {
+            errors += 1;
+            io = None;
+            continue;
+        }
+        match Json::parse(&line) {
+            Err(_) => errors += 1,
+            Ok(resp) => match resp.get("state").and_then(|s| s.as_str()) {
+                Some("completed") => {
+                    lats.push(Instant::now().saturating_duration_since(sched).as_secs_f64() * 1e3);
+                }
+                Some("rejected") => rejected += 1,
+                Some("cancelled") | Some("aborted") => aborted += 1,
+                _ => errors += 1,
+            },
+        }
+    }
+    (lats, rejected, aborted, errors)
+}
+
+/// Drive the server open-loop: submits fire at Poisson arrival times
+/// ([`poisson_arrivals`]) on one connection (each acked immediately by
+/// the async `op:"submit"`), while `cfg.waiters` connections concurrently
+/// collect completions with consuming `op:"wait"`s. Unlike the
+/// closed-loop generator, a slow server does not throttle the arrival
+/// process — backlog, deadline shedding and rejection behaviour become
+/// observable.
+pub fn run_open_loop(cfg: &OpenLoopConfig) -> Result<OpenLoopReport> {
+    if cfg.rate <= 0.0 || !cfg.rate.is_finite() {
+        // rate 0 would make the Poisson gaps infinite and panic inside
+        // Duration::from_secs_f64 — fail with a message instead
+        bail!("open-loop rate must be a positive, finite req/s value (got {})", cfg.rate);
+    }
+    let arrivals = poisson_arrivals(cfg.requests, cfg.rate, cfg.seed);
+    let span_s = arrivals.last().copied().unwrap_or(0.0);
+    let mut stream =
+        TcpStream::connect(&cfg.addr).with_context(|| format!("connecting to {}", cfg.addr))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+
+    let waiters = cfg.waiters.max(1);
+    let mut txs: Vec<Sender<(u64, Instant)>> = Vec::with_capacity(waiters);
+    let mut handles = Vec::with_capacity(waiters);
+    for _ in 0..waiters {
+        let (tx, rx) = channel::<(u64, Instant)>();
+        let addr = cfg.addr.clone();
+        txs.push(tx);
+        handles.push(thread::spawn(move || open_loop_waiter(addr, rx)));
+    }
+
+    let t0 = Instant::now();
+    let (mut rejected, mut aborted, mut errors) = (0usize, 0usize, 0usize);
+    for (i, arr) in arrivals.iter().enumerate() {
+        let sched = t0 + Duration::from_secs_f64(*arr);
+        let now = Instant::now();
+        if sched > now {
+            thread::sleep(sched - now);
+        }
+        stream.write_all(submit_line(cfg, i).as_bytes())?;
+        stream.write_all(b"\n")?;
+        let mut line = String::new();
+        reader.read_line(&mut line).context("reading submit ack")?;
+        let resp = Json::parse(&line).context("parsing submit ack")?;
+        match (
+            resp.get("ok").and_then(|b| b.as_bool()),
+            resp.get("job").and_then(|j| j.as_u64()),
+            resp.get("state").and_then(|s| s.as_str()),
+        ) {
+            (Some(true), Some(job), _) => {
+                let _ = txs[i % waiters].send((job, sched));
+            }
+            (Some(false), _, Some("rejected")) => rejected += 1,
+            // admission-time aborts (unroutable submit / dead shards)
+            // are answered in the ack too — they are shed jobs, not
+            // protocol failures
+            (Some(false), _, Some("aborted") | Some("cancelled")) => aborted += 1,
+            _ => errors += 1,
+        }
+    }
+    // measure the span the submits actually covered: at rates near the
+    // ack round-trip the synchronous ack read throttles arrivals, and
+    // reporting the ideal schedule's rate would overstate offered load
+    let submit_span_s = t0.elapsed().as_secs_f64();
+    drop(txs);
+    let mut latency = Histogram::new();
+    let mut completed = 0usize;
+    for h in handles {
+        let (lats, rej, abt, errs) = h.join().unwrap();
+        completed += lats.len();
+        for l in lats {
+            latency.record(l);
+        }
+        rejected += rej;
+        aborted += abt;
+        errors += errs;
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    Ok(OpenLoopReport {
+        submitted: cfg.requests,
+        completed,
+        rejected,
+        aborted,
+        errors,
+        wall_s,
+        offered_rps: cfg.requests as f64 / submit_span_s.max(span_s).max(1e-9),
+        achieved_rps: completed as f64 / wall_s.max(1e-9),
+        latency,
     })
 }
 

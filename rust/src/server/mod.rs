@@ -3,43 +3,64 @@
 //! Two serving modes (DESIGN.md §8):
 //!
 //! * [`serve_sharded`] — the default for `Send + Sync` backends (native).
-//!   An [`EngineShardPool`] runs N engine loops over one shared backend;
-//!   connection threads route requests straight to shard queues through a
-//!   cloned [`ShardRouter`] (round-robin or least-loaded), and a single
-//!   dispatcher thread merges per-shard completion streams back to the
-//!   per-request reply channels. There is no central engine funnel.
+//!   A [`JobManager`] runs an `EngineShardPool` (N engine loops over one
+//!   shared backend) plus the shared job table; connection threads talk
+//!   straight to the manager — submission routes to shard queues through
+//!   its router, and status/wait reads go through the table's condvar,
+//!   so there is no central engine funnel and no per-request reply
+//!   channel plumbing.
 //! * [`serve`] — the legacy single-threaded loop, kept for backends whose
 //!   client is not `Send` (PJRT's is `Rc`-based): the engine runs on the
 //!   calling thread and connection threads hand work over one channel.
+//!   It speaks protocol v1 only.
 //!
-//! Protocol (one JSON object per line):
-//!   → {"op":"generate","cond":3,"seed":7,"policy":"speca","tau0":0.3,
-//!      "return_latent":false}
-//!   ← {"id":0,"ok":true,"stats":{...},"latent":[...]?}
-//!   → {"op":"stats"}            ← engine/pool-level counters
-//!   → {"op":"shutdown"}         ← drains in-flight work, then stops
+//! ## Protocol v2 (one JSON object per line)
 //!
-//! See `client.rs` for the load generator used by the serving benches.
+//! Job lifecycle ops — submission is asynchronous and acks immediately:
+//!
+//! ```text
+//! → {"op":"submit","cond":3,"seed":7,"policy":"speca","tau0":0.3,
+//!    "priority":"high","deadline_ms":5000,"return_latent":false}
+//! ← {"ok":true,"job":12,"state":"queued"}        (or "rejected" + error)
+//! → {"op":"poll","job":12}
+//! ← {"ok":true,"job":12,"state":"running","step":9,"accepts":6,"rejects":0}
+//! → {"op":"wait","job":12,"timeout_ms":30000}    (timeout optional)
+//! ← {"ok":true,"state":"completed","id":12,"stats":{...},"latent":[...]?}
+//! → {"op":"cancel","job":12}
+//! ← {"ok":true,"job":12,"state":"cancelling"}
+//! ```
+//!
+//! A `wait` that returns a terminal state **consumes** the job record
+//! (freeing its memory); `poll` never does, so polling a finished job is
+//! idempotent until some `wait` collects it. Terminal failures reply
+//! `ok:false` with `state` = `rejected` / `cancelled` / `aborted` and a
+//! human-readable `error`.
+//!
+//! v1 compatibility: `op:"generate"` (also the default when `op` is
+//! omitted) is a thin submit+wait shim — same reply shape as before,
+//! byte-identical error strings (`"queue full"`), so existing clients
+//! and tests keep working. `op:"stats"` reports pool counters plus
+//! per-shard live loads, dead-shard count and the job counters;
+//! `op:"shutdown"` drains in-flight work, then stops.
+//!
+//! See `client.rs` for the closed-loop and open-loop load generators.
 
 pub mod client;
 
-use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::thread;
 use std::time::Duration;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::cache::Draft;
+use crate::coordinator::job::{JobManager, JobStatus, Priority, SubmitOptions};
 use crate::coordinator::state::{Completion, RequestSpec};
-use crate::coordinator::{
-    Engine, EngineConfig, EngineShardPool, Policy, PoolConfig, PoolEvent, RouterPolicy,
-    ShardRouter,
-};
+use crate::coordinator::{Engine, EngineConfig, JobMeta, Policy, PoolConfig, RouterPolicy};
 use crate::runtime::ModelBackend;
 use crate::util::json::Json;
 use crate::workload::policy_from_json_with;
@@ -55,7 +76,7 @@ enum FrontendMsg {
 pub struct ServerConfig {
     /// TCP listen address.
     pub addr: String,
-    /// maximum requests in flight inside the engine(s)
+    /// maximum jobs in a non-terminal state (admission sheds the rest)
     pub max_queue: usize,
     /// engine worker threads for [`serve_sharded`]
     pub shards: usize,
@@ -111,87 +132,300 @@ fn error_json(msg: &str) -> String {
     Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::str(msg))]).dump()
 }
 
-/// Build a [`RequestSpec`] from a protocol request. Shared by both
-/// serving modes so the wire defaults (cond 0, seed = request id) cannot
-/// drift between them.
+/// The wire defaults shared by both serving modes, so they cannot
+/// drift: `cond` defaults to 0; a missing `seed` is `None` and the
+/// consumer substitutes the request id.
+fn wire_cond_seed(req: &Json) -> (i32, Option<u64>) {
+    (
+        req.get("cond").and_then(|c| c.as_f64()).unwrap_or(0.0) as i32,
+        req.get("seed").and_then(|s| s.as_u64()),
+    )
+}
+
+/// Build a [`RequestSpec`] from a v1 protocol request (legacy
+/// single-threaded loop; the sharded path builds specs inside
+/// [`JobManager::submit`] from the same [`wire_cond_seed`] defaults).
 fn spec_from_json(req: &Json, id: u64, policy: Policy) -> RequestSpec {
+    let (cond, seed) = wire_cond_seed(req);
     RequestSpec {
         id,
-        cond: req.get("cond").and_then(|c| c.as_f64()).unwrap_or(0.0) as i32,
-        seed: req.get("seed").and_then(|s| s.as_u64()).unwrap_or(id),
+        cond,
+        seed: seed.unwrap_or(id),
         policy,
         record_traj: false,
+        meta: JobMeta::default(),
     }
 }
 
 // ---------------------------------------------------------------------------
-// Sharded serving (native / any Send + Sync backend)
+// Sharded serving (native / any Send + Sync backend): protocol v2
 // ---------------------------------------------------------------------------
-
-/// A reply slot for one in-flight request.
-struct Waiter {
-    reply: Sender<String>,
-    return_latent: bool,
-}
 
 /// Everything a connection thread needs; cloned per connection.
 #[derive(Clone)]
 struct ConnCtx {
-    router: ShardRouter,
-    waiting: Arc<Mutex<HashMap<u64, Waiter>>>,
+    manager: Arc<JobManager>,
     accepting: Arc<AtomicBool>,
     shutdown: Sender<()>,
-    completed: Arc<AtomicU64>,
-    next_id: Arc<AtomicU64>,
-    max_queue: usize,
     depth: usize,
+    steps: usize,
+    full_flops: u64,
     default_draft: Option<Draft>,
 }
 
+/// Parse the v2 job options (`priority`, `deadline_ms`, `return_latent`)
+/// shared by `submit` and the v1 `generate` shim.
+fn submit_options_from_json(req: &Json) -> Result<SubmitOptions> {
+    let mut opts = SubmitOptions {
+        return_latent: req.get("return_latent").and_then(|b| b.as_bool()).unwrap_or(false),
+        ..SubmitOptions::default()
+    };
+    if let Some(p) = req.get("priority") {
+        let Some(s) = p.as_str() else {
+            bail!("'priority' must be \"low\"|\"normal\"|\"high\"");
+        };
+        opts.priority = Priority::parse(s)
+            .ok_or_else(|| anyhow::anyhow!("unknown priority '{s}' (low|normal|high)"))?;
+    }
+    if let Some(d) = req.get("deadline_ms") {
+        let Some(ms) = d.as_f64() else {
+            bail!("'deadline_ms' must be a number of milliseconds");
+        };
+        if ms < 0.0 {
+            bail!("'deadline_ms' must be non-negative, got {ms}");
+        }
+        opts.deadline_ms = Some(ms as u64);
+    }
+    Ok(opts)
+}
+
+/// Render a [`JobStatus`] as a protocol reply object (callers dump it,
+/// possibly after adding reply-specific fields like `timed_out`).
+fn status_json(ctx: &ConnCtx, id: u64, status: &JobStatus, return_latent: bool) -> Json {
+    let base = |ok: bool| {
+        vec![
+            ("ok", Json::Bool(ok)),
+            ("job", Json::Num(id as f64)),
+            ("state", Json::str(status.label())),
+        ]
+    };
+    match status {
+        JobStatus::Queued => Json::obj(base(true)),
+        JobStatus::Admitted { shard } => {
+            let mut p = base(true);
+            p.push(("shard", Json::Num(*shard as f64)));
+            Json::obj(p)
+        }
+        JobStatus::Running { step, accepts, rejects } => {
+            let mut p = base(true);
+            p.push(("step", Json::Num(*step as f64)));
+            p.push(("accepts", Json::Num(*accepts as f64)));
+            p.push(("rejects", Json::Num(*rejects as f64)));
+            Json::obj(p)
+        }
+        JobStatus::Completed(c) => {
+            // the v1 completion shape plus a state marker
+            match completion_json(c, return_latent, ctx.full_flops, ctx.steps) {
+                Json::Obj(mut m) => {
+                    m.insert("state".to_string(), Json::str("completed"));
+                    Json::Obj(m)
+                }
+                other => other,
+            }
+        }
+        JobStatus::Rejected { reason } => {
+            let mut p = base(false);
+            p.push(("error", Json::str(&reason.to_string())));
+            Json::obj(p)
+        }
+        JobStatus::Cancelled => {
+            let mut p = base(false);
+            p.push(("error", Json::str("cancelled by client")));
+            Json::obj(p)
+        }
+        JobStatus::Aborted { error } => {
+            let mut p = base(false);
+            p.push(("error", Json::str(error)));
+            Json::obj(p)
+        }
+    }
+}
+
+/// Parse + submit a job; shared by `op:"submit"` and the v1 shim.
+fn submit_from_json(ctx: &ConnCtx, req: &Json) -> Result<crate::coordinator::JobHandle> {
+    let opts = submit_options_from_json(req)?;
+    let policy = policy_from_json_with(req, ctx.depth, ctx.default_draft.as_ref())?;
+    let (cond, seed) = wire_cond_seed(req);
+    Ok(ctx.manager.submit(cond, seed, policy, opts))
+}
+
+/// `op:"submit"`: async job submission, acks immediately with the id.
+fn handle_submit(ctx: &ConnCtx, req: &Json) -> String {
+    if !ctx.accepting.load(Ordering::SeqCst) {
+        return error_json("server is shutting down");
+    }
+    let handle = match submit_from_json(ctx, req) {
+        Ok(h) => h,
+        Err(e) => return error_json(&format!("{e}")),
+    };
+    let id = handle.id().0;
+    // an admission-time failure (queue full / infeasible deadline /
+    // unroutable) is already terminal — surface it in the ack instead
+    // of a fake "queued". A job that merely raced ahead (admitted, or
+    // even completed on a fast backend) still acks "queued": it *was*
+    // queued, and poll/wait report the current state.
+    let status = handle.poll();
+    if matches!(status, JobStatus::Rejected { .. } | JobStatus::Aborted { .. }) {
+        let line = status_json(ctx, id, &status, false).dump();
+        // the ack itself is this job's final answer — no consuming wait
+        // will ever come. Admission rejections never entered the table;
+        // an unroutable-submit abort did, so reclaim that record now.
+        ctx.manager.forget(id);
+        line
+    } else {
+        Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("job", Json::Num(id as f64)),
+            ("state", Json::str("queued")),
+        ])
+        .dump()
+    }
+}
+
+fn job_id_of(req: &Json) -> Result<u64> {
+    req.get("job")
+        .and_then(|j| j.as_u64())
+        .ok_or_else(|| anyhow::anyhow!("missing numeric 'job' field"))
+}
+
+/// `op:"poll"`: non-blocking status snapshot; idempotent.
+fn handle_poll(ctx: &ConnCtx, req: &Json) -> String {
+    let id = match job_id_of(req) {
+        Ok(id) => id,
+        Err(e) => return error_json(&format!("{e}")),
+    };
+    match ctx.manager.poll(id) {
+        None => error_json(&format!("unknown job {id}")),
+        Some((status, rl)) => status_json(ctx, id, &status, rl).dump(),
+    }
+}
+
+/// `op:"wait"`: block until terminal (or `timeout_ms`); a terminal reply
+/// consumes the job record.
+fn handle_wait(ctx: &ConnCtx, req: &Json) -> String {
+    let id = match job_id_of(req) {
+        Ok(id) => id,
+        Err(e) => return error_json(&format!("{e}")),
+    };
+    let timeout = req
+        .get("timeout_ms")
+        .and_then(|t| t.as_f64())
+        .map(|ms| Duration::from_millis(ms.max(0.0) as u64));
+    match ctx.manager.wait(id, timeout, true) {
+        None => error_json(&format!("unknown job {id}")),
+        Some((status, rl)) => {
+            let mut j = status_json(ctx, id, &status, rl);
+            if !status.is_terminal() {
+                // timeout elapsed: mark it so clients can distinguish a
+                // still-running reply from a terminal one
+                if let Json::Obj(m) = &mut j {
+                    m.insert("timed_out".to_string(), Json::Bool(true));
+                }
+            }
+            j.dump()
+        }
+    }
+}
+
+/// `op:"cancel"`: fire the job's cancel token (the engine drops it at
+/// the next step boundary); acks immediately.
+fn handle_cancel(ctx: &ConnCtx, req: &Json) -> String {
+    let id = match job_id_of(req) {
+        Ok(id) => id,
+        Err(e) => return error_json(&format!("{e}")),
+    };
+    match ctx.manager.cancel(id) {
+        None => error_json(&format!("unknown job {id}")),
+        Some(status) => {
+            let state = if status.is_terminal() { status.label() } else { "cancelling" };
+            Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("job", Json::Num(id as f64)),
+                ("state", Json::str(state)),
+            ])
+            .dump()
+        }
+    }
+}
+
+/// v1 `op:"generate"` — the compat shim: submit + consuming wait, with
+/// the original reply shape and error strings.
 fn handle_generate(ctx: &ConnCtx, req: &Json) -> String {
     if !ctx.accepting.load(Ordering::SeqCst) {
         return error_json("server is shutting down");
     }
-    let return_latent = req.get("return_latent").and_then(|b| b.as_bool()).unwrap_or(false);
-    let policy = match policy_from_json_with(req, ctx.depth, ctx.default_draft.as_ref()) {
-        Ok(p) => p,
+    let handle = match submit_from_json(ctx, req) {
+        Ok(h) => h,
         Err(e) => return error_json(&format!("{e}")),
     };
-    let id = ctx.next_id.fetch_add(1, Ordering::SeqCst);
-    let spec = spec_from_json(req, id, policy);
-    let (rtx, rrx) = channel();
-    // admission + reply-slot registration are one critical section: the
-    // waiting map is exactly the set of admitted-but-unanswered requests,
-    // so checking its size under the lock enforces max_queue precisely
-    // even with many connection threads racing (check-then-submit on the
-    // router's load gauges would overshoot). Registering before
-    // submitting also means the completion can race ahead of this thread
-    // once the spec is on a shard queue.
-    {
-        let mut waiting = ctx.waiting.lock().unwrap();
-        if waiting.len() >= ctx.max_queue {
-            return error_json("queue full");
-        }
-        waiting.insert(id, Waiter { reply: rtx, return_latent });
+    let id = handle.id().0;
+    match ctx.manager.wait(id, None, true) {
+        // no table record: admission rejections never enter the table —
+        // the verdict lives on the handle (this is what keeps the v1
+        // "queue full" reply byte-identical)
+        None => match handle.poll() {
+            JobStatus::Rejected { reason } => error_json(&reason.to_string()),
+            JobStatus::Aborted { error } => error_json(&format!("request aborted: {error}")),
+            other => error_json(&format!("request did not finish (state {})", other.label())),
+        },
+        Some((status, rl)) => match status {
+            JobStatus::Completed(c) => {
+                completion_json(&c, rl, ctx.full_flops, ctx.steps).dump()
+            }
+            JobStatus::Rejected { reason } => error_json(&reason.to_string()),
+            JobStatus::Cancelled => error_json("request cancelled"),
+            JobStatus::Aborted { error } => error_json(&format!("request aborted: {error}")),
+            other => error_json(&format!("request did not finish (state {})", other.label())),
+        },
     }
-    if let Err(e) = ctx.router.submit(spec) {
-        ctx.waiting.lock().unwrap().remove(&id);
-        return error_json(&format!("{e}"));
-    }
-    rrx.recv().unwrap_or_else(|_| error_json("server stopped"))
 }
 
+/// `op:"stats"`: pool counters plus per-shard live data so operators can
+/// see load skew and dead shards without attaching a debugger.
 fn handle_stats(ctx: &ConnCtx) -> String {
-    let s = ctx.router.stats();
+    let s = ctx.manager.stats();
+    let counts = ctx.manager.counts();
+    let loads = ctx.manager.shard_loads();
+    let dead = loads.iter().filter(|l| **l == usize::MAX).count();
+    let shard_loads = Json::Arr(
+        loads
+            .iter()
+            .map(|l| if *l == usize::MAX { Json::Null } else { Json::Num(*l as f64) })
+            .collect(),
+    );
     Json::obj(vec![
         ("ok", Json::Bool(true)),
-        ("completed", Json::Num(ctx.completed.load(Ordering::SeqCst) as f64)),
+        ("completed", Json::Num(counts.completed as f64)),
         ("inflight", Json::Num(s.inflight as f64)),
-        ("shards", Json::Num(ctx.router.shards() as f64)),
+        ("shards", Json::Num(ctx.manager.shards() as f64)),
+        ("shard_loads", shard_loads),
+        ("dead_shards", Json::Num(dead as f64)),
         ("ticks", Json::Num(s.ticks as f64)),
         ("alpha", Json::Num(s.flops.acceptance_rate())),
         ("gamma", Json::Num(s.flops.gamma())),
         ("total_flops", Json::Num(s.flops.total() as f64)),
+        ("est_service_ms", Json::Num(ctx.manager.est_service_ms())),
+        (
+            "jobs",
+            Json::obj(vec![
+                ("submitted", Json::Num(counts.submitted as f64)),
+                ("completed", Json::Num(counts.completed as f64)),
+                ("rejected", Json::Num(counts.rejected as f64)),
+                ("cancelled", Json::Num(counts.cancelled as f64)),
+                ("aborted", Json::Num(counts.aborted as f64)),
+                ("live", Json::Num(ctx.manager.live() as f64)),
+            ]),
+        ),
     ])
     .dump()
 }
@@ -216,6 +450,10 @@ fn handle_conn_sharded(stream: TcpStream, ctx: ConnCtx) {
                     }
                     "stats" => handle_stats(&ctx),
                     "generate" => handle_generate(&ctx, &req),
+                    "submit" => handle_submit(&ctx, &req),
+                    "poll" => handle_poll(&ctx, &req),
+                    "wait" => handle_wait(&ctx, &req),
+                    "cancel" => handle_cancel(&ctx, &req),
                     // A request without an "op" key defaults to generate
                     // (matched above); anything else is a protocol error —
                     // falling through to generate would silently burn a
@@ -230,13 +468,13 @@ fn handle_conn_sharded(stream: TcpStream, ctx: ConnCtx) {
     }
 }
 
-/// Serve over an [`EngineShardPool`]: N engine loops on worker threads,
-/// direct connection→shard routing, merged completion dispatch. Blocks
+/// Serve over a [`JobManager`]: N engine loops on worker threads, the
+/// full protocol v2 job lifecycle plus the v1 `generate` shim. Blocks
 /// until a shutdown request arrives, drains in-flight work, then joins
-/// every thread. Every accepted request gets a reply: its completion
-/// under normal drain, or an explicit error if it raced the shutdown
-/// edge or its shard died — never a hang. Returns total completed
-/// requests.
+/// every thread. Every accepted job reaches exactly one terminal state
+/// (its completion under normal drain, or a structured
+/// rejected/cancelled/aborted reply), so a blocked `wait` can never
+/// hang. Returns total completed requests.
 pub fn serve_sharded(
     model: Arc<dyn ModelBackend + Send + Sync>,
     engine_cfg: EngineConfig,
@@ -251,60 +489,25 @@ pub fn serve_sharded(
         )
     };
 
-    let mut pool = EngineShardPool::new(
+    let manager = Arc::new(JobManager::new(
         model,
         PoolConfig { shards: cfg.shards.max(1), router: cfg.router, engine: engine_cfg },
-    );
-    let router = pool.router();
-    let events = pool.take_event_rx().expect("fresh pool has its event stream");
+        cfg.max_queue,
+    ));
 
     let listener = TcpListener::bind(&cfg.addr)?;
     let accepting = Arc::new(AtomicBool::new(true));
-    let waiting: Arc<Mutex<HashMap<u64, Waiter>>> = Arc::new(Mutex::new(HashMap::new()));
-    let completed = Arc::new(AtomicU64::new(0));
     let (shutdown_tx, shutdown_rx) = channel::<()>();
 
-    // dispatcher: merge per-shard events back to connection threads.
-    // Completions answer their waiter; aborts (a shard died on a backend
-    // error with this request in flight) answer with an explicit error,
-    // so no connection thread ever hangs on a dead shard.
-    let dispatcher = {
-        let waiting = waiting.clone();
-        let completed = completed.clone();
-        thread::spawn(move || {
-            for ev in events.iter() {
-                match ev {
-                    PoolEvent::Completed(c) => {
-                        completed.fetch_add(1, Ordering::SeqCst);
-                        let waiter = waiting.lock().unwrap().remove(&c.id);
-                        if let Some(w) = waiter {
-                            let line =
-                                completion_json(&c, w.return_latent, full_flops, steps).dump();
-                            let _ = w.reply.send(line);
-                        }
-                    }
-                    PoolEvent::Aborted { id, error } => {
-                        let waiter = waiting.lock().unwrap().remove(&id);
-                        if let Some(w) = waiter {
-                            let _ = w.reply.send(error_json(&format!("request aborted: {error}")));
-                        }
-                    }
-                }
-            }
-        })
-    };
-
-    // acceptor: one thread per connection, each with its own router clone
+    // acceptor: one thread per connection, each with its own manager Arc
     let acceptor = {
         let ctx = ConnCtx {
-            router: router.clone(),
-            waiting: waiting.clone(),
+            manager: manager.clone(),
             accepting: accepting.clone(),
             shutdown: shutdown_tx.clone(),
-            completed: completed.clone(),
-            next_id: Arc::new(AtomicU64::new(0)),
-            max_queue: cfg.max_queue,
             depth,
+            steps,
+            full_flops,
             default_draft: cfg.default_draft.clone(),
         };
         let accepting = accepting.clone();
@@ -326,9 +529,9 @@ pub fn serve_sharded(
     };
     drop(shutdown_tx);
     eprintln!(
-        "speca: serving on {} ({} shard(s), {:?} router)",
+        "speca: serving on {} (protocol v2, {} shard(s), {:?} router)",
         cfg.addr,
-        router.shards(),
+        manager.shards(),
         cfg.router
     );
 
@@ -339,21 +542,15 @@ pub fn serve_sharded(
     let _ = TcpStream::connect(&cfg.addr);
     let _ = acceptor.join();
 
-    // drain the shards (in-flight requests finish and reply), then stop
-    let drained = pool.shutdown(true);
-    let _ = dispatcher.join();
-    // backstop: no waiter may hang. Anything still in the map (a request
-    // that raced the shutdown edge, or one stranded on a shard that died
-    // with an error) gets an explicit error reply instead of silence.
-    for (_, w) in waiting.lock().unwrap().drain() {
-        let _ = w.reply.send(error_json("server stopped before completion"));
-    }
-    drained?;
-    Ok(completed.load(Ordering::SeqCst))
+    // drain the shards: every live job reaches a terminal state, which
+    // wakes every blocked wait through the job table's condvar — no
+    // waiter backstop needed
+    let out = manager.shutdown(true)?;
+    Ok(out.counts.completed)
 }
 
 // ---------------------------------------------------------------------------
-// Legacy single-threaded serving (non-Send backends, e.g. PJRT)
+// Legacy single-threaded serving (non-Send backends, e.g. PJRT): v1 only
 // ---------------------------------------------------------------------------
 
 fn handle_conn(stream: TcpStream, tx: Sender<FrontendMsg>) {
@@ -395,6 +592,12 @@ fn handle_conn(stream: TcpStream, tx: Sender<FrontendMsg>) {
                         }
                         rrx.recv().unwrap_or_else(|_| "{\"ok\":false}".to_string())
                     }
+                    // the async job lifecycle needs the shard pool's event
+                    // stream; the single-threaded loop has no dispatcher
+                    "submit" | "poll" | "wait" | "cancel" => error_json(
+                        "protocol v2 job ops need the sharded serving path \
+                         (a Send + Sync backend, e.g. --backend native)",
+                    ),
                     // see handle_conn_sharded for why unknown ops are errors
                     other => error_json(&format!("unknown op '{other}'")),
                 }
@@ -411,6 +614,8 @@ fn handle_conn(stream: TcpStream, tx: Sender<FrontendMsg>) {
 /// Run the serving loop on the current thread (owns the engine) until a
 /// shutdown request arrives. Returns total completed requests. Kept for
 /// backends that are not `Send` — prefer [`serve_sharded`] elsewhere.
+/// Speaks protocol v1 only (v2 job ops are rejected with a structured
+/// error naming the sharded path).
 pub fn serve(engine: &mut Engine<'_>, cfg: &ServerConfig) -> Result<u64> {
     let listener = TcpListener::bind(&cfg.addr)?;
     listener.set_nonblocking(false)?;
@@ -429,7 +634,7 @@ pub fn serve(engine: &mut Engine<'_>, cfg: &ServerConfig) -> Result<u64> {
             }
         }
     });
-    eprintln!("speca: serving on {} (single-threaded engine loop)", cfg.addr);
+    eprintln!("speca: serving on {} (single-threaded engine loop, protocol v1)", cfg.addr);
 
     let (depth, steps, full_flops) = {
         let entry = engine.model().entry();

@@ -5,6 +5,7 @@
 use anyhow::{bail, Result};
 
 use crate::cache::{Draft, DraftRegistry};
+use crate::coordinator::job::JobMeta;
 use crate::coordinator::policy::{ErrorMetric, Policy, SpeCaConfig};
 use crate::coordinator::state::RequestSpec;
 use crate::util::json::Json;
@@ -19,9 +20,10 @@ use crate::util::rng::Rng;
 ///   `taylorseer:N=5,O=2`
 ///   `speca:N=5,O=2,tau0=0.3,beta=0.05,layer=7,draft=taylor,metric=l2`
 /// Unspecified keys take the defaults above (`layer` defaults to depth−1).
-/// `draft=<name>` resolves through [`DraftRegistry::global`]
-/// (case-insensitive; unknown names error with the list of registered
-/// strategies).
+/// Malformed numeric values are an error naming the key (a typo like
+/// `tau0=abc` must not silently run with the default). `draft=<name>`
+/// resolves through [`DraftRegistry::global`] (case-insensitive; unknown
+/// names error with the list of registered strategies).
 pub fn parse_policy(desc: &str, depth: usize) -> Result<Policy> {
     let (name, rest) = match desc.split_once(':') {
         Some((n, r)) => (n, r),
@@ -34,30 +36,46 @@ pub fn parse_policy(desc: &str, depth: usize) -> Result<Policy> {
         };
         kv.insert(k.trim().to_string(), v.trim().to_string());
     }
-    let get_f = |k: &str, d: f64| kv.get(k).map(|v| v.parse().unwrap_or(d)).unwrap_or(d);
-    let get_u = |k: &str, d: usize| kv.get(k).map(|v| v.parse().unwrap_or(d)).unwrap_or(d);
+    let get_f = |k: &str, d: f64| -> Result<f64> {
+        match kv.get(k) {
+            None => Ok(d),
+            Some(v) => v.parse().map_err(|_| {
+                anyhow::anyhow!("policy '{desc}': key '{k}' expects a number, got '{v}'")
+            }),
+        }
+    };
+    let get_u = |k: &str, d: usize| -> Result<usize> {
+        match kv.get(k) {
+            None => Ok(d),
+            Some(v) => v.parse().map_err(|_| {
+                anyhow::anyhow!(
+                    "policy '{desc}': key '{k}' expects a non-negative integer, got '{v}'"
+                )
+            }),
+        }
+    };
 
     Ok(match name {
         "full" => Policy::Full,
-        "steps" | "step-reduction" => Policy::StepReduction { keep: get_u("keep", 25) },
-        "fora" => Policy::Fora { interval: get_u("N", 6) },
-        "teacache" => Policy::TeaCache { threshold: get_f("l", 0.8) },
+        "steps" | "step-reduction" => Policy::StepReduction { keep: get_u("keep", 25)? },
+        "fora" => Policy::Fora { interval: get_u("N", 6)? },
+        "teacache" => Policy::TeaCache { threshold: get_f("l", 0.8)? },
         "toca" | "toca-sim" => {
-            Policy::TocaSim { interval: get_u("N", 8), reuse_frac: get_f("R", 0.9) }
+            Policy::TocaSim { interval: get_u("N", 8)?, reuse_frac: get_f("R", 0.9)? }
         }
         "duca" | "duca-sim" => {
-            Policy::DucaSim { interval: get_u("N", 8), reuse_frac: get_f("R", 0.9) }
+            Policy::DucaSim { interval: get_u("N", 8)?, reuse_frac: get_f("R", 0.9)? }
         }
         "taylorseer" | "taylor" => {
-            Policy::TaylorSeer { interval: get_u("N", 5), order: get_u("O", 2) }
+            Policy::TaylorSeer { interval: get_u("N", 5)?, order: get_u("O", 2)? }
         }
         "speca" => {
             let mut c = SpeCaConfig::default_for_depth(depth);
-            c.interval = get_u("N", c.interval);
-            c.order = get_u("O", c.order);
-            c.tau0 = get_f("tau0", c.tau0);
-            c.beta = get_f("beta", c.beta);
-            c.verify_layer = get_u("layer", c.verify_layer);
+            c.interval = get_u("N", c.interval)?;
+            c.order = get_u("O", c.order)?;
+            c.tau0 = get_f("tau0", c.tau0)?;
+            c.beta = get_f("beta", c.beta)?;
+            c.verify_layer = get_u("layer", c.verify_layer)?;
             if let Some(d) = kv.get("draft") {
                 c.draft = DraftRegistry::global().resolve(d)?;
             }
@@ -156,6 +174,7 @@ pub fn batch_requests(
             seed: rng.next_u64(),
             policy: policy.clone(),
             record_traj,
+            meta: JobMeta::default(),
         })
         .collect()
 }
@@ -201,6 +220,28 @@ mod tests {
         assert!((c.beta - 0.1).abs() < 1e-12);
         assert_eq!(c.interval, 9);
         assert_eq!(c.verify_layer, 7);
+    }
+
+    #[test]
+    fn malformed_numeric_values_error_naming_the_key() {
+        // a typo must not silently run with the default value
+        for (desc, key) in [
+            ("speca:tau0=abc", "tau0"),
+            ("speca:N=x", "N"),
+            ("speca:beta=", "beta"),
+            ("speca:layer=2.5", "layer"),
+            ("fora:N=six", "N"),
+            ("steps:keep=-3", "keep"),
+            ("teacache:l=high", "l"),
+            ("toca:R=90%", "R"),
+            ("taylorseer:O=two", "O"),
+        ] {
+            let err = parse_policy(desc, 8).unwrap_err().to_string();
+            assert!(err.contains(&format!("'{key}'")), "{desc}: {err}");
+            assert!(err.contains(desc.split(':').next().unwrap()), "{desc}: {err}");
+        }
+        // well-formed values still parse
+        assert!(parse_policy("speca:tau0=0.3", 8).is_ok());
     }
 
     #[test]
@@ -278,11 +319,60 @@ mod tests {
     }
 
     #[test]
+    fn batch_requests_ids_seeds_and_meta() {
+        let reqs = batch_requests(16, 4, &Policy::Full, 7, false);
+        // ids are sequential from 0 (the engine/pool contract)
+        for (i, r) in reqs.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+            assert_eq!(r.cond, (i % 4) as i32);
+            // default job meta: old fire-and-forget semantics
+            assert_eq!(r.meta.priority, crate::coordinator::Priority::Normal);
+            assert!(r.meta.deadline.is_none());
+            assert!(!r.meta.cancel.is_cancelled());
+        }
+        // seeds are pairwise distinct and deterministic in the batch seed
+        let mut seeds: Vec<u64> = reqs.iter().map(|r| r.seed).collect();
+        seeds.sort_unstable();
+        seeds.dedup();
+        assert_eq!(seeds.len(), 16, "seeds must be pairwise distinct");
+        let again = batch_requests(16, 4, &Policy::Full, 7, false);
+        assert!(reqs.iter().zip(&again).all(|(a, b)| a.seed == b.seed));
+        let other = batch_requests(16, 4, &Policy::Full, 8, false);
+        assert!(reqs.iter().zip(&other).any(|(a, b)| a.seed != b.seed));
+    }
+
+    #[test]
     fn poisson_monotone() {
         let arr = poisson_arrivals(100, 50.0, 3);
         assert!(arr.windows(2).all(|w| w[0] < w[1]));
         // mean gap ≈ 1/rate
         let mean_gap = arr.last().unwrap() / 100.0;
         assert!((mean_gap - 0.02).abs() < 0.01, "{mean_gap}");
+    }
+
+    #[test]
+    fn poisson_deterministic_under_fixed_seed() {
+        let a = poisson_arrivals(256, 20.0, 42);
+        let b = poisson_arrivals(256, 20.0, 42);
+        assert_eq!(a, b, "same seed must reproduce the arrival process");
+        let c = poisson_arrivals(256, 20.0, 43);
+        assert_ne!(a, c, "different seeds must give different arrivals");
+        // prefix property: a shorter stream is a prefix of a longer one
+        let short = poisson_arrivals(64, 20.0, 42);
+        assert_eq!(&a[..64], &short[..]);
+    }
+
+    #[test]
+    fn poisson_empirical_rate_within_tolerance() {
+        for rate in [5.0, 50.0, 500.0] {
+            let n = 4000;
+            let arr = poisson_arrivals(n, rate, 9);
+            assert!(arr.windows(2).all(|w| w[0] < w[1]), "timestamps must be monotone");
+            assert!(arr[0] > 0.0);
+            let empirical = n as f64 / arr.last().unwrap();
+            let rel = (empirical - rate).abs() / rate;
+            // 4000 samples ⇒ the mean gap is within a few percent whp
+            assert!(rel < 0.08, "rate {rate}: empirical {empirical} (rel err {rel})");
+        }
     }
 }

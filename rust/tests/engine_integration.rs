@@ -202,6 +202,7 @@ fn check_mixed_policies_coexist(model: &dyn ModelBackend) {
             seed: 100 + i as u64,
             policy,
             record_traj: false,
+            meta: speca::coordinator::JobMeta::default(),
         });
     }
     let done = engine.run_to_completion().unwrap();

@@ -58,6 +58,13 @@ fn server_round_trip() {
         let err = resp.req("error").as_str().unwrap_or_default().to_string();
         assert!(err.contains("unknown op"), "unexpected error '{err}'");
 
+        // v2 job ops are a structured error on the single-threaded loop,
+        // pointing at the sharded path (not a silent unknown-op)
+        let resp = send(&mut stream, &mut reader, "{\"op\":\"poll\",\"job\":0}");
+        assert_eq!(resp.req("ok").as_bool(), Some(false));
+        let err = resp.req("error").as_str().unwrap_or_default().to_string();
+        assert!(err.contains("sharded"), "unexpected error '{err}'");
+
         // two generations with latents returned
         let mut latents = Vec::new();
         for seed in [1u64, 2u64] {
@@ -189,4 +196,111 @@ fn connect_for_test(addr: &str) -> TcpStream {
         thread::sleep(Duration::from_millis(50));
     }
     panic!("server did not come up at {addr}");
+}
+
+/// Protocol v2 round trip: async submit acks immediately with a job id,
+/// poll is an idempotent status snapshot, wait returns the completion
+/// and consumes the record, cancel on a finished job is a no-op, the
+/// stats op exposes per-shard live data, and the v1 generate shim keeps
+/// its original reply shape on the same server.
+#[test]
+fn protocol_v2_submit_poll_wait_cancel_round_trip() {
+    let model = Arc::new(NativeBackend::seeded(ModelConfig::native_test(), 0x5EED));
+    let addr = "127.0.0.1:17437";
+    let server = {
+        let model = model.clone();
+        thread::spawn(move || {
+            let cfg = ServerConfig {
+                addr: addr.to_string(),
+                max_queue: 64,
+                shards: 2,
+                ..ServerConfig::default()
+            };
+            serve_sharded(model, EngineConfig::default(), &cfg).unwrap()
+        })
+    };
+    let mut stream = connect_for_test(addr);
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+
+    // submit acks immediately with a job id (no completion payload)
+    let resp = send(
+        &mut stream,
+        &mut reader,
+        "{\"op\":\"submit\",\"seed\":5,\"policy\":\"speca\",\"N\":5,\
+         \"return_latent\":true,\"priority\":\"high\",\"deadline_ms\":600000}",
+    );
+    assert_eq!(resp.req("ok").as_bool(), Some(true), "{resp:?}");
+    assert_eq!(resp.req("state").as_str(), Some("queued"));
+    assert!(resp.get("latent").is_none(), "submit must not block for the result");
+    let job = resp.req("job").as_u64().expect("submit ack carries the job id");
+
+    // wait blocks until terminal and returns the full completion —
+    // including the latent recorded at submit time
+    let resp = send(&mut stream, &mut reader, &format!("{{\"op\":\"wait\",\"job\":{job}}}"));
+    assert_eq!(resp.req("ok").as_bool(), Some(true), "{resp:?}");
+    assert_eq!(resp.req("state").as_str(), Some("completed"));
+    assert!(resp.req("stats").req("speedup").as_f64().unwrap() > 0.0);
+    let latent = resp.req("latent").f32s();
+    assert!(!latent.is_empty() && latent.iter().all(|v| v.is_finite()));
+
+    // the consuming wait removed the record: poll now errors
+    let resp = send(&mut stream, &mut reader, &format!("{{\"op\":\"poll\",\"job\":{job}}}"));
+    assert_eq!(resp.req("ok").as_bool(), Some(false));
+    assert!(resp.req("error").as_str().unwrap_or_default().contains("unknown job"));
+
+    // poll is idempotent until a wait consumes the record
+    let resp =
+        send(&mut stream, &mut reader, "{\"op\":\"submit\",\"seed\":6,\"policy\":\"fora\",\"N\":4}");
+    assert_eq!(resp.req("ok").as_bool(), Some(true), "{resp:?}");
+    let job2 = resp.req("job").as_u64().unwrap();
+    let mut state = String::new();
+    for _ in 0..600 {
+        let resp = send(&mut stream, &mut reader, &format!("{{\"op\":\"poll\",\"job\":{job2}}}"));
+        state = resp.req("state").as_str().unwrap_or_default().to_string();
+        if state == "completed" {
+            break;
+        }
+        thread::sleep(Duration::from_millis(10));
+    }
+    assert_eq!(state, "completed", "job {job2} never completed");
+    let resp = send(&mut stream, &mut reader, &format!("{{\"op\":\"poll\",\"job\":{job2}}}"));
+    assert_eq!(resp.req("state").as_str(), Some("completed"), "poll must be idempotent");
+
+    // cancel of a finished job: the terminal state wins
+    let resp = send(&mut stream, &mut reader, &format!("{{\"op\":\"cancel\",\"job\":{job2}}}"));
+    assert_eq!(resp.req("ok").as_bool(), Some(true));
+    assert_eq!(resp.req("state").as_str(), Some("completed"));
+
+    // structured errors: unknown priority, unknown job id
+    let resp = send(&mut stream, &mut reader, "{\"op\":\"submit\",\"priority\":\"urgent\"}");
+    assert_eq!(resp.req("ok").as_bool(), Some(false));
+    assert!(resp.req("error").as_str().unwrap_or_default().contains("priority"));
+    let resp = send(&mut stream, &mut reader, "{\"op\":\"wait\",\"job\":9999}");
+    assert_eq!(resp.req("ok").as_bool(), Some(false));
+
+    // stats: per-shard live loads, dead-shard count, job counters
+    let resp = send(&mut stream, &mut reader, "{\"op\":\"stats\"}");
+    assert_eq!(resp.req("ok").as_bool(), Some(true));
+    assert_eq!(resp.req("shards").as_u64(), Some(2));
+    assert_eq!(resp.req("shard_loads").as_arr().map(|a| a.len()), Some(2));
+    assert_eq!(resp.req("dead_shards").as_u64(), Some(0));
+    let jobs = resp.req("jobs");
+    assert_eq!(jobs.req("completed").as_u64(), Some(2));
+    assert_eq!(jobs.req("submitted").as_u64(), Some(2), "the bad submit never got an id");
+
+    // v1 compat shim: generate still round-trips with its old shape
+    let resp = send(
+        &mut stream,
+        &mut reader,
+        "{\"op\":\"generate\",\"policy\":\"fora\",\"N\":4,\"seed\":9}",
+    );
+    assert_eq!(resp.req("ok").as_bool(), Some(true), "{resp:?}");
+    assert!(resp.req("stats").req("speedup").as_f64().unwrap() > 2.0);
+    assert!(resp.get("state").is_none(), "the v1 reply shape carries no state field");
+
+    stream.write_all(b"{\"op\":\"shutdown\"}\n").unwrap();
+    let mut line = String::new();
+    let _ = reader.read_line(&mut line);
+    let completed = server.join().unwrap();
+    assert_eq!(completed, 3);
 }

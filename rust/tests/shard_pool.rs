@@ -11,7 +11,9 @@ use std::time::Duration;
 
 use speca::config::{ModelConfig, ModelEntry};
 use speca::coordinator::state::{Completion, RequestSpec};
-use speca::coordinator::{EngineConfig, EngineShardPool, PoolConfig, PoolEvent, RouterPolicy};
+use speca::coordinator::{
+    EngineConfig, EngineShardPool, JobEvent, JobMeta, PoolConfig, RouterPolicy,
+};
 use speca::runtime::native::{synthetic_entry, NativeArch};
 use speca::runtime::{ModelBackend, NativeBackend};
 use speca::tensor::Tensor;
@@ -46,6 +48,7 @@ fn workload(depth: usize, classes: usize) -> Vec<RequestSpec> {
             seed: 1000 + i as u64,
             policy: parse_policy(d, depth).unwrap(),
             record_traj: false,
+            meta: JobMeta::default(),
         })
         .collect()
 }
@@ -197,6 +200,7 @@ fn slow_spec(id: u64, depth: usize, desc: &str) -> RequestSpec {
         seed: id,
         policy: parse_policy(desc, depth).unwrap(),
         record_traj: false,
+        meta: JobMeta::default(),
     }
 }
 
@@ -220,10 +224,15 @@ fn least_loaded_routing_skews_toward_idle_shards() {
     assert_eq!(s2, 0);
 
     // wait for the first cheap request to finish; the heavy one (60 ms of
-    // sleeps minimum) is still running, so shard 1 is idle again
-    let first_done = match rx.recv_timeout(Duration::from_secs(20)).expect("an event") {
-        PoolEvent::Completed(c) => c,
-        PoolEvent::Aborted { id, error } => panic!("request {id} aborted: {error}"),
+    // sleeps minimum) is still running, so shard 1 is idle again. The
+    // event stream now carries lifecycle chatter (Admitted / Progress)
+    // around the completions — skip it.
+    let first_done = loop {
+        match rx.recv_timeout(Duration::from_secs(20)).expect("an event") {
+            JobEvent::Completed(c) => break c,
+            JobEvent::Aborted { id, error } => panic!("request {id} aborted: {error}"),
+            _ => {}
+        }
     };
     assert_eq!(first_done.id, 1, "the cheap request on the idle shard finishes first");
     let s3 = pool.submit(slow_spec(3, depth, "steps:keep=2")).unwrap();
@@ -236,8 +245,9 @@ fn least_loaded_routing_skews_toward_idle_shards() {
     let mut leftover = Vec::new();
     while let Ok(ev) = rx.try_recv() {
         match ev {
-            PoolEvent::Completed(c) => leftover.push(c.id),
-            PoolEvent::Aborted { id, error } => panic!("request {id} aborted: {error}"),
+            JobEvent::Completed(c) => leftover.push(c.id),
+            JobEvent::Aborted { id, error } => panic!("request {id} aborted: {error}"),
+            _ => {}
         }
     }
     leftover.sort_unstable();
@@ -381,14 +391,16 @@ fn dead_shard_releases_load_gauge_and_aborts_waiters() {
     pool.submit(slow_spec(1, depth, "full")).unwrap();
 
     // every abandoned request gets an abort notice carrying the error
+    // (Admitted/Progress chatter may precede the aborts)
     let mut aborted_ids = Vec::new();
-    for _ in 0..2 {
+    while aborted_ids.len() < 2 {
         match events.recv_timeout(Duration::from_secs(20)).expect("an abort event") {
-            PoolEvent::Aborted { id, error } => {
+            JobEvent::Aborted { id, error } => {
                 assert!(error.contains("injected backend failure"), "got: {error}");
                 aborted_ids.push(id);
             }
-            PoolEvent::Completed(c) => panic!("request {} completed on a failing backend", c.id),
+            JobEvent::Completed(c) => panic!("request {} completed on a failing backend", c.id),
+            _ => {}
         }
     }
     aborted_ids.sort_unstable();
