@@ -7,9 +7,17 @@
 //! over compiled artifacts — the PJRT execution latencies, native-vs-PJRT
 //! draft prediction and the pallas-vs-jnp full pass.
 //!
-//! `--quick` (the CI bench-smoke leg: `cargo bench --bench micro_runtime
+//! `--quick` (the CI perf-gate leg: `cargo bench --bench micro_runtime
 //! -- --quick`) shrinks measurement windows and workload sizes so the
 //! whole suite exercises every path in seconds.
+//!
+//! Besides stdout, every run writes machine-readable results to
+//! `results/bench_micro.json` (`--out PATH` overrides): per-bench
+//! ns/iter + allocs/iter plus the deterministic steady-state
+//! allocations-per-tick probes the CI perf gate (`speca perfgate`)
+//! compares against the committed `BENCH_baseline.json` —
+//! EXPERIMENTS.md §Perf documents the schema and thresholds. This binary
+//! installs the counting allocator, so the allocs/iter column is live.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -21,10 +29,21 @@ use speca::coordinator::{Engine, EngineConfig, EngineShardPool, PoolConfig, Rout
 use speca::runtime::native::{synthetic_entry, NativeArch};
 use speca::runtime::{ModelBackend, NativeBackend};
 use speca::tensor::Tensor;
+use speca::util::alloc::CountingAllocator;
 use speca::util::cli::Args;
+use speca::util::json::Json;
 use speca::util::rng::Rng;
-use speca::util::timing::Bench;
+use speca::util::timing::{Bench, BenchResult};
 use speca::workload::{batch_requests, parse_policy};
+
+#[global_allocator]
+static ALLOC: CountingAllocator = CountingAllocator;
+
+/// Print one bench row and keep it for the JSON dump.
+fn emit(r: BenchResult, out: &mut Vec<BenchResult>) {
+    println!("{}", r.report());
+    out.push(r);
+}
 
 /// Zero-cost backend: every entry point returns zeros immediately, so an
 /// engine driving it measures pure coordinator overhead (planning, draft
@@ -102,8 +121,10 @@ impl ModelBackend for StubBackend {
 
 /// Steady-state tick benchmark: keep `b` requests in flight forever and
 /// time individual `tick()` calls (resubmission happens outside the timed
-/// closure's hot branch often enough to amortize to noise).
-fn bench_ticks(name: &str, model: &dyn ModelBackend, b: usize, ms: u64) {
+/// closure often enough to amortize to noise; those admission
+/// allocations are folded into the allocs/iter column — the strict
+/// zero-allocation claim belongs to the `alloc/steady_tick_*` probes).
+fn bench_ticks(name: &str, model: &dyn ModelBackend, b: usize, ms: u64) -> BenchResult {
     let cfg = &model.entry().config;
     let policy = parse_policy("speca:N=5,O=2,tau0=0.3,beta=0.05", cfg.depth).unwrap();
     let mut engine = Engine::from_ref(
@@ -111,7 +132,7 @@ fn bench_ticks(name: &str, model: &dyn ModelBackend, b: usize, ms: u64) {
         EngineConfig { max_inflight: b, ..EngineConfig::default() },
     );
     let mut seed = 0u64;
-    let r = Bench::new(name).min_time_ms(ms).run(|| {
+    Bench::new(name).min_time_ms(ms).run_counting(|| {
         if engine.pending() == 0 {
             seed += 1;
             for req in batch_requests(b, cfg.num_classes, &policy, seed, false) {
@@ -120,8 +141,47 @@ fn bench_ticks(name: &str, model: &dyn ModelBackend, b: usize, ms: u64) {
         }
         engine.tick().unwrap();
         engine.drain_completions();
-    });
-    println!("{}", r.report());
+    })
+}
+
+/// Dump every bench row + the steady-state probes as
+/// `results/bench_micro.json` (schema: EXPERIMENTS.md §Perf).
+fn write_json(
+    path: &str,
+    quick: bool,
+    results: &[BenchResult],
+    steady: &[(String, u64)],
+) -> anyhow::Result<()> {
+    let rows: Vec<Json> = results
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("name", Json::str(&r.name)),
+                ("iters", Json::Num(r.iters as f64)),
+                ("mean_ns", Json::Num(r.mean_ns)),
+                ("p50_ns", Json::Num(r.p50_ns)),
+                ("p99_ns", Json::Num(r.p99_ns)),
+                ("min_ns", Json::Num(r.min_ns)),
+                ("allocs_per_iter", r.allocs_per_iter.map(Json::Num).unwrap_or(Json::Null)),
+            ])
+        })
+        .collect();
+    let steady_rows: Vec<(&str, Json)> =
+        steady.iter().map(|(k, v)| (k.as_str(), Json::Num(*v as f64))).collect();
+    let doc = Json::obj(vec![
+        ("schema", Json::str("speca-bench-v1")),
+        ("mode", Json::str(if quick { "quick" } else { "full" })),
+        ("results", Json::Arr(rows)),
+        ("steady_state", Json::obj(steady_rows)),
+    ]);
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(path, doc.dump() + "\n")?;
+    println!("wrote {path}");
+    Ok(())
 }
 
 /// Shard-scaling sweep: push one fixed closed-loop workload through the
@@ -168,8 +228,9 @@ fn bench_shard_sweep(model: &Arc<NativeBackend>, quick: bool) -> anyhow::Result<
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
     let quick = args.bool("quick");
+    let out_path = args.str("out", "results/bench_micro.json");
     // measurement window per bench: long enough for stable p50s normally,
-    // just-touch-every-path in the CI bench-smoke leg
+    // just-touch-every-path in the CI perf-gate leg
     let ms: u64 = if quick { 10 } else { 200 };
     let model = Arc::new(NativeBackend::seeded(ModelConfig::native_test(), 0xBEEF));
     let entry = model.entry();
@@ -177,6 +238,7 @@ fn main() -> anyhow::Result<()> {
     let latent = cfg.latent_dim;
     let feat = cfg.tokens * cfg.dim;
     let mut rng = Rng::new(0);
+    let mut results: Vec<BenchResult> = Vec::new();
 
     println!(
         "== micro_runtime (native {}: dim={} depth={} tokens={}{}) ==",
@@ -195,7 +257,7 @@ fn main() -> anyhow::Result<()> {
             let y: Vec<i32> = vec![0; b];
             let r = Bench::new(&format!("native/{entry_point}_b{b}"))
                 .min_time_ms(ms)
-                .run(|| match entry_point {
+                .run_counting(|| match entry_point {
                     "full" => {
                         model.full(b, &x, &t, &y, false).unwrap();
                     }
@@ -206,7 +268,7 @@ fn main() -> anyhow::Result<()> {
                         model.head(b, &x, &t, &y).unwrap();
                     }
                 });
-            println!("{}", r.report());
+            emit(r, &mut results);
         }
     }
 
@@ -216,10 +278,10 @@ fn main() -> anyhow::Result<()> {
         let f = rng.normal_f32s(feat);
         let t = vec![entry.schedule.t_model[0]];
         let y = vec![0i32];
-        let full = Bench::new("gamma/full_b1").min_time_ms(ms).run(|| {
+        let full = Bench::new("gamma/full_b1").min_time_ms(ms).run_counting(|| {
             model.full(1, &x, &t, &y, false).unwrap();
         });
-        let block = Bench::new("gamma/block_b1").min_time_ms(ms).run(|| {
+        let block = Bench::new("gamma/block_b1").min_time_ms(ms).run_counting(|| {
             model.block(1, (cfg.depth - 1) as i32, &f, &t, &y).unwrap();
         });
         println!(
@@ -228,18 +290,36 @@ fn main() -> anyhow::Result<()> {
             entry.flops.block[&1] as f64 / entry.flops.full_step[&1] as f64,
             1.0 / cfg.depth as f64
         );
+        results.push(full);
+        results.push(block);
     }
 
     // --- L3 coordinator overhead: tick time at batch sizes 1/4/8 ----------
     // Stub backend ⇒ model time is zero, so this is the pure per-tick cost
     // of planning + draft prediction + scratch gathers + bookkeeping.
+    // These rows (and the alloc/steady probes below) are what the CI
+    // perf gate tracks against BENCH_baseline.json.
     let stub = StubBackend::new();
     for b in [1usize, 4, 8] {
-        bench_ticks(&format!("engine/tick_overhead_b{b}_stub"), &stub, b, ms);
+        let r = bench_ticks(&format!("engine/tick_overhead_b{b}_stub"), &stub, b, ms);
+        emit(r, &mut results);
     }
     // Same loop against the real native model for scale.
     for b in [1usize, 4, 8] {
-        bench_ticks(&format!("engine/tick_b{b}_native"), &*model, b, ms);
+        let r = bench_ticks(&format!("engine/tick_b{b}_native"), &*model, b, ms);
+        emit(r, &mut results);
+    }
+
+    // --- steady-state allocation discipline (the perf gate's hard rule,
+    // measured by the same shared probe tests/alloc_discipline.rs asserts)
+    let mut steady: Vec<(String, u64)> = Vec::new();
+    for b in [1usize, 4] {
+        let (allocs, ticks) = speca::workload::steady_state_alloc_probe(&model, b)?;
+        println!(
+            "alloc/steady_tick_b{b}: {allocs} allocations across {ticks} steady-state ticks \
+             (expected 0)"
+        );
+        steady.push((format!("steady_tick_allocs_b{b}"), allocs));
     }
 
     // --- draft prediction + cache refresh (native hot path) ---------------
@@ -250,26 +330,28 @@ fn main() -> anyhow::Result<()> {
             cache.refresh(&r2.normal_f32s(feat));
         }
         let mut out = vec![0f32; feat];
-        let native = Bench::new("predict/native_o2").min_time_ms(ms).run(|| {
+        let native = Bench::new("predict/native_o2").min_time_ms(ms).run_counting(|| {
             cache.predict_into(3.0, DraftKind::Taylor, &mut out);
         });
-        println!("{}", native.report());
+        emit(native, &mut results);
         // every registered strategy through the trait-object path
         // (EXPERIMENTS.md §Drafts: trait-dispatch overhead vs the enum
         // path, and the relative cost of the new richardson /
         // learned-linear drafts, read straight off these rows)
         for name in DraftRegistry::global().names() {
             let strategy = DraftRegistry::global().resolve(name).unwrap();
-            let r = Bench::new(&format!("predict/strategy_{name}")).min_time_ms(ms).run(|| {
-                cache.predict_with(&*strategy, 3.0, &mut out);
-            });
-            println!("{}", r.report());
+            let r = Bench::new(&format!("predict/strategy_{name}"))
+                .min_time_ms(ms)
+                .run_counting(|| {
+                    cache.predict_with(&*strategy, 3.0, &mut out);
+                });
+            emit(r, &mut results);
         }
         let f = rng.normal_f32s(feat);
-        let r = Bench::new("cache/refresh_o2").min_time_ms(ms).run(|| {
+        let r = Bench::new("cache/refresh_o2").min_time_ms(ms).run_counting(|| {
             cache.refresh(&f);
         });
-        println!("{}", r.report());
+        emit(r, &mut results);
     }
 
     // --- batching strategies end-to-end ------------------------------------
@@ -278,7 +360,7 @@ fn main() -> anyhow::Result<()> {
         let r = Bench::new(&format!("engine/6req_speca_{name}"))
             .min_time_ms(ms)
             .warmup(1)
-            .run(|| {
+            .run_counting(|| {
                 let mut engine = Engine::from_ref(
                     &*model,
                     EngineConfig { max_inflight: 6, strategy, use_pallas: false },
@@ -288,11 +370,13 @@ fn main() -> anyhow::Result<()> {
                 }
                 engine.run_to_completion().unwrap();
             });
-        println!("{}", r.report());
+        emit(r, &mut results);
     }
 
     // --- shard-pool scaling: 1/2/4 engine workers over one backend --------
     bench_shard_sweep(&model, quick)?;
+
+    write_json(&out_path, quick, &results, &steady)?;
 
     #[cfg(feature = "pjrt")]
     pjrt_benches()?;

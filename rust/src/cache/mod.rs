@@ -92,6 +92,9 @@ pub struct TapCache {
     updates: usize,
     /// nominal refresh spacing N used in the denominators
     interval: f32,
+    /// rolling-update staging buffer (allocated once at construction, so
+    /// steady-state refreshes never touch the allocator)
+    scratch: Vec<f32>,
 }
 
 impl TapCache {
@@ -102,6 +105,7 @@ impl TapCache {
             factors: vec![vec![0.0; feat_len]; order + 1],
             updates: 0,
             interval: interval as f32,
+            scratch: Vec::with_capacity(feat_len),
         }
     }
 
@@ -132,20 +136,21 @@ impl TapCache {
 
     /// Rolling backward-difference update with a freshly computed feature
     /// (mirrors kernels/taylor.py::taylor_update → tested for parity).
+    /// Allocation-free in steady state: the staging buffer is swapped
+    /// through the factor levels, so only capacities move.
     pub fn refresh(&mut self, feat: &[f32]) {
         assert_eq!(feat.len(), self.feat_len());
         let m1 = self.factors.len();
-        let mut prev: Vec<f32> = feat.to_vec();
+        // scratch carries "new Δⁱ" into level i; after the swap it holds
+        // the *old* Δⁱ and is rewritten to new Δⁱ⁺¹ = new Δⁱ − old Δⁱ
+        self.scratch.clear();
+        self.scratch.extend_from_slice(feat);
         for i in 0..m1 {
-            std::mem::swap(&mut self.factors[i], &mut prev);
+            std::mem::swap(&mut self.factors[i], &mut self.scratch);
             if i + 1 < m1 {
-                // next difference = new Δⁱ − old Δⁱ (old value now in `prev`)
-                let (cur, _) = (self.factors[i].clone(), ());
-                let mut next = cur;
-                for (n, o) in next.iter_mut().zip(prev.iter()) {
-                    *n -= o;
+                for (o, n) in self.scratch.iter_mut().zip(self.factors[i].iter()) {
+                    *o = *n - *o;
                 }
-                prev = next;
             }
         }
         self.updates += 1;
@@ -206,9 +211,20 @@ impl FeatureCache {
     /// Refresh every tap with its freshly computed boundary feature.
     pub fn refresh(&mut self, step: usize, feats: &[&[f32]]) {
         assert_eq!(feats.len(), self.taps.len());
-        for (tap, feat) in self.taps.iter_mut().zip(feats) {
+        self.refresh_iter(step, feats.iter().copied());
+    }
+
+    /// [`Self::refresh`] over an iterator of boundary slices — the
+    /// engine's hot-path form, which avoids materializing a `Vec<&[f32]>`
+    /// per refresh (DESIGN.md §11). The iterator must yield exactly one
+    /// feature per tap: both under- and over-supply panic (the same
+    /// exact-length contract as the slice form).
+    pub fn refresh_iter<'a>(&mut self, step: usize, mut feats: impl Iterator<Item = &'a [f32]>) {
+        for tap in self.taps.iter_mut() {
+            let feat = feats.next().expect("refresh must cover every tap");
             tap.refresh(feat);
         }
+        assert!(feats.next().is_none(), "refresh yielded more features than taps");
         self.last_refresh_step = Some(step);
     }
 
@@ -295,6 +311,34 @@ mod tests {
         assert!((ab - truth).abs() < (reuse - truth).abs());
         // order-2 error bound: |N·k·f''/2| + higher terms (Thm G.1 flavor)
         assert!((taylor - truth).abs() <= 2.0 * 2.0 * 2.0 / 2.0 + 1e-3);
+    }
+
+    #[test]
+    fn refresh_reuses_factor_capacity() {
+        // the rolling update recycles buffers through the scratch swap, so
+        // factor capacities are fixed after construction (zero-alloc path)
+        let mut cache = TapCache::new(2, 16, 5);
+        cache.refresh(&vec![1.0; 16]);
+        let caps: Vec<usize> = cache.factors().iter().map(|f| f.capacity()).collect();
+        for s in 0..10 {
+            cache.refresh(&vec![s as f32; 16]);
+        }
+        let after: Vec<usize> = cache.factors().iter().map(|f| f.capacity()).collect();
+        assert_eq!(caps, after);
+    }
+
+    #[test]
+    fn refresh_iter_matches_slice_refresh() {
+        let f1 = vec![1.0f32; 4];
+        let f2 = vec![2.0f32; 4];
+        let mut a = FeatureCache::new(2, 2, 4, 5);
+        let mut b = FeatureCache::new(2, 2, 4, 5);
+        a.refresh(3, &[&f1, &f2]);
+        b.refresh_iter(3, [f1.as_slice(), f2.as_slice()].into_iter());
+        for (ta, tb) in a.taps.iter().zip(&b.taps) {
+            assert_eq!(ta.factors(), tb.factors());
+        }
+        assert_eq!(a.last_refresh_step, b.last_refresh_step);
     }
 
     #[test]

@@ -31,33 +31,56 @@ impl BatchStrategy {
     }
 }
 
-/// One executable dispatch: `bucket` slots, the first `used` filled with
-/// the given member indices (the rest padded by replicating member 0).
-#[derive(Debug, Clone, PartialEq, Eq)]
+/// One executable dispatch: `bucket` slots, the first `len` filled with
+/// the contiguous member span `start..start + len` of the phase list (the
+/// rest padded by replicating member 0). A plain `Copy` span — chunk
+/// planning into a reused buffer is what keeps the engine's per-tick
+/// bookkeeping allocation-free (DESIGN.md §11).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Chunk {
     /// Compiled batch size this chunk dispatches at.
     pub bucket: usize,
-    /// Indices (into the phase list) of the occupied slots.
-    pub members: Vec<usize>,
+    /// First phase-list index of the occupied span.
+    pub start: usize,
+    /// Occupied slots (`start..start + len` are the members).
+    pub len: usize,
 }
 
 impl Chunk {
+    /// Indices (into the phase list) of the occupied slots, in order.
+    pub fn members(&self) -> std::ops::Range<usize> {
+        self.start..self.start + self.len
+    }
     /// Occupied slots.
     pub fn used(&self) -> usize {
-        self.members.len()
+        self.len
     }
     /// Padded (replicated) slots.
     pub fn padding(&self) -> usize {
-        self.bucket - self.members.len()
+        self.bucket - self.len
     }
 }
 
 /// Split `items` (indices into the tick's phase list) into chunks.
 /// `buckets` must be sorted ascending and non-empty.
 pub fn plan_chunks(n_items: usize, buckets: &[usize], strategy: BatchStrategy) -> Vec<Chunk> {
+    let mut chunks = Vec::new();
+    plan_chunks_into(n_items, buckets, strategy, &mut chunks);
+    chunks
+}
+
+/// [`plan_chunks`] into a reused buffer (cleared, then filled) — the
+/// engine's hot-path form; capacity persists across ticks so steady-state
+/// planning is allocation-free.
+pub fn plan_chunks_into(
+    n_items: usize,
+    buckets: &[usize],
+    strategy: BatchStrategy,
+    chunks: &mut Vec<Chunk>,
+) {
     assert!(!buckets.is_empty(), "no batch buckets");
     debug_assert!(buckets.windows(2).all(|w| w[0] < w[1]), "buckets must be sorted");
-    let mut chunks = Vec::new();
+    chunks.clear();
     let mut next = 0usize;
     let mut remaining = n_items;
     let largest = *buckets.last().unwrap();
@@ -73,11 +96,10 @@ pub fn plan_chunks(n_items: usize, buckets: &[usize], strategy: BatchStrategy) -
             }
         };
         let take = bucket.min(remaining);
-        chunks.push(Chunk { bucket, members: (next..next + take).collect() });
+        chunks.push(Chunk { bucket, start: next, len: take });
         next += take;
         remaining -= take;
     }
-    chunks
 }
 
 /// Gather per-member rows into a padded flat buffer of `bucket` rows,
@@ -93,9 +115,9 @@ pub fn gather_rows_into<F: Fn(usize, &mut [f32])>(
 ) {
     buf.clear();
     buf.resize(chunk.bucket * row_len, 0.0);
-    for (slot, m) in chunk.members.iter().enumerate() {
+    for (slot, m) in chunk.members().enumerate() {
         let (dst, _) = buf[slot * row_len..].split_at_mut(row_len);
-        fill(*m, dst);
+        fill(m, dst);
     }
     pad_rows(buf, chunk.used(), chunk.bucket, row_len);
 }
@@ -151,7 +173,7 @@ mod tests {
 
     #[test]
     fn gather_pads_with_first_member() {
-        let chunk = Chunk { bucket: 4, members: vec![10, 11] };
+        let chunk = Chunk { bucket: 4, start: 10, len: 2 };
         let mut buf = Vec::new();
         gather_rows_into(&mut buf, &chunk, 2, |m, dst| {
             dst[0] = m as f32;
@@ -163,15 +185,26 @@ mod tests {
     #[test]
     fn gather_into_reuses_buffer_across_sizes() {
         let mut buf = Vec::new();
-        let big = Chunk { bucket: 4, members: vec![0, 1, 2] };
+        let big = Chunk { bucket: 4, start: 0, len: 3 };
         gather_rows_into(&mut buf, &big, 3, |m, dst| dst.fill(m as f32));
         assert_eq!(buf.len(), 12);
         assert_eq!(&buf[9..12], &[0.0, 0.0, 0.0]); // padded with member 0
         let cap = buf.capacity();
-        let small = Chunk { bucket: 2, members: vec![5, 6] };
+        let small = Chunk { bucket: 2, start: 5, len: 2 };
         gather_rows_into(&mut buf, &small, 3, |m, dst| dst.fill(m as f32));
         assert_eq!(buf, vec![5.0, 5.0, 5.0, 6.0, 6.0, 6.0]);
         assert_eq!(buf.capacity(), cap, "no reallocation on shrink");
+    }
+
+    #[test]
+    fn plan_into_reuses_chunk_buffer() {
+        let mut chunks = Vec::new();
+        plan_chunks_into(7, BUCKETS, BatchStrategy::Binary, &mut chunks);
+        assert_eq!(chunks.len(), 3);
+        let cap = chunks.capacity();
+        plan_chunks_into(3, BUCKETS, BatchStrategy::Binary, &mut chunks);
+        assert_eq!(chunks.iter().map(Chunk::used).sum::<usize>(), 3);
+        assert_eq!(chunks.capacity(), cap, "steady-state planning must not reallocate");
     }
 
     /// Property: every member appears exactly once, in order, regardless of
@@ -186,7 +219,7 @@ mod tests {
                 BatchStrategy::PadUp
             };
             let chunks = plan_chunks(n, BUCKETS, strategy);
-            let flat: Vec<usize> = chunks.iter().flat_map(|c| c.members.clone()).collect();
+            let flat: Vec<usize> = chunks.iter().flat_map(|c| c.members()).collect();
             if flat != (0..n).collect::<Vec<_>>() {
                 return Err(format!("n={n} {strategy:?}: bad partition {flat:?}"));
             }

@@ -29,11 +29,12 @@
 //! scheduling loop drives the native CPU backend, PJRT artifacts, and
 //! whatever backends later PRs add — and N engines can share one
 //! `Send + Sync` backend from worker threads (the shard pool in
-//! `coordinator::pool`). Batch staging (the large latent/feature gather
-//! buffers) goes through reusable scratch buffers, so steady-state ticks
-//! avoid the dominant per-tick allocations; small index bookkeeping
-//! (chunk plans, member lists) still allocates — EXPERIMENTS.md §Perf
-//! quantifies the residual overhead.
+//! `coordinator::pool`). Every per-tick temporary — the large
+//! latent/feature gather buffers *and* the small index bookkeeping (chunk
+//! plans, phase lists, verify grouping, timestep-embedding staging) —
+//! lives in reusable scratch presized at construction, so a steady-state
+//! tick performs zero heap allocations on the native backend
+//! (`tests/alloc_discipline.rs` asserts it; DESIGN.md §11).
 
 use std::collections::VecDeque;
 use std::sync::Arc;
@@ -42,12 +43,14 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::cache::draft::{self, DraftStrategy};
-use crate::config::{Schedule, ScheduleKind};
-use crate::coordinator::batcher::{gather_rows_into, pad_rows, plan_chunks, BatchStrategy, Chunk};
+use crate::config::{ModelEntry, Schedule, ScheduleKind};
+use crate::coordinator::batcher::{
+    gather_rows_into, pad_rows, plan_chunks_into, BatchStrategy, Chunk,
+};
 use crate::coordinator::job::{JobProgress, Priority, Termination, TerminationCause};
 use crate::coordinator::policy::{Plan, Policy};
 use crate::coordinator::state::{Completion, ReqState, RequestSpec};
-use crate::math::{rel_l1, timestep_embedding};
+use crate::math::{rel_l1, timestep_embedding_into};
 use crate::metrics::flops::{FlopsCounter, FlopsModel};
 use crate::runtime::ModelBackend;
 use crate::sampler;
@@ -71,8 +74,9 @@ impl Default for EngineConfig {
     }
 }
 
-/// Reusable batch-staging buffers. Capacity persists across ticks, so the
-/// per-chunk gathers are pure copies after warmup.
+/// Reusable batch-staging buffers. Presized from the model entry at
+/// construction and capacity-stable across ticks, so the per-chunk
+/// gathers are pure copies from the first tick on.
 #[derive(Default)]
 struct Scratch {
     /// latent rows for full passes
@@ -85,6 +89,85 @@ struct Scratch {
     y: Vec<i32>,
     /// token-blended head inputs (ToCa/DuCa-sim)
     blend: Vec<f32>,
+    /// chunk plan of the dispatch currently executing
+    chunks: Vec<Chunk>,
+    /// heavy partition of a full phase (cache/blend/traj consumers)
+    heavy: Vec<usize>,
+    /// light partition of a full phase (eps-only requests)
+    light: Vec<usize>,
+}
+
+impl Scratch {
+    /// Scratch with every buffer's capacity covering the worst-case tick
+    /// of `max_inflight` requests over `entry`'s shapes.
+    fn for_model(entry: &ModelEntry, max_inflight: usize) -> Scratch {
+        let cfg = &entry.config;
+        let bucket = cfg.buckets.last().copied().unwrap_or(1).max(1);
+        let feat_len = cfg.tokens * cfg.dim;
+        Scratch {
+            x: Vec::with_capacity(bucket * cfg.latent_dim),
+            feat: Vec::with_capacity(bucket * feat_len),
+            t: Vec::with_capacity(bucket),
+            y: Vec::with_capacity(bucket),
+            blend: Vec::with_capacity(bucket * feat_len),
+            chunks: Vec::with_capacity(max_inflight.max(1)),
+            heavy: Vec::with_capacity(max_inflight.max(1)),
+            light: Vec::with_capacity(max_inflight.max(1)),
+        }
+    }
+}
+
+/// Per-tick phase lists (which request plans what) plus verify grouping.
+/// Taken out of the engine at the top of `tick()` and put back at the end
+/// so planning borrows never fight the `&mut self` dispatch helpers;
+/// capacities are presized to `max_inflight`, so steady-state planning is
+/// allocation-free.
+#[derive(Default)]
+struct PlanScratch {
+    full: Vec<usize>,
+    spec_verify: Vec<usize>,
+    spec_direct: Vec<usize>,
+    skip: Vec<usize>,
+    blend: Vec<usize>,
+    elide: Vec<usize>,
+    /// verify outcomes (accepted doubles as the head list)
+    accepted: Vec<usize>,
+    rejected: Vec<usize>,
+    /// (verify layer, request index) pairs, sorted to group by layer
+    verify_pairs: Vec<(usize, usize)>,
+    /// contiguous member list of the verify group being dispatched
+    verify_group: Vec<usize>,
+}
+
+impl PlanScratch {
+    fn with_capacity(n: usize) -> PlanScratch {
+        let n = n.max(1);
+        PlanScratch {
+            full: Vec::with_capacity(n),
+            spec_verify: Vec::with_capacity(n),
+            spec_direct: Vec::with_capacity(n),
+            skip: Vec::with_capacity(n),
+            blend: Vec::with_capacity(n),
+            elide: Vec::with_capacity(n),
+            accepted: Vec::with_capacity(n),
+            rejected: Vec::with_capacity(n),
+            verify_pairs: Vec::with_capacity(n),
+            verify_group: Vec::with_capacity(n),
+        }
+    }
+
+    fn clear(&mut self) {
+        self.full.clear();
+        self.spec_verify.clear();
+        self.spec_direct.clear();
+        self.skip.clear();
+        self.blend.clear();
+        self.elide.clear();
+        self.accepted.clear();
+        self.rejected.clear();
+        self.verify_pairs.clear();
+        self.verify_group.clear();
+    }
 }
 
 /// The SpeCa serving engine: one forecast-then-verify scheduling loop
@@ -108,15 +191,36 @@ pub struct Engine<'a> {
     pub flops: FlopsCounter,
     /// ticks executed since construction
     pub ticks: u64,
-    /// TeaCache drift signal dimension (heuristic, engine-local)
-    temb_dim: usize,
+    /// TeaCache drift per serve step: `drift[i] = rel_l1(emb(t_i),
+    /// emb(t_{i−1}))` over the fixed schedule (drift[0] = 0). Pure
+    /// function of the schedule, so it is precomputed once here instead
+    /// of evaluating two sinusoidal embeddings per TeaCache request per
+    /// tick on the hot path.
+    tea_drift: Vec<f64>,
     scratch: Scratch,
+    plan: PlanScratch,
 }
 
 impl<'a> Engine<'a> {
+    /// TeaCache drift signal dimension (heuristic, engine-local).
+    const TEMB_DIM: usize = 64;
+
     /// Build an engine over a shared (possibly thread-shared) backend.
     pub fn new(model: Arc<dyn ModelBackend + 'a>, cfg: EngineConfig) -> Engine<'a> {
         let flops_model = FlopsModel::new(model.entry().flops.clone());
+        let scratch = Scratch::for_model(model.entry(), cfg.max_inflight);
+        let plan = PlanScratch::with_capacity(cfg.max_inflight);
+        let t_model = &model.entry().schedule.t_model;
+        let mut tea_drift = vec![0.0f64; t_model.len()];
+        {
+            let mut cur = Vec::new();
+            let mut prev = Vec::new();
+            for i in 1..t_model.len() {
+                timestep_embedding_into(t_model[i], Self::TEMB_DIM, &mut cur);
+                timestep_embedding_into(t_model[i - 1], Self::TEMB_DIM, &mut prev);
+                tea_drift[i] = rel_l1(&cur, &prev);
+            }
+        }
         Engine {
             model,
             flops_model,
@@ -128,8 +232,9 @@ impl<'a> Engine<'a> {
             lifecycle_sensitive: false,
             flops: FlopsCounter::default(),
             ticks: 0,
-            temb_dim: 64,
-            scratch: Scratch::default(),
+            tea_drift,
+            scratch,
+            plan,
         }
     }
 
@@ -266,7 +371,10 @@ impl<'a> Engine<'a> {
             let Some(spec) = self.pop_next() else { break };
             let mut rng = Rng::new(spec.seed);
             let x = rng.normal_f32s(cfg.latent_dim);
-            let st = ReqState::new(spec, x, cfg.depth, cfg.tokens * cfg.dim);
+            let mut st = ReqState::new(spec, x, cfg.depth, cfg.tokens * cfg.dim);
+            // one upfront reservation (at most one verify-trace entry per
+            // serve step), so steady-state pushes never reallocate
+            st.stats.verify_trace.reserve(cfg.serve_steps);
             self.active.push(st);
         }
     }
@@ -288,59 +396,81 @@ impl<'a> Engine<'a> {
         let total = self.total_steps();
 
         // --- update TeaCache drift accumulators, then plan ---------------
-        let temb_dim = self.temb_dim;
-        for st in self.active.iter_mut() {
-            if let Policy::TeaCache { .. } = st.spec.policy {
-                if st.step > 0 {
-                    let cur = timestep_embedding(
-                        model.entry().schedule.t_model[st.step],
-                        temb_dim,
-                    );
-                    let prev = timestep_embedding(
-                        model.entry().schedule.t_model[st.step - 1],
-                        temb_dim,
-                    );
-                    st.tea_accum += rel_l1(&cur, &prev);
+        // (drift is a pure function of the step over the fixed schedule,
+        // precomputed at construction — one table lookup per request)
+        {
+            let Engine { active, tea_drift, .. } = &mut *self;
+            for st in active.iter_mut() {
+                if let Policy::TeaCache { .. } = st.spec.policy {
+                    if st.step > 0 {
+                        st.tea_accum += tea_drift[st.step];
+                    }
                 }
             }
         }
 
-        let mut full = Vec::new();
-        let mut spec_verify = Vec::new(); // SpeCa: needs verification
-        let mut spec_direct = Vec::new(); // TaylorSeer: head directly
-        let mut skip = Vec::new();
-        let mut blend = Vec::new();
-        let mut elide = Vec::new();
+        // phase lists live in presized scratch, taken out for the tick so
+        // the dispatch helpers below can borrow `&mut self` — and put
+        // back even when a dispatch errors, so a caller that recovers
+        // from a transient backend failure keeps the warm buffers
+        let mut tk = std::mem::take(&mut self.plan);
+        tk.clear();
         for (i, st) in self.active.iter().enumerate() {
             let plan = st.spec.policy.plan(st.step, total, st.since_full, st.tea_accum);
             match plan {
-                Plan::Full => full.push(i),
+                Plan::Full => tk.full.push(i),
                 Plan::Spec => {
                     if !st.cache.ready() {
-                        full.push(i);
+                        tk.full.push(i);
                     } else if matches!(st.spec.policy, Policy::SpeCa(_)) {
-                        spec_verify.push(i)
+                        tk.spec_verify.push(i)
                     } else {
-                        spec_direct.push(i)
+                        tk.spec_direct.push(i)
                     }
                 }
-                Plan::Skip => skip.push(i),
-                Plan::Blend => blend.push(i),
-                Plan::Elide => elide.push(i),
+                Plan::Skip => tk.skip.push(i),
+                Plan::Blend => tk.blend.push(i),
+                Plan::Elide => tk.elide.push(i),
             }
         }
-        for &i in &elide {
+        for &i in &tk.elide {
             let st = &mut self.active[i];
             st.stats.elided_steps += 1;
             st.step += 1;
             st.since_full += 1;
         }
 
+        let res = self.run_phases(&*model, &mut tk, total);
+        self.plan = tk;
+        res?;
+
+        // --- retire completed requests ------------------------------------
+        let total = self.total_steps();
+        let mut i = 0;
+        while i < self.active.len() {
+            if self.active[i].step >= total {
+                let st = self.active.swap_remove(i);
+                self.finish(st);
+            } else {
+                i += 1;
+            }
+        }
+        Ok(true)
+    }
+
+    /// The fallible dispatch phases of one tick (predictions, verify,
+    /// heads, skips, blends, fulls), over phase lists planned into `tk`.
+    fn run_phases(
+        &mut self,
+        model: &dyn ModelBackend,
+        tk: &mut PlanScratch,
+        total: usize,
+    ) -> Result<()> {
         // --- speculative phase: draft predictions ------------------------
         // The strategy is a trait object shared across shards (SpeCa
         // carries its `Draft` handle in the policy; cache policies
         // without one draft with the default Taylor strategy).
-        for &i in spec_verify.iter().chain(spec_direct.iter()) {
+        for &i in tk.spec_verify.iter().chain(tk.spec_direct.iter()) {
             let v = self.verify_layer_of(i);
             let depth = model.entry().config.depth;
             let st = &mut self.active[i];
@@ -374,26 +504,38 @@ impl<'a> Engine<'a> {
         }
 
         // --- verification (grouped by verify layer) ----------------------
-        let mut accepted = Vec::new();
-        let mut rejected = Vec::new();
-        if !spec_verify.is_empty() {
-            let mut by_layer: std::collections::BTreeMap<usize, Vec<usize>> =
-                std::collections::BTreeMap::new();
-            for &i in &spec_verify {
-                by_layer.entry(self.verify_layer_of(i)).or_default().push(i);
+        // Group by sorting (layer, index) pairs in presized scratch: same
+        // ascending-layer, ascending-index dispatch order the old BTreeMap
+        // grouping produced, without its per-tick allocations.
+        if !tk.spec_verify.is_empty() {
+            for &i in &tk.spec_verify {
+                tk.verify_pairs.push((self.verify_layer_of(i), i));
             }
-            for (layer, idxs) in by_layer {
-                self.run_verify(&*model, layer, &idxs, &mut accepted, &mut rejected)?;
+            tk.verify_pairs.sort_unstable();
+            let mut k = 0;
+            while k < tk.verify_pairs.len() {
+                let layer = tk.verify_pairs[k].0;
+                tk.verify_group.clear();
+                while k < tk.verify_pairs.len() && tk.verify_pairs[k].0 == layer {
+                    tk.verify_group.push(tk.verify_pairs[k].1);
+                    k += 1;
+                }
+                self.run_verify(
+                    &*model,
+                    layer,
+                    &tk.verify_group,
+                    &mut tk.accepted,
+                    &mut tk.rejected,
+                )?;
             }
         }
 
         // --- heads for accepted + direct speculations --------------------
-        let mut head_list = accepted;
-        head_list.extend(spec_direct.iter().copied());
-        self.run_heads(&*model, &head_list)?;
+        tk.accepted.extend_from_slice(&tk.spec_direct);
+        self.run_heads(&*model, &tk.accepted)?;
 
         // --- skips --------------------------------------------------------
-        for &i in &skip {
+        for &i in &tk.skip {
             let st = &mut self.active[i];
             let eps = std::mem::take(&mut st.last_eps);
             Self::apply_model_out(&model.entry().schedule, st, &eps, total);
@@ -405,11 +547,11 @@ impl<'a> Engine<'a> {
         }
 
         // --- blends (ToCa/DuCa-sim) ---------------------------------------
-        self.run_blend(&*model, &blend)?;
+        self.run_blend(&*model, &tk.blend)?;
 
         // --- full passes (planned + rejected fallbacks) -------------------
-        full.extend(rejected.iter().copied());
-        for &i in &rejected {
+        tk.full.extend_from_slice(&tk.rejected);
+        for &i in &tk.rejected {
             self.active[i].stats.rejects += 1;
             self.active[i].stats.flops.n_rejects += 1;
             // the speculative run ended in rejection: fire the advisory
@@ -419,20 +561,8 @@ impl<'a> Engine<'a> {
                 c.draft.reset();
             }
         }
-        self.run_full(&*model, &full)?;
-
-        // --- retire completed requests ------------------------------------
-        let total = self.total_steps();
-        let mut i = 0;
-        while i < self.active.len() {
-            if self.active[i].step >= total {
-                let st = self.active.swap_remove(i);
-                self.finish(st);
-            } else {
-                i += 1;
-            }
-        }
-        Ok(true)
+        self.run_full(&*model, &tk.full)?;
+        Ok(())
     }
 
     fn verify_layer_of(&self, i: usize) -> usize {
@@ -489,8 +619,8 @@ impl<'a> Engine<'a> {
         scratch.t.resize(chunk.bucket, 0.0);
         scratch.y.clear();
         scratch.y.resize(chunk.bucket, 0);
-        for (slot, m) in chunk.members.iter().enumerate() {
-            let st = &active[idxs[*m]];
+        for (slot, m) in chunk.members().enumerate() {
+            let st = &active[idxs[m]];
             scratch.t[slot] = sched.t_model[st.step];
             scratch.y[slot] = st.spec.cond;
         }
@@ -509,15 +639,33 @@ impl<'a> Engine<'a> {
             return Ok(());
         }
         let has_light = model.supports("full_eps");
-        let (heavy, light): (Vec<usize>, Vec<usize>) = idxs.iter().partition(|&&i| {
+        let mut heavy = std::mem::take(&mut self.scratch.heavy);
+        let mut light = std::mem::take(&mut self.scratch.light);
+        heavy.clear();
+        light.clear();
+        for &i in idxs {
             let st = &self.active[i];
-            !has_light
+            if !has_light
                 || st.spec.policy.uses_cache()
                 || st.spec.policy.reuse_frac() > 0.0
                 || st.spec.record_traj
-        });
-        self.run_full_light(model, &light)?;
-        let idxs = &heavy;
+            {
+                heavy.push(i);
+            } else {
+                light.push(i);
+            }
+        }
+        let res = self
+            .run_full_light(model, &light)
+            .and_then(|()| self.run_full_heavy(model, &heavy));
+        self.scratch.heavy = heavy;
+        self.scratch.light = light;
+        res
+    }
+
+    /// Boundary-materializing full passes (cache/blend/trajectory
+    /// consumers).
+    fn run_full_heavy(&mut self, model: &dyn ModelBackend, idxs: &[usize]) -> Result<()> {
         if idxs.is_empty() {
             return Ok(());
         }
@@ -527,36 +675,44 @@ impl<'a> Engine<'a> {
         let feat = cfg.tokens * cfg.dim;
         let depth = cfg.depth;
         let total = self.total_steps();
-        for chunk in plan_chunks(idxs.len(), &cfg.buckets, self.cfg.strategy) {
-            let members: Vec<usize> = chunk.members.iter().map(|m| idxs[*m]).collect();
-            self.gather_ty(&entry.schedule, &chunk, idxs);
+        let mut chunks = std::mem::take(&mut self.scratch.chunks);
+        plan_chunks_into(idxs.len(), &cfg.buckets, self.cfg.strategy, &mut chunks);
+        for chunk in &chunks {
+            self.gather_ty(&entry.schedule, chunk, idxs);
             {
                 let Engine { active, scratch, .. } = &mut *self;
-                gather_rows_into(&mut scratch.x, &chunk, latent, |m, dst| {
+                gather_rows_into(&mut scratch.x, chunk, latent, |m, dst| {
                     dst.copy_from_slice(&active[idxs[m]].x)
                 });
             }
-            let (eps, bounds) = model.full(
+            let dispatch = model.full(
                 chunk.bucket,
                 &self.scratch.x,
                 &self.scratch.t,
                 &self.scratch.y,
                 self.cfg.use_pallas,
-            )?;
+            );
+            let (eps, bounds) = match dispatch {
+                Ok(out) => out,
+                Err(e) => {
+                    self.scratch.chunks = chunks;
+                    return Err(e);
+                }
+            };
             // bounds: [L+1, bucket, T, D]
-            for (slot, &ri) in members.iter().enumerate() {
+            for (slot, m) in chunk.members().enumerate() {
+                let ri = idxs[m];
                 let st = &mut self.active[ri];
                 let eps_row = eps.row(slot);
                 if st.spec.policy.uses_cache() {
-                    let taps: Vec<&[f32]> = st
-                        .tap_boundaries
-                        .iter()
-                        .map(|b| {
+                    let bdata = &bounds.data;
+                    st.cache.refresh_iter(
+                        st.step,
+                        st.tap_boundaries.iter().map(|b| {
                             let off = (b * chunk.bucket + slot) * feat;
-                            &bounds.data[off..off + feat]
-                        })
-                        .collect();
-                    st.cache.refresh(st.step, &taps);
+                            &bdata[off..off + feat]
+                        }),
+                    );
                 }
                 // blend policies cache the last boundary
                 if st.spec.policy.reuse_frac() > 0.0 {
@@ -578,6 +734,7 @@ impl<'a> Engine<'a> {
                 st.since_full = 0;
             }
         }
+        self.scratch.chunks = chunks;
         Ok(())
     }
 
@@ -589,22 +746,31 @@ impl<'a> Engine<'a> {
         let entry = model.entry();
         let latent = entry.config.latent_dim;
         let total = self.total_steps();
-        for chunk in plan_chunks(idxs.len(), &entry.config.buckets, self.cfg.strategy) {
-            let members: Vec<usize> = chunk.members.iter().map(|m| idxs[*m]).collect();
-            self.gather_ty(&entry.schedule, &chunk, idxs);
+        let mut chunks = std::mem::take(&mut self.scratch.chunks);
+        plan_chunks_into(idxs.len(), &entry.config.buckets, self.cfg.strategy, &mut chunks);
+        for chunk in &chunks {
+            self.gather_ty(&entry.schedule, chunk, idxs);
             {
                 let Engine { active, scratch, .. } = &mut *self;
-                gather_rows_into(&mut scratch.x, &chunk, latent, |m, dst| {
+                gather_rows_into(&mut scratch.x, chunk, latent, |m, dst| {
                     dst.copy_from_slice(&active[idxs[m]].x)
                 });
             }
-            let eps = model.full_eps(
+            let dispatch = model.full_eps(
                 chunk.bucket,
                 &self.scratch.x,
                 &self.scratch.t,
                 &self.scratch.y,
-            )?;
-            for (slot, &ri) in members.iter().enumerate() {
+            );
+            let eps = match dispatch {
+                Ok(out) => out,
+                Err(e) => {
+                    self.scratch.chunks = chunks;
+                    return Err(e);
+                }
+            };
+            for (slot, m) in chunk.members().enumerate() {
+                let ri = idxs[m];
                 let st = &mut self.active[ri];
                 let eps_row = eps.row(slot);
                 st.last_eps.clear();
@@ -617,6 +783,7 @@ impl<'a> Engine<'a> {
                 st.since_full = 0;
             }
         }
+        self.scratch.chunks = chunks;
         Ok(())
     }
 
@@ -633,23 +800,32 @@ impl<'a> Engine<'a> {
         let entry = model.entry();
         let feat = entry.feat_len();
         let total = self.total_steps();
-        for chunk in plan_chunks(idxs.len(), &entry.config.buckets, self.cfg.strategy) {
-            let members: Vec<usize> = chunk.members.iter().map(|m| idxs[*m]).collect();
-            self.gather_ty(&entry.schedule, &chunk, idxs);
+        let mut chunks = std::mem::take(&mut self.scratch.chunks);
+        plan_chunks_into(idxs.len(), &entry.config.buckets, self.cfg.strategy, &mut chunks);
+        for chunk in &chunks {
+            self.gather_ty(&entry.schedule, chunk, idxs);
             {
                 let Engine { active, scratch, .. } = &mut *self;
-                gather_rows_into(&mut scratch.feat, &chunk, feat, |m, dst| {
+                gather_rows_into(&mut scratch.feat, chunk, feat, |m, dst| {
                     dst.copy_from_slice(&active[idxs[m]].pred_vin)
                 });
             }
-            let actual = model.block(
+            let dispatch = model.block(
                 chunk.bucket,
                 layer as i32,
                 &self.scratch.feat,
                 &self.scratch.t,
                 &self.scratch.y,
-            )?;
-            for (slot, &ri) in members.iter().enumerate() {
+            );
+            let actual = match dispatch {
+                Ok(out) => out,
+                Err(e) => {
+                    self.scratch.chunks = chunks;
+                    return Err(e);
+                }
+            };
+            for (slot, m) in chunk.members().enumerate() {
+                let ri = idxs[m];
                 let st = &mut self.active[ri];
                 let Policy::SpeCa(c) = &st.spec.policy else { unreachable!() };
                 let e = c.metric.eval(&st.pred_vout, actual.row(slot));
@@ -663,6 +839,7 @@ impl<'a> Engine<'a> {
                 }
             }
         }
+        self.scratch.chunks = chunks;
         Ok(())
     }
 
@@ -675,22 +852,31 @@ impl<'a> Engine<'a> {
         let entry = model.entry();
         let feat = entry.feat_len();
         let total = self.total_steps();
-        for chunk in plan_chunks(idxs.len(), &entry.config.buckets, self.cfg.strategy) {
-            let members: Vec<usize> = chunk.members.iter().map(|m| idxs[*m]).collect();
-            self.gather_ty(&entry.schedule, &chunk, idxs);
+        let mut chunks = std::mem::take(&mut self.scratch.chunks);
+        plan_chunks_into(idxs.len(), &entry.config.buckets, self.cfg.strategy, &mut chunks);
+        for chunk in &chunks {
+            self.gather_ty(&entry.schedule, chunk, idxs);
             {
                 let Engine { active, scratch, .. } = &mut *self;
-                gather_rows_into(&mut scratch.feat, &chunk, feat, |m, dst| {
+                gather_rows_into(&mut scratch.feat, chunk, feat, |m, dst| {
                     dst.copy_from_slice(&active[idxs[m]].pred_last)
                 });
             }
-            let eps = model.head(
+            let dispatch = model.head(
                 chunk.bucket,
                 &self.scratch.feat,
                 &self.scratch.t,
                 &self.scratch.y,
-            )?;
-            for (slot, &ri) in members.iter().enumerate() {
+            );
+            let eps = match dispatch {
+                Ok(out) => out,
+                Err(e) => {
+                    self.scratch.chunks = chunks;
+                    return Err(e);
+                }
+            };
+            for (slot, m) in chunk.members().enumerate() {
+                let ri = idxs[m];
                 let st = &mut self.active[ri];
                 let eps_row = eps.row(slot);
                 if st.spec.record_traj {
@@ -706,6 +892,7 @@ impl<'a> Engine<'a> {
                 st.since_full += 1;
             }
         }
+        self.scratch.chunks = chunks;
         Ok(())
     }
 
@@ -724,29 +911,37 @@ impl<'a> Engine<'a> {
         let tokens = cfg.tokens;
         let tok_len = cfg.dim;
         let total = self.total_steps();
-        for chunk in plan_chunks(idxs.len(), &cfg.buckets, self.cfg.strategy) {
-            let members: Vec<usize> = chunk.members.iter().map(|m| idxs[*m]).collect();
-            self.gather_ty(&entry.schedule, &chunk, idxs);
+        let mut chunks = std::mem::take(&mut self.scratch.chunks);
+        plan_chunks_into(idxs.len(), &cfg.buckets, self.cfg.strategy, &mut chunks);
+        for chunk in &chunks {
+            self.gather_ty(&entry.schedule, chunk, idxs);
             {
                 let Engine { active, scratch, .. } = &mut *self;
-                gather_rows_into(&mut scratch.x, &chunk, latent, |m, dst| {
+                gather_rows_into(&mut scratch.x, chunk, latent, |m, dst| {
                     dst.copy_from_slice(&active[idxs[m]].x)
                 });
             }
-            let (_eps, bounds) = model.full(
+            let dispatch = model.full(
                 chunk.bucket,
                 &self.scratch.x,
                 &self.scratch.t,
                 &self.scratch.y,
                 false,
-            )?;
+            );
+            let (_eps, bounds) = match dispatch {
+                Ok(out) => out,
+                Err(e) => {
+                    self.scratch.chunks = chunks;
+                    return Err(e);
+                }
+            };
             // blend per request, then head over the blended features
             {
                 let Engine { active, scratch, .. } = &mut *self;
                 scratch.blend.clear();
                 scratch.blend.resize(chunk.bucket * feat, 0.0);
-                for (slot, &ri) in members.iter().enumerate() {
-                    let st = &active[ri];
+                for (slot, m) in chunk.members().enumerate() {
+                    let st = &active[idxs[m]];
                     let frac = st.spec.policy.reuse_frac();
                     let off = (depth * chunk.bucket + slot) * feat;
                     let fresh = &bounds.data[off..off + feat];
@@ -754,7 +949,7 @@ impl<'a> Engine<'a> {
                     for tok in 0..tokens {
                         let reuse =
                             tok_hash(tok, st.step) < frac && !st.blend_feat.is_empty();
-                        let src = if reuse { &st.blend_feat } else { fresh };
+                        let src: &[f32] = if reuse { &st.blend_feat } else { fresh };
                         dst[tok * tok_len..(tok + 1) * tok_len]
                             .copy_from_slice(&src[tok * tok_len..(tok + 1) * tok_len]);
                     }
@@ -762,14 +957,22 @@ impl<'a> Engine<'a> {
                 // padding rows replicate slot 0 so every row is well-formed
                 pad_rows(&mut scratch.blend, chunk.used(), chunk.bucket, feat);
             }
-            let eps = model.head(
+            let dispatch = model.head(
                 chunk.bucket,
                 &self.scratch.blend,
                 &self.scratch.t,
                 &self.scratch.y,
-            )?;
+            );
+            let eps = match dispatch {
+                Ok(out) => out,
+                Err(e) => {
+                    self.scratch.chunks = chunks;
+                    return Err(e);
+                }
+            };
             let full_per = self.flops_model.table.full_step.get(&1).copied().unwrap_or(0);
-            for (slot, &ri) in members.iter().enumerate() {
+            for (slot, m) in chunk.members().enumerate() {
+                let ri = idxs[m];
                 let st = &mut self.active[ri];
                 let frac = st.spec.policy.reuse_frac();
                 let eps_row = eps.row(slot);
@@ -789,6 +992,7 @@ impl<'a> Engine<'a> {
                 st.since_full += 1;
             }
         }
+        self.scratch.chunks = chunks;
         Ok(())
     }
 }

@@ -151,6 +151,12 @@ pub struct JobMeta {
     pub deadline: Option<Instant>,
     /// Cancellation flag, checked at every step boundary.
     pub cancel: CancelToken,
+    /// Expected service time in milliseconds (0 = unknown). Set by the
+    /// [`JobManager`] from its per-policy EWMA at submission, and read by
+    /// [`ShardRouter`] least-loaded routing as the request's weight in
+    /// the per-shard *expected remaining work* gauge — so a shard holding
+    /// one heavy job yields to a shard holding two cheap ones.
+    pub cost_hint: f64,
 }
 
 impl JobMeta {
@@ -763,6 +769,10 @@ pub struct JobManager {
     counters: Arc<Counters>,
     /// EWMA of completed-job latency, stored as f64 bits (0 ⇒ no data).
     est_service_ms: Arc<AtomicU64>,
+    /// Per-policy-family latency EWMAs (keyed by [`Policy::name`]): the
+    /// service-time hints stamped onto submissions so the router weighs
+    /// expected remaining work rather than raw request counts.
+    policy_est_ms: Arc<Mutex<HashMap<String, f64>>>,
     pool: Mutex<Option<EngineShardPool>>,
     dispatcher: Mutex<Option<JoinHandle<()>>>,
     next_id: AtomicU64,
@@ -790,13 +800,15 @@ impl JobManager {
         let table = Arc::new(JobTable::new(max_queue.max(1)));
         let counters = Arc::new(Counters::default());
         let est = Arc::new(AtomicU64::new(0));
+        let policy_est = Arc::new(Mutex::new(HashMap::new()));
         let dispatcher = {
             let table = table.clone();
             let counters = counters.clone();
             let est = est.clone();
+            let policy_est = policy_est.clone();
             std::thread::Builder::new()
                 .name("speca-job-dispatcher".into())
-                .spawn(move || dispatch_events(events, &table, &counters, &est))
+                .spawn(move || dispatch_events(events, &table, &counters, &est, &policy_est))
                 .expect("spawning job dispatcher")
         };
         JobManager {
@@ -804,6 +816,7 @@ impl JobManager {
             table,
             counters,
             est_service_ms: est,
+            policy_est_ms: policy_est,
             pool: Mutex::new(Some(pool)),
             dispatcher: Mutex::new(Some(dispatcher)),
             next_id: AtomicU64::new(0),
@@ -857,6 +870,13 @@ impl JobManager {
         if let Some(d) = &opts.draft {
             crate::workload::apply_draft(&mut policy, d);
         }
+        // service-time hint for work-weighted routing: the policy
+        // family's own EWMA when it has completions, else the global one
+        // (0 before any completion — the router then weighs this job at
+        // the nominal unit, i.e. plain request counting)
+        let cost_hint = self
+            .est_for_policy(policy.name())
+            .unwrap_or_else(|| f64::from_bits(self.est_service_ms.load(Ordering::SeqCst)));
         let spec = RequestSpec {
             id,
             cond,
@@ -867,6 +887,7 @@ impl JobManager {
                 priority: opts.priority,
                 deadline: opts.deadline_ms.map(|ms| Instant::now() + Duration::from_millis(ms)),
                 cancel: cancel.clone(),
+                cost_hint,
             },
         };
         if let Err(e) = self.router.submit(spec) {
@@ -952,6 +973,13 @@ impl JobManager {
         f64::from_bits(self.est_service_ms.load(Ordering::SeqCst))
     }
 
+    /// Per-policy-family latency EWMA in ms (`None` before any completion
+    /// of that family) — the service-time hint stamped onto submissions
+    /// for work-weighted least-loaded routing.
+    pub fn est_for_policy(&self, policy: &str) -> Option<f64> {
+        self.policy_est_ms.lock().unwrap().get(policy).copied()
+    }
+
     /// Stop the pool (`drain`: finish everything admitted; `!drain`:
     /// abandon it) and join the dispatcher. Every live job reaches a
     /// terminal state before this returns, so blocked `wait`ers always
@@ -976,6 +1004,7 @@ fn dispatch_events(
     table: &JobTable,
     counters: &Counters,
     est_service_ms: &AtomicU64,
+    policy_est_ms: &Mutex<HashMap<String, f64>>,
 ) {
     for ev in events.iter() {
         match ev {
@@ -992,6 +1021,11 @@ fn dispatch_events(
                 let prev = f64::from_bits(est_service_ms.load(Ordering::SeqCst));
                 let next = if prev <= 0.0 { lat } else { 0.8 * prev + 0.2 * lat };
                 est_service_ms.store(next.to_bits(), Ordering::SeqCst);
+                {
+                    let mut g = policy_est_ms.lock().unwrap();
+                    let e = g.entry(c.policy_name.clone()).or_insert(lat);
+                    *e = 0.8 * *e + 0.2 * lat;
+                }
                 let id = c.id;
                 table.finish(id, JobStatus::Completed(Arc::from(c)), counters);
             }

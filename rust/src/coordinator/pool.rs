@@ -40,7 +40,8 @@
 //! for why the tombstone-then-drain order makes this race-free); the
 //! error itself resurfaces as `Err` from [`EngineShardPool::shutdown`].
 
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::Arc;
 use std::thread::{self, JoinHandle};
@@ -59,8 +60,14 @@ use crate::runtime::ModelBackend;
 pub enum RouterPolicy {
     /// Cycle through shards regardless of load.
     RoundRobin,
-    /// Pick the shard with the fewest requests in flight (ties go to the
-    /// lowest index, so routing is deterministic for a given load state).
+    /// Pick the shard with the least *expected remaining work* in flight
+    /// — the sum of each routed request's service-time hint
+    /// ([`crate::coordinator::JobMeta::cost_hint`], fed by the
+    /// [`JobManager`](crate::coordinator::job::JobManager)'s per-policy
+    /// EWMA). Unhinted requests weigh one nominal unit each, which
+    /// degrades exactly to fewest-requests-in-flight routing; ties go to
+    /// the smaller request count, then the lowest index, so routing is
+    /// deterministic for a given load state.
     LeastLoaded,
 }
 
@@ -74,19 +81,57 @@ impl RouterPolicy {
         }
     }
 
-    /// Pure routing decision over a load snapshot (`rr_ticket` is the
-    /// submission ordinal for round-robin).
-    pub fn pick(&self, loads: &[usize], rr_ticket: usize) -> usize {
+    /// Pure routing decision over a load snapshot: `loads` counts
+    /// requests in flight per shard (`usize::MAX` marks a dead shard),
+    /// `work` their summed expected-work weights (µ-units, see
+    /// [`work_weight_us`]), `rr_ticket` the submission ordinal for
+    /// round-robin. A dead shard's work gauge is stale (its weights are
+    /// never released), so least-loaded treats tombstoned shards as
+    /// infinitely heavy — they are only ever picked when every shard is
+    /// dead.
+    pub fn pick(&self, loads: &[usize], work: &[u64], rr_ticket: usize) -> usize {
         let n = loads.len().max(1);
         match self {
+            // round-robin never reads either gauge (callers may pass an
+            // empty work snapshot)
             RouterPolicy::RoundRobin => rr_ticket % n,
-            RouterPolicy::LeastLoaded => loads
-                .iter()
-                .enumerate()
-                .min_by_key(|(i, l)| (**l, *i))
-                .map(|(i, _)| i)
-                .unwrap_or(0),
+            RouterPolicy::LeastLoaded => {
+                debug_assert_eq!(loads.len(), work.len());
+                loads
+                    .iter()
+                    .enumerate()
+                    .min_by_key(|(i, l)| {
+                        let w = if **l == usize::MAX {
+                            u64::MAX
+                        } else {
+                            work.get(*i).copied().unwrap_or(u64::MAX)
+                        };
+                        (w, **l, *i)
+                    })
+                    .map(|(i, _)| i)
+                    .unwrap_or(0)
+            }
         }
+    }
+}
+
+/// Nominal work weight (µ-units) of a request without a service-time
+/// hint: one millisecond. Booked by [`work_weight_us`] at submit and
+/// used as the release fallback on any path where a shard worker has no
+/// recorded weight for an id — the two must stay identical or the work
+/// gauges drift.
+const NOMINAL_WORK_US: u64 = 1000;
+
+/// Expected-work weight of one request in the router's work gauges
+/// (microsecond units so the gauges stay integral atomics): the job's
+/// service-time hint when present, [`NOMINAL_WORK_US`] otherwise — so
+/// hinted and unhinted traffic compose, and an all-unhinted workload
+/// reduces to request counting.
+pub fn work_weight_us(spec: &RequestSpec) -> u64 {
+    if spec.meta.cost_hint > 0.0 {
+        ((spec.meta.cost_hint * 1000.0) as u64).max(1)
+    } else {
+        NOMINAL_WORK_US
     }
 }
 
@@ -178,6 +223,10 @@ pub struct ShardRouter {
     policy: RouterPolicy,
     txs: Vec<Sender<ShardMsg>>,
     loads: Vec<Arc<AtomicUsize>>,
+    /// expected remaining work per shard in µ-units ([`work_weight_us`]):
+    /// incremented at submit, released by the worker when the request
+    /// reaches any terminal state
+    work: Vec<Arc<AtomicU64>>,
     rr: Arc<AtomicUsize>,
 }
 
@@ -199,6 +248,13 @@ impl ShardRouter {
             .collect()
     }
 
+    /// Expected remaining work per shard in µ-units (the least-loaded
+    /// routing signal; a dead shard's value is meaningless and its
+    /// `loads()` tombstone is authoritative).
+    pub fn work_us(&self) -> Vec<u64> {
+        self.work.iter().map(|w| w.load(Ordering::SeqCst)).collect()
+    }
+
     /// Total requests in flight across live shards (a dead shard has
     /// released its in-flight accounting).
     pub fn inflight(&self) -> usize {
@@ -211,13 +267,23 @@ impl ShardRouter {
     /// have capacity; when every worker is gone this fails fast.
     pub fn submit(&self, spec: RequestSpec) -> Result<usize> {
         let mut spec = spec;
+        let weight = work_weight_us(&spec);
         let n = self.txs.len();
         let mut loads = self.loads();
+        // one work snapshot per submit, and none at all for round-robin
+        // (which ignores the gauges); retries only happen on dead shards,
+        // which the locally-updated `loads` already excludes
+        let work = match self.policy {
+            RouterPolicy::LeastLoaded => self.work_us(),
+            RouterPolicy::RoundRobin => Vec::new(),
+        };
         loop {
-            let mut shard = self.policy.pick(&loads, self.rr.fetch_add(1, Ordering::SeqCst));
+            let mut shard =
+                self.policy.pick(&loads, &work, self.rr.fetch_add(1, Ordering::SeqCst));
             if loads[shard] == usize::MAX {
-                // round-robin ignores load, so its pick can land on a
-                // known-dead shard; fall forward to the next live one
+                // round-robin ignores load (and a dead shard's stale work
+                // gauge can still look attractive), so a pick can land on
+                // a known-dead shard; fall forward to the next live one
                 match (0..n).map(|k| (shard + k) % n).find(|&s| loads[s] != usize::MAX) {
                     Some(live) => shard = live,
                     None => bail!("all shard workers are gone"),
@@ -230,6 +296,7 @@ impl ShardRouter {
                 loads[shard] = usize::MAX;
                 continue;
             }
+            self.work[shard].fetch_add(weight, Ordering::SeqCst);
             match self.txs[shard].send(ShardMsg::Submit(spec)) {
                 Ok(()) => {
                     // Close the death race: the worker tombstones its
@@ -254,6 +321,11 @@ impl ShardRouter {
                         Ordering::SeqCst,
                         |v| if v >= DEAD { None } else { Some(v - 1) },
                     );
+                    // the work gauge has no tombstone: a dead shard's
+                    // value is never read once loads() reports MAX, so a
+                    // plain undo is safe (and keeps live-path accounting
+                    // exact when the send failure races a drain)
+                    self.work[shard].fetch_sub(weight, Ordering::SeqCst);
                     loads[shard] = usize::MAX;
                     let ShardMsg::Submit(s) = unsent.0 else { unreachable!() };
                     spec = s;
@@ -323,39 +395,38 @@ impl EngineShardPool {
         let chatter = Arc::new(AtomicBool::new(false));
         let mut txs = Vec::with_capacity(shards);
         let mut loads = Vec::with_capacity(shards);
+        let mut work = Vec::with_capacity(shards);
         let mut workers = Vec::with_capacity(shards);
         for shard in 0..shards {
             let (tx, rx) = channel();
             let load = Arc::new(AtomicUsize::new(0));
+            let work_gauge = Arc::new(AtomicU64::new(0));
             let worker_model = model.clone();
             let worker_cfg = cfg.engine.clone();
-            let worker_load = load.clone();
-            let worker_ctx = ctx.clone();
-            let worker_chatter = chatter.clone();
+            let worker_ctx = ShardCtx {
+                shard,
+                load: load.clone(),
+                work: work_gauge.clone(),
+                events: ctx.clone(),
+                chatter: chatter.clone(),
+                weights: HashMap::new(),
+            };
             workers.push(
                 thread::Builder::new()
                     .name(format!("speca-shard-{shard}"))
-                    .spawn(move || {
-                        shard_worker(
-                            worker_model,
-                            worker_cfg,
-                            shard,
-                            rx,
-                            worker_load,
-                            worker_ctx,
-                            worker_chatter,
-                        )
-                    })
+                    .spawn(move || shard_worker(worker_model, worker_cfg, worker_ctx, rx))
                     .expect("spawning shard worker"),
             );
             txs.push(tx);
             loads.push(load);
+            work.push(work_gauge);
         }
         EngineShardPool {
             router: ShardRouter {
                 policy: cfg.router,
                 txs,
                 loads,
+                work,
                 rr: Arc::new(AtomicUsize::new(0)),
             },
             workers,
@@ -452,13 +523,37 @@ fn snapshot(engine: &Engine<'_>, completed: u64) -> ShardStats {
     }
 }
 
+/// Everything a shard worker needs besides its engine and channel: shard
+/// identity, the router-facing gauges, the merged event sender, the
+/// chatter switch, and the per-request work-weight ledger.
+struct ShardCtx {
+    shard: usize,
+    load: Arc<AtomicUsize>,
+    work: Arc<AtomicU64>,
+    events: Sender<JobEvent>,
+    chatter: Arc<AtomicBool>,
+    /// expected-work weight of every request this shard ingested, keyed
+    /// by id; released from the router's work gauge at each terminal
+    /// state so least-loaded routing tracks *remaining* work, not
+    /// cumulative throughput
+    weights: HashMap<u64, u64>,
+}
+
 /// Pull every message still queued on the shard channel into the engine
 /// (so work the router already counted is accounted for) and answer any
 /// pending stats probes. Used on the abandon paths only.
-fn ingest_remaining(engine: &mut Engine<'_>, rx: &Receiver<ShardMsg>, completed: u64) {
+fn ingest_remaining(
+    engine: &mut Engine<'_>,
+    rx: &Receiver<ShardMsg>,
+    ctx: &mut ShardCtx,
+    completed: u64,
+) {
     while let Ok(msg) = rx.try_recv() {
         match msg {
-            ShardMsg::Submit(spec) => engine.submit(spec),
+            ShardMsg::Submit(spec) => {
+                ctx.weights.insert(spec.id, work_weight_us(&spec));
+                engine.submit(spec)
+            }
             ShardMsg::Stats(reply) => {
                 let _ = reply.send(snapshot(engine, completed));
             }
@@ -469,19 +564,17 @@ fn ingest_remaining(engine: &mut Engine<'_>, rx: &Receiver<ShardMsg>, completed:
 
 /// Turn the engine's pending terminations (fired cancel tokens, queued
 /// deadlines) into lifecycle events. `release_load` decrements the load
-/// gauge per termination — true on the live path, false once the gauge
-/// is tombstoned (the tombstone already released all accounting).
-fn emit_terminations(
-    engine: &mut Engine<'_>,
-    load: &AtomicUsize,
-    events: &Sender<JobEvent>,
-    release_load: bool,
-) {
+/// and work gauges per termination — true on the live path, false once
+/// the gauge is tombstoned (the tombstone already released all
+/// accounting, and a dead shard's work gauge is never read).
+fn emit_terminations(engine: &mut Engine<'_>, ctx: &mut ShardCtx, release_load: bool) {
     for t in engine.drain_terminations() {
+        let w = ctx.weights.remove(&t.id).unwrap_or(NOMINAL_WORK_US);
         if release_load {
-            load.fetch_sub(1, Ordering::SeqCst);
+            ctx.load.fetch_sub(1, Ordering::SeqCst);
+            ctx.work.fetch_sub(w, Ordering::SeqCst);
         }
-        let _ = events.send(match t.cause {
+        let _ = ctx.events.send(match t.cause {
             TerminationCause::Cancelled => JobEvent::Cancelled { id: t.id },
             TerminationCause::DeadlineExpired => {
                 JobEvent::Rejected { id: t.id, reason: RejectReason::DeadlineExpired }
@@ -506,27 +599,23 @@ fn emit_terminations(
 fn abandon_inflight(
     engine: &mut Engine<'_>,
     rx: &Receiver<ShardMsg>,
-    load: &AtomicUsize,
-    events: &Sender<JobEvent>,
+    ctx: &mut ShardCtx,
     completed: u64,
     error: &str,
 ) {
-    load.store(DEAD, Ordering::SeqCst);
-    ingest_remaining(engine, rx, completed);
-    emit_terminations(engine, load, events, false);
+    ctx.load.store(DEAD, Ordering::SeqCst);
+    ingest_remaining(engine, rx, ctx, completed);
+    emit_terminations(engine, ctx, false);
     for id in engine.abandon() {
-        let _ = events.send(JobEvent::Aborted { id, error: error.to_string() });
+        let _ = ctx.events.send(JobEvent::Aborted { id, error: error.to_string() });
     }
 }
 
 fn shard_worker(
     model: Arc<dyn ModelBackend + Send + Sync>,
     cfg: EngineConfig,
-    shard: usize,
+    mut ctx: ShardCtx,
     rx: Receiver<ShardMsg>,
-    load: Arc<AtomicUsize>,
-    events: Sender<JobEvent>,
-    chatter: Arc<AtomicBool>,
 ) -> (ShardStats, Option<String>) {
     let model: Arc<dyn ModelBackend> = model;
     let mut engine = Engine::new(model, cfg);
@@ -560,9 +649,10 @@ fn shard_worker(
             match msg {
                 ShardMsg::Submit(spec) => {
                     let id = spec.id;
+                    ctx.weights.insert(id, work_weight_us(&spec));
                     engine.submit(spec);
-                    if chatter.load(Ordering::SeqCst) {
-                        let _ = events.send(JobEvent::Admitted { id, shard });
+                    if ctx.chatter.load(Ordering::SeqCst) {
+                        let _ = ctx.events.send(JobEvent::Admitted { id, shard: ctx.shard });
                     }
                 }
                 ShardMsg::Stats(reply) => {
@@ -570,7 +660,7 @@ fn shard_worker(
                 }
                 ShardMsg::Drain => draining = true,
                 ShardMsg::Halt => {
-                    abandon_inflight(&mut engine, &rx, &load, &events, completed, "shard halted");
+                    abandon_inflight(&mut engine, &rx, &mut ctx, completed, "shard halted");
                     return (snapshot(&engine, completed), None);
                 }
             }
@@ -582,23 +672,27 @@ fn shard_worker(
                 // from shutdown()
                 let err = format!("{e:#}");
                 eprintln!("speca: shard worker tick failed: {err}");
-                abandon_inflight(&mut engine, &rx, &load, &events, completed, &err);
+                abandon_inflight(&mut engine, &rx, &mut ctx, completed, &err);
                 return (snapshot(&engine, completed), Some(err));
             }
             for c in engine.drain_completions() {
                 completed += 1;
-                load.fetch_sub(1, Ordering::SeqCst);
-                let _ = events.send(JobEvent::Completed(Box::new(c)));
+                ctx.load.fetch_sub(1, Ordering::SeqCst);
+                ctx.work.fetch_sub(
+                    ctx.weights.remove(&c.id).unwrap_or(NOMINAL_WORK_US),
+                    Ordering::SeqCst,
+                );
+                let _ = ctx.events.send(JobEvent::Completed(Box::new(c)));
             }
             // cancelled / deadline-expired requests free their slot here
-            emit_terminations(&mut engine, &load, &events, true);
-            if chatter.load(Ordering::SeqCst) {
+            emit_terminations(&mut engine, &mut ctx, true);
+            if ctx.chatter.load(Ordering::SeqCst) {
                 // throttled to every 4th step (first included): `poll`
                 // needs coarse freshness, and one event per request per
                 // tick would serialize on the job-table mutex for nothing
                 for p in engine.progress() {
                     if p.step % 4 == 1 {
-                        let _ = events.send(JobEvent::Progress(p));
+                        let _ = ctx.events.send(JobEvent::Progress(p));
                     }
                 }
             }
@@ -607,7 +701,7 @@ fn shard_worker(
             // submit racing this edge is aborted with an explicit event,
             // not silently destroyed with the channel (when nothing
             // raced, the engine and channel are empty — no events fire)
-            abandon_inflight(&mut engine, &rx, &load, &events, completed, "shard shutting down");
+            abandon_inflight(&mut engine, &rx, &mut ctx, completed, "shard shutting down");
             return (snapshot(&engine, completed), None);
         }
     }
@@ -617,19 +711,51 @@ fn shard_worker(
 mod tests {
     use super::*;
 
+    /// Work gauge matching an unhinted load snapshot (the nominal unit
+    /// per request — what the router accumulates when no hint is set).
+    fn uniform_work(loads: &[usize]) -> Vec<u64> {
+        loads.iter().map(|l| *l as u64 * NOMINAL_WORK_US).collect()
+    }
+
     #[test]
     fn least_loaded_picks_min_with_deterministic_ties() {
         let p = RouterPolicy::LeastLoaded;
-        assert_eq!(p.pick(&[3, 1, 2], 0), 1);
-        assert_eq!(p.pick(&[2, 0, 0, 1], 7), 1, "tie breaks to lowest index");
-        assert_eq!(p.pick(&[0], 5), 0);
-        assert_eq!(p.pick(&[], 5), 0, "degenerate snapshot is safe");
+        assert_eq!(p.pick(&[3, 1, 2], &uniform_work(&[3, 1, 2]), 0), 1);
+        let l = [2usize, 0, 0, 1];
+        assert_eq!(p.pick(&l, &uniform_work(&l), 7), 1, "tie breaks to lowest index");
+        assert_eq!(p.pick(&[0], &[0], 5), 0);
+        assert_eq!(p.pick(&[], &[], 5), 0, "degenerate snapshot is safe");
+    }
+
+    #[test]
+    fn least_loaded_weighs_expected_work_over_request_counts() {
+        let p = RouterPolicy::LeastLoaded;
+        // shard 0 holds one heavy request (60 ms), shard 1 two cheap ones
+        // (5 ms each): expected-work routing picks the cheap backlog even
+        // though it holds more requests
+        assert_eq!(p.pick(&[1, 2], &[60_000, 10_000], 0), 1);
+        // equal work falls back to the smaller request count
+        assert_eq!(p.pick(&[2, 1], &[10_000, 10_000], 0), 1);
+    }
+
+    #[test]
+    fn least_loaded_never_prefers_a_dead_shard_on_stale_work() {
+        let p = RouterPolicy::LeastLoaded;
+        // shard 0 died holding one cheap job: its work gauge is frozen
+        // small, but the tombstone must outrank any live shard's backlog
+        let loads = [usize::MAX, 3, 1];
+        assert_eq!(p.pick(&loads, &[1_000, 90_000, 120_000], 0), 1);
+        // only when every shard is dead does the pick fall out at all
+        // (submit() then fails fast)
+        let all_dead = [usize::MAX, usize::MAX];
+        assert_eq!(p.pick(&all_dead, &[5, 1], 0), 0);
     }
 
     #[test]
     fn round_robin_cycles_regardless_of_load() {
         let p = RouterPolicy::RoundRobin;
-        let picks: Vec<usize> = (0..5).map(|t| p.pick(&[9, 0, 0], t)).collect();
+        let picks: Vec<usize> =
+            (0..5).map(|t| p.pick(&[9, 0, 0], &uniform_work(&[9, 0, 0]), t)).collect();
         assert_eq!(picks, vec![0, 1, 2, 0, 1]);
     }
 

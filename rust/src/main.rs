@@ -37,11 +37,103 @@ fn main() -> Result<()> {
         "serve" => serve(&args),
         "load" => load(&args),
         "bench" => speca::experiments::tables::run(&args),
+        "perfgate" => perfgate(&args),
         _ => {
             print!("{}", HELP);
             Ok(())
         }
     }
+}
+
+/// `speca perfgate --baseline B.json --current C.json [--tol 0.25]
+/// [--metric p50_ns|min_ns]`: compare a `micro_runtime` bench JSON
+/// against a baseline (EXPERIMENTS.md §Perf). Two rules:
+///
+/// * **steady-state allocs** — hard zero-regression: every
+///   `steady_state` counter in the baseline must be present and no
+///   larger in the current run (the committed baseline pins them at 0);
+/// * **tick overhead** — for every name in the baseline's `time_gated`
+///   list, the current time metric (default `p50_ns`; `min_ns` is the
+///   jitter-resistant choice for noisy shared runners) must sit within
+///   ±`tol` of the baseline's (a `null` baseline time skips that row
+///   with a warning — used by the committed baseline, which gates allocs
+///   machine-independently while CI gets its ±25% time check by
+///   comparing two same-runner runs).
+fn perfgate(args: &Args) -> Result<()> {
+    use speca::util::json::Json;
+
+    let baseline_path = args.str("baseline", "BENCH_baseline.json");
+    let current_path = args.str("current", "results/bench_micro.json");
+    let tol = args.f64("tol", 0.25);
+    let metric = args.str("metric", "p50_ns");
+    if !matches!(metric.as_str(), "p50_ns" | "min_ns" | "mean_ns" | "p99_ns") {
+        bail!("--metric must be one of p50_ns|min_ns|mean_ns|p99_ns, got '{metric}'");
+    }
+    let load_json = |path: &str| -> Result<Json> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+        Json::parse(&text).map_err(|e| anyhow::anyhow!("parsing {path}: {e}"))
+    };
+    let baseline = load_json(&baseline_path)?;
+    let current = load_json(&current_path)?;
+    let mut failures: Vec<String> = Vec::new();
+
+    // hard rule: steady-state allocation counters must not regress
+    if let Some(steady) = baseline.get("steady_state").and_then(|s| s.as_obj()) {
+        let cur_steady = current.get("steady_state");
+        for (key, want) in steady {
+            let want = want.as_f64().unwrap_or(0.0);
+            match cur_steady.and_then(|s| s.get(key)).and_then(|v| v.as_f64()) {
+                Some(got) if got <= want => {
+                    println!("perfgate: PASS  {key} = {got} (baseline {want})");
+                }
+                Some(got) => failures.push(format!(
+                    "{key}: {got} steady-state allocations regress the baseline of {want}"
+                )),
+                None => failures.push(format!("{key}: missing from {current_path}")),
+            }
+        }
+    }
+
+    // tolerance rule: gated bench rows stay within ±tol of the baseline
+    // time metric
+    let row_time = |doc: &Json, name: &str| -> Option<f64> {
+        doc.get("results")?.as_arr()?.iter().find_map(|r| {
+            if r.get("name").and_then(|n| n.as_str()) == Some(name) {
+                r.get(&metric).and_then(|v| v.as_f64())
+            } else {
+                None
+            }
+        })
+    };
+    if let Some(gated) = baseline.get("time_gated").and_then(|g| g.as_arr()) {
+        for name in gated.iter().filter_map(|n| n.as_str()) {
+            let Some(base) = row_time(&baseline, name) else {
+                println!(
+                    "perfgate: SKIP  {name} (baseline time is null — alloc gate only; \
+                     run the bench twice and compare run-vs-run for a same-machine time check)"
+                );
+                continue;
+            };
+            match row_time(&current, name) {
+                Some(cur) if (cur - base).abs() <= tol * base => println!(
+                    "perfgate: PASS  {name} {metric} {cur:.0} ns within ±{:.0}% of {base:.0} ns",
+                    tol * 100.0
+                ),
+                Some(cur) => failures.push(format!(
+                    "{name}: {metric} {cur:.0} ns outside ±{:.0}% of baseline {base:.0} ns",
+                    tol * 100.0
+                )),
+                None => failures.push(format!("{name}: missing from {current_path}")),
+            }
+        }
+    }
+
+    if !failures.is_empty() {
+        bail!("perf gate failed:\n  {}", failures.join("\n  "));
+    }
+    println!("perfgate: OK ({current_path} vs {baseline_path}, tol {tol})");
+    Ok(())
 }
 
 /// `speca --list-drafts`: print the draft-strategy registry.
@@ -79,7 +171,13 @@ COMMANDS:
       | serve-openloop (p50/p99/p999 + rejection rate vs arrival rate
         → results/openloop.csv; --rates 0.5,1,2,4 --shards S)
       [--quick] [--n N] [--shards S]
-      (micro perf: cargo bench --bench micro_runtime)
+      (micro perf: cargo bench --bench micro_runtime — also writes
+       results/bench_micro.json: ns/iter + allocs/iter per bench)
+  perfgate                   compare a micro_runtime bench JSON against a
+      --baseline BENCH_baseline.json --current results/bench_micro.json
+      --tol 0.25             baseline: hard zero-regression on steady-state
+      --metric p50_ns|min_ns alloc counts, ±tol on time-gated rows
+                             (EXPERIMENTS.md §Perf; the CI perf-gate leg)
 
 DRAFT STRATEGIES (DESIGN.md §10):
   --draft <name>             draft strategy for SpeCa policies: on generate

@@ -5,15 +5,26 @@
 
 /// Sinusoidal timestep embedding matching `python/compile/model.py`.
 pub fn timestep_embedding(t: f32, dim: usize) -> Vec<f32> {
+    let mut out = Vec::new();
+    timestep_embedding_into(t, dim, &mut out);
+    out
+}
+
+/// [`timestep_embedding`] into a reusable buffer (resized to `dim`, fully
+/// overwritten) — the hot-path variant the native conditioning path
+/// stages through (and the engine's TeaCache drift precomputation uses
+/// at construction), so steady-state embedding evaluations never touch
+/// the allocator.
+pub fn timestep_embedding_into(t: f32, dim: usize, out: &mut Vec<f32>) {
     let half = dim / 2;
-    let mut out = vec![0f32; dim];
+    out.clear();
+    out.resize(dim, 0.0);
     for i in 0..half {
         let freq = (-(10000f64.ln()) * i as f64 / half as f64).exp();
         let arg = t as f64 * freq;
         out[i] = arg.cos() as f32;
         out[half + i] = arg.sin() as f32;
     }
-    out
 }
 
 /// Relative L1 distance `‖a − b‖₁ / (‖b‖₁ + ε)` (TeaCache's drift signal).
@@ -45,5 +56,16 @@ mod tests {
     fn rel_l1_zero_on_equal() {
         let a = vec![1.0f32, -2.0];
         assert!(rel_l1(&a, &a) < 1e-12);
+    }
+
+    #[test]
+    fn into_variant_matches_and_reuses_capacity() {
+        let mut buf = Vec::new();
+        timestep_embedding_into(321.0, 64, &mut buf);
+        assert_eq!(buf, timestep_embedding(321.0, 64));
+        let cap = buf.capacity();
+        timestep_embedding_into(9.0, 64, &mut buf);
+        assert_eq!(buf.capacity(), cap, "steady-state reuse must not reallocate");
+        assert_eq!(buf, timestep_embedding(9.0, 64));
     }
 }

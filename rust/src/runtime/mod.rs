@@ -9,16 +9,21 @@
 //! * [`pjrt`] — AOT HLO artifacts executed through the PJRT C API;
 //!   compiled only with the `pjrt` cargo feature;
 //! * [`resolve`] — the shared `--backend native|pjrt|auto` resolver used
-//!   by the CLI and every experiment runner.
+//!   by the CLI and every experiment runner;
+//! * [`workspace`] — checkout pool of per-call forward-pass arenas, the
+//!   zero-allocation discipline behind the native hot path (DESIGN.md
+//!   §11).
 
 pub mod backend;
 pub mod native;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 pub mod resolve;
+pub mod workspace;
 
 pub use backend::{ClassifierBackend, ModelBackend};
 pub use native::{NativeBackend, NativeClassifier, NativeHub};
+pub use workspace::{Workspace, WorkspacePool};
 pub use resolve::{BackendRequest, ResolvedModel};
 #[cfg(feature = "pjrt")]
 pub use pjrt::{ClassifierRuntime, Exec, In, ModelRuntime, Runtime};

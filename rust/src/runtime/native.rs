@@ -13,6 +13,14 @@
 //! and the entry points satisfy `block(l, boundaries[l]) == boundaries[l+1]`
 //! and `head(boundaries[depth]) == eps` — the invariants the golden-parity
 //! suite asserts for the PJRT backend.
+//!
+//! Allocation contract (DESIGN.md §11): every per-call temporary lives in
+//! a [`Workspace`] checked out of a per-backend [`WorkspacePool`], and
+//! every result tensor draws its storage from a per-backend
+//! [`BufferPool`] that result drops refill — so after
+//! [`ModelBackend::warmup`] (or one call per entry point × bucket) the
+//! steady-state forward pass performs **zero heap allocations**. The
+//! trait signature is unchanged: the arena lives behind `&self`.
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
@@ -23,9 +31,10 @@ use anyhow::{bail, Context, Result};
 use crate::config::{
     FlopsTable, ModelConfig, ModelEntry, ParamSpec, Schedule, ScheduleKind,
 };
-use crate::math::timestep_embedding;
+use crate::math::timestep_embedding_into;
 use crate::runtime::backend::{ClassifierBackend, ModelBackend};
-use crate::tensor::Tensor;
+use crate::runtime::workspace::{Workspace, WorkspaceGuard, WorkspacePool};
+use crate::tensor::{BufferPool, Tensor};
 use crate::util::rng::Rng;
 use crate::weights::TensorFile;
 
@@ -81,6 +90,10 @@ pub struct NativeBackend {
     entry: ModelEntry,
     arch: NativeArch,
     w: Weights,
+    /// Per-call temporaries, checked out per forward (DESIGN.md §11).
+    ws: WorkspacePool,
+    /// Recycling pool for result-tensor storage.
+    out: BufferPool,
 }
 
 // ---------------------------------------------------------------------------
@@ -133,12 +146,14 @@ fn modulate(x: &mut [f32], shift: &[f32], scale: &[f32], tokens: usize, d: usize
     }
 }
 
-/// Softmax attention over an interleaved qkv buffer [T, 3D], writing [T, D].
-fn attention(qkv: &[f32], tokens: usize, d: usize, heads: usize, o: &mut [f32]) {
+/// Softmax attention over an interleaved qkv buffer [T, 3D], writing
+/// [T, D]. `probs` is caller-provided score scratch of length `tokens`
+/// (fully overwritten per query row).
+fn attention(qkv: &[f32], tokens: usize, d: usize, heads: usize, o: &mut [f32], probs: &mut [f32]) {
+    debug_assert_eq!(probs.len(), tokens);
     let dh = d / heads;
     let scale = 1.0 / (dh as f32).sqrt();
     let row = 3 * d;
-    let mut probs = vec![0f32; tokens];
     o.fill(0.0);
     for h in 0..heads {
         let off = h * dh;
@@ -333,7 +348,7 @@ impl NativeBackend {
             head_w,
             head_b: vec![0.0; pd],
         };
-        NativeBackend { entry, arch, w }
+        NativeBackend { entry, arch, w, ws: WorkspacePool::new(), out: BufferPool::new() }
     }
 
     /// Load trained weights from an AOT manifest entry's `weights.bin`
@@ -361,7 +376,7 @@ impl NativeBackend {
             if t.data.len() != len {
                 bail!("weight {name}: {} elements, expected {len}", t.data.len());
             }
-            Ok(t.data.clone())
+            Ok(t.data.to_vec())
         };
         // Stacked per-layer tensors [L, ...] are sliced into per-block rows.
         let layer = |name: &str, per: usize, li: usize| -> Result<Vec<f32>> {
@@ -401,7 +416,7 @@ impl NativeBackend {
             head_w: full("head_w", d * pd)?,
             head_b: full("head_b", pd)?,
         };
-        Ok(NativeBackend { entry, arch, w })
+        Ok(NativeBackend { entry, arch, w, ws: WorkspacePool::new(), out: BufferPool::new() })
     }
 
     /// The architecture knobs this backend was built with.
@@ -414,13 +429,25 @@ impl NativeBackend {
         cfg.patch * cfg.patch * cfg.channels
     }
 
-    /// [latent] -> token patches [T, pd] (layout mirrors model.py).
-    fn patchify(&self, x: &[f32]) -> Vec<f32> {
+    /// Check a forward-pass workspace out of this backend's pool.
+    fn workspace(&self) -> WorkspaceGuard<'_> {
+        self.ws.checkout(|| Workspace::for_model(&self.entry.config, &self.arch))
+    }
+
+    /// Workspaces materialized so far (≈ peak concurrent forward calls;
+    /// the alloc-discipline suite asserts it stops growing after warmup).
+    pub fn workspaces_created(&self) -> usize {
+        self.ws.created()
+    }
+
+    /// [latent] -> token patches [T, pd] (layout mirrors model.py),
+    /// written into `out` (fully overwritten).
+    fn patchify_into(&self, x: &[f32], out: &mut [f32]) {
         let cfg = &self.entry.config;
         let (fr, ch, img, p) = (cfg.frames, cfg.channels, cfg.image_size, cfg.patch);
         let hb = img / p;
         let pd = self.patch_dim();
-        let mut out = vec![0f32; cfg.tokens * pd];
+        debug_assert_eq!(out.len(), cfg.tokens * pd);
         for f in 0..fr {
             for bi in 0..hb {
                 for bj in 0..hb {
@@ -437,16 +464,16 @@ impl NativeBackend {
                 }
             }
         }
-        out
     }
 
-    /// [T, pd] -> [latent] (exact inverse of `patchify`).
-    fn unpatchify(&self, tok: &[f32]) -> Vec<f32> {
+    /// [T, pd] -> [latent] (exact inverse of `patchify_into`), written
+    /// into `out` (fully overwritten).
+    fn unpatchify_into(&self, tok: &[f32], out: &mut [f32]) {
         let cfg = &self.entry.config;
         let (fr, ch, img, p) = (cfg.frames, cfg.channels, cfg.image_size, cfg.patch);
         let hb = img / p;
         let pd = self.patch_dim();
-        let mut out = vec![0f32; cfg.latent_dim];
+        debug_assert_eq!(out.len(), cfg.latent_dim);
         for f in 0..fr {
             for bi in 0..hb {
                 for bj in 0..hb {
@@ -463,107 +490,104 @@ impl NativeBackend {
                 }
             }
         }
-        out
     }
 
-    /// silu(conditioning vector) for one sample: silu(MLP(sin-embed(t)) +
-    /// y_emb[y]). The silu is pre-applied because every consumer
-    /// (block adaLN, head adaLN) immediately feeds it through silu.
-    fn cond_silu(&self, t: f32, y: i32) -> Vec<f32> {
+    /// silu(conditioning vector) for one sample into `ws.cond`:
+    /// silu(MLP(sin-embed(t)) + y_emb[y]). The silu is pre-applied because
+    /// every consumer (block adaLN, head adaLN) immediately feeds it
+    /// through silu.
+    fn cond_silu_into(&self, ws: &mut Workspace, t: f32, y: i32) {
         let d = self.entry.config.dim;
         let fd = self.arch.t_freq_dim;
-        let te = timestep_embedding(t, fd);
-        let mut h = vec![0f32; d];
-        matmul_add(&te, &self.w.t_w1, &self.w.t_b1, 1, fd, d, &mut h);
-        for v in h.iter_mut() {
+        timestep_embedding_into(t, fd, &mut ws.temb);
+        matmul_add(&ws.temb, &self.w.t_w1, &self.w.t_b1, 1, fd, d, &mut ws.cond_h);
+        for v in ws.cond_h.iter_mut() {
             *v = silu(*v);
         }
-        let mut c = vec![0f32; d];
-        matmul_add(&h, &self.w.t_w2, &self.w.t_b2, 1, d, d, &mut c);
+        matmul_add(&ws.cond_h, &self.w.t_w2, &self.w.t_b2, 1, d, d, &mut ws.cond);
         let k = (y.rem_euclid(self.entry.config.num_classes as i32)) as usize;
-        for (cv, ev) in c.iter_mut().zip(&self.w.y_emb[k * d..(k + 1) * d]) {
+        for (cv, ev) in ws.cond.iter_mut().zip(&self.w.y_emb[k * d..(k + 1) * d]) {
             *cv += ev;
         }
-        for v in c.iter_mut() {
+        for v in ws.cond.iter_mut() {
             *v = silu(*v);
         }
-        c
     }
 
-    /// [latent] -> embedded tokens [T, D].
-    fn embed_tokens(&self, x_flat: &[f32]) -> Vec<f32> {
+    /// [latent] -> embedded tokens, written into `xt` (staged through
+    /// `ws.patches`).
+    fn embed_tokens_into(&self, x_flat: &[f32], ws: &mut Workspace, xt: &mut [f32]) {
         let cfg = &self.entry.config;
         let (t, d) = (cfg.tokens, cfg.dim);
         let pd = self.patch_dim();
-        let patches = self.patchify(x_flat);
-        let mut xt = vec![0f32; t * d];
-        matmul_add(&patches, &self.w.patch_w, &self.w.patch_b, t, pd, d, &mut xt);
+        self.patchify_into(x_flat, &mut ws.patches);
+        matmul_add(&ws.patches, &self.w.patch_w, &self.w.patch_b, t, pd, d, xt);
         for (v, p) in xt.iter_mut().zip(&self.w.pos_emb) {
             *v += p;
         }
-        xt
     }
 
-    /// One adaLN-zero DiT block in place on [T, D] tokens.
-    fn block_apply(&self, l: usize, x: &mut [f32], c_silu: &[f32]) {
+    /// One adaLN-zero DiT block in place on [T, D] tokens `x`, reading the
+    /// conditioning from `ws.cond` and staging through the workspace
+    /// buffers (`x` must not alias the workspace — callers temporarily
+    /// move `ws.xt` out when the trunk itself is block-applied).
+    fn block_apply(&self, l: usize, x: &mut [f32], ws: &mut Workspace) {
         let cfg = &self.entry.config;
         let (t, d) = (cfg.tokens, cfg.dim);
-        let feat = t * d;
         let bw = &self.w.blocks[l];
-        let mut mod6 = vec![0f32; 6 * d];
-        matmul_add(c_silu, &bw.adaln_w, &bw.adaln_b, 1, d, 6 * d, &mut mod6);
-        let (sh1, rest) = mod6.split_at(d);
+        matmul_add(&ws.cond, &bw.adaln_w, &bw.adaln_b, 1, d, 6 * d, &mut ws.mod6);
+        let (sh1, rest) = ws.mod6.split_at(d);
         let (s1, rest) = rest.split_at(d);
         let (g1, rest) = rest.split_at(d);
         let (sh2, rest) = rest.split_at(d);
         let (s2, g2) = rest.split_at(d);
         // attention branch
-        let mut h = vec![0f32; feat];
-        layer_norm(x, &mut h, t, d);
-        modulate(&mut h, sh1, s1, t, d);
-        let mut qkv = vec![0f32; t * 3 * d];
-        matmul_add(&h, &bw.qkv_w, &bw.qkv_b, t, d, 3 * d, &mut qkv);
-        let mut o = vec![0f32; feat];
-        attention(&qkv, t, d, cfg.heads, &mut o);
-        let mut proj = vec![0f32; feat];
-        matmul_add(&o, &bw.proj_w, &bw.proj_b, t, d, d, &mut proj);
+        layer_norm(x, &mut ws.norm, t, d);
+        modulate(&mut ws.norm, sh1, s1, t, d);
+        matmul_add(&ws.norm, &bw.qkv_w, &bw.qkv_b, t, d, 3 * d, &mut ws.qkv);
+        attention(&ws.qkv, t, d, cfg.heads, &mut ws.attn, &mut ws.probs);
+        matmul_add(&ws.attn, &bw.proj_w, &bw.proj_b, t, d, d, &mut ws.proj);
         for tok in 0..t {
             for j in 0..d {
-                x[tok * d + j] += g1[j] * proj[tok * d + j];
+                x[tok * d + j] += g1[j] * ws.proj[tok * d + j];
             }
         }
         // MLP branch
-        layer_norm(x, &mut h, t, d);
-        modulate(&mut h, sh2, s2, t, d);
+        layer_norm(x, &mut ws.norm, t, d);
+        modulate(&mut ws.norm, sh2, s2, t, d);
         let md = self.arch.mlp_ratio * d;
-        let mut m1 = vec![0f32; t * md];
-        matmul_add(&h, &bw.mlp_w1, &bw.mlp_b1, t, d, md, &mut m1);
-        for v in m1.iter_mut() {
+        matmul_add(&ws.norm, &bw.mlp_w1, &bw.mlp_b1, t, d, md, &mut ws.mlp_hidden);
+        for v in ws.mlp_hidden.iter_mut() {
             *v = silu(*v);
         }
-        let mut m2 = vec![0f32; feat];
-        matmul_add(&m1, &bw.mlp_w2, &bw.mlp_b2, t, md, d, &mut m2);
+        matmul_add(&ws.mlp_hidden, &bw.mlp_w2, &bw.mlp_b2, t, md, d, &mut ws.mlp_out);
         for tok in 0..t {
             for j in 0..d {
-                x[tok * d + j] += g2[j] * m2[tok * d + j];
+                x[tok * d + j] += g2[j] * ws.mlp_out[tok * d + j];
             }
         }
     }
 
-    /// Final adaLN + linear head on [T, D] tokens -> eps [latent].
-    fn head_tokens(&self, x: &[f32], c_silu: &[f32]) -> Vec<f32> {
+    /// Final adaLN + linear head on [T, D] tokens `x` -> eps written into
+    /// `out` (conditioning from `ws.cond`; `x` must not alias `ws`).
+    fn head_tokens_into(&self, x: &[f32], ws: &mut Workspace, out: &mut [f32]) {
         let cfg = &self.entry.config;
         let (t, d) = (cfg.tokens, cfg.dim);
         let pd = self.patch_dim();
-        let mut mod2 = vec![0f32; 2 * d];
-        matmul_add(c_silu, &self.w.head_adaln_w, &self.w.head_adaln_b, 1, d, 2 * d, &mut mod2);
-        let (shift, scale) = mod2.split_at(d);
-        let mut h = vec![0f32; t * d];
-        layer_norm(x, &mut h, t, d);
-        modulate(&mut h, shift, scale, t, d);
-        let mut tok_out = vec![0f32; t * pd];
-        matmul_add(&h, &self.w.head_w, &self.w.head_b, t, d, pd, &mut tok_out);
-        self.unpatchify(&tok_out)
+        matmul_add(
+            &ws.cond,
+            &self.w.head_adaln_w,
+            &self.w.head_adaln_b,
+            1,
+            d,
+            2 * d,
+            &mut ws.mod2,
+        );
+        let (shift, scale) = ws.mod2.split_at(d);
+        layer_norm(x, &mut ws.norm, t, d);
+        modulate(&mut ws.norm, shift, scale, t, d);
+        matmul_add(&ws.norm, &self.w.head_w, &self.w.head_b, t, d, pd, &mut ws.tok_out);
+        self.unpatchify_into(&ws.tok_out, out);
     }
 
     fn check_batch(&self, bucket: usize, t: &[f32], y: &[i32]) -> Result<()> {
@@ -578,6 +602,8 @@ impl NativeBackend {
     }
 
     /// Shared full pass; materializes boundaries only when requested.
+    /// Temporaries come from the workspace checkout, result storage from
+    /// the recycling pool — zero allocations once both are warm.
     fn forward(
         &self,
         bucket: usize,
@@ -593,30 +619,34 @@ impl NativeBackend {
             bail!("full: x len {} != bucket {bucket} · latent {latent}", x.len());
         }
         let feat = tokens * d;
-        let mut eps = vec![0f32; bucket * latent];
-        let mut bounds =
-            if with_bounds { vec![0f32; (depth + 1) * bucket * feat] } else { Vec::new() };
-        for s in 0..bucket {
-            let c = self.cond_silu(t[s], y[s]);
-            let mut xt = self.embed_tokens(&x[s * latent..(s + 1) * latent]);
-            if with_bounds {
-                bounds[s * feat..(s + 1) * feat].copy_from_slice(&xt);
-            }
-            for l in 0..depth {
-                self.block_apply(l, &mut xt, &c);
-                if with_bounds {
-                    let off = ((l + 1) * bucket + s) * feat;
-                    bounds[off..off + feat].copy_from_slice(&xt);
-                }
-            }
-            eps[s * latent..(s + 1) * latent].copy_from_slice(&self.head_tokens(&xt, &c));
-        }
-        let eps = Tensor::new(vec![bucket, latent], eps);
-        let bounds = if with_bounds {
-            Some(Tensor::new(vec![depth + 1, bucket, tokens, d], bounds))
+        let mut ws = self.workspace();
+        let mut eps = self.out.take(bucket * latent);
+        let mut bounds = if with_bounds {
+            Some(self.out.take((depth + 1) * bucket * feat))
         } else {
             None
         };
+        for s in 0..bucket {
+            self.cond_silu_into(&mut ws, t[s], y[s]);
+            // the trunk is block-applied in place, so move it out of the
+            // workspace for the duration (zero-cost Vec moves)
+            let mut xt = std::mem::take(&mut ws.xt);
+            self.embed_tokens_into(&x[s * latent..(s + 1) * latent], &mut ws, &mut xt);
+            if let Some(b) = &mut bounds {
+                b[s * feat..(s + 1) * feat].copy_from_slice(&xt);
+            }
+            for l in 0..depth {
+                self.block_apply(l, &mut xt, &mut ws);
+                if let Some(b) = &mut bounds {
+                    let off = ((l + 1) * bucket + s) * feat;
+                    b[off..off + feat].copy_from_slice(&xt);
+                }
+            }
+            self.head_tokens_into(&xt, &mut ws, &mut eps[s * latent..(s + 1) * latent]);
+            ws.xt = xt;
+        }
+        let eps = Tensor::from_storage(vec![bucket, latent], eps);
+        let bounds = bounds.map(|b| Tensor::from_storage(vec![depth + 1, bucket, tokens, d], b));
         Ok((eps, bounds))
     }
 }
@@ -634,7 +664,26 @@ impl ModelBackend for NativeBackend {
         matches!(entry_point, "full" | "full_eps" | "block" | "head")
     }
 
-    fn warmup(&self, _entry_points: &[&str], _buckets: &[usize]) -> Result<()> {
+    /// Pre-size the workspace pool and one result buffer per entry-point
+    /// shape × bucket, so the first real call after warmup is already
+    /// allocation-free (the alloc-discipline suite relies on this).
+    fn warmup(&self, entry_points: &[&str], buckets: &[usize]) -> Result<()> {
+        let cfg = &self.entry.config;
+        let feat = cfg.tokens * cfg.dim;
+        drop(self.workspace());
+        for &b in buckets {
+            for ep in entry_points {
+                match *ep {
+                    "full" | "full_pallas" => {
+                        self.out.prewarm(b * cfg.latent_dim);
+                        self.out.prewarm((cfg.depth + 1) * b * feat);
+                    }
+                    "full_eps" | "head" => self.out.prewarm(b * cfg.latent_dim),
+                    "block" => self.out.prewarm(b * feat),
+                    _ => {}
+                }
+            }
+        }
         Ok(())
     }
 
@@ -671,14 +720,15 @@ impl ModelBackend for NativeBackend {
         if feat.len() != bucket * flen {
             bail!("block: feat len {} != bucket {bucket} · feat {flen}", feat.len());
         }
-        let mut out = vec![0f32; bucket * flen];
+        let mut ws = self.workspace();
+        let mut out = self.out.take(bucket * flen);
         for s in 0..bucket {
-            let c = self.cond_silu(t[s], y[s]);
+            self.cond_silu_into(&mut ws, t[s], y[s]);
             let row = &mut out[s * flen..(s + 1) * flen];
             row.copy_from_slice(&feat[s * flen..(s + 1) * flen]);
-            self.block_apply(layer as usize, row, &c);
+            self.block_apply(layer as usize, row, &mut ws);
         }
-        Ok(Tensor::new(vec![bucket, cfg.tokens, cfg.dim], out))
+        Ok(Tensor::from_storage(vec![bucket, cfg.tokens, cfg.dim], out))
     }
 
     fn head(&self, bucket: usize, feat: &[f32], t: &[f32], y: &[i32]) -> Result<Tensor> {
@@ -688,13 +738,17 @@ impl ModelBackend for NativeBackend {
         if feat.len() != bucket * flen {
             bail!("head: feat len {} != bucket {bucket} · feat {flen}", feat.len());
         }
-        let mut out = vec![0f32; bucket * cfg.latent_dim];
+        let mut ws = self.workspace();
+        let mut out = self.out.take(bucket * cfg.latent_dim);
         for s in 0..bucket {
-            let c = self.cond_silu(t[s], y[s]);
-            let eps = self.head_tokens(&feat[s * flen..(s + 1) * flen], &c);
-            out[s * cfg.latent_dim..(s + 1) * cfg.latent_dim].copy_from_slice(&eps);
+            self.cond_silu_into(&mut ws, t[s], y[s]);
+            self.head_tokens_into(
+                &feat[s * flen..(s + 1) * flen],
+                &mut ws,
+                &mut out[s * cfg.latent_dim..(s + 1) * cfg.latent_dim],
+            );
         }
-        Ok(Tensor::new(vec![bucket, cfg.latent_dim], out))
+        Ok(Tensor::from_storage(vec![bucket, cfg.latent_dim], out))
     }
 }
 
@@ -1024,10 +1078,40 @@ mod tests {
     #[test]
     fn patchify_roundtrip() {
         let m = NativeBackend::seeded(ModelConfig::native_video(), 11);
+        let cfg = &m.entry().config;
         let mut rng = Rng::new(9);
-        let x = rng.normal_f32s(m.entry().config.latent_dim);
-        let back = m.unpatchify(&m.patchify(&x));
+        let x = rng.normal_f32s(cfg.latent_dim);
+        let mut patches = vec![0f32; cfg.tokens * m.patch_dim()];
+        let mut back = vec![0f32; cfg.latent_dim];
+        m.patchify_into(&x, &mut patches);
+        m.unpatchify_into(&patches, &mut back);
         assert_eq!(x, back);
+    }
+
+    #[test]
+    fn workspace_pool_stops_growing_after_first_call() {
+        let m = tiny();
+        let cfg = &m.entry().config;
+        let (x, t, y) = rand_inputs(2, cfg.latent_dim, 12);
+        for _ in 0..4 {
+            ModelBackend::full(&m, 2, &x, &t, &y, false).unwrap();
+            m.full_eps(2, &x, &t, &y).unwrap();
+        }
+        // single-threaded callers share one workspace across every call
+        assert_eq!(m.workspaces_created(), 1);
+    }
+
+    #[test]
+    fn warmup_presizes_result_buffers() {
+        let m = tiny();
+        let cfg = &m.entry().config;
+        m.warmup(&["full", "full_eps", "block", "head"], &cfg.buckets).unwrap();
+        assert_eq!(m.workspaces_created(), 1);
+        // pooled result storage exists before the first real call
+        assert!(m.out.idle() > 0);
+        let (x, t, y) = rand_inputs(1, cfg.latent_dim, 13);
+        let (eps, _) = ModelBackend::full(&m, 1, &x, &t, &y, false).unwrap();
+        assert!(eps.data.iter().all(|v| v.is_finite()));
     }
 
     #[test]

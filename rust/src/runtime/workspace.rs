@@ -1,0 +1,223 @@
+//! Reusable forward-pass workspaces for CPU backends (DESIGN.md §11).
+//!
+//! A [`Workspace`] owns every per-block temporary of the native DiT
+//! forward pass — attention score/projection buffers, the MLP hidden
+//! activation, adaLN modulation scratch, timestep-embedding staging — all
+//! sized once from the model config. A [`WorkspacePool`] hands workspaces
+//! out per forward call (`checkout`), so a `Send + Sync` backend shared by
+//! N shard worker threads materializes at most N workspaces and then
+//! serves every subsequent call with **zero heap allocations**: the
+//! checkout is a mutex-guarded `Vec` pop, and the guard returns the
+//! workspace on drop.
+//!
+//! The pool lives *behind* the backend (a private field of
+//! [`NativeBackend`](crate::runtime::NativeBackend)), which is why the
+//! [`ModelBackend`](crate::runtime::ModelBackend) trait keeps its `&self`
+//! entry points and its object safety — callers never see the arena.
+//! Result tensors are recycled separately through
+//! [`BufferPool`](crate::tensor::BufferPool), because they outlive the
+//! call that produced them.
+
+use std::ops::{Deref, DerefMut};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::config::ModelConfig;
+use crate::runtime::native::NativeArch;
+
+/// Every per-call temporary of the native DiT forward pass, sized for one
+/// sample of one model (buffer lengths are fixed at construction and
+/// fully overwritten by each use, so reuse across calls — and across
+/// requests — cannot leak state between samples).
+pub struct Workspace {
+    /// Sinusoidal timestep-embedding staging `[t_freq_dim]`.
+    pub temb: Vec<f32>,
+    /// Conditioning MLP hidden activation `[dim]`.
+    pub cond_h: Vec<f32>,
+    /// silu'd conditioning vector `[dim]` (read by every adaLN site).
+    pub cond: Vec<f32>,
+    /// Patchified latent `[tokens, patch_dim]`.
+    pub patches: Vec<f32>,
+    /// Embedded token stream `[tokens, dim]` (the residual trunk).
+    pub xt: Vec<f32>,
+    /// Block adaLN modulation `[6·dim]` (shift/scale/gate × 2 branches).
+    pub mod6: Vec<f32>,
+    /// LayerNorm output `[tokens, dim]` (shared by both block branches).
+    pub norm: Vec<f32>,
+    /// Interleaved q/k/v projections `[tokens, 3·dim]`.
+    pub qkv: Vec<f32>,
+    /// Attention score/probability row `[tokens]`.
+    pub probs: Vec<f32>,
+    /// Attention output `[tokens, dim]`.
+    pub attn: Vec<f32>,
+    /// Attention out-projection `[tokens, dim]`.
+    pub proj: Vec<f32>,
+    /// MLP hidden activation `[tokens, mlp_ratio·dim]`.
+    pub mlp_hidden: Vec<f32>,
+    /// MLP output `[tokens, dim]`.
+    pub mlp_out: Vec<f32>,
+    /// Head adaLN modulation `[2·dim]`.
+    pub mod2: Vec<f32>,
+    /// Head token output `[tokens, patch_dim]` (unpatchify input).
+    pub tok_out: Vec<f32>,
+}
+
+impl Workspace {
+    /// A workspace sized for one sample of `cfg` under `arch`.
+    pub fn for_model(cfg: &ModelConfig, arch: &NativeArch) -> Workspace {
+        let (t, d) = (cfg.tokens, cfg.dim);
+        let pd = cfg.patch * cfg.patch * cfg.channels;
+        let md = arch.mlp_ratio * d;
+        Workspace {
+            temb: vec![0.0; arch.t_freq_dim],
+            cond_h: vec![0.0; d],
+            cond: vec![0.0; d],
+            patches: vec![0.0; t * pd],
+            xt: vec![0.0; t * d],
+            mod6: vec![0.0; 6 * d],
+            norm: vec![0.0; t * d],
+            qkv: vec![0.0; t * 3 * d],
+            probs: vec![0.0; t],
+            attn: vec![0.0; t * d],
+            proj: vec![0.0; t * d],
+            mlp_hidden: vec![0.0; t * md],
+            mlp_out: vec![0.0; t * d],
+            mod2: vec![0.0; 2 * d],
+            tok_out: vec![0.0; t * pd],
+        }
+    }
+
+    /// Resident bytes across all buffers (capacity-planning telemetry).
+    pub fn resident_bytes(&self) -> usize {
+        4 * (self.temb.len()
+            + self.cond_h.len()
+            + self.cond.len()
+            + self.patches.len()
+            + self.xt.len()
+            + self.mod6.len()
+            + self.norm.len()
+            + self.qkv.len()
+            + self.probs.len()
+            + self.attn.len()
+            + self.proj.len()
+            + self.mlp_hidden.len()
+            + self.mlp_out.len()
+            + self.mod2.len()
+            + self.tok_out.len())
+    }
+}
+
+/// Checkout pool of [`Workspace`]s: one backend field, shared by every
+/// thread that forwards through the backend. Grows to the peak number of
+/// *concurrent* forward calls (one workspace per shard worker under the
+/// pool) and never shrinks, so steady-state checkouts are allocation-free.
+#[derive(Default)]
+pub struct WorkspacePool {
+    slots: Mutex<Vec<Box<Workspace>>>,
+    created: AtomicUsize,
+}
+
+impl WorkspacePool {
+    /// An empty pool.
+    pub fn new() -> WorkspacePool {
+        WorkspacePool::default()
+    }
+
+    /// Check a workspace out, building one with `make` only when every
+    /// existing workspace is already checked out by another caller. The
+    /// guard returns it on drop.
+    pub fn checkout(&self, make: impl FnOnce() -> Workspace) -> WorkspaceGuard<'_> {
+        let ws = self.slots.lock().unwrap().pop();
+        let ws = ws.unwrap_or_else(|| {
+            self.created.fetch_add(1, Ordering::Relaxed);
+            Box::new(make())
+        });
+        WorkspaceGuard { ws: Some(ws), pool: self }
+    }
+
+    /// Workspaces materialized over this pool's lifetime (a steady-state
+    /// run keeps this at the peak checkout concurrency).
+    pub fn created(&self) -> usize {
+        self.created.load(Ordering::Relaxed)
+    }
+
+    /// Workspaces currently checked in.
+    pub fn idle(&self) -> usize {
+        self.slots.lock().unwrap().len()
+    }
+}
+
+/// RAII checkout of one [`Workspace`]; derefs to it and returns it to the
+/// pool on drop.
+pub struct WorkspaceGuard<'p> {
+    ws: Option<Box<Workspace>>,
+    pool: &'p WorkspacePool,
+}
+
+impl Deref for WorkspaceGuard<'_> {
+    type Target = Workspace;
+    fn deref(&self) -> &Workspace {
+        self.ws.as_ref().expect("workspace present until drop")
+    }
+}
+
+impl DerefMut for WorkspaceGuard<'_> {
+    fn deref_mut(&mut self) -> &mut Workspace {
+        self.ws.as_mut().expect("workspace present until drop")
+    }
+}
+
+impl Drop for WorkspaceGuard<'_> {
+    fn drop(&mut self) {
+        if let Some(ws) = self.ws.take() {
+            self.pool.slots.lock().unwrap().push(ws);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Workspace {
+        Workspace::for_model(&ModelConfig::native_test(), &NativeArch::default())
+    }
+
+    #[test]
+    fn workspace_is_send() {
+        fn assert_send<T: Send>() {}
+        assert_send::<Workspace>();
+        assert_send::<WorkspacePool>();
+    }
+
+    #[test]
+    fn buffers_sized_from_config() {
+        let cfg = ModelConfig::native_test();
+        let ws = tiny();
+        assert_eq!(ws.xt.len(), cfg.tokens * cfg.dim);
+        assert_eq!(ws.qkv.len(), cfg.tokens * 3 * cfg.dim);
+        assert_eq!(ws.mlp_hidden.len(), cfg.tokens * 4 * cfg.dim);
+        assert_eq!(ws.probs.len(), cfg.tokens);
+        assert!(ws.resident_bytes() > 0);
+    }
+
+    #[test]
+    fn pool_reuses_checked_in_workspaces() {
+        let pool = WorkspacePool::new();
+        {
+            let _a = pool.checkout(tiny);
+            assert_eq!(pool.created(), 1);
+            // a second concurrent checkout materializes a second workspace
+            let _b = pool.checkout(tiny);
+            assert_eq!(pool.created(), 2);
+        }
+        assert_eq!(pool.idle(), 2);
+        // sequential checkouts reuse — no new workspaces
+        for _ in 0..10 {
+            let mut ws = pool.checkout(tiny);
+            ws.xt[0] = 1.0;
+        }
+        assert_eq!(pool.created(), 2);
+        assert_eq!(pool.idle(), 2);
+    }
+}

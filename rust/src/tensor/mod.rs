@@ -4,16 +4,178 @@
 //! executions plus a handful of reductions (norms, stats) for the
 //! verification fast path and the metrics pipeline — this is deliberately
 //! not a general ndarray.
+//!
+//! Storage is a [`Storage`] wrapper around `Vec<f32>` rather than a bare
+//! vector so a backend can hand out *recyclable* result tensors: a tensor
+//! whose storage came from a [`BufferPool`] returns its heap block to the
+//! pool when dropped, which is what lets the native backend's steady-state
+//! forward pass run without touching the allocator (DESIGN.md §11).
 
 use std::fmt;
+use std::ops::{Deref, DerefMut};
+use std::sync::{Arc, Mutex};
+
+/// Owned flat `f32` storage for a [`Tensor`]: a `Vec<f32>` plus an
+/// optional return-to-pool hook. In every read/write context it behaves
+/// like the vector it wraps (it derefs to `Vec<f32>`); the hook only
+/// matters at drop time, when pooled storage gives its allocation back to
+/// the [`BufferPool`] it was checked out of instead of freeing it.
+pub struct Storage {
+    vec: Vec<f32>,
+    home: Option<BufferPool>,
+}
+
+impl Storage {
+    /// Take the underlying vector out (the storage will not return
+    /// anything to its pool afterwards).
+    pub fn into_vec(mut self) -> Vec<f32> {
+        std::mem::take(&mut self.vec)
+    }
+}
+
+impl Deref for Storage {
+    type Target = Vec<f32>;
+    fn deref(&self) -> &Vec<f32> {
+        &self.vec
+    }
+}
+
+impl DerefMut for Storage {
+    fn deref_mut(&mut self) -> &mut Vec<f32> {
+        &mut self.vec
+    }
+}
+
+impl Clone for Storage {
+    /// Clones detach from the pool: the copy is plain heap storage.
+    fn clone(&self) -> Storage {
+        Storage { vec: self.vec.clone(), home: None }
+    }
+}
+
+impl fmt::Debug for Storage {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Storage(len={}, pooled={})", self.vec.len(), self.home.is_some())
+    }
+}
+
+impl PartialEq for Storage {
+    fn eq(&self, other: &Storage) -> bool {
+        self.vec == other.vec
+    }
+}
+
+impl PartialEq<Vec<f32>> for Storage {
+    fn eq(&self, other: &Vec<f32>) -> bool {
+        &self.vec == other
+    }
+}
+
+impl From<Vec<f32>> for Storage {
+    fn from(vec: Vec<f32>) -> Storage {
+        Storage { vec, home: None }
+    }
+}
+
+impl Drop for Storage {
+    fn drop(&mut self) {
+        if let Some(pool) = self.home.take() {
+            pool.put(std::mem::take(&mut self.vec));
+        }
+    }
+}
+
+/// Cap on buffers retained per pool: enough for every (entry point ×
+/// bucket) result shape of a backend plus transient concurrency; beyond
+/// it, returned buffers are simply freed.
+const POOL_CAP: usize = 64;
+
+/// A recycling pool of `Vec<f32>` heap blocks shared by reference
+/// (cloning the pool clones a handle to the same buffers). `take(len)`
+/// checks out the best-fitting retained buffer — or allocates one when
+/// nothing fits, which after warmup never happens — and the returned
+/// [`Storage`] checks itself back in on drop. Thread-safe, so one
+/// backend's pool serves every shard worker.
+#[derive(Clone, Default)]
+pub struct BufferPool {
+    inner: Arc<Mutex<Vec<Vec<f32>>>>,
+}
+
+impl BufferPool {
+    /// An empty pool.
+    pub fn new() -> BufferPool {
+        BufferPool::default()
+    }
+
+    /// Check out storage of exactly `len` elements, reusing the smallest
+    /// retained buffer whose capacity covers it (no allocation on a
+    /// hit). **Contents are unspecified** — zeroed when freshly
+    /// allocated, stale values from the previous checkout when recycled
+    /// — because every consumer overwrites its result buffers in full,
+    /// and re-zeroing the whole activation volume per dispatch would
+    /// reintroduce exactly the memset this pool exists to avoid.
+    pub fn take(&self, len: usize) -> Storage {
+        let mut g = self.inner.lock().unwrap();
+        let mut best: Option<(usize, usize)> = None; // (index, capacity)
+        for (i, b) in g.iter().enumerate() {
+            let c = b.capacity();
+            let better = match best {
+                None => true,
+                Some((_, bc)) => c < bc,
+            };
+            if c >= len && better {
+                best = Some((i, c));
+            }
+        }
+        let mut vec = match best {
+            Some((i, _)) => g.swap_remove(i),
+            None => Vec::with_capacity(len),
+        };
+        drop(g);
+        // only the length change is initialized (zeros); surviving
+        // elements keep their old values — never uninitialized memory
+        if vec.len() > len {
+            vec.truncate(len);
+        } else {
+            vec.resize(len, 0.0);
+        }
+        Storage { vec, home: Some(self.clone()) }
+    }
+
+    /// Ensure a retained buffer of capacity ≥ `len` exists (backend
+    /// warmup: pre-size every result shape so the first real call is
+    /// already allocation-free).
+    pub fn prewarm(&self, len: usize) {
+        let mut g = self.inner.lock().unwrap();
+        if !g.iter().any(|b| b.capacity() >= len) && g.len() < POOL_CAP {
+            g.push(Vec::with_capacity(len));
+        }
+    }
+
+    /// Buffers currently retained (checked-out storage excluded).
+    pub fn idle(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    fn put(&self, buf: Vec<f32>) {
+        if buf.capacity() == 0 {
+            return;
+        }
+        let mut g = self.inner.lock().unwrap();
+        if g.len() < POOL_CAP {
+            g.push(buf);
+        }
+    }
+}
 
 /// Shape + contiguous row-major `f32` storage.
 #[derive(Clone, PartialEq)]
 pub struct Tensor {
     /// Dimension sizes, outermost first (empty = scalar).
     pub shape: Vec<usize>,
-    /// Flat element storage (`shape.iter().product()` values).
-    pub data: Vec<f32>,
+    /// Flat element storage (`shape.iter().product()` values). Derefs to
+    /// `Vec<f32>`; may be pool-backed (see [`Storage`]).
+    pub data: Storage,
 }
 
 impl fmt::Debug for Tensor {
@@ -25,6 +187,12 @@ impl fmt::Debug for Tensor {
 impl Tensor {
     /// Tensor from a shape and matching flat data (panics on mismatch).
     pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        Tensor::from_storage(shape, data.into())
+    }
+
+    /// Tensor over existing [`Storage`] — the pool-recycling path
+    /// backends hand results back through (panics on mismatch).
+    pub fn from_storage(shape: Vec<usize>, data: Storage) -> Tensor {
         assert_eq!(
             shape.iter().product::<usize>(),
             data.len(),
@@ -37,12 +205,12 @@ impl Tensor {
     /// Zero-filled tensor of the given shape.
     pub fn zeros(shape: Vec<usize>) -> Tensor {
         let n = shape.iter().product();
-        Tensor { shape, data: vec![0.0; n] }
+        Tensor { shape, data: vec![0.0f32; n].into() }
     }
 
     /// Rank-0 tensor holding one value.
     pub fn scalar(v: f32) -> Tensor {
-        Tensor { shape: vec![], data: vec![v] }
+        Tensor { shape: vec![], data: vec![v].into() }
     }
 
     /// Total element count.
@@ -201,6 +369,50 @@ mod tests {
         assert!((Tensor::l2_norm(&[3.0, 4.0]) - 5.0).abs() < 1e-12);
         assert!((Tensor::l2_dist(&[1.0, 1.0], &[4.0, 5.0]) - 5.0).abs() < 1e-12);
         assert!((Tensor::mse(&[1.0, 2.0], &[2.0, 4.0]) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pool_recycles_storage() {
+        let pool = BufferPool::new();
+        let s = pool.take(8);
+        assert_eq!(s.len(), 8);
+        // fresh allocations are zeroed; *recycled* contents are
+        // unspecified (consumers overwrite in full)
+        assert!(s.iter().all(|v| *v == 0.0));
+        let cap = s.capacity();
+        drop(s); // returns to the pool
+        assert_eq!(pool.idle(), 1);
+        let t = pool.take(4); // best fit: reuses the returned buffer
+        assert_eq!(pool.idle(), 0);
+        assert_eq!(t.len(), 4);
+        assert!(t.capacity() >= cap.min(8));
+        let tensor = Tensor::from_storage(vec![2, 2], t);
+        drop(tensor); // pooled storage returns through the tensor drop too
+        assert_eq!(pool.idle(), 1);
+    }
+
+    #[test]
+    fn pool_prewarm_sizes_buffers() {
+        let pool = BufferPool::new();
+        pool.prewarm(16);
+        pool.prewarm(8); // covered by the 16-capacity buffer: no new entry
+        assert_eq!(pool.idle(), 1);
+        pool.prewarm(32);
+        assert_eq!(pool.idle(), 2);
+    }
+
+    #[test]
+    fn storage_clone_detaches_from_pool() {
+        let pool = BufferPool::new();
+        let s = pool.take(3);
+        let c = s.clone();
+        drop(s);
+        assert_eq!(pool.idle(), 1);
+        drop(c); // plain storage: freed, not pooled
+        assert_eq!(pool.idle(), 1);
+        let v: Storage = vec![1.0f32, 2.0].into();
+        assert_eq!(v, vec![1.0, 2.0]);
+        assert_eq!(v.clone().into_vec(), vec![1.0, 2.0]);
     }
 
     #[test]

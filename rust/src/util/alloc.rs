@@ -1,0 +1,73 @@
+//! Counting global allocator for the perf/alloc instrumentation
+//! (DESIGN.md §11, EXPERIMENTS.md §Perf).
+//!
+//! The type is always compiled (it is a zero-state wrapper over
+//! [`System`]) but counts nothing until a binary *installs* it:
+//!
+//! ```ignore
+//! #[global_allocator]
+//! static ALLOC: speca::util::alloc::CountingAllocator =
+//!     speca::util::alloc::CountingAllocator;
+//! ```
+//!
+//! Only the alloc-discipline test binary (`tests/alloc_discipline.rs`)
+//! and the `micro_runtime` bench install it, so the serving binary and
+//! the rest of the test suite pay nothing. Counters are process-wide
+//! relaxed atomics: one increment per allocator call, which is cheap
+//! enough that the bench numbers stay representative.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static DEALLOCS: AtomicU64 = AtomicU64::new(0);
+static ALLOC_BYTES: AtomicU64 = AtomicU64::new(0);
+
+/// Pass-through [`System`] allocator that counts every allocation call
+/// (plain, zeroed and reallocations) and deallocation, process-wide.
+pub struct CountingAllocator;
+
+// SAFETY: pure delegation to `System`; the counters have no effect on the
+// returned memory.
+unsafe impl GlobalAlloc for CountingAllocator {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        DEALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        // a realloc is allocator traffic whether it grows in place or
+        // moves — count it as one allocation
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+/// Allocation calls observed so far (0 unless the counting allocator is
+/// installed as the binary's `#[global_allocator]`).
+pub fn allocations() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+/// Deallocation calls observed so far.
+pub fn deallocations() -> u64 {
+    DEALLOCS.load(Ordering::Relaxed)
+}
+
+/// Bytes requested across all observed allocation calls.
+pub fn allocated_bytes() -> u64 {
+    ALLOC_BYTES.load(Ordering::Relaxed)
+}

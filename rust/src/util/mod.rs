@@ -1,6 +1,8 @@
 //! Substrate utilities written from scratch for the offline image:
-//! JSON, RNG, CLI parsing, timing/bench harness, property-test helpers.
+//! JSON, RNG, CLI parsing, timing/bench harness, property-test helpers,
+//! and the opt-in counting allocator behind the perf/alloc gate.
 
+pub mod alloc;
 pub mod cli;
 pub mod json;
 pub mod prop;

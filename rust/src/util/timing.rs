@@ -31,6 +31,11 @@ pub struct BenchResult {
     pub p99_ns: f64,
     /// Fastest iteration.
     pub min_ns: f64,
+    /// Mean heap allocations per iteration, when the harness measured
+    /// them (binaries that install
+    /// [`CountingAllocator`](crate::util::alloc::CountingAllocator) —
+    /// see [`Bench::run_counting`]).
+    pub allocs_per_iter: Option<f64>,
 }
 
 impl Bench {
@@ -61,13 +66,45 @@ impl Bench {
         for _ in 0..self.warmup {
             f();
         }
-        let mut samples = Vec::new();
+        let mut samples = Vec::with_capacity(self.max_iters);
+        self.timed_loop(&mut f, &mut samples);
+        self.finalize(samples, None)
+    }
+
+    /// [`Self::run`] plus allocation accounting: warmup and the sample
+    /// buffer's one allocation happen first, then `allocations()` is
+    /// sampled around exactly the timed loop (which pushes within the
+    /// preallocated capacity), so the mean per-iteration delta in
+    /// [`BenchResult::allocs_per_iter`] reflects only the measured
+    /// closure. Meaningful only in binaries that install
+    /// [`CountingAllocator`](crate::util::alloc::CountingAllocator) —
+    /// elsewhere the counter never moves and the mean reads 0.
+    pub fn run_counting<F: FnMut()>(&self, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.max_iters);
+        let a0 = crate::util::alloc::allocations();
+        self.timed_loop(&mut f, &mut samples);
+        let spent = crate::util::alloc::allocations().saturating_sub(a0);
+        let per_iter = spent as f64 / samples.len().max(1) as f64;
+        self.finalize(samples, Some(per_iter))
+    }
+
+    /// The measurement loop. Allocation-free: `samples` must arrive with
+    /// capacity for the iteration cap (both callers preallocate before
+    /// `run_counting` reads its counter baseline), so the counted window
+    /// sees only the closure's allocator traffic.
+    fn timed_loop<F: FnMut()>(&self, f: &mut F, samples: &mut Vec<f64>) {
         let start = Instant::now();
         while start.elapsed() < self.min_time && samples.len() < self.max_iters {
             let t0 = Instant::now();
             f();
             samples.push(t0.elapsed().as_nanos() as f64);
         }
+    }
+
+    fn finalize(&self, mut samples: Vec<f64>, allocs_per_iter: Option<f64>) -> BenchResult {
         samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let n = samples.len().max(1);
         let mean = samples.iter().sum::<f64>() / n as f64;
@@ -79,6 +116,7 @@ impl Bench {
             p50_ns: if samples.is_empty() { 0.0 } else { pick(0.5) },
             p99_ns: if samples.is_empty() { 0.0 } else { pick(0.99) },
             min_ns: samples.first().copied().unwrap_or(0.0),
+            allocs_per_iter,
         }
     }
 }
@@ -86,14 +124,18 @@ impl Bench {
 impl BenchResult {
     /// One formatted report line.
     pub fn report(&self) -> String {
-        format!(
+        let mut line = format!(
             "{:<44} {:>8} iters  mean {:>12}  p50 {:>12}  p99 {:>12}",
             self.name,
             self.iters,
             fmt_ns(self.mean_ns),
             fmt_ns(self.p50_ns),
             fmt_ns(self.p99_ns)
-        )
+        );
+        if let Some(a) = self.allocs_per_iter {
+            line.push_str(&format!("  allocs/iter {a:>8.1}"));
+        }
+        line
     }
 }
 
@@ -139,6 +181,19 @@ mod tests {
         });
         assert!(r.iters > 10);
         assert!(r.p50_ns <= r.p99_ns);
+    }
+
+    #[test]
+    fn run_counting_reports_alloc_column() {
+        // the lib test binary does not install the counting allocator,
+        // so the column is present and trivially zero here; the real
+        // nonzero/zero assertions live in tests/alloc_discipline.rs
+        let r = Bench::new("noop").min_time_ms(5).run_counting(|| {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(r.iters > 1);
+        assert_eq!(r.allocs_per_iter, Some(0.0));
+        assert!(r.report().contains("allocs/iter"));
     }
 
     #[test]

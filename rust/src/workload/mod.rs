@@ -376,3 +376,54 @@ mod tests {
         }
     }
 }
+
+/// Drive the canonical steady-state allocation window over a warmed
+/// native backend and return `(allocations_observed, ticks_measured)`:
+/// a `b`-request speca workload runs once to completion (warmup), an
+/// identical workload is submitted, the admission tick runs uncounted,
+/// and the process-wide allocation counter is sampled around the
+/// remaining mid-flight ticks (the completion tick is excluded too).
+///
+/// This is **the single definition of the measured window** shared by
+/// `tests/alloc_discipline.rs` (which asserts the result is 0) and the
+/// `micro_runtime` bench (whose `steady_state` JSON probes the CI perf
+/// gate holds at 0) — so the gate and the test provably measure the
+/// same thing (DESIGN.md §11). The counter only moves in binaries that
+/// install [`CountingAllocator`](crate::util::alloc::CountingAllocator).
+pub fn steady_state_alloc_probe(
+    model: &crate::runtime::NativeBackend,
+    b: usize,
+) -> Result<(u64, usize)> {
+    use crate::coordinator::{Engine, EngineConfig};
+    use crate::runtime::ModelBackend;
+
+    let cfg = model.entry().config.clone();
+    // pre-size the result-buffer pool for every bucket the batcher can
+    // dispatch (a measured-window reject mix can hit buckets the warmup
+    // workload's accept/reject trace happened to skip)
+    model.warmup(&["full", "full_eps", "block", "head"], &cfg.buckets)?;
+    let policy = parse_policy("speca:N=5,O=2,tau0=0.3,beta=0.05", cfg.depth)?;
+    let mut engine =
+        Engine::from_ref(model, EngineConfig { max_inflight: b, ..EngineConfig::default() });
+    // warm lifecycle: settles engine scratch capacities and exercises
+    // every dispatch kind (full, verify, head)
+    for req in batch_requests(b, cfg.num_classes, &policy, 1, false) {
+        engine.submit(req);
+    }
+    engine.run_to_completion()?;
+    // measured lifecycle: the admission tick allocates per-request state
+    // and is excluded; so is the completion tick
+    for req in batch_requests(b, cfg.num_classes, &policy, 2, false) {
+        engine.submit(req);
+    }
+    engine.tick()?;
+    let a0 = crate::util::alloc::allocations();
+    let ticks = cfg.serve_steps - 2;
+    for _ in 0..ticks {
+        engine.tick()?;
+    }
+    let spent = crate::util::alloc::allocations().saturating_sub(a0);
+    let done = engine.run_to_completion()?;
+    debug_assert_eq!(done.len(), b, "probe workload must complete");
+    Ok((spent, ticks))
+}

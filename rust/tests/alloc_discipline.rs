@@ -1,0 +1,83 @@
+//! Allocation discipline of the serving hot path (DESIGN.md §11).
+//!
+//! This binary installs the counting global allocator and proves the
+//! tentpole guarantee end to end: after warmup, a steady-state engine
+//! tick over the native backend performs **zero** heap allocations —
+//! workspace arenas cover the forward-pass temporaries, the tensor
+//! buffer pool covers result storage, and the engine's presized scratch
+//! covers every piece of per-tick bookkeeping (phase lists, chunk plans,
+//! verify grouping, gathers).
+//!
+//! Everything runs inside **one** `#[test]`: the allocation counters are
+//! process-wide, and with a single test libtest has nothing else to
+//! schedule or print while a measured window is open — so the zero
+//! asserts are exact under plain parallel `cargo test`, not just under
+//! the CI thread-stress leg's `RUST_TEST_THREADS=1`.
+
+use speca::config::ModelConfig;
+use speca::runtime::{ModelBackend, NativeBackend};
+use speca::util::alloc::{allocations, CountingAllocator};
+use speca::util::rng::Rng;
+use speca::workload::steady_state_alloc_probe;
+
+#[global_allocator]
+static ALLOC: CountingAllocator = CountingAllocator;
+
+/// Phase 1: bare backend — warmed entry points allocate nothing.
+fn native_forward_is_alloc_free_after_warmup() {
+    let model = NativeBackend::seeded(ModelConfig::native_test(), 0xA110C);
+    let cfg = model.entry().config.clone();
+    let feat = cfg.tokens * cfg.dim;
+    model.warmup(&["full", "full_eps", "block", "head"], &cfg.buckets).unwrap();
+
+    let mut rng = Rng::new(3);
+    let x = rng.normal_f32s(2 * cfg.latent_dim);
+    let f = rng.normal_f32s(2 * feat);
+    let t = vec![500.0f32; 2];
+    let y = vec![1i32; 2];
+    // one settling pass per entry point (results drop at statement end,
+    // refilling the buffer pool)
+    ModelBackend::full(&model, 2, &x, &t, &y, false).unwrap();
+    model.full_eps(2, &x, &t, &y).unwrap();
+    model.block(2, (cfg.depth - 1) as i32, &f, &t, &y).unwrap();
+    model.head(2, &f, &t, &y).unwrap();
+
+    let a0 = allocations();
+    for _ in 0..5 {
+        ModelBackend::full(&model, 2, &x, &t, &y, false).unwrap();
+        model.full_eps(2, &x, &t, &y).unwrap();
+        model.block(2, (cfg.depth - 1) as i32, &f, &t, &y).unwrap();
+        model.head(2, &f, &t, &y).unwrap();
+    }
+    let spent = allocations() - a0;
+    assert_eq!(
+        spent, 0,
+        "steady-state native forward passes must not allocate ({spent} allocations across \
+         20 warmed-up entry-point calls)"
+    );
+    assert_eq!(model.workspaces_created(), 1, "sequential calls share one workspace");
+}
+
+/// Phase 2: full engine — steady-state ticks allocate nothing. The
+/// measured window is `workload::steady_state_alloc_probe`, the same
+/// shared definition the `micro_runtime` perf-gate metric uses, so the
+/// CI gate and this test provably assert the same invariant.
+fn steady_state_engine_tick_is_alloc_free_on_native() {
+    let model = NativeBackend::seeded(ModelConfig::native_test(), 0x5EED5);
+    for b in [1usize, 4] {
+        let (spent, measured) = steady_state_alloc_probe(&model, b).unwrap();
+        assert_eq!(
+            spent, 0,
+            "steady-state engine ticks must not allocate ({spent} allocations across \
+             {measured} ticks of {b} in-flight speca requests)"
+        );
+        assert!(measured > 0);
+    }
+    assert_eq!(model.workspaces_created(), 1, "one engine thread ⇒ one workspace");
+}
+
+#[test]
+fn steady_state_is_alloc_free() {
+    native_forward_is_alloc_free_after_warmup();
+    steady_state_engine_tick_is_alloc_free_on_native();
+}

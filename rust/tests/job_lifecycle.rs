@@ -172,6 +172,37 @@ fn cancelled_job_frees_shard_capacity_mid_flight() {
 }
 
 #[test]
+fn per_policy_ewma_feeds_submission_cost_hints() {
+    // Completions build a per-policy-family service-time EWMA; later
+    // submissions of that family carry it as their routing cost hint
+    // (ShardRouter weighs expected remaining work with it).
+    let mgr = slow_manager(2, 4, 64);
+    let full = parse_policy("full", depth()).unwrap();
+    let cheap = parse_policy("steps:keep=2", depth()).unwrap();
+    assert!(mgr.est_for_policy("full").is_none(), "no estimate before any completion");
+
+    // run sequentially so each family's latency reflects its own work
+    // (12 slow full passes vs 2 kept steps + 10 instant elides)
+    let a = mgr.submit(0, Some(1), full.clone(), SubmitOptions::default());
+    assert!(matches!(a.wait_timeout(WAIT), JobStatus::Completed(_)));
+    let b = mgr.submit(0, Some(2), cheap, SubmitOptions::default());
+    assert!(matches!(b.wait_timeout(WAIT), JobStatus::Completed(_)));
+
+    let est_full = mgr.est_for_policy("full").expect("full family has completions");
+    let est_cheap =
+        mgr.est_for_policy("step-reduction").expect("step-reduction family has completions");
+    assert!(est_full > 0.0 && est_cheap > 0.0);
+    // 12 slow full steps vs 2: the family estimates must reflect the skew
+    assert!(
+        est_full > est_cheap,
+        "full ({est_full:.2} ms) must estimate costlier than step-reduction ({est_cheap:.2} ms)"
+    );
+    assert!(mgr.est_for_policy("speca").is_none(), "families without completions stay unknown");
+
+    mgr.shutdown(true).unwrap();
+}
+
+#[test]
 fn expired_deadline_sheds_queued_work_with_structured_rejection() {
     let mgr = slow_manager(20, 1, 64);
     let policy = parse_policy("full", depth()).unwrap();

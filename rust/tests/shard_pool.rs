@@ -255,6 +255,44 @@ fn least_loaded_routing_skews_toward_idle_shards() {
 }
 
 #[test]
+fn least_loaded_weighs_expected_work_not_request_counts() {
+    // Skewed load: one heavy job (full policy, ~12 slow steps) with a
+    // large service-time hint vs cheap jobs (2 kept steps) with small
+    // hints — exactly the hints the JobManager's per-policy EWMA stamps.
+    // Count-based routing would tie [1 req, 1 req] and pick shard 0;
+    // work-weighted routing must keep routing cheap work to the shard
+    // whose expected *remaining* work is smaller.
+    let model = Arc::new(SlowBackend::new(3));
+    let depth = model.entry().config.depth;
+    let pool = EngineShardPool::new(model, pool_config(2));
+    let router = pool.router();
+
+    let mut heavy = slow_spec(0, depth, "full");
+    heavy.meta.cost_hint = 60.0;
+    assert_eq!(pool.submit(heavy).unwrap(), 0, "first submit lands on the idle lowest index");
+
+    let mut cheap = slow_spec(1, depth, "steps:keep=2");
+    cheap.meta.cost_hint = 5.0;
+    assert_eq!(pool.submit(cheap).unwrap(), 1, "second submit avoids the busy shard");
+
+    // both shards now hold one request — raw counts tie, expected work
+    // does not (60 ms vs ≤5 ms): the cheap backlog must win
+    let mut cheap2 = slow_spec(2, depth, "steps:keep=2");
+    cheap2.meta.cost_hint = 5.0;
+    assert_eq!(
+        pool.submit(cheap2).unwrap(),
+        1,
+        "work-weighted least-loaded must prefer the cheap backlog over the request-count tie"
+    );
+    // the router's gauges expose the skew (shard 0 ≥ 60000 µ-units)
+    let work = router.work_us();
+    assert!(work[0] >= 60_000, "heavy hint booked on shard 0: {work:?}");
+
+    let out = pool.shutdown(true).unwrap();
+    assert_eq!(out.completions.len(), 3);
+}
+
+#[test]
 fn round_robin_ignores_load() {
     let model = Arc::new(SlowBackend::new(2));
     let depth = model.entry().config.depth;
