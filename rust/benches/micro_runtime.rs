@@ -26,6 +26,7 @@ use speca::cache::{DraftKind, DraftRegistry, TapCache};
 use speca::config::{ModelConfig, ModelEntry};
 use speca::coordinator::batcher::BatchStrategy;
 use speca::coordinator::{Engine, EngineConfig, EngineShardPool, PoolConfig, RouterPolicy};
+use speca::runtime::kernels::{scalar, Epilogue, Gemm, KernelMode, MatA, MatB, PackBufs, Prologue};
 use speca::runtime::native::{synthetic_entry, NativeArch};
 use speca::runtime::{ModelBackend, NativeBackend};
 use speca::tensor::Tensor;
@@ -294,6 +295,62 @@ fn main() -> anyhow::Result<()> {
         results.push(block);
     }
 
+    // --- kernel layer: blocked GEMM + fused block vs the scalar oracle ----
+    // Paired rows measured in one process via KernelMode, so the CI
+    // perf-gate leg sees the blocked-vs-naive speedup on its own runner
+    // (EXPERIMENTS.md §Perf records the procedure).
+    let scalar_model = NativeBackend::seeded(ModelConfig::native_test(), 0xBEEF)
+        .with_kernel_mode(KernelMode::Scalar);
+    {
+        // dit-sim qkv projection shape: [64, 64] @ [64, 192]
+        let (m, k, n) = (64usize, 64usize, 192usize);
+        let a = rng.normal_f32s(m * k);
+        let w = rng.normal_f32s(k * n);
+        let bias = rng.normal_f32s(n);
+        let mut out = vec![0f32; m * n];
+        let mut pa = vec![0f32; m * k];
+        let mut pb = vec![0f32; k * speca::runtime::kernels::NR];
+        let blocked = Bench::new("kernel/gemm_m64k64n192").min_time_ms(ms).run_counting(|| {
+            Gemm {
+                m,
+                k,
+                n,
+                a: MatA::dense(&a, k),
+                b: MatB::dense(&w, n),
+                prologue: Prologue::None,
+                bias: Some(&bias),
+                epilogue: Epilogue::None,
+            }
+            .run(&mut out, n, &mut PackBufs { a: &mut pa, b: &mut pb });
+        });
+        let naive = Bench::new("kernel/gemm_m64k64n192_scalar").min_time_ms(ms).run_counting(|| {
+            scalar::matmul_add(&a, &w, &bias, m, k, n, &mut out);
+        });
+        println!(
+            "kernel: blocked gemm is {:.2}x the scalar reference",
+            naive.p50_ns / blocked.p50_ns
+        );
+        emit(blocked, &mut results);
+        emit(naive, &mut results);
+    }
+    {
+        let f = rng.normal_f32s(feat);
+        let t = vec![entry.schedule.t_model[0]];
+        let y = vec![0i32];
+        let blocked = Bench::new("kernel/block_apply").min_time_ms(ms).run_counting(|| {
+            model.block(1, 0, &f, &t, &y).unwrap();
+        });
+        let naive = Bench::new("kernel/block_apply_scalar").min_time_ms(ms).run_counting(|| {
+            scalar_model.block(1, 0, &f, &t, &y).unwrap();
+        });
+        println!(
+            "kernel: fused block apply is {:.2}x the scalar reference",
+            naive.p50_ns / blocked.p50_ns
+        );
+        emit(blocked, &mut results);
+        emit(naive, &mut results);
+    }
+
     // --- L3 coordinator overhead: tick time at batch sizes 1/4/8 ----------
     // Stub backend ⇒ model time is zero, so this is the pure per-tick cost
     // of planning + draft prediction + scratch gathers + bookkeeping.
@@ -304,10 +361,25 @@ fn main() -> anyhow::Result<()> {
         let r = bench_ticks(&format!("engine/tick_overhead_b{b}_stub"), &stub, b, ms);
         emit(r, &mut results);
     }
-    // Same loop against the real native model for scale.
+    // Same loop against the real native model for scale, plus the scalar
+    // kernel path at b=1/4 — the pair behind the headline speedup.
     for b in [1usize, 4, 8] {
         let r = bench_ticks(&format!("engine/tick_b{b}_native"), &*model, b, ms);
         emit(r, &mut results);
+    }
+    for b in [1usize, 4] {
+        let r = bench_ticks(&format!("engine/tick_b{b}_scalar"), &scalar_model, b, ms);
+        emit(r, &mut results);
+    }
+    let p50 = |rows: &[BenchResult], name: &str| -> f64 {
+        rows.iter().find(|r| r.name == name).map(|r| r.p50_ns).unwrap_or(f64::NAN)
+    };
+    for b in [1usize, 4] {
+        println!(
+            "kernel speedup: engine/tick_b{b}_native p50 is {:.2}x faster than the scalar path",
+            p50(&results, &format!("engine/tick_b{b}_scalar"))
+                / p50(&results, &format!("engine/tick_b{b}_native"))
+        );
     }
 
     // --- steady-state allocation discipline (the perf gate's hard rule,

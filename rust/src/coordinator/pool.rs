@@ -64,10 +64,12 @@ pub enum RouterPolicy {
     /// — the sum of each routed request's service-time hint
     /// ([`crate::coordinator::JobMeta::cost_hint`], fed by the
     /// [`JobManager`](crate::coordinator::job::JobManager)'s per-policy
-    /// EWMA). Unhinted requests weigh one nominal unit each, which
-    /// degrades exactly to fewest-requests-in-flight routing; ties go to
-    /// the smaller request count, then the lowest index, so routing is
-    /// deterministic for a given load state.
+    /// EWMA), decayed linearly as the request's serve steps complete
+    /// (`decay_weight`) so a mostly-finished heavy request no longer
+    /// repels traffic. Unhinted requests weigh one nominal unit each,
+    /// which degrades exactly to fewest-requests-in-flight routing;
+    /// ties go to the smaller request count, then the lowest index, so
+    /// routing is deterministic for a given load state.
     LeastLoaded,
 }
 
@@ -224,8 +226,9 @@ pub struct ShardRouter {
     txs: Vec<Sender<ShardMsg>>,
     loads: Vec<Arc<AtomicUsize>>,
     /// expected remaining work per shard in µ-units ([`work_weight_us`]):
-    /// incremented at submit, released by the worker when the request
-    /// reaches any terminal state
+    /// incremented at submit, decayed per serve step as the worker
+    /// observes progress (`decay_weight`), and fully released when the
+    /// request reaches any terminal state
     work: Vec<Arc<AtomicU64>>,
     rr: Arc<AtomicUsize>,
 }
@@ -532,11 +535,31 @@ struct ShardCtx {
     work: Arc<AtomicU64>,
     events: Sender<JobEvent>,
     chatter: Arc<AtomicBool>,
-    /// expected-work weight of every request this shard ingested, keyed
-    /// by id; released from the router's work gauge at each terminal
-    /// state so least-loaded routing tracks *remaining* work, not
-    /// cumulative throughput
-    weights: HashMap<u64, u64>,
+    /// `(initial, remaining)` expected-work weight of every request this
+    /// shard ingested, keyed by id. `remaining` is decayed linearly as
+    /// serve steps complete (`decay_weight`) and released from the
+    /// router's work gauge at each terminal state, so least-loaded
+    /// routing tracks *remaining* work, not cumulative throughput — a
+    /// nearly-done heavy request weighs close to nothing.
+    weights: HashMap<u64, (u64, u64)>,
+}
+
+/// Decay one request's expected-remaining-work booking as its serve
+/// steps complete: the shard's work gauge drops linearly from the full
+/// admission-time weight toward one µ-unit at the final step (the floor
+/// keeps every in-flight request visible to the router until its
+/// terminal release). Monotonic — `remaining` only shrinks — so
+/// replayed or throttled progress snapshots can never re-inflate the
+/// gauge, and the terminal release of `remaining` keeps the gauge
+/// arithmetic exact.
+fn decay_weight(ctx: &mut ShardCtx, id: u64, step: usize, total_steps: usize) {
+    let Some((initial, remaining)) = ctx.weights.get_mut(&id) else { return };
+    let left = total_steps.saturating_sub(step) as u64;
+    let want = (*initial * left / total_steps.max(1) as u64).max(1);
+    if want < *remaining {
+        ctx.work.fetch_sub(*remaining - want, Ordering::SeqCst);
+        *remaining = want;
+    }
 }
 
 /// Pull every message still queued on the shard channel into the engine
@@ -551,7 +574,8 @@ fn ingest_remaining(
     while let Ok(msg) = rx.try_recv() {
         match msg {
             ShardMsg::Submit(spec) => {
-                ctx.weights.insert(spec.id, work_weight_us(&spec));
+                let w = work_weight_us(&spec);
+                ctx.weights.insert(spec.id, (w, w));
                 engine.submit(spec)
             }
             ShardMsg::Stats(reply) => {
@@ -569,7 +593,7 @@ fn ingest_remaining(
 /// accounting, and a dead shard's work gauge is never read).
 fn emit_terminations(engine: &mut Engine<'_>, ctx: &mut ShardCtx, release_load: bool) {
     for t in engine.drain_terminations() {
-        let w = ctx.weights.remove(&t.id).unwrap_or(NOMINAL_WORK_US);
+        let w = ctx.weights.remove(&t.id).map_or(NOMINAL_WORK_US, |(_, rem)| rem);
         if release_load {
             ctx.load.fetch_sub(1, Ordering::SeqCst);
             ctx.work.fetch_sub(w, Ordering::SeqCst);
@@ -618,6 +642,10 @@ fn shard_worker(
     rx: Receiver<ShardMsg>,
 ) -> (ShardStats, Option<String>) {
     let model: Arc<dyn ModelBackend> = model;
+    // denominator of the linear weight decay (captured before the engine
+    // takes the backend): a request at step s has (steps−s)/steps of its
+    // admission-time work left
+    let serve_steps = model.entry().config.serve_steps;
     let mut engine = Engine::new(model, cfg);
     let mut completed = 0u64;
     let mut draining = false;
@@ -649,7 +677,8 @@ fn shard_worker(
             match msg {
                 ShardMsg::Submit(spec) => {
                     let id = spec.id;
-                    ctx.weights.insert(id, work_weight_us(&spec));
+                    let w = work_weight_us(&spec);
+                    ctx.weights.insert(id, (w, w));
                     engine.submit(spec);
                     if ctx.chatter.load(Ordering::SeqCst) {
                         let _ = ctx.events.send(JobEvent::Admitted { id, shard: ctx.shard });
@@ -679,21 +708,25 @@ fn shard_worker(
                 completed += 1;
                 ctx.load.fetch_sub(1, Ordering::SeqCst);
                 ctx.work.fetch_sub(
-                    ctx.weights.remove(&c.id).unwrap_or(NOMINAL_WORK_US),
+                    ctx.weights.remove(&c.id).map_or(NOMINAL_WORK_US, |(_, rem)| rem),
                     Ordering::SeqCst,
                 );
                 let _ = ctx.events.send(JobEvent::Completed(Box::new(c)));
             }
             // cancelled / deadline-expired requests free their slot here
             emit_terminations(&mut engine, &mut ctx, true);
-            if ctx.chatter.load(Ordering::SeqCst) {
-                // throttled to every 4th step (first included): `poll`
-                // needs coarse freshness, and one event per request per
-                // tick would serialize on the job-table mutex for nothing
-                for p in engine.progress() {
-                    if p.step % 4 == 1 {
-                        let _ = ctx.events.send(JobEvent::Progress(p));
-                    }
+            // one progress sweep per tick: always decay the router-facing
+            // work gauge (least-loaded routing must see remaining work
+            // shrink whether or not anyone consumes the event stream),
+            // and emit Progress chatter only when someone does —
+            // throttled to every 4th step (first included): `poll` needs
+            // coarse freshness, and one event per request per tick would
+            // serialize on the job-table mutex for nothing
+            let chatter = ctx.chatter.load(Ordering::SeqCst);
+            for p in engine.progress() {
+                decay_weight(&mut ctx, p.id, p.step, serve_steps);
+                if chatter && p.step % 4 == 1 {
+                    let _ = ctx.events.send(JobEvent::Progress(p));
                 }
             }
         } else if draining || disconnected {
@@ -757,6 +790,36 @@ mod tests {
         let picks: Vec<usize> =
             (0..5).map(|t| p.pick(&[9, 0, 0], &uniform_work(&[9, 0, 0]), t)).collect();
         assert_eq!(picks, vec![0, 1, 2, 0, 1]);
+    }
+
+    #[test]
+    fn decay_weight_shrinks_monotonically_and_never_reinflates() {
+        let (tx, _rx) = channel();
+        let mut ctx = ShardCtx {
+            shard: 0,
+            load: Arc::new(AtomicUsize::new(0)),
+            work: Arc::new(AtomicU64::new(10_000)),
+            events: tx,
+            chatter: Arc::new(AtomicBool::new(false)),
+            weights: HashMap::new(),
+        };
+        ctx.weights.insert(7, (10_000, 10_000));
+        // step 0: nothing done yet, full weight stays booked
+        decay_weight(&mut ctx, 7, 0, 10);
+        assert_eq!(ctx.work.load(Ordering::SeqCst), 10_000);
+        // halfway: gauge holds half the admission-time weight
+        decay_weight(&mut ctx, 7, 5, 10);
+        assert_eq!(ctx.work.load(Ordering::SeqCst), 5_000);
+        // a stale (smaller-step) snapshot must not re-inflate the gauge
+        decay_weight(&mut ctx, 7, 3, 10);
+        assert_eq!(ctx.work.load(Ordering::SeqCst), 5_000);
+        // final step: floor of one µ-unit until the terminal release
+        decay_weight(&mut ctx, 7, 10, 10);
+        assert_eq!(ctx.work.load(Ordering::SeqCst), 1);
+        assert_eq!(ctx.weights.get(&7), Some(&(10_000, 1)));
+        // unknown id (already released) is a no-op
+        decay_weight(&mut ctx, 99, 5, 10);
+        assert_eq!(ctx.work.load(Ordering::SeqCst), 1);
     }
 
     #[test]

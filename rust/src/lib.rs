@@ -19,6 +19,7 @@
 //! Draft models (the forecasting half of forecast-then-verify) are
 //! pluggable: see [`cache::draft`] and DESIGN.md §10.
 
+#![cfg_attr(feature = "portable-simd", feature(portable_simd))]
 #![warn(missing_docs)]
 
 pub mod cache;

@@ -196,6 +196,13 @@ BACKENDS (--backend native|pjrt|auto, default auto):
   --model-seed N             seed for the native models (default fixed)
   --shards N                 engine worker threads sharing one backend
                              (native only; default 1)
+
+KERNEL FEATURES (DESIGN.md §12; native backbone math):
+  (default)                  cache-blocked GEMM with fused epilogues
+  --features scalar-ref      default to the naive scalar reference path
+                             (the parity oracle; for bisecting numerics)
+  --features portable-simd   nightly std::simd microkernel (numerically
+                             identical to the stable autovectorized path)
 ";
 
 fn info(args: &Args) -> Result<()> {

@@ -1,0 +1,732 @@
+//! Cache-blocked CPU kernels with fused epilogues (DESIGN.md §12).
+//!
+//! The native backend's arithmetic all funnels through this module: a
+//! register-tiled f32 GEMM ([`Gemm`]) whose output loop can fold the
+//! surrounding elementwise work in (bias add, SiLU, adaLN modulate,
+//! gated residual add, row broadcast), a single-pass [`layer_norm`], a
+//! fast [`exp_f32`] shared by softmax and SiLU, and a blocked
+//! [`attention`] that reuses the same microkernel for the QKᵀ and PV
+//! products.
+//!
+//! **Tiling scheme.** `C[m,n] = A[m,k]·B[k,n]` is computed in `MR`×`NR`
+//! register tiles: B is packed one `NR`-wide column panel at a time into
+//! a contiguous, zero-padded `[k, NR]` buffer, A is packed once into a
+//! row-major `[m, k]` buffer (with the [`Prologue`] applied during the
+//! copy), and the microkernel accumulates an `[MR][NR]` block in locals
+//! so stable rustc autovectorizes the `NR`-wide inner loop. Tails in `m`
+//! dispatch to const-generic `MR`−1…1 variants; tails in `n` ride the
+//! panel zero-padding and only the valid columns are written back. Both
+//! packing buffers are caller-provided ([`PackBufs`]) and live in the
+//! forward-pass [`Workspace`](crate::runtime::workspace::Workspace), so
+//! steady-state calls stay allocation-free. A `1×n` row-times-matrix
+//! call with a contiguous B takes a packing-free GEMV path.
+//!
+//! **Fusion contract.** The [`Prologue`] transforms A *elements* as they
+//! are packed (adaLN modulate over the `k` axis — in a DiT block,
+//! modulate always consumes a LayerNorm that immediately feeds a
+//! matmul, so the standalone modulate pass disappears into the pack).
+//! The [`Epilogue`] transforms *output* values after the bias add, while
+//! the `MR`×`NR` accumulator block is still in registers — `silu(acc)`,
+//! `acc·(1+scale)+shift`, `out += gate·acc` (the block residual), or
+//! `acc + rows[i,·]` (positional-embedding style broadcasts). Epilogues
+//! are applied exactly once per output element, so any epilogue
+//! composes with any operand layout, including the strided attention
+//! views.
+//!
+//! **Why the scalar reference stays.** [`scalar`] keeps the original
+//! naive loops; every kernel here is parity-tested against them
+//! (`tests/kernel_parity.rs`, ULP-bounded) across odd shapes, remainder
+//! tiles and every `NativeArch` preset, and the `scalar-ref` cargo
+//! feature flips backend defaults to the scalar path so a CI leg runs
+//! the whole suite through the oracle. [`KernelMode`] selects the path
+//! per backend at runtime, which is also how the micro-benches measure
+//! the blocked-vs-naive speedup inside one binary.
+
+pub mod scalar;
+
+/// Microkernel tile height: output rows accumulated per dispatch.
+pub const MR: usize = 4;
+
+/// Microkernel tile width: output columns per packed B panel. Sixteen
+/// f32 lanes = one AVX-512 register or two AVX2 registers per row, and
+/// `MR`·`NR` = 64 accumulators fit the 16 × 256-bit register budget of
+/// AVX2 with spill-free codegen on stable rustc.
+pub const NR: usize = 16;
+
+/// Which kernel implementation a
+/// [`NativeBackend`](crate::runtime::NativeBackend) dispatches through.
+///
+/// The default is [`Blocked`](KernelMode::Blocked) unless the crate is
+/// built with the `scalar-ref` feature, which flips the default to the
+/// [`Scalar`](KernelMode::Scalar) reference so the entire test suite can
+/// run against the oracle path. Runtime-selectable (not compiled out) so
+/// parity tests and speedup benches compare both paths in one process.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelMode {
+    /// Cache-blocked, register-tiled kernels with fused epilogues.
+    Blocked,
+    /// The retained naive reference loops ([`scalar`]).
+    Scalar,
+}
+
+impl Default for KernelMode {
+    fn default() -> KernelMode {
+        if cfg!(feature = "scalar-ref") {
+            KernelMode::Scalar
+        } else {
+            KernelMode::Blocked
+        }
+    }
+}
+
+/// Left GEMM operand: element `(i, kk)` is `data[i·rs + kk]` — rows may
+/// be strided (attention reads Q rows out of the interleaved qkv
+/// buffer) but row elements are contiguous.
+#[derive(Clone, Copy)]
+pub struct MatA<'a> {
+    /// Backing storage; must cover `(m−1)·rs + k` elements.
+    pub data: &'a [f32],
+    /// Row stride in elements.
+    pub rs: usize,
+}
+
+impl<'a> MatA<'a> {
+    /// A dense row-major `[m, k]` view (row stride = `k`).
+    pub fn dense(data: &'a [f32], k: usize) -> MatA<'a> {
+        MatA { data, rs: k }
+    }
+}
+
+/// Right GEMM operand: element `(kk, j)` is `data[kk·rs + j·cs]`. Fully
+/// strided, so the same packing routine serves dense weights (`cs` = 1),
+/// transposed views (Kᵀ: `rs` = 1, `cs` = row stride) and interleaved
+/// value matrices.
+#[derive(Clone, Copy)]
+pub struct MatB<'a> {
+    /// Backing storage; must cover `(k−1)·rs + (n−1)·cs + 1` elements.
+    pub data: &'a [f32],
+    /// Row stride in elements.
+    pub rs: usize,
+    /// Column stride in elements.
+    pub cs: usize,
+}
+
+impl<'a> MatB<'a> {
+    /// A dense row-major `[k, n]` view (row stride = `n`, unit columns).
+    pub fn dense(data: &'a [f32], n: usize) -> MatB<'a> {
+        MatB { data, rs: n, cs: 1 }
+    }
+}
+
+/// Input-side fusion: a transform applied to A elements while they are
+/// packed, indexed by the `k`-axis position (broadcast over rows).
+#[derive(Clone, Copy)]
+pub enum Prologue<'a> {
+    /// Pack A unchanged.
+    None,
+    /// adaLN modulate: `a·(1 + scale[kk]) + shift[kk]`. Fusing it here
+    /// (rather than as a separate pass over the LayerNorm output) means
+    /// the modulated activations are materialized only inside the pack
+    /// buffer.
+    Modulate {
+        /// Per-`k`-position shift, length ≥ `k`.
+        shift: &'a [f32],
+        /// Per-`k`-position scale, length ≥ `k`.
+        scale: &'a [f32],
+    },
+}
+
+impl Prologue<'_> {
+    #[inline(always)]
+    fn apply(&self, v: f32, kk: usize) -> f32 {
+        match *self {
+            Prologue::None => v,
+            Prologue::Modulate { shift, scale } => v * (1.0 + scale[kk]) + shift[kk],
+        }
+    }
+}
+
+/// Output-side fusion: applied to `acc + bias` while the accumulator
+/// tile is still in registers, exactly once per output element.
+#[derive(Clone, Copy)]
+pub enum Epilogue<'a> {
+    /// `out = acc + bias`.
+    None,
+    /// `out = silu(acc + bias)` (via [`exp_f32`]).
+    Silu,
+    /// `out = (acc + bias)·(1 + scale[j]) + shift[j]`, indexed by the
+    /// output column.
+    Modulate {
+        /// Per-column shift, length ≥ `n`.
+        shift: &'a [f32],
+        /// Per-column scale, length ≥ `n`.
+        scale: &'a [f32],
+    },
+    /// `out += gate[j]·(acc + bias)` — the adaLN-gated residual add of a
+    /// DiT block, folded into the matmul so the projection result is
+    /// never materialized.
+    GatedResidual {
+        /// Per-column gate, length ≥ `n`.
+        gate: &'a [f32],
+    },
+    /// `out = acc + bias + rows[i·rs + j]` — per-row broadcast add
+    /// (positional embeddings, class embeddings).
+    AddRows {
+        /// Broadcast table, `rows[i·rs + j]` addressed per output row.
+        rows: &'a [f32],
+        /// Row stride of the table.
+        rs: usize,
+    },
+}
+
+/// Caller-provided packing scratch for [`Gemm::run`] and [`attention`]:
+/// `a` holds the packed `[m, k]` left operand, `b` one `[k, NR]` column
+/// panel. Sized by the workspace at construction (`m·k ≤ tokens·kmax`),
+/// so the steady state never allocates.
+pub struct PackBufs<'a> {
+    /// Packed-A backing, at least `m·k` elements.
+    pub a: &'a mut [f32],
+    /// Packed-B panel backing, at least `k·NR` elements.
+    pub b: &'a mut [f32],
+}
+
+/// One fused matmul: `out[m, n] = epilogue(prologue(A)[m, k] · B[k, n]
+/// + bias)`. Built as a plain struct so call sites read like a kernel
+/// launch; `run` executes it.
+pub struct Gemm<'a> {
+    /// Output rows.
+    pub m: usize,
+    /// Contraction length.
+    pub k: usize,
+    /// Output columns.
+    pub n: usize,
+    /// Left operand view.
+    pub a: MatA<'a>,
+    /// Right operand view.
+    pub b: MatB<'a>,
+    /// A-side fusion applied during packing.
+    pub prologue: Prologue<'a>,
+    /// Per-column bias added before the epilogue (`None` = zero).
+    pub bias: Option<&'a [f32]>,
+    /// Output-side fusion.
+    pub epilogue: Epilogue<'a>,
+}
+
+impl Gemm<'_> {
+    /// Execute into `out`, whose element `(i, j)` is `out[i·out_rs + j]`
+    /// (strided outputs let attention write per-head column bands).
+    /// `pack` must satisfy the [`PackBufs`] size contract.
+    pub fn run(&self, out: &mut [f32], out_rs: usize, pack: &mut PackBufs<'_>) {
+        debug_assert!(self.m >= 1 && self.k >= 1 && self.n >= 1);
+        debug_assert!(self.a.data.len() >= (self.m - 1) * self.a.rs + self.k);
+        let bmin = (self.k - 1) * self.b.rs + (self.n - 1) * self.b.cs + 1;
+        debug_assert!(self.b.data.len() >= bmin);
+        debug_assert!(out.len() >= (self.m - 1) * out_rs + self.n);
+        // Row-vector times contiguous-row matrix: skip packing entirely.
+        // (GatedResidual needs the accumulator separate from `out`, so it
+        // always takes the blocked path, where acc lives in registers.)
+        let gated = matches!(self.epilogue, Epilogue::GatedResidual { .. });
+        if self.m == 1 && self.b.cs == 1 && !gated {
+            self.run_gemv(out);
+        } else {
+            self.run_blocked(out, out_rs, pack);
+        }
+    }
+
+    /// m = 1 fast path: accumulate straight into the output row (init to
+    /// bias), then apply the epilogue in place. All the adaLN-projection
+    /// and conditioning-MLP calls (m = 1 by construction) land here with
+    /// zero packing traffic.
+    fn run_gemv(&self, out: &mut [f32]) {
+        let n = self.n;
+        let orow = &mut out[..n];
+        match self.bias {
+            Some(b) => orow.copy_from_slice(&b[..n]),
+            None => orow.fill(0.0),
+        }
+        for kk in 0..self.k {
+            let aik = self.prologue.apply(self.a.data[kk], kk);
+            let wrow = &self.b.data[kk * self.b.rs..kk * self.b.rs + n];
+            for (o, &w) in orow.iter_mut().zip(wrow) {
+                *o += aik * w;
+            }
+        }
+        match self.epilogue {
+            Epilogue::None => {}
+            Epilogue::Silu => {
+                for o in orow.iter_mut() {
+                    *o = silu(*o);
+                }
+            }
+            Epilogue::Modulate { shift, scale } => {
+                for ((o, &sh), &sc) in orow.iter_mut().zip(shift).zip(scale) {
+                    *o = *o * (1.0 + sc) + sh;
+                }
+            }
+            Epilogue::AddRows { rows, .. } => {
+                for (o, &r) in orow.iter_mut().zip(rows) {
+                    *o += r;
+                }
+            }
+            Epilogue::GatedResidual { .. } => {
+                unreachable!("GatedResidual is routed to the blocked path")
+            }
+        }
+    }
+
+    /// The general blocked path: pack A once, then stream NR-wide B
+    /// panels through the register-tiled microkernel.
+    fn run_blocked(&self, out: &mut [f32], out_rs: usize, pack: &mut PackBufs<'_>) {
+        let (m, k, n) = (self.m, self.k, self.n);
+        let pa = &mut pack.a[..m * k];
+        self.pack_a(pa);
+        let pb = &mut pack.b[..k * NR];
+        let mut jp = 0;
+        while jp < n {
+            let nr = NR.min(n - jp);
+            self.pack_b_panel(jp, nr, pb);
+            let mut ip = 0;
+            while ip < m {
+                let mr = MR.min(m - ip);
+                let mut acc = [[0.0f32; NR]; MR];
+                let a_tile = &pa[ip * k..];
+                match mr {
+                    4 => microkernel::<4>(k, a_tile, pb, &mut acc),
+                    3 => microkernel::<3>(k, a_tile, pb, &mut acc),
+                    2 => microkernel::<2>(k, a_tile, pb, &mut acc),
+                    _ => microkernel::<1>(k, a_tile, pb, &mut acc),
+                }
+                for (r, acc_row) in acc.iter().take(mr).enumerate() {
+                    self.apply_row(acc_row, ip + r, jp, nr, out, out_rs);
+                }
+                ip += mr;
+            }
+            jp += nr;
+        }
+    }
+
+    /// Pack A row-major `[m, k]` with the prologue applied element-wise.
+    fn pack_a(&self, pa: &mut [f32]) {
+        let k = self.k;
+        for i in 0..self.m {
+            let src = &self.a.data[i * self.a.rs..i * self.a.rs + k];
+            let dst = &mut pa[i * k..(i + 1) * k];
+            match self.prologue {
+                Prologue::None => dst.copy_from_slice(src),
+                Prologue::Modulate { shift, scale } => {
+                    for ((d, &s), (&sh, &sc)) in
+                        dst.iter_mut().zip(src).zip(shift.iter().zip(scale))
+                    {
+                        *d = s * (1.0 + sc) + sh;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Pack B columns `jp..jp+nr` into a `[k, NR]` panel, zero-padding
+    /// the tail columns so the microkernel never branches on `nr`.
+    fn pack_b_panel(&self, jp: usize, nr: usize, pb: &mut [f32]) {
+        let b = &self.b;
+        for kk in 0..self.k {
+            let row = &mut pb[kk * NR..kk * NR + NR];
+            if b.cs == 1 {
+                row[..nr].copy_from_slice(&b.data[kk * b.rs + jp..kk * b.rs + jp + nr]);
+            } else {
+                let base = kk * b.rs + jp * b.cs;
+                for (j, r) in row[..nr].iter_mut().enumerate() {
+                    *r = b.data[base + j * b.cs];
+                }
+            }
+            row[nr..].fill(0.0);
+        }
+    }
+
+    /// Write one accumulator row back: add the bias, apply the epilogue,
+    /// store columns `jp..jp+nr` of output row `i`.
+    fn apply_row(
+        &self,
+        acc: &[f32; NR],
+        i: usize,
+        jp: usize,
+        nr: usize,
+        out: &mut [f32],
+        out_rs: usize,
+    ) {
+        let mut vals = [0.0f32; NR];
+        match self.bias {
+            Some(b) => {
+                for ((v, &a), &bb) in vals[..nr].iter_mut().zip(acc).zip(&b[jp..jp + nr]) {
+                    *v = a + bb;
+                }
+            }
+            None => vals[..nr].copy_from_slice(&acc[..nr]),
+        }
+        let base = i * out_rs + jp;
+        let orow = &mut out[base..base + nr];
+        match self.epilogue {
+            Epilogue::None => orow.copy_from_slice(&vals[..nr]),
+            Epilogue::Silu => {
+                for (o, &v) in orow.iter_mut().zip(&vals[..nr]) {
+                    *o = silu(v);
+                }
+            }
+            Epilogue::Modulate { shift, scale } => {
+                let sh = &shift[jp..jp + nr];
+                let sc = &scale[jp..jp + nr];
+                for ((o, &v), (&s0, &s1)) in
+                    orow.iter_mut().zip(&vals[..nr]).zip(sh.iter().zip(sc))
+                {
+                    *o = v * (1.0 + s1) + s0;
+                }
+            }
+            Epilogue::GatedResidual { gate } => {
+                for ((o, &v), &g) in orow.iter_mut().zip(&vals[..nr]).zip(&gate[jp..jp + nr]) {
+                    *o += g * v;
+                }
+            }
+            Epilogue::AddRows { rows, rs } => {
+                let rrow = &rows[i * rs + jp..i * rs + jp + nr];
+                for ((o, &v), &r) in orow.iter_mut().zip(&vals[..nr]).zip(rrow) {
+                    *o = v + r;
+                }
+            }
+        }
+    }
+}
+
+/// `MRT`×`NR` register tile: `acc[r][j] += Σ_kk a[r·k + kk] · pb[kk·NR
+/// + j]`. `a` is the packed row-major tile (row stride `k`), `pb` the
+/// packed `[k, NR]` panel. The fixed-width inner loop over a contiguous
+/// panel row is what stable rustc autovectorizes.
+#[cfg(not(feature = "portable-simd"))]
+#[inline(always)]
+fn microkernel<const MRT: usize>(k: usize, a: &[f32], pb: &[f32], acc: &mut [[f32; NR]; MR]) {
+    for (kk, bv) in pb.chunks_exact(NR).take(k).enumerate() {
+        for r in 0..MRT {
+            let av = a[r * k + kk];
+            for (ac, &b) in acc[r].iter_mut().zip(bv) {
+                *ac += av * b;
+            }
+        }
+    }
+}
+
+/// Explicit `std::simd` variant of the microkernel (nightly, behind the
+/// `portable-simd` feature). Plain mul + add — not FMA — so both
+/// microkernels produce bit-identical results and the parity bounds are
+/// feature-independent.
+#[cfg(feature = "portable-simd")]
+#[inline(always)]
+fn microkernel<const MRT: usize>(k: usize, a: &[f32], pb: &[f32], acc: &mut [[f32; NR]; MR]) {
+    use std::simd::f32x16;
+    let mut vacc = [f32x16::splat(0.0); MRT];
+    for (kk, bv) in pb.chunks_exact(NR).take(k).enumerate() {
+        let b = f32x16::from_slice(bv);
+        for (r, va) in vacc.iter_mut().enumerate() {
+            *va += f32x16::splat(a[r * k + kk]) * b;
+        }
+    }
+    for (va, row) in vacc.iter().zip(acc.iter_mut()) {
+        row.copy_from_slice(va.as_array());
+    }
+}
+
+/// Fast `exp` for f32: Cody–Waite range reduction (`x = n·ln2 + r`,
+/// two-constant ln2 split) and a degree-6 Taylor polynomial on the
+/// reduced `r ∈ [−ln2/2, ln2/2]`, rescaled through the exponent bits.
+/// Max relative error ≈ 1e-7 (about 1 ulp); inputs are clamped to
+/// `[−87, 88]` so the result stays finite and normal (NaN propagates).
+/// Softmax and SiLU spend most of the non-GEMM forward-pass time in
+/// `exp`, which is why this is hand-rolled instead of calling libm.
+#[inline(always)]
+pub fn exp_f32(x: f32) -> f32 {
+    #[allow(clippy::excessive_precision)]
+    const LN2_HI: f32 = 0.693_359_375; // exact in f32
+    #[allow(clippy::excessive_precision)]
+    const LN2_LO: f32 = -2.121_944_4e-4;
+    let x = x.clamp(-87.0, 88.0);
+    let n = (x * std::f32::consts::LOG2_E).round();
+    let r = (x - n * LN2_HI) - n * LN2_LO;
+    // degree-6 Taylor of exp on |r| ≤ ln2/2, Horner form
+    let mut p = 1.0 / 720.0;
+    p = p * r + 1.0 / 120.0;
+    p = p * r + 1.0 / 24.0;
+    p = p * r + 1.0 / 6.0;
+    p = p * r + 0.5;
+    p = p * r + 1.0;
+    p = p * r + 1.0;
+    // n ∈ [−126, 127] by the clamp, so the biased exponent is normal
+    let scale = f32::from_bits(((n as i32 + 127) << 23) as u32);
+    p * scale
+}
+
+/// silu(x) = x · σ(x), via [`exp_f32`].
+#[inline(always)]
+pub fn silu(x: f32) -> f32 {
+    x / (1.0 + exp_f32(-x))
+}
+
+/// Single-pass per-token LayerNorm (population variance, eps 1e-6 —
+/// matches model.py and the scalar reference). Sums and sums-of-squares
+/// accumulate in four independent f64 lanes merged at the end
+/// (Chan-style lane partitioning), so one sweep yields both moments
+/// without the two-pass reference's second read of `x`.
+pub fn layer_norm(x: &[f32], out: &mut [f32], tokens: usize, d: usize) {
+    debug_assert!(x.len() >= tokens * d && out.len() >= tokens * d);
+    for (row, orow) in x.chunks_exact(d).zip(out.chunks_exact_mut(d)).take(tokens) {
+        let (mu, var) = moments(row);
+        let rs = 1.0 / (var + 1e-6).sqrt();
+        for (o, &v) in orow.iter_mut().zip(row) {
+            *o = (v - mu) * rs;
+        }
+    }
+}
+
+/// One-sweep mean and population variance of a row: 4 f64 accumulator
+/// lanes over `chunks_exact(4)` plus a scalar remainder, merged at the
+/// end. `var = E[x²] − E[x]²`, clamped at 0 against cancellation.
+fn moments(row: &[f32]) -> (f32, f32) {
+    let mut s = [0.0f64; 4];
+    let mut sq = [0.0f64; 4];
+    let chunks = row.chunks_exact(4);
+    let rem = chunks.remainder();
+    for c in chunks {
+        for (lane, &v) in c.iter().enumerate() {
+            let v = v as f64;
+            s[lane] += v;
+            sq[lane] += v * v;
+        }
+    }
+    let mut sum: f64 = s.iter().sum();
+    let mut sumsq: f64 = sq.iter().sum();
+    for &v in rem {
+        let v = v as f64;
+        sum += v;
+        sumsq += v * v;
+    }
+    let n = row.len() as f64;
+    let mu = sum / n;
+    let var = (sumsq / n - mu * mu).max(0.0);
+    (mu as f32, var as f32)
+}
+
+/// Row-wise softmax over a `[rows, cols]` score buffer with the
+/// attention scale folded into the exponent: `p = exp(scale·(s −
+/// max(s))) / Σ`. Uses [`exp_f32`].
+pub fn softmax_rows(s: &mut [f32], rows: usize, cols: usize, scale: f32) {
+    for row in s.chunks_exact_mut(cols).take(rows) {
+        let mut maxv = f32::NEG_INFINITY;
+        for &v in row.iter() {
+            if v > maxv {
+                maxv = v;
+            }
+        }
+        let mut denom = 0.0f32;
+        for v in row.iter_mut() {
+            *v = exp_f32(scale * (*v - maxv));
+            denom += *v;
+        }
+        let inv = 1.0 / denom;
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+    }
+}
+
+/// Blocked softmax attention over an interleaved qkv buffer `[T, 3D]`,
+/// writing `[T, D]`. Per head: `S = Q·Kᵀ` through the GEMM microkernel
+/// (Kᵀ is just a strided [`MatB`] view — no transpose copy), a row-wise
+/// softmax over the full `[T, T]` score matrix in `scores`, then `O =
+/// P·V` through the same microkernel into the head's output column
+/// band. `scores` needs `tokens²` elements; `pack` follows the
+/// [`PackBufs`] contract with `k` up to `max(tokens, d/heads)`.
+pub fn attention(
+    qkv: &[f32],
+    tokens: usize,
+    d: usize,
+    heads: usize,
+    out: &mut [f32],
+    scores: &mut [f32],
+    pack: &mut PackBufs<'_>,
+) {
+    let dh = d / heads;
+    debug_assert!(dh >= 1);
+    debug_assert!(scores.len() >= tokens * tokens);
+    let scale = 1.0 / (dh as f32).sqrt();
+    let row = 3 * d;
+    if heads * dh != d {
+        // ragged head split: the uncovered tail columns must read zero,
+        // matching the scalar reference's o.fill(0.0)
+        out[..tokens * d].fill(0.0);
+    }
+    for h in 0..heads {
+        let off = h * dh;
+        Gemm {
+            m: tokens,
+            k: dh,
+            n: tokens,
+            a: MatA { data: &qkv[off..], rs: row },
+            b: MatB { data: &qkv[d + off..], rs: 1, cs: row },
+            prologue: Prologue::None,
+            bias: None,
+            epilogue: Epilogue::None,
+        }
+        .run(scores, tokens, pack);
+        softmax_rows(scores, tokens, tokens, scale);
+        Gemm {
+            m: tokens,
+            k: tokens,
+            n: dh,
+            a: MatA { data: &*scores, rs: tokens },
+            b: MatB { data: &qkv[2 * d + off..], rs: row, cs: 1 },
+            prologue: Prologue::None,
+            bias: None,
+            epilogue: Epilogue::None,
+        }
+        .run(&mut out[off..], d, pack);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn exp_tracks_libm() {
+        for i in -1740..=1760 {
+            let x = i as f32 * 0.05; // [-87, 88]
+            let got = exp_f32(x);
+            let want = x.exp();
+            let rel = ((got - want) / want).abs();
+            assert!(rel < 3e-7, "exp({x}): got {got}, want {want}, rel {rel}");
+        }
+        assert_eq!(exp_f32(0.0), 1.0);
+        assert!(exp_f32(-1000.0) > 0.0); // clamped, finite
+        assert!(exp_f32(1000.0).is_finite());
+        assert!(exp_f32(f32::NAN).is_nan());
+    }
+
+    #[test]
+    fn gemm_matches_scalar_reference() {
+        let mut rng = Rng::new(42);
+        for &(m, k, n) in &[(1usize, 1usize, 1usize), (4, 8, 16), (5, 7, 19), (16, 24, 96)] {
+            let a = rng.normal_f32s(m * k);
+            let w = rng.normal_f32s(k * n);
+            let bias = rng.normal_f32s(n);
+            let mut want = vec![0.0f32; m * n];
+            scalar::matmul_add(&a, &w, &bias, m, k, n, &mut want);
+            let (mut pa, mut pb) = (vec![0.0f32; m * k], vec![0.0f32; k * NR]);
+            let mut got = vec![0.0f32; m * n];
+            Gemm {
+                m,
+                k,
+                n,
+                a: MatA::dense(&a, k),
+                b: MatB::dense(&w, n),
+                prologue: Prologue::None,
+                bias: Some(&bias),
+                epilogue: Epilogue::None,
+            }
+            .run(&mut got, n, &mut PackBufs { a: &mut pa, b: &mut pb });
+            for (g, w2) in got.iter().zip(&want) {
+                assert!((g - w2).abs() < 1e-4, "({m},{k},{n}): {g} vs {w2}");
+            }
+        }
+    }
+
+    #[test]
+    fn gemv_and_blocked_paths_agree() {
+        let mut rng = Rng::new(43);
+        let (k, n) = (13, 37);
+        let a = rng.normal_f32s(k);
+        let w = rng.normal_f32s(k * n);
+        let bias = rng.normal_f32s(n);
+        let (mut pa, mut pb) = (vec![0.0; k], vec![0.0; k * NR]);
+        let mk = |epi| Gemm {
+            m: 1,
+            k,
+            n,
+            a: MatA::dense(&a, k),
+            b: MatB::dense(&w, n),
+            prologue: Prologue::None,
+            bias: Some(&bias),
+            epilogue: epi,
+        };
+        let mut gemv = vec![0.0f32; n];
+        mk(Epilogue::Silu).run(&mut gemv, n, &mut PackBufs { a: &mut pa, b: &mut pb });
+        // strided B (cs > 1) forces the blocked path for the same math
+        let mut wt = vec![0.0f32; k * n];
+        for kk in 0..k {
+            for j in 0..n {
+                wt[j * k + kk] = w[kk * n + j];
+            }
+        }
+        let mut blocked = vec![0.0f32; n];
+        Gemm {
+            m: 1,
+            k,
+            n,
+            a: MatA::dense(&a, k),
+            b: MatB { data: &wt, rs: 1, cs: k },
+            prologue: Prologue::None,
+            bias: Some(&bias),
+            epilogue: Epilogue::Silu,
+        }
+        .run(&mut blocked, n, &mut PackBufs { a: &mut pa, b: &mut pb });
+        for (g, b2) in gemv.iter().zip(&blocked) {
+            assert!((g - b2).abs() < 1e-5, "{g} vs {b2}");
+        }
+    }
+
+    #[test]
+    fn layer_norm_matches_scalar() {
+        let mut rng = Rng::new(44);
+        for &(t, d) in &[(1usize, 5usize), (3, 7), (16, 24)] {
+            let x = rng.normal_f32s(t * d);
+            let mut want = vec![0.0f32; t * d];
+            let mut got = vec![0.0f32; t * d];
+            scalar::layer_norm(&x, &mut want, t, d);
+            layer_norm(&x, &mut got, t, d);
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-5, "({t},{d}): {g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn attention_matches_scalar() {
+        let mut rng = Rng::new(45);
+        // (tokens, d, heads) incl. a ragged split (heads·dh < d)
+        for &(t, d, h) in &[(4usize, 8usize, 2usize), (7, 10, 3), (16, 24, 4)] {
+            let qkv = rng.normal_f32s(t * 3 * d);
+            let mut want = vec![0.0f32; t * d];
+            let mut probs = vec![0.0f32; t];
+            scalar::attention(&qkv, t, d, h, &mut want, &mut probs);
+            let mut got = vec![0.0f32; t * d];
+            let mut scores = vec![0.0f32; t * t];
+            let kmax = t.max(d / h);
+            let (mut pa, mut pb) = (vec![0.0; t * kmax], vec![0.0; kmax * NR]);
+            attention(
+                &qkv,
+                t,
+                d,
+                h,
+                &mut got,
+                &mut scores,
+                &mut PackBufs { a: &mut pa, b: &mut pb },
+            );
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-4, "({t},{d},{h}): {g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn default_mode_tracks_feature() {
+        let want =
+            if cfg!(feature = "scalar-ref") { KernelMode::Scalar } else { KernelMode::Blocked };
+        assert_eq!(KernelMode::default(), want);
+    }
+}

@@ -1,0 +1,112 @@
+//! Scalar reference kernels: the original naive loops of the native
+//! backend, kept verbatim as the parity oracle for the blocked kernel
+//! layer in [`super`] (DESIGN.md §12).
+//!
+//! These are deliberately the simplest correct implementations — ikj
+//! triple-loop matmul, two-pass LayerNorm, per-query attention with
+//! `libm` `exp` — so a disagreement between paths always indicts the
+//! fast one. `tests/kernel_parity.rs` sweeps both over odd shapes and
+//! every [`NativeArch`](crate::runtime::native::NativeArch) preset, and
+//! the `scalar-ref` cargo feature makes backends default to this path
+//! so a dedicated CI leg runs the entire test suite through it.
+
+/// out[m, n] = a[m, k] @ w[k, n] + bias[n] (ikj loop order: the inner
+/// loop runs down contiguous rows of `w` and `out`, which vectorizes).
+pub fn matmul_add(
+    a: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(w.len(), k * n);
+    debug_assert_eq!(bias.len(), n);
+    debug_assert_eq!(out.len(), m * n);
+    for i in 0..m {
+        let out_row = &mut out[i * n..(i + 1) * n];
+        out_row.copy_from_slice(bias);
+        let a_row = &a[i * k..(i + 1) * k];
+        for (kk, &aik) in a_row.iter().enumerate() {
+            let w_row = &w[kk * n..(kk + 1) * n];
+            for (o, &wv) in out_row.iter_mut().zip(w_row) {
+                *o += aik * wv;
+            }
+        }
+    }
+}
+
+/// silu(x) = x · σ(x), via `libm` exp.
+pub fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// Per-token LayerNorm (population variance, eps 1e-6 — matches
+/// model.py). Two-pass: f32 mean, then f32 centered variance.
+pub fn layer_norm(x: &[f32], out: &mut [f32], tokens: usize, d: usize) {
+    for t in 0..tokens {
+        let row = &x[t * d..(t + 1) * d];
+        let mu: f32 = row.iter().sum::<f32>() / d as f32;
+        let var: f32 = row.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
+        let rs = 1.0 / (var + 1e-6).sqrt();
+        for (o, &v) in out[t * d..(t + 1) * d].iter_mut().zip(row) {
+            *o = (v - mu) * rs;
+        }
+    }
+}
+
+/// x ← x·(1 + scale) + shift, broadcast over tokens.
+pub fn modulate(x: &mut [f32], shift: &[f32], scale: &[f32], tokens: usize, d: usize) {
+    for t in 0..tokens {
+        for (j, v) in x[t * d..(t + 1) * d].iter_mut().enumerate() {
+            *v = *v * (1.0 + scale[j]) + shift[j];
+        }
+    }
+}
+
+/// Softmax attention over an interleaved qkv buffer [T, 3D], writing
+/// [T, D]. `probs` is caller-provided score scratch of length `tokens`
+/// (fully overwritten per query row).
+pub fn attention(
+    qkv: &[f32],
+    tokens: usize,
+    d: usize,
+    heads: usize,
+    o: &mut [f32],
+    probs: &mut [f32],
+) {
+    debug_assert_eq!(probs.len(), tokens);
+    let dh = d / heads;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let row = 3 * d;
+    o.fill(0.0);
+    for h in 0..heads {
+        let off = h * dh;
+        for tq in 0..tokens {
+            let q_row = &qkv[tq * row + off..tq * row + off + dh];
+            let mut maxv = f32::NEG_INFINITY;
+            for (tk, p) in probs.iter_mut().enumerate() {
+                let k_row = &qkv[tk * row + d + off..tk * row + d + off + dh];
+                let dot: f32 = q_row.iter().zip(k_row).map(|(a, b)| a * b).sum();
+                *p = dot * scale;
+                maxv = maxv.max(*p);
+            }
+            let mut denom = 0f32;
+            for p in probs.iter_mut() {
+                *p = (*p - maxv).exp();
+                denom += *p;
+            }
+            let inv = 1.0 / denom;
+            let o_row = &mut o[tq * d + off..tq * d + off + dh];
+            for (tk, &p) in probs.iter().enumerate() {
+                let v_row = &qkv[tk * row + 2 * d + off..tk * row + 2 * d + off + dh];
+                let pw = p * inv;
+                for (ov, &vv) in o_row.iter_mut().zip(v_row) {
+                    *ov += pw * vv;
+                }
+            }
+        }
+    }
+}

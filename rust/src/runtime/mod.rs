@@ -6,6 +6,9 @@
 //! * [`native`] — pure-Rust, `Send + Sync` CPU reference of the DiT
 //!   forward pass; runs with zero artifacts (always compiled, the
 //!   default);
+//! * [`kernels`] — the cache-blocked GEMM / layer-norm / attention
+//!   kernel layer with fused epilogues the native backend computes
+//!   through, plus the retained scalar reference path (DESIGN.md §12);
 //! * [`pjrt`] — AOT HLO artifacts executed through the PJRT C API;
 //!   compiled only with the `pjrt` cargo feature;
 //! * [`resolve`] — the shared `--backend native|pjrt|auto` resolver used
@@ -15,6 +18,7 @@
 //!   §11).
 
 pub mod backend;
+pub mod kernels;
 pub mod native;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
@@ -22,6 +26,7 @@ pub mod resolve;
 pub mod workspace;
 
 pub use backend::{ClassifierBackend, ModelBackend};
+pub use kernels::KernelMode;
 pub use native::{NativeBackend, NativeClassifier, NativeHub};
 pub use workspace::{Workspace, WorkspacePool};
 pub use resolve::{BackendRequest, ResolvedModel};

@@ -21,6 +21,15 @@
 //! [`ModelBackend::warmup`] (or one call per entry point × bucket) the
 //! steady-state forward pass performs **zero heap allocations**. The
 //! trait signature is unchanged: the arena lives behind `&self`.
+//!
+//! Compute contract (DESIGN.md §12): the arithmetic itself runs through
+//! the [`kernels`] layer — a cache-blocked GEMM with the adaLN modulate
+//! fused into the operand pack and SiLU / gated-residual / broadcast
+//! adds fused into the output loop, plus single-pass layer-norm and
+//! blocked attention. [`KernelMode`] selects at runtime between that
+//! path and the retained [`kernels::scalar`] reference (the original
+//! naive loops), which is what the parity suite and the speedup benches
+//! compare.
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
@@ -33,6 +42,9 @@ use crate::config::{
 };
 use crate::math::timestep_embedding_into;
 use crate::runtime::backend::{ClassifierBackend, ModelBackend};
+use crate::runtime::kernels::{
+    self, scalar, Epilogue, Gemm, KernelMode, MatA, MatB, PackBufs, Prologue,
+};
 use crate::runtime::workspace::{Workspace, WorkspaceGuard, WorkspacePool};
 use crate::tensor::{BufferPool, Tensor};
 use crate::util::rng::Rng;
@@ -94,94 +106,8 @@ pub struct NativeBackend {
     ws: WorkspacePool,
     /// Recycling pool for result-tensor storage.
     out: BufferPool,
-}
-
-// ---------------------------------------------------------------------------
-// Dense math helpers (row-major, f32)
-// ---------------------------------------------------------------------------
-
-/// out[m, n] = a[m, k] @ w[k, n] + bias[n] (ikj loop order: the inner loop
-/// runs down contiguous rows of `w` and `out`, which vectorizes).
-fn matmul_add(a: &[f32], w: &[f32], bias: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(w.len(), k * n);
-    debug_assert_eq!(bias.len(), n);
-    debug_assert_eq!(out.len(), m * n);
-    for i in 0..m {
-        let out_row = &mut out[i * n..(i + 1) * n];
-        out_row.copy_from_slice(bias);
-        let a_row = &a[i * k..(i + 1) * k];
-        for (kk, &aik) in a_row.iter().enumerate() {
-            let w_row = &w[kk * n..(kk + 1) * n];
-            for (o, &wv) in out_row.iter_mut().zip(w_row) {
-                *o += aik * wv;
-            }
-        }
-    }
-}
-
-fn silu(x: f32) -> f32 {
-    x / (1.0 + (-x).exp())
-}
-
-/// Per-token LayerNorm (population variance, eps 1e-6 — matches model.py).
-fn layer_norm(x: &[f32], out: &mut [f32], tokens: usize, d: usize) {
-    for t in 0..tokens {
-        let row = &x[t * d..(t + 1) * d];
-        let mu: f32 = row.iter().sum::<f32>() / d as f32;
-        let var: f32 = row.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
-        let rs = 1.0 / (var + 1e-6).sqrt();
-        for (o, &v) in out[t * d..(t + 1) * d].iter_mut().zip(row) {
-            *o = (v - mu) * rs;
-        }
-    }
-}
-
-/// x ← x·(1 + scale) + shift, broadcast over tokens.
-fn modulate(x: &mut [f32], shift: &[f32], scale: &[f32], tokens: usize, d: usize) {
-    for t in 0..tokens {
-        for (j, v) in x[t * d..(t + 1) * d].iter_mut().enumerate() {
-            *v = *v * (1.0 + scale[j]) + shift[j];
-        }
-    }
-}
-
-/// Softmax attention over an interleaved qkv buffer [T, 3D], writing
-/// [T, D]. `probs` is caller-provided score scratch of length `tokens`
-/// (fully overwritten per query row).
-fn attention(qkv: &[f32], tokens: usize, d: usize, heads: usize, o: &mut [f32], probs: &mut [f32]) {
-    debug_assert_eq!(probs.len(), tokens);
-    let dh = d / heads;
-    let scale = 1.0 / (dh as f32).sqrt();
-    let row = 3 * d;
-    o.fill(0.0);
-    for h in 0..heads {
-        let off = h * dh;
-        for tq in 0..tokens {
-            let q_row = &qkv[tq * row + off..tq * row + off + dh];
-            let mut maxv = f32::NEG_INFINITY;
-            for (tk, p) in probs.iter_mut().enumerate() {
-                let k_row = &qkv[tk * row + d + off..tk * row + d + off + dh];
-                let dot: f32 = q_row.iter().zip(k_row).map(|(a, b)| a * b).sum();
-                *p = dot * scale;
-                maxv = maxv.max(*p);
-            }
-            let mut denom = 0f32;
-            for p in probs.iter_mut() {
-                *p = (*p - maxv).exp();
-                denom += *p;
-            }
-            let inv = 1.0 / denom;
-            let o_row = &mut o[tq * d + off..tq * d + off + dh];
-            for (tk, &p) in probs.iter().enumerate() {
-                let v_row = &qkv[tk * row + 2 * d + off..tk * row + 2 * d + off + dh];
-                let pw = p * inv;
-                for (ov, &vv) in o_row.iter_mut().zip(v_row) {
-                    *ov += pw * vv;
-                }
-            }
-        }
-    }
+    /// Blocked kernels or the scalar reference (DESIGN.md §12).
+    kernels: KernelMode,
 }
 
 // ---------------------------------------------------------------------------
@@ -348,7 +274,14 @@ impl NativeBackend {
             head_w,
             head_b: vec![0.0; pd],
         };
-        NativeBackend { entry, arch, w, ws: WorkspacePool::new(), out: BufferPool::new() }
+        NativeBackend {
+            entry,
+            arch,
+            w,
+            ws: WorkspacePool::new(),
+            out: BufferPool::new(),
+            kernels: KernelMode::default(),
+        }
     }
 
     /// Load trained weights from an AOT manifest entry's `weights.bin`
@@ -416,12 +349,41 @@ impl NativeBackend {
             head_w: full("head_w", d * pd)?,
             head_b: full("head_b", pd)?,
         };
-        Ok(NativeBackend { entry, arch, w, ws: WorkspacePool::new(), out: BufferPool::new() })
+        Ok(NativeBackend {
+            entry,
+            arch,
+            w,
+            ws: WorkspacePool::new(),
+            out: BufferPool::new(),
+            kernels: KernelMode::default(),
+        })
     }
 
     /// The architecture knobs this backend was built with.
     pub fn arch(&self) -> &NativeArch {
         &self.arch
+    }
+
+    /// Override the kernel path (builder style). The default is
+    /// [`KernelMode::Blocked`], or [`KernelMode::Scalar`] under the
+    /// `scalar-ref` feature; parity tests and the speedup benches build
+    /// one backend per mode and compare.
+    pub fn with_kernel_mode(mut self, mode: KernelMode) -> NativeBackend {
+        self.kernels = mode;
+        self
+    }
+
+    /// Which kernel path this backend dispatches through.
+    pub fn kernel_mode(&self) -> KernelMode {
+        self.kernels
+    }
+
+    /// Result-buffer pool misses (checkouts that had to allocate) over
+    /// this backend's lifetime. After warmup — or after one settling
+    /// round at peak concurrency — this stops growing; the sharded
+    /// allocation probe in `tests/shard_pool.rs` asserts exactly that.
+    pub fn result_pool_misses(&self) -> usize {
+        self.out.misses()
     }
 
     fn patch_dim(&self) -> usize {
@@ -497,20 +459,64 @@ impl NativeBackend {
     /// every consumer (block adaLN, head adaLN) immediately feeds it
     /// through silu.
     fn cond_silu_into(&self, ws: &mut Workspace, t: f32, y: i32) {
+        match self.kernels {
+            KernelMode::Blocked => self.cond_silu_into_blocked(ws, t, y),
+            KernelMode::Scalar => self.cond_silu_into_scalar(ws, t, y),
+        }
+    }
+
+    /// Kernel-layer conditioning MLP: two GEMV dispatches with the SiLU
+    /// and the class-embedding add fused as epilogues.
+    fn cond_silu_into_blocked(&self, ws: &mut Workspace, t: f32, y: i32) {
         let d = self.entry.config.dim;
         let fd = self.arch.t_freq_dim;
         timestep_embedding_into(t, fd, &mut ws.temb);
-        matmul_add(&ws.temb, &self.w.t_w1, &self.w.t_b1, 1, fd, d, &mut ws.cond_h);
-        for v in ws.cond_h.iter_mut() {
-            *v = silu(*v);
+        let cls = (y.rem_euclid(self.entry.config.num_classes as i32)) as usize;
+        let Workspace { temb, cond_h, cond, pack_a, pack_b, .. } = ws;
+        let mut pack = PackBufs { a: pack_a.as_mut_slice(), b: pack_b.as_mut_slice() };
+        Gemm {
+            m: 1,
+            k: fd,
+            n: d,
+            a: MatA::dense(temb, fd),
+            b: MatB::dense(&self.w.t_w1, d),
+            prologue: Prologue::None,
+            bias: Some(&self.w.t_b1),
+            epilogue: Epilogue::Silu,
         }
-        matmul_add(&ws.cond_h, &self.w.t_w2, &self.w.t_b2, 1, d, d, &mut ws.cond);
+        .run(cond_h, d, &mut pack);
+        Gemm {
+            m: 1,
+            k: d,
+            n: d,
+            a: MatA::dense(cond_h, d),
+            b: MatB::dense(&self.w.t_w2, d),
+            prologue: Prologue::None,
+            bias: Some(&self.w.t_b2),
+            epilogue: Epilogue::AddRows { rows: &self.w.y_emb[cls * d..(cls + 1) * d], rs: d },
+        }
+        .run(cond, d, &mut pack);
+        for v in cond.iter_mut() {
+            *v = kernels::silu(*v);
+        }
+    }
+
+    /// Scalar-reference conditioning MLP (the original unfused loops).
+    fn cond_silu_into_scalar(&self, ws: &mut Workspace, t: f32, y: i32) {
+        let d = self.entry.config.dim;
+        let fd = self.arch.t_freq_dim;
+        timestep_embedding_into(t, fd, &mut ws.temb);
+        scalar::matmul_add(&ws.temb, &self.w.t_w1, &self.w.t_b1, 1, fd, d, &mut ws.cond_h);
+        for v in ws.cond_h.iter_mut() {
+            *v = scalar::silu(*v);
+        }
+        scalar::matmul_add(&ws.cond_h, &self.w.t_w2, &self.w.t_b2, 1, d, d, &mut ws.cond);
         let k = (y.rem_euclid(self.entry.config.num_classes as i32)) as usize;
         for (cv, ev) in ws.cond.iter_mut().zip(&self.w.y_emb[k * d..(k + 1) * d]) {
             *cv += ev;
         }
         for v in ws.cond.iter_mut() {
-            *v = silu(*v);
+            *v = scalar::silu(*v);
         }
     }
 
@@ -521,9 +527,30 @@ impl NativeBackend {
         let (t, d) = (cfg.tokens, cfg.dim);
         let pd = self.patch_dim();
         self.patchify_into(x_flat, &mut ws.patches);
-        matmul_add(&ws.patches, &self.w.patch_w, &self.w.patch_b, t, pd, d, xt);
-        for (v, p) in xt.iter_mut().zip(&self.w.pos_emb) {
-            *v += p;
+        match self.kernels {
+            KernelMode::Blocked => {
+                let Workspace { patches, pack_a, pack_b, .. } = ws;
+                let mut pack = PackBufs { a: pack_a.as_mut_slice(), b: pack_b.as_mut_slice() };
+                // patch embedding with the positional add fused into the
+                // output loop
+                Gemm {
+                    m: t,
+                    k: pd,
+                    n: d,
+                    a: MatA::dense(patches, pd),
+                    b: MatB::dense(&self.w.patch_w, d),
+                    prologue: Prologue::None,
+                    bias: Some(&self.w.patch_b),
+                    epilogue: Epilogue::AddRows { rows: &self.w.pos_emb, rs: d },
+                }
+                .run(xt, d, &mut pack);
+            }
+            KernelMode::Scalar => {
+                scalar::matmul_add(&ws.patches, &self.w.patch_w, &self.w.patch_b, t, pd, d, xt);
+                for (v, p) in xt.iter_mut().zip(&self.w.pos_emb) {
+                    *v += p;
+                }
+            }
         }
     }
 
@@ -532,35 +559,124 @@ impl NativeBackend {
     /// buffers (`x` must not alias the workspace — callers temporarily
     /// move `ws.xt` out when the trunk itself is block-applied).
     fn block_apply(&self, l: usize, x: &mut [f32], ws: &mut Workspace) {
+        match self.kernels {
+            KernelMode::Blocked => self.block_apply_blocked(l, x, ws),
+            KernelMode::Scalar => self.block_apply_scalar(l, x, ws),
+        }
+    }
+
+    /// Kernel-layer DiT block. Fusion map (DESIGN.md §12): the adaLN
+    /// modulate rides the A-pack of the qkv / mlp1 GEMMs (modulate always
+    /// consumes a LayerNorm that immediately feeds a matmul), SiLU rides
+    /// the mlp1 output loop, and both branch residuals are gated-add
+    /// epilogues on the proj / mlp2 GEMMs — so `ws.proj` / `ws.mlp_out`
+    /// are never materialized on this path.
+    fn block_apply_blocked(&self, l: usize, x: &mut [f32], ws: &mut Workspace) {
+        let cfg = &self.entry.config;
+        let (t, d) = (cfg.tokens, cfg.dim);
+        let heads = cfg.heads;
+        let md = self.arch.mlp_ratio * d;
+        let bw = &self.w.blocks[l];
+        let Workspace { cond, mod6, norm, qkv, attn, scores, mlp_hidden, pack_a, pack_b, .. } = ws;
+        let mut pack = PackBufs { a: pack_a.as_mut_slice(), b: pack_b.as_mut_slice() };
+        Gemm {
+            m: 1,
+            k: d,
+            n: 6 * d,
+            a: MatA::dense(cond, d),
+            b: MatB::dense(&bw.adaln_w, 6 * d),
+            prologue: Prologue::None,
+            bias: Some(&bw.adaln_b),
+            epilogue: Epilogue::None,
+        }
+        .run(mod6, 6 * d, &mut pack);
+        let (sh1, rest) = mod6.split_at(d);
+        let (s1, rest) = rest.split_at(d);
+        let (g1, rest) = rest.split_at(d);
+        let (sh2, rest) = rest.split_at(d);
+        let (s2, g2) = rest.split_at(d);
+        // attention branch
+        kernels::layer_norm(x, norm, t, d);
+        Gemm {
+            m: t,
+            k: d,
+            n: 3 * d,
+            a: MatA::dense(norm, d),
+            b: MatB::dense(&bw.qkv_w, 3 * d),
+            prologue: Prologue::Modulate { shift: sh1, scale: s1 },
+            bias: Some(&bw.qkv_b),
+            epilogue: Epilogue::None,
+        }
+        .run(qkv, 3 * d, &mut pack);
+        kernels::attention(qkv, t, d, heads, attn, scores, &mut pack);
+        Gemm {
+            m: t,
+            k: d,
+            n: d,
+            a: MatA::dense(attn, d),
+            b: MatB::dense(&bw.proj_w, d),
+            prologue: Prologue::None,
+            bias: Some(&bw.proj_b),
+            epilogue: Epilogue::GatedResidual { gate: g1 },
+        }
+        .run(x, d, &mut pack);
+        // MLP branch
+        kernels::layer_norm(x, norm, t, d);
+        Gemm {
+            m: t,
+            k: d,
+            n: md,
+            a: MatA::dense(norm, d),
+            b: MatB::dense(&bw.mlp_w1, md),
+            prologue: Prologue::Modulate { shift: sh2, scale: s2 },
+            bias: Some(&bw.mlp_b1),
+            epilogue: Epilogue::Silu,
+        }
+        .run(mlp_hidden, md, &mut pack);
+        Gemm {
+            m: t,
+            k: md,
+            n: d,
+            a: MatA::dense(mlp_hidden, md),
+            b: MatB::dense(&bw.mlp_w2, d),
+            prologue: Prologue::None,
+            bias: Some(&bw.mlp_b2),
+            epilogue: Epilogue::GatedResidual { gate: g2 },
+        }
+        .run(x, d, &mut pack);
+    }
+
+    /// Scalar-reference DiT block (the original unfused loops).
+    fn block_apply_scalar(&self, l: usize, x: &mut [f32], ws: &mut Workspace) {
         let cfg = &self.entry.config;
         let (t, d) = (cfg.tokens, cfg.dim);
         let bw = &self.w.blocks[l];
-        matmul_add(&ws.cond, &bw.adaln_w, &bw.adaln_b, 1, d, 6 * d, &mut ws.mod6);
+        scalar::matmul_add(&ws.cond, &bw.adaln_w, &bw.adaln_b, 1, d, 6 * d, &mut ws.mod6);
         let (sh1, rest) = ws.mod6.split_at(d);
         let (s1, rest) = rest.split_at(d);
         let (g1, rest) = rest.split_at(d);
         let (sh2, rest) = rest.split_at(d);
         let (s2, g2) = rest.split_at(d);
         // attention branch
-        layer_norm(x, &mut ws.norm, t, d);
-        modulate(&mut ws.norm, sh1, s1, t, d);
-        matmul_add(&ws.norm, &bw.qkv_w, &bw.qkv_b, t, d, 3 * d, &mut ws.qkv);
-        attention(&ws.qkv, t, d, cfg.heads, &mut ws.attn, &mut ws.probs);
-        matmul_add(&ws.attn, &bw.proj_w, &bw.proj_b, t, d, d, &mut ws.proj);
+        scalar::layer_norm(x, &mut ws.norm, t, d);
+        scalar::modulate(&mut ws.norm, sh1, s1, t, d);
+        scalar::matmul_add(&ws.norm, &bw.qkv_w, &bw.qkv_b, t, d, 3 * d, &mut ws.qkv);
+        scalar::attention(&ws.qkv, t, d, cfg.heads, &mut ws.attn, &mut ws.probs);
+        scalar::matmul_add(&ws.attn, &bw.proj_w, &bw.proj_b, t, d, d, &mut ws.proj);
         for tok in 0..t {
             for j in 0..d {
                 x[tok * d + j] += g1[j] * ws.proj[tok * d + j];
             }
         }
         // MLP branch
-        layer_norm(x, &mut ws.norm, t, d);
-        modulate(&mut ws.norm, sh2, s2, t, d);
+        scalar::layer_norm(x, &mut ws.norm, t, d);
+        scalar::modulate(&mut ws.norm, sh2, s2, t, d);
         let md = self.arch.mlp_ratio * d;
-        matmul_add(&ws.norm, &bw.mlp_w1, &bw.mlp_b1, t, d, md, &mut ws.mlp_hidden);
+        scalar::matmul_add(&ws.norm, &bw.mlp_w1, &bw.mlp_b1, t, d, md, &mut ws.mlp_hidden);
         for v in ws.mlp_hidden.iter_mut() {
-            *v = silu(*v);
+            *v = scalar::silu(*v);
         }
-        matmul_add(&ws.mlp_hidden, &bw.mlp_w2, &bw.mlp_b2, t, md, d, &mut ws.mlp_out);
+        scalar::matmul_add(&ws.mlp_hidden, &bw.mlp_w2, &bw.mlp_b2, t, md, d, &mut ws.mlp_out);
         for tok in 0..t {
             for j in 0..d {
                 x[tok * d + j] += g2[j] * ws.mlp_out[tok * d + j];
@@ -571,10 +687,53 @@ impl NativeBackend {
     /// Final adaLN + linear head on [T, D] tokens `x` -> eps written into
     /// `out` (conditioning from `ws.cond`; `x` must not alias `ws`).
     fn head_tokens_into(&self, x: &[f32], ws: &mut Workspace, out: &mut [f32]) {
+        match self.kernels {
+            KernelMode::Blocked => self.head_tokens_into_blocked(x, ws, out),
+            KernelMode::Scalar => self.head_tokens_into_scalar(x, ws, out),
+        }
+    }
+
+    /// Kernel-layer head: the final modulate is fused into the head
+    /// GEMM's A-pack, exactly like the block branches.
+    fn head_tokens_into_blocked(&self, x: &[f32], ws: &mut Workspace, out: &mut [f32]) {
         let cfg = &self.entry.config;
         let (t, d) = (cfg.tokens, cfg.dim);
         let pd = self.patch_dim();
-        matmul_add(
+        let Workspace { cond, mod2, norm, tok_out, pack_a, pack_b, .. } = ws;
+        let mut pack = PackBufs { a: pack_a.as_mut_slice(), b: pack_b.as_mut_slice() };
+        Gemm {
+            m: 1,
+            k: d,
+            n: 2 * d,
+            a: MatA::dense(cond, d),
+            b: MatB::dense(&self.w.head_adaln_w, 2 * d),
+            prologue: Prologue::None,
+            bias: Some(&self.w.head_adaln_b),
+            epilogue: Epilogue::None,
+        }
+        .run(mod2, 2 * d, &mut pack);
+        let (shift, scale) = mod2.split_at(d);
+        kernels::layer_norm(x, norm, t, d);
+        Gemm {
+            m: t,
+            k: d,
+            n: pd,
+            a: MatA::dense(norm, d),
+            b: MatB::dense(&self.w.head_w, pd),
+            prologue: Prologue::Modulate { shift, scale },
+            bias: Some(&self.w.head_b),
+            epilogue: Epilogue::None,
+        }
+        .run(tok_out, pd, &mut pack);
+        self.unpatchify_into(tok_out, out);
+    }
+
+    /// Scalar-reference head (the original unfused loops).
+    fn head_tokens_into_scalar(&self, x: &[f32], ws: &mut Workspace, out: &mut [f32]) {
+        let cfg = &self.entry.config;
+        let (t, d) = (cfg.tokens, cfg.dim);
+        let pd = self.patch_dim();
+        scalar::matmul_add(
             &ws.cond,
             &self.w.head_adaln_w,
             &self.w.head_adaln_b,
@@ -584,9 +743,9 @@ impl NativeBackend {
             &mut ws.mod2,
         );
         let (shift, scale) = ws.mod2.split_at(d);
-        layer_norm(x, &mut ws.norm, t, d);
-        modulate(&mut ws.norm, shift, scale, t, d);
-        matmul_add(&ws.norm, &self.w.head_w, &self.w.head_b, t, d, pd, &mut ws.tok_out);
+        scalar::layer_norm(x, &mut ws.norm, t, d);
+        scalar::modulate(&mut ws.norm, shift, scale, t, d);
+        scalar::matmul_add(&ws.norm, &self.w.head_w, &self.w.head_b, t, d, pd, &mut ws.tok_out);
         self.unpatchify_into(&ws.tok_out, out);
     }
 
@@ -848,15 +1007,15 @@ impl ClassifierBackend for NativeClassifier {
         let mut f = vec![0f32; self.feat];
         for s in 0..bucket {
             let row = &x[s * self.latent..(s + 1) * self.latent];
-            matmul_add(row, &self.w1, &self.b1, 1, self.latent, self.hidden, &mut h);
+            scalar::matmul_add(row, &self.w1, &self.b1, 1, self.latent, self.hidden, &mut h);
             for v in h.iter_mut() {
                 *v = v.tanh();
             }
-            matmul_add(&h, &self.w2, &self.b2, 1, self.hidden, self.feat, &mut f);
+            scalar::matmul_add(&h, &self.w2, &self.b2, 1, self.hidden, self.feat, &mut f);
             for v in f.iter_mut() {
                 *v = v.tanh();
             }
-            matmul_add(
+            scalar::matmul_add(
                 &f,
                 &self.w3,
                 &self.b3,
@@ -1073,6 +1232,25 @@ mod tests {
         let (eps, _) = ModelBackend::full(&m, 2, &x, &t, &y, false).unwrap();
         let eps_only = ModelBackend::full_eps(&m, 2, &x, &t, &y).unwrap();
         assert_eq!(eps.data, eps_only.data);
+    }
+
+    #[test]
+    fn kernel_modes_agree_end_to_end() {
+        // Same seeded weights, same inputs, one backend per KernelMode:
+        // the fused blocked path must track the scalar reference within
+        // accumulation-order tolerance through the full forward pass.
+        let blocked = tiny().with_kernel_mode(KernelMode::Blocked);
+        let scalar_m = tiny().with_kernel_mode(KernelMode::Scalar);
+        let cfg = &blocked.entry().config;
+        let (x, t, y) = rand_inputs(2, cfg.latent_dim, 21);
+        let (eb, bb) = ModelBackend::full(&blocked, 2, &x, &t, &y, false).unwrap();
+        let (es, bs) = ModelBackend::full(&scalar_m, 2, &x, &t, &y, false).unwrap();
+        for (i, (a, b)) in eb.data.iter().zip(&es.data).enumerate() {
+            assert!((a - b).abs() <= 1e-3 + 1e-3 * b.abs(), "eps[{i}]: {a} vs {b}");
+        }
+        for (i, (a, b)) in bb.data.iter().zip(&bs.data).enumerate() {
+            assert!((a - b).abs() <= 1e-3 + 1e-3 * b.abs(), "bound[{i}]: {a} vs {b}");
+        }
     }
 
     #[test]

@@ -23,6 +23,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use crate::config::ModelConfig;
+use crate::runtime::kernels::NR;
 use crate::runtime::native::NativeArch;
 
 /// Every per-call temporary of the native DiT forward pass, sized for one
@@ -60,6 +61,14 @@ pub struct Workspace {
     pub mod2: Vec<f32>,
     /// Head token output `[tokens, patch_dim]` (unpatchify input).
     pub tok_out: Vec<f32>,
+    /// Blocked-attention score matrix for one head `[tokens, tokens]`.
+    pub scores: Vec<f32>,
+    /// GEMM A-operand pack `[tokens, kmax]` (DESIGN.md §12): the prologue
+    /// (adaLN modulate) is applied while copying into this buffer.
+    pub pack_a: Vec<f32>,
+    /// GEMM B-panel pack `[kmax, NR]`: one register-width column panel,
+    /// zero-padded so remainder tiles need no edge cases.
+    pub pack_b: Vec<f32>,
 }
 
 impl Workspace {
@@ -68,6 +77,10 @@ impl Workspace {
         let (t, d) = (cfg.tokens, cfg.dim);
         let pd = cfg.patch * cfg.patch * cfg.channels;
         let md = arch.mlp_ratio * d;
+        // widest contraction dimension any kernel-layer GEMM packs over:
+        // patch embed (pd), MLP down-proj (md), everything D-shaped (d),
+        // attention PV (t), conditioning MLP (t_freq_dim)
+        let kmax = pd.max(md).max(d).max(t).max(arch.t_freq_dim);
         Workspace {
             temb: vec![0.0; arch.t_freq_dim],
             cond_h: vec![0.0; d],
@@ -84,6 +97,9 @@ impl Workspace {
             mlp_out: vec![0.0; t * d],
             mod2: vec![0.0; 2 * d],
             tok_out: vec![0.0; t * pd],
+            scores: vec![0.0; t * t],
+            pack_a: vec![0.0; t * kmax],
+            pack_b: vec![0.0; kmax * NR],
         }
     }
 
@@ -103,7 +119,10 @@ impl Workspace {
             + self.mlp_hidden.len()
             + self.mlp_out.len()
             + self.mod2.len()
-            + self.tok_out.len())
+            + self.tok_out.len()
+            + self.scores.len()
+            + self.pack_a.len()
+            + self.pack_b.len())
     }
 }
 
@@ -198,6 +217,10 @@ mod tests {
         assert_eq!(ws.qkv.len(), cfg.tokens * 3 * cfg.dim);
         assert_eq!(ws.mlp_hidden.len(), cfg.tokens * 4 * cfg.dim);
         assert_eq!(ws.probs.len(), cfg.tokens);
+        assert_eq!(ws.scores.len(), cfg.tokens * cfg.tokens);
+        // kmax for native_test is the MLP hidden width (4·dim)
+        assert_eq!(ws.pack_a.len(), cfg.tokens * 4 * cfg.dim);
+        assert_eq!(ws.pack_b.len(), 4 * cfg.dim * NR);
         assert!(ws.resident_bytes() > 0);
     }
 

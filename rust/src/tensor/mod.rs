@@ -13,6 +13,7 @@
 
 use std::fmt;
 use std::ops::{Deref, DerefMut};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 /// Owned flat `f32` storage for a [`Tensor`]: a `Vec<f32>` plus an
@@ -99,6 +100,10 @@ const POOL_CAP: usize = 64;
 #[derive(Clone, Default)]
 pub struct BufferPool {
     inner: Arc<Mutex<Vec<Vec<f32>>>>,
+    /// `take` calls that had to allocate because nothing retained fit —
+    /// flat after warmup; growth under load is a recycling regression
+    /// (asserted by the sharded allocation probe in `tests/shard_pool.rs`).
+    misses: Arc<AtomicUsize>,
 }
 
 impl BufferPool {
@@ -129,7 +134,10 @@ impl BufferPool {
         }
         let mut vec = match best {
             Some((i, _)) => g.swap_remove(i),
-            None => Vec::with_capacity(len),
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                Vec::with_capacity(len)
+            }
         };
         drop(g);
         // only the length change is initialized (zeros); surviving
@@ -155,6 +163,12 @@ impl BufferPool {
     /// Buffers currently retained (checked-out storage excluded).
     pub fn idle(&self) -> usize {
         self.inner.lock().unwrap().len()
+    }
+
+    /// `take` calls that allocated fresh storage (pool misses) over this
+    /// pool's lifetime. Steady state after warmup holds this constant.
+    pub fn misses(&self) -> usize {
+        self.misses.load(Ordering::Relaxed)
     }
 
     fn put(&self, buf: Vec<f32>) {
@@ -376,6 +390,7 @@ mod tests {
         let pool = BufferPool::new();
         let s = pool.take(8);
         assert_eq!(s.len(), 8);
+        assert_eq!(pool.misses(), 1);
         // fresh allocations are zeroed; *recycled* contents are
         // unspecified (consumers overwrite in full)
         assert!(s.iter().all(|v| *v == 0.0));
@@ -384,6 +399,7 @@ mod tests {
         assert_eq!(pool.idle(), 1);
         let t = pool.take(4); // best fit: reuses the returned buffer
         assert_eq!(pool.idle(), 0);
+        assert_eq!(pool.misses(), 1, "recycled checkout is not a miss");
         assert_eq!(t.len(), 4);
         assert!(t.capacity() >= cap.min(8));
         let tensor = Tensor::from_storage(vec![2, 2], t);

@@ -1,0 +1,245 @@
+//! Kernel parity suite (DESIGN.md §12): every blocked kernel against the
+//! retained scalar reference, ULP-bounded, across shapes that are *not*
+//! multiples of the MR×NR tile (remainder rows, padded panel columns,
+//! heads that don't divide the model width), every prologue/epilogue
+//! fusion, and — end to end — every `NativeArch` preset through both
+//! [`KernelMode`]s of the native backend.
+//!
+//! Tolerances: element comparisons pass when the values are within
+//! `max_ulps` representable f32s of each other *or* within a small
+//! absolute slack (the two paths sum in different orders, so exact-zero
+//! cancellations can land on opposite sides of zero; an absolute
+//! backstop is the standard escape hatch for that case).
+
+use speca::config::ModelConfig;
+use speca::runtime::kernels::{
+    self, scalar, Epilogue, Gemm, KernelMode, MatA, MatB, PackBufs, Prologue,
+};
+use speca::runtime::{ModelBackend, NativeBackend};
+use speca::util::rng::Rng;
+
+/// Map f32 bit patterns onto a monotonic integer line so the distance
+/// between two floats counts representable values between them.
+fn ulp_index(x: f32) -> i64 {
+    let b = x.to_bits();
+    if b & 0x8000_0000 != 0 {
+        -((b & 0x7fff_ffff) as i64)
+    } else {
+        b as i64
+    }
+}
+
+fn ulp_diff(a: f32, b: f32) -> i64 {
+    (ulp_index(a) - ulp_index(b)).abs()
+}
+
+/// Element-wise comparison: within `max_ulps` representable values, or
+/// within `abs_slack` absolutely (cancellation backstop).
+fn assert_close(tag: &str, got: &[f32], want: &[f32], max_ulps: i64, abs_slack: f32) {
+    assert_eq!(got.len(), want.len(), "{tag}: length mismatch");
+    for (i, (&g, &w)) in got.iter().zip(want).enumerate() {
+        assert!(g.is_finite(), "{tag}[{i}]: non-finite {g}");
+        let ok = ulp_diff(g, w) <= max_ulps || (g - w).abs() <= abs_slack;
+        assert!(ok, "{tag}[{i}]: got {g}, want {w}, ulps {}", ulp_diff(g, w));
+    }
+}
+
+/// Shapes deliberately off the MR=4 / NR=16 grid: remainder row tiles
+/// (m mod 4 ≠ 0), padded panel columns (n mod 16 ≠ 0), k of every size.
+const SHAPES: &[(usize, usize, usize)] =
+    &[(1, 1, 1), (2, 3, 5), (3, 7, 17), (5, 24, 33), (17, 31, 47), (16, 16, 16), (1, 13, 40)];
+
+#[test]
+fn gemm_parity_all_fusions_odd_shapes() {
+    let mut rng = Rng::new(0xD15EA5E);
+    for &(m, k, n) in SHAPES {
+        let a = rng.normal_f32s(m * k);
+        let w = rng.normal_f32s(k * n);
+        let bias = rng.normal_f32s(n);
+        let shift_k = rng.normal_f32s(k);
+        let scale_k = rng.normal_f32s(k);
+        let shift_n = rng.normal_f32s(n);
+        let scale_n = rng.normal_f32s(n);
+        let gate = rng.normal_f32s(n);
+        let rows = rng.normal_f32s(m * n);
+        let base = rng.normal_f32s(m * n);
+        // oracle-side prologue: modulate A before the naive matmul
+        let mut a_mod = a.clone();
+        for i in 0..m {
+            for kk in 0..k {
+                a_mod[i * k + kk] = a[i * k + kk] * (1.0 + scale_k[kk]) + shift_k[kk];
+            }
+        }
+        let mut pa = vec![0.0f32; m * k];
+        let mut pb = vec![0.0f32; k * kernels::NR];
+        for pro_mod in [false, true] {
+            let a_oracle = if pro_mod { &a_mod } else { &a };
+            let mut raw = vec![0.0f32; m * n];
+            scalar::matmul_add(a_oracle, &w, &bias, m, k, n, &mut raw);
+            for epi_name in ["none", "silu", "modulate", "gated", "addrows"] {
+                let mut want = raw.clone();
+                match epi_name {
+                    "silu" => {
+                        for v in want.iter_mut() {
+                            *v = scalar::silu(*v);
+                        }
+                    }
+                    "modulate" => {
+                        scalar::modulate(&mut want, &shift_n, &scale_n, m, n);
+                    }
+                    "gated" => {
+                        for i in 0..m {
+                            for j in 0..n {
+                                want[i * n + j] = base[i * n + j] + gate[j] * raw[i * n + j];
+                            }
+                        }
+                    }
+                    "addrows" => {
+                        for (v, r) in want.iter_mut().zip(&rows) {
+                            *v += r;
+                        }
+                    }
+                    _ => {}
+                }
+                let epilogue = match epi_name {
+                    "silu" => Epilogue::Silu,
+                    "modulate" => Epilogue::Modulate { shift: &shift_n, scale: &scale_n },
+                    "gated" => Epilogue::GatedResidual { gate: &gate },
+                    "addrows" => Epilogue::AddRows { rows: &rows, rs: n },
+                    _ => Epilogue::None,
+                };
+                let prologue = if pro_mod {
+                    Prologue::Modulate { shift: &shift_k, scale: &scale_k }
+                } else {
+                    Prologue::None
+                };
+                let mut got = vec![0.0f32; m * n];
+                if epi_name == "gated" {
+                    got.copy_from_slice(&base); // residual accumulates in place
+                }
+                Gemm {
+                    m,
+                    k,
+                    n,
+                    a: MatA::dense(&a, k),
+                    b: MatB::dense(&w, n),
+                    prologue,
+                    bias: Some(&bias),
+                    epilogue,
+                }
+                .run(&mut got, n, &mut PackBufs { a: &mut pa, b: &mut pb });
+                let tag = format!("gemm({m},{k},{n}) pro={pro_mod} epi={epi_name}");
+                assert_close(&tag, &got, &want, 256, 1e-4);
+            }
+        }
+    }
+}
+
+#[test]
+fn gemm_parity_without_bias() {
+    let mut rng = Rng::new(7);
+    let (m, k, n) = (6, 11, 21);
+    let a = rng.normal_f32s(m * k);
+    let w = rng.normal_f32s(k * n);
+    let zeros = vec![0.0f32; n];
+    let mut want = vec![0.0f32; m * n];
+    scalar::matmul_add(&a, &w, &zeros, m, k, n, &mut want);
+    let mut pa = vec![0.0f32; m * k];
+    let mut pb = vec![0.0f32; k * kernels::NR];
+    let mut got = vec![0.0f32; m * n];
+    Gemm {
+        m,
+        k,
+        n,
+        a: MatA::dense(&a, k),
+        b: MatB::dense(&w, n),
+        prologue: Prologue::None,
+        bias: None,
+        epilogue: Epilogue::None,
+    }
+    .run(&mut got, n, &mut PackBufs { a: &mut pa, b: &mut pb });
+    assert_close("gemm no-bias", &got, &want, 256, 1e-4);
+}
+
+#[test]
+fn layer_norm_parity_odd_widths() {
+    let mut rng = Rng::new(0xBADCAB);
+    for &(t, d) in &[(1usize, 3usize), (2, 5), (5, 17), (16, 24), (3, 33), (7, 101)] {
+        let x = rng.normal_f32s(t * d);
+        let mut want = vec![0.0f32; t * d];
+        let mut got = vec![0.0f32; t * d];
+        scalar::layer_norm(&x, &mut want, t, d);
+        kernels::layer_norm(&x, &mut got, t, d);
+        assert_close(&format!("layer_norm({t},{d})"), &got, &want, 512, 1e-4);
+    }
+}
+
+#[test]
+fn attention_parity_odd_heads() {
+    let mut rng = Rng::new(0xA77);
+    // (tokens, d, heads): dh = 1 edge, ragged splits (heads·dh < d),
+    // tile-multiple and off-grid token counts
+    for &(t, d, h) in
+        &[(1usize, 4usize, 1usize), (3, 5, 5), (5, 9, 2), (7, 10, 3), (16, 24, 4), (13, 12, 4)]
+    {
+        let qkv = rng.normal_f32s(t * 3 * d);
+        let mut want = vec![0.0f32; t * d];
+        let mut probs = vec![0.0f32; t];
+        scalar::attention(&qkv, t, d, h, &mut want, &mut probs);
+        let mut got = vec![0.0f32; t * d];
+        let mut scores = vec![0.0f32; t * t];
+        let kmax = t.max(d / h);
+        let mut pa = vec![0.0f32; t * kmax];
+        let mut pb = vec![0.0f32; kmax * kernels::NR];
+        kernels::attention(
+            &qkv,
+            t,
+            d,
+            h,
+            &mut got,
+            &mut scores,
+            &mut PackBufs { a: &mut pa, b: &mut pb },
+        );
+        assert_close(&format!("attention({t},{d},{h})"), &got, &want, 4096, 1e-4);
+    }
+}
+
+/// End-to-end: both kernel modes through the public `ModelBackend`
+/// surface on every preset, eps and all boundary taps.
+#[test]
+fn forward_parity_across_presets() {
+    let presets = [
+        ModelConfig::native_dit(),
+        ModelConfig::native_flux(),
+        ModelConfig::native_video(),
+        ModelConfig::native_test(),
+    ];
+    for cfg in presets {
+        let name = cfg.name.clone();
+        let blocked = NativeBackend::seeded(cfg.clone(), 99).with_kernel_mode(KernelMode::Blocked);
+        let reference = NativeBackend::seeded(cfg, 99).with_kernel_mode(KernelMode::Scalar);
+        let c = &blocked.entry().config;
+        let mut rng = Rng::new(31);
+        let x = rng.normal_f32s(2 * c.latent_dim);
+        let t = vec![c.serve_steps as f32, 1.0];
+        let y = vec![1i32, 3];
+        let (eb, bb) = blocked.full(2, &x, &t, &y, false).unwrap();
+        let (es, bs) = reference.full(2, &x, &t, &y, false).unwrap();
+        for (i, (a, b)) in eb.data.iter().zip(&es.data).enumerate() {
+            let ok = (a - b).abs() <= 1e-3 + 1e-3 * b.abs();
+            assert!(ok, "{name} eps[{i}]: blocked {a} vs scalar {b}");
+        }
+        for (i, (a, b)) in bb.data.iter().zip(&bs.data).enumerate() {
+            let ok = (a - b).abs() <= 1e-3 + 1e-3 * b.abs();
+            assert!(ok, "{name} boundary[{i}]: blocked {a} vs scalar {b}");
+        }
+        // the decomposed entry points ride the same kernels
+        let feat = c.tokens * c.dim;
+        let blk = blocked.block(1, 0, &bb.data[..feat], &t[..1], &y[..1]).unwrap();
+        let blk_s = reference.block(1, 0, &bs.data[..feat], &t[..1], &y[..1]).unwrap();
+        for (i, (a, b)) in blk.data.iter().zip(&blk_s.data).enumerate() {
+            let ok = (a - b).abs() <= 1e-3 + 1e-3 * b.abs();
+            assert!(ok, "{name} block[{i}]: blocked {a} vs scalar {b}");
+        }
+    }
+}

@@ -3,8 +3,10 @@
 //! completions (accept/reject decisions, step counts, outputs) on 1 shard
 //! and on N shards, so sharding is a pure throughput win with no semantic
 //! drift. Also covered: least-loaded routing under skewed request sizes,
-//! pool stats aggregation, and clean shutdown (drain and halt) with
-//! requests in flight.
+//! mid-flight decay of the expected-work gauges, the sharded allocation
+//! probe (shared workspace/result pools stop growing at peak
+//! concurrency), pool stats aggregation, and clean shutdown (drain and
+//! halt) with requests in flight.
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -293,6 +295,44 @@ fn least_loaded_weighs_expected_work_not_request_counts() {
 }
 
 #[test]
+fn work_gauge_decays_as_progress_arrives() {
+    // A heavy hinted request books its full cost at submit; the shard
+    // worker then decays the booking linearly as serve steps complete
+    // (`decay_weight`) — without anyone consuming the event stream — so
+    // least-loaded routing sees remaining work shrink mid-flight instead
+    // of only at completion.
+    let model = Arc::new(SlowBackend::new(5));
+    let depth = model.entry().config.depth;
+    let pool = EngineShardPool::new(model, pool_config(1));
+    let router = pool.router();
+
+    let mut heavy = slow_spec(0, depth, "full");
+    heavy.meta.cost_hint = 60.0; // books 60_000 µ-units on shard 0
+    pool.submit(heavy).unwrap();
+
+    // sample the gauge until the terminal release zeroes it; the smallest
+    // nonzero sample witnesses mid-flight decay (each of the 12 serve
+    // steps sleeps 5 ms, so intermediate values are visible for ~55 ms)
+    let deadline = std::time::Instant::now() + Duration::from_secs(20);
+    let mut min_seen = u64::MAX;
+    loop {
+        let w = router.work_us()[0];
+        if w == 0 {
+            break;
+        }
+        min_seen = min_seen.min(w);
+        assert!(std::time::Instant::now() < deadline, "request never completed");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    assert!(min_seen < 60_000, "gauge never decayed below the admission booking: {min_seen}");
+    assert!(min_seen >= 1, "in-flight booking must keep its one µ-unit floor");
+
+    let out = pool.shutdown(true).unwrap();
+    assert_eq!(out.completions.len(), 1);
+    assert_eq!(router.work_us(), vec![0], "terminal release must zero the gauge exactly");
+}
+
+#[test]
 fn round_robin_ignores_load() {
     let model = Arc::new(SlowBackend::new(2));
     let depth = model.entry().config.depth;
@@ -478,4 +518,35 @@ fn pool_stats_aggregate_across_shards() {
     assert_eq!(out.stats.inflight, 0);
     assert!(out.stats.ticks > 0);
     assert!(out.stats.flops.total() > 0, "native runs must book FLOPs");
+}
+
+#[test]
+fn sharded_pools_stop_growing_after_peak_concurrency() {
+    // Three shard workers drive ONE shared native backend. The workspace
+    // pool grows to peak concurrency (one arena per simultaneously
+    // ticking shard) and the result-buffer pool to the result shapes
+    // concurrently in flight; after a few settling rounds of identical
+    // load, both counters must freeze — every further checkout recycles
+    // (the multi-thread counterpart of tests/alloc_discipline.rs, which
+    // pins the single-engine steady state to zero allocations).
+    let model = Arc::new(NativeBackend::seeded(ModelConfig::native_test(), 0x900F));
+    for _ in 0..3 {
+        run_workload(&model, 3);
+    }
+    let ws = model.workspaces_created();
+    let misses = model.result_pool_misses();
+    assert!(ws >= 1, "settling rounds must have materialized a workspace");
+    for round in 0..2 {
+        run_workload(&model, 3);
+        assert_eq!(
+            model.workspaces_created(),
+            ws,
+            "workspace pool grew after settling (round {round})"
+        );
+        assert_eq!(
+            model.result_pool_misses(),
+            misses,
+            "result-buffer pool missed after settling (round {round})"
+        );
+    }
 }
