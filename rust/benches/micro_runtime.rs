@@ -201,6 +201,7 @@ fn bench_shard_sweep(model: &Arc<NativeBackend>, quick: bool) -> anyhow::Result<
                 shards,
                 router: RouterPolicy::LeastLoaded,
                 engine: EngineConfig { max_inflight: 4, ..EngineConfig::default() },
+                steal: false,
             },
         );
         let t0 = Instant::now();

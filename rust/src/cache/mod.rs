@@ -185,6 +185,32 @@ impl TapCache {
     pub fn factors(&self) -> &[Vec<f32>] {
         &self.factors
     }
+
+    /// Refreshes observed so far (the warmup counter capping
+    /// [`Self::usable_order`]). Together with [`Self::factors`] and
+    /// [`Self::interval`] this is the tap's complete serializable state —
+    /// what a [`crate::coordinator::state::RequestCheckpoint`] extracts.
+    pub fn updates(&self) -> usize {
+        self.updates
+    }
+
+    /// Nominal refresh spacing N used in the Taylor denominators.
+    pub fn interval(&self) -> f32 {
+        self.interval
+    }
+
+    /// Rebuild a tap from previously extracted state (the inverse of
+    /// [`Self::factors`] + [`Self::updates`] + [`Self::interval`]): the
+    /// re-insertion half of the checkpoint contract. The scratch staging
+    /// buffer is rebuilt empty — it is an intra-refresh temporary and
+    /// carries no trajectory state, so a restored tap predicts and
+    /// refreshes bitwise-identically to the original.
+    pub fn from_parts(factors: Vec<Vec<f32>>, updates: usize, interval: f32) -> TapCache {
+        assert!(!factors.is_empty(), "a tap stores at least Δ⁰");
+        let feat_len = factors[0].len();
+        assert!(factors.iter().all(|f| f.len() == feat_len), "factor lengths must agree");
+        TapCache { factors, updates, interval, scratch: Vec::with_capacity(feat_len) }
+    }
 }
 
 /// The per-request bundle of tap caches tracked by the SpeCa engine:
@@ -385,6 +411,27 @@ mod tests {
         assert_eq!(h.interval(), 5.0);
         assert_eq!(h.feat_len(), 4);
         assert_eq!(h.factor(0), cache.factors()[0].as_slice());
+    }
+
+    #[test]
+    fn extracted_tap_state_reinserts_bitwise() {
+        // the checkpoint contract: factors + updates + interval fully
+        // determine future predicts AND future refreshes
+        let mut orig = TapCache::new(2, 4, 5);
+        orig.refresh(&[1.0, 2.0, 3.0, 4.0]);
+        orig.refresh(&[2.0, 4.0, 6.0, 8.0]);
+        let mut restored =
+            TapCache::from_parts(orig.factors().to_vec(), orig.updates(), orig.interval());
+        assert_eq!(restored.usable_order(), orig.usable_order());
+        assert_eq!(
+            restored.predict(3.0, DraftKind::Taylor),
+            orig.predict(3.0, DraftKind::Taylor)
+        );
+        // continued refreshes stay in lockstep (scratch carries no state)
+        orig.refresh(&[5.0, 1.0, 0.0, -2.0]);
+        restored.refresh(&[5.0, 1.0, 0.0, -2.0]);
+        assert_eq!(orig.factors(), restored.factors());
+        assert_eq!(orig.updates(), restored.updates());
     }
 
     #[test]

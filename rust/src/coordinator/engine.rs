@@ -47,9 +47,9 @@ use crate::config::{ModelEntry, Schedule, ScheduleKind};
 use crate::coordinator::batcher::{
     gather_rows_into, pad_rows, plan_chunks_into, BatchStrategy, Chunk,
 };
-use crate::coordinator::job::{JobProgress, Priority, Termination, TerminationCause};
+use crate::coordinator::job::{JobMeta, JobProgress, Priority, Termination, TerminationCause};
 use crate::coordinator::policy::{Plan, Policy};
-use crate::coordinator::state::{Completion, ReqState, RequestSpec};
+use crate::coordinator::state::{Completion, ReqState, RequestCheckpoint, RequestSpec};
 use crate::math::{rel_l1, timestep_embedding_into};
 use crate::metrics::flops::{FlopsCounter, FlopsModel};
 use crate::runtime::ModelBackend;
@@ -72,6 +72,64 @@ impl Default for EngineConfig {
     fn default() -> Self {
         EngineConfig { max_inflight: 8, strategy: BatchStrategy::Binary, use_pallas: false }
     }
+}
+
+/// One unit of admissible work: a fresh request (admission draws its
+/// initial latent from the seed) or a checkpoint parked at a step
+/// boundary (admission resumes it mid-flight). This is the currency
+/// shard workers exchange when stealing or migrating work
+/// (`coordinator::pool`): both variants are shard-independent, so a
+/// unit queued on one engine can be re-queued on any other.
+#[derive(Debug)]
+pub enum Admission {
+    /// Not yet started.
+    Fresh(RequestSpec),
+    /// Parked mid-flight; resume is bitwise (DESIGN.md §13).
+    Parked(Box<RequestCheckpoint>),
+}
+
+impl Admission {
+    /// Request id of the unit.
+    pub fn id(&self) -> u64 {
+        self.spec().id
+    }
+
+    /// Job-lifecycle metadata of the unit.
+    pub fn meta(&self) -> &JobMeta {
+        &self.spec().meta
+    }
+
+    /// The underlying request spec.
+    pub fn spec(&self) -> &RequestSpec {
+        match self {
+            Admission::Fresh(spec) => spec,
+            Admission::Parked(ckpt) => &ckpt.spec,
+        }
+    }
+}
+
+/// Per-request scalar record taken at the top of every tick: the
+/// rollback ledger that returns a request to its pre-tick step boundary
+/// when a dispatch fails mid-tick. Everything large (latent, tap
+/// caches, blend features, TeaCache embedding) only mutates together
+/// with `step` after a successful backend call, so a request whose
+/// `step` did not move differs from its boundary state only in these
+/// scalars plus verify-trace entries past `trace_len` — restoring them
+/// makes the whole active set parkable bitwise-safely (DESIGN.md §13).
+#[derive(Clone, Copy, Default)]
+struct TickSnapshot {
+    id: u64,
+    step: usize,
+    since_full: usize,
+    tea_accum: f64,
+    trace_len: usize,
+    flops: FlopsCounter,
+    full_steps: usize,
+    spec_steps: usize,
+    skip_steps: usize,
+    blend_steps: usize,
+    elided_steps: usize,
+    rejects: usize,
 }
 
 /// Reusable batch-staging buffers. Presized from the model entry at
@@ -177,12 +235,19 @@ pub struct Engine<'a> {
     flops_model: FlopsModel,
     cfg: EngineConfig,
     /// admission queues, one FIFO per priority class (admit pops the
-    /// highest non-empty class — see `pop_next`)
-    queues: [VecDeque<RequestSpec>; Priority::LEVELS],
+    /// highest non-empty class — see `pop_next`); each entry is a fresh
+    /// spec or a parked checkpoint awaiting resume
+    queues: [VecDeque<Admission>; Priority::LEVELS],
     active: Vec<ReqState>,
     completions: Vec<Completion>,
     /// requests dropped at a step boundary (cancel / queued-deadline)
     terminations: Vec<Termination>,
+    /// per-tick rollback ledger (presized; see [`TickSnapshot`])
+    snapshots: Vec<TickSnapshot>,
+    /// requests parked at a boundary (preemption, stealing, park_all)
+    pub parked: u64,
+    /// checkpoints resumed into a slot on this engine
+    pub resumed: u64,
     /// set once any submitted request could actually cancel or expire;
     /// until then the per-tick lifecycle sweep is skipped, so
     /// fire-and-forget batch runs pay nothing for it
@@ -210,6 +275,7 @@ impl<'a> Engine<'a> {
         let flops_model = FlopsModel::new(model.entry().flops.clone());
         let scratch = Scratch::for_model(model.entry(), cfg.max_inflight);
         let plan = PlanScratch::with_capacity(cfg.max_inflight);
+        let snapshots = Vec::with_capacity(cfg.max_inflight.max(1));
         let t_model = &model.entry().schedule.t_model;
         let mut tea_drift = vec![0.0f64; t_model.len()];
         {
@@ -229,6 +295,9 @@ impl<'a> Engine<'a> {
             active: Vec::new(),
             completions: Vec::new(),
             terminations: Vec::new(),
+            snapshots,
+            parked: 0,
+            resumed: 0,
             lifecycle_sensitive: false,
             flops: FlopsCounter::default(),
             ticks: 0,
@@ -252,13 +321,26 @@ impl<'a> Engine<'a> {
     /// Enqueue a request into its priority class (admitted on a later
     /// tick when a slot frees up; higher classes admit first).
     pub fn submit(&mut self, spec: RequestSpec) {
+        self.submit_admission(Admission::Fresh(spec));
+    }
+
+    /// Enqueue a parked checkpoint for resume — the receiving half of
+    /// preemption requeue, work-stealing and crash/drain migration.
+    pub fn submit_checkpoint(&mut self, ckpt: Box<RequestCheckpoint>) {
+        self.submit_admission(Admission::Parked(ckpt));
+    }
+
+    /// Enqueue any admission unit into its priority class.
+    pub fn submit_admission(&mut self, adm: Admission) {
         // a deadline can expire on its own; a cancel token can only
         // fire if some other handle shares it — otherwise this request
         // never needs the per-tick lifecycle sweep
-        if spec.meta.deadline.is_some() || spec.meta.cancel.is_shared() {
+        let meta = adm.meta();
+        if meta.deadline.is_some() || meta.cancel.is_shared() {
             self.lifecycle_sensitive = true;
         }
-        self.queues[spec.meta.priority.index()].push_back(spec);
+        let class = meta.priority.index();
+        self.queues[class].push_back(adm);
     }
 
     /// Requests queued or in flight.
@@ -300,7 +382,7 @@ impl<'a> Engine<'a> {
         let ids = self
             .queues
             .iter()
-            .flat_map(|q| q.iter().map(|s| s.id))
+            .flat_map(|q| q.iter().map(|a| a.id()))
             .chain(self.active.iter().map(|r| r.spec.id))
             .collect();
         for q in &mut self.queues {
@@ -310,10 +392,97 @@ impl<'a> Engine<'a> {
         ids
     }
 
-    /// Pop the next request to admit: highest priority class first,
+    /// Park every in-flight request at its current step boundary and
+    /// pop everything queued, returning the lot as admission units a
+    /// peer engine can re-queue verbatim. Requests already at their
+    /// final boundary (a mid-tick error can leave them fully advanced
+    /// with the retire sweep unrun) are retired into completions
+    /// instead of parked. Drain/crash migration runs on this.
+    pub fn park_all(&mut self) -> Vec<Admission> {
+        let total = self.total_steps();
+        let mut i = 0;
+        while i < self.active.len() {
+            if self.active[i].step >= total {
+                let st = self.active.swap_remove(i);
+                self.finish(st);
+            } else {
+                i += 1;
+            }
+        }
+        let active = std::mem::take(&mut self.active);
+        let mut out = Vec::with_capacity(active.len() + self.pending());
+        for st in active {
+            self.parked += 1;
+            out.push(Admission::Parked(Box::new(st.park())));
+        }
+        // queued units follow the parked actives, highest class first,
+        // so a receiver's push_back keeps mid-flight work ahead of
+        // not-yet-started work within each class
+        for q in self.queues.iter_mut().rev() {
+            out.extend(q.drain(..));
+        }
+        out
+    }
+
+    /// Donate one unit of work to an idle peer (the work-stealing
+    /// victim side). Prefers queued work — lowest class, newest first,
+    /// the units whose FIFO position costs least to move — and only
+    /// when nothing is queued parks the least-advanced preemptible
+    /// active request of the lowest priority class, keeping at least
+    /// one active request so the donor never idles itself.
+    pub fn steal_one(&mut self) -> Option<Admission> {
+        for q in self.queues.iter_mut() {
+            if let Some(adm) = q.pop_back() {
+                return Some(adm);
+            }
+        }
+        if self.active.len() < 2 {
+            return None;
+        }
+        let victim = self
+            .active
+            .iter()
+            .enumerate()
+            .filter(|(_, st)| st.spec.meta.preemptible)
+            .min_by_key(|(_, st)| (st.spec.meta.priority.index(), st.step))
+            .map(|(i, _)| i)?;
+        let st = self.active.swap_remove(victim);
+        self.parked += 1;
+        Some(Admission::Parked(Box::new(st.park())))
+    }
+
+    /// Pop the next admission unit: highest priority class first,
     /// FIFO within a class.
-    fn pop_next(&mut self) -> Option<RequestSpec> {
+    fn pop_next(&mut self) -> Option<Admission> {
         self.queues.iter_mut().rev().find_map(|q| q.pop_front())
+    }
+
+    /// Highest priority class with queued work.
+    fn highest_queued_class(&self) -> Option<usize> {
+        (0..Priority::LEVELS).rev().find(|&c| !self.queues[c].is_empty())
+    }
+
+    /// Preemption step of `admit`: when every slot is occupied and the
+    /// best queued class outranks some running preemptible job of a
+    /// strictly lower class, park that victim (lowest class first, then
+    /// least progress) and push it to the *front* of its class queue, so
+    /// it resumes before anything queued behind it. Returns whether a
+    /// slot was freed.
+    fn try_preempt(&mut self) -> bool {
+        let Some(waiting) = self.highest_queued_class() else { return false };
+        let victim = self
+            .active
+            .iter()
+            .enumerate()
+            .filter(|(_, st)| st.spec.meta.preemptible && st.spec.meta.priority.index() < waiting)
+            .min_by_key(|(_, st)| (st.spec.meta.priority.index(), st.step))
+            .map(|(i, _)| i);
+        let Some(i) = victim else { return false };
+        let st = self.active.swap_remove(i);
+        let class = st.spec.meta.priority.index();
+        self.parked += 1;
+        self.queues[class].push_front(Admission::Parked(Box::new(st.park())));
+        true
     }
 
     /// Step-boundary lifecycle sweep: drop queued/active requests whose
@@ -330,16 +499,18 @@ impl<'a> Engine<'a> {
         let Engine { queues, active, terminations, .. } = self;
         for q in queues {
             // in-place retain keeps FIFO order without rotating every
-            // queued spec through the deque on every tick
-            q.retain(|spec| {
-                let cause = if spec.meta.cancel.is_cancelled() {
+            // queued unit through the deque on every tick; parked
+            // checkpoints cancel/expire exactly like fresh specs
+            q.retain(|adm| {
+                let meta = adm.meta();
+                let cause = if meta.cancel.is_cancelled() {
                     TerminationCause::Cancelled
-                } else if spec.meta.expired(now) {
+                } else if meta.expired(now) {
                     TerminationCause::DeadlineExpired
                 } else {
                     return true;
                 };
-                terminations.push(Termination { id: spec.id, cause });
+                terminations.push(Termination { id: adm.id(), cause });
                 false
             });
         }
@@ -367,15 +538,30 @@ impl<'a> Engine<'a> {
 
     fn admit(&mut self, model: &dyn ModelBackend) {
         let cfg = &model.entry().config;
-        while self.active.len() < self.cfg.max_inflight {
-            let Some(spec) = self.pop_next() else { break };
-            let mut rng = Rng::new(spec.seed);
-            let x = rng.normal_f32s(cfg.latent_dim);
-            let mut st = ReqState::new(spec, x, cfg.depth, cfg.tokens * cfg.dim);
-            // one upfront reservation (at most one verify-trace entry per
-            // serve step), so steady-state pushes never reallocate
-            st.stats.verify_trace.reserve(cfg.serve_steps);
-            self.active.push(st);
+        loop {
+            while self.active.len() < self.cfg.max_inflight {
+                let Some(adm) = self.pop_next() else { return };
+                let mut st = match adm {
+                    Admission::Fresh(spec) => {
+                        let mut rng = Rng::new(spec.seed);
+                        let x = rng.normal_f32s(cfg.latent_dim);
+                        ReqState::new(spec, x, cfg.depth, cfg.tokens * cfg.dim)
+                    }
+                    Admission::Parked(ckpt) => {
+                        self.resumed += 1;
+                        ReqState::resume(*ckpt)
+                    }
+                };
+                // one upfront reservation (at most one verify-trace entry
+                // per serve step), so steady-state pushes never reallocate
+                st.stats.verify_trace.reserve(cfg.serve_steps);
+                self.active.push(st);
+            }
+            // every slot occupied: park a lower-class preemptible job if
+            // a higher class is waiting, then admit into the freed slot
+            if !self.try_preempt() {
+                return;
+            }
         }
     }
 
@@ -394,6 +580,29 @@ impl<'a> Engine<'a> {
         }
         self.ticks += 1;
         let total = self.total_steps();
+
+        // --- rollback ledger ---------------------------------------------
+        // Scalar snapshot of every active request before anything this
+        // tick mutates state, so a mid-tick dispatch failure can return
+        // non-advanced requests to this boundary (`rollback_to_boundary`).
+        // Presized at construction: steady-state ticks stay allocation-free.
+        self.snapshots.clear();
+        for st in &self.active {
+            self.snapshots.push(TickSnapshot {
+                id: st.spec.id,
+                step: st.step,
+                since_full: st.since_full,
+                tea_accum: st.tea_accum,
+                trace_len: st.stats.verify_trace.len(),
+                flops: st.stats.flops,
+                full_steps: st.stats.full_steps,
+                spec_steps: st.stats.spec_steps,
+                skip_steps: st.stats.skip_steps,
+                blend_steps: st.stats.blend_steps,
+                elided_steps: st.stats.elided_steps,
+                rejects: st.stats.rejects,
+            });
+        }
 
         // --- update TeaCache drift accumulators, then plan ---------------
         // (drift is a pure function of the step over the fixed schedule,
@@ -442,7 +651,10 @@ impl<'a> Engine<'a> {
 
         let res = self.run_phases(&*model, &mut tk, total);
         self.plan = tk;
-        res?;
+        if let Err(e) = res {
+            self.rollback_to_boundary();
+            return Err(e);
+        }
 
         // --- retire completed requests ------------------------------------
         let total = self.total_steps();
@@ -572,9 +784,37 @@ impl<'a> Engine<'a> {
         }
     }
 
+    /// Return every request whose `step` did not move this tick to its
+    /// pre-tick boundary by restoring the scalar ledger. Requests that
+    /// advanced before the failing dispatch already sit at the *next*
+    /// boundary and are kept as-is: after this sweep the whole active
+    /// set is at valid boundaries and [`Self::park_all`] yields
+    /// checkpoints whose resume replays the interrupted work
+    /// bitwise-identically (no double-booked FLOPs, no duplicate
+    /// verify-trace entries).
+    fn rollback_to_boundary(&mut self) {
+        let Engine { active, snapshots, .. } = self;
+        for (st, snap) in active.iter_mut().zip(snapshots.iter()) {
+            debug_assert_eq!(st.spec.id, snap.id, "rollback ledger out of sync");
+            if st.step != snap.step {
+                continue;
+            }
+            st.since_full = snap.since_full;
+            st.tea_accum = snap.tea_accum;
+            st.stats.verify_trace.truncate(snap.trace_len);
+            st.stats.flops = snap.flops;
+            st.stats.full_steps = snap.full_steps;
+            st.stats.spec_steps = snap.spec_steps;
+            st.stats.skip_steps = snap.skip_steps;
+            st.stats.blend_steps = snap.blend_steps;
+            st.stats.elided_steps = snap.elided_steps;
+            st.stats.rejects = snap.rejects;
+        }
+    }
+
     fn finish(&mut self, st: ReqState) {
         let mut st = st;
-        st.stats.latency_ms = st.started.elapsed().as_secs_f64() * 1e3;
+        st.stats.latency_ms = st.prior_ms + st.started.elapsed().as_secs_f64() * 1e3;
         self.flops.merge(&st.stats.flops);
         self.completions.push(Completion {
             id: st.spec.id,

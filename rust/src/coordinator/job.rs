@@ -62,9 +62,28 @@ impl fmt::Display for JobId {
     }
 }
 
+/// Identifier of a job group. Members submitted without an explicit
+/// cancel token share the group's [`CancelToken`], so one
+/// [`JobManager::cancel_group`] drops every queued/running member at its
+/// next step boundary. Ids are caller-chosen (the wire layer passes them
+/// through verbatim); the registry entry — token included — is reclaimed
+/// when the group's last member reaches a terminal state, so a later
+/// submit reusing the id starts a fresh group.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct GroupId(pub u64);
+
+impl fmt::Display for GroupId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "group-{}", self.0)
+    }
+}
+
 /// Scheduling class of a job. Shard queues admit strictly by priority
 /// (FIFO within a class), so a `High` job overtakes every queued
-/// `Normal`/`Low` job but never preempts work already in flight.
+/// `Normal`/`Low` job but never preempts work already in flight —
+/// unless the in-flight job opted in to checkpoint preemption
+/// ([`SubmitOptions::preemptible`]), in which case the engine parks it
+/// at a step boundary and resumes it later, bitwise-identically.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
 pub enum Priority {
     /// Admitted only when no normal/high work is queued.
@@ -157,6 +176,10 @@ pub struct JobMeta {
     /// the per-shard *expected remaining work* gauge — so a shard holding
     /// one heavy job yields to a shard holding two cheap ones.
     pub cost_hint: f64,
+    /// Whether the engine may park this request mid-flight (checkpoint
+    /// preemption / work-stealing, DESIGN.md §13) to free its slot for
+    /// higher-priority work. Off by default: preemption is opt-in.
+    pub preemptible: bool,
 }
 
 impl JobMeta {
@@ -166,8 +189,26 @@ impl JobMeta {
     }
 }
 
-/// Per-submission options for [`JobManager::submit`].
+/// Per-submission options for [`JobManager::submit`], built fluently:
+///
+/// ```
+/// use speca::coordinator::job::{GroupId, Priority, SubmitOptions};
+///
+/// let opts = SubmitOptions::new()
+///     .priority(Priority::High)
+///     .deadline_ms(5_000)
+///     .preemptible(true)
+///     .group(GroupId(7));
+/// assert_eq!(opts.priority, Priority::High);
+/// assert!(opts.preemptible);
+/// ```
+///
+/// `#[non_exhaustive]` on purpose: new submission knobs (this release
+/// added `preemptible` and `group`) must not break downstream code, so
+/// external callers construct via [`SubmitOptions::new`] / `Default`
+/// plus the chainable setters, never a struct literal.
 #[derive(Debug, Clone, Default)]
+#[non_exhaustive]
 pub struct SubmitOptions {
     /// Scheduling class (default [`Priority::Normal`]).
     pub priority: Priority,
@@ -175,8 +216,9 @@ pub struct SubmitOptions {
     /// rejects a deadline the service-time estimate says cannot be met;
     /// a queued job whose deadline passes is rejected before admission.
     pub deadline_ms: Option<u64>,
-    /// Cancellation token to share (e.g. one token over a job group);
-    /// `None` mints a fresh token, reachable via [`JobHandle::cancel`].
+    /// Cancellation token to share; `None` mints a fresh token (or the
+    /// group's shared token when [`Self::group`] is set), reachable via
+    /// [`JobHandle::cancel`].
     pub cancel: Option<CancelToken>,
     /// Draft-strategy override for SpeCa policies (the same override
     /// surface as the wire `draft` field).
@@ -184,6 +226,64 @@ pub struct SubmitOptions {
     /// Keep the final latent in the job record so `poll`/`wait` can
     /// return it (the wire `return_latent` field).
     pub return_latent: bool,
+    /// Allow the engine to park this job mid-flight — checkpoint it at a
+    /// step boundary and resume it later (possibly on another shard) —
+    /// to free its slot for higher-priority work or rebalancing. Resume
+    /// is bitwise-identical (DESIGN.md §13). Default `false`.
+    pub preemptible: bool,
+    /// Join a job group: members without an explicit `cancel` token
+    /// share the group's token, and the group appears in per-group
+    /// lifecycle counts ([`JobManager::group_counts`]).
+    pub group: Option<GroupId>,
+}
+
+impl SubmitOptions {
+    /// Default options (normal priority, no deadline, fresh token).
+    pub fn new() -> SubmitOptions {
+        SubmitOptions::default()
+    }
+
+    /// Set the scheduling class.
+    pub fn priority(mut self, priority: Priority) -> SubmitOptions {
+        self.priority = priority;
+        self
+    }
+
+    /// Set a relative deadline in milliseconds from submission.
+    pub fn deadline_ms(mut self, ms: u64) -> SubmitOptions {
+        self.deadline_ms = Some(ms);
+        self
+    }
+
+    /// Share an existing cancellation token.
+    pub fn cancel(mut self, token: CancelToken) -> SubmitOptions {
+        self.cancel = Some(token);
+        self
+    }
+
+    /// Override the SpeCa draft strategy for this job.
+    pub fn draft(mut self, draft: Draft) -> SubmitOptions {
+        self.draft = Some(draft);
+        self
+    }
+
+    /// Keep the final latent in the job record for `poll`/`wait`.
+    pub fn return_latent(mut self, yes: bool) -> SubmitOptions {
+        self.return_latent = yes;
+        self
+    }
+
+    /// Opt this job into checkpoint preemption / work-stealing.
+    pub fn preemptible(mut self, yes: bool) -> SubmitOptions {
+        self.preemptible = yes;
+        self
+    }
+
+    /// Join the given job group.
+    pub fn group(mut self, gid: GroupId) -> SubmitOptions {
+        self.group = Some(gid);
+        self
+    }
 }
 
 /// Why a job was rejected instead of queued or served.
@@ -411,6 +511,109 @@ impl Counters {
             _ => return,
         };
         counter.fetch_add(1, Ordering::SeqCst);
+    }
+}
+
+/// Lifecycle counts of one live job group (snapshot via
+/// [`JobManager::group_counts`]). Counts cover members that passed
+/// admission — a submit shed by the queue cap or deadline feasibility
+/// never joins its group.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GroupCounts {
+    /// The group's id.
+    pub id: u64,
+    /// Members admitted under this id since the group was (re)minted.
+    pub submitted: u64,
+    /// Members that finished normally.
+    pub completed: u64,
+    /// Members not yet in a terminal state.
+    pub live: u64,
+}
+
+#[derive(Default)]
+struct GroupEntry {
+    cancel: CancelToken,
+    submitted: u64,
+    completed: u64,
+    live: u64,
+}
+
+#[derive(Default)]
+struct GroupInner {
+    groups: HashMap<u64, GroupEntry>,
+    by_job: HashMap<u64, u64>,
+}
+
+/// Registry of live job groups: the shared cancel token per group plus
+/// member counts. An entry lives while any member is live and is
+/// reclaimed — token included — when the last member terminates, so
+/// registry memory is bounded by the live-job cap even against clients
+/// that mint a fresh group id per request.
+#[derive(Default)]
+struct GroupRegistry {
+    inner: Mutex<GroupInner>,
+}
+
+impl GroupRegistry {
+    /// The group's shared cancel token, minting the group on first use.
+    fn token(&self, gid: GroupId) -> CancelToken {
+        let mut g = self.inner.lock().unwrap();
+        g.groups.entry(gid.0).or_default().cancel.clone()
+    }
+
+    /// Count job `id` as a live member of `gid`.
+    fn note_submit(&self, gid: GroupId, id: u64) {
+        let mut g = self.inner.lock().unwrap();
+        let e = g.groups.entry(gid.0).or_default();
+        e.submitted += 1;
+        e.live += 1;
+        g.by_job.insert(id, gid.0);
+    }
+
+    /// Record a member's terminal transition. Callers gate on
+    /// [`JobTable::finish`] returning true, so duplicate terminal events
+    /// never double-decrement; non-member ids are a no-op.
+    fn note_terminal(&self, id: u64, completed: bool) {
+        let mut g = self.inner.lock().unwrap();
+        let Some(gid) = g.by_job.remove(&id) else { return };
+        let Some(e) = g.groups.get_mut(&gid) else { return };
+        e.live -= 1;
+        if completed {
+            e.completed += 1;
+        }
+        if e.live == 0 {
+            g.groups.remove(&gid);
+        }
+    }
+
+    /// Fire a group's shared token; returns whether the group currently
+    /// has a live member (a reclaimed or unknown id is a no-op).
+    fn cancel(&self, gid: GroupId) -> bool {
+        let g = self.inner.lock().unwrap();
+        match g.groups.get(&gid.0) {
+            Some(e) => {
+                e.cancel.cancel();
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Snapshot of every live group, ascending by id.
+    fn counts(&self) -> Vec<GroupCounts> {
+        let g = self.inner.lock().unwrap();
+        let mut out: Vec<GroupCounts> = g
+            .groups
+            .iter()
+            .map(|(&id, e)| GroupCounts {
+                id,
+                submitted: e.submitted,
+                completed: e.completed,
+                live: e.live,
+            })
+            .collect();
+        out.sort_by_key(|c| c.id);
+        out
     }
 }
 
@@ -773,6 +976,7 @@ pub struct JobManager {
     /// service-time hints stamped onto submissions so the router weighs
     /// expected remaining work rather than raw request counts.
     policy_est_ms: Arc<Mutex<HashMap<String, f64>>>,
+    groups: Arc<GroupRegistry>,
     pool: Mutex<Option<EngineShardPool>>,
     dispatcher: Mutex<Option<JoinHandle<()>>>,
     next_id: AtomicU64,
@@ -801,14 +1005,18 @@ impl JobManager {
         let counters = Arc::new(Counters::default());
         let est = Arc::new(AtomicU64::new(0));
         let policy_est = Arc::new(Mutex::new(HashMap::new()));
+        let groups = Arc::new(GroupRegistry::default());
         let dispatcher = {
             let table = table.clone();
             let counters = counters.clone();
             let est = est.clone();
             let policy_est = policy_est.clone();
+            let groups = groups.clone();
             std::thread::Builder::new()
                 .name("speca-job-dispatcher".into())
-                .spawn(move || dispatch_events(events, &table, &counters, &est, &policy_est))
+                .spawn(move || {
+                    dispatch_events(events, &table, &counters, &est, &policy_est, &groups)
+                })
                 .expect("spawning job dispatcher")
         };
         JobManager {
@@ -817,6 +1025,7 @@ impl JobManager {
             counters,
             est_service_ms: est,
             policy_est_ms: policy_est,
+            groups,
             pool: Mutex::new(Some(pool)),
             dispatcher: Mutex::new(Some(dispatcher)),
             next_id: AtomicU64::new(0),
@@ -839,7 +1048,14 @@ impl JobManager {
     ) -> JobHandle {
         let id = self.next_id.fetch_add(1, Ordering::SeqCst);
         self.counters.submitted.fetch_add(1, Ordering::SeqCst);
-        let cancel = opts.cancel.clone().unwrap_or_default();
+        // an explicit token wins; otherwise a group member shares the
+        // group's token (one cancel drops every member), and a loner
+        // gets a fresh one
+        let cancel = match (&opts.cancel, opts.group) {
+            (Some(c), _) => c.clone(),
+            (None, Some(gid)) => self.groups.token(gid),
+            (None, None) => CancelToken::new(),
+        };
 
         // deadline-aware admission: don't queue doomed work. The engine
         // serves up to `slots_per_shard` requests concurrently and the
@@ -865,6 +1081,11 @@ impl JobManager {
         if !self.table.try_insert(id, opts.return_latent, cancel.clone(), self.max_queue) {
             return self.rejected_handle(id, cancel, RejectReason::QueueFull);
         }
+        // group membership follows admission (shed jobs never join), so
+        // the registry's live counts mirror the table's
+        if let Some(gid) = opts.group {
+            self.groups.note_submit(gid, id);
+        }
 
         let mut policy = policy;
         if let Some(d) = &opts.draft {
@@ -888,11 +1109,14 @@ impl JobManager {
                 deadline: opts.deadline_ms.map(|ms| Instant::now() + Duration::from_millis(ms)),
                 cancel: cancel.clone(),
                 cost_hint,
+                preemptible: opts.preemptible,
             },
         };
         if let Err(e) = self.router.submit(spec) {
             let status = JobStatus::Aborted { error: format!("{e:#}") };
-            self.table.finish(id, status, &self.counters);
+            if self.table.finish(id, status, &self.counters) {
+                self.groups.note_terminal(id, false);
+            }
         }
         JobHandle { id: JobId(id), table: self.table.clone(), cancel, early: None }
     }
@@ -929,6 +1153,20 @@ impl JobManager {
     /// Fire job `id`'s cancel token; returns its status at that instant.
     pub fn cancel(&self, id: u64) -> Option<JobStatus> {
         self.table.cancel(id)
+    }
+
+    /// Fire a group's shared cancel token: every member that shares it
+    /// is dropped at its next step boundary. Returns whether the group
+    /// currently has a live member (unknown/reclaimed ids are a no-op).
+    pub fn cancel_group(&self, gid: GroupId) -> bool {
+        self.groups.cancel(gid)
+    }
+
+    /// Per-group lifecycle counts, ascending by group id. A group's
+    /// entry is reclaimed when its last member terminates, so this
+    /// reports groups with live members only.
+    pub fn group_counts(&self) -> Vec<GroupCounts> {
+        self.groups.counts()
     }
 
     /// Drop job `id`'s record if it is already terminal (see
@@ -999,12 +1237,16 @@ impl JobManager {
 }
 
 /// Fold the pool's event stream into table transitions + counters.
+/// Group membership retires on the same edge as the table transition
+/// ([`JobTable::finish`] returning true), so duplicate terminal events
+/// can never double-decrement a group's live count.
 fn dispatch_events(
     events: Receiver<JobEvent>,
     table: &JobTable,
     counters: &Counters,
     est_service_ms: &AtomicU64,
     policy_est_ms: &Mutex<HashMap<String, f64>>,
+    groups: &GroupRegistry,
 ) {
     for ev in events.iter() {
         match ev {
@@ -1027,16 +1269,24 @@ fn dispatch_events(
                     *e = 0.8 * *e + 0.2 * lat;
                 }
                 let id = c.id;
-                table.finish(id, JobStatus::Completed(Arc::from(c)), counters);
+                if table.finish(id, JobStatus::Completed(Arc::from(c)), counters) {
+                    groups.note_terminal(id, true);
+                }
             }
             JobEvent::Rejected { id, reason } => {
-                table.finish(id, JobStatus::Rejected { reason }, counters);
+                if table.finish(id, JobStatus::Rejected { reason }, counters) {
+                    groups.note_terminal(id, false);
+                }
             }
             JobEvent::Cancelled { id } => {
-                table.finish(id, JobStatus::Cancelled, counters);
+                if table.finish(id, JobStatus::Cancelled, counters) {
+                    groups.note_terminal(id, false);
+                }
             }
             JobEvent::Aborted { id, error } => {
-                table.finish(id, JobStatus::Aborted { error }, counters);
+                if table.finish(id, JobStatus::Aborted { error }, counters) {
+                    groups.note_terminal(id, false);
+                }
             }
         }
     }
@@ -1079,6 +1329,44 @@ mod tests {
         m.deadline = Some(now + Duration::from_secs(60));
         assert!(!m.expired(now));
         assert!(m.expired(now + Duration::from_secs(61)));
+    }
+
+    #[test]
+    fn submit_options_builder_chains() {
+        let opts = SubmitOptions::new()
+            .priority(Priority::Low)
+            .deadline_ms(250)
+            .return_latent(true)
+            .preemptible(true)
+            .group(GroupId(3));
+        assert_eq!(opts.priority, Priority::Low);
+        assert_eq!(opts.deadline_ms, Some(250));
+        assert!(opts.return_latent && opts.preemptible);
+        assert_eq!(opts.group, Some(GroupId(3)));
+        assert!(!SubmitOptions::default().preemptible, "preemption is opt-in");
+        assert_eq!(format!("{}", GroupId(3)), "group-3");
+    }
+
+    #[test]
+    fn group_registry_shares_tokens_and_reclaims() {
+        let reg = GroupRegistry::default();
+        let t1 = reg.token(GroupId(1));
+        let t2 = reg.token(GroupId(1));
+        t1.cancel();
+        assert!(t2.is_cancelled(), "members share one token");
+        reg.note_submit(GroupId(1), 10);
+        reg.note_submit(GroupId(1), 11);
+        let c = reg.counts();
+        assert_eq!(c.len(), 1);
+        assert_eq!((c[0].submitted, c[0].live, c[0].completed), (2, 2, 0));
+        reg.note_terminal(10, true);
+        assert_eq!(reg.counts()[0].completed, 1);
+        reg.note_terminal(10, true);
+        assert_eq!(reg.counts()[0].completed, 1, "repeat terminal is a no-op");
+        reg.note_terminal(11, false);
+        assert!(reg.counts().is_empty(), "last terminal reclaims the entry");
+        assert!(!reg.cancel(GroupId(1)), "reclaimed group is unknown");
+        assert!(!reg.token(GroupId(1)).is_cancelled(), "id reuse mints a fresh token");
     }
 
     #[test]

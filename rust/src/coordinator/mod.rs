@@ -11,11 +11,12 @@ pub mod policy;
 pub mod pool;
 pub mod state;
 
-pub use engine::{Engine, EngineConfig};
+pub use engine::{Admission, Engine, EngineConfig};
 pub use job::{
-    CancelToken, JobCounts, JobEvent, JobHandle, JobId, JobManager, JobMeta, JobOutcome,
-    JobProgress, JobStatus, Priority, RejectReason, SubmitOptions, Termination, TerminationCause,
+    CancelToken, GroupCounts, GroupId, JobCounts, JobEvent, JobHandle, JobId, JobManager, JobMeta,
+    JobOutcome, JobProgress, JobStatus, Priority, RejectReason, SubmitOptions, Termination,
+    TerminationCause,
 };
 pub use policy::{ErrorMetric, Plan, Policy, SpeCaConfig};
 pub use pool::{EngineShardPool, PoolConfig, PoolOutcome, RouterPolicy, ShardRouter, ShardStats};
-pub use state::{Completion, ReqState, RequestSpec, RequestStats};
+pub use state::{Completion, ReqState, RequestCheckpoint, RequestSpec, RequestStats};

@@ -35,10 +35,24 @@
 //! it. The dying worker tombstones its load gauge (releasing its
 //! in-flight accounting so admission control never counts dead
 //! requests, and steering the router away), drains its channel one last
-//! time, and emits a [`JobEvent::Aborted`] per abandoned request (so
-//! waiters get an error reply, never a hang — see `abandon_inflight`
-//! for why the tombstone-then-drain order makes this race-free); the
-//! error itself resurfaces as `Err` from [`EngineShardPool::shutdown`].
+//! time, then *evacuates*: every request the engine rolled back to a
+//! step boundary is parked into a
+//! [`RequestCheckpoint`](crate::coordinator::RequestCheckpoint) and
+//! handed to the least-loaded live peer, which resumes it
+//! bitwise-identically (DESIGN.md §13) — waiters see their job
+//! complete, not abort. Only when no live peer exists (1-shard pool,
+//! pool-wide drain) do the units fall back to [`JobEvent::Aborted`] (so
+//! waiters get an error reply, never a hang — see `evacuate` for why
+//! the tombstone-then-drain order makes this race-free); the error
+//! itself resurfaces as `Err` from [`EngineShardPool::shutdown`].
+//!
+//! Work-stealing ([`PoolConfig::steal`]): an idle worker pulls one
+//! admission unit — queued work, or a parked preemptible checkpoint —
+//! from the peer holding the most expected remaining work on its
+//! router gauge, so one shard's backlog spreads to idle capacity
+//! mid-request instead of only at admission time.
+//! [`EngineShardPool::drain_shard`] retires one shard the same way
+//! (park everything, migrate to peers, exit) for elastic downscale.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
@@ -51,7 +65,7 @@ use anyhow::{bail, Result};
 
 use crate::coordinator::job::{JobEvent, RejectReason, TerminationCause};
 use crate::coordinator::state::{Completion, RequestSpec};
-use crate::coordinator::{Engine, EngineConfig};
+use crate::coordinator::{Admission, Engine, EngineConfig};
 use crate::metrics::flops::FlopsCounter;
 use crate::runtime::ModelBackend;
 
@@ -146,6 +160,11 @@ pub struct PoolConfig {
     pub router: RouterPolicy,
     /// per-shard engine configuration (`max_inflight` is per shard)
     pub engine: EngineConfig,
+    /// Let idle workers steal admission units (queued work or parked
+    /// preemptible checkpoints) from loaded peers. Off by default so
+    /// closed-loop parity harnesses keep deterministic shard placement;
+    /// the server turns it on.
+    pub steal: bool,
 }
 
 impl Default for PoolConfig {
@@ -154,14 +173,26 @@ impl Default for PoolConfig {
             shards: 1,
             router: RouterPolicy::LeastLoaded,
             engine: EngineConfig::default(),
+            steal: false,
         }
     }
 }
 
 enum ShardMsg {
     Submit(RequestSpec),
+    /// a unit migrated from an exiting peer, with its `(initial,
+    /// remaining)` work-weight ledger entry (the sender reserved this
+    /// shard's gauges before handing over, mirroring `submit`)
+    Resume(Admission, (u64, u64)),
+    /// a work-stealing probe: reply with one admission unit (and its
+    /// weight ledger entry) or `None`; the victim releases its gauges
+    /// for a donated unit before replying, the thief re-reserves them
+    Steal {
+        reply: Sender<Option<(Admission, (u64, u64))>>,
+    },
     Stats(Sender<ShardStats>),
-    /// stop ingesting, finish everything already routed, exit
+    /// stop ingesting; migrate in-flight work to live peers if any,
+    /// else finish everything already routed, then exit
     Drain,
     /// exit now, abandoning in-flight requests
     Halt,
@@ -178,6 +209,15 @@ pub struct ShardStats {
     pub ticks: u64,
     /// Aggregate booked FLOPs.
     pub flops: FlopsCounter,
+    /// Checkpoints parked at a step boundary (preemption, stealing,
+    /// migration — the park side).
+    pub parked: u64,
+    /// Checkpoints resumed into a slot (any origin).
+    pub resumed: u64,
+    /// Units this shard pulled from loaded peers while idle.
+    pub stolen: u64,
+    /// Units this shard received from dying/draining peers.
+    pub migrated: u64,
 }
 
 impl ShardStats {
@@ -186,6 +226,10 @@ impl ShardStats {
         self.inflight += other.inflight;
         self.ticks += other.ticks;
         self.flops.merge(&other.flops);
+        self.parked += other.parked;
+        self.resumed += other.resumed;
+        self.stolen += other.stolen;
+        self.migrated += other.migrated;
     }
 }
 
@@ -388,6 +432,9 @@ pub struct EngineShardPool {
     /// closed-loop user (bench runners, parity tests) does not buffer
     /// requests × steps events nobody will read
     chatter: Arc<AtomicBool>,
+    /// per-shard drain flags, shared with every worker's mesh view:
+    /// a draining shard is never a steal victim or migration target
+    draining: Vec<Arc<AtomicBool>>,
 }
 
 impl EngineShardPool {
@@ -396,23 +443,40 @@ impl EngineShardPool {
         let shards = cfg.shards.max(1);
         let (ctx, crx) = channel();
         let chatter = Arc::new(AtomicBool::new(false));
+        // the whole mesh — channels, gauges, drain flags — exists before
+        // any worker spawns, because every worker's ShardCtx carries a
+        // view of all of it (stealing and migration are peer-to-peer)
         let mut txs = Vec::with_capacity(shards);
+        let mut rxs = Vec::with_capacity(shards);
         let mut loads = Vec::with_capacity(shards);
         let mut work = Vec::with_capacity(shards);
-        let mut workers = Vec::with_capacity(shards);
-        for shard in 0..shards {
+        let mut draining = Vec::with_capacity(shards);
+        for _ in 0..shards {
             let (tx, rx) = channel();
-            let load = Arc::new(AtomicUsize::new(0));
-            let work_gauge = Arc::new(AtomicU64::new(0));
+            txs.push(tx);
+            rxs.push(rx);
+            loads.push(Arc::new(AtomicUsize::new(0)));
+            work.push(Arc::new(AtomicU64::new(0)));
+            draining.push(Arc::new(AtomicBool::new(false)));
+        }
+        let mut workers = Vec::with_capacity(shards);
+        for (shard, rx) in rxs.into_iter().enumerate() {
             let worker_model = model.clone();
             let worker_cfg = cfg.engine.clone();
             let worker_ctx = ShardCtx {
                 shard,
-                load: load.clone(),
-                work: work_gauge.clone(),
+                load: loads[shard].clone(),
+                work: work[shard].clone(),
                 events: ctx.clone(),
                 chatter: chatter.clone(),
                 weights: HashMap::new(),
+                txs: txs.clone(),
+                loads: loads.clone(),
+                works: work.clone(),
+                draining: draining.clone(),
+                steal: cfg.steal,
+                stolen: 0,
+                migrated: 0,
             };
             workers.push(
                 thread::Builder::new()
@@ -420,9 +484,6 @@ impl EngineShardPool {
                     .spawn(move || shard_worker(worker_model, worker_cfg, worker_ctx, rx))
                     .expect("spawning shard worker"),
             );
-            txs.push(tx);
-            loads.push(load);
-            work.push(work_gauge);
         }
         EngineShardPool {
             router: ShardRouter {
@@ -435,6 +496,7 @@ impl EngineShardPool {
             workers,
             events: Some(crx),
             chatter,
+            draining,
         }
     }
 
@@ -467,17 +529,41 @@ impl EngineShardPool {
         rx
     }
 
+    /// Drain one shard without stopping the pool (elastic downscale):
+    /// the shard stops ingesting, parks everything in flight and hands
+    /// the checkpoints to live peers, then exits; its tombstoned gauge
+    /// steers the router away from then on. Returns whether the drain
+    /// message reached a live worker.
+    pub fn drain_shard(&self, shard: usize) -> bool {
+        let Some(flag) = self.draining.get(shard) else { return false };
+        // flag first: peers must stop picking this shard as a steal
+        // victim / migration target before it begins tearing down
+        flag.store(true, Ordering::SeqCst);
+        self.router.txs[shard].send(ShardMsg::Drain).is_ok()
+    }
+
     /// Stop the pool and join every worker. `drain` finishes all work
     /// already submitted first; `!drain` abandons it. A worker that hit a
     /// backend error (or panicked) surfaces here as `Err`, mirroring the
     /// single-engine path where `tick()?` propagates.
     pub fn shutdown(mut self, drain: bool) -> Result<PoolOutcome> {
+        if drain {
+            // mark every shard draining *before* any Drain lands: with
+            // no live non-draining peer to migrate to, each worker
+            // serves its remaining work to completion locally — the
+            // pool-wide drain contract — instead of bouncing
+            // checkpoints between shards that are all about to exit
+            for flag in &self.draining {
+                flag.store(true, Ordering::SeqCst);
+            }
+        }
         for tx in &self.router.txs {
             let _ = tx.send(if drain { ShardMsg::Drain } else { ShardMsg::Halt });
         }
         let rx = self.events.take();
-        // drop the router's senders so a worker that missed the message
-        // still observes the disconnect and exits
+        // drop the router's senders; once the first worker exits via its
+        // Drain/Halt message the mesh senders unwind with it and any
+        // straggler observes the disconnect
         let EngineShardPool { router, workers, .. } = self;
         drop(router);
         let mut stats = ShardStats::default();
@@ -517,18 +603,24 @@ impl EngineShardPool {
     }
 }
 
-fn snapshot(engine: &Engine<'_>, completed: u64) -> ShardStats {
+fn snapshot(engine: &Engine<'_>, ctx: &ShardCtx, completed: u64) -> ShardStats {
     ShardStats {
         completed,
         inflight: engine.pending(),
         ticks: engine.ticks,
-        flops: engine.flops.clone(),
+        flops: engine.flops,
+        parked: engine.parked,
+        resumed: engine.resumed,
+        stolen: ctx.stolen,
+        migrated: ctx.migrated,
     }
 }
 
 /// Everything a shard worker needs besides its engine and channel: shard
 /// identity, the router-facing gauges, the merged event sender, the
-/// chatter switch, and the per-request work-weight ledger.
+/// chatter switch, the per-request work-weight ledger, and a view of
+/// the whole mesh (peer channels, gauges, drain flags) for stealing and
+/// migration.
 struct ShardCtx {
     shard: usize,
     load: Arc<AtomicUsize>,
@@ -540,8 +632,35 @@ struct ShardCtx {
     /// serve steps complete (`decay_weight`) and released from the
     /// router's work gauge at each terminal state, so least-loaded
     /// routing tracks *remaining* work, not cumulative throughput — a
-    /// nearly-done heavy request weighs close to nothing.
+    /// nearly-done heavy request weighs close to nothing. The ledger
+    /// entry travels with a unit that is stolen or migrated, so the
+    /// receiving shard's gauge keeps decaying from the same baseline.
     weights: HashMap<u64, (u64, u64)>,
+    /// every shard's submission channel (own index included, unused)
+    txs: Vec<Sender<ShardMsg>>,
+    /// every shard's in-flight gauge (own index == `load`)
+    loads: Vec<Arc<AtomicUsize>>,
+    /// every shard's expected-work gauge (own index == `work`)
+    works: Vec<Arc<AtomicU64>>,
+    /// every shard's drain flag — set before the Drain message lands,
+    /// so peers stop targeting a leaving shard immediately
+    draining: Vec<Arc<AtomicBool>>,
+    /// whether this worker steals when idle ([`PoolConfig::steal`])
+    steal: bool,
+    /// units pulled from loaded peers while idle
+    stolen: u64,
+    /// units received from dying/draining peers
+    migrated: u64,
+}
+
+/// Whether any peer of `ctx.shard` is alive and not draining — i.e.
+/// whether evacuation has somewhere to send checkpoints.
+fn live_peer_exists(ctx: &ShardCtx) -> bool {
+    (0..ctx.txs.len()).any(|i| {
+        i != ctx.shard
+            && !ctx.draining[i].load(Ordering::SeqCst)
+            && ctx.loads[i].load(Ordering::SeqCst) < DEAD
+    })
 }
 
 /// Decay one request's expected-remaining-work booking as its serve
@@ -563,8 +682,9 @@ fn decay_weight(ctx: &mut ShardCtx, id: u64, step: usize, total_steps: usize) {
 }
 
 /// Pull every message still queued on the shard channel into the engine
-/// (so work the router already counted is accounted for) and answer any
-/// pending stats probes. Used on the abandon paths only.
+/// (so work the router already counted is accounted for), answer any
+/// pending stats probes and refuse steal probes. Used on the exit paths
+/// only.
 fn ingest_remaining(
     engine: &mut Engine<'_>,
     rx: &Receiver<ShardMsg>,
@@ -578,8 +698,16 @@ fn ingest_remaining(
                 ctx.weights.insert(spec.id, (w, w));
                 engine.submit(spec)
             }
+            ShardMsg::Resume(adm, ledger) => {
+                ctx.weights.insert(adm.id(), ledger);
+                engine.submit_admission(adm);
+            }
+            ShardMsg::Steal { reply } => {
+                // exiting shards donate nothing — the thief moves on
+                let _ = reply.send(None);
+            }
             ShardMsg::Stats(reply) => {
-                let _ = reply.send(snapshot(engine, completed));
+                let _ = reply.send(snapshot(engine, ctx, completed));
             }
             ShardMsg::Drain | ShardMsg::Halt => {}
         }
@@ -635,6 +763,158 @@ fn abandon_inflight(
     }
 }
 
+/// Hand one admission unit to the least-loaded live, non-draining peer,
+/// replicating the router's reserve → send → tombstone-re-check
+/// protocol so a peer dying mid-handoff can never strand the unit
+/// silently. Returns whether the unit is safely delivered; on `false`
+/// the unit is gone (never sent, or sent into a tombstoned shard whose
+/// own final drain may abort it) and the caller must abort-notify —
+/// a duplicate abort is deduplicated downstream, a missing one would
+/// hang waiters.
+fn send_to_peer(ctx: &ShardCtx, adm: Admission, ledger: (u64, u64)) -> bool {
+    let mut adm = adm;
+    let n = ctx.txs.len();
+    let mut tried = vec![false; n];
+    loop {
+        let mut best: Option<(usize, usize)> = None;
+        for (i, load) in ctx.loads.iter().enumerate() {
+            if i == ctx.shard || tried[i] || ctx.draining[i].load(Ordering::SeqCst) {
+                continue;
+            }
+            let l = load.load(Ordering::SeqCst);
+            if l < DEAD && best.is_none_or(|(_, bl)| l < bl) {
+                best = Some((i, l));
+            }
+        }
+        let Some((peer, _)) = best else { return false };
+        tried[peer] = true;
+        // reserve on the peer's gauges before handing over; a tombstone
+        // means it died since the scan — undo and try the next peer
+        if ctx.loads[peer].fetch_add(1, Ordering::SeqCst) >= DEAD {
+            ctx.loads[peer].fetch_sub(1, Ordering::SeqCst);
+            continue;
+        }
+        ctx.works[peer].fetch_add(ledger.1.max(1), Ordering::SeqCst);
+        match ctx.txs[peer].send(ShardMsg::Resume(adm, ledger)) {
+            // post-send re-check, exactly the router's death-race close:
+            // a live gauge proves the message precedes the peer's final
+            // drain; a tombstone means the peer may never read it
+            Ok(()) => return ctx.loads[peer].load(Ordering::SeqCst) < DEAD,
+            Err(unsent) => {
+                let _ = ctx.loads[peer].fetch_update(
+                    Ordering::SeqCst,
+                    Ordering::SeqCst,
+                    |v| if v >= DEAD { None } else { Some(v - 1) },
+                );
+                ctx.works[peer].fetch_sub(ledger.1.max(1), Ordering::SeqCst);
+                let ShardMsg::Resume(a, _) = unsent.0 else { unreachable!() };
+                adm = a;
+            }
+        }
+    }
+}
+
+/// Evacuate an exiting shard instead of abandoning it: tombstone the
+/// load gauge, pull in whatever the channel still holds, then park
+/// every request at its rolled-back step boundary and hand the
+/// checkpoints (and untouched queued units) to live peers, which resume
+/// them bitwise-identically. Requests the failed tick left fully
+/// advanced are retired and emitted as completions. A unit no peer will
+/// take falls back to [`JobEvent::Aborted`] with `error` — on a 1-shard
+/// pool this degrades to exactly the old abandon behaviour. The
+/// tombstone-before-drain ordering is the same race-closure as
+/// `abandon_inflight`.
+fn evacuate(
+    engine: &mut Engine<'_>,
+    rx: &Receiver<ShardMsg>,
+    ctx: &mut ShardCtx,
+    completed: &mut u64,
+    error: &str,
+) {
+    ctx.load.store(DEAD, Ordering::SeqCst);
+    ingest_remaining(engine, rx, ctx, *completed);
+    emit_terminations(engine, ctx, false);
+    let units = engine.park_all();
+    // park_all retires requests the aborted tick left at their final
+    // boundary (the retire sweep never ran) — real completions, not
+    // migration candidates
+    for c in engine.drain_completions() {
+        *completed += 1;
+        ctx.weights.remove(&c.id);
+        let _ = ctx.events.send(JobEvent::Completed(Box::new(c)));
+    }
+    for adm in units {
+        let id = adm.id();
+        let ledger = ctx.weights.remove(&id).unwrap_or((NOMINAL_WORK_US, NOMINAL_WORK_US));
+        if !send_to_peer(ctx, adm, ledger) {
+            let _ = ctx.events.send(JobEvent::Aborted { id, error: error.to_string() });
+        }
+    }
+}
+
+/// The victim side of work-stealing: donate one admission unit,
+/// releasing its slice of this shard's gauges before the reply (the
+/// thief re-reserves under its own). A draining shard donates nothing —
+/// it is already migrating everything it holds.
+fn donate(
+    engine: &mut Engine<'_>,
+    ctx: &mut ShardCtx,
+    draining: bool,
+) -> Option<(Admission, (u64, u64))> {
+    if draining {
+        return None;
+    }
+    let adm = engine.steal_one()?;
+    let ledger = ctx.weights.remove(&adm.id()).unwrap_or((NOMINAL_WORK_US, NOMINAL_WORK_US));
+    ctx.load.fetch_sub(1, Ordering::SeqCst);
+    ctx.work.fetch_sub(ledger.1, Ordering::SeqCst);
+    Some((adm, ledger))
+}
+
+/// The thief side of work-stealing: pick the live, non-draining peer
+/// with the most expected remaining work on its router gauge (skipping
+/// peers with fewer than two units, where a steal would just move the
+/// idleness), ask it for one admission unit, and requeue the donation
+/// locally under this shard's gauges. Returns whether a unit arrived.
+fn try_steal(engine: &mut Engine<'_>, ctx: &mut ShardCtx) -> bool {
+    let mut best: Option<(usize, u64)> = None;
+    for (i, work) in ctx.works.iter().enumerate() {
+        if i == ctx.shard || ctx.draining[i].load(Ordering::SeqCst) {
+            continue;
+        }
+        let l = ctx.loads[i].load(Ordering::SeqCst);
+        if l < 2 || l >= DEAD {
+            continue;
+        }
+        let w = work.load(Ordering::SeqCst);
+        if best.is_none_or(|(_, bw)| w > bw) {
+            best = Some((i, w));
+        }
+    }
+    let Some((victim, _)) = best else { return false };
+    let (rtx, rrx) = channel();
+    if ctx.txs[victim].send(ShardMsg::Steal { reply: rtx }).is_err() {
+        return false;
+    }
+    // the victim answers between ticks (or its exit path answers None);
+    // a dropped reply sender surfaces as an error here, never a hang
+    match rrx.recv_timeout(Duration::from_secs(10)) {
+        Ok(Some((adm, ledger))) => {
+            let id = adm.id();
+            ctx.load.fetch_add(1, Ordering::SeqCst);
+            ctx.work.fetch_add(ledger.1.max(1), Ordering::SeqCst);
+            ctx.weights.insert(id, ledger);
+            ctx.stolen += 1;
+            if ctx.chatter.load(Ordering::SeqCst) {
+                let _ = ctx.events.send(JobEvent::Admitted { id, shard: ctx.shard });
+            }
+            engine.submit_admission(adm);
+            true
+        }
+        _ => false,
+    }
+}
+
 fn shard_worker(
     model: Arc<dyn ModelBackend + Send + Sync>,
     cfg: EngineConfig,
@@ -684,25 +964,54 @@ fn shard_worker(
                         let _ = ctx.events.send(JobEvent::Admitted { id, shard: ctx.shard });
                     }
                 }
-                ShardMsg::Stats(reply) => {
-                    let _ = reply.send(snapshot(&engine, completed));
+                ShardMsg::Resume(adm, ledger) => {
+                    // a checkpoint (or untouched queued unit) migrated
+                    // from an exiting peer; the sender already reserved
+                    // this shard's gauges
+                    let id = adm.id();
+                    ctx.weights.insert(id, ledger);
+                    ctx.migrated += 1;
+                    engine.submit_admission(adm);
+                    if ctx.chatter.load(Ordering::SeqCst) {
+                        let _ = ctx.events.send(JobEvent::Admitted { id, shard: ctx.shard });
+                    }
                 }
-                ShardMsg::Drain => draining = true,
+                ShardMsg::Steal { reply } => {
+                    let _ = reply.send(donate(&mut engine, &mut ctx, draining));
+                }
+                ShardMsg::Stats(reply) => {
+                    let _ = reply.send(snapshot(&engine, &ctx, completed));
+                }
+                ShardMsg::Drain => {
+                    ctx.draining[ctx.shard].store(true, Ordering::SeqCst);
+                    draining = true;
+                }
                 ShardMsg::Halt => {
                     abandon_inflight(&mut engine, &rx, &mut ctx, completed, "shard halted");
-                    return (snapshot(&engine, completed), None);
+                    return (snapshot(&engine, &ctx, completed), None);
                 }
             }
         }
+        if draining && engine.pending() > 0 && live_peer_exists(&ctx) {
+            // park-and-migrate drain (elastic downscale): hand the
+            // backlog to live peers instead of serving it out locally.
+            // Pool-wide shutdown marks every shard draining before any
+            // Drain message lands, so this arm never fires there and the
+            // run-to-completion drain contract is preserved.
+            evacuate(&mut engine, &rx, &mut ctx, &mut completed, "shard drained");
+            return (snapshot(&engine, &ctx, completed), None);
+        }
         if engine.pending() > 0 {
             if let Err(e) = engine.tick() {
-                // a backend failure poisons this shard only; abandoned
-                // requests are abort-notified and the error resurfaces
+                // a backend failure poisons this shard only; the engine
+                // rolled every survivor back to its step boundary, so
+                // their checkpoints migrate to live peers (and abort
+                // only when none exist), while the error resurfaces
                 // from shutdown()
                 let err = format!("{e:#}");
                 eprintln!("speca: shard worker tick failed: {err}");
-                abandon_inflight(&mut engine, &rx, &mut ctx, completed, &err);
-                return (snapshot(&engine, completed), Some(err));
+                evacuate(&mut engine, &rx, &mut ctx, &mut completed, &err);
+                return (snapshot(&engine, &ctx, completed), Some(err));
             }
             for c in engine.drain_completions() {
                 completed += 1;
@@ -735,7 +1044,11 @@ fn shard_worker(
             // not silently destroyed with the channel (when nothing
             // raced, the engine and channel are empty — no events fire)
             abandon_inflight(&mut engine, &rx, &mut ctx, completed, "shard shutting down");
-            return (snapshot(&engine, completed), None);
+            return (snapshot(&engine, &ctx, completed), None);
+        } else if ctx.steal {
+            // idle with an empty queue: pull one unit from the most
+            // loaded peer (the 20 ms recv timeout above paces probes)
+            try_steal(&mut engine, &mut ctx);
         }
     }
 }
@@ -802,6 +1115,13 @@ mod tests {
             events: tx,
             chatter: Arc::new(AtomicBool::new(false)),
             weights: HashMap::new(),
+            txs: Vec::new(),
+            loads: Vec::new(),
+            works: Vec::new(),
+            draining: Vec::new(),
+            steal: false,
+            stolen: 0,
+            migrated: 0,
         };
         ctx.weights.insert(7, (10_000, 10_000));
         // step 0: nothing done yet, full weight stays booked

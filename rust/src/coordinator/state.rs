@@ -30,7 +30,7 @@ pub struct RequestSpec {
 }
 
 /// Outcome statistics for one request.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct RequestStats {
     /// Serve steps that ran the complete forward pass.
     pub full_steps: usize,
@@ -89,8 +89,12 @@ pub struct ReqState {
     pub stats: RequestStats,
     /// Recorded last-boundary features (when `spec.record_traj`).
     pub traj: Vec<Vec<f32>>,
-    /// Admission time (latency measurement).
+    /// Start of the *current residency* (latency measurement); park
+    /// folds the elapsed span into [`Self::prior_ms`].
     pub started: Instant,
+    /// Active milliseconds accumulated over previous residencies (zero
+    /// unless the request was parked and resumed at least once).
+    pub prior_ms: f64,
     /// scratch: draft predictions for the current speculative step
     pub pred_vin: Vec<f32>,
     /// scratch: predicted verify-block output.
@@ -144,6 +148,7 @@ impl ReqState {
             stats: RequestStats::default(),
             traj: Vec::new(),
             started: Instant::now(),
+            prior_ms: 0.0,
             pred_vin: vec![0.0; feat_len],
             pred_vout: vec![0.0; feat_len],
             pred_last: vec![0.0; feat_len],
@@ -156,6 +161,348 @@ impl ReqState {
             .iter()
             .position(|b| *b == boundary)
             .unwrap_or_else(|| panic!("boundary {boundary} not tapped ({:?})", self.tap_boundaries))
+    }
+
+    /// Park this request at its current step boundary, lifting every
+    /// piece of cross-step state into a shard-independent
+    /// [`RequestCheckpoint`]. The pred_* scratch buffers are dropped —
+    /// they are intra-tick temporaries rewritten before every use — and
+    /// the elapsed residency is folded into `prior_ms` so end-to-end
+    /// latency survives the migration.
+    pub fn park(self) -> RequestCheckpoint {
+        let feat_len = self.pred_vin.len();
+        RequestCheckpoint {
+            spec: self.spec,
+            x: self.x,
+            step: self.step,
+            since_full: self.since_full,
+            cache: self.cache,
+            tap_boundaries: self.tap_boundaries,
+            last_eps: self.last_eps,
+            blend_feat: self.blend_feat,
+            tea_accum: self.tea_accum,
+            tea_last_temb: self.tea_last_temb,
+            stats: self.stats,
+            traj: self.traj,
+            prior_ms: self.prior_ms + self.started.elapsed().as_secs_f64() * 1e3,
+            feat_len,
+        }
+    }
+
+    /// Resume a parked request: the inverse of [`Self::park`]. Scratch
+    /// prediction buffers are rebuilt zeroed (they carry no trajectory
+    /// state), and the residency clock restarts now. Everything the
+    /// forward pass reads — latent, tap factors, schedule position,
+    /// policy accumulators — comes back exactly as parked, which is why
+    /// resume on any shard over the same batch-invariant backend is
+    /// bitwise-identical to never having parked.
+    pub fn resume(ckpt: RequestCheckpoint) -> ReqState {
+        ReqState {
+            spec: ckpt.spec,
+            x: ckpt.x,
+            step: ckpt.step,
+            since_full: ckpt.since_full,
+            cache: ckpt.cache,
+            tap_boundaries: ckpt.tap_boundaries,
+            last_eps: ckpt.last_eps,
+            blend_feat: ckpt.blend_feat,
+            tea_accum: ckpt.tea_accum,
+            tea_last_temb: ckpt.tea_last_temb,
+            stats: ckpt.stats,
+            traj: ckpt.traj,
+            started: Instant::now(),
+            prior_ms: ckpt.prior_ms,
+            pred_vin: vec![0.0; ckpt.feat_len],
+            pred_vout: vec![0.0; ckpt.feat_len],
+            pred_last: vec![0.0; ckpt.feat_len],
+        }
+    }
+}
+
+/// The complete cross-step state of one in-flight request, parked at a
+/// serve-step boundary (DESIGN.md §13). Shard-independent by
+/// construction: drafts are stateless, the per-request RNG is fully
+/// consumed at admission (the initial latent), and the backend is
+/// batch-invariant — so nothing a shard holds outside this struct
+/// affects the remaining steps, and any shard can resume it
+/// bitwise-identically.
+///
+/// `policy` (inside `spec`) and `meta` travel in-memory as part of the
+/// struct; the byte codec ([`Self::to_bytes`]/[`Self::from_bytes`])
+/// covers everything *numeric* and re-attaches policy + meta at decode,
+/// since trait-object drafts and shared cancel tokens have no canonical
+/// byte form (ROADMAP item 3's inter-node fabric re-resolves them from
+/// the wire description instead).
+#[derive(Debug, Clone)]
+pub struct RequestCheckpoint {
+    /// The submitted request (id, cond, seed, policy, meta).
+    pub spec: RequestSpec,
+    /// Latent x_t at the park boundary.
+    pub x: Vec<f32>,
+    /// Next serve step to execute.
+    pub step: usize,
+    /// Steps since the last full computation.
+    pub since_full: usize,
+    /// TaylorSeer factor cache (extracted whole; see
+    /// [`crate::cache::TapCache::from_parts`] for the byte-level form).
+    pub cache: FeatureCache,
+    /// Tapped boundary indices.
+    pub tap_boundaries: Vec<usize>,
+    /// Last model output ε̂ (Skip policies).
+    pub last_eps: Vec<f32>,
+    /// Cached last-boundary feature (Blend policies).
+    pub blend_feat: Vec<f32>,
+    /// TeaCache drift accumulator.
+    pub tea_accum: f64,
+    /// Timestep embedding at the last TeaCache refresh.
+    pub tea_last_temb: Vec<f32>,
+    /// Statistics accumulated so far (incl. FLOPs + verify trace).
+    pub stats: RequestStats,
+    /// Recorded feature trajectory so far.
+    pub traj: Vec<Vec<f32>>,
+    /// Active milliseconds accumulated before this park.
+    pub prior_ms: f64,
+    /// Channels of the pred_* scratch buffers to rebuild on resume.
+    pub feat_len: usize,
+}
+
+/// Byte-codec magic ("SPCK") + version for [`RequestCheckpoint::to_bytes`].
+const CKPT_MAGIC: u32 = 0x5350_434b;
+const CKPT_VERSION: u32 = 1;
+
+struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn i64(&mut self, v: i64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f32s(&mut self, v: &[f32]) {
+        self.u64(v.len() as u64);
+        for x in v {
+            self.f32(*x);
+        }
+    }
+}
+
+struct ByteReader<'a> {
+    buf: &'a [u8],
+    at: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        let end = self.at.checked_add(n).ok_or("checkpoint length overflow")?;
+        if end > self.buf.len() {
+            return Err(format!("checkpoint truncated at byte {}", self.at));
+        }
+        let s = &self.buf[self.at..end];
+        self.at = end;
+        Ok(s)
+    }
+    fn u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn i64(&mut self) -> Result<i64, String> {
+        Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn f32(&mut self) -> Result<f32, String> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn f64(&mut self) -> Result<f64, String> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn len(&mut self) -> Result<usize, String> {
+        let n = self.u64()?;
+        // cap any decoded length by the bytes actually remaining so a
+        // corrupt header cannot force a huge allocation
+        if n > (self.buf.len() - self.at) as u64 {
+            return Err(format!("checkpoint length field {n} exceeds remaining bytes"));
+        }
+        Ok(n as usize)
+    }
+    fn f32s(&mut self) -> Result<Vec<f32>, String> {
+        let n = self.u64()? as usize;
+        if n.checked_mul(4).is_none_or(|b| b > self.buf.len() - self.at) {
+            return Err("checkpoint f32 run exceeds remaining bytes".into());
+        }
+        (0..n).map(|_| self.f32()).collect()
+    }
+}
+
+impl RequestCheckpoint {
+    /// Serialize every numeric field to a little-endian byte image —
+    /// the wire form a multi-process fabric would ship between nodes.
+    /// f32/f64 bit patterns are preserved exactly, so decode → resume
+    /// is as bitwise as the in-memory path. Policy and job metadata are
+    /// NOT encoded (see the type-level docs); [`Self::from_bytes`]
+    /// re-attaches them.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut w = ByteWriter { buf: Vec::with_capacity(64 + self.x.len() * 4) };
+        w.u32(CKPT_MAGIC);
+        w.u32(CKPT_VERSION);
+        w.u64(self.spec.id);
+        w.i64(self.spec.cond as i64);
+        w.u64(self.spec.seed);
+        w.u32(self.spec.record_traj as u32);
+        w.u64(self.feat_len as u64);
+        w.u64(self.step as u64);
+        w.u64(self.since_full as u64);
+        w.f64(self.tea_accum);
+        w.f64(self.prior_ms);
+        w.f32s(&self.x);
+        w.f32s(&self.last_eps);
+        w.f32s(&self.blend_feat);
+        w.f32s(&self.tea_last_temb);
+        w.u64(self.tap_boundaries.len() as u64);
+        for b in &self.tap_boundaries {
+            w.u64(*b as u64);
+        }
+        // feature cache: refresh step (u64::MAX = never), then each tap's
+        // full serializable state (factors, warmup counter, interval)
+        w.u64(self.cache.last_refresh_step.map_or(u64::MAX, |s| s as u64));
+        w.u64(self.cache.taps.len() as u64);
+        for tap in &self.cache.taps {
+            w.u64(tap.updates() as u64);
+            w.f32(tap.interval());
+            w.u64(tap.factors().len() as u64);
+            for f in tap.factors() {
+                w.f32s(f);
+            }
+        }
+        // stats
+        w.u64(self.stats.full_steps as u64);
+        w.u64(self.stats.spec_steps as u64);
+        w.u64(self.stats.skip_steps as u64);
+        w.u64(self.stats.blend_steps as u64);
+        w.u64(self.stats.elided_steps as u64);
+        w.u64(self.stats.rejects as u64);
+        w.f64(self.stats.latency_ms);
+        let fl = &self.stats.flops;
+        for v in [
+            fl.full,
+            fl.verify,
+            fl.head,
+            fl.predict,
+            fl.other,
+            fl.n_full_steps,
+            fl.n_spec_steps,
+            fl.n_rejects,
+        ] {
+            w.u64(v);
+        }
+        w.u64(self.stats.verify_trace.len() as u64);
+        for (s, e, t) in &self.stats.verify_trace {
+            w.u64(*s as u64);
+            w.f64(*e);
+            w.f64(*t);
+        }
+        w.u64(self.traj.len() as u64);
+        for t in &self.traj {
+            w.f32s(t);
+        }
+        w.buf
+    }
+
+    /// Decode a [`Self::to_bytes`] image, re-attaching the policy and
+    /// job metadata (which have no canonical byte form). Errors on a
+    /// wrong magic/version or a truncated/corrupt buffer.
+    pub fn from_bytes(bytes: &[u8], policy: Policy, meta: JobMeta) -> Result<Self, String> {
+        use crate::cache::TapCache;
+        let mut r = ByteReader { buf: bytes, at: 0 };
+        if r.u32()? != CKPT_MAGIC {
+            return Err("not a checkpoint image (bad magic)".into());
+        }
+        let v = r.u32()?;
+        if v != CKPT_VERSION {
+            return Err(format!("unsupported checkpoint version {v}"));
+        }
+        let id = r.u64()?;
+        let cond = r.i64()? as i32;
+        let seed = r.u64()?;
+        let record_traj = r.u32()? != 0;
+        let feat_len = r.u64()? as usize;
+        let step = r.u64()? as usize;
+        let since_full = r.u64()? as usize;
+        let tea_accum = r.f64()?;
+        let prior_ms = r.f64()?;
+        let x = r.f32s()?;
+        let last_eps = r.f32s()?;
+        let blend_feat = r.f32s()?;
+        let tea_last_temb = r.f32s()?;
+        let n_taps_b = r.len()?;
+        let tap_boundaries =
+            (0..n_taps_b).map(|_| r.u64().map(|v| v as usize)).collect::<Result<Vec<_>, _>>()?;
+        let refresh = r.u64()?;
+        let last_refresh_step = if refresh == u64::MAX { None } else { Some(refresh as usize) };
+        let n_taps = r.len()?;
+        let mut taps = Vec::with_capacity(n_taps);
+        for _ in 0..n_taps {
+            let updates = r.u64()? as usize;
+            let interval = r.f32()?;
+            let n_factors = r.len()?;
+            let factors = (0..n_factors).map(|_| r.f32s()).collect::<Result<Vec<_>, _>>()?;
+            taps.push(TapCache::from_parts(factors, updates, interval));
+        }
+        let cache = FeatureCache { taps, last_refresh_step };
+        let mut stats = RequestStats {
+            full_steps: r.u64()? as usize,
+            spec_steps: r.u64()? as usize,
+            skip_steps: r.u64()? as usize,
+            blend_steps: r.u64()? as usize,
+            elided_steps: r.u64()? as usize,
+            rejects: r.u64()? as usize,
+            latency_ms: r.f64()?,
+            ..RequestStats::default()
+        };
+        stats.flops = FlopsCounter {
+            full: r.u64()?,
+            verify: r.u64()?,
+            head: r.u64()?,
+            predict: r.u64()?,
+            other: r.u64()?,
+            n_full_steps: r.u64()?,
+            n_spec_steps: r.u64()?,
+            n_rejects: r.u64()?,
+        };
+        let n_trace = r.len()?;
+        stats.verify_trace = (0..n_trace)
+            .map(|_| Ok::<_, String>((r.u64()? as usize, r.f64()?, r.f64()?)))
+            .collect::<Result<Vec<_>, _>>()?;
+        let n_traj = r.len()?;
+        let traj = (0..n_traj).map(|_| r.f32s()).collect::<Result<Vec<_>, _>>()?;
+        Ok(RequestCheckpoint {
+            spec: RequestSpec { id, cond, seed, policy, record_traj, meta },
+            x,
+            step,
+            since_full,
+            cache,
+            tap_boundaries,
+            last_eps,
+            blend_feat,
+            tea_accum,
+            tea_last_temb,
+            stats,
+            traj,
+            prior_ms,
+            feat_len,
+        })
     }
 }
 
@@ -221,5 +568,78 @@ mod tests {
         let mut s = RequestStats::default();
         s.full_steps = 10;
         assert!((s.speedup(100, 50) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn park_resume_preserves_every_field() {
+        let mut cfg = SpeCaConfig::default_for_depth(8);
+        cfg.verify_layer = 3;
+        let mut st = ReqState::new(spec(Policy::SpeCa(cfg)), vec![0.5; 16], 8, 4);
+        st.step = 7;
+        st.since_full = 2;
+        st.tea_accum = 0.125;
+        st.last_eps = vec![1.0; 16];
+        st.cache.refresh(5, &[&[1.0; 4], &[2.0; 4], &[3.0; 4]]);
+        st.stats.full_steps = 3;
+        st.stats.verify_trace.push((5, 0.01, 0.3));
+        let trace = st.stats.verify_trace.clone();
+        let ckpt = st.park();
+        assert!(ckpt.prior_ms >= 0.0);
+        let back = ReqState::resume(ckpt);
+        assert_eq!(back.step, 7);
+        assert_eq!(back.since_full, 2);
+        assert_eq!(back.x, vec![0.5; 16]);
+        assert_eq!(back.last_eps, vec![1.0; 16]);
+        assert_eq!(back.cache.last_refresh_step, Some(5));
+        assert_eq!(back.stats.verify_trace, trace);
+        assert_eq!(back.pred_vin.len(), 4);
+    }
+
+    #[test]
+    fn checkpoint_byte_codec_round_trips() {
+        let mut cfg = SpeCaConfig::default_for_depth(8);
+        cfg.verify_layer = 3;
+        let policy = Policy::SpeCa(cfg);
+        let mut st = ReqState::new(spec(policy.clone()), vec![0.25; 16], 8, 4);
+        st.step = 9;
+        st.since_full = 1;
+        st.tea_accum = -0.5;
+        st.blend_feat = vec![0.75; 4];
+        st.tea_last_temb = vec![0.1, 0.2];
+        st.cache.refresh(4, &[&[1.0; 4], &[2.0; 4], &[3.0; 4]]);
+        st.cache.refresh(8, &[&[1.5; 4], &[2.5; 4], &[3.5; 4]]);
+        st.stats.spec_steps = 4;
+        st.stats.flops.verify = 1234;
+        st.stats.verify_trace.push((8, 0.02, 0.31));
+        st.traj.push(vec![9.0; 4]);
+        let ckpt = st.park();
+        let bytes = ckpt.to_bytes();
+        let dec = RequestCheckpoint::from_bytes(&bytes, policy, JobMeta::default()).unwrap();
+        assert_eq!(dec.spec.id, ckpt.spec.id);
+        assert_eq!(dec.spec.seed, ckpt.spec.seed);
+        assert_eq!(dec.x, ckpt.x);
+        assert_eq!(dec.step, ckpt.step);
+        assert_eq!(dec.since_full, ckpt.since_full);
+        assert_eq!(dec.tap_boundaries, ckpt.tap_boundaries);
+        assert_eq!(dec.last_eps, ckpt.last_eps);
+        assert_eq!(dec.blend_feat, ckpt.blend_feat);
+        assert_eq!(dec.tea_accum.to_bits(), ckpt.tea_accum.to_bits());
+        assert_eq!(dec.tea_last_temb, ckpt.tea_last_temb);
+        assert_eq!(dec.stats, ckpt.stats);
+        assert_eq!(dec.traj, ckpt.traj);
+        assert_eq!(dec.prior_ms.to_bits(), ckpt.prior_ms.to_bits());
+        assert_eq!(dec.feat_len, ckpt.feat_len);
+        assert_eq!(dec.cache.last_refresh_step, ckpt.cache.last_refresh_step);
+        for (a, b) in dec.cache.taps.iter().zip(&ckpt.cache.taps) {
+            assert_eq!(a.factors(), b.factors());
+            assert_eq!(a.updates(), b.updates());
+            assert_eq!(a.interval(), b.interval());
+        }
+        // corrupt/truncated images error instead of panicking
+        let trunc = RequestCheckpoint::from_bytes(&bytes[..10], Policy::Full, JobMeta::default());
+        assert!(trunc.is_err());
+        let mut bad = bytes.clone();
+        bad[0] ^= 0xff;
+        assert!(RequestCheckpoint::from_bytes(&bad, Policy::Full, JobMeta::default()).is_err());
     }
 }

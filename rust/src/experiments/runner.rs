@@ -139,7 +139,13 @@ pub fn run_policy(
         };
         let pool = EngineShardPool::new(
             shared,
-            PoolConfig { shards: opts.shards, router: opts.router, engine: opts.engine_config() },
+            PoolConfig {
+                shards: opts.shards,
+                router: opts.router,
+                engine: opts.engine_config(),
+                // parity harnesses need deterministic shard placement
+                steal: false,
+            },
         );
         for r in reqs {
             pool.submit(r)?;
@@ -152,7 +158,7 @@ pub fn run_policy(
             engine.submit(r);
         }
         let completions = engine.run_to_completion()?;
-        (completions, engine.flops.clone())
+        (completions, engine.flops)
     };
     let wall_s = t0.elapsed().as_secs_f64();
     Ok(RunResult {

@@ -30,6 +30,7 @@ use crate::runtime::resolve::{self, BackendRequest};
 use crate::runtime::{ClassifierBackend, ModelBackend, ResolvedModel};
 use crate::server::{self, client, ServerConfig};
 use crate::util::cli::Args;
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::workload::parse_policy;
 
@@ -522,7 +523,11 @@ fn drafts_table(args: &Args) -> Result<()> {
 /// p50/p99/p999 latency and the rejection rate (deadline shedding +
 /// queue-full) per rate to `results/openloop.csv`. Rejection rising and
 /// tail latency staying bounded as offered load passes capacity is the
-/// behaviour the job-lifecycle admission rules exist to produce.
+/// behaviour the job-lifecycle admission rules exist to produce. Each
+/// row also records the checkpoint-machinery counters (`parked`,
+/// `resumed`, `stolen`, `migrated`; DESIGN.md §13) differenced across
+/// the rate's window, so preemption and work-stealing activity under
+/// overload is visible in the same table.
 fn serve_openloop(args: &Args) -> Result<()> {
     with_model(&args.str("model", "dit-sim"), args, |model| {
         let Some(shared) = model.shared() else {
@@ -605,10 +610,17 @@ fn serve_openloop(args: &Args) -> Result<()> {
                 capacity
             );
             println!(
-                "{:<8} {:>9} {:>9} {:>6} {:>6} {:>6} {:>9} {:>9} {:>9} {:>9}",
+                "{:<8} {:>9} {:>9} {:>6} {:>6} {:>6} {:>9} {:>9} {:>9} {:>9} {:>5} {:>5} {:>5} \
+                 {:>5}",
                 "load", "offered", "achieved", "done", "rej", "abrt", "p50 ms", "p99 ms",
-                "p999 ms", "rej-rate"
+                "p999 ms", "rej-rate", "park", "resum", "steal", "migr"
             );
+            // checkpoint counters (DESIGN.md §13) are cumulative on the
+            // server; difference them across each rate's window
+            let ckpt = |j: &Json| -> (u64, u64, u64, u64) {
+                let g = |k: &str| j.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+                (g("parked"), g("resumed"), g("stolen"), g("migrated"))
+            };
             for m in &mults {
                 let cfg = client::OpenLoopConfig {
                     addr: addr.clone(),
@@ -621,7 +633,11 @@ fn serve_openloop(args: &Args) -> Result<()> {
                     priority: None,
                     waiters: 8,
                 };
+                let before = ckpt(&client::stats(&addr)?);
                 let mut r = client::run_open_loop(&cfg)?;
+                let after = ckpt(&client::stats(&addr)?);
+                let (parked, resumed) = (after.0 - before.0, after.1 - before.1);
+                let (stolen, migrated) = (after.2 - before.2, after.3 - before.3);
                 let p50 = r.latency.percentile(0.5);
                 let p99 = r.latency.percentile(0.99);
                 // a p999 over < 1000 samples is just the sample max — leave
@@ -632,7 +648,8 @@ fn serve_openloop(args: &Args) -> Result<()> {
                     String::new()
                 };
                 println!(
-                    "{:<8} {:>9.2} {:>9.2} {:>6} {:>6} {:>6} {:>9.1} {:>9.1} {:>9} {:>9.3}",
+                    "{:<8} {:>9.2} {:>9.2} {:>6} {:>6} {:>6} {:>9.1} {:>9.1} {:>9} {:>9.3} \
+                     {:>5} {:>5} {:>5} {:>5}",
                     format!("{m}x"),
                     r.offered_rps,
                     r.achieved_rps,
@@ -642,10 +659,15 @@ fn serve_openloop(args: &Args) -> Result<()> {
                     p50,
                     p99,
                     if p999.is_empty() { "-".to_string() } else { p999.clone() },
-                    r.reject_rate()
+                    r.reject_rate(),
+                    parked,
+                    resumed,
+                    stolen,
+                    migrated
                 );
                 csv.push(format!(
-                    "{m},{:.4},{:.4},{},{},{},{},{:.3},{:.3},{p999},{:.5}",
+                    "{m},{:.4},{:.4},{},{},{},{},{:.3},{:.3},{p999},{:.5},{parked},{resumed},\
+                     {stolen},{migrated}",
                     r.offered_rps,
                     r.achieved_rps,
                     r.submitted,
@@ -671,7 +693,7 @@ fn serve_openloop(args: &Args) -> Result<()> {
         write_csv(
             &results_path("openloop.csv"),
             "load_mult,offered_rps,achieved_rps,submitted,completed,rejected,aborted,\
-             p50_ms,p99_ms,p999_ms,reject_rate",
+             p50_ms,p99_ms,p999_ms,reject_rate,parked,resumed,stolen,migrated",
             &csv,
         )?;
         println!("wrote results/openloop.csv");

@@ -160,7 +160,12 @@ COMMANDS:
       --model dit-sim --addr 127.0.0.1:7433 --inflight 8 --shards 4
       --router least-loaded|round-robin --max-queue 1024
                              async op=submit/poll/wait/cancel + job ids,
-                             priorities, deadlines; v1 op=generate shim)
+                             priorities, deadlines, preemptible:true to
+                             allow mid-flight park/steal, group:N to share
+                             one cancel token — op=cancel group:N sweeps
+                             it; op=stats adds parked/resumed/stolen/
+                             migrated + per-group counts (DESIGN.md §13);
+                             v1 op=generate shim)
   load                       load generator against a server
       --addr 127.0.0.1:7433 --n 32 --conns 4 --policy speca
       --rate R               open-loop mode: Poisson arrivals at R req/s
@@ -168,8 +173,9 @@ COMMANDS:
                              --priority low|normal|high, --waiters W)
   bench <name>               regenerate a paper table/figure (see DESIGN.md)
       table1..table8 | drafts | fig2|fig6|fig8|fig9 | speedup-law
-      | serve-openloop (p50/p99/p999 + rejection rate vs arrival rate
-        → results/openloop.csv; --rates 0.5,1,2,4 --shards S)
+      | serve-openloop (p50/p99/p999 + rejection rate + checkpoint
+        counters per rate → results/openloop.csv;
+        --rates 0.5,1,2,4 --shards S)
       [--quick] [--n N] [--shards S]
       (micro perf: cargo bench --bench micro_runtime — also writes
        results/bench_micro.json: ns/iter + allocs/iter per bench)

@@ -9,7 +9,11 @@
 use crate::config::FlopsTable;
 
 /// Booked analytic FLOPs + step counts for one request or aggregate.
-#[derive(Debug, Default, Clone)]
+///
+/// `Copy` + `Eq` on purpose: the engine snapshots these per tick for its
+/// rollback-to-boundary crash protocol, and the checkpoint parity tests
+/// assert counters bitwise.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
 pub struct FlopsCounter {
     /// complete forward passes
     pub full: u64,

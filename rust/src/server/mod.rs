@@ -20,15 +20,22 @@
 //!
 //! ```text
 //! → {"op":"submit","cond":3,"seed":7,"policy":"speca","tau0":0.3,
-//!    "priority":"high","deadline_ms":5000,"return_latent":false}
+//!    "priority":"high","deadline_ms":5000,"return_latent":false,
+//!    "preemptible":true,"group":4}
 //! ← {"ok":true,"job":12,"state":"queued"}        (or "rejected" + error)
 //! → {"op":"poll","job":12}
 //! ← {"ok":true,"job":12,"state":"running","step":9,"accepts":6,"rejects":0}
 //! → {"op":"wait","job":12,"timeout_ms":30000}    (timeout optional)
 //! ← {"ok":true,"state":"completed","id":12,"stats":{...},"latent":[...]?}
-//! → {"op":"cancel","job":12}
-//! ← {"ok":true,"job":12,"state":"cancelling"}
+//! → {"op":"cancel","job":12}                     (or "group":4 — fires the
+//! ← {"ok":true,"job":12,"state":"cancelling"}     group's shared token)
 //! ```
+//!
+//! `"preemptible":true` lets the engine park the job mid-flight — its
+//! checkpoint resumes bitwise-identically, possibly on another shard —
+//! to free its slot for higher-priority work or work-stealing
+//! (DESIGN.md §13). `"group":N` joins a job group: members share one
+//! cancel token, and `op:"stats"` reports per-group counts.
 //!
 //! A `wait` that returns a terminal state **consumes** the job record
 //! (freeing its memory); `poll` never does, so polling a finished job is
@@ -40,8 +47,9 @@
 //! omitted) is a thin submit+wait shim — same reply shape as before,
 //! byte-identical error strings (`"queue full"`), so existing clients
 //! and tests keep working. `op:"stats"` reports pool counters plus
-//! per-shard live loads, dead-shard count and the job counters;
-//! `op:"shutdown"` drains in-flight work, then stops.
+//! per-shard live loads, dead-shard count, the job counters, the
+//! checkpoint counters (`parked`/`resumed`/`stolen`/`migrated`) and
+//! per-group counts; `op:"shutdown"` drains in-flight work, then stops.
 //!
 //! See `client.rs` for the closed-loop and open-loop load generators.
 
@@ -58,7 +66,7 @@ use std::time::Duration;
 use anyhow::{bail, Result};
 
 use crate::cache::Draft;
-use crate::coordinator::job::{JobManager, JobStatus, Priority, SubmitOptions};
+use crate::coordinator::job::{GroupId, JobManager, JobStatus, Priority, SubmitOptions};
 use crate::coordinator::state::{Completion, RequestSpec};
 use crate::coordinator::{Engine, EngineConfig, JobMeta, Policy, PoolConfig, RouterPolicy};
 use crate::runtime::ModelBackend;
@@ -173,19 +181,21 @@ struct ConnCtx {
     default_draft: Option<Draft>,
 }
 
-/// Parse the v2 job options (`priority`, `deadline_ms`, `return_latent`)
-/// shared by `submit` and the v1 `generate` shim.
+/// Parse the v2 job options (`priority`, `deadline_ms`, `return_latent`,
+/// `preemptible`, `group`) shared by `submit` and the v1 `generate`
+/// shim. Built through the [`SubmitOptions`] builder — the struct is
+/// `#[non_exhaustive]`, so this is also the canonical construction path.
 fn submit_options_from_json(req: &Json) -> Result<SubmitOptions> {
-    let mut opts = SubmitOptions {
-        return_latent: req.get("return_latent").and_then(|b| b.as_bool()).unwrap_or(false),
-        ..SubmitOptions::default()
-    };
+    let mut opts = SubmitOptions::new()
+        .return_latent(req.get("return_latent").and_then(|b| b.as_bool()).unwrap_or(false))
+        .preemptible(req.get("preemptible").and_then(|b| b.as_bool()).unwrap_or(false));
     if let Some(p) = req.get("priority") {
         let Some(s) = p.as_str() else {
             bail!("'priority' must be \"low\"|\"normal\"|\"high\"");
         };
-        opts.priority = Priority::parse(s)
+        let parsed = Priority::parse(s)
             .ok_or_else(|| anyhow::anyhow!("unknown priority '{s}' (low|normal|high)"))?;
+        opts = opts.priority(parsed);
     }
     if let Some(d) = req.get("deadline_ms") {
         let Some(ms) = d.as_f64() else {
@@ -194,7 +204,13 @@ fn submit_options_from_json(req: &Json) -> Result<SubmitOptions> {
         if ms < 0.0 {
             bail!("'deadline_ms' must be non-negative, got {ms}");
         }
-        opts.deadline_ms = Some(ms as u64);
+        opts = opts.deadline_ms(ms as u64);
+    }
+    if let Some(g) = req.get("group") {
+        let Some(gid) = g.as_u64() else {
+            bail!("'group' must be a non-negative integer id");
+        };
+        opts = opts.group(GroupId(gid));
     }
     Ok(opts)
 }
@@ -338,8 +354,25 @@ fn handle_wait(ctx: &ConnCtx, req: &Json) -> String {
 }
 
 /// `op:"cancel"`: fire the job's cancel token (the engine drops it at
-/// the next step boundary); acks immediately.
+/// the next step boundary); acks immediately. With `group` instead of
+/// `job`, fires the group's shared token — one sweep retires every
+/// live member.
 fn handle_cancel(ctx: &ConnCtx, req: &Json) -> String {
+    if let (None, Some(g)) = (req.get("job"), req.get("group")) {
+        let Some(gid) = g.as_u64() else {
+            return error_json("'group' must be a non-negative integer id");
+        };
+        return if ctx.manager.cancel_group(GroupId(gid)) {
+            Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("group", Json::Num(gid as f64)),
+                ("state", Json::str("cancelling")),
+            ])
+            .dump()
+        } else {
+            error_json(&format!("unknown group {gid}"))
+        };
+    }
     let id = match job_id_of(req) {
         Ok(id) => id,
         Err(e) => return error_json(&format!("{e}")),
@@ -415,6 +448,27 @@ fn handle_stats(ctx: &ConnCtx) -> String {
         ("gamma", Json::Num(s.flops.gamma())),
         ("total_flops", Json::Num(s.flops.total() as f64)),
         ("est_service_ms", Json::Num(ctx.manager.est_service_ms())),
+        ("parked", Json::Num(s.parked as f64)),
+        ("resumed", Json::Num(s.resumed as f64)),
+        ("stolen", Json::Num(s.stolen as f64)),
+        ("migrated", Json::Num(s.migrated as f64)),
+        (
+            "groups",
+            Json::Arr(
+                ctx.manager
+                    .group_counts()
+                    .iter()
+                    .map(|g| {
+                        Json::obj(vec![
+                            ("id", Json::Num(g.id as f64)),
+                            ("submitted", Json::Num(g.submitted as f64)),
+                            ("completed", Json::Num(g.completed as f64)),
+                            ("live", Json::Num(g.live as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
         (
             "jobs",
             Json::obj(vec![
@@ -491,7 +545,14 @@ pub fn serve_sharded(
 
     let manager = Arc::new(JobManager::new(
         model,
-        PoolConfig { shards: cfg.shards.max(1), router: cfg.router, engine: engine_cfg },
+        PoolConfig {
+            shards: cfg.shards.max(1),
+            router: cfg.router,
+            engine: engine_cfg,
+            // serving is open-loop and skew-prone: let idle shards pull
+            // mid-flight work from loaded peers (DESIGN.md §13)
+            steal: true,
+        },
         cfg.max_queue,
     ));
 

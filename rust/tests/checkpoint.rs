@@ -1,0 +1,411 @@
+//! Integration: checkpointable in-flight requests (DESIGN.md §13).
+//! The load-bearing guarantee is that parking a request at a step
+//! boundary and resuming it — on the same engine, on a different
+//! engine, or through the byte codec — is *bitwise invisible*: the
+//! final latent, the verify trace, the step accounting and the booked
+//! FLOPs all match an uninterrupted run exactly. On top of that
+//! contract: priority preemption parks a running victim without losing
+//! it, an idle shard steals mid-flight work from a loaded peer, a dead
+//! shard's requests migrate to live peers and complete instead of
+//! aborting, and `drain_shard` retires one shard without dropping work.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use speca::config::{ModelConfig, ModelEntry};
+use speca::coordinator::state::{Completion, RequestCheckpoint, RequestSpec};
+use speca::coordinator::{
+    Admission, Engine, EngineConfig, EngineShardPool, JobEvent, JobMeta, PoolConfig, Priority,
+    RouterPolicy,
+};
+use speca::runtime::native::{synthetic_entry, NativeArch};
+use speca::runtime::{ModelBackend, NativeBackend};
+use speca::tensor::Tensor;
+use speca::workload::parse_policy;
+
+fn native_model() -> Arc<NativeBackend> {
+    Arc::new(NativeBackend::seeded(ModelConfig::native_test(), 0xC4EC))
+}
+
+fn spec(id: u64, depth: usize, desc: &str) -> RequestSpec {
+    RequestSpec {
+        id,
+        cond: (id % 4) as i32,
+        seed: 100 + id,
+        policy: parse_policy(desc, depth).unwrap(),
+        record_traj: false,
+        meta: JobMeta::default(),
+    }
+}
+
+/// The request run start-to-finish on one engine with no interruption —
+/// the reference every park/resume variant must match bitwise.
+fn run_uninterrupted(model: &Arc<NativeBackend>, s: RequestSpec) -> Completion {
+    let mut engine = Engine::new(model.clone(), EngineConfig::default());
+    engine.submit(s);
+    let mut done = engine.run_to_completion().unwrap();
+    assert_eq!(done.len(), 1);
+    done.pop().unwrap()
+}
+
+/// Everything observable about a completion except wall-clock latency
+/// must match exactly (f32/f64 compared by value, which for identical
+/// bit patterns is exact).
+fn assert_bitwise(a: &Completion, b: &Completion, what: &str) {
+    assert_eq!(a.id, b.id, "{what}: id");
+    assert_eq!(a.policy_name, b.policy_name, "{what}: policy");
+    assert_eq!(a.latent, b.latent, "{what}: final latent drifted");
+    assert_eq!(a.stats.full_steps, b.stats.full_steps, "{what}: full steps");
+    assert_eq!(a.stats.spec_steps, b.stats.spec_steps, "{what}: spec steps");
+    assert_eq!(a.stats.skip_steps, b.stats.skip_steps, "{what}: skip steps");
+    assert_eq!(a.stats.blend_steps, b.stats.blend_steps, "{what}: blend steps");
+    assert_eq!(a.stats.elided_steps, b.stats.elided_steps, "{what}: elided steps");
+    assert_eq!(a.stats.rejects, b.stats.rejects, "{what}: rejects");
+    assert_eq!(a.stats.verify_trace, b.stats.verify_trace, "{what}: verify trace");
+    assert_eq!(a.stats.flops.total(), b.stats.flops.total(), "{what}: booked FLOPs");
+}
+
+#[test]
+fn park_resume_is_bitwise_at_every_step_boundary() {
+    let model = native_model();
+    let depth = model.entry().config.depth;
+    let total = model.entry().config.serve_steps;
+    // a strict-threshold SpeCa request (rejections happen, so the verify
+    // trace is nontrivial) and a TeaCache request (drift accumulator +
+    // refresh embedding must survive the checkpoint)
+    for desc in ["speca:N=5,O=2,tau0=0.01,beta=0.05", "teacache:l=0.6"] {
+        let reference = run_uninterrupted(&model, spec(0, depth, desc));
+        for boundary in 1..total {
+            let mut engine = Engine::new(model.clone(), EngineConfig::default());
+            engine.submit(spec(0, depth, desc));
+            for _ in 0..boundary {
+                assert!(engine.tick().unwrap(), "{desc}: engine idle before boundary {boundary}");
+            }
+            let mut units = engine.park_all();
+            assert_eq!(units.len(), 1, "{desc}: boundary {boundary}");
+            assert_eq!(engine.parked, 1);
+            let Some(Admission::Parked(ckpt)) = units.pop() else {
+                panic!("{desc}: boundary {boundary} parked a fresh spec");
+            };
+            assert_eq!(ckpt.step, boundary, "{desc}: parked off-boundary");
+            // resume on a *different* engine over the same shared model:
+            // the checkpoint is shard-independent by construction
+            let mut peer = Engine::new(model.clone(), EngineConfig::default());
+            peer.submit_checkpoint(ckpt);
+            let mut done = peer.run_to_completion().unwrap();
+            assert_eq!(done.len(), 1);
+            assert_eq!(peer.resumed, 1);
+            let what = format!("{desc}: resume at boundary {boundary}");
+            assert_bitwise(&reference, &done.pop().unwrap(), &what);
+        }
+    }
+}
+
+#[test]
+fn checkpoint_byte_codec_round_trips_and_rejects_corruption() {
+    let model = native_model();
+    let depth = model.entry().config.depth;
+    let desc = "speca:N=5,O=2,tau0=0.3,beta=0.05";
+    let mut engine = Engine::new(model.clone(), EngineConfig::default());
+    engine.submit(spec(3, depth, desc));
+    for _ in 0..4 {
+        assert!(engine.tick().unwrap());
+    }
+    let Some(Admission::Parked(ckpt)) = engine.park_all().pop() else {
+        panic!("expected one parked checkpoint");
+    };
+    let policy = ckpt.spec.policy.clone();
+    let meta = ckpt.spec.meta.clone();
+    let bytes = ckpt.to_bytes();
+    // decode → re-encode is byte-identical: the codec is canonical
+    let decoded = RequestCheckpoint::from_bytes(&bytes, policy.clone(), meta.clone()).unwrap();
+    assert_eq!(decoded.to_bytes(), bytes);
+    // resuming the decoded image still matches the uninterrupted run —
+    // the byte form loses nothing the schedule can observe
+    let reference = run_uninterrupted(&model, spec(3, depth, desc));
+    let mut peer = Engine::new(model.clone(), EngineConfig::default());
+    peer.submit_checkpoint(Box::new(decoded));
+    let done = peer.run_to_completion().unwrap();
+    assert_bitwise(&reference, &done[0], "byte-codec resume");
+    // truncation and a corrupt header both error instead of panicking
+    let cut = &bytes[..bytes.len() - 3];
+    assert!(RequestCheckpoint::from_bytes(cut, policy.clone(), meta.clone()).is_err());
+    let mut bad = bytes.clone();
+    bad[0] ^= 0xFF;
+    assert!(RequestCheckpoint::from_bytes(&bad, policy, meta).is_err());
+}
+
+#[test]
+fn preemption_frees_the_slot_without_losing_the_victim() {
+    let model = native_model();
+    let depth = model.entry().config.depth;
+    let mut low = spec(0, depth, "speca:N=5,O=2,tau0=0.01,beta=0.05");
+    low.meta.priority = Priority::Low;
+    low.meta.preemptible = true;
+    let reference = run_uninterrupted(&model, low.clone());
+
+    let cfg = EngineConfig { max_inflight: 1, ..EngineConfig::default() };
+    let mut engine = Engine::new(model.clone(), cfg);
+    engine.submit(low);
+    for _ in 0..3 {
+        assert!(engine.tick().unwrap());
+    }
+    let mut high = spec(1, depth, "full");
+    high.meta.priority = Priority::High;
+    engine.submit(high);
+    let mut done = engine.run_to_completion().unwrap();
+    assert_eq!(done.len(), 2);
+    assert_eq!(engine.parked, 1, "the low job must be parked exactly once");
+    assert_eq!(engine.resumed, 1, "... and resumed after the high job finishes");
+    // the high job overtook the victim's head start (slot freed mid-flight)
+    assert_eq!(done[0].id, 1, "high-priority job must finish first");
+    // and the victim's outcome is bitwise-unchanged by the round trip
+    done.sort_by_key(|c| c.id);
+    assert_bitwise(&reference, &done[0], "preempted victim");
+}
+
+#[test]
+fn non_preemptible_jobs_are_never_parked() {
+    let model = native_model();
+    let depth = model.entry().config.depth;
+    let cfg = EngineConfig { max_inflight: 1, ..EngineConfig::default() };
+    let mut engine = Engine::new(model.clone(), cfg);
+    let mut low = spec(0, depth, "full");
+    low.meta.priority = Priority::Low; // preemptible stays default false
+    engine.submit(low);
+    for _ in 0..3 {
+        assert!(engine.tick().unwrap());
+    }
+    let mut high = spec(1, depth, "full");
+    high.meta.priority = Priority::High;
+    engine.submit(high);
+    let done = engine.run_to_completion().unwrap();
+    assert_eq!(done.len(), 2);
+    assert_eq!(engine.parked, 0, "non-preemptible jobs must never be parked");
+    assert_eq!(done[0].id, 0, "the high job waits for the running slot-holder");
+}
+
+// ---------------------------------------------------------------------------
+// Pool-level behaviour over slow / fault-injecting stub backends
+// ---------------------------------------------------------------------------
+
+/// Zero-math backend whose forward passes sleep, making shard residency
+/// long and measurable so steal/drain/migration interleavings are
+/// deterministic. `armed` injects exactly one forward-pass failure
+/// (whichever shard dispatches first), for the crash-migration test.
+struct SlowBackend {
+    entry: ModelEntry,
+    delay: Duration,
+    armed: AtomicBool,
+}
+
+impl SlowBackend {
+    fn new(delay_ms: u64) -> SlowBackend {
+        SlowBackend {
+            entry: synthetic_entry(&ModelConfig::native_test(), &NativeArch::default()),
+            delay: Duration::from_millis(delay_ms),
+            armed: AtomicBool::new(false),
+        }
+    }
+
+    fn poisoned(delay_ms: u64) -> SlowBackend {
+        let b = SlowBackend::new(delay_ms);
+        b.armed.store(true, Ordering::SeqCst);
+        b
+    }
+
+    fn forward_gate(&self) -> anyhow::Result<()> {
+        thread::sleep(self.delay);
+        if self.armed.swap(false, Ordering::SeqCst) {
+            anyhow::bail!("injected backend failure");
+        }
+        Ok(())
+    }
+}
+
+impl ModelBackend for SlowBackend {
+    fn entry(&self) -> &ModelEntry {
+        &self.entry
+    }
+
+    fn kind(&self) -> &'static str {
+        "slow-stub"
+    }
+
+    fn supports(&self, entry_point: &str) -> bool {
+        matches!(entry_point, "full" | "full_eps" | "block" | "head")
+    }
+
+    fn warmup(&self, _e: &[&str], _b: &[usize]) -> anyhow::Result<()> {
+        Ok(())
+    }
+
+    fn full(
+        &self,
+        bucket: usize,
+        _x: &[f32],
+        _t: &[f32],
+        _y: &[i32],
+        _pallas: bool,
+    ) -> anyhow::Result<(Tensor, Tensor)> {
+        self.forward_gate()?;
+        let c = &self.entry.config;
+        Ok((
+            Tensor::zeros(vec![bucket, c.latent_dim]),
+            Tensor::zeros(vec![c.depth + 1, bucket, c.tokens, c.dim]),
+        ))
+    }
+
+    fn full_eps(
+        &self,
+        bucket: usize,
+        _x: &[f32],
+        _t: &[f32],
+        _y: &[i32],
+    ) -> anyhow::Result<Tensor> {
+        self.forward_gate()?;
+        Ok(Tensor::zeros(vec![bucket, self.entry.config.latent_dim]))
+    }
+
+    fn block(
+        &self,
+        bucket: usize,
+        _layer: i32,
+        _feat: &[f32],
+        _t: &[f32],
+        _y: &[i32],
+    ) -> anyhow::Result<Tensor> {
+        let c = &self.entry.config;
+        Ok(Tensor::zeros(vec![bucket, c.tokens, c.dim]))
+    }
+
+    fn head(&self, bucket: usize, _f: &[f32], _t: &[f32], _y: &[i32]) -> anyhow::Result<Tensor> {
+        Ok(Tensor::zeros(vec![bucket, self.entry.config.latent_dim]))
+    }
+}
+
+fn slow_spec(id: u64, depth: usize, desc: &str) -> RequestSpec {
+    RequestSpec {
+        id,
+        cond: 0,
+        seed: id,
+        policy: parse_policy(desc, depth).unwrap(),
+        record_traj: false,
+        meta: JobMeta::default(),
+    }
+}
+
+fn pool_config(shards: usize, steal: bool) -> PoolConfig {
+    PoolConfig { shards, router: RouterPolicy::LeastLoaded, engine: EngineConfig::default(), steal }
+}
+
+#[test]
+fn idle_shard_steals_mid_request_from_the_loaded_peer() {
+    let model = Arc::new(SlowBackend::new(15));
+    let depth = model.entry().config.depth;
+    let pool = EngineShardPool::new(model, pool_config(2, true));
+
+    // a quick job with a heavy cost hint parks shard 0's work gauge
+    // high, steering the slow preemptible backlog entirely to shard 1 —
+    // a deliberately skewed placement the thief must then repair
+    let mut quick = slow_spec(0, depth, "steps:keep=2");
+    quick.meta.cost_hint = 60.0;
+    assert_eq!(pool.submit(quick).unwrap(), 0);
+    for i in 1..=4 {
+        let mut s = slow_spec(i, depth, "full");
+        s.meta.cost_hint = 5.0;
+        s.meta.preemptible = true;
+        assert_eq!(pool.submit(s).unwrap(), 1, "hinted routing must skew to shard 1");
+    }
+
+    // shard 0 finishes its 2 kept steps in ~30 ms and goes idle while
+    // shard 1 still holds ~180 ms of batched work — wait for the steal
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let s = pool.stats();
+        if s.stolen >= 1 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "idle shard never stole: {s:?}");
+        thread::sleep(Duration::from_millis(5));
+    }
+
+    let out = pool.shutdown(true).unwrap();
+    assert_eq!(out.completions.len(), 5, "stolen work must still complete");
+    assert!(out.stats.stolen >= 1, "steal counter lost: {:?}", out.stats);
+    assert!(out.stats.parked >= 1, "the victim parks a mid-flight unit: {:?}", out.stats);
+    assert!(out.stats.resumed >= 1, "the thief resumes it: {:?}", out.stats);
+}
+
+#[test]
+fn dead_shards_jobs_migrate_and_complete_instead_of_aborting() {
+    let model = Arc::new(SlowBackend::poisoned(30));
+    let depth = model.entry().config.depth;
+    let mut pool = EngineShardPool::new(model, pool_config(2, false));
+    let events = pool.take_event_rx().unwrap();
+    let router = pool.router();
+
+    // 2 requests per shard, all routed before the first (slow) tick can
+    // trip the injected failure on whichever shard dispatches first
+    for i in 0..4 {
+        pool.submit(slow_spec(i, depth, "full")).unwrap();
+    }
+
+    // every request completes — the dead shard's jobs resume on the
+    // peer; any Aborted event is a containment failure
+    let mut completed = Vec::new();
+    while completed.len() < 4 {
+        match events.recv_timeout(Duration::from_secs(30)).expect("a completion event") {
+            JobEvent::Completed(c) => completed.push(c.id),
+            JobEvent::Aborted { id, error } => panic!("request {id} aborted: {error}"),
+            _ => {}
+        }
+    }
+    completed.sort_unstable();
+    assert_eq!(completed, vec![0, 1, 2, 3]);
+
+    // the survivor accounted the handoff and the dead shard is tombstoned
+    let s = router.stats();
+    // (≥, not ==: a submit racing the failing tick migrates as a fresh
+    // unit, which resumes without counting as a parked checkpoint)
+    assert!(s.migrated >= 2, "peer must report the migrated units: {s:?}");
+    assert!(s.resumed >= 1, "migrated checkpoints resume on the peer: {s:?}");
+    assert_eq!(router.loads().iter().filter(|l| **l == usize::MAX).count(), 1);
+
+    // the injected error still resurfaces from shutdown — migration
+    // saves the requests, not the broken shard
+    let err = pool.shutdown(true).unwrap_err().to_string();
+    assert!(err.contains("injected backend failure"), "got: {err}");
+}
+
+#[test]
+fn drain_shard_migrates_in_flight_work_to_live_peers() {
+    let model = Arc::new(SlowBackend::new(10));
+    let depth = model.entry().config.depth;
+    let pool = EngineShardPool::new(model, pool_config(2, false));
+    let router = pool.router();
+    for i in 0..6 {
+        pool.submit(slow_spec(i, depth, "full")).unwrap(); // 3 per shard
+    }
+    // let shard 0 admit its requests and advance them mid-flight, so the
+    // drain migrates *parked checkpoints*, not just untouched queue units
+    thread::sleep(Duration::from_millis(40));
+    assert!(pool.drain_shard(0), "drain message must reach a live worker");
+
+    // the drained shard evacuates and exits; its gauge tombstones
+    let deadline = Instant::now() + Duration::from_secs(20);
+    while router.loads()[0] != usize::MAX {
+        assert!(Instant::now() < deadline, "drained shard never exited");
+        thread::sleep(Duration::from_millis(2));
+    }
+    // new work routes around the drained shard from then on
+    assert_eq!(router.submit(slow_spec(6, depth, "steps:keep=2")).unwrap(), 1);
+
+    let out = pool.shutdown(true).unwrap();
+    assert_eq!(out.completions.len(), 7, "no request may be lost to the drain");
+    assert!(out.stats.parked >= 1, "drain parks mid-flight work: {:?}", out.stats);
+    assert!(out.stats.migrated >= 1, "the peer reports received units: {:?}", out.stats);
+    assert!(out.stats.resumed >= 1, "migrated checkpoints resume: {:?}", out.stats);
+}

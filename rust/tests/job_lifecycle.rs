@@ -112,6 +112,7 @@ fn slow_manager(delay_ms: u64, max_inflight: usize, max_queue: usize) -> JobMana
             shards: 1,
             router: RouterPolicy::LeastLoaded,
             engine: EngineConfig { max_inflight, ..EngineConfig::default() },
+            steal: false,
         },
         max_queue,
     )
@@ -215,7 +216,7 @@ fn expired_deadline_sheds_queued_work_with_structured_rejection() {
         0,
         Some(2),
         policy,
-        SubmitOptions { deadline_ms: Some(1), ..SubmitOptions::default() },
+        SubmitOptions::new().deadline_ms(1),
     );
 
     let sd = doomed.wait_timeout(WAIT);

@@ -26,6 +26,7 @@ fn pool_config(shards: usize) -> PoolConfig {
         shards,
         router: RouterPolicy::LeastLoaded,
         engine: EngineConfig::default(),
+        steal: false,
     }
 }
 
