@@ -1,0 +1,395 @@
+//! Sample-adaptive computation allocation (paper §sample-adaptive
+//! allocation; DESIGN.md §14).
+//!
+//! SpeCa's third contribution: instead of one static draft policy per
+//! request, a per-request [`AdaptiveController`] owns a total rel-error
+//! **budget** and, at every verify boundary, re-decides how aggressively
+//! the request may speculate. The controller reads exactly the signals
+//! the engine already produces — the measured verify error `e`, the
+//! accept/reject outcome, and the acceptance history — and adapts three
+//! knobs:
+//!
+//! * **accept threshold** — the per-step allowance is the remaining
+//!   budget spread over the remaining schedule steps, further scaled by
+//!   a tighten/loosen multiplier driven by streaks;
+//! * **draft strategy / order** — a *ladder* of strategies resolved
+//!   through the shared [`DraftRegistry`](crate::cache::DraftRegistry)
+//!   (configured draft → `adams-bashforth` → `reuse`); rejection streaks
+//!   step down to cheaper, lower-order, more conservative drafts,
+//!   sustained acceptance climbs back up — mid-request draft switching
+//!   with zero engine-loop allocations;
+//! * **dense fallback** — off the bottom of the ladder (or when the
+//!   budget is exhausted) the controller routes every step to a full
+//!   forward pass. Streak-triggered fallback is probational: after
+//!   [`DENSE_PROBATION`] dense steps the controller retries speculation
+//!   at the most conservative rung. Budget-exhausted fallback is final.
+//!
+//! The controller's mutable state is a `Copy` scalar block
+//! ([`AdaptiveSnap`]) so the engine's tick-snapshot/rollback crash
+//! protocol covers it like any other per-request counter, and it
+//! serializes into the SPCK v2 checkpoint appendix
+//! ([`CtlCheckpoint`]) so parked / stolen / migrated requests resume
+//! with bitwise-identical controller decisions (DESIGN.md §13).
+
+use crate::cache::{Draft, DraftRegistry, DraftStrategy};
+
+/// Consecutive rejections before the controller tightens one notch.
+pub const TIGHTEN_AFTER: u32 = 2;
+/// Consecutive acceptances before the controller loosens one notch.
+pub const LOOSEN_AFTER: u32 = 3;
+/// Dense steps served before a streak-triggered fallback retries
+/// speculation (budget-exhausted fallback never retries).
+pub const DENSE_PROBATION: u32 = 3;
+/// Floor of the tighten/loosen threshold multiplier.
+pub const TAU_SCALE_MIN: f64 = 0.25;
+
+/// The controller's mutable scalar state.
+///
+/// `Copy` on purpose: the engine snapshots it per tick next to the other
+/// per-request counters and restores it wholesale when a tick fails
+/// mid-flight, so a crashed tick cannot leave a half-applied adaptation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AdaptiveSnap {
+    /// Remaining rel-error budget (total minus every accepted step's
+    /// measured verify error). `<= 0` latches dense fallback for good.
+    pub budget_left: f64,
+    /// Tighten/loosen multiplier on the per-step allowance, in
+    /// `[TAU_SCALE_MIN, 1]`.
+    pub tau_scale: f64,
+    /// Consecutive accepted verifications since the last rejection.
+    pub accept_streak: u32,
+    /// Consecutive rejected verifications since the last acceptance.
+    pub reject_streak: u32,
+    /// Current ladder rung (0 = configured draft, deeper = cheaper).
+    pub rung: u32,
+    /// Streak-triggered dense fallback latch (probational).
+    pub dense: bool,
+    /// Dense steps served since the fallback latched.
+    pub probation: u32,
+    /// Lifetime count of controller-forced dense steps (reporting).
+    pub dense_steps: u64,
+}
+
+/// Serializable controller image carried by [`RequestCheckpoint`]
+/// (SPCK v2 appendix; see DESIGN.md §14 for the compatibility rules).
+///
+/// [`RequestCheckpoint`]: crate::coordinator::state::RequestCheckpoint
+#[derive(Debug, Clone, PartialEq)]
+pub struct CtlCheckpoint {
+    /// Total budget the request was admitted with.
+    pub total: f64,
+    /// Scalar state at the park boundary.
+    pub snap: AdaptiveSnap,
+    /// Registry name of the draft rung in use at the park boundary —
+    /// resolved back through [`DraftRegistry`] on resume, so a decoded
+    /// checkpoint keeps speculating with the same strategy.
+    pub draft: String,
+}
+
+/// Per-request sample-adaptive controller (see the module docs).
+///
+/// One instance per in-flight request, owned by the request's
+/// [`ReqState`](crate::coordinator::state::ReqState) — never shared
+/// through the registry, so per-request adaptation never leaks across
+/// requests (the `DraftStrategy` statelessness contract).
+#[derive(Debug, Clone)]
+pub struct AdaptiveController {
+    total: f64,
+    /// Strategy ladder, most aggressive first. Built once at admission
+    /// from the configured draft plus the registry's conservative rungs;
+    /// the hot loop only indexes it.
+    ladder: Vec<Draft>,
+    snap: AdaptiveSnap,
+}
+
+/// Conservative rungs appended below the configured draft, in tightening
+/// order. Both are registry builtins, so resolution cannot fail.
+const FALLBACK_RUNGS: [&str; 2] = ["adams-bashforth", "reuse"];
+
+fn build_ladder(configured: &Draft) -> Vec<Draft> {
+    let mut ladder = vec![configured.clone()];
+    for name in FALLBACK_RUNGS {
+        if ladder.iter().all(|d| d.name() != name) {
+            let d = DraftRegistry::global()
+                .resolve(name)
+                .expect("builtin fallback draft must be registered");
+            ladder.push(d);
+        }
+    }
+    ladder
+}
+
+impl AdaptiveController {
+    /// Fresh controller for a request admitted with `budget` total
+    /// rel-error tolerance, speculating with `configured` at rung 0.
+    pub fn new(budget: f64, configured: &Draft) -> AdaptiveController {
+        AdaptiveController {
+            total: budget,
+            ladder: build_ladder(configured),
+            snap: AdaptiveSnap {
+                budget_left: budget,
+                tau_scale: 1.0,
+                accept_streak: 0,
+                reject_streak: 0,
+                rung: 0,
+                dense: false,
+                probation: 0,
+                dense_steps: 0,
+            },
+        }
+    }
+
+    /// Rebuild a controller from a checkpoint image. The rung is
+    /// recovered by matching the serialized draft name against the
+    /// ladder rebuilt from the (re-attached) policy; an unknown name
+    /// lands on the most conservative rung rather than failing resume.
+    pub fn from_checkpoint(c: &CtlCheckpoint, configured: &Draft) -> AdaptiveController {
+        let ladder = build_ladder(configured);
+        let rung = ladder
+            .iter()
+            .position(|d| d.name() == c.draft)
+            .unwrap_or(ladder.len() - 1) as u32;
+        let mut snap = c.snap;
+        snap.rung = rung;
+        AdaptiveController { total: c.total, ladder, snap }
+    }
+
+    /// Serializable image of this controller (park-time counterpart of
+    /// [`AdaptiveController::from_checkpoint`]).
+    pub fn checkpoint(&self) -> CtlCheckpoint {
+        CtlCheckpoint {
+            total: self.total,
+            snap: self.snap,
+            draft: self.current_draft().name().to_string(),
+        }
+    }
+
+    /// Total budget the request was admitted with.
+    pub fn total_budget(&self) -> f64 {
+        self.total
+    }
+
+    /// Current scalar state (the engine's tick snapshot reads this).
+    pub fn snap(&self) -> AdaptiveSnap {
+        self.snap
+    }
+
+    /// Restore scalar state wholesale (tick rollback).
+    pub fn restore(&mut self, snap: AdaptiveSnap) {
+        self.snap = snap;
+    }
+
+    /// Must the next step run dense? True while the streak fallback is
+    /// latched or once the budget is spent.
+    pub fn wants_dense(&self) -> bool {
+        self.snap.dense || self.snap.budget_left <= 0.0
+    }
+
+    /// The draft rung currently in use.
+    pub fn current_draft(&self) -> &Draft {
+        &self.ladder[self.snap.rung as usize]
+    }
+
+    /// Strategy + effective order for the speculative phase, replacing
+    /// the static `policy.draft` lookup (no allocation; `configured` is
+    /// the policy's order knob).
+    pub fn strategy(&self, configured_order: usize) -> (&dyn DraftStrategy, usize) {
+        let d = self.current_draft();
+        (&**d, d.max_order(configured_order))
+    }
+
+    /// Accept threshold at a verify boundary: the remaining budget
+    /// spread over the remaining steps, clamped by the schedule's τ_t
+    /// and scaled by the streak multiplier.
+    pub fn threshold(&self, base_tau: f64, steps_left: usize) -> f64 {
+        let allowance = self.snap.budget_left / steps_left.max(1) as f64;
+        base_tau.min(allowance).max(0.0) * self.snap.tau_scale
+    }
+
+    /// Observe an accepted verification with measured error `e` (spends
+    /// budget; sustained acceptance loosens).
+    pub fn on_accept(&mut self, e: f64) {
+        self.snap.budget_left -= e;
+        self.snap.reject_streak = 0;
+        self.snap.accept_streak += 1;
+        if self.snap.accept_streak >= LOOSEN_AFTER {
+            self.snap.accept_streak = 0;
+            self.snap.tau_scale = (self.snap.tau_scale * 2.0).min(1.0);
+            self.snap.rung = self.snap.rung.saturating_sub(1);
+        }
+    }
+
+    /// Observe a rejected verification (tightens on streaks; off the
+    /// bottom rung, latches the dense fallback).
+    pub fn on_reject(&mut self) {
+        self.snap.accept_streak = 0;
+        self.snap.reject_streak += 1;
+        if self.snap.reject_streak >= TIGHTEN_AFTER {
+            self.snap.reject_streak = 0;
+            self.snap.tau_scale = (self.snap.tau_scale * 0.5).max(TAU_SCALE_MIN);
+            if (self.snap.rung as usize) + 1 < self.ladder.len() {
+                self.snap.rung += 1;
+            } else {
+                self.snap.dense = true;
+                self.snap.probation = 0;
+            }
+        }
+    }
+
+    /// Observe one controller-forced dense step. Probational fallbacks
+    /// retry speculation after [`DENSE_PROBATION`] steps; budget-spent
+    /// fallbacks stay dense to the end of the schedule.
+    pub fn on_dense_step(&mut self) {
+        self.snap.dense_steps += 1;
+        if self.snap.dense && self.snap.budget_left > 0.0 {
+            self.snap.probation += 1;
+            if self.snap.probation >= DENSE_PROBATION {
+                self.snap.dense = false;
+                self.snap.probation = 0;
+                self.snap.accept_streak = 0;
+                self.snap.reject_streak = 0;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctl(budget: f64) -> AdaptiveController {
+        AdaptiveController::new(budget, &Draft::taylor())
+    }
+
+    #[test]
+    fn ladder_is_configured_then_conservative_rungs() {
+        let c = ctl(1.0);
+        let names: Vec<&str> = c.ladder.iter().map(|d| d.name()).collect();
+        assert_eq!(names, vec!["taylor", "adams-bashforth", "reuse"]);
+        // a configured draft that *is* a fallback rung is not duplicated
+        let c = AdaptiveController::new(1.0, &Draft::named("reuse").unwrap());
+        let names: Vec<&str> = c.ladder.iter().map(|d| d.name()).collect();
+        assert_eq!(names, vec!["reuse", "adams-bashforth"]);
+    }
+
+    #[test]
+    fn tighten_steps_down_the_ladder_then_latches_dense() {
+        // step-by-step: every TIGHTEN_AFTER consecutive rejects costs one
+        // rung and halves the scale; off the bottom rung the dense
+        // fallback latches
+        let mut c = ctl(10.0);
+        assert_eq!(c.current_draft().name(), "taylor");
+        c.on_reject();
+        assert_eq!(c.snap.rung, 0, "one reject must not tighten yet");
+        c.on_reject();
+        assert_eq!(c.current_draft().name(), "adams-bashforth");
+        assert_eq!(c.snap.tau_scale, 0.5);
+        c.on_reject();
+        c.on_reject();
+        assert_eq!(c.current_draft().name(), "reuse");
+        assert_eq!(c.snap.tau_scale, 0.25);
+        assert!(!c.wants_dense());
+        c.on_reject();
+        c.on_reject();
+        assert!(c.wants_dense(), "bottom-rung tighten must latch dense");
+        assert_eq!(c.snap.tau_scale, TAU_SCALE_MIN, "scale floor holds");
+    }
+
+    #[test]
+    fn loosen_climbs_back_up() {
+        let mut c = ctl(10.0);
+        for _ in 0..4 {
+            c.on_reject();
+        }
+        assert_eq!(c.snap.rung, 2);
+        // an isolated accept resets the reject streak but does not loosen
+        c.on_accept(0.01);
+        assert_eq!(c.snap.rung, 2);
+        for _ in 0..2 {
+            c.on_accept(0.01);
+        }
+        assert_eq!(c.snap.rung, 1, "LOOSEN_AFTER accepts climb one rung");
+        assert_eq!(c.snap.tau_scale, 0.5);
+        for _ in 0..LOOSEN_AFTER {
+            c.on_accept(0.01);
+        }
+        assert_eq!(c.snap.rung, 0);
+        assert_eq!(c.snap.tau_scale, 1.0, "scale is capped at 1");
+    }
+
+    #[test]
+    fn probation_exits_streak_fallback_but_not_budget_exhaustion() {
+        let mut c = ctl(10.0);
+        for _ in 0..6 {
+            c.on_reject();
+        }
+        assert!(c.wants_dense());
+        for _ in 0..DENSE_PROBATION {
+            assert!(c.wants_dense());
+            c.on_dense_step();
+        }
+        assert!(!c.wants_dense(), "probation must retry speculation");
+        assert_eq!(c.current_draft().name(), "reuse", "retry starts conservative");
+        assert_eq!(c.snap.dense_steps, u64::from(DENSE_PROBATION));
+
+        // budget exhaustion is final: dense steps never un-latch it
+        let mut c = ctl(0.05);
+        c.on_accept(0.1);
+        assert!(c.snap.budget_left <= 0.0);
+        assert!(c.wants_dense());
+        for _ in 0..10 {
+            c.on_dense_step();
+        }
+        assert!(c.wants_dense(), "spent budget must stay dense");
+    }
+
+    #[test]
+    fn threshold_spreads_remaining_budget() {
+        let c = ctl(1.0);
+        // 10 steps left: allowance 0.1 clamps a loose schedule τ
+        assert!((c.threshold(0.5, 10) - 0.1).abs() < 1e-12);
+        // a strict schedule τ clamps the allowance
+        assert!((c.threshold(0.02, 10) - 0.02).abs() < 1e-12);
+        let mut c = ctl(1.0);
+        c.on_reject();
+        c.on_reject();
+        assert!((c.threshold(0.5, 10) - 0.05).abs() < 1e-12, "tighten halves it");
+        let mut c = ctl(0.5);
+        c.on_accept(0.6);
+        assert_eq!(c.threshold(0.5, 10), 0.0, "overdrawn budget yields 0");
+    }
+
+    #[test]
+    fn snapshot_restore_is_total() {
+        let mut c = ctl(2.0);
+        let before = c.snap();
+        c.on_accept(0.3);
+        c.on_reject();
+        c.on_reject();
+        c.on_dense_step();
+        assert_ne!(c.snap(), before);
+        c.restore(before);
+        assert_eq!(c.snap(), before);
+        assert_eq!(c.current_draft().name(), "taylor");
+    }
+
+    #[test]
+    fn checkpoint_round_trips_rung_by_draft_name() {
+        let mut c = ctl(3.0);
+        c.on_accept(0.25);
+        for _ in 0..2 {
+            c.on_reject();
+        }
+        let img = c.checkpoint();
+        assert_eq!(img.draft, "adams-bashforth");
+        let back = AdaptiveController::from_checkpoint(&img, &Draft::taylor());
+        assert_eq!(back.snap(), c.snap());
+        assert_eq!(back.total_budget(), 3.0);
+        assert_eq!(back.current_draft().name(), "adams-bashforth");
+        // an unknown serialized name degrades to the deepest rung
+        let mut img2 = img.clone();
+        img2.draft = "no-such-draft".into();
+        let back = AdaptiveController::from_checkpoint(&img2, &Draft::taylor());
+        assert_eq!(back.current_draft().name(), "reuse");
+    }
+}

@@ -44,6 +44,7 @@ use anyhow::Result;
 
 use crate::cache::draft::{self, DraftStrategy};
 use crate::config::{ModelEntry, Schedule, ScheduleKind};
+use crate::coordinator::adaptive::AdaptiveSnap;
 use crate::coordinator::batcher::{
     gather_rows_into, pad_rows, plan_chunks_into, BatchStrategy, Chunk,
 };
@@ -130,6 +131,8 @@ struct TickSnapshot {
     blend_steps: usize,
     elided_steps: usize,
     rejects: usize,
+    /// sample-adaptive controller scalars (None for static requests)
+    ctl: Option<AdaptiveSnap>,
 }
 
 /// Reusable batch-staging buffers. Presized from the model entry at
@@ -375,6 +378,19 @@ impl<'a> Engine<'a> {
         })
     }
 
+    /// Ids of queued units that are parked checkpoints — work already
+    /// mid-flight but not currently resident in a slot. The pool's work
+    /// gauges floor these units at a nominal weight so a park-heavy
+    /// shard never looks idle to routing or stealing (DESIGN.md §12).
+    pub fn parked_queued(&self) -> impl Iterator<Item = u64> + '_ {
+        self.queues.iter().flat_map(|q| {
+            q.iter().filter_map(|adm| match adm {
+                Admission::Parked(ckpt) => Some(ckpt.spec.id),
+                Admission::Fresh(_) => None,
+            })
+        })
+    }
+
     /// Drop every queued and active request, returning their ids. Shard
     /// workers use this on exit paths that abandon work (backend error,
     /// halt) so the pool can release load accounting and notify waiters.
@@ -601,6 +617,7 @@ impl<'a> Engine<'a> {
                 blend_steps: st.stats.blend_steps,
                 elided_steps: st.stats.elided_steps,
                 rejects: st.stats.rejects,
+                ctl: st.ctl.as_ref().map(|c| c.snap()),
             });
         }
 
@@ -624,12 +641,21 @@ impl<'a> Engine<'a> {
         // from a transient backend failure keeps the warm buffers
         let mut tk = std::mem::take(&mut self.plan);
         tk.clear();
-        for (i, st) in self.active.iter().enumerate() {
+        for (i, st) in self.active.iter_mut().enumerate() {
             let plan = st.spec.policy.plan(st.step, total, st.since_full, st.tea_accum);
             match plan {
                 Plan::Full => tk.full.push(i),
                 Plan::Spec => {
                     if !st.cache.ready() {
+                        tk.full.push(i);
+                    } else if st.ctl.as_ref().is_some_and(|c| c.wants_dense()) {
+                        // controller-forced dense step: budget spent or
+                        // the rejection-streak fallback is latched
+                        // (probational — the controller decides when to
+                        // retry speculation)
+                        if let Some(c) = st.ctl.as_mut() {
+                            c.on_dense_step();
+                        }
                         tk.full.push(i);
                     } else if matches!(st.spec.policy, Policy::SpeCa(_)) {
                         tk.spec_verify.push(i)
@@ -687,9 +713,13 @@ impl<'a> Engine<'a> {
             let depth = model.entry().config.depth;
             let st = &mut self.active[i];
             let k = st.cache.k_for_step(st.step).expect("cache ready");
-            let strategy: &dyn DraftStrategy = match &st.spec.policy {
-                Policy::SpeCa(c) => &*c.draft,
-                _ => draft::taylor_default(),
+            let strategy: &dyn DraftStrategy = match (&st.ctl, &st.spec.policy) {
+                // sample-adaptive requests draft with the controller's
+                // current ladder rung — mid-request strategy switching
+                // (DESIGN.md §14)
+                (Some(ctl), _) => ctl.strategy(st.spec.policy.order()).0,
+                (None, Policy::SpeCa(c)) => &*c.draft,
+                (None, _) => draft::taylor_default(),
             };
             // book prediction cost at the strategy's effective order, not
             // the policy's configured one (reuse does order-0 work no
@@ -809,6 +839,9 @@ impl<'a> Engine<'a> {
             st.stats.blend_steps = snap.blend_steps;
             st.stats.elided_steps = snap.elided_steps;
             st.stats.rejects = snap.rejects;
+            if let (Some(ctl), Some(s)) = (st.ctl.as_mut(), snap.ctl) {
+                ctl.restore(s);
+            }
         }
     }
 
@@ -1069,12 +1102,26 @@ impl<'a> Engine<'a> {
                 let st = &mut self.active[ri];
                 let Policy::SpeCa(c) = &st.spec.policy else { unreachable!() };
                 let e = c.metric.eval(&st.pred_vout, actual.row(slot));
-                let tau = c.tau_at(st.step, total);
+                // sample-adaptive requests clamp the schedule's τ_t by
+                // the controller's per-step allowance (remaining budget
+                // over remaining steps, streak-scaled); the trace records
+                // the threshold actually applied
+                let base = c.tau_at(st.step, total);
+                let tau = match &st.ctl {
+                    Some(ctl) => ctl.threshold(base, total - st.step),
+                    None => base,
+                };
                 st.stats.verify_trace.push((st.step, e, tau));
                 self.flops_model.book_verify(&mut st.stats.flops, chunk.bucket, 1);
                 if e <= tau {
+                    if let Some(ctl) = st.ctl.as_mut() {
+                        ctl.on_accept(e);
+                    }
                     accepted.push(ri);
                 } else {
+                    if let Some(ctl) = st.ctl.as_mut() {
+                        ctl.on_reject();
+                    }
                     rejected.push(ri);
                 }
             }

@@ -223,6 +223,13 @@ pub struct SubmitOptions {
     /// Draft-strategy override for SpeCa policies (the same override
     /// surface as the wire `draft` field).
     pub draft: Option<Draft>,
+    /// Total rel-error budget for sample-adaptive allocation on SpeCa
+    /// policies (the same surface as the `adaptive=` policy key): the
+    /// job gets a per-request
+    /// [`AdaptiveController`](crate::coordinator::adaptive::AdaptiveController).
+    /// Under backlog, admission shrinks a low-priority job's budget
+    /// deadline-aware (see [`JobManager::submit`]).
+    pub adaptive: Option<f64>,
     /// Keep the final latent in the job record so `poll`/`wait` can
     /// return it (the wire `return_latent` field).
     pub return_latent: bool,
@@ -264,6 +271,13 @@ impl SubmitOptions {
     /// Override the SpeCa draft strategy for this job.
     pub fn draft(mut self, draft: Draft) -> SubmitOptions {
         self.draft = Some(draft);
+        self
+    }
+
+    /// Attach a sample-adaptive error budget (total rel-L1 tolerance
+    /// spread over the schedule) to this job's SpeCa policy.
+    pub fn adaptive(mut self, budget: f64) -> SubmitOptions {
+        self.adaptive = Some(budget);
         self
     }
 
@@ -1062,6 +1076,7 @@ impl JobManager {
         // EWMA latency is measured under that same concurrency, so the
         // projection counts *waves* of backlog ahead of this job, not
         // individual requests (est · backlog would over-reject ~8×).
+        let mut adaptive = opts.adaptive;
         if let Some(ms) = opts.deadline_ms {
             let est = f64::from_bits(self.est_service_ms.load(Ordering::SeqCst));
             if est > 0.0 {
@@ -1074,6 +1089,20 @@ impl JobManager {
                 let waves = (backlog / self.slots_per_shard as f64).ceil();
                 if est * (waves + 1.0) > ms as f64 {
                     return self.rejected_handle(id, cancel, RejectReason::DeadlineInfeasible);
+                }
+                // sample-adaptive admission integration: under backlog,
+                // a low-priority job with thin deadline headroom gets
+                // its error budget shrunk (down to 0 ⇒ fully dense). A
+                // rejected speculation costs predict + verify + the full
+                // fallback — more than the dense pass it degenerates to —
+                // so thin-headroom jobs are steered onto the predictable
+                // dense schedule instead of gambling the deadline on
+                // acceptance: quality headroom traded for certainty.
+                if waves >= 1.0 && matches!(opts.priority, Priority::Low) {
+                    if let Some(b) = adaptive {
+                        let headroom = ms as f64 / (est * (waves + 1.0));
+                        adaptive = Some(b * (headroom - 1.0).clamp(0.0, 1.0));
+                    }
                 }
             }
         }
@@ -1090,6 +1119,9 @@ impl JobManager {
         let mut policy = policy;
         if let Some(d) = &opts.draft {
             crate::workload::apply_draft(&mut policy, d);
+        }
+        if let (Some(b), Policy::SpeCa(c)) = (adaptive, &mut policy) {
+            c.adaptive = Some(b);
         }
         // service-time hint for work-weighted routing: the policy
         // family's own EWMA when it has completions, else the global one
@@ -1338,11 +1370,14 @@ mod tests {
             .deadline_ms(250)
             .return_latent(true)
             .preemptible(true)
+            .adaptive(0.4)
             .group(GroupId(3));
         assert_eq!(opts.priority, Priority::Low);
         assert_eq!(opts.deadline_ms, Some(250));
         assert!(opts.return_latent && opts.preemptible);
+        assert_eq!(opts.adaptive, Some(0.4));
         assert_eq!(opts.group, Some(GroupId(3)));
+        assert_eq!(SubmitOptions::default().adaptive, None);
         assert!(!SubmitOptions::default().preemptible, "preemption is opt-in");
         assert_eq!(format!("{}", GroupId(3)), "group-3");
     }

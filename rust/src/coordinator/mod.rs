@@ -4,6 +4,7 @@
 //! job-lifecycle layer (priorities, deadlines, cancellation) the serving
 //! front-end is built on.
 
+pub mod adaptive;
 pub mod batcher;
 pub mod engine;
 pub mod job;
@@ -11,6 +12,7 @@ pub mod policy;
 pub mod pool;
 pub mod state;
 
+pub use adaptive::{AdaptiveController, AdaptiveSnap, CtlCheckpoint};
 pub use engine::{Admission, Engine, EngineConfig};
 pub use job::{
     CancelToken, GroupCounts, GroupId, JobCounts, JobEvent, JobHandle, JobId, JobManager, JobMeta,

@@ -105,6 +105,10 @@ pub struct SpeCaConfig {
     pub draft: Draft,
     /// relative-error metric the acceptance test evaluates
     pub metric: ErrorMetric,
+    /// total rel-error budget for sample-adaptive allocation (`None` =
+    /// static policy; `Some(b)` attaches a per-request
+    /// [`AdaptiveController`](crate::coordinator::adaptive::AdaptiveController))
+    pub adaptive: Option<f64>,
 }
 
 impl SpeCaConfig {
@@ -119,6 +123,7 @@ impl SpeCaConfig {
             verify_layer: depth - 1,
             draft: Draft::taylor(),
             metric: ErrorMetric::L2,
+            adaptive: None,
         }
     }
 

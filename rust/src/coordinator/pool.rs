@@ -681,6 +681,28 @@ fn decay_weight(ctx: &mut ShardCtx, id: u64, step: usize, total_steps: usize) {
     }
 }
 
+/// Preemption-aware admission fix: floor the work-gauge booking of every
+/// *parked* queued unit at one nominal request. Parked checkpoints never
+/// appear in `engine.progress()` (only resident requests do), so before
+/// this sweep a shard that preempted a pile of nearly-done jobs kept
+/// them booked at `decay_weight`'s 1 µ-unit floor — the router and the
+/// steal heuristic both read the gauge and concluded the shard was idle,
+/// then piled more work onto it. A parked unit costs at least a resume
+/// plus its remaining serve steps, so it is floored at the same
+/// [`NOMINAL_WORK_US`] an unhinted fresh request books. The ledger entry
+/// is raised together with the gauge, so the terminal release and any
+/// later post-resume decay stay arithmetically exact, and re-running the
+/// sweep is idempotent (the floor condition is already met).
+fn floor_parked_work(engine: &Engine<'_>, ctx: &mut ShardCtx) {
+    for id in engine.parked_queued() {
+        let Some((_, remaining)) = ctx.weights.get_mut(&id) else { continue };
+        if *remaining < NOMINAL_WORK_US {
+            ctx.work.fetch_add(NOMINAL_WORK_US - *remaining, Ordering::SeqCst);
+            *remaining = NOMINAL_WORK_US;
+        }
+    }
+}
+
 /// Pull every message still queued on the shard channel into the engine
 /// (so work the router already counted is accounted for), answer any
 /// pending stats probes and refuse steal probes. Used on the exit paths
@@ -1038,6 +1060,10 @@ fn shard_worker(
                     let _ = ctx.events.send(JobEvent::Progress(p));
                 }
             }
+            // parked queued units are invisible to the progress sweep:
+            // keep their remaining work on the gauge so a park-heavy
+            // shard never reads as idle to routing or stealing
+            floor_parked_work(&engine, &mut ctx);
         } else if draining || disconnected {
             // same tombstone + final-drain protocol as the error exit: a
             // submit racing this edge is aborted with an explicit event,
@@ -1140,6 +1166,82 @@ mod tests {
         // unknown id (already released) is a no-op
         decay_weight(&mut ctx, 99, 5, 10);
         assert_eq!(ctx.work.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn parked_units_floor_the_work_gauge_for_routing_and_steal() {
+        use crate::config::ModelConfig;
+        use crate::coordinator::job::JobMeta;
+        use crate::runtime::NativeBackend;
+        use crate::workload::parse_policy;
+
+        let model = NativeBackend::seeded(ModelConfig::native_test(), 1);
+        let depth = model.entry().config.depth;
+        let mut engine = Engine::from_ref(
+            &model,
+            EngineConfig { max_inflight: 2, ..EngineConfig::default() },
+        );
+        let policy = parse_policy("speca:N=4,O=1", depth).unwrap();
+        for id in 0..2u64 {
+            let meta = JobMeta { preemptible: true, ..JobMeta::default() };
+            engine.submit(RequestSpec {
+                id,
+                cond: 0,
+                seed: id,
+                policy: policy.clone(),
+                record_traj: false,
+                meta,
+            });
+        }
+        engine.tick().unwrap();
+        // engineer the park-heavy skew: park one of the two actives and
+        // requeue it locally — a parked-but-unfinished unit this shard
+        // still owes real work for
+        let parked = engine.steal_one().expect("two preemptible actives");
+        assert!(matches!(parked, Admission::Parked(_)));
+        let parked_id = parked.id();
+        engine.submit_admission(parked);
+        assert_eq!(engine.parked_queued().collect::<Vec<_>>(), vec![parked_id]);
+
+        // shard 0's ledger has the parked unit decayed to the 1 µ-unit
+        // floor (nearly done when it was preempted)
+        let (tx, _rx) = channel();
+        let mut ctx = ShardCtx {
+            shard: 0,
+            load: Arc::new(AtomicUsize::new(2)),
+            work: Arc::new(AtomicU64::new(1)),
+            events: tx,
+            chatter: Arc::new(AtomicBool::new(false)),
+            weights: HashMap::new(),
+            txs: Vec::new(),
+            loads: Vec::new(),
+            works: Vec::new(),
+            draining: Vec::new(),
+            steal: false,
+            stolen: 0,
+            migrated: 0,
+        };
+        ctx.weights.insert(parked_id, (10_000, 1));
+
+        // regression: before the fix, least-loaded routing read the
+        // park-heavy shard (1 µs booked, 2 units held) as far idler than
+        // a peer holding a single fresh request
+        let loads = [2usize, 1];
+        let pre = [ctx.work.load(Ordering::SeqCst), NOMINAL_WORK_US];
+        assert_eq!(RouterPolicy::LeastLoaded.pick(&loads, &pre, 0), 0, "the pre-fix skew");
+
+        floor_parked_work(&engine, &mut ctx);
+        assert_eq!(ctx.work.load(Ordering::SeqCst), NOMINAL_WORK_US);
+        assert_eq!(ctx.weights.get(&parked_id), Some(&(10_000, NOMINAL_WORK_US)));
+        let post = [ctx.work.load(Ordering::SeqCst), NOMINAL_WORK_US];
+        assert_eq!(
+            RouterPolicy::LeastLoaded.pick(&loads, &post, 0),
+            1,
+            "routing must avoid the shard holding parked work"
+        );
+        // idempotent: re-flooring never double-books the gauge
+        floor_parked_work(&engine, &mut ctx);
+        assert_eq!(ctx.work.load(Ordering::SeqCst), NOMINAL_WORK_US);
     }
 
     #[test]

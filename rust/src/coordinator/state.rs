@@ -5,6 +5,7 @@
 use std::time::Instant;
 
 use crate::cache::FeatureCache;
+use crate::coordinator::adaptive::{AdaptiveController, AdaptiveSnap, CtlCheckpoint};
 use crate::coordinator::job::JobMeta;
 use crate::coordinator::policy::Policy;
 use crate::metrics::flops::FlopsCounter;
@@ -95,6 +96,9 @@ pub struct ReqState {
     /// Active milliseconds accumulated over previous residencies (zero
     /// unless the request was parked and resumed at least once).
     pub prior_ms: f64,
+    /// Sample-adaptive controller (`Some` iff the policy carries an
+    /// `adaptive=` budget; DESIGN.md §14).
+    pub ctl: Option<AdaptiveController>,
     /// scratch: draft predictions for the current speculative step
     pub pred_vin: Vec<f32>,
     /// scratch: predicted verify-block output.
@@ -134,6 +138,10 @@ impl ReqState {
         };
         let interval = spec.policy.interval();
         let cache = FeatureCache::new(taps.len(), order, feat_len, interval.max(1));
+        let ctl = match &spec.policy {
+            Policy::SpeCa(c) => c.adaptive.map(|b| AdaptiveController::new(b, &c.draft)),
+            _ => None,
+        };
         ReqState {
             spec,
             x,
@@ -149,6 +157,7 @@ impl ReqState {
             traj: Vec::new(),
             started: Instant::now(),
             prior_ms: 0.0,
+            ctl,
             pred_vin: vec![0.0; feat_len],
             pred_vout: vec![0.0; feat_len],
             pred_last: vec![0.0; feat_len],
@@ -185,6 +194,7 @@ impl ReqState {
             stats: self.stats,
             traj: self.traj,
             prior_ms: self.prior_ms + self.started.elapsed().as_secs_f64() * 1e3,
+            ctl: self.ctl.map(|c| c.checkpoint()),
             feat_len,
         }
     }
@@ -197,6 +207,15 @@ impl ReqState {
     /// resume on any shard over the same batch-invariant backend is
     /// bitwise-identical to never having parked.
     pub fn resume(ckpt: RequestCheckpoint) -> ReqState {
+        // the controller image travels by value + registry name; the
+        // ladder is rebuilt from the re-attached policy so resumed
+        // requests keep making identical adaptive decisions
+        let ctl = match (&ckpt.ctl, &ckpt.spec.policy) {
+            (Some(img), Policy::SpeCa(c)) => {
+                Some(AdaptiveController::from_checkpoint(img, &c.draft))
+            }
+            _ => None,
+        };
         ReqState {
             spec: ckpt.spec,
             x: ckpt.x,
@@ -212,6 +231,7 @@ impl ReqState {
             traj: ckpt.traj,
             started: Instant::now(),
             prior_ms: ckpt.prior_ms,
+            ctl,
             pred_vin: vec![0.0; ckpt.feat_len],
             pred_vout: vec![0.0; ckpt.feat_len],
             pred_last: vec![0.0; ckpt.feat_len],
@@ -262,13 +282,19 @@ pub struct RequestCheckpoint {
     pub traj: Vec<Vec<f32>>,
     /// Active milliseconds accumulated before this park.
     pub prior_ms: f64,
+    /// Sample-adaptive controller image (SPCK v2 appendix; `None` for
+    /// static-policy requests and every v1 image).
+    pub ctl: Option<CtlCheckpoint>,
     /// Channels of the pred_* scratch buffers to rebuild on resume.
     pub feat_len: usize,
 }
 
 /// Byte-codec magic ("SPCK") + version for [`RequestCheckpoint::to_bytes`].
+/// v2 appends the sample-adaptive controller image after the v1 layout;
+/// [`RequestCheckpoint::from_bytes`] still accepts v1 (controller absent).
 const CKPT_MAGIC: u32 = 0x5350_434b;
-const CKPT_VERSION: u32 = 1;
+const CKPT_VERSION: u32 = 2;
+const CKPT_MIN_VERSION: u32 = 1;
 
 struct ByteWriter {
     buf: Vec<u8>,
@@ -295,6 +321,10 @@ impl ByteWriter {
         for x in v {
             self.f32(*x);
         }
+    }
+    fn string(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
     }
 }
 
@@ -343,6 +373,20 @@ impl<'a> ByteReader<'a> {
             return Err("checkpoint f32 run exceeds remaining bytes".into());
         }
         (0..n).map(|_| self.f32()).collect()
+    }
+    /// Strict boolean: only 0/1 are valid, so every decodable image
+    /// re-encodes bitwise-identically (the codec stays canonical).
+    fn bool32(&mut self) -> Result<bool, String> {
+        match self.u32()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            v => Err(format!("checkpoint flag has non-boolean value {v}")),
+        }
+    }
+    fn string(&mut self) -> Result<String, String> {
+        let n = self.u32()? as usize;
+        let raw = self.take(n)?;
+        String::from_utf8(raw.to_vec()).map_err(|_| "checkpoint string is not utf-8".into())
     }
 }
 
@@ -417,6 +461,24 @@ impl RequestCheckpoint {
         for t in &self.traj {
             w.f32s(t);
         }
+        // v2 appendix: sample-adaptive controller image (flag 0 keeps
+        // static-policy images one word longer than v1, nothing more)
+        match &self.ctl {
+            None => w.u32(0),
+            Some(c) => {
+                w.u32(1);
+                w.f64(c.total);
+                w.f64(c.snap.budget_left);
+                w.f64(c.snap.tau_scale);
+                w.u32(c.snap.accept_streak);
+                w.u32(c.snap.reject_streak);
+                w.u32(c.snap.rung);
+                w.u32(c.snap.dense as u32);
+                w.u32(c.snap.probation);
+                w.u64(c.snap.dense_steps);
+                w.string(&c.draft);
+            }
+        }
         w.buf
     }
 
@@ -430,13 +492,14 @@ impl RequestCheckpoint {
             return Err("not a checkpoint image (bad magic)".into());
         }
         let v = r.u32()?;
-        if v != CKPT_VERSION {
+        if !(CKPT_MIN_VERSION..=CKPT_VERSION).contains(&v) {
             return Err(format!("unsupported checkpoint version {v}"));
         }
         let id = r.u64()?;
-        let cond = r.i64()? as i32;
+        let cond = i32::try_from(r.i64()?)
+            .map_err(|_| "checkpoint cond id exceeds i32 range".to_string())?;
         let seed = r.u64()?;
-        let record_traj = r.u32()? != 0;
+        let record_traj = r.bool32()?;
         let feat_len = r.u64()? as usize;
         let step = r.u64()? as usize;
         let since_full = r.u64()? as usize;
@@ -458,6 +521,12 @@ impl RequestCheckpoint {
             let interval = r.f32()?;
             let n_factors = r.len()?;
             let factors = (0..n_factors).map(|_| r.f32s()).collect::<Result<Vec<_>, _>>()?;
+            // `TapCache::from_parts` asserts these invariants (legit
+            // images always satisfy them) — turn corrupt counts into a
+            // decode error instead of a panic
+            if factors.is_empty() || factors.iter().any(|f| f.len() != factors[0].len()) {
+                return Err("checkpoint tap factors are empty or ragged".to_string());
+            }
             taps.push(TapCache::from_parts(factors, updates, interval));
         }
         let cache = FeatureCache { taps, last_refresh_step };
@@ -487,6 +556,43 @@ impl RequestCheckpoint {
             .collect::<Result<Vec<_>, _>>()?;
         let n_traj = r.len()?;
         let traj = (0..n_traj).map(|_| r.f32s()).collect::<Result<Vec<_>, _>>()?;
+        let ctl = if v >= 2 {
+            if r.bool32()? {
+                let total = r.f64()?;
+                let budget_left = r.f64()?;
+                let tau_scale = r.f64()?;
+                let accept_streak = r.u32()?;
+                let reject_streak = r.u32()?;
+                let rung = r.u32()?;
+                let dense = r.bool32()?;
+                let probation = r.u32()?;
+                let dense_steps = r.u64()?;
+                let draft = r.string()?;
+                Some(CtlCheckpoint {
+                    total,
+                    snap: AdaptiveSnap {
+                        budget_left,
+                        tau_scale,
+                        accept_streak,
+                        reject_streak,
+                        rung,
+                        dense,
+                        probation,
+                        dense_steps,
+                    },
+                    draft,
+                })
+            } else {
+                None
+            }
+        } else {
+            None
+        };
+        // a decodable image must be exactly one encoded checkpoint —
+        // trailing garbage would silently vanish on re-encode otherwise
+        if r.at != bytes.len() {
+            return Err(format!("checkpoint has {} trailing bytes", bytes.len() - r.at));
+        }
         Ok(RequestCheckpoint {
             spec: RequestSpec { id, cond, seed, policy, record_traj, meta },
             x,
@@ -501,6 +607,7 @@ impl RequestCheckpoint {
             stats,
             traj,
             prior_ms,
+            ctl,
             feat_len,
         })
     }

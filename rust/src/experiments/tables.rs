@@ -23,7 +23,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Result};
 
 use crate::cache::{DraftKind, DraftRegistry, TapCache};
-use crate::coordinator::policy::ErrorMetric;
+use crate::coordinator::policy::{ErrorMetric, Policy};
 use crate::metrics::pca::pca2;
 use crate::metrics::stats::pearson;
 use crate::runtime::resolve::{self, BackendRequest};
@@ -55,6 +55,7 @@ pub fn run(args: &Args) -> Result<()> {
         "table7" => table7(args),
         "table8" => table8(args),
         "drafts" => drafts_table(args),
+        "adaptive" => adaptive_bench(args),
         "serve-openloop" => serve_openloop(args),
         "fig2" => fig2(args),
         "fig6" => fig6(args),
@@ -514,6 +515,108 @@ fn drafts_table(args: &Args) -> Result<()> {
         println!("wrote results/drafts.csv");
         Ok(())
     })
+}
+
+/// Sample-adaptive allocation sweep (EXPERIMENTS.md §Adaptive): run the
+/// scripted-drift backend ([`crate::workload::scripted::ScriptedBackend`])
+/// at three difficulty buckets — easy/medium/hard per-step rel-L1 drift —
+/// under a sweep of `adaptive=` error budgets, and report FLOPs saved vs
+/// full compute together with the *realized* rel-L1 latent error against
+/// a dense run of the same scripts, to `results/adaptive.csv`. The shape
+/// to check: at a fixed budget, harder buckets burn the budget sooner and
+/// fall back to dense (lower `flops_saved`, bounded `rel_l1`), while the
+/// static-threshold columns of `bench drafts`/`table4` have no such knob.
+fn adaptive_bench(args: &Args) -> Result<()> {
+    use crate::workload::scripted::ScriptedBackend;
+
+    let quick = args.bool("quick");
+    let n = if quick { 4 } else { args.usize("n", 16) };
+    let budgets: &[f64] = if quick { &[0.1, 1.0] } else { &[0.05, 0.2, 0.5, 1.0, 2.0] };
+    let cfg = crate::config::ModelConfig::native_test();
+    let depth = cfg.depth;
+    let steps = cfg.serve_steps;
+    let buckets: &[(&str, &[f32])] = &[("easy", &[0.0005]), ("medium", &[0.05]), ("hard", &[0.5])];
+    println!("== adaptive: budget sweep over scripted difficulty buckets (n={n}) ==");
+    println!(
+        "{:<8} {:>7} {:>8} {:>9} {:>7} {:>6} {:>6} {:>8}",
+        "bucket", "budget", "saved", "rel_l1", "alpha", "full", "spec", "rejects"
+    );
+    let mut csv = Vec::new();
+    for (label, drift) in buckets {
+        let model = ScriptedBackend::new(cfg.clone(), drift);
+        let full_flops = crate::metrics::flops::FlopsModel::new(model.entry().flops.clone())
+            .full_step_flops();
+        let dense = run_scripted(&model, &parse_policy("full", depth)?, n)?;
+        for &budget in budgets {
+            let base = "speca:N=4,O=1,tau0=0.3,beta=0.05,draft=reuse,metric=l1";
+            let desc = format!("{base},adaptive={budget}");
+            let done = run_scripted(&model, &parse_policy(&desc, depth)?, n)?;
+            let mut saved = 0.0;
+            let mut rel_l1 = 0.0;
+            let mut alpha = 0.0;
+            let (mut fulls, mut specs, mut rejects) = (0u64, 0u64, 0u64);
+            for (c, d) in done.iter().zip(&dense) {
+                debug_assert_eq!(c.id, d.id);
+                saved += 1.0 - 1.0 / c.stats.speedup(full_flops, steps).max(1e-9);
+                let num: f64 = c
+                    .latent
+                    .iter()
+                    .zip(&d.latent)
+                    .map(|(a, b)| (*a as f64 - *b as f64).abs())
+                    .sum();
+                let den: f64 = d.latent.iter().map(|v| (*v as f64).abs()).sum();
+                rel_l1 += num / (den + 1e-8);
+                alpha += c.stats.flops.acceptance_rate();
+                fulls += c.stats.full_steps as u64;
+                specs += c.stats.spec_steps as u64;
+                rejects += c.stats.rejects as u64;
+            }
+            let inv = 1.0 / n as f64;
+            let (saved, rel_l1, alpha) = (saved * inv, rel_l1 * inv, alpha * inv);
+            println!(
+                "{:<8} {:>7.2} {:>7.1}% {:>9.5} {:>7.3} {:>6} {:>6} {:>8}",
+                label,
+                budget,
+                saved * 100.0,
+                rel_l1,
+                alpha,
+                fulls,
+                specs,
+                rejects
+            );
+            csv.push(format!(
+                "{label},{budget},{saved:.5},{rel_l1:.6},{alpha:.4},{fulls},{specs},{rejects}"
+            ));
+        }
+    }
+    write_csv(
+        &results_path("adaptive.csv"),
+        "bucket,budget,flops_saved,rel_l1,alpha,full_steps,spec_steps,rejects",
+        &csv,
+    )?;
+    println!("wrote results/adaptive.csv");
+    Ok(())
+}
+
+/// Run one closed-loop batch on an engine over `model`, completions
+/// sorted by request id (the scripted runs this serves are matched
+/// pairwise against a dense reference on the same seeds).
+fn run_scripted(
+    model: &crate::workload::scripted::ScriptedBackend,
+    policy: &Policy,
+    n: usize,
+) -> Result<Vec<crate::coordinator::state::Completion>> {
+    use crate::coordinator::{Engine, EngineConfig};
+
+    let num_classes = model.entry().config.num_classes;
+    let mut engine =
+        Engine::from_ref(model, EngineConfig { max_inflight: n, ..EngineConfig::default() });
+    for req in crate::workload::batch_requests(n, num_classes, policy, 7, false) {
+        engine.submit(req);
+    }
+    let mut done = engine.run_to_completion()?;
+    done.sort_by_key(|c| c.id);
+    Ok(done)
 }
 
 /// Open-loop serving bench (EXPERIMENTS.md §Open-loop): spin up the

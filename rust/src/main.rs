@@ -5,7 +5,7 @@
 //!   generate [--model M] [--policy P] [--n N] [--shards S] ...  — closed-loop batch
 //!   serve    [--model M] [--addr A] [--shards S]                — TCP JSON-lines server
 //!   load     [--addr A] [--n N] [--conns C]                     — load generator
-//!   bench    <table1..8|fig2|fig6|fig8|fig9|speedup-law>        — experiment runners
+//!   bench    <table1..8|drafts|adaptive|serve-openloop|fig…>    — experiment runners
 //!            (micro perf data: `cargo bench --bench micro_runtime`)
 //!
 //! Every command takes `--backend native|pjrt|auto` (default auto): the
@@ -176,6 +176,9 @@ COMMANDS:
       | serve-openloop (p50/p99/p999 + rejection rate + checkpoint
         counters per rate → results/openloop.csv;
         --rates 0.5,1,2,4 --shards S)
+      | adaptive (sample-adaptive error-budget sweep over scripted
+        easy/medium/hard drift buckets → results/adaptive.csv;
+        policy key adaptive=<budget>, wire field adaptive:<budget>)
       [--quick] [--n N] [--shards S]
       (micro perf: cargo bench --bench micro_runtime — also writes
        results/bench_micro.json: ns/iter + allocs/iter per bench)

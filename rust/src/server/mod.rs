@@ -182,9 +182,10 @@ struct ConnCtx {
 }
 
 /// Parse the v2 job options (`priority`, `deadline_ms`, `return_latent`,
-/// `preemptible`, `group`) shared by `submit` and the v1 `generate`
-/// shim. Built through the [`SubmitOptions`] builder — the struct is
-/// `#[non_exhaustive]`, so this is also the canonical construction path.
+/// `preemptible`, `group`, `adaptive`) shared by `submit` and the v1
+/// `generate` shim. Built through the [`SubmitOptions`] builder — the
+/// struct is `#[non_exhaustive]`, so this is also the canonical
+/// construction path.
 fn submit_options_from_json(req: &Json) -> Result<SubmitOptions> {
     let mut opts = SubmitOptions::new()
         .return_latent(req.get("return_latent").and_then(|b| b.as_bool()).unwrap_or(false))
@@ -211,6 +212,15 @@ fn submit_options_from_json(req: &Json) -> Result<SubmitOptions> {
             bail!("'group' must be a non-negative integer id");
         };
         opts = opts.group(GroupId(gid));
+    }
+    if let Some(a) = req.get("adaptive") {
+        let Some(b) = a.as_f64() else {
+            bail!("'adaptive' must be a number (total relative-error budget)");
+        };
+        if b < 0.0 {
+            bail!("'adaptive' must be non-negative, got {b}");
+        }
+        opts = opts.adaptive(b);
     }
     Ok(opts)
 }

@@ -2,6 +2,8 @@
 //! the bench harness) and request stream generators (closed-loop batches
 //! and open-loop Poisson arrivals).
 
+pub mod scripted;
+
 use anyhow::{bail, Result};
 
 use crate::cache::{Draft, DraftRegistry};
@@ -19,6 +21,8 @@ use crate::util::rng::Rng;
 ///   `toca:N=8,R=0.9` / `duca:N=8,R=0.9`
 ///   `taylorseer:N=5,O=2`
 ///   `speca:N=5,O=2,tau0=0.3,beta=0.05,layer=7,draft=taylor,metric=l2`
+///   `speca:N=5,adaptive=0.5` (sample-adaptive error budget; see
+///   [`AdaptiveController`](crate::coordinator::adaptive::AdaptiveController))
 /// Unspecified keys take the defaults above (`layer` defaults to depth−1).
 /// Malformed numeric values are an error naming the key (a typo like
 /// `tau0=abc` must not silently run with the default). `draft=<name>`
@@ -83,6 +87,13 @@ pub fn parse_policy(desc: &str, depth: usize) -> Result<Policy> {
                 c.metric = ErrorMetric::parse(m)
                     .ok_or_else(|| anyhow::anyhow!("unknown metric '{m}'"))?;
             }
+            if kv.contains_key("adaptive") {
+                let b = get_f("adaptive", 0.0)?;
+                if !(b >= 0.0) {
+                    bail!("policy '{desc}': key 'adaptive' expects a budget >= 0, got '{b}'");
+                }
+                c.adaptive = Some(b);
+            }
             Policy::SpeCa(c)
         }
         _ => bail!("unknown policy '{name}'"),
@@ -112,7 +123,7 @@ pub fn policy_from_json_with(
     let desc = j.get("policy").and_then(|p| p.as_str()).unwrap_or("speca");
     // allow structured overrides: {"policy":"speca","tau0":0.5,...}
     let mut s = desc.to_string();
-    let keys = ["N", "O", "keep", "l", "R", "tau0", "beta", "layer", "metric"];
+    let keys = ["N", "O", "keep", "l", "R", "tau0", "beta", "layer", "metric", "adaptive"];
     let mut parts = Vec::new();
     for k in keys {
         if let Some(v) = j.get(k) {
@@ -220,6 +231,25 @@ mod tests {
         assert!((c.beta - 0.1).abs() < 1e-12);
         assert_eq!(c.interval, 9);
         assert_eq!(c.verify_layer, 7);
+        assert_eq!(c.adaptive, None, "adaptive allocation is opt-in");
+    }
+
+    #[test]
+    fn adaptive_key_parses_and_validates() {
+        let Policy::SpeCa(c) = parse_policy("speca:N=5,adaptive=0.5", 8).unwrap() else {
+            panic!()
+        };
+        assert_eq!(c.adaptive, Some(0.5));
+        // 0 is legal (fully dense from the first step), negatives are not
+        let Policy::SpeCa(c) = parse_policy("speca:adaptive=0", 8).unwrap() else { panic!() };
+        assert_eq!(c.adaptive, Some(0.0));
+        let err = parse_policy("speca:adaptive=-1", 8).unwrap_err().to_string();
+        assert!(err.contains("adaptive"), "{err}");
+        assert!(parse_policy("speca:adaptive=lots", 8).is_err());
+        // and through the JSON structured-override surface
+        let j = Json::parse(r#"{"policy":"speca","adaptive":0.25}"#).unwrap();
+        let Policy::SpeCa(c) = policy_from_json(&j, 8).unwrap() else { panic!() };
+        assert_eq!(c.adaptive, Some(0.25));
     }
 
     #[test]

@@ -1,0 +1,326 @@
+//! Deterministic error-injection model backend for controller tests.
+//!
+//! [`ScriptedBackend`] replaces the seeded native DiT with a model whose
+//! per-step feature drift follows a *scripted* rel-error sequence, so
+//! accept/reject decisions at every verify boundary are decided by the
+//! script, not by emergent network dynamics. The construction:
+//!
+//! * every boundary feature at serve step `s` is the constant vector
+//!   `level(s)·1`, with `level(0) = 1` and
+//!   `level(s) = level(s−1) / (1 − drift[s])`;
+//! * the verification block ignores its input and returns `level(s)·1`
+//!   for the step encoded in the timestep value.
+//!
+//! With the `reuse` draft (prediction = cached tap from the last refresh
+//! step `r`), the verify error under any of the relative metrics (the
+//! vectors are constant, so rel-L1 = rel-L2 = rel-L∞) is exactly
+//! `1 − level(r)/level(s)` — i.e. `drift[s]` one step after a refresh,
+//! compounding monotonically on longer speculative runs. Scripting
+//! `drift` therefore scripts the accept/reject trace against any fixed
+//! threshold, which is what the adaptive-controller transition tests and
+//! the `bench adaptive` difficulty buckets are built on.
+//!
+//! Every entry point is a pure function of its inputs (step is recovered
+//! from the timestep value, never from internal state), so parked and
+//! resumed requests replay bitwise-identically — the property the
+//! checkpoint acceptance tests lean on. An optional per-dispatch
+//! [`delay`](ScriptedBackend::with_delay) inflates step residency for
+//! work-stealing tests.
+
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::config::{ModelConfig, ModelEntry};
+use crate::runtime::native::{synthetic_entry, NativeArch};
+use crate::runtime::ModelBackend;
+use crate::tensor::Tensor;
+
+/// Largest accepted per-step drift: keeps `level(s)` (a product of
+/// `1/(1−drift)` factors) finite in `f32` over any realistic schedule
+/// (0.75 compounds to ~1.3e30 over 50 steps).
+pub const MAX_DRIFT: f32 = 0.75;
+
+/// Scale factor from feature level to eps magnitude; small enough that
+/// the DDIM latent update stays finite over a full schedule.
+const EPS_SCALE: f32 = 1e-3;
+
+/// Deterministic scripted-drift backend (see the module docs).
+pub struct ScriptedBackend {
+    entry: ModelEntry,
+    /// Clamped per-step drift, length `serve_steps`.
+    drift: Vec<f32>,
+    /// `level(s)` per serve step.
+    levels: Vec<f32>,
+    /// Optional sleep per dispatch (steal-test residency).
+    delay: Option<Duration>,
+}
+
+impl ScriptedBackend {
+    /// Build over the synthetic entry for `cfg`, cycling `drift` to
+    /// `serve_steps` entries (so a one-element script is a constant
+    /// difficulty and a short pattern repeats). Drift values are clamped
+    /// into `[0, MAX_DRIFT]`; an empty script means zero drift.
+    pub fn new(cfg: ModelConfig, drift: &[f32]) -> ScriptedBackend {
+        let entry = synthetic_entry(&cfg, &NativeArch::default());
+        let steps = cfg.serve_steps;
+        let mut script = vec![0.0f32; steps];
+        if !drift.is_empty() {
+            for (s, d) in script.iter_mut().enumerate() {
+                *d = drift[s % drift.len()].clamp(0.0, MAX_DRIFT);
+            }
+        }
+        let drift = script;
+        let mut levels = Vec::with_capacity(steps);
+        let mut l = 1.0f32;
+        for &d in &drift {
+            // level(0) keeps drift[0] out of the product: step 0 is
+            // always a dense refresh, there is nothing to drift *from*
+            if !levels.is_empty() {
+                l /= 1.0 - d;
+            }
+            levels.push(l);
+        }
+        ScriptedBackend { entry, drift, levels, delay: None }
+    }
+
+    /// Attach a per-dispatch sleep (every `full`/`block`/`head` call
+    /// blocks this long), inflating step residency so shard workers stay
+    /// visibly busy for work-stealing and preemption tests.
+    pub fn with_delay(mut self, delay: Duration) -> ScriptedBackend {
+        self.delay = Some(delay);
+        self
+    }
+
+    /// The clamped per-step drift script actually in effect.
+    pub fn drift(&self) -> &[f32] {
+        &self.drift
+    }
+
+    /// `level(s)`: the constant boundary-feature value at serve step `s`.
+    pub fn level(&self, step: usize) -> f32 {
+        self.levels[step]
+    }
+
+    /// Recover the serve step from a timestep-embedding value. The
+    /// synthetic DDIM schedule emits a distinct `t_model` value per step,
+    /// so the position is unambiguous.
+    fn step_of(&self, t: f32) -> Result<usize> {
+        match self.entry.schedule.t_model.iter().position(|v| *v == t) {
+            Some(s) => Ok(s),
+            None => bail!("scripted backend: timestep {t} is not on the serve schedule"),
+        }
+    }
+
+    fn pause(&self) {
+        if let Some(d) = self.delay {
+            std::thread::sleep(d);
+        }
+    }
+
+    fn check_batch(&self, bucket: usize, t: &[f32], y: &[i32]) -> Result<()> {
+        if !self.entry.config.buckets.contains(&bucket) {
+            bail!("scripted backend: bucket {bucket} not in {:?}", self.entry.config.buckets);
+        }
+        if t.len() != bucket || y.len() != bucket {
+            bail!("scripted backend: t/y len {}/{} != bucket {bucket}", t.len(), y.len());
+        }
+        Ok(())
+    }
+
+    /// The eps value a dense pass emits at `step` (constant across the
+    /// latent; a pure function of the step so replays are bitwise).
+    fn dense_eps(&self, step: usize) -> f32 {
+        self.levels[step] * EPS_SCALE
+    }
+}
+
+impl ModelBackend for ScriptedBackend {
+    fn entry(&self) -> &ModelEntry {
+        &self.entry
+    }
+
+    fn kind(&self) -> &'static str {
+        "scripted"
+    }
+
+    fn supports(&self, entry_point: &str) -> bool {
+        matches!(entry_point, "full" | "full_eps" | "block" | "head")
+    }
+
+    fn warmup(&self, _entry_points: &[&str], _buckets: &[usize]) -> Result<()> {
+        Ok(())
+    }
+
+    fn full(
+        &self,
+        bucket: usize,
+        x: &[f32],
+        t: &[f32],
+        y: &[i32],
+        _pallas: bool,
+    ) -> Result<(Tensor, Tensor)> {
+        self.check_batch(bucket, t, y)?;
+        let cfg = &self.entry.config;
+        let (latent, feat) = (cfg.latent_dim, cfg.tokens * cfg.dim);
+        if x.len() != bucket * latent {
+            bail!("scripted backend: x len {} != bucket {bucket} · latent {latent}", x.len());
+        }
+        self.pause();
+        let mut eps = vec![0.0f32; bucket * latent];
+        let mut bounds = vec![0.0f32; (cfg.depth + 1) * bucket * feat];
+        for slot in 0..bucket {
+            let step = self.step_of(t[slot])?;
+            eps[slot * latent..(slot + 1) * latent].fill(self.dense_eps(step));
+            for b in 0..=cfg.depth {
+                let off = (b * bucket + slot) * feat;
+                bounds[off..off + feat].fill(self.levels[step]);
+            }
+        }
+        Ok((
+            Tensor::new(vec![bucket, latent], eps),
+            Tensor::new(vec![cfg.depth + 1, bucket, cfg.tokens, cfg.dim], bounds),
+        ))
+    }
+
+    fn full_eps(&self, bucket: usize, x: &[f32], t: &[f32], y: &[i32]) -> Result<Tensor> {
+        self.check_batch(bucket, t, y)?;
+        let latent = self.entry.config.latent_dim;
+        if x.len() != bucket * latent {
+            bail!("scripted backend: x len {} != bucket {bucket} · latent {latent}", x.len());
+        }
+        self.pause();
+        let mut eps = vec![0.0f32; bucket * latent];
+        for slot in 0..bucket {
+            let step = self.step_of(t[slot])?;
+            eps[slot * latent..(slot + 1) * latent].fill(self.dense_eps(step));
+        }
+        Ok(Tensor::new(vec![bucket, latent], eps))
+    }
+
+    fn block(
+        &self,
+        bucket: usize,
+        layer: i32,
+        feat: &[f32],
+        t: &[f32],
+        y: &[i32],
+    ) -> Result<Tensor> {
+        self.check_batch(bucket, t, y)?;
+        let cfg = &self.entry.config;
+        let flen = cfg.tokens * cfg.dim;
+        if layer < 0 || layer as usize >= cfg.depth {
+            bail!("scripted backend: block layer {layer} out of range (depth {})", cfg.depth);
+        }
+        if feat.len() != bucket * flen {
+            bail!("scripted backend: feat len {} != bucket {bucket} · feat {flen}", feat.len());
+        }
+        self.pause();
+        // the "ground truth" at this step, independent of the predicted
+        // input: verify error is then exactly the scripted cumulative
+        // drift between refresh and now
+        let mut out = vec![0.0f32; bucket * flen];
+        for slot in 0..bucket {
+            let step = self.step_of(t[slot])?;
+            out[slot * flen..(slot + 1) * flen].fill(self.levels[step]);
+        }
+        Ok(Tensor::new(vec![bucket, cfg.tokens, cfg.dim], out))
+    }
+
+    fn head(&self, bucket: usize, feat: &[f32], t: &[f32], y: &[i32]) -> Result<Tensor> {
+        self.check_batch(bucket, t, y)?;
+        let cfg = &self.entry.config;
+        let (latent, flen) = (cfg.latent_dim, cfg.tokens * cfg.dim);
+        if feat.len() != bucket * flen {
+            bail!("scripted backend: feat len {} != bucket {bucket} · feat {flen}", feat.len());
+        }
+        self.pause();
+        // eps from the *predicted* feature level: accepted speculation
+        // carries the (stale) cached level into the latent, exactly the
+        // approximation error the adaptive budget is metering
+        let mut eps = vec![0.0f32; bucket * latent];
+        for slot in 0..bucket {
+            let row = &feat[slot * flen..(slot + 1) * flen];
+            let mean = row.iter().sum::<f32>() / flen as f32;
+            eps[slot * latent..(slot + 1) * latent].fill(mean * EPS_SCALE);
+        }
+        Ok(Tensor::new(vec![bucket, latent], eps))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn backend(drift: &[f32]) -> ScriptedBackend {
+        ScriptedBackend::new(ModelConfig::native_test(), drift)
+    }
+
+    #[test]
+    fn levels_encode_the_scripted_relative_drift() {
+        let b = backend(&[0.1]);
+        let steps = b.entry().config.serve_steps;
+        assert_eq!(b.drift().len(), steps);
+        assert_eq!(b.level(0), 1.0);
+        for s in 1..steps {
+            // single-step rel error of a reuse prediction from step s−1
+            let e = 1.0 - b.level(s - 1) / b.level(s);
+            assert!((e - 0.1).abs() < 1e-6, "step {s}: {e}");
+        }
+    }
+
+    #[test]
+    fn drift_is_cycled_and_clamped() {
+        let b = backend(&[0.2, 5.0]);
+        assert_eq!(b.drift()[0], 0.2);
+        assert_eq!(b.drift()[1], MAX_DRIFT, "over-unity drift must clamp");
+        assert_eq!(b.drift()[2], 0.2, "short scripts cycle");
+        let z = backend(&[]);
+        assert!(z.drift().iter().all(|d| *d == 0.0));
+        assert!(z.levels.iter().all(|l| *l == 1.0));
+    }
+
+    #[test]
+    fn block_is_ground_truth_of_the_step_not_the_input() {
+        let b = backend(&[0.25]);
+        let cfg = b.entry().config.clone();
+        let flen = cfg.tokens * cfg.dim;
+        let t = [b.entry().schedule.t_model[3]];
+        let junk = vec![42.0f32; flen];
+        let out = b.block(1, 0, &junk, &t, &[0]).unwrap();
+        assert!(out.data.iter().all(|v| *v == b.level(3)));
+        // rel-L1 of a reuse prediction from step 2 against it
+        let pred = vec![b.level(2); flen];
+        let e = crate::coordinator::policy::ErrorMetric::L1.eval(&pred, out.row(0));
+        assert!((e - 0.25).abs() < 1e-5, "{e}");
+    }
+
+    #[test]
+    fn entry_points_are_pure_functions() {
+        let b = backend(&[0.3, 0.01]);
+        let cfg = b.entry().config.clone();
+        let x = vec![0.5f32; cfg.latent_dim];
+        let t = [b.entry().schedule.t_model[5]];
+        let (e1, b1) = b.full(1, &x, &t, &[1], false).unwrap();
+        let (e2, b2) = b.full(1, &x, &t, &[1], false).unwrap();
+        assert_eq!(e1.data, e2.data);
+        assert_eq!(b1.data, b2.data);
+        assert_eq!(b1.shape, vec![cfg.depth + 1, 1, cfg.tokens, cfg.dim]);
+        assert_eq!(e1.data, b.full_eps(1, &x, &t, &[1]).unwrap().data);
+        let feat = vec![2.0f32; cfg.tokens * cfg.dim];
+        let h1 = b.head(1, &feat, &t, &[1]).unwrap();
+        let h2 = b.head(1, &feat, &t, &[1]).unwrap();
+        assert_eq!(h1.data, h2.data);
+        assert!(h1.data.iter().all(|v| *v == 2.0 * EPS_SCALE));
+    }
+
+    #[test]
+    fn off_schedule_timesteps_and_bad_shapes_error() {
+        let b = backend(&[0.1]);
+        let cfg = b.entry().config.clone();
+        let x = vec![0.0f32; cfg.latent_dim];
+        assert!(b.full_eps(1, &x, &[12345.0], &[0]).is_err());
+        assert!(b.full_eps(1, &x[..1], &[b.entry().schedule.t_model[0]], &[0]).is_err());
+        assert!(b.block(1, cfg.depth as i32, &[], &[0.0], &[0]).is_err());
+    }
+}

@@ -1,0 +1,422 @@
+//! Integration: sample-adaptive computation allocation (DESIGN.md §14)
+//! driven end-to-end on the deterministic error-injection backend
+//! (`speca::workload::scripted`). The drift scripts decide every verify
+//! outcome in advance, so the controller's observable behaviour is
+//! pinned step by step: rejection streaks tighten the draft rung and
+//! halve the threshold scale down to the dense-fallback latch, dense
+//! probation retries speculation, sustained acceptance loosens rung and
+//! scale back, and a zero budget pins every step dense. On top of that,
+//! controller state survives park/resume, the SPCK byte codec, priority
+//! preemption and cross-shard work stealing bitwise.
+
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use speca::config::ModelConfig;
+use speca::coordinator::adaptive::CtlCheckpoint;
+use speca::coordinator::state::{Completion, RequestCheckpoint, RequestSpec};
+use speca::coordinator::{
+    Admission, Engine, EngineConfig, EngineShardPool, JobMeta, PoolConfig, Priority, RouterPolicy,
+};
+use speca::runtime::ModelBackend;
+use speca::workload::parse_policy;
+use speca::workload::scripted::ScriptedBackend;
+
+/// Per-step rel error far below any threshold: every verify accepts.
+const EASY: &[f32] = &[0.0005];
+/// Per-step rel error far above any threshold: every verify rejects.
+const HARD: &[f32] = &[0.75];
+/// Alternating tiny/large drift: a mixed accept/reject trace.
+const MIXED: &[f32] = &[0.001, 0.35];
+
+/// An adaptive request whose budget never binds (`tau0` stays the base),
+/// so the trace is driven purely by streak dynamics.
+const ROOMY: &str = "speca:N=12,O=1,tau0=0.3,beta=1,metric=l1,adaptive=10";
+
+fn scripted(drift: &[f32]) -> Arc<ScriptedBackend> {
+    Arc::new(ScriptedBackend::new(ModelConfig::native_test(), drift))
+}
+
+fn spec(id: u64, depth: usize, desc: &str) -> RequestSpec {
+    RequestSpec {
+        id,
+        cond: (id % 4) as i32,
+        seed: 100 + id,
+        policy: parse_policy(desc, depth).unwrap(),
+        record_traj: false,
+        meta: JobMeta::default(),
+    }
+}
+
+/// The request run start-to-finish on one engine with no interruption —
+/// the reference every park/resume variant must match bitwise.
+fn run_uninterrupted(model: &Arc<ScriptedBackend>, s: RequestSpec) -> Completion {
+    let mut engine = Engine::new(model.clone(), EngineConfig::default());
+    engine.submit(s);
+    let mut done = engine.run_to_completion().unwrap();
+    assert_eq!(done.len(), 1);
+    done.pop().unwrap()
+}
+
+/// Everything observable about a completion except wall-clock latency
+/// must match exactly.
+fn assert_bitwise(a: &Completion, b: &Completion, what: &str) {
+    assert_eq!(a.id, b.id, "{what}: id");
+    assert_eq!(a.policy_name, b.policy_name, "{what}: policy");
+    assert_eq!(a.latent, b.latent, "{what}: final latent drifted");
+    assert_eq!(a.stats.full_steps, b.stats.full_steps, "{what}: full steps");
+    assert_eq!(a.stats.spec_steps, b.stats.spec_steps, "{what}: spec steps");
+    assert_eq!(a.stats.rejects, b.stats.rejects, "{what}: rejects");
+    assert_eq!(a.stats.verify_trace, b.stats.verify_trace, "{what}: verify trace");
+    assert_eq!(a.stats.flops.total(), b.stats.flops.total(), "{what}: booked FLOPs");
+}
+
+/// Park the engine's single in-flight request and hand back its
+/// checkpoint for inspection (the caller resumes it afterwards).
+fn park_one(engine: &mut Engine<'_>, at: usize) -> Box<RequestCheckpoint> {
+    let mut units = engine.park_all();
+    assert_eq!(units.len(), 1, "boundary {at}: expected one in-flight request");
+    let Some(Admission::Parked(ckpt)) = units.pop() else {
+        panic!("boundary {at}: park_all returned a fresh spec");
+    };
+    assert_eq!(ckpt.step, at, "parked off-boundary");
+    ckpt
+}
+
+/// One expected controller snapshot row: (rung, draft, tau_scale,
+/// accept_streak, reject_streak, dense, probation, dense_steps).
+type Row = (u32, &'static str, f64, u32, u32, bool, u32, u64);
+
+fn assert_ctl(ctl: &CtlCheckpoint, row: &Row, at: usize) {
+    let (rung, draft, scale, a, r, dense, prob, ds) = *row;
+    assert_eq!(ctl.snap.rung, rung, "boundary {at}: rung");
+    assert_eq!(ctl.draft, draft, "boundary {at}: draft");
+    assert_eq!(ctl.snap.tau_scale, scale, "boundary {at}: tau scale");
+    assert_eq!(ctl.snap.accept_streak, a, "boundary {at}: accept streak");
+    assert_eq!(ctl.snap.reject_streak, r, "boundary {at}: reject streak");
+    assert_eq!(ctl.snap.dense, dense, "boundary {at}: dense latch");
+    assert_eq!(ctl.snap.probation, prob, "boundary {at}: probation");
+    assert_eq!(ctl.snap.dense_steps, ds, "boundary {at}: dense steps");
+}
+
+/// ISSUE acceptance (a): under the same budget, the hard script ends
+/// with more dense (full) steps than the easy one, and a zero budget
+/// degrades to dense-only from the start.
+#[test]
+fn hard_scripts_spend_more_dense_steps_than_easy_under_the_same_budget() {
+    let desc = "speca:N=12,O=1,tau0=0.3,beta=1,metric=l1,adaptive=0.1";
+    let easy_model = scripted(EASY);
+    let depth = easy_model.entry().config.depth;
+    let easy = run_uninterrupted(&easy_model, spec(0, depth, desc));
+    let hard = run_uninterrupted(&scripted(HARD), spec(0, depth, desc));
+
+    // the easy script accepts every speculative step: only the step-0
+    // refresh is dense; the hard script rejects itself down the ladder
+    // into the dense latch and ends all-dense
+    assert_eq!(easy.stats.full_steps, 1, "easy: only the warmup refresh is dense");
+    assert_eq!(easy.stats.spec_steps, 11, "easy: every other step speculates");
+    assert_eq!(easy.stats.rejects, 0, "easy: nothing rejects");
+    assert_eq!(hard.stats.full_steps, 12, "hard: every step ends up dense");
+    assert_eq!(hard.stats.spec_steps, 0, "hard: no speculation survives");
+    assert!(hard.stats.rejects > 0, "hard: the ladder walk-down is reject-driven");
+    assert!(
+        hard.stats.full_steps > easy.stats.full_steps,
+        "the same budget must buy more dense compute on the harder sample"
+    );
+
+    // a zero budget means no error allowance at all: the controller
+    // forces dense from the first speculative opportunity, without a
+    // single verify (nothing is ever risked)
+    let none = run_uninterrupted(
+        &easy_model,
+        spec(1, depth, "speca:N=12,O=1,tau0=0.3,beta=1,metric=l1,adaptive=0"),
+    );
+    assert_eq!(none.stats.full_steps, 12, "zero budget: all dense");
+    assert_eq!(none.stats.spec_steps, 0);
+    assert_eq!(none.stats.rejects, 0);
+    assert!(none.stats.verify_trace.is_empty(), "zero budget: nothing is verified");
+}
+
+/// Step-by-step tighten/fallback/probation proof on a constant-hard
+/// script: every verify rejects, so the controller must walk the ladder
+/// taylor → adams-bashforth → reuse (halving the threshold scale at
+/// each tighten), latch dense at the bottom, sit out the probation
+/// window, retry speculation, and latch again. The controller state is
+/// observed by parking at every boundary — which also proves the
+/// inspection itself is bitwise-invisible.
+#[test]
+fn rejection_streaks_tighten_to_the_dense_latch_and_probation_retries() {
+    let model = scripted(HARD);
+    let depth = model.entry().config.depth;
+    let reference = run_uninterrupted(&model, spec(0, depth, ROOMY));
+
+    // boundary k = engine state after serve steps 0..k. Steps 1..=6
+    // reject (streaks of 2 tighten at boundaries 3/5/7; the third
+    // tighten has no deeper rung and latches dense), 7..=9 are forced
+    // dense (probation expires at boundary 10), 10..=11 reject again.
+    let expect: [Row; 11] = [
+        (0, "taylor", 1.0, 0, 0, false, 0, 0),
+        (0, "taylor", 1.0, 0, 1, false, 0, 0),
+        (1, "adams-bashforth", 0.5, 0, 0, false, 0, 0),
+        (1, "adams-bashforth", 0.5, 0, 1, false, 0, 0),
+        (2, "reuse", 0.25, 0, 0, false, 0, 0),
+        (2, "reuse", 0.25, 0, 1, false, 0, 0),
+        (2, "reuse", 0.25, 0, 0, true, 0, 0),
+        (2, "reuse", 0.25, 0, 0, true, 1, 1),
+        (2, "reuse", 0.25, 0, 0, true, 2, 2),
+        (2, "reuse", 0.25, 0, 0, false, 0, 3),
+        (2, "reuse", 0.25, 0, 1, false, 0, 3),
+    ];
+
+    let mut engine = Engine::new(model.clone(), EngineConfig::default());
+    engine.submit(spec(0, depth, ROOMY));
+    for (i, row) in expect.iter().enumerate() {
+        let at = i + 1;
+        assert!(engine.tick().unwrap(), "engine went idle before boundary {at}");
+        let ckpt = park_one(&mut engine, at);
+        let ctl = ckpt.ctl.as_ref().expect("adaptive requests checkpoint their controller");
+        assert_eq!(ctl.total, 10.0, "boundary {at}: configured budget");
+        // rejects never spend budget: it stays whole through the walk
+        assert_eq!(ctl.snap.budget_left, 10.0, "boundary {at}: budget spent on a reject");
+        assert_ctl(ctl, row, at);
+        engine.submit_checkpoint(ckpt);
+    }
+    let mut done = engine.run_to_completion().unwrap();
+    assert_eq!(engine.parked, 11);
+    assert_eq!(engine.resumed, 11);
+
+    let hard = done.pop().unwrap();
+    assert_eq!(hard.stats.full_steps, 12);
+    assert_eq!(hard.stats.spec_steps, 0);
+    assert_eq!(hard.stats.rejects, 8);
+    // the recorded thresholds show the halving applied at verify time:
+    // rejected steps 1,2 at scale 1, 3,4 at 1/2, 5,6 and 10,11 at 1/4
+    let scales = [1.0, 1.0, 0.5, 0.5, 0.25, 0.25, 0.25, 0.25];
+    let steps = [1, 2, 3, 4, 5, 6, 10, 11];
+    assert_eq!(hard.stats.verify_trace.len(), 8);
+    for (i, (step, e, tau)) in hard.stats.verify_trace.iter().enumerate() {
+        assert_eq!(*step, steps[i], "verify {i}: step");
+        assert_eq!(*tau, 0.3 * scales[i], "verify {i}: applied threshold");
+        assert!(e > tau, "verify {i}: scripted drift must reject");
+    }
+    assert_bitwise(&reference, &hard, "11 park/inspect cycles");
+}
+
+/// Step-by-step loosen proof: two early rejects tighten to the
+/// adams-bashforth rung at half scale, then a run of tiny-drift steps
+/// accepts; the third consecutive accept loosens the scale back to 1
+/// and climbs back to the configured taylor rung, and further accept
+/// streaks saturate there. Budget drains only on accepts.
+#[test]
+fn sustained_acceptance_loosens_the_rung_and_threshold_back() {
+    let mut drift = vec![0.001f32; 12];
+    drift[1] = 0.35;
+    drift[2] = 0.35;
+    let model = scripted(&drift);
+    let depth = model.entry().config.depth;
+    let reference = run_uninterrupted(&model, spec(0, depth, ROOMY));
+
+    // steps 1,2 reject (tighten at boundary 3), steps 3.. accept; the
+    // loosen fires on every third consecutive accept (boundaries 6, 9)
+    // and then only resets the streak (scale and rung are saturated)
+    let expect: [Row; 11] = [
+        (0, "taylor", 1.0, 0, 0, false, 0, 0),
+        (0, "taylor", 1.0, 0, 1, false, 0, 0),
+        (1, "adams-bashforth", 0.5, 0, 0, false, 0, 0),
+        (1, "adams-bashforth", 0.5, 1, 0, false, 0, 0),
+        (1, "adams-bashforth", 0.5, 2, 0, false, 0, 0),
+        (0, "taylor", 1.0, 0, 0, false, 0, 0),
+        (0, "taylor", 1.0, 1, 0, false, 0, 0),
+        (0, "taylor", 1.0, 2, 0, false, 0, 0),
+        (0, "taylor", 1.0, 0, 0, false, 0, 0),
+        (0, "taylor", 1.0, 1, 0, false, 0, 0),
+        (0, "taylor", 1.0, 2, 0, false, 0, 0),
+    ];
+
+    let mut engine = Engine::new(model.clone(), EngineConfig::default());
+    engine.submit(spec(0, depth, ROOMY));
+    let mut last_budget = 10.0f64;
+    for (i, row) in expect.iter().enumerate() {
+        let at = i + 1;
+        assert!(engine.tick().unwrap(), "engine went idle before boundary {at}");
+        let ckpt = park_one(&mut engine, at);
+        let ctl = ckpt.ctl.as_ref().expect("adaptive requests checkpoint their controller");
+        assert_ctl(ctl, row, at);
+        if at <= 3 {
+            assert_eq!(ctl.snap.budget_left, 10.0, "boundary {at}: rejects spend nothing");
+        } else {
+            assert!(
+                ctl.snap.budget_left < last_budget,
+                "boundary {at}: each accept must drain the budget"
+            );
+        }
+        last_budget = ctl.snap.budget_left;
+        engine.submit_checkpoint(ckpt);
+    }
+    let mut done = engine.run_to_completion().unwrap();
+    let got = done.pop().unwrap();
+    assert_eq!(got.stats.rejects, 2);
+    assert_eq!(got.stats.full_steps, 3, "steps 0,1,2 are the only dense ones");
+    assert_eq!(got.stats.spec_steps, 9);
+    assert_bitwise(&reference, &got, "11 park/inspect cycles");
+}
+
+/// ISSUE acceptance (b): a parked-then-resumed adaptive job — including
+/// a trip through the SPCK v2 byte codec at every boundary — finishes
+/// bitwise-identical to the uninterrupted run.
+#[test]
+fn adaptive_park_resume_and_byte_codec_are_bitwise_at_every_boundary() {
+    let desc = "speca:N=12,O=1,tau0=0.3,beta=1,metric=l1,adaptive=0.5";
+    let model = scripted(MIXED);
+    let depth = model.entry().config.depth;
+    let total = model.entry().config.serve_steps;
+    let reference = run_uninterrupted(&model, spec(0, depth, desc));
+    for boundary in 1..total {
+        let mut engine = Engine::new(model.clone(), EngineConfig::default());
+        engine.submit(spec(0, depth, desc));
+        for _ in 0..boundary {
+            assert!(engine.tick().unwrap(), "engine idle before boundary {boundary}");
+        }
+        let ckpt = park_one(&mut engine, boundary);
+        let ctl = ckpt.ctl.as_ref().expect("the controller must be checkpointed");
+        if boundary >= 3 {
+            // the step-2 accept has spent budget by then: the codec trip
+            // below round-trips *live* controller state, not defaults
+            assert!(ctl.snap.budget_left < ctl.total, "boundary {boundary}: stale budget");
+        }
+        let bytes = ckpt.to_bytes();
+        let (policy, meta) = (ckpt.spec.policy.clone(), ckpt.spec.meta.clone());
+        let decoded = RequestCheckpoint::from_bytes(&bytes, policy, meta)
+            .expect("a parked image must decode");
+        assert_eq!(decoded.to_bytes(), bytes, "boundary {boundary}: codec not canonical");
+        let mut peer = Engine::new(model.clone(), EngineConfig::default());
+        peer.submit_checkpoint(Box::new(decoded));
+        let mut done = peer.run_to_completion().unwrap();
+        assert_eq!(done.len(), 1);
+        assert_eq!(peer.resumed, 1);
+        let what = format!("codec resume at boundary {boundary}");
+        assert_bitwise(&reference, &done.pop().unwrap(), &what);
+    }
+}
+
+/// ISSUE acceptance (c): SPCK v1 images (no controller appendix) from a
+/// static request on the scripted backend still decode, upgrade to v2
+/// losslessly, and resume bitwise.
+#[test]
+fn spck_v1_images_from_static_requests_decode_and_resume_bitwise() {
+    let desc = "speca:N=5,O=1,tau0=0.05,beta=1,metric=l1";
+    let model = scripted(MIXED);
+    let depth = model.entry().config.depth;
+    let mut engine = Engine::new(model.clone(), EngineConfig::default());
+    engine.submit(spec(0, depth, desc));
+    for _ in 0..4 {
+        assert!(engine.tick().unwrap());
+    }
+    let ckpt = park_one(&mut engine, 4);
+    let v2 = ckpt.to_bytes();
+    // strip the zero controller-flag word and patch the version field —
+    // byte-for-byte the layout a v1 writer produced
+    assert_eq!(&v2[v2.len() - 4..], &[0u8; 4], "static requests carry no controller");
+    let mut v1 = v2[..v2.len() - 4].to_vec();
+    v1[4..8].copy_from_slice(&1u32.to_le_bytes());
+    let decoded = RequestCheckpoint::from_bytes(&v1, ckpt.spec.policy.clone(), ckpt.spec.meta)
+        .expect("v1 images must keep decoding");
+    assert!(decoded.ctl.is_none(), "v1 images carry no controller state");
+    assert_eq!(decoded.to_bytes(), v2, "the v1→v2 upgrade adds only the zero flag");
+    let reference = run_uninterrupted(&model, spec(0, depth, desc));
+    let mut peer = Engine::new(model.clone(), EngineConfig::default());
+    peer.submit_checkpoint(Box::new(decoded));
+    let done = peer.run_to_completion().unwrap();
+    assert_bitwise(&reference, &done[0], "v1 image resume");
+}
+
+/// Priority preemption ported onto the scripted backend: the parked
+/// victim carries live controller state through the round trip and
+/// still finishes bitwise-identical.
+#[test]
+fn preemption_round_trips_the_adaptive_victim_bitwise() {
+    let desc = "speca:N=12,O=1,tau0=0.3,beta=1,metric=l1,adaptive=0.5";
+    let model = scripted(MIXED);
+    let depth = model.entry().config.depth;
+    let mut low = spec(0, depth, desc);
+    low.meta.priority = Priority::Low;
+    low.meta.preemptible = true;
+    let reference = run_uninterrupted(&model, low.clone());
+
+    let cfg = EngineConfig { max_inflight: 1, ..EngineConfig::default() };
+    let mut engine = Engine::new(model.clone(), cfg);
+    engine.submit(low);
+    for _ in 0..3 {
+        assert!(engine.tick().unwrap());
+    }
+    let mut high = spec(1, depth, "full");
+    high.meta.priority = Priority::High;
+    engine.submit(high);
+    let mut done = engine.run_to_completion().unwrap();
+    assert_eq!(done.len(), 2);
+    assert_eq!(engine.parked, 1, "the adaptive victim must be parked exactly once");
+    assert_eq!(engine.resumed, 1, "... and resumed after the high job finishes");
+    assert_eq!(done[0].id, 1, "high-priority job must finish first");
+    done.sort_by_key(|c| c.id);
+    assert_bitwise(&reference, &done[0], "preempted adaptive victim");
+}
+
+/// Work stealing ported onto the scripted backend: an idle shard steals
+/// mid-flight adaptive work from a loaded peer, and every stolen job's
+/// outcome is bitwise-identical to a single-engine run — the controller
+/// state travels with the checkpoint across shard threads.
+#[test]
+fn idle_shard_steals_adaptive_work_and_outcomes_stay_bitwise() {
+    let desc = "speca:N=12,O=1,tau0=0.3,beta=1,metric=l1,adaptive=0.5";
+    let cfg = ModelConfig::native_test();
+    let slow = Arc::new(ScriptedBackend::new(cfg, MIXED).with_delay(Duration::from_millis(15)));
+    let fast = scripted(MIXED); // same math, no sleeps: the reference
+    let depth = slow.entry().config.depth;
+    let pool = EngineShardPool::new(
+        slow,
+        PoolConfig {
+            shards: 2,
+            router: RouterPolicy::LeastLoaded,
+            engine: EngineConfig::default(),
+            steal: true,
+        },
+    );
+
+    // a quick job with a heavy cost hint parks shard 0's work gauge
+    // high, steering the slow preemptible adaptive backlog to shard 1 —
+    // a deliberately skewed placement the thief must then repair
+    let mut quick = spec(0, depth, "steps:keep=2");
+    quick.meta.cost_hint = 60.0;
+    assert_eq!(pool.submit(quick).unwrap(), 0);
+    for i in 1..=4 {
+        let mut s = spec(i, depth, desc);
+        s.meta.cost_hint = 5.0;
+        s.meta.preemptible = true;
+        assert_eq!(pool.submit(s).unwrap(), 1, "hinted routing must skew to shard 1");
+    }
+
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let s = pool.stats();
+        if s.stolen >= 1 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "idle shard never stole: {s:?}");
+        thread::sleep(Duration::from_millis(5));
+    }
+
+    let out = pool.shutdown(true).unwrap();
+    assert_eq!(out.completions.len(), 5, "stolen work must still complete");
+    assert!(out.stats.stolen >= 1, "steal counter lost: {:?}", out.stats);
+    assert!(out.stats.parked >= 1, "the victim parks a mid-flight unit: {:?}", out.stats);
+    assert!(out.stats.resumed >= 1, "the thief resumes it: {:?}", out.stats);
+    let mut done = out.completions;
+    done.sort_by_key(|c| c.id);
+    for (i, c) in done.iter().enumerate() {
+        assert_eq!(c.id, i as u64);
+        let d = if i == 0 { "steps:keep=2" } else { desc };
+        let reference = run_uninterrupted(&fast, spec(i as u64, depth, d));
+        assert_bitwise(&reference, c, "stolen/migrated shard work");
+    }
+}

@@ -15,6 +15,7 @@ use std::thread;
 use std::time::{Duration, Instant};
 
 use speca::config::{ModelConfig, ModelEntry};
+use speca::coordinator::policy::Policy;
 use speca::coordinator::state::{Completion, RequestCheckpoint, RequestSpec};
 use speca::coordinator::{
     Admission, Engine, EngineConfig, EngineShardPool, JobEvent, JobMeta, PoolConfig, Priority,
@@ -23,6 +24,7 @@ use speca::coordinator::{
 use speca::runtime::native::{synthetic_entry, NativeArch};
 use speca::runtime::{ModelBackend, NativeBackend};
 use speca::tensor::Tensor;
+use speca::util::rng::Rng;
 use speca::workload::parse_policy;
 
 fn native_model() -> Arc<NativeBackend> {
@@ -135,6 +137,119 @@ fn checkpoint_byte_codec_round_trips_and_rejects_corruption() {
     let mut bad = bytes.clone();
     bad[0] ^= 0xFF;
     assert!(RequestCheckpoint::from_bytes(&bad, policy, meta).is_err());
+}
+
+/// Park one request after `ticks` engine ticks and return its byte
+/// image plus the policy/meta needed to decode it again.
+fn parked_blob(
+    model: &Arc<NativeBackend>,
+    desc: &str,
+    ticks: usize,
+) -> (Vec<u8>, Policy, JobMeta) {
+    let depth = model.entry().config.depth;
+    let mut engine = Engine::new(model.clone(), EngineConfig::default());
+    engine.submit(spec(9, depth, desc));
+    for _ in 0..ticks {
+        assert!(engine.tick().unwrap());
+    }
+    let Some(Admission::Parked(ckpt)) = engine.park_all().pop() else {
+        panic!("{desc}: expected one parked checkpoint");
+    };
+    (ckpt.to_bytes(), ckpt.spec.policy.clone(), ckpt.spec.meta.clone())
+}
+
+/// Strip the v2 controller appendix (a single zero flag word on
+/// static-policy images) and patch the version field — byte-for-byte
+/// the layout a v1 writer produced.
+fn downgrade_to_v1(v2: &[u8]) -> Vec<u8> {
+    assert_eq!(&v2[v2.len() - 4..], &[0u8; 4], "expected a no-controller image");
+    let mut v1 = v2[..v2.len() - 4].to_vec();
+    v1[4..8].copy_from_slice(&1u32.to_le_bytes());
+    v1
+}
+
+#[test]
+fn spck_v1_images_still_decode_and_resume_bitwise() {
+    let model = native_model();
+    let depth = model.entry().config.depth;
+    let desc = "speca:N=5,O=2,tau0=0.3,beta=0.05";
+    let (v2, policy, meta) = parked_blob(&model, desc, 4);
+    let v1 = downgrade_to_v1(&v2);
+    let decoded = RequestCheckpoint::from_bytes(&v1, policy, meta).unwrap();
+    assert!(decoded.ctl.is_none(), "v1 images carry no controller state");
+    // re-encoding upgrades to v2; the upgrade adds only the zero flag
+    assert_eq!(decoded.to_bytes(), v2);
+    let reference = run_uninterrupted(&model, spec(9, depth, desc));
+    let mut peer = Engine::new(model.clone(), EngineConfig::default());
+    peer.submit_checkpoint(Box::new(decoded));
+    let done = peer.run_to_completion().unwrap();
+    assert_bitwise(&reference, &done[0], "v1 image resume");
+}
+
+/// Structured fuzz over the SPCK codec: deterministic xorshift-driven
+/// truncation, single-bit flips and length-prefix blasts over v1 and v2
+/// images (with and without controller state). The invariants: decode
+/// never panics; an `Ok` decode of a v2 image re-encodes bitwise
+/// identically (the codec is canonical); an `Ok` decode of a v1 image
+/// upgrades to a stable v2 image; every `Err` carries a message.
+#[test]
+fn spck_codec_structured_fuzz_never_panics_and_stays_canonical() {
+    fn check(bytes: &[u8], policy: &Policy, meta: &JobMeta) -> bool {
+        match RequestCheckpoint::from_bytes(bytes, policy.clone(), meta.clone()) {
+            Ok(ck) => {
+                let re = ck.to_bytes();
+                if bytes.len() >= 8 && bytes[4..8] == 2u32.to_le_bytes() {
+                    assert_eq!(re, bytes, "v2 decode∘encode must be the identity");
+                } else {
+                    let again = RequestCheckpoint::from_bytes(&re, policy.clone(), meta.clone())
+                        .expect("re-encoded image must decode");
+                    assert_eq!(again.to_bytes(), re, "v1→v2 upgrade must be stable");
+                }
+                true
+            }
+            Err(e) => {
+                assert!(!e.is_empty(), "errors must carry a message");
+                false
+            }
+        }
+    }
+
+    let model = native_model();
+    let mut blobs = Vec::new();
+    for (desc, ticks) in [
+        ("speca:N=5,O=2,tau0=0.3,beta=0.05", 4),
+        ("speca:N=4,O=1,tau0=0.3,beta=0.05,adaptive=0.5", 5),
+        ("teacache:l=0.6", 3),
+    ] {
+        blobs.push(parked_blob(&model, desc, ticks));
+    }
+    let (v2, policy, meta) = blobs[0].clone();
+    blobs.push((downgrade_to_v1(&v2), policy, meta));
+
+    let mut rng = Rng::new(0x5943_F00D);
+    for (bytes, policy, meta) in &blobs {
+        assert!(check(bytes, policy, meta), "pristine image must decode");
+        for _ in 0..300 {
+            let mut m = bytes.clone();
+            match rng.below(3) {
+                // truncation at a random byte
+                0 => m.truncate(rng.below(bytes.len() + 1)),
+                // single-bit flip
+                1 => {
+                    let i = rng.below(m.len());
+                    m[i] ^= 1 << rng.below(8);
+                }
+                // length-prefix corruption: blast an aligned word with a
+                // value far past the end of the buffer
+                _ => {
+                    let i = rng.below(m.len() / 4) * 4;
+                    let v = 0xFFFF_0000u32 | (rng.next_u64() as u32 & 0xFFFF);
+                    m[i..i + 4].copy_from_slice(&v.to_le_bytes());
+                }
+            }
+            check(&m, policy, meta);
+        }
+    }
 }
 
 #[test]
