@@ -47,9 +47,12 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Result};
 
 use crate::cache::Draft;
+use crate::coordinator::engine::Admission;
 use crate::coordinator::policy::Policy;
-use crate::coordinator::pool::{EngineShardPool, PoolConfig, ShardRouter, ShardStats};
-use crate::coordinator::state::{Completion, RequestSpec};
+use crate::coordinator::pool::{
+    EngineShardPool, PoolConfig, ShardRouter, ShardStats, SpilledCheckpoint,
+};
+use crate::coordinator::state::{Completion, RequestCheckpoint, RequestSpec};
 use crate::runtime::ModelBackend;
 
 /// Identifier of one submitted job (unique within one manager/server).
@@ -1151,6 +1154,63 @@ impl JobManager {
             }
         }
         JobHandle { id: JobId(id), table: self.table.clone(), cancel, early: None }
+    }
+
+    /// Resume a parked checkpoint under this manager — the receiving
+    /// side of cross-process failover: a router re-queues a dead
+    /// worker's spilled SPCK image here and the job completes
+    /// bitwise-identically to an uninterrupted run (DESIGN.md §13/§15).
+    ///
+    /// The checkpoint's id is rewritten to a **fresh local id** (ids
+    /// are per-process; the spilling process's id could collide with a
+    /// live local job). That is sound because the id never enters the
+    /// computation — the generation is a function of `cond`/`seed`/
+    /// `policy`/the checkpointed state, all of which travel in the
+    /// image. The caller learns the assigned id from the returned
+    /// handle. Admission applies the queue cap but not deadline
+    /// feasibility (the job was already accepted once; shedding it now
+    /// would break the fabric's no-lost-accepted-jobs contract).
+    pub fn submit_checkpoint(
+        &self,
+        ckpt: Box<RequestCheckpoint>,
+        return_latent: bool,
+    ) -> JobHandle {
+        let mut ckpt = ckpt;
+        let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+        self.counters.submitted.fetch_add(1, Ordering::SeqCst);
+        ckpt.spec.id = id;
+        let cancel = ckpt.spec.meta.cancel.clone();
+        if !self.table.try_insert(id, return_latent, cancel.clone(), self.max_queue) {
+            return self.rejected_handle(id, cancel, RejectReason::QueueFull);
+        }
+        // weigh the resume like a fresh submit of its policy family —
+        // conservative (mid-flight progress isn't discounted), and the
+        // per-step decay self-corrects within a few ticks
+        ckpt.spec.meta.cost_hint = self
+            .est_for_policy(ckpt.spec.policy.name())
+            .unwrap_or_else(|| f64::from_bits(self.est_service_ms.load(Ordering::SeqCst)));
+        if let Err(e) = self.router.submit_parked(Admission::Parked(ckpt)) {
+            let status = JobStatus::Aborted { error: format!("{e:#}") };
+            if self.table.finish(id, status, &self.counters) {
+                self.groups.note_terminal(id, false);
+            }
+        }
+        JobHandle { id: JobId(id), table: self.table.clone(), cancel, early: None }
+    }
+
+    /// Capture a checkpoint image of every in-flight request (see
+    /// [`ShardRouter::spill`]) — what a fabric worker ships to its
+    /// router at heartbeat boundaries so accepted jobs survive this
+    /// process dying.
+    pub fn spill(&self) -> Vec<SpilledCheckpoint> {
+        self.router.spill()
+    }
+
+    /// Expected remaining work per shard in µ-units (see
+    /// [`ShardRouter::work_us`]) — the weighted-routing gauge a fabric
+    /// worker reports in heartbeat replies.
+    pub fn shard_work_us(&self) -> Vec<u64> {
+        self.router.work_us()
     }
 
     /// A handle for a job shed at admission: the rejection is counted

@@ -20,5 +20,8 @@ pub use job::{
     TerminationCause,
 };
 pub use policy::{ErrorMetric, Plan, Policy, SpeCaConfig};
-pub use pool::{EngineShardPool, PoolConfig, PoolOutcome, RouterPolicy, ShardRouter, ShardStats};
+pub use pool::{
+    EngineShardPool, PoolConfig, PoolOutcome, RouterPolicy, ShardRouter, ShardStats,
+    SpilledCheckpoint,
+};
 pub use state::{Completion, ReqState, RequestCheckpoint, RequestSpec, RequestStats};

@@ -39,6 +39,17 @@ impl ErrorMetric {
         }
     }
 
+    /// Canonical wire label — the inverse of [`Self::parse`]:
+    /// `parse(m.label()) == Some(m)` for every metric.
+    pub fn label(&self) -> &'static str {
+        match self {
+            ErrorMetric::L2 => "l2",
+            ErrorMetric::L1 => "l1",
+            ErrorMetric::Linf => "linf",
+            ErrorMetric::Cosine => "cos",
+        }
+    }
+
     /// Relative error between prediction and ground truth, single pass.
     pub fn eval(&self, pred: &[f32], actual: &[f32]) -> f64 {
         const EPS: f64 = 1e-8;
@@ -211,6 +222,50 @@ impl Policy {
             Policy::SpeCa(c) => c.draft.name(),
             Policy::TaylorSeer { .. } => "taylor",
             _ => "-",
+        }
+    }
+
+    /// Canonical wire description — the inverse of
+    /// [`parse_policy`](crate::workload::parse_policy): parsing the
+    /// returned string (at the same model depth) reconstructs this
+    /// policy exactly. This is how a policy travels between fabric
+    /// processes: the SPCK checkpoint codec deliberately does not
+    /// serialize the policy (see
+    /// [`RequestCheckpoint`](crate::coordinator::state::RequestCheckpoint)),
+    /// so the router ships this string alongside the checkpoint bytes
+    /// and the receiving worker re-resolves it. Rust's shortest
+    /// round-trip `{}` float formatting keeps the f64 fields exact.
+    pub fn describe(&self) -> String {
+        match self {
+            Policy::Full => "full".to_string(),
+            Policy::StepReduction { keep } => format!("steps:keep={keep}"),
+            Policy::Fora { interval } => format!("fora:N={interval}"),
+            Policy::TeaCache { threshold } => format!("teacache:l={threshold}"),
+            Policy::TocaSim { interval, reuse_frac } => {
+                format!("toca:N={interval},R={reuse_frac}")
+            }
+            Policy::DucaSim { interval, reuse_frac } => {
+                format!("duca:N={interval},R={reuse_frac}")
+            }
+            Policy::TaylorSeer { interval, order } => {
+                format!("taylorseer:N={interval},O={order}")
+            }
+            Policy::SpeCa(c) => {
+                let mut s = format!(
+                    "speca:N={},O={},tau0={},beta={},layer={},draft={},metric={}",
+                    c.interval,
+                    c.order,
+                    c.tau0,
+                    c.beta,
+                    c.verify_layer,
+                    c.draft.name(),
+                    c.metric.label()
+                );
+                if let Some(b) = c.adaptive {
+                    s.push_str(&format!(",adaptive={b}"));
+                }
+                s
+            }
         }
     }
 

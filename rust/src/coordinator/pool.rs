@@ -178,12 +178,37 @@ impl Default for PoolConfig {
     }
 }
 
+/// One in-flight request's checkpoint image captured by a live spill
+/// sweep ([`ShardRouter::spill`]): the SPCK byte image plus the wire
+/// descriptions a remote process needs to re-attach what the codec
+/// deliberately leaves out — the policy travels as its canonical
+/// [`Policy::describe`](crate::coordinator::Policy::describe) string;
+/// job metadata is re-derived by the receiving manager.
+#[derive(Debug, Clone)]
+pub struct SpilledCheckpoint {
+    /// Request id in the spilling process (ids are per-process; a
+    /// resuming manager assigns its own).
+    pub id: u64,
+    /// Next serve step the checkpoint resumes at.
+    pub step: usize,
+    /// SPCK byte image ([`RequestCheckpoint::to_bytes`](crate::coordinator::RequestCheckpoint::to_bytes)).
+    pub bytes: Vec<u8>,
+    /// Canonical policy description
+    /// ([`Policy::describe`](crate::coordinator::Policy::describe)).
+    pub policy: String,
+}
+
 enum ShardMsg {
     Submit(RequestSpec),
     /// a unit migrated from an exiting peer, with its `(initial,
     /// remaining)` work-weight ledger entry (the sender reserved this
     /// shard's gauges before handing over, mirroring `submit`)
     Resume(Admission, (u64, u64)),
+    /// a live checkpoint-spill sweep: park, serialize and immediately
+    /// resume everything in flight, replying with the byte images
+    Spill {
+        reply: Sender<Vec<SpilledCheckpoint>>,
+    },
     /// a work-stealing probe: reply with one admission unit (and its
     /// weight ledger entry) or `None`; the victim releases its gauges
     /// for a donated unit before replying, the thief re-reserves them
@@ -379,6 +404,88 @@ impl ShardRouter {
                 }
             }
         }
+    }
+
+    /// Route a parked checkpoint into the pool — the receiving side of
+    /// cross-process failover (`submit_checkpoint` on the wire). Same
+    /// reserve → send → tombstone-re-check death-race protocol as
+    /// [`Self::submit`], but the unit lands as a resume, so the shard
+    /// counts it `migrated` and its engine `resumed`. The work-weight
+    /// ledger is rebuilt from the spec's cost hint ([`work_weight_us`]);
+    /// mid-flight progress made in the dead process is deliberately not
+    /// discounted — a conservative booking self-corrects via
+    /// `decay_weight` within a few ticks.
+    pub fn submit_parked(&self, adm: Admission) -> Result<usize> {
+        let mut adm = adm;
+        let weight = work_weight_us(adm.spec());
+        let n = self.txs.len();
+        let mut loads = self.loads();
+        let work = match self.policy {
+            RouterPolicy::LeastLoaded => self.work_us(),
+            RouterPolicy::RoundRobin => Vec::new(),
+        };
+        loop {
+            let mut shard =
+                self.policy.pick(&loads, &work, self.rr.fetch_add(1, Ordering::SeqCst));
+            if loads[shard] == usize::MAX {
+                match (0..n).map(|k| (shard + k) % n).find(|&s| loads[s] != usize::MAX) {
+                    Some(live) => shard = live,
+                    None => bail!("all shard workers are gone"),
+                }
+            }
+            if self.loads[shard].fetch_add(1, Ordering::SeqCst) >= DEAD {
+                self.loads[shard].fetch_sub(1, Ordering::SeqCst);
+                loads[shard] = usize::MAX;
+                continue;
+            }
+            self.work[shard].fetch_add(weight, Ordering::SeqCst);
+            match self.txs[shard].send(ShardMsg::Resume(adm, (weight, weight))) {
+                Ok(()) => {
+                    // post-send re-check closes the same death race as
+                    // `submit` (see there for the ordering argument)
+                    if self.loads[shard].load(Ordering::SeqCst) >= DEAD {
+                        bail!("shard {shard} worker died during submit");
+                    }
+                    return Ok(shard);
+                }
+                Err(unsent) => {
+                    let _ = self.loads[shard].fetch_update(
+                        Ordering::SeqCst,
+                        Ordering::SeqCst,
+                        |v| if v >= DEAD { None } else { Some(v - 1) },
+                    );
+                    self.work[shard].fetch_sub(weight, Ordering::SeqCst);
+                    loads[shard] = usize::MAX;
+                    let ShardMsg::Resume(a, _) = unsent.0 else { unreachable!() };
+                    adm = a;
+                }
+            }
+        }
+    }
+
+    /// Capture a checkpoint image of every in-flight request across
+    /// live shards (the fabric's crash-durability sweep): each shard
+    /// parks, serializes and immediately resumes its requests between
+    /// ticks, so the sweep is bitwise-invisible to results. Queued
+    /// fresh units are not captured — they have no state worth shipping
+    /// and a from-scratch resubmit recreates them exactly. All probes
+    /// go out before any reply is awaited, mirroring [`Self::stats`].
+    pub fn spill(&self) -> Vec<SpilledCheckpoint> {
+        let probes: Vec<_> = self
+            .txs
+            .iter()
+            .filter_map(|tx| {
+                let (rtx, rrx) = channel();
+                tx.send(ShardMsg::Spill { reply: rtx }).ok().map(|_| rrx)
+            })
+            .collect();
+        let mut out = Vec::new();
+        for rrx in probes {
+            if let Ok(mut s) = rrx.recv_timeout(Duration::from_secs(10)) {
+                out.append(&mut s);
+            }
+        }
+        out
     }
 
     /// Merged counter snapshot across all live shards. All probes go out
@@ -728,6 +835,11 @@ fn ingest_remaining(
                 // exiting shards donate nothing — the thief moves on
                 let _ = reply.send(None);
             }
+            ShardMsg::Spill { reply } => {
+                // an exiting shard has nothing durable to offer — its
+                // own evacuation/abandon path settles every request
+                let _ = reply.send(Vec::new());
+            }
             ShardMsg::Stats(reply) => {
                 let _ = reply.send(snapshot(engine, ctx, completed));
             }
@@ -874,6 +986,45 @@ fn evacuate(
     }
 }
 
+/// Live checkpoint-spill sweep (fabric crash-durability): park every
+/// in-flight request at its step boundary, serialize the parked images,
+/// then resume everything straight back into this engine. Resume is
+/// bitwise-identical (DESIGN.md §13), so the sweep never perturbs
+/// results — it only costs the park/resume bookkeeping (the engine's
+/// `parked`/`resumed` counters advance once per resident request).
+/// Queued fresh units are re-queued untouched and not captured; a
+/// request the park finds at its final boundary retires as a completion
+/// here (live path, so gauges release normally).
+fn spill_inflight(
+    engine: &mut Engine<'_>,
+    ctx: &mut ShardCtx,
+    completed: &mut u64,
+) -> Vec<SpilledCheckpoint> {
+    let units = engine.park_all();
+    for c in engine.drain_completions() {
+        *completed += 1;
+        ctx.load.fetch_sub(1, Ordering::SeqCst);
+        ctx.work.fetch_sub(
+            ctx.weights.remove(&c.id).map_or(NOMINAL_WORK_US, |(_, rem)| rem),
+            Ordering::SeqCst,
+        );
+        let _ = ctx.events.send(JobEvent::Completed(Box::new(c)));
+    }
+    let mut out = Vec::new();
+    for adm in units {
+        if let Admission::Parked(ckpt) = &adm {
+            out.push(SpilledCheckpoint {
+                id: ckpt.spec.id,
+                step: ckpt.step,
+                bytes: ckpt.to_bytes(),
+                policy: ckpt.spec.policy.describe(),
+            });
+        }
+        engine.submit_admission(adm);
+    }
+    out
+}
+
 /// The victim side of work-stealing: donate one admission unit,
 /// releasing its slice of this shard's gauges before the reply (the
 /// thief re-reserves under its own). A draining shard donates nothing —
@@ -1000,6 +1151,16 @@ fn shard_worker(
                 }
                 ShardMsg::Steal { reply } => {
                     let _ = reply.send(donate(&mut engine, &mut ctx, draining));
+                }
+                ShardMsg::Spill { reply } => {
+                    // a draining shard's units are already on their way
+                    // to peers (or being served out) — nothing to spill
+                    let spills = if draining {
+                        Vec::new()
+                    } else {
+                        spill_inflight(&mut engine, &mut ctx, &mut completed)
+                    };
+                    let _ = reply.send(spills);
                 }
                 ShardMsg::Stats(reply) => {
                     let _ = reply.send(snapshot(&engine, &ctx, completed));

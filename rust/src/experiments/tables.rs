@@ -24,6 +24,7 @@ use anyhow::{bail, Result};
 
 use crate::cache::{DraftKind, DraftRegistry, TapCache};
 use crate::coordinator::policy::{ErrorMetric, Policy};
+use crate::fabric;
 use crate::metrics::pca::pca2;
 use crate::metrics::stats::pearson;
 use crate::runtime::resolve::{self, BackendRequest};
@@ -632,6 +633,9 @@ fn run_scripted(
 /// the rate's window, so preemption and work-stealing activity under
 /// overload is visible in the same table.
 fn serve_openloop(args: &Args) -> Result<()> {
+    if args.opt("workers").is_some() {
+        return serve_openloop_fabric(args);
+    }
     with_model(&args.str("model", "dit-sim"), args, |model| {
         let Some(shared) = model.shared() else {
             bail!("serve-openloop needs a Send + Sync backend (use --backend native)");
@@ -800,6 +804,158 @@ fn serve_openloop(args: &Args) -> Result<()> {
             &csv,
         )?;
         println!("wrote results/openloop.csv");
+        Ok(())
+    })
+}
+
+/// `bench serve-openloop --workers N` (EXPERIMENTS.md §Fabric): spawn
+/// the whole fabric locally — a router plus `w` worker pools joined
+/// over loopback TCP — for each worker count `w` in `1..=N`, calibrate
+/// per-request service time through the router, drive the same
+/// open-loop Poisson load at multiples of the fabric's nominal capacity
+/// (`w × shards / service`), and record capacity scaling to
+/// `results/fabric.csv`. The failover counters ride along in every row:
+/// a healthy sweep keeps them at zero, so a nonzero value in the CSV is
+/// itself a finding. Each worker count gets a fresh fabric (ports
+/// chosen by the OS), torn down by a router `shutdown` + drained worker
+/// joins before the next one starts.
+fn serve_openloop_fabric(args: &Args) -> Result<()> {
+    with_model(&args.str("model", "dit-sim"), args, |model| {
+        if model.shared().is_none() {
+            bail!("serve-openloop --workers needs a Send + Sync backend (use --backend native)");
+        }
+        let quick = args.bool("quick");
+        let max_workers = args.usize("workers", 2).max(1);
+        let shards = args.usize("shards", 1).max(1);
+        let opts = RunOpts::from_args(args, 0)?;
+        let policy = args.str("policy", "speca:N=5,O=2,tau0=0.3,beta=0.05");
+        let n = sample_count(args, 48);
+        let mults: Vec<f64> = if quick { vec![2.0] } else { vec![0.5, 2.0] };
+        println!(
+            "== serve-openloop fabric: 1..={max_workers} workers × {shards} shard(s), \
+             n={n} per rate =="
+        );
+        println!(
+            "{:<8} {:<8} {:>9} {:>9} {:>6} {:>6} {:>6} {:>9} {:>9} {:>9} {:>5} {:>5}",
+            "workers", "load", "offered", "achieved", "done", "rej", "abrt", "p50 ms", "p99 ms",
+            "rej-rate", "fail", "requ"
+        );
+        let mut csv = Vec::new();
+        for w in 1..=max_workers {
+            let router = fabric::spawn_router(&fabric::RouterConfig {
+                addr: "127.0.0.1:0".into(),
+                workers_addr: "127.0.0.1:0".into(),
+                heartbeat_ms: 50,
+                ..fabric::RouterConfig::default()
+            })?;
+            let addr = router.addr().to_string();
+            let mut workers = Vec::new();
+            for _ in 0..w {
+                let shared = model.shared().expect("checked above");
+                let cfg = fabric::WorkerConfig {
+                    join: router.workers_addr().to_string(),
+                    addr: "127.0.0.1:0".into(),
+                    max_queue: args.usize("max-queue", 256),
+                    shards,
+                    router: opts.router,
+                    default_draft: opts.draft.clone(),
+                };
+                workers.push(fabric::spawn_worker(shared, opts.engine_config(), &cfg)?);
+            }
+            for _ in 0..400 {
+                if router.workers_live() >= w {
+                    break;
+                }
+                thread::sleep(Duration::from_millis(5));
+            }
+            // all fabric traffic runs inside this closure so teardown
+            // below executes on every exit path
+            let drive = |csv: &mut Vec<String>| -> Result<()> {
+                if router.workers_live() < w {
+                    bail!("only {}/{w} workers joined the fabric", router.workers_live());
+                }
+                let mut stream = TcpStream::connect(&addr)?;
+                let mut reader = BufReader::new(stream.try_clone()?);
+                client::hello_exchange(&mut stream, &mut reader)?;
+                let calib = if quick { 2u64 } else { 4 };
+                let t0 = Instant::now();
+                for i in 0..calib {
+                    client::generate_once(&mut stream, &mut reader, 0, 9_000 + i, &policy)?;
+                }
+                let service_s = t0.elapsed().as_secs_f64() / calib as f64;
+                let capacity = (w * shards) as f64 / service_s.max(1e-6);
+                for m in &mults {
+                    let cfg = client::OpenLoopConfig {
+                        addr: addr.clone(),
+                        rate: capacity * m,
+                        requests: n,
+                        policy: policy.clone(),
+                        num_classes: 8,
+                        seed: args.u64("seed", 0) + w as u64 * 10_000 + (m * 1000.0) as u64,
+                        deadline_ms: None,
+                        priority: None,
+                        waiters: 8,
+                    };
+                    let mut r = client::run_open_loop(&cfg)?;
+                    let p50 = r.latency.percentile(0.5);
+                    let p99 = r.latency.percentile(0.99);
+                    println!(
+                        "{:<8} {:<8} {:>9.2} {:>9.2} {:>6} {:>6} {:>6} {:>9.1} {:>9.1} \
+                         {:>9.3} {:>5} {:>5}",
+                        w,
+                        format!("{m}x"),
+                        r.offered_rps,
+                        r.achieved_rps,
+                        r.completed,
+                        r.rejected,
+                        r.aborted,
+                        p50,
+                        p99,
+                        r.reject_rate(),
+                        router.failovers(),
+                        router.requeued_jobs()
+                    );
+                    csv.push(format!(
+                        "{w},{shards},{m},{:.4},{:.4},{},{},{},{},{p50:.3},{p99:.3},{:.5},{},{}",
+                        r.offered_rps,
+                        r.achieved_rps,
+                        r.submitted,
+                        r.completed,
+                        r.rejected,
+                        r.aborted,
+                        r.reject_rate(),
+                        router.failovers(),
+                        router.requeued_jobs()
+                    ));
+                }
+                // the metrics plane must stay parseable under load
+                let text = client::metrics(&addr)?;
+                if !text.contains("# TYPE speca_workers_live gauge") {
+                    bail!("router metrics text is missing the speca_workers_live family");
+                }
+                Ok(())
+            };
+            let outcome = drive(&mut csv);
+            client::shutdown(&addr);
+            let routed = router.join();
+            let mut served = 0u64;
+            for wk in workers {
+                match wk.join() {
+                    Ok(c) => served += c,
+                    Err(e) => eprintln!("speca: fabric worker teardown: {e:#}"),
+                }
+            }
+            routed?;
+            outcome?;
+            println!("   fabric({w}): drained cleanly, {served} jobs served across workers");
+        }
+        write_csv(
+            &results_path("fabric.csv"),
+            "workers,shards_per_worker,load_mult,offered_rps,achieved_rps,submitted,completed,\
+             rejected,aborted,p50_ms,p99_ms,reject_rate,failovers,requeued_jobs",
+            &csv,
+        )?;
+        println!("wrote results/fabric.csv");
         Ok(())
     })
 }

@@ -1,0 +1,155 @@
+//! Prometheus-style text exposition for `op:"metrics"` (DESIGN.md §15).
+//!
+//! Both serving surfaces export the same families: a worker (or any
+//! single-process server) renders its own [`JobManager`] gauges with
+//! [`render_manager_metrics`]; the router renders fabric-wide state —
+//! per-worker shard gauges plus the fabric counters — in
+//! [`router`](crate::fabric::router). The reply travels as one JSON
+//! line `{"ok":true,"metrics":"..."}` whose `metrics` string is
+//! standard exposition text (`# HELP` / `# TYPE` / samples), so any
+//! Prometheus parser can scrape it once unwrapped.
+
+use crate::coordinator::job::JobManager;
+use crate::util::alloc;
+
+/// Incremental Prometheus exposition-text builder: `# HELP`/`# TYPE`
+/// headers once per family, then one sample line per call.
+#[derive(Default)]
+pub struct PromText {
+    out: String,
+}
+
+impl PromText {
+    /// Empty document.
+    pub fn new() -> PromText {
+        PromText::default()
+    }
+
+    /// Start a metric family (`kind` is `gauge` or `counter`).
+    pub fn family(&mut self, name: &str, kind: &str, help: &str) -> &mut Self {
+        self.out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {kind}\n"));
+        self
+    }
+
+    /// Append one unlabelled sample of the current family.
+    pub fn sample(&mut self, name: &str, value: f64) -> &mut Self {
+        self.out.push_str(&format!("{name} {value}\n"));
+        self
+    }
+
+    /// Append one labelled sample (`labels` are `key`/`value` pairs;
+    /// values here are always numeric indices, so no escaping needed).
+    pub fn labelled(&mut self, name: &str, labels: &[(&str, String)], value: f64) -> &mut Self {
+        let body =
+            labels.iter().map(|(k, v)| format!("{k}=\"{v}\"")).collect::<Vec<_>>().join(",");
+        self.out.push_str(&format!("{name}{{{body}}} {value}\n"));
+        self
+    }
+
+    /// Finish: the exposition document.
+    pub fn finish(self) -> String {
+        self.out
+    }
+}
+
+/// Render one process's serving metrics: per-shard in-flight and
+/// expected-work gauges (dead shards report `_up 0` and drop their
+/// gauge samples, mirroring the `null` convention of `op:"stats"`),
+/// job lifecycle counters, checkpoint counters
+/// (`parked`/`resumed`/`stolen`/`migrated`), draft acceptance (the
+/// paper's α and γ), the service-time EWMA, and the allocator probes
+/// (zero unless the binary installs the counting allocator).
+pub fn render_manager_metrics(manager: &JobManager) -> String {
+    let stats = manager.stats();
+    let counts = manager.counts();
+    let loads = manager.shard_loads();
+    let work = manager.shard_work_us();
+    let mut p = PromText::new();
+
+    p.family("speca_shard_up", "gauge", "1 if the shard worker is alive");
+    for (i, l) in loads.iter().enumerate() {
+        let up = if *l == usize::MAX { 0.0 } else { 1.0 };
+        p.labelled("speca_shard_up", &[("shard", i.to_string())], up);
+    }
+    p.family("speca_shard_inflight", "gauge", "requests admitted or queued on the shard");
+    for (i, l) in loads.iter().enumerate() {
+        if *l != usize::MAX {
+            p.labelled("speca_shard_inflight", &[("shard", i.to_string())], *l as f64);
+        }
+    }
+    p.family(
+        "speca_shard_work_us",
+        "gauge",
+        "EWMA-decayed expected remaining work on the shard (microsecond units)",
+    );
+    for (i, (l, w)) in loads.iter().zip(&work).enumerate() {
+        if *l != usize::MAX {
+            p.labelled("speca_shard_work_us", &[("shard", i.to_string())], *w as f64);
+        }
+    }
+
+    p.family("speca_jobs_submitted_total", "counter", "jobs submitted");
+    p.sample("speca_jobs_submitted_total", counts.submitted as f64);
+    p.family("speca_jobs_completed_total", "counter", "jobs completed");
+    p.sample("speca_jobs_completed_total", counts.completed as f64);
+    p.family("speca_jobs_rejected_total", "counter", "jobs shed by admission or deadline");
+    p.sample("speca_jobs_rejected_total", counts.rejected as f64);
+    p.family("speca_jobs_cancelled_total", "counter", "jobs dropped by cancel tokens");
+    p.sample("speca_jobs_cancelled_total", counts.cancelled as f64);
+    p.family("speca_jobs_aborted_total", "counter", "jobs abandoned by dead shards");
+    p.sample("speca_jobs_aborted_total", counts.aborted as f64);
+    p.family("speca_jobs_live", "gauge", "jobs currently in a non-terminal state");
+    p.sample("speca_jobs_live", manager.live() as f64);
+
+    p.family("speca_checkpoints_parked_total", "counter", "checkpoints parked at step boundaries");
+    p.sample("speca_checkpoints_parked_total", stats.parked as f64);
+    p.family("speca_checkpoints_resumed_total", "counter", "checkpoints resumed into a slot");
+    p.sample("speca_checkpoints_resumed_total", stats.resumed as f64);
+    p.family("speca_units_stolen_total", "counter", "units pulled from loaded peers while idle");
+    p.sample("speca_units_stolen_total", stats.stolen as f64);
+    p.family("speca_units_migrated_total", "counter", "units received from dying peers");
+    p.sample("speca_units_migrated_total", stats.migrated as f64);
+
+    p.family("speca_engine_ticks_total", "counter", "engine ticks executed");
+    p.sample("speca_engine_ticks_total", stats.ticks as f64);
+    p.family("speca_flops_total", "counter", "booked FLOPs across all requests");
+    p.sample("speca_flops_total", stats.flops.total() as f64);
+    p.family("speca_spec_steps_total", "counter", "steps served speculatively");
+    p.sample("speca_spec_steps_total", stats.flops.n_spec_steps as f64);
+    p.family("speca_spec_rejects_total", "counter", "speculative steps rejected by verification");
+    p.sample("speca_spec_rejects_total", stats.flops.n_rejects as f64);
+    p.family("speca_draft_alpha", "gauge", "fraction of steps served speculatively (paper alpha)");
+    p.sample("speca_draft_alpha", stats.flops.acceptance_rate());
+    p.family("speca_draft_gamma", "gauge", "verify-to-full cost ratio (paper gamma)");
+    p.sample("speca_draft_gamma", stats.flops.gamma());
+
+    p.family("speca_est_service_ms", "gauge", "EWMA of completed-job latency in ms");
+    p.sample("speca_est_service_ms", manager.est_service_ms());
+
+    p.family("speca_alloc_calls_total", "counter", "allocator calls (0 without counting allocator)");
+    p.sample("speca_alloc_calls_total", alloc::allocations() as f64);
+    p.family("speca_dealloc_calls_total", "counter", "deallocations (0 without counting allocator)");
+    p.sample("speca_dealloc_calls_total", alloc::deallocations() as f64);
+    p.family("speca_alloc_bytes_total", "counter", "bytes allocated (0 without counting allocator)");
+    p.sample("speca_alloc_bytes_total", alloc::allocated_bytes() as f64);
+
+    p.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exposition_text_shape() {
+        let mut p = PromText::new();
+        p.family("x_total", "counter", "help text");
+        p.sample("x_total", 3.0);
+        p.labelled("x_total", &[("shard", "1".to_string())], 4.5);
+        let text = p.finish();
+        assert!(text.contains("# HELP x_total help text\n"));
+        assert!(text.contains("# TYPE x_total counter\n"));
+        assert!(text.contains("\nx_total 3\n"));
+        assert!(text.contains("x_total{shard=\"1\"} 4.5\n"));
+    }
+}

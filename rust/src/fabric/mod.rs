@@ -1,0 +1,186 @@
+//! Multi-process serving fabric: one front-door router process fanning
+//! jobs out over TCP to N worker processes (DESIGN.md §15, ROADMAP
+//! item 3).
+//!
+//! The shard pool scales to one process's cores; the fabric scales past
+//! one process (and, with real addresses, past one box) while keeping
+//! the client-facing surface exactly the wire protocol v2 the
+//! single-process server speaks:
+//!
+//! * [`router`] — the front door: speaks protocol v2 to clients on one
+//!   port, maintains per-worker sessions (handshake, heartbeats,
+//!   weighted routing on the workers' EWMA work gauges) on another, and
+//!   re-queues a dead worker's in-flight jobs to live peers from their
+//!   spilled SPCK checkpoints so accepted jobs complete instead of
+//!   aborting.
+//! * [`worker`] — one of today's
+//!   [`EngineShardPool`](crate::coordinator::EngineShardPool) processes
+//!   joined to a router: executes jobs, answers heartbeats with its
+//!   shard work
+//!   gauges, and ships checkpoint images of everything in flight at
+//!   each heartbeat boundary (the spill contract that makes failover
+//!   lossless).
+//! * [`metrics`] — the Prometheus-style text rendering behind
+//!   `op:"metrics"` on both router and workers.
+//!
+//! ## Fabric session protocol (JSON lines, one object per line)
+//!
+//! A worker dials the router's fabric port and leads with a hello; the
+//! router acks with the worker's session id. Every other line is tagged
+//! by a `"fabric"` key (never `"op"`, so a fabric line can never be
+//! mistaken for a client op and vice versa):
+//!
+//! ```text
+//! worker → {"fabric":"hello","magic":"SPFB","version":1,"shards":2}
+//! router → {"ok":true,"fabric":"hello","magic":"SPFB","version":1,"worker":0}
+//!
+//! router → {"fabric":"job","id":7,"req":{...client submit body, seed pinned...}}
+//! router → {"fabric":"resume","id":7,"policy":"speca:N=5,...","step":12,
+//!           "bytes":"<hex SPCK image>","return_latent":false}
+//! router → {"fabric":"cancel","id":7}
+//! router → {"fabric":"ping","seq":41}
+//! router → {"fabric":"bye"}
+//!
+//! worker → {"fabric":"pong","seq":41,"loads":[1,0],"work_us":[1800,0],
+//!           "ckpts":[{"id":7,"step":12,"policy":"...","bytes":"..."}],
+//!           "stats":{...shard counters...},"completed":9}
+//! worker → {"fabric":"done","id":7,"reply":{...terminal v2 status...}}
+//! worker → {"fabric":"error","error":"unknown fabric op 'x'"}
+//! ```
+//!
+//! A peer that opens the fabric port without the hello (a v1 client, a
+//! v2 client, a mistyped port) gets a structured `{"ok":false,...}`
+//! error naming the expected handshake, then the connection closes — no
+//! hang, no silent drop. Version skew is rejected the same way. Client
+//! connections have the mirror-image guard: `op:"hello"` on any serving
+//! port (router or worker) answers with the protocol name + version so
+//! load generators can fail fast on a mismatched peer.
+//!
+//! Checkpoints travel as hex SPCK images plus the policy's canonical
+//! [`Policy::describe`](crate::coordinator::Policy::describe) string —
+//! the codec deliberately serializes neither policy nor job metadata,
+//! and the receiving worker re-resolves both from the wire description
+//! (`RequestCheckpoint::from_bytes` + `parse_policy`). Resume is
+//! bitwise-identical, so a failed-over job's result is exactly the
+//! result the dead worker would have produced.
+
+pub mod metrics;
+pub mod router;
+pub mod worker;
+
+pub use router::{spawn_router, RouterConfig, RouterHandle};
+pub use worker::{run_worker, spawn_worker, WorkerConfig, WorkerHandle};
+
+use crate::util::json::Json;
+
+/// Fabric handshake magic (the first line of every worker session).
+pub const FABRIC_MAGIC: &str = "SPFB";
+/// Fabric session protocol version.
+pub const FABRIC_VERSION: u64 = 1;
+/// Client-facing wire protocol name (`op:"hello"` exchange).
+pub const WIRE_PROTO: &str = "speca";
+/// Client-facing wire protocol version (the v2 job-lifecycle surface).
+pub const WIRE_VERSION: u64 = 2;
+
+/// Lowercase hex encoding of a byte image (SPCK checkpoints on the
+/// fabric wire; no external base64 dependency).
+pub fn hex_encode(bytes: &[u8]) -> String {
+    let mut s = String::with_capacity(bytes.len() * 2);
+    for b in bytes {
+        s.push(char::from_digit((b >> 4) as u32, 16).unwrap());
+        s.push(char::from_digit((b & 0xf) as u32, 16).unwrap());
+    }
+    s
+}
+
+/// Inverse of [`hex_encode`]; errors on odd length or a non-hex digit.
+pub fn hex_decode(s: &str) -> Result<Vec<u8>, String> {
+    let raw = s.as_bytes();
+    if raw.len() % 2 != 0 {
+        return Err(format!("hex image has odd length {}", raw.len()));
+    }
+    let digit = |c: u8| -> Result<u8, String> {
+        (c as char)
+            .to_digit(16)
+            .map(|d| d as u8)
+            .ok_or_else(|| format!("hex image has non-hex byte 0x{c:02x}"))
+    };
+    let mut out = Vec::with_capacity(raw.len() / 2);
+    for pair in raw.chunks_exact(2) {
+        out.push((digit(pair[0])? << 4) | digit(pair[1])?);
+    }
+    Ok(out)
+}
+
+/// The worker side of the fabric handshake line.
+pub(crate) fn worker_hello(shards: usize) -> String {
+    Json::obj(vec![
+        ("fabric", Json::str("hello")),
+        ("magic", Json::str(FABRIC_MAGIC)),
+        ("version", Json::Num(FABRIC_VERSION as f64)),
+        ("shards", Json::Num(shards as f64)),
+    ])
+    .dump()
+}
+
+/// Validate a fabric hello line; returns the worker's shard count. The
+/// error string is the structured reply body for rejected peers — it
+/// names what the port expects, so a v1/v2 client that dialed the
+/// fabric port by mistake learns why instead of hanging.
+pub(crate) fn check_worker_hello(line: &str) -> Result<usize, String> {
+    let j = Json::parse(line).map_err(|_| {
+        format!(
+            "fabric port expects a {FABRIC_MAGIC} hello as the first line \
+             (got a non-JSON line); this is not a client serving port"
+        )
+    })?;
+    let Some(kind) = j.get("fabric").and_then(|f| f.as_str()) else {
+        return Err(format!(
+            "fabric port expects a {FABRIC_MAGIC} hello as the first line \
+             (got a client op?); connect clients to the router's serving \
+             address instead"
+        ));
+    };
+    if kind != "hello" {
+        return Err(format!("fabric session must start with 'hello', got '{kind}'"));
+    }
+    let magic = j.get("magic").and_then(|m| m.as_str()).unwrap_or("");
+    if magic != FABRIC_MAGIC {
+        return Err(format!("bad fabric magic '{magic}' (expected '{FABRIC_MAGIC}')"));
+    }
+    let version = j.get("version").and_then(|v| v.as_u64()).unwrap_or(0);
+    if version != FABRIC_VERSION {
+        return Err(format!(
+            "unsupported fabric version {version} (this router speaks {FABRIC_VERSION})"
+        ));
+    }
+    Ok(j.get("shards").and_then(|s| s.as_usize()).unwrap_or(1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hex_round_trips() {
+        let img: Vec<u8> = (0u8..=255).collect();
+        assert_eq!(hex_decode(&hex_encode(&img)).unwrap(), img);
+        assert_eq!(hex_encode(&[]), "");
+        assert_eq!(hex_decode("").unwrap(), Vec::<u8>::new());
+        assert!(hex_decode("abc").is_err(), "odd length");
+        assert!(hex_decode("zz").is_err(), "non-hex digit");
+    }
+
+    #[test]
+    fn handshake_accepts_itself_and_rejects_strangers() {
+        assert_eq!(check_worker_hello(&worker_hello(4)).unwrap(), 4);
+        // a v2 client op on the fabric port is a structured error
+        let err = check_worker_hello(r#"{"op":"submit","cond":1}"#).unwrap_err();
+        assert!(err.contains("SPFB"), "{err}");
+        // version skew is named explicitly
+        let skew = r#"{"fabric":"hello","magic":"SPFB","version":9}"#;
+        let err = check_worker_hello(skew).unwrap_err();
+        assert!(err.contains("version 9"), "{err}");
+        assert!(check_worker_hello("not json").is_err());
+    }
+}

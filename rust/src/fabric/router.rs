@@ -1,0 +1,999 @@
+//! The router side of the serving fabric: the front door clients dial.
+//!
+//! One process, two listeners. The **client port** speaks wire protocol
+//! v2 exactly like a single-process server — submit/poll/wait/cancel,
+//! the v1 `generate` shim, `stats`, `metrics`, `hello`, `shutdown` —
+//! so existing clients and load generators work unchanged against a
+//! fabric. The **fabric port** speaks the SPFB session protocol to
+//! workers (see [`crate::fabric`] for the line grammar).
+//!
+//! Routing is work-weighted: each heartbeat reply carries the worker's
+//! per-shard EWMA work gauges (the PR 5 cost model, summed), and a
+//! submit goes to the live worker with the least expected work per
+//! shard, plus a small optimistic booking per un-acknowledged
+//! assignment so a burst between heartbeats doesn't pile onto one
+//! worker.
+//!
+//! Failover (the no-lost-accepted-jobs contract, DESIGN.md §15): when
+//! a worker's connection drops or it misses `miss_limit` consecutive
+//! heartbeats, every non-terminal job it owned is re-queued to live
+//! peers in ascending fabric-id order — from its last spilled SPCK
+//! checkpoint when one exists (resumed bitwise-identically
+//! mid-flight), else re-submitted from scratch under the same pinned
+//! seed (identical result, recomputed). Only when no live peer remains
+//! does a job abort, with a structured error.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::fabric::metrics::PromText;
+use crate::fabric::{check_worker_hello, FABRIC_MAGIC, FABRIC_VERSION, WIRE_PROTO, WIRE_VERSION};
+use crate::server::error_json;
+use crate::util::alloc;
+use crate::util::json::Json;
+
+/// Optimistic per-assignment booking (µ-units) counted against a worker
+/// until its next heartbeat reply refreshes the real gauges — one
+/// nominal request, matching the pool's unit weight.
+const ROUTER_BOOK_US: u64 = 1000;
+
+/// Fabric router configuration.
+pub struct RouterConfig {
+    /// Client serving address (wire protocol v2; port 0 picks a port).
+    pub addr: String,
+    /// Fabric address workers join (`--workers-addr`).
+    pub workers_addr: String,
+    /// Maximum fabric jobs in a non-terminal state.
+    pub max_queue: usize,
+    /// Heartbeat cadence in milliseconds (clamped to ≥ 10).
+    pub heartbeat_ms: u64,
+    /// Consecutive unanswered heartbeats before a worker is declared
+    /// dead and its jobs fail over (clamped to ≥ 1).
+    pub miss_limit: u32,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig {
+            addr: "127.0.0.1:7433".into(),
+            workers_addr: "127.0.0.1:7434".into(),
+            max_queue: 4096,
+            heartbeat_ms: 250,
+            miss_limit: 3,
+        }
+    }
+}
+
+/// One worker session (index-stable: dead workers keep their slot and
+/// report as `null`, mirroring the pool's dead-shard convention).
+struct WorkerSession {
+    alive: bool,
+    writer: Arc<Mutex<TcpStream>>,
+    shards: usize,
+    /// Summed per-shard expected-work gauge from the last pong.
+    work_us: u64,
+    /// Summed per-shard in-flight count from the last pong.
+    inflight: u64,
+    /// Optimistic booking since the last pong.
+    booked_us: u64,
+    /// Consecutive heartbeats without a reply.
+    missed: u32,
+    /// A ping is outstanding (cleared by any pong).
+    outstanding: bool,
+    /// Last pong's `op:"stats"` body (the per-worker breakdown).
+    stats: Json,
+    /// Jobs completed on the worker (its own counter, from pongs).
+    completed: u64,
+}
+
+/// A spilled checkpoint held for failover.
+struct Ckpt {
+    policy: String,
+    step: u64,
+    bytes: String,
+}
+
+/// One accepted fabric job.
+struct FabricJob {
+    owner: usize,
+    /// The submit body (seed pinned) — enough to re-run from scratch.
+    req: Json,
+    return_latent: bool,
+    /// Latest spilled image, if any heartbeat captured one.
+    ckpt: Option<Ckpt>,
+    /// Terminal reply line (`job`/`id` rewritten to the fabric id);
+    /// `None` while in flight.
+    reply: Option<String>,
+    cancelled: bool,
+}
+
+struct FabricState {
+    workers: Vec<WorkerSession>,
+    jobs: HashMap<u64, FabricJob>,
+    live_jobs: usize,
+    seq: u64,
+}
+
+/// Shared router state: sessions, the job ledger, and the fabric
+/// counters exported by `op:"metrics"`.
+struct Fabric {
+    state: Mutex<FabricState>,
+    cv: Condvar,
+    accepting: AtomicBool,
+    running: AtomicBool,
+    next_fid: AtomicU64,
+    max_queue: usize,
+    submitted: AtomicU64,
+    completed: AtomicU64,
+    rejected: AtomicU64,
+    cancelled: AtomicU64,
+    aborted: AtomicU64,
+    heartbeats_missed: AtomicU64,
+    failovers: AtomicU64,
+    requeued: AtomicU64,
+    shutdown: Mutex<Sender<()>>,
+}
+
+fn write_line(writer: &Mutex<TcpStream>, line: &str) -> bool {
+    let mut w = writer.lock().unwrap();
+    w.write_all(line.as_bytes()).is_ok() && w.write_all(b"\n").is_ok()
+}
+
+fn job_line(fid: u64, job: &FabricJob) -> String {
+    Json::obj(vec![
+        ("fabric", Json::str("job")),
+        ("id", Json::Num(fid as f64)),
+        ("req", job.req.clone()),
+    ])
+    .dump()
+}
+
+fn resume_line(fid: u64, job: &FabricJob, c: &Ckpt) -> String {
+    Json::obj(vec![
+        ("fabric", Json::str("resume")),
+        ("id", Json::Num(fid as f64)),
+        ("policy", Json::str(&c.policy)),
+        ("step", Json::Num(c.step as f64)),
+        ("bytes", Json::str(&c.bytes)),
+        ("return_latent", Json::Bool(job.return_latent)),
+    ])
+    .dump()
+}
+
+/// Least expected work per shard among live workers.
+fn pick_worker(g: &FabricState) -> Option<usize> {
+    g.workers
+        .iter()
+        .enumerate()
+        .filter(|(_, s)| s.alive)
+        .min_by(|(_, a), (_, b)| {
+            let wa = (a.work_us + a.booked_us) as f64 / a.shards.max(1) as f64;
+            let wb = (b.work_us + b.booked_us) as f64 / b.shards.max(1) as f64;
+            wa.total_cmp(&wb)
+        })
+        .map(|(i, _)| i)
+}
+
+impl Fabric {
+    /// Bump the job counter matching a terminal reply's `state` label.
+    fn classify(&self, label: &str) {
+        match label {
+            "completed" => &self.completed,
+            "rejected" => &self.rejected,
+            "cancelled" => &self.cancelled,
+            _ => &self.aborted,
+        }
+        .fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// Record a job's terminal reply (idempotent — the first terminal
+    /// verdict wins; a stale duplicate from a slow ex-owner is
+    /// dropped), rewriting the id fields to the fabric id and waking
+    /// blocked waits. Caller holds the state lock.
+    fn finish_job(&self, g: &mut FabricState, fid: u64, mut reply: Json) {
+        let Some(job) = g.jobs.get_mut(&fid) else { return };
+        if job.reply.is_some() {
+            return;
+        }
+        if let Json::Obj(m) = &mut reply {
+            m.insert("job".into(), Json::Num(fid as f64));
+            if m.contains_key("id") {
+                m.insert("id".into(), Json::Num(fid as f64));
+            }
+        }
+        let label = reply.get("state").and_then(|s| s.as_str()).unwrap_or("aborted").to_string();
+        self.classify(&label);
+        job.reply = Some(reply.dump());
+        g.live_jobs -= 1;
+        self.cv.notify_all();
+    }
+
+    /// Declare worker `idx` dead and fail its jobs over: every
+    /// non-terminal job it owned is re-queued to a live peer in
+    /// ascending fabric-id order — preferring its spilled checkpoint,
+    /// else a from-scratch re-submit of the pinned-seed body — and
+    /// aborts only when no live peer remains. Idempotent; a no-op
+    /// during teardown (a drained worker leaving is not a failure).
+    fn mark_dead(self: &Arc<Self>, idx: usize) {
+        let mut sends = Vec::new();
+        {
+            let mut g = self.state.lock().unwrap();
+            let Some(s) = g.workers.get_mut(idx) else { return };
+            if !s.alive {
+                return;
+            }
+            s.alive = false;
+            // silence the session so no late line races the takeover
+            let dead_writer = s.writer.clone();
+            let _ = dead_writer.lock().unwrap().shutdown(Shutdown::Both);
+            if !self.running.load(Ordering::SeqCst) {
+                return;
+            }
+            self.failovers.fetch_add(1, Ordering::SeqCst);
+            let mut orphans: Vec<u64> = g
+                .jobs
+                .iter()
+                .filter(|(_, j)| j.owner == idx && j.reply.is_none())
+                .map(|(f, _)| *f)
+                .collect();
+            orphans.sort_unstable();
+            for fid in orphans {
+                if g.jobs[&fid].cancelled {
+                    // its forwarded cancel died with the worker —
+                    // finish the cancellation here
+                    let reply = Json::obj(vec![
+                        ("ok", Json::Bool(false)),
+                        ("state", Json::str("cancelled")),
+                        ("error", Json::str("cancelled by client")),
+                    ]);
+                    self.finish_job(&mut g, fid, reply);
+                    continue;
+                }
+                match pick_worker(&g) {
+                    None => {
+                        let reply = Json::obj(vec![
+                            ("ok", Json::Bool(false)),
+                            ("state", Json::str("aborted")),
+                            (
+                                "error",
+                                Json::str(&format!(
+                                    "worker {idx} died with no live peers to adopt the job"
+                                )),
+                            ),
+                        ]);
+                        self.finish_job(&mut g, fid, reply);
+                    }
+                    Some(t) => {
+                        let line = {
+                            let job = g.jobs.get_mut(&fid).unwrap();
+                            job.owner = t;
+                            match &job.ckpt {
+                                Some(c) => resume_line(fid, job, c),
+                                None => job_line(fid, job),
+                            }
+                        };
+                        g.workers[t].booked_us += ROUTER_BOOK_US;
+                        self.requeued.fetch_add(1, Ordering::SeqCst);
+                        sends.push((t, g.workers[t].writer.clone(), line));
+                    }
+                }
+            }
+        }
+        // writes happen outside the state lock; a failed write means
+        // the adopter is dead too — recurse (bounded by worker count)
+        for (t, w, line) in sends {
+            if !write_line(&w, &line) {
+                self.mark_dead(t);
+            }
+        }
+    }
+
+    /// Fold a heartbeat reply into the session gauges and stash any
+    /// spilled checkpoints for jobs this worker still owns.
+    fn note_pong(&self, idx: usize, msg: &Json) {
+        let sum = |key: &str| -> u64 {
+            msg.get(key)
+                .and_then(|a| a.as_arr())
+                .map(|a| a.iter().filter_map(|v| v.as_u64()).sum())
+                .unwrap_or(0)
+        };
+        let mut g = self.state.lock().unwrap();
+        if let Some(s) = g.workers.get_mut(idx) {
+            if s.alive {
+                s.outstanding = false;
+                s.missed = 0;
+                s.booked_us = 0;
+                s.inflight = sum("loads");
+                s.work_us = sum("work_us");
+                if let Some(c) = msg.get("completed").and_then(|c| c.as_u64()) {
+                    s.completed = c;
+                }
+                if let Some(st) = msg.get("stats") {
+                    s.stats = st.clone();
+                }
+            }
+        }
+        if let Some(arr) = msg.get("ckpts").and_then(|c| c.as_arr()) {
+            for c in arr {
+                let (Some(fid), Some(policy), Some(hex)) = (
+                    c.get("id").and_then(|i| i.as_u64()),
+                    c.get("policy").and_then(|p| p.as_str()),
+                    c.get("bytes").and_then(|b| b.as_str()),
+                ) else {
+                    continue;
+                };
+                let step = c.get("step").and_then(|s| s.as_u64()).unwrap_or(0);
+                if let Some(job) = g.jobs.get_mut(&fid) {
+                    if job.owner == idx && job.reply.is_none() {
+                        job.ckpt =
+                            Some(Ckpt { policy: policy.to_string(), step, bytes: hex.to_string() });
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Worker-facing side: handshake, per-session reader, heartbeats
+// ---------------------------------------------------------------------------
+
+/// Serve one fabric connection: handshake (structured rejection for
+/// anything that isn't a well-formed SPFB hello — a v1/v2 client on the
+/// wrong port learns why instead of hanging), then fold the session's
+/// pong/done/failed stream into router state until EOF.
+fn serve_fabric_conn(fabric: &Arc<Fabric>, stream: TcpStream) {
+    let Ok(mut writer) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(stream);
+    let mut hello = String::new();
+    if reader.read_line(&mut hello).unwrap_or(0) == 0 {
+        return;
+    }
+    let shards = match check_worker_hello(hello.trim()) {
+        Err(e) => {
+            let _ = writer.write_all(error_json(&e).as_bytes());
+            let _ = writer.write_all(b"\n");
+            return;
+        }
+        Ok(s) => s,
+    };
+    let Ok(session_writer) = writer.try_clone() else { return };
+    let idx = {
+        let mut g = fabric.state.lock().unwrap();
+        g.workers.push(WorkerSession {
+            alive: true,
+            writer: Arc::new(Mutex::new(session_writer)),
+            shards,
+            work_us: 0,
+            inflight: 0,
+            booked_us: 0,
+            missed: 0,
+            outstanding: false,
+            stats: Json::Null,
+            completed: 0,
+        });
+        g.workers.len() - 1
+    };
+    let ack = Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("fabric", Json::str("hello")),
+        ("magic", Json::str(FABRIC_MAGIC)),
+        ("version", Json::Num(FABRIC_VERSION as f64)),
+        ("worker", Json::Num(idx as f64)),
+    ])
+    .dump();
+    if writer.write_all(ack.as_bytes()).is_err() || writer.write_all(b"\n").is_err() {
+        fabric.mark_dead(idx);
+        return;
+    }
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let Ok(msg) = Json::parse(&line) else { continue };
+        match msg.get("fabric").and_then(|k| k.as_str()).unwrap_or("") {
+            "pong" => fabric.note_pong(idx, &msg),
+            "done" => {
+                let Json::Obj(mut m) = msg else { continue };
+                let fid = m.get("id").and_then(|i| i.as_u64());
+                let reply = m.remove("reply");
+                if let (Some(fid), Some(reply)) = (fid, reply) {
+                    let mut g = fabric.state.lock().unwrap();
+                    // a done from a worker the job failed away from is
+                    // stale — the current owner's verdict is canonical
+                    if g.jobs.get(&fid).map(|j| j.owner == idx).unwrap_or(false) {
+                        fabric.finish_job(&mut g, fid, reply);
+                    }
+                }
+            }
+            "failed" => {
+                let fid = msg.get("id").and_then(|i| i.as_u64());
+                let err = msg.get("error").and_then(|e| e.as_str()).unwrap_or("failed on worker");
+                if let Some(fid) = fid {
+                    let reply = Json::obj(vec![
+                        ("ok", Json::Bool(false)),
+                        ("state", Json::str("aborted")),
+                        ("error", Json::str(err)),
+                    ]);
+                    let mut g = fabric.state.lock().unwrap();
+                    if g.jobs.get(&fid).map(|j| j.owner == idx).unwrap_or(false) {
+                        fabric.finish_job(&mut g, fid, reply);
+                    }
+                }
+            }
+            "error" => {
+                let err = msg.get("error").and_then(|e| e.as_str()).unwrap_or("?");
+                eprintln!("speca: fabric worker {idx} reported: {err}");
+            }
+            _ => {}
+        }
+    }
+    fabric.mark_dead(idx);
+}
+
+/// Heartbeat pacemaker: every period, ping each live worker; a worker
+/// whose previous ping is still unanswered accrues a miss (the
+/// `heartbeats_missed` counter), and `miss_limit` consecutive misses
+/// declare it dead.
+fn heartbeat_loop(fabric: &Arc<Fabric>, period: Duration, miss_limit: u32) {
+    while fabric.running.load(Ordering::SeqCst) {
+        thread::sleep(period);
+        let mut pings = Vec::new();
+        let mut dead = Vec::new();
+        {
+            let mut g = fabric.state.lock().unwrap();
+            g.seq += 1;
+            let seq = g.seq;
+            for (i, s) in g.workers.iter_mut().enumerate() {
+                if !s.alive {
+                    continue;
+                }
+                if s.outstanding {
+                    s.missed += 1;
+                    fabric.heartbeats_missed.fetch_add(1, Ordering::SeqCst);
+                    if s.missed >= miss_limit {
+                        dead.push(i);
+                        continue;
+                    }
+                }
+                s.outstanding = true;
+                let line = Json::obj(vec![
+                    ("fabric", Json::str("ping")),
+                    ("seq", Json::Num(seq as f64)),
+                ])
+                .dump();
+                pings.push((i, s.writer.clone(), line));
+            }
+        }
+        for i in dead {
+            fabric.mark_dead(i);
+        }
+        for (i, w, line) in pings {
+            if !write_line(&w, &line) {
+                fabric.mark_dead(i);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Client-facing side: wire protocol v2 over the fabric
+// ---------------------------------------------------------------------------
+
+/// Accept a submit body: pin the seed (failover re-execution must be
+/// deterministic, so a client that names no seed gets the fabric id —
+/// the same default a single-process server applies), pick the least
+/// loaded live worker, ledger the job, forward it. Returns the ack
+/// line plus the fabric id when the job was accepted.
+fn submit_inner(fabric: &Arc<Fabric>, req: &Json) -> (String, Option<u64>) {
+    if !fabric.accepting.load(Ordering::SeqCst) {
+        return (error_json("server is shutting down"), None);
+    }
+    let Some(body) = req.as_obj() else {
+        return (error_json("submit body must be a JSON object"), None);
+    };
+    let fid = fabric.next_fid.fetch_add(1, Ordering::SeqCst);
+    fabric.submitted.fetch_add(1, Ordering::SeqCst);
+    let mut body = body.clone();
+    body.remove("op");
+    body.entry("seed".to_string()).or_insert(Json::Num(fid as f64));
+    let return_latent = body.get("return_latent").and_then(|b| b.as_bool()).unwrap_or(false);
+    let verdict = |ok: bool, state: &str, error: &str| {
+        Json::obj(vec![
+            ("ok", Json::Bool(ok)),
+            ("job", Json::Num(fid as f64)),
+            ("state", Json::str(state)),
+            ("error", Json::str(error)),
+        ])
+        .dump()
+    };
+    let (target, writer, line) = {
+        let mut g = fabric.state.lock().unwrap();
+        if g.live_jobs >= fabric.max_queue {
+            fabric.rejected.fetch_add(1, Ordering::SeqCst);
+            return (verdict(false, "rejected", "queue full"), None);
+        }
+        let Some(t) = pick_worker(&g) else {
+            fabric.aborted.fetch_add(1, Ordering::SeqCst);
+            return (verdict(false, "aborted", "no live workers joined to this router"), None);
+        };
+        let job = FabricJob {
+            owner: t,
+            req: Json::Obj(body),
+            return_latent,
+            ckpt: None,
+            reply: None,
+            cancelled: false,
+        };
+        let line = job_line(fid, &job);
+        g.jobs.insert(fid, job);
+        g.live_jobs += 1;
+        g.workers[t].booked_us += ROUTER_BOOK_US;
+        (t, g.workers[t].writer.clone(), line)
+    };
+    if !write_line(&writer, &line) {
+        // the owner just died: failover re-queues this job too
+        fabric.mark_dead(target);
+    }
+    let ack = Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("job", Json::Num(fid as f64)),
+        ("state", Json::str("queued")),
+    ])
+    .dump();
+    (ack, Some(fid))
+}
+
+/// Non-terminal status line for a job currently owned by `owner`.
+fn inflight_json(fid: u64, owner: usize) -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("job", Json::Num(fid as f64)),
+        ("state", Json::str("admitted")),
+        ("worker", Json::Num(owner as f64)),
+    ])
+}
+
+fn fid_of(req: &Json) -> Result<u64, String> {
+    req.get("job").and_then(|j| j.as_u64()).ok_or_else(|| "missing numeric 'job' field".into())
+}
+
+fn handle_poll(fabric: &Arc<Fabric>, req: &Json) -> String {
+    let fid = match fid_of(req) {
+        Ok(f) => f,
+        Err(e) => return error_json(&e),
+    };
+    let g = fabric.state.lock().unwrap();
+    match g.jobs.get(&fid) {
+        None => error_json(&format!("unknown job {fid}")),
+        Some(j) => match &j.reply {
+            Some(r) => r.clone(),
+            None => inflight_json(fid, j.owner).dump(),
+        },
+    }
+}
+
+/// `op:"wait"`: park on the condvar until the job's terminal reply
+/// lands (consuming the ledger entry, like a server-side wait) or the
+/// timeout passes.
+fn handle_wait(fabric: &Arc<Fabric>, req: &Json) -> String {
+    let fid = match fid_of(req) {
+        Ok(f) => f,
+        Err(e) => return error_json(&e),
+    };
+    let deadline = req
+        .get("timeout_ms")
+        .and_then(|t| t.as_f64())
+        .map(|ms| Instant::now() + Duration::from_millis(ms.max(0.0) as u64));
+    let mut g = fabric.state.lock().unwrap();
+    loop {
+        let owner = match g.jobs.get(&fid) {
+            None => return error_json(&format!("unknown job {fid}")),
+            Some(j) if j.reply.is_some() => {
+                let job = g.jobs.remove(&fid).unwrap();
+                return job.reply.unwrap();
+            }
+            Some(j) => j.owner,
+        };
+        match deadline {
+            None => g = fabric.cv.wait(g).unwrap(),
+            Some(dl) => {
+                let now = Instant::now();
+                if now >= dl {
+                    let mut j = inflight_json(fid, owner);
+                    if let Json::Obj(m) = &mut j {
+                        m.insert("timed_out".into(), Json::Bool(true));
+                    }
+                    return j.dump();
+                }
+                let (g2, _) = fabric.cv.wait_timeout(g, dl - now).unwrap();
+                g = g2;
+            }
+        }
+    }
+}
+
+fn handle_cancel(fabric: &Arc<Fabric>, req: &Json) -> String {
+    if req.get("job").is_none() && req.get("group").is_some() {
+        return error_json("group cancel is not supported by the fabric router (cancel by job)");
+    }
+    let fid = match fid_of(req) {
+        Ok(f) => f,
+        Err(e) => return error_json(&e),
+    };
+    let forward = {
+        let mut g = fabric.state.lock().unwrap();
+        let Some(j) = g.jobs.get_mut(&fid) else {
+            return error_json(&format!("unknown job {fid}"));
+        };
+        if j.reply.is_some() {
+            None
+        } else {
+            j.cancelled = true;
+            let owner = j.owner;
+            let line = Json::obj(vec![
+                ("fabric", Json::str("cancel")),
+                ("id", Json::Num(fid as f64)),
+            ])
+            .dump();
+            Some((owner, g.workers[owner].writer.clone(), line))
+        }
+    };
+    if let Some((owner, w, line)) = forward {
+        if !write_line(&w, &line) {
+            fabric.mark_dead(owner);
+        }
+    }
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("job", Json::Num(fid as f64)),
+        ("state", Json::str("cancelling")),
+    ])
+    .dump()
+}
+
+/// Aggregated `op:"stats"`: the per-worker breakdown (each live
+/// worker's own stats body from its last heartbeat; dead workers are
+/// `null`, like dead shards) plus fabric-wide totals and counters.
+fn handle_stats(fabric: &Arc<Fabric>) -> String {
+    let g = fabric.state.lock().unwrap();
+    let live = g.workers.iter().filter(|s| s.alive).count();
+    let breakdown = Json::Arr(
+        g.workers
+            .iter()
+            .map(|s| if s.alive { s.stats.clone() } else { Json::Null })
+            .collect(),
+    );
+    let completed: u64 = g.workers.iter().filter(|s| s.alive).map(|s| s.completed).sum();
+    let inflight: u64 = g.workers.iter().filter(|s| s.alive).map(|s| s.inflight).sum();
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("role", Json::str("router")),
+        ("workers", breakdown),
+        ("workers_total", Json::Num(g.workers.len() as f64)),
+        ("workers_live", Json::Num(live as f64)),
+        ("completed", Json::Num(completed as f64)),
+        ("inflight", Json::Num(inflight as f64)),
+        ("failovers", Json::Num(fabric.failovers.load(Ordering::SeqCst) as f64)),
+        ("requeued_jobs", Json::Num(fabric.requeued.load(Ordering::SeqCst) as f64)),
+        (
+            "heartbeats_missed",
+            Json::Num(fabric.heartbeats_missed.load(Ordering::SeqCst) as f64),
+        ),
+        (
+            "jobs",
+            Json::obj(vec![
+                ("submitted", Json::Num(fabric.submitted.load(Ordering::SeqCst) as f64)),
+                ("completed", Json::Num(fabric.completed.load(Ordering::SeqCst) as f64)),
+                ("rejected", Json::Num(fabric.rejected.load(Ordering::SeqCst) as f64)),
+                ("cancelled", Json::Num(fabric.cancelled.load(Ordering::SeqCst) as f64)),
+                ("aborted", Json::Num(fabric.aborted.load(Ordering::SeqCst) as f64)),
+                ("live", Json::Num(g.live_jobs as f64)),
+            ]),
+        ),
+    ])
+    .dump()
+}
+
+/// Router `op:"metrics"`: fabric counters, per-worker gauges (plus the
+/// per-shard breakdown each worker reported in its last heartbeat),
+/// and this process's allocator probes.
+fn handle_metrics(fabric: &Arc<Fabric>) -> String {
+    let mut p = PromText::new();
+    {
+        let g = fabric.state.lock().unwrap();
+        let live = g.workers.iter().filter(|s| s.alive).count();
+        p.family("speca_workers_total", "gauge", "fabric workers ever joined");
+        p.sample("speca_workers_total", g.workers.len() as f64);
+        p.family("speca_workers_live", "gauge", "fabric workers currently live");
+        p.sample("speca_workers_live", live as f64);
+        p.family("speca_worker_up", "gauge", "1 if the worker session is live");
+        for (i, s) in g.workers.iter().enumerate() {
+            let up = if s.alive { 1.0 } else { 0.0 };
+            p.labelled("speca_worker_up", &[("worker", i.to_string())], up);
+        }
+        p.family("speca_worker_inflight", "gauge", "jobs in flight on the worker (last pong)");
+        for (i, s) in g.workers.iter().enumerate().filter(|(_, s)| s.alive) {
+            p.labelled("speca_worker_inflight", &[("worker", i.to_string())], s.inflight as f64);
+        }
+        p.family("speca_worker_work_us", "gauge", "expected remaining work (last pong, µ-units)");
+        for (i, s) in g.workers.iter().enumerate().filter(|(_, s)| s.alive) {
+            p.labelled("speca_worker_work_us", &[("worker", i.to_string())], s.work_us as f64);
+        }
+        p.family(
+            "speca_worker_shard_inflight",
+            "gauge",
+            "per-shard in-flight on the worker (last pong)",
+        );
+        for (i, s) in g.workers.iter().enumerate().filter(|(_, s)| s.alive) {
+            if let Some(loads) = s.stats.get("shard_loads").and_then(|l| l.as_arr()) {
+                for (shard, l) in loads.iter().enumerate() {
+                    if let Some(v) = l.as_f64() {
+                        let labels =
+                            [("worker", i.to_string()), ("shard", shard.to_string())];
+                        p.labelled("speca_worker_shard_inflight", &labels, v);
+                    }
+                }
+            }
+        }
+        p.family("speca_worker_draft_alpha", "gauge", "worker speculative acceptance (alpha)");
+        for (i, s) in g.workers.iter().enumerate().filter(|(_, s)| s.alive) {
+            if let Some(a) = s.stats.get("alpha").and_then(|a| a.as_f64()) {
+                p.labelled("speca_worker_draft_alpha", &[("worker", i.to_string())], a);
+            }
+        }
+        p.family("speca_router_jobs_live", "gauge", "fabric jobs in a non-terminal state");
+        p.sample("speca_router_jobs_live", g.live_jobs as f64);
+    }
+    let counters: [(&str, &AtomicU64, &str); 8] = [
+        ("speca_router_jobs_submitted_total", &fabric.submitted, "jobs accepted by the router"),
+        ("speca_router_jobs_completed_total", &fabric.completed, "jobs finished normally"),
+        ("speca_router_jobs_rejected_total", &fabric.rejected, "jobs shed by admission"),
+        ("speca_router_jobs_cancelled_total", &fabric.cancelled, "jobs cancelled"),
+        ("speca_router_jobs_aborted_total", &fabric.aborted, "jobs lost (no live peers)"),
+        ("speca_heartbeats_missed_total", &fabric.heartbeats_missed, "unanswered heartbeats"),
+        ("speca_failovers_total", &fabric.failovers, "workers declared dead with failover"),
+        ("speca_requeued_jobs_total", &fabric.requeued, "jobs re-queued off dead workers"),
+    ];
+    for (name, c, help) in counters {
+        p.family(name, "counter", help);
+        p.sample(name, c.load(Ordering::SeqCst) as f64);
+    }
+    p.family("speca_alloc_calls_total", "counter", "allocator calls (0 without counting allocator)");
+    p.sample("speca_alloc_calls_total", alloc::allocations() as f64);
+    p.family("speca_dealloc_calls_total", "counter", "deallocations (0 without counting allocator)");
+    p.sample("speca_dealloc_calls_total", alloc::deallocations() as f64);
+    p.family("speca_alloc_bytes_total", "counter", "bytes allocated (0 without counting allocator)");
+    p.sample("speca_alloc_bytes_total", alloc::allocated_bytes() as f64);
+    Json::obj(vec![("ok", Json::Bool(true)), ("metrics", Json::str(&p.finish()))]).dump()
+}
+
+fn handle_hello(fabric: &Arc<Fabric>, req: &Json) -> String {
+    let proto = req.get("proto").and_then(|p| p.as_str()).unwrap_or(WIRE_PROTO);
+    if proto != WIRE_PROTO {
+        return error_json(&format!(
+            "unknown protocol '{proto}' (this port speaks '{WIRE_PROTO}' v{WIRE_VERSION})"
+        ));
+    }
+    let version = req.get("version").and_then(|v| v.as_u64()).unwrap_or(WIRE_VERSION);
+    if version != WIRE_VERSION {
+        return error_json(&format!(
+            "unsupported protocol version {version} (this port speaks v{WIRE_VERSION})"
+        ));
+    }
+    let live = fabric.state.lock().unwrap().workers.iter().filter(|s| s.alive).count();
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("proto", Json::str(WIRE_PROTO)),
+        ("version", Json::Num(WIRE_VERSION as f64)),
+        ("role", Json::str("router")),
+        ("workers_live", Json::Num(live as f64)),
+    ])
+    .dump()
+}
+
+/// One client connection: the v2 op surface, terminated by EOF.
+fn serve_client_conn(fabric: &Arc<Fabric>, stream: TcpStream) {
+    let Ok(mut writer) = stream.try_clone() else { return };
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply_line = match Json::parse(&line) {
+            Err(e) => error_json(&e.to_string()),
+            Ok(req) => {
+                let op = req.get("op").and_then(|o| o.as_str()).unwrap_or("generate");
+                match op {
+                    "shutdown" => {
+                        fabric.accepting.store(false, Ordering::SeqCst);
+                        let _ = fabric.shutdown.lock().unwrap().send(());
+                        Json::obj(vec![("ok", Json::Bool(true))]).dump()
+                    }
+                    "hello" => handle_hello(fabric, &req),
+                    "stats" => handle_stats(fabric),
+                    "metrics" => handle_metrics(fabric),
+                    "submit" => submit_inner(fabric, &req).0,
+                    "poll" => handle_poll(fabric, &req),
+                    "wait" => handle_wait(fabric, &req),
+                    "cancel" => handle_cancel(fabric, &req),
+                    // v1 shim, fabric edition: submit + consuming wait
+                    "generate" => match submit_inner(fabric, &req) {
+                        (ack, None) => ack,
+                        (_, Some(fid)) => {
+                            let body = Json::obj(vec![("job", Json::Num(fid as f64))]);
+                            handle_wait(fabric, &body)
+                        }
+                    },
+                    other => error_json(&format!("unknown op '{other}'")),
+                }
+            }
+        };
+        if writer.write_all(reply_line.as_bytes()).is_err() || writer.write_all(b"\n").is_err() {
+            break;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Lifecycle
+// ---------------------------------------------------------------------------
+
+/// A running fabric router. Obtained from [`spawn_router`]; call
+/// [`RouterHandle::join`] to block until an `op:"shutdown"` arrives and
+/// tear the fabric down.
+pub struct RouterHandle {
+    fabric: Arc<Fabric>,
+    addr: SocketAddr,
+    workers_addr: SocketAddr,
+    shutdown_rx: Receiver<()>,
+    acceptors: Vec<JoinHandle<()>>,
+    heartbeat: JoinHandle<()>,
+}
+
+impl RouterHandle {
+    /// The client serving address the router bound.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The fabric address workers join.
+    pub fn workers_addr(&self) -> SocketAddr {
+        self.workers_addr
+    }
+
+    /// Live worker sessions right now (spin on this after spawning
+    /// workers so a bench doesn't race the joins).
+    pub fn workers_live(&self) -> usize {
+        self.fabric.state.lock().unwrap().workers.iter().filter(|s| s.alive).count()
+    }
+
+    /// Workers declared dead with failover, so far.
+    pub fn failovers(&self) -> u64 {
+        self.fabric.failovers.load(Ordering::SeqCst)
+    }
+
+    /// Jobs re-queued off dead workers, so far.
+    pub fn requeued_jobs(&self) -> u64 {
+        self.fabric.requeued.load(Ordering::SeqCst)
+    }
+
+    /// Block until a client `op:"shutdown"` arrives, then tear down:
+    /// stop accepting, stop the pacemaker, say `bye` to live workers
+    /// (they drain their pools and exit), close everything.
+    pub fn join(self) -> Result<()> {
+        let _ = self.shutdown_rx.recv();
+        self.fabric.accepting.store(false, Ordering::SeqCst);
+        self.fabric.running.store(false, Ordering::SeqCst);
+        // wake both accept loops so they observe the cleared flag
+        let _ = TcpStream::connect(self.addr);
+        let _ = TcpStream::connect(self.workers_addr);
+        for h in self.acceptors {
+            let _ = h.join();
+        }
+        let _ = self.heartbeat.join();
+        let byes: Vec<_> = {
+            let g = self.fabric.state.lock().unwrap();
+            g.workers.iter().filter(|s| s.alive).map(|s| s.writer.clone()).collect()
+        };
+        let bye = Json::obj(vec![("fabric", Json::str("bye"))]).dump();
+        for w in byes {
+            let _ = write_line(&w, &bye);
+            let _ = w.lock().unwrap().shutdown(Shutdown::Both);
+        }
+        Ok(())
+    }
+}
+
+/// Spawn a fabric router: bind the client and fabric listeners, start
+/// the acceptors and the heartbeat pacemaker. Returns immediately;
+/// workers join (and leave) at any time.
+pub fn spawn_router(cfg: &RouterConfig) -> Result<RouterHandle> {
+    let client_listener = TcpListener::bind(&cfg.addr)?;
+    let fabric_listener = TcpListener::bind(&cfg.workers_addr)?;
+    let addr = client_listener.local_addr()?;
+    let workers_addr = fabric_listener.local_addr()?;
+    let (shutdown_tx, shutdown_rx) = channel::<()>();
+    let fabric = Arc::new(Fabric {
+        state: Mutex::new(FabricState {
+            workers: Vec::new(),
+            jobs: HashMap::new(),
+            live_jobs: 0,
+            seq: 0,
+        }),
+        cv: Condvar::new(),
+        accepting: AtomicBool::new(true),
+        running: AtomicBool::new(true),
+        next_fid: AtomicU64::new(0),
+        max_queue: cfg.max_queue.max(1),
+        submitted: AtomicU64::new(0),
+        completed: AtomicU64::new(0),
+        rejected: AtomicU64::new(0),
+        cancelled: AtomicU64::new(0),
+        aborted: AtomicU64::new(0),
+        heartbeats_missed: AtomicU64::new(0),
+        failovers: AtomicU64::new(0),
+        requeued: AtomicU64::new(0),
+        shutdown: Mutex::new(shutdown_tx),
+    });
+    let fab_acceptor = {
+        let fabric = fabric.clone();
+        thread::Builder::new()
+            .name("speca-fabric-acceptor".into())
+            .spawn(move || {
+                for stream in fabric_listener.incoming() {
+                    if !fabric.accepting.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let Ok(stream) = stream else { break };
+                    let fabric = fabric.clone();
+                    thread::spawn(move || serve_fabric_conn(&fabric, stream));
+                }
+            })
+            .expect("spawning fabric acceptor")
+    };
+    let client_acceptor = {
+        let fabric = fabric.clone();
+        thread::Builder::new()
+            .name("speca-router-acceptor".into())
+            .spawn(move || {
+                for stream in client_listener.incoming() {
+                    if !fabric.accepting.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let Ok(stream) = stream else { break };
+                    let fabric = fabric.clone();
+                    thread::spawn(move || serve_client_conn(&fabric, stream));
+                }
+            })
+            .expect("spawning router client acceptor")
+    };
+    let heartbeat = {
+        let fabric = fabric.clone();
+        let period = Duration::from_millis(cfg.heartbeat_ms.max(10));
+        let miss_limit = cfg.miss_limit.max(1);
+        thread::Builder::new()
+            .name("speca-fabric-heartbeat".into())
+            .spawn(move || heartbeat_loop(&fabric, period, miss_limit))
+            .expect("spawning fabric heartbeat")
+    };
+    eprintln!("speca: fabric router serving clients on {addr}, workers on {workers_addr}");
+    Ok(RouterHandle {
+        fabric,
+        addr,
+        workers_addr,
+        shutdown_rx,
+        acceptors: vec![fab_acceptor, client_acceptor],
+        heartbeat,
+    })
+}

@@ -1,0 +1,463 @@
+//! The worker side of the serving fabric: one
+//! [`EngineShardPool`](crate::coordinator::EngineShardPool) process
+//! joined to a router.
+//!
+//! A worker dials the router's fabric port, completes the SPFB
+//! handshake, then serves the fabric session from one loop:
+//!
+//! * `job` — a client submit body the router forwarded (seed already
+//!   pinned): submitted through the exact server-side submit path, with
+//!   a detached waiter thread shipping the terminal reply back as a
+//!   `done` line the moment the job finishes.
+//! * `resume` — a spilled SPCK checkpoint from a dead peer: decoded,
+//!   its policy re-resolved from the canonical description, and resumed
+//!   via [`JobManager::submit_checkpoint`] — bitwise-identical to the
+//!   run the dead worker would have finished.
+//! * `ping` — answered with a `pong` carrying the shard load/work
+//!   gauges (weighted routing), the full `op:"stats"` body, and a
+//!   checkpoint image of everything in flight
+//!   ([`JobManager::spill`]) — the spill contract that makes router-side
+//!   failover lossless.
+//! * `cancel` / `bye` / anything else — forwarded cancels, graceful
+//!   drain, structured errors.
+//!
+//! The worker also runs the standard client listener on its own port
+//! (`op:"stats"`, `op:"metrics"`, direct submits), so a fabric worker
+//! is a strict superset of a single-process server.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::channel;
+use std::sync::{Arc, Mutex};
+use std::thread::{self, JoinHandle};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::cache::Draft;
+use crate::coordinator::job::{JobManager, JobStatus};
+use crate::coordinator::state::RequestCheckpoint;
+use crate::coordinator::{EngineConfig, JobMeta, PoolConfig, RouterPolicy};
+use crate::fabric::{hex_decode, hex_encode, worker_hello};
+use crate::runtime::ModelBackend;
+use crate::server::{spawn_client_listener, stats_pairs, status_json, submit_from_json, ConnCtx};
+use crate::util::json::Json;
+use crate::workload::parse_policy;
+
+/// Fabric worker configuration.
+pub struct WorkerConfig {
+    /// Router fabric address to join (`speca serve --fabric-worker
+    /// --join <addr>`).
+    pub join: String,
+    /// Local client serving address (port 0 picks a free port).
+    pub addr: String,
+    /// Maximum jobs in a non-terminal state on this worker.
+    pub max_queue: usize,
+    /// Engine worker threads (shards) in this process.
+    pub shards: usize,
+    /// How submissions spread over this worker's shards.
+    pub router: RouterPolicy,
+    /// Default draft strategy for SpeCa requests that name none.
+    pub default_draft: Option<Draft>,
+}
+
+impl Default for WorkerConfig {
+    fn default() -> Self {
+        WorkerConfig {
+            join: "127.0.0.1:7434".into(),
+            addr: "127.0.0.1:0".into(),
+            max_queue: 1024,
+            shards: 1,
+            router: RouterPolicy::LeastLoaded,
+            default_draft: None,
+        }
+    }
+}
+
+/// A running fabric worker: the shard pool, its fabric session, and its
+/// client listener. Obtained from [`spawn_worker`]; end it with
+/// [`WorkerHandle::join`] (graceful drain) or [`WorkerHandle::kill`]
+/// (abrupt death, for failover tests).
+pub struct WorkerHandle {
+    manager: Arc<JobManager>,
+    fabric: TcpStream,
+    accepting: Arc<AtomicBool>,
+    client_addr: SocketAddr,
+    loop_handle: JoinHandle<()>,
+    listener_handle: JoinHandle<()>,
+}
+
+impl WorkerHandle {
+    /// The client serving address this worker bound (useful with
+    /// `addr: "127.0.0.1:0"`).
+    pub fn client_addr(&self) -> SocketAddr {
+        self.client_addr
+    }
+
+    /// The worker's job manager (direct submits, stats in tests).
+    pub fn manager(&self) -> &Arc<JobManager> {
+        &self.manager
+    }
+
+    /// Simulate abrupt process death: the fabric socket dies **first**
+    /// (so no post-death message can reach the router — exactly what a
+    /// crash looks like from the other end), then the pool abandons its
+    /// in-flight work. Recovery of that work is the router's job, from
+    /// the checkpoints this worker spilled on earlier heartbeats.
+    pub fn kill(self) {
+        let _ = self.fabric.shutdown(Shutdown::Both);
+        self.accepting.store(false, Ordering::SeqCst);
+        let _ = self.loop_handle.join();
+        // wake the client listener so it observes the cleared flag
+        let _ = TcpStream::connect(self.client_addr);
+        let _ = self.listener_handle.join();
+        let _ = self.manager.shutdown(false);
+    }
+
+    /// Wait for the fabric session to end (router `bye` or disconnect),
+    /// then drain the pool. Returns jobs completed by this worker.
+    pub fn join(self) -> Result<u64> {
+        let _ = self.loop_handle.join();
+        self.accepting.store(false, Ordering::SeqCst);
+        let _ = TcpStream::connect(self.client_addr);
+        let _ = self.listener_handle.join();
+        let out = self.manager.shutdown(true)?;
+        Ok(out.counts.completed)
+    }
+}
+
+/// Spawn a fabric worker: build the shard pool, join the router at
+/// `cfg.join` (SPFB handshake), start the client listener and the
+/// fabric session loop. Errors if the router is unreachable or rejects
+/// the handshake.
+pub fn spawn_worker(
+    model: Arc<dyn ModelBackend + Send + Sync>,
+    engine_cfg: EngineConfig,
+    cfg: &WorkerConfig,
+) -> Result<WorkerHandle> {
+    let (depth, steps, full_flops) = {
+        let entry = model.entry();
+        (
+            entry.config.depth,
+            entry.config.serve_steps,
+            entry.flops.full_step.get(&1).copied().unwrap_or(0),
+        )
+    };
+    let shards = cfg.shards.max(1);
+    let manager = Arc::new(JobManager::new(
+        model,
+        PoolConfig { shards, router: cfg.router, engine: engine_cfg, steal: true },
+        cfg.max_queue,
+    ));
+
+    // fabric session: dial, hello, check the ack before serving anything
+    let stream = TcpStream::connect(&cfg.join)
+        .map_err(|e| anyhow!("connecting to router fabric port {}: {e}", cfg.join))?;
+    let fabric = stream.try_clone()?;
+    let writer = Arc::new(Mutex::new(stream.try_clone()?));
+    let mut reader = BufReader::new(stream);
+    {
+        let mut w = writer.lock().unwrap();
+        w.write_all(worker_hello(shards).as_bytes())?;
+        w.write_all(b"\n")?;
+    }
+    let mut ack = String::new();
+    if reader.read_line(&mut ack)? == 0 {
+        bail!("router at {} closed the connection during the fabric handshake", cfg.join);
+    }
+    let j = Json::parse(ack.trim()).map_err(|e| anyhow!("bad fabric handshake ack: {e}"))?;
+    if !j.get("ok").and_then(|o| o.as_bool()).unwrap_or(false) {
+        let why = j.get("error").and_then(|e| e.as_str()).unwrap_or("no reason given");
+        bail!("router at {} rejected the fabric handshake: {why}", cfg.join);
+    }
+
+    // client listener: the same protocol-v2 surface as a standalone
+    // server, on this worker's own port
+    let listener = TcpListener::bind(&cfg.addr)?;
+    let client_addr = listener.local_addr()?;
+    let accepting = Arc::new(AtomicBool::new(true));
+    let (shutdown_tx, shutdown_rx) = channel::<()>();
+    let ctx = ConnCtx {
+        manager: manager.clone(),
+        accepting: accepting.clone(),
+        shutdown: shutdown_tx,
+        depth,
+        steps,
+        full_flops,
+        default_draft: cfg.default_draft.clone(),
+        role: "worker",
+    };
+    let listener_handle = spawn_client_listener(listener, ctx.clone());
+    // a client op:"shutdown" on the worker port ends the fabric session
+    // too: closing the socket EOFs the session loop, which drains
+    {
+        let f = fabric.try_clone()?;
+        let accepting = accepting.clone();
+        thread::Builder::new()
+            .name("speca-worker-shutdown".into())
+            .spawn(move || {
+                if shutdown_rx.recv().is_ok() {
+                    accepting.store(false, Ordering::SeqCst);
+                    let _ = f.shutdown(Shutdown::Both);
+                }
+            })
+            .expect("spawning worker shutdown watcher");
+    }
+
+    let loop_handle = {
+        let ctx = ctx.clone();
+        thread::Builder::new()
+            .name("speca-fabric-worker".into())
+            .spawn(move || {
+                worker_loop(&ctx, reader, &writer);
+                // session over: stop accepting clients and wake the
+                // listener so join/kill never blocks on accept
+                ctx.accepting.store(false, Ordering::SeqCst);
+                let _ = TcpStream::connect(client_addr);
+            })
+            .expect("spawning fabric worker loop")
+    };
+    eprintln!(
+        "speca: fabric worker serving on {client_addr} ({shards} shard(s)), joined router at {}",
+        cfg.join
+    );
+    Ok(WorkerHandle { manager, fabric, accepting, client_addr, loop_handle, listener_handle })
+}
+
+/// Run a fabric worker to completion on the current thread: join the
+/// router, serve until the session ends, drain. Returns jobs completed.
+pub fn run_worker(
+    model: Arc<dyn ModelBackend + Send + Sync>,
+    engine_cfg: EngineConfig,
+    cfg: &WorkerConfig,
+) -> Result<u64> {
+    spawn_worker(model, engine_cfg, cfg)?.join()
+}
+
+/// Write one JSON line to the shared fabric writer; returns whether the
+/// write stuck (a dead socket is the caller's cue that the session is
+/// over — replies are best-effort after that).
+fn send_line(writer: &Mutex<TcpStream>, line: &str) -> bool {
+    let mut w = writer.lock().unwrap();
+    w.write_all(line.as_bytes()).is_ok() && w.write_all(b"\n").is_ok()
+}
+
+fn fabric_error(msg: &str) -> String {
+    Json::obj(vec![("fabric", Json::str("error")), ("error", Json::str(msg))]).dump()
+}
+
+fn fabric_failed(fid: u64, msg: &str) -> String {
+    Json::obj(vec![
+        ("fabric", Json::str("failed")),
+        ("id", Json::Num(fid as f64)),
+        ("error", Json::str(msg)),
+    ])
+    .dump()
+}
+
+/// Detached waiter: block until the local job is terminal, render the
+/// protocol-v2 reply under the *fabric* id, ship it as a `done` line.
+/// The consuming wait frees the local record, exactly like a client
+/// `op:"wait"` would.
+fn spawn_done_waiter(ctx: &ConnCtx, writer: &Arc<Mutex<TcpStream>>, fid: u64, local: u64) {
+    let ctx = ctx.clone();
+    let writer = writer.clone();
+    thread::Builder::new()
+        .name(format!("speca-fabric-done-{fid}"))
+        .spawn(move || {
+            let Some((status, rl)) = ctx.manager.wait(local, None, true) else { return };
+            let line = Json::obj(vec![
+                ("fabric", Json::str("done")),
+                ("id", Json::Num(fid as f64)),
+                ("reply", status_json(&ctx, fid, &status, rl)),
+            ])
+            .dump();
+            send_line(&writer, &line);
+        })
+        .expect("spawning fabric done waiter");
+}
+
+/// Track a freshly submitted fabric job: terminal-at-submission jobs
+/// answer immediately (there will never be a consuming wait), live ones
+/// get id-map entries and a done waiter.
+#[allow(clippy::too_many_arguments)]
+fn track_submission(
+    ctx: &ConnCtx,
+    writer: &Arc<Mutex<TcpStream>>,
+    local_of: &mut HashMap<u64, u64>,
+    fid_of: &mut HashMap<u64, u64>,
+    fid: u64,
+    local: u64,
+    status: &JobStatus,
+) {
+    if matches!(status, JobStatus::Rejected { .. } | JobStatus::Aborted { .. }) {
+        let line = Json::obj(vec![
+            ("fabric", Json::str("done")),
+            ("id", Json::Num(fid as f64)),
+            ("reply", status_json(ctx, fid, status, false)),
+        ])
+        .dump();
+        ctx.manager.forget(local);
+        send_line(writer, &line);
+    } else {
+        local_of.insert(fid, local);
+        fid_of.insert(local, fid);
+        spawn_done_waiter(ctx, writer, fid, local);
+    }
+}
+
+/// The pong body for heartbeat `seq`: shard gauges (dead shards are
+/// `null`, like `op:"stats"`), the stats body, and the spilled
+/// checkpoint images of everything in flight, tagged by fabric id.
+/// Locally submitted jobs (direct client connections to this worker)
+/// have no fabric id and are omitted — the router never owned them.
+fn pong_line(ctx: &ConnCtx, fid_of: &HashMap<u64, u64>, seq: u64) -> String {
+    let loads = ctx.manager.shard_loads();
+    let work = ctx.manager.shard_work_us();
+    let load_arr = Json::Arr(
+        loads
+            .iter()
+            .map(|l| if *l == usize::MAX { Json::Null } else { Json::Num(*l as f64) })
+            .collect(),
+    );
+    let work_arr = Json::Arr(
+        loads
+            .iter()
+            .zip(&work)
+            .map(|(l, w)| if *l == usize::MAX { Json::Null } else { Json::Num(*w as f64) })
+            .collect(),
+    );
+    let ckpts = Json::Arr(
+        ctx.manager
+            .spill()
+            .iter()
+            .filter_map(|s| {
+                fid_of.get(&s.id).map(|fid| {
+                    Json::obj(vec![
+                        ("id", Json::Num(*fid as f64)),
+                        ("step", Json::Num(s.step as f64)),
+                        ("policy", Json::str(&s.policy)),
+                        ("bytes", Json::str(&hex_encode(&s.bytes))),
+                    ])
+                })
+            })
+            .collect(),
+    );
+    Json::obj(vec![
+        ("fabric", Json::str("pong")),
+        ("seq", Json::Num(seq as f64)),
+        ("loads", load_arr),
+        ("work_us", work_arr),
+        ("ckpts", ckpts),
+        ("completed", Json::Num(ctx.manager.counts().completed as f64)),
+        ("stats", Json::obj(stats_pairs(&ctx.manager))),
+    ])
+    .dump()
+}
+
+/// The fabric session loop: one message per line until `bye` or EOF.
+fn worker_loop(ctx: &ConnCtx, reader: BufReader<TcpStream>, writer: &Arc<Mutex<TcpStream>>) {
+    // fabric id ↔ local job id, pruned on each ping (a consumed local
+    // record will never spill again)
+    let mut local_of: HashMap<u64, u64> = HashMap::new();
+    let mut fid_of: HashMap<u64, u64> = HashMap::new();
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let msg = match Json::parse(&line) {
+            Ok(m) => m,
+            Err(e) => {
+                send_line(writer, &fabric_error(&format!("bad fabric line: {e}")));
+                continue;
+            }
+        };
+        let kind = msg.get("fabric").and_then(|k| k.as_str()).unwrap_or("");
+        match kind {
+            "job" => {
+                let (Some(fid), Some(req)) =
+                    (msg.get("id").and_then(|i| i.as_u64()), msg.get("req"))
+                else {
+                    send_line(writer, &fabric_error("'job' needs numeric 'id' and 'req'"));
+                    continue;
+                };
+                match submit_from_json(ctx, req) {
+                    Err(e) => {
+                        send_line(writer, &fabric_failed(fid, &format!("{e}")));
+                    }
+                    Ok(handle) => {
+                        let local = handle.id().0;
+                        let status = handle.poll();
+                        track_submission(
+                            ctx,
+                            writer,
+                            &mut local_of,
+                            &mut fid_of,
+                            fid,
+                            local,
+                            &status,
+                        );
+                    }
+                }
+            }
+            "resume" => {
+                let (Some(fid), Some(desc), Some(hex)) = (
+                    msg.get("id").and_then(|i| i.as_u64()),
+                    msg.get("policy").and_then(|p| p.as_str()),
+                    msg.get("bytes").and_then(|b| b.as_str()),
+                ) else {
+                    send_line(
+                        writer,
+                        &fabric_error("'resume' needs numeric 'id', 'policy' and 'bytes'"),
+                    );
+                    continue;
+                };
+                let rl = msg.get("return_latent").and_then(|b| b.as_bool()).unwrap_or(false);
+                let ckpt = hex_decode(hex)
+                    .and_then(|bytes| {
+                        let policy = parse_policy(desc, ctx.depth).map_err(|e| format!("{e}"))?;
+                        RequestCheckpoint::from_bytes(&bytes, policy, JobMeta::default())
+                    })
+                    .map_err(|e| format!("decoding spilled checkpoint: {e}"));
+                match ckpt {
+                    Err(e) => {
+                        send_line(writer, &fabric_failed(fid, &e));
+                    }
+                    Ok(ckpt) => {
+                        let handle = ctx.manager.submit_checkpoint(Box::new(ckpt), rl);
+                        let local = handle.id().0;
+                        let status = handle.poll();
+                        track_submission(
+                            ctx,
+                            writer,
+                            &mut local_of,
+                            &mut fid_of,
+                            fid,
+                            local,
+                            &status,
+                        );
+                    }
+                }
+            }
+            "cancel" => {
+                if let Some(local) =
+                    msg.get("id").and_then(|i| i.as_u64()).and_then(|f| local_of.get(&f))
+                {
+                    ctx.manager.cancel(*local);
+                }
+            }
+            "ping" => {
+                let seq = msg.get("seq").and_then(|s| s.as_u64()).unwrap_or(0);
+                fid_of.retain(|local, _| ctx.manager.poll(*local).is_some());
+                local_of.retain(|_, local| ctx.manager.poll(*local).is_some());
+                send_line(writer, &pong_line(ctx, &fid_of, seq));
+            }
+            "bye" => break,
+            other => {
+                send_line(writer, &fabric_error(&format!("unknown fabric message '{other}'")));
+            }
+        }
+    }
+}

@@ -26,6 +26,7 @@ pub mod cache;
 pub mod config;
 pub mod experiments;
 pub mod coordinator;
+pub mod fabric;
 pub mod math;
 pub mod metrics;
 pub mod runtime;

@@ -165,7 +165,20 @@ COMMANDS:
                              one cancel token — op=cancel group:N sweeps
                              it; op=stats adds parked/resumed/stolen/
                              migrated + per-group counts (DESIGN.md §13);
-                             v1 op=generate shim)
+                             v1 op=generate shim; op=hello proto check;
+                             op=metrics Prometheus-style text)
+  serve --fabric-router      fabric front door (DESIGN.md §15): serves
+      --addr 127.0.0.1:7433 --workers-addr 127.0.0.1:7434
+      --heartbeat-ms 250 --miss-limit 3 --max-queue 4096
+                             protocol v2 on --addr, workers join on
+                             --workers-addr; work-weighted routing off
+                             heartbeat gauges; a dead worker's in-flight
+                             jobs resume on live peers from spilled
+                             checkpoints (no accepted job is lost)
+  serve --fabric-worker      one shard-pool process joined to a router
+      --join 127.0.0.1:7434 --addr 127.0.0.1:0 --model dit-sim
+      --shards S             (--addr is its own direct serving port for
+                             debugging; 0 picks a free port)
   load                       load generator against a server
       --addr 127.0.0.1:7433 --n 32 --conns 4 --policy speca
       --rate R               open-loop mode: Poisson arrivals at R req/s
@@ -175,7 +188,10 @@ COMMANDS:
       table1..table8 | drafts | fig2|fig6|fig8|fig9 | speedup-law
       | serve-openloop (p50/p99/p999 + rejection rate + checkpoint
         counters per rate → results/openloop.csv;
-        --rates 0.5,1,2,4 --shards S)
+        --rates 0.5,1,2,4 --shards S;
+        --workers N: spawn a local fabric — router + N worker
+        processes' worth of pools in-process — and sweep worker counts
+        1..=N for capacity scaling → results/fabric.csv)
       | adaptive (sample-adaptive error-budget sweep over scripted
         easy/medium/hard drift buckets → results/adaptive.csv;
         policy key adaptive=<budget>, wire field adaptive:<budget>)
@@ -358,7 +374,53 @@ fn generate(args: &Args) -> Result<()> {
     })
 }
 
+/// `speca serve --fabric-router`: the fabric front door. No model —
+/// the router holds no engine, only sessions, the job ledger, and the
+/// metrics plane; workers bring the compute when they join.
+fn serve_fabric_router(args: &Args) -> Result<()> {
+    let cfg = speca::fabric::RouterConfig {
+        addr: args.str("addr", "127.0.0.1:7433"),
+        workers_addr: args.str("workers-addr", "127.0.0.1:7434"),
+        max_queue: args.usize("max-queue", 4096),
+        heartbeat_ms: args.u64("heartbeat-ms", 250),
+        miss_limit: args.u64("miss-limit", 3) as u32,
+    };
+    let handle = speca::fabric::spawn_router(&cfg)?;
+    handle.join()
+}
+
+/// `speca serve --fabric-worker --join <router>`: one shard-pool
+/// process joined to a router's fabric port.
+fn serve_fabric_worker(args: &Args) -> Result<()> {
+    let req = BackendRequest::from_args(args);
+    resolve::with_model(&req, |model| {
+        let backend = model.backend();
+        backend.warmup(&["full", "block", "head"], &backend.entry().config.buckets)?;
+        let opts = run_opts(args, 0)?;
+        let Some(shared) = model.shared() else {
+            bail!("--fabric-worker needs a Send + Sync backend (use --backend native)");
+        };
+        let cfg = speca::fabric::WorkerConfig {
+            join: args.str("join", "127.0.0.1:7434"),
+            addr: args.str("addr", "127.0.0.1:0"),
+            max_queue: args.usize("max-queue", 1024),
+            shards: opts.shards.max(1),
+            router: opts.router,
+            default_draft: opts.draft.clone(),
+        };
+        let done = speca::fabric::run_worker(shared, opts.engine_config(), &cfg)?;
+        println!("served {done} requests");
+        Ok(())
+    })
+}
+
 fn serve(args: &Args) -> Result<()> {
+    if args.bool("fabric-router") {
+        return serve_fabric_router(args);
+    }
+    if args.bool("fabric-worker") {
+        return serve_fabric_worker(args);
+    }
     let req = BackendRequest::from_args(args);
     resolve::with_model(&req, |model| {
         // prepare the hot entry points before admitting traffic

@@ -13,6 +13,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
+use crate::fabric::{WIRE_PROTO, WIRE_VERSION};
 use crate::metrics::stats::Histogram;
 use crate::util::json::Json;
 use crate::workload::poisson_arrivals;
@@ -47,6 +48,37 @@ pub struct LoadReport {
     pub latency: Histogram,
     /// mean per-request FLOPs speedup reported by the server
     pub mean_speedup: f64,
+}
+
+/// Lead a v2 connection with the `op:"hello"` protocol exchange:
+/// announce `speca` v2, verify the peer answers with the same protocol
+/// and version, and fail fast with the peer's structured error (never a
+/// hang) on a mismatch — a v1-only server, or a fabric port dialed by
+/// mistake, is caught here before any job is submitted. Returns the
+/// peer's advertised role (`server`, `router`, `worker`).
+pub fn hello_exchange(
+    stream: &mut TcpStream,
+    reader: &mut BufReader<TcpStream>,
+) -> Result<String> {
+    let req = Json::obj(vec![
+        ("op", Json::str("hello")),
+        ("proto", Json::str(WIRE_PROTO)),
+        ("version", Json::Num(WIRE_VERSION as f64)),
+    ]);
+    stream.write_all(req.dump().as_bytes())?;
+    stream.write_all(b"\n")?;
+    let mut line = String::new();
+    reader.read_line(&mut line).context("reading hello reply")?;
+    let resp = Json::parse(&line).context("parsing hello reply")?;
+    if resp.get("ok").and_then(|b| b.as_bool()) != Some(true) {
+        let why = resp.get("error").and_then(|e| e.as_str()).unwrap_or(line.trim());
+        bail!("protocol mismatch: {why}");
+    }
+    let version = resp.get("version").and_then(|v| v.as_u64()).unwrap_or(0);
+    if version != WIRE_VERSION {
+        bail!("peer speaks protocol v{version}, this client needs v{WIRE_VERSION}");
+    }
+    Ok(resp.get("role").and_then(|r| r.as_str()).unwrap_or("server").to_string())
 }
 
 /// Issue one generate request on an open connection; returns (latency_ms,
@@ -261,7 +293,10 @@ fn open_loop_waiter(
     let stream = TcpStream::connect(&addr).ok();
     let mut io = stream.and_then(|s| {
         let r = s.try_clone().ok()?;
-        Some((s, BufReader::new(r)))
+        let mut s = s;
+        let mut reader = BufReader::new(r);
+        hello_exchange(&mut s, &mut reader).ok()?;
+        Some((s, reader))
     });
     for (job, sched) in rx.iter() {
         let Some((stream, reader)) = io.as_mut() else {
@@ -310,6 +345,7 @@ pub fn run_open_loop(cfg: &OpenLoopConfig) -> Result<OpenLoopReport> {
     let mut stream =
         TcpStream::connect(&cfg.addr).with_context(|| format!("connecting to {}", cfg.addr))?;
     let mut reader = BufReader::new(stream.try_clone()?);
+    hello_exchange(&mut stream, &mut reader).context("protocol hello")?;
 
     let waiters = cfg.waiters.max(1);
     let mut txs: Vec<Sender<(u64, Instant)>> = Vec::with_capacity(waiters);
@@ -396,4 +432,20 @@ pub fn stats(addr: &str) -> Result<Json> {
     let mut line = String::new();
     reader.read_line(&mut line)?;
     Ok(Json::parse(&line)?)
+}
+
+/// Fetch the Prometheus-style exposition text behind `op:"metrics"`
+/// (works against a single-process server, a fabric worker, or the
+/// router — they export the same families).
+pub fn metrics(addr: &str) -> Result<String> {
+    let mut s = TcpStream::connect(addr)?;
+    s.write_all(b"{\"op\":\"metrics\"}\n")?;
+    let mut reader = BufReader::new(s.try_clone()?);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let j = Json::parse(&line)?;
+    match j.get("metrics").and_then(|m| m.as_str()) {
+        Some(text) => Ok(text.to_string()),
+        None => bail!("peer returned no metrics text: {}", line.trim()),
+    }
 }

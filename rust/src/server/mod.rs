@@ -136,7 +136,7 @@ fn completion_json(c: &Completion, return_latent: bool, full_flops: u64, steps: 
     Json::obj(pairs)
 }
 
-fn error_json(msg: &str) -> String {
+pub(crate) fn error_json(msg: &str) -> String {
     Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::str(msg))]).dump()
 }
 
@@ -169,16 +169,22 @@ fn spec_from_json(req: &Json, id: u64, policy: Policy) -> RequestSpec {
 // Sharded serving (native / any Send + Sync backend): protocol v2
 // ---------------------------------------------------------------------------
 
-/// Everything a connection thread needs; cloned per connection.
+/// Everything a connection thread needs; cloned per connection. Shared
+/// with the fabric module: a worker process runs this exact connection
+/// handler on its own serving port (so `stats`/`metrics`/direct submits
+/// work per-process), and the fabric worker loop reuses the submit path.
 #[derive(Clone)]
-struct ConnCtx {
-    manager: Arc<JobManager>,
-    accepting: Arc<AtomicBool>,
-    shutdown: Sender<()>,
-    depth: usize,
-    steps: usize,
-    full_flops: u64,
-    default_draft: Option<Draft>,
+pub(crate) struct ConnCtx {
+    pub(crate) manager: Arc<JobManager>,
+    pub(crate) accepting: Arc<AtomicBool>,
+    pub(crate) shutdown: Sender<()>,
+    pub(crate) depth: usize,
+    pub(crate) steps: usize,
+    pub(crate) full_flops: u64,
+    pub(crate) default_draft: Option<Draft>,
+    /// What `op:"hello"` reports this process as (`server` / `worker`;
+    /// the fabric router speaks for itself).
+    pub(crate) role: &'static str,
 }
 
 /// Parse the v2 job options (`priority`, `deadline_ms`, `return_latent`,
@@ -227,7 +233,7 @@ fn submit_options_from_json(req: &Json) -> Result<SubmitOptions> {
 
 /// Render a [`JobStatus`] as a protocol reply object (callers dump it,
 /// possibly after adding reply-specific fields like `timed_out`).
-fn status_json(ctx: &ConnCtx, id: u64, status: &JobStatus, return_latent: bool) -> Json {
+pub(crate) fn status_json(ctx: &ConnCtx, id: u64, status: &JobStatus, return_latent: bool) -> Json {
     let base = |ok: bool| {
         vec![
             ("ok", Json::Bool(ok)),
@@ -277,8 +283,12 @@ fn status_json(ctx: &ConnCtx, id: u64, status: &JobStatus, return_latent: bool) 
     }
 }
 
-/// Parse + submit a job; shared by `op:"submit"` and the v1 shim.
-fn submit_from_json(ctx: &ConnCtx, req: &Json) -> Result<crate::coordinator::JobHandle> {
+/// Parse + submit a job; shared by `op:"submit"`, the v1 shim, and the
+/// fabric worker loop (router-forwarded jobs are submit bodies).
+pub(crate) fn submit_from_json(
+    ctx: &ConnCtx,
+    req: &Json,
+) -> Result<crate::coordinator::JobHandle> {
     let opts = submit_options_from_json(req)?;
     let policy = policy_from_json_with(req, ctx.depth, ctx.default_draft.as_ref())?;
     let (cond, seed) = wire_cond_seed(req);
@@ -436,9 +446,19 @@ fn handle_generate(ctx: &ConnCtx, req: &Json) -> String {
 /// `op:"stats"`: pool counters plus per-shard live data so operators can
 /// see load skew and dead shards without attaching a debugger.
 fn handle_stats(ctx: &ConnCtx) -> String {
-    let s = ctx.manager.stats();
-    let counts = ctx.manager.counts();
-    let loads = ctx.manager.shard_loads();
+    let mut pairs = vec![("ok", Json::Bool(true))];
+    pairs.extend(stats_pairs(&ctx.manager));
+    Json::obj(pairs).dump()
+}
+
+/// The `op:"stats"` body (everything but `ok`). Shared with the fabric:
+/// a worker ships exactly this object in heartbeat replies, so the
+/// router's per-worker breakdown is byte-compatible with asking the
+/// worker directly.
+pub(crate) fn stats_pairs(manager: &JobManager) -> Vec<(&'static str, Json)> {
+    let s = manager.stats();
+    let counts = manager.counts();
+    let loads = manager.shard_loads();
     let dead = loads.iter().filter(|l| **l == usize::MAX).count();
     let shard_loads = Json::Arr(
         loads
@@ -446,18 +466,17 @@ fn handle_stats(ctx: &ConnCtx) -> String {
             .map(|l| if *l == usize::MAX { Json::Null } else { Json::Num(*l as f64) })
             .collect(),
     );
-    Json::obj(vec![
-        ("ok", Json::Bool(true)),
+    vec![
         ("completed", Json::Num(counts.completed as f64)),
         ("inflight", Json::Num(s.inflight as f64)),
-        ("shards", Json::Num(ctx.manager.shards() as f64)),
+        ("shards", Json::Num(manager.shards() as f64)),
         ("shard_loads", shard_loads),
         ("dead_shards", Json::Num(dead as f64)),
         ("ticks", Json::Num(s.ticks as f64)),
         ("alpha", Json::Num(s.flops.acceptance_rate())),
         ("gamma", Json::Num(s.flops.gamma())),
         ("total_flops", Json::Num(s.flops.total() as f64)),
-        ("est_service_ms", Json::Num(ctx.manager.est_service_ms())),
+        ("est_service_ms", Json::Num(manager.est_service_ms())),
         ("parked", Json::Num(s.parked as f64)),
         ("resumed", Json::Num(s.resumed as f64)),
         ("stolen", Json::Num(s.stolen as f64)),
@@ -465,7 +484,7 @@ fn handle_stats(ctx: &ConnCtx) -> String {
         (
             "groups",
             Json::Arr(
-                ctx.manager
+                manager
                     .group_counts()
                     .iter()
                     .map(|g| {
@@ -487,14 +506,49 @@ fn handle_stats(ctx: &ConnCtx) -> String {
                 ("rejected", Json::Num(counts.rejected as f64)),
                 ("cancelled", Json::Num(counts.cancelled as f64)),
                 ("aborted", Json::Num(counts.aborted as f64)),
-                ("live", Json::Num(ctx.manager.live() as f64)),
+                ("live", Json::Num(manager.live() as f64)),
             ]),
         ),
+    ]
+}
+
+/// `op:"hello"`: protocol negotiation (satellite of DESIGN.md §15).
+/// Clients lead with `{"op":"hello","proto":"speca","version":2}`; a
+/// matching peer learns the server's role (`server`/`worker`), a
+/// mismatched peer gets a structured error naming what this port
+/// speaks instead of a hang or a confusing downstream failure.
+fn handle_hello(ctx: &ConnCtx, req: &Json) -> String {
+    use crate::fabric::{WIRE_PROTO, WIRE_VERSION};
+    let proto = req.get("proto").and_then(|p| p.as_str()).unwrap_or(WIRE_PROTO);
+    if proto != WIRE_PROTO {
+        return error_json(&format!(
+            "unknown protocol '{proto}' (this port speaks '{WIRE_PROTO}' v{WIRE_VERSION})"
+        ));
+    }
+    let version = req.get("version").and_then(|v| v.as_u64()).unwrap_or(WIRE_VERSION);
+    if version != WIRE_VERSION {
+        return error_json(&format!(
+            "unsupported protocol version {version} (this port speaks v{WIRE_VERSION})"
+        ));
+    }
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("proto", Json::str(WIRE_PROTO)),
+        ("version", Json::Num(WIRE_VERSION as f64)),
+        ("role", Json::str(ctx.role)),
+        ("shards", Json::Num(ctx.manager.shards() as f64)),
     ])
     .dump()
 }
 
-fn handle_conn_sharded(stream: TcpStream, ctx: ConnCtx) {
+/// `op:"metrics"`: Prometheus-style exposition text (one JSON line with
+/// the document in `metrics`; see [`crate::fabric::metrics`]).
+fn handle_metrics(ctx: &ConnCtx) -> String {
+    let text = crate::fabric::metrics::render_manager_metrics(&ctx.manager);
+    Json::obj(vec![("ok", Json::Bool(true)), ("metrics", Json::str(&text))]).dump()
+}
+
+pub(crate) fn handle_conn_sharded(stream: TcpStream, ctx: ConnCtx) {
     let Ok(mut writer) = stream.try_clone() else { return };
     let reader = BufReader::new(stream);
     for line in reader.lines() {
@@ -512,7 +566,9 @@ fn handle_conn_sharded(stream: TcpStream, ctx: ConnCtx) {
                         let _ = ctx.shutdown.send(());
                         Json::obj(vec![("ok", Json::Bool(true))]).dump()
                     }
+                    "hello" => handle_hello(&ctx, &req),
                     "stats" => handle_stats(&ctx),
+                    "metrics" => handle_metrics(&ctx),
                     "generate" => handle_generate(&ctx, &req),
                     "submit" => handle_submit(&ctx, &req),
                     "poll" => handle_poll(&ctx, &req),
@@ -530,6 +586,27 @@ fn handle_conn_sharded(stream: TcpStream, ctx: ConnCtx) {
             break;
         }
     }
+}
+
+/// Accept loop over `listener`: one thread per connection running
+/// [`handle_conn_sharded`], until `ctx.accepting` clears (poke the port
+/// with a throwaway connect to wake a blocked accept). Shared with the
+/// fabric worker, which serves the same protocol on its own port.
+pub(crate) fn spawn_client_listener(listener: TcpListener, ctx: ConnCtx) -> thread::JoinHandle<()> {
+    thread::spawn(move || {
+        for stream in listener.incoming() {
+            if !ctx.accepting.load(Ordering::SeqCst) {
+                break;
+            }
+            match stream {
+                Ok(s) => {
+                    let conn_ctx = ctx.clone();
+                    thread::spawn(move || handle_conn_sharded(s, conn_ctx));
+                }
+                Err(_) => break,
+            }
+        }
+    })
 }
 
 /// Serve over a [`JobManager`]: N engine loops on worker threads, the
@@ -571,33 +648,17 @@ pub fn serve_sharded(
     let (shutdown_tx, shutdown_rx) = channel::<()>();
 
     // acceptor: one thread per connection, each with its own manager Arc
-    let acceptor = {
-        let ctx = ConnCtx {
-            manager: manager.clone(),
-            accepting: accepting.clone(),
-            shutdown: shutdown_tx.clone(),
-            depth,
-            steps,
-            full_flops,
-            default_draft: cfg.default_draft.clone(),
-        };
-        let accepting = accepting.clone();
-        let listener = listener.try_clone()?;
-        thread::spawn(move || {
-            for stream in listener.incoming() {
-                if !accepting.load(Ordering::SeqCst) {
-                    break;
-                }
-                match stream {
-                    Ok(s) => {
-                        let conn_ctx = ctx.clone();
-                        thread::spawn(move || handle_conn_sharded(s, conn_ctx));
-                    }
-                    Err(_) => break,
-                }
-            }
-        })
+    let ctx = ConnCtx {
+        manager: manager.clone(),
+        accepting: accepting.clone(),
+        shutdown: shutdown_tx.clone(),
+        depth,
+        steps,
+        full_flops,
+        default_draft: cfg.default_draft.clone(),
+        role: "server",
     };
+    let acceptor = spawn_client_listener(listener.try_clone()?, ctx);
     drop(shutdown_tx);
     eprintln!(
         "speca: serving on {} (protocol v2, {} shard(s), {:?} router)",
@@ -644,6 +705,16 @@ fn handle_conn(stream: TcpStream, tx: Sender<FrontendMsg>) {
                         let _ = tx.send(FrontendMsg::Shutdown);
                         Json::obj(vec![("ok", Json::Bool(true))]).dump()
                     }
+                    // protocol negotiation: this loop speaks v1 only,
+                    // and says so — a v2 client's hello check fails
+                    // structurally instead of on a confusing job op
+                    "hello" => Json::obj(vec![
+                        ("ok", Json::Bool(true)),
+                        ("proto", Json::str(crate::fabric::WIRE_PROTO)),
+                        ("version", Json::Num(1.0)),
+                        ("role", Json::str("server-v1")),
+                    ])
+                    .dump(),
                     "stats" => {
                         let (rtx, rrx) = channel();
                         if tx.send(FrontendMsg::Stats { reply: rtx }).is_err() {

@@ -1,0 +1,243 @@
+//! Integration: the multi-process serving fabric end-to-end over
+//! loopback TCP — router + two workers in-process (threads stand in for
+//! processes; the boundary is real TCP either way), driven through the
+//! client-facing wire protocol v2.
+//!
+//! The headline test kills one worker mid-request and asserts the
+//! no-lost-accepted-jobs contract: every job the router acked completes
+//! with a final latent bitwise-identical to a single-process reference
+//! run of the same (cond, seed, policy) on the same deterministic
+//! error-injection backend (`speca::workload::scripted`), whether the
+//! job rode out the failure on the surviving worker, resumed there from
+//! a spilled checkpoint, or was re-run from scratch under its pinned
+//! seed. The failover counters and the Prometheus-style `op:"metrics"`
+//! plane are asserted in the same run; protocol-hardening paths
+//! (structured errors for wrong-port/wrong-version peers) get their own
+//! test.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use speca::config::ModelConfig;
+use speca::coordinator::state::RequestSpec;
+use speca::coordinator::{Engine, EngineConfig, JobMeta};
+use speca::fabric::{spawn_router, spawn_worker, RouterConfig, WorkerConfig};
+use speca::runtime::ModelBackend;
+use speca::server::client;
+use speca::util::json::Json;
+use speca::workload::parse_policy;
+use speca::workload::scripted::ScriptedBackend;
+
+/// Alternating tiny/large drift: a mixed accept/reject verify trace, so
+/// checkpoints carry non-trivial cache + controller state.
+const DRIFT: &[f32] = &[0.001, 0.35];
+const POLICY: &str = "speca:N=4,O=1,tau0=0.3,beta=0.05";
+
+fn send(stream: &mut TcpStream, reader: &mut BufReader<TcpStream>, req: &str) -> Json {
+    stream.write_all(req.as_bytes()).unwrap();
+    stream.write_all(b"\n").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    Json::parse(&line).unwrap_or_else(|e| panic!("bad response '{line}': {e}"))
+}
+
+fn connect(addr: &str) -> (TcpStream, BufReader<TcpStream>) {
+    let stream = TcpStream::connect(addr).expect("connecting");
+    let reader = BufReader::new(stream.try_clone().unwrap());
+    (stream, reader)
+}
+
+/// Single-process reference: the final latent of (cond, seed) under
+/// `POLICY` on a drift-identical (but undelayed) scripted backend.
+fn reference_latent(model: &Arc<ScriptedBackend>, cond: i32, seed: u64) -> Vec<f32> {
+    let depth = model.entry().config.depth;
+    let mut engine = Engine::new(model.clone(), EngineConfig::default());
+    engine.submit(RequestSpec {
+        id: seed,
+        cond,
+        seed,
+        policy: parse_policy(POLICY, depth).unwrap(),
+        record_traj: false,
+        meta: JobMeta::default(),
+    });
+    let mut done = engine.run_to_completion().unwrap();
+    assert_eq!(done.len(), 1);
+    done.pop().unwrap().latent
+}
+
+/// The value of an unlabelled sample line in Prometheus exposition text.
+fn metric_value(text: &str, name: &str) -> Option<f64> {
+    text.lines().find_map(|l| l.strip_prefix(&format!("{name} "))?.trim().parse().ok())
+}
+
+#[test]
+fn dead_worker_failover_loses_no_accepted_jobs() {
+    let cfg = ModelConfig::native_test();
+    // per-step delay keeps every job in flight long enough to be killed
+    // mid-request and to cross at least one heartbeat (spill) boundary
+    let slow =
+        Arc::new(ScriptedBackend::new(cfg.clone(), DRIFT).with_delay(Duration::from_millis(5)));
+    let fast = Arc::new(ScriptedBackend::new(cfg, DRIFT));
+
+    // a tight heartbeat spills checkpoints often; the generous miss
+    // limit means death is detected by the dropped connection (instant,
+    // deterministic), not by timing-sensitive missed-pong accounting
+    let router = spawn_router(&RouterConfig {
+        addr: "127.0.0.1:0".into(),
+        workers_addr: "127.0.0.1:0".into(),
+        heartbeat_ms: 25,
+        miss_limit: 40,
+        ..RouterConfig::default()
+    })
+    .unwrap();
+    let addr = router.addr().to_string();
+    let join = router.workers_addr().to_string();
+    let mk_worker = || {
+        spawn_worker(
+            slow.clone(),
+            EngineConfig::default(),
+            &WorkerConfig { join: join.clone(), ..WorkerConfig::default() },
+        )
+        .unwrap()
+    };
+    let w0 = mk_worker();
+    let w1 = mk_worker();
+    for _ in 0..400 {
+        if router.workers_live() == 2 {
+            break;
+        }
+        thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(router.workers_live(), 2, "both workers joined");
+
+    let (mut stream, mut reader) = connect(&addr);
+    let role = client::hello_exchange(&mut stream, &mut reader).unwrap();
+    assert_eq!(role, "router");
+
+    // submit 8 jobs; the booking-weighted router spreads them over both
+    // workers, so the kill below always orphans in-flight work
+    let n = 8usize;
+    let mut jobs = Vec::new();
+    for i in 0..n {
+        let (cond, seed) = ((i % 4) as i32, 5000 + i as u64);
+        let req = format!(
+            "{{\"op\":\"submit\",\"cond\":{cond},\"seed\":{seed},\
+             \"policy\":\"{POLICY}\",\"return_latent\":true}}"
+        );
+        let ack = send(&mut stream, &mut reader, &req);
+        assert_eq!(ack.req("ok").as_bool(), Some(true), "submit {i} acked");
+        assert_eq!(ack.req("state").as_str(), Some("queued"), "submit {i} accepted");
+        jobs.push((ack.req("job").as_u64().unwrap(), cond, seed));
+    }
+
+    // let the jobs get airborne (and at least one heartbeat spill
+    // through), then kill worker 0 mid-flight — socket torn down, pool
+    // abandoned, no drain
+    thread::sleep(Duration::from_millis(40));
+    w0.kill();
+
+    // every accepted job must still complete, bitwise-identical to the
+    // single-process reference
+    for (job, cond, seed) in &jobs {
+        let reply = send(&mut stream, &mut reader, &format!("{{\"op\":\"wait\",\"job\":{job}}}"));
+        assert_eq!(
+            reply.req("state").as_str(),
+            Some("completed"),
+            "job {job} survived the failover: {}",
+            reply.dump()
+        );
+        let got = reply.req("latent").f32s();
+        let want = reference_latent(&fast, *cond, *seed);
+        assert!(!want.is_empty(), "reference produced a latent");
+        assert_eq!(got, want, "job {job} (cond {cond}, seed {seed}) latent drifted");
+    }
+
+    assert_eq!(router.failovers(), 1, "exactly the killed worker failed over");
+    assert!(router.requeued_jobs() >= 1, "the dead worker's in-flight jobs were re-queued");
+    assert_eq!(router.workers_live(), 1, "one survivor");
+
+    // the metrics plane agrees, in parseable exposition text
+    let text = client::metrics(&addr).unwrap();
+    assert!(text.contains("# TYPE speca_failovers_total counter"), "{text}");
+    assert_eq!(metric_value(&text, "speca_failovers_total"), Some(1.0), "{text}");
+    assert_eq!(metric_value(&text, "speca_workers_live"), Some(1.0), "{text}");
+    assert!(
+        metric_value(&text, "speca_requeued_jobs_total").unwrap_or(0.0) >= 1.0,
+        "{text}"
+    );
+
+    // the surviving worker's own serving port exports manager metrics
+    let wtext = client::metrics(&w1.client_addr().to_string()).unwrap();
+    assert!(wtext.contains("# TYPE speca_shard_up gauge"), "{wtext}");
+    assert!(
+        metric_value(&wtext, "speca_jobs_completed_total").unwrap_or(0.0) >= 1.0,
+        "worker 1 completed failed-over work: {wtext}"
+    );
+
+    // aggregated stats null the dead worker like a dead shard
+    let stats = client::stats(&addr).unwrap();
+    let workers = stats.req("workers").as_arr().unwrap().clone();
+    assert_eq!(workers.len(), 2);
+    assert_eq!(workers[0], Json::Null, "dead worker reports null");
+    assert!(workers[1].get("shard_loads").is_some(), "live worker reports its stats body");
+
+    drop((stream, reader));
+    client::shutdown(&addr);
+    router.join().unwrap();
+    w1.join().unwrap();
+}
+
+#[test]
+fn fabric_ports_reject_strangers_with_structured_errors() {
+    let router = spawn_router(&RouterConfig {
+        addr: "127.0.0.1:0".into(),
+        workers_addr: "127.0.0.1:0".into(),
+        ..RouterConfig::default()
+    })
+    .unwrap();
+    let addr = router.addr().to_string();
+    let fabric_addr = router.workers_addr().to_string();
+
+    // a v2 client op on the fabric port: structured error, then close —
+    // never a hang or a silent drop
+    let (mut s, mut r) = connect(&fabric_addr);
+    let resp = send(&mut s, &mut r, "{\"op\":\"submit\",\"cond\":1}");
+    assert_eq!(resp.req("ok").as_bool(), Some(false));
+    let err = resp.req("error").as_str().unwrap_or_default().to_string();
+    assert!(err.contains("SPFB"), "error names the expected handshake: {err}");
+    let mut rest = String::new();
+    assert_eq!(r.read_line(&mut rest).unwrap(), 0, "connection closed after the error");
+
+    // version skew on the client port is named explicitly
+    let (mut s, mut r) = connect(&addr);
+    let resp = send(&mut s, &mut r, "{\"op\":\"hello\",\"proto\":\"speca\",\"version\":9}");
+    assert_eq!(resp.req("ok").as_bool(), Some(false));
+    let err = resp.req("error").as_str().unwrap_or_default().to_string();
+    assert!(err.contains("version 9"), "{err}");
+
+    // wrong protocol name, same deal
+    let resp = send(&mut s, &mut r, "{\"op\":\"hello\",\"proto\":\"http\"}");
+    assert_eq!(resp.req("ok").as_bool(), Some(false));
+
+    // unknown ops are structured errors, not silent generates
+    let resp = send(&mut s, &mut r, "{\"op\":\"frobnicate\"}");
+    assert_eq!(resp.req("ok").as_bool(), Some(false));
+    let err = resp.req("error").as_str().unwrap_or_default().to_string();
+    assert!(err.contains("unknown op"), "{err}");
+
+    // a well-formed hello succeeds and names the role
+    let role = client::hello_exchange(&mut s, &mut r).unwrap();
+    assert_eq!(role, "router");
+
+    // submitting with no workers joined is an explicit abort, not a hang
+    let resp = send(&mut s, &mut r, "{\"op\":\"submit\",\"cond\":0}");
+    assert_eq!(resp.req("ok").as_bool(), Some(false));
+    assert_eq!(resp.req("state").as_str(), Some("aborted"));
+
+    drop((s, r));
+    client::shutdown(&addr);
+    router.join().unwrap();
+}
