@@ -6,7 +6,7 @@
 //! A [`DraftStrategy`] maps one tap's cached trajectory state (a
 //! [`TapHistory`] view over the rolling backward differences Δ⁰..Δᵐ kept
 //! by [`TapCache`](crate::cache::TapCache)) plus a horizon `k` to a
-//! predicted feature. Five strategies ship:
+//! predicted feature. Six strategies ship:
 //!
 //! * `reuse` — F̂(k) = Δ⁰ (order-0, FORA-style);
 //! * `adams-bashforth` — F̂(k) = Δ⁰ + r·Δ¹ with r = k/N (2-point linear
@@ -19,7 +19,13 @@
 //! * `learned-linear` — SpecDiff-flavored online ridge fit: per channel,
 //!   a line anchored at the newest snapshot is fit over the reconstructed
 //!   refresh-point history and extrapolated to `k` (no offline training,
-//!   no artifacts).
+//!   no artifacts);
+//! * `spectral` — damped DCT extrapolation over the reconstructed
+//!   refresh-point history (Adaptive Spectral Feature
+//!   Forecasting-style): the high-frequency tail is shrunk by `damp`ⁿ
+//!   before evaluating the basis past the window, trading a little lag
+//!   for much smoother long-horizon forecasts (lookahead-k runs,
+//!   DESIGN.md §16).
 //!
 //! Strategies are resolved by name through a [`DraftRegistry`]
 //! (case-insensitive, with aliases), shared across engine shards as
@@ -32,6 +38,7 @@
 //! enum paths.
 
 use std::collections::BTreeMap;
+use std::f32::consts::PI;
 use std::fmt;
 use std::sync::{Arc, OnceLock};
 
@@ -329,6 +336,100 @@ impl DraftStrategy for LearnedLinearDraft {
     }
 }
 
+/// Frequency-domain draft: per-channel DCT extrapolation over the tap
+/// history with the high-frequency tail damped (Adaptive Spectral
+/// Feature Forecasting-style; DESIGN.md §16).
+///
+/// The cached factors Δ⁰..Δᵐ reconstruct the last m+1 refresh snapshots
+/// F₋ⱼ = Σᵢ (−1)ⁱ·C(j,i)·Δⁱ. Viewing them as a chronological signal
+/// g₀..gₘ (gₘ = F₀, one sample per refresh), the draft takes its DCT-II,
+/// damps coefficient n by `damp`ⁿ — trajectories of transformer features
+/// are smooth across refreshes, so the high-frequency content is mostly
+/// verification-failing noise — and evaluates the damped basis at the
+/// fractional position p* = m + k/N past the window:
+///
+///   F̂(k) = (2/L)·(C₀/2 + Σ_{n≥1} dampⁿ·Cₙ·cos(πn(p*+½)/L)),  L = m+1
+///
+/// Because every snapshot is a fixed linear combination of the factors,
+/// the whole transform collapses to scalar weights over Δ⁰..Δᵐ computed
+/// once per call — the per-channel work is the same axpy sweep the
+/// polynomial drafts do, with no per-call allocation. The weights sum
+/// to exactly 1 at every horizon (DCT orthogonality), so constant
+/// trajectories are predicted exactly; with no observed differences
+/// (usable order 0) the draft degrades to reuse.
+#[derive(Debug, Clone, Copy)]
+pub struct SpectralDraft {
+    /// Per-coefficient damping `damp` ∈ [0, 1] applied as dampⁿ to DCT
+    /// coefficient n; 1 = undamped extrapolation, 0 keeps only the DC
+    /// term (the prediction collapses to the window mean).
+    damp: f32,
+}
+
+impl SpectralDraft {
+    /// Draft with an explicit damping factor, clamped into [0, 1].
+    pub fn new(damp: f32) -> SpectralDraft {
+        SpectralDraft { damp: damp.clamp(0.0, 1.0) }
+    }
+
+    /// The high-frequency damping factor this instance extrapolates with.
+    pub fn damp(&self) -> f32 {
+        self.damp
+    }
+
+    /// Weight of chronological snapshot `p` (0 oldest, `m` newest) in the
+    /// damped-DCT extrapolation to position `pstar` over a window of
+    /// `m + 1` samples. Exposed to the crate so tests can check the
+    /// collapsed axpy sweep against a direct scalar DCT oracle.
+    pub(crate) fn snapshot_weight(&self, m: usize, p: usize, pstar: f32) -> f32 {
+        let l = (m + 1) as f32;
+        let mut w = 0.5f32;
+        for n in 1..=m {
+            let basis_p = (PI * n as f32 * (p as f32 + 0.5) / l).cos();
+            let basis_star = (PI * n as f32 * (pstar + 0.5) / l).cos();
+            w += self.damp.powi(n as i32) * basis_p * basis_star;
+        }
+        w * 2.0 / l
+    }
+}
+
+impl Default for SpectralDraft {
+    /// The registry default: damp = 0.7, a strong shrink of the tail.
+    fn default() -> SpectralDraft {
+        SpectralDraft::new(0.7)
+    }
+}
+
+impl DraftStrategy for SpectralDraft {
+    fn name(&self) -> &str {
+        "spectral"
+    }
+
+    fn max_order(&self, configured: usize) -> usize {
+        configured
+    }
+
+    fn predict_into(&self, history: &TapHistory<'_>, k: f32, out: &mut [f32]) {
+        let m = history.usable_order().min(history.max_order());
+        if m == 0 {
+            out.copy_from_slice(history.factor(0));
+            return;
+        }
+        let pstar = m as f32 + k / history.interval();
+        out.fill(0.0);
+        // Fold the snapshot weights into per-factor scalars: snapshot at
+        // chronological position p is F₋(m−p) = Σᵢ (−1)ⁱ·C(m−p,i)·Δⁱ, and
+        // C(j,i) = 0 for i > j keeps the sweep triangular.
+        for i in 0..=m {
+            let sign = if i % 2 == 0 { 1.0f32 } else { -1.0 };
+            let mut v = 0.0f32;
+            for p in 0..=(m - i) {
+                v += self.snapshot_weight(m, p, pstar) * binom(m - p, i);
+            }
+            Tensor::axpy(sign * v, history.factor(i), out);
+        }
+    }
+}
+
 /// The process-wide default Taylor strategy (what non-SpeCa cache
 /// policies such as TaylorSeer draft with).
 pub fn taylor_default() -> &'static (dyn DraftStrategy + Send + Sync) {
@@ -433,7 +534,7 @@ impl DraftRegistry {
         DraftRegistry { entries: BTreeMap::new(), aliases: BTreeMap::new() }
     }
 
-    /// A registry holding the five built-in strategies and their aliases.
+    /// A registry holding the six built-in strategies and their aliases.
     pub fn with_builtins() -> DraftRegistry {
         let mut reg = DraftRegistry::empty();
         reg.register(
@@ -455,6 +556,10 @@ impl DraftRegistry {
         reg.register(
             "online per-channel ridge line fit over the tap history (SpecDiff-style)",
             Arc::new(LearnedLinearDraft::default()),
+        );
+        reg.register(
+            "damped DCT extrapolation over the tap history (spectral forecasting)",
+            Arc::new(SpectralDraft::default()),
         );
         reg.alias("adams", "adams-bashforth");
         reg.alias("ab", "adams-bashforth");
@@ -532,20 +637,26 @@ mod tests {
             ("richardson", "richardson"),
             ("Learned", "learned-linear"),
             ("specdiff", "learned-linear"),
+            ("spectral", "spectral"),
+            ("Spectral", "spectral"),
             (" taylor ", "taylor"),
         ] {
             assert_eq!(reg.resolve(name).unwrap().name(), expect, "{name}");
         }
-        assert_eq!(reg.names().len(), 5);
-        assert_eq!(reg.list().len(), 5);
+        assert_eq!(reg.names().len(), 6);
+        assert_eq!(reg.list().len(), 6);
     }
 
     #[test]
     fn registry_error_lists_names() {
+        // The unknown-name error is built from the registry, never from a
+        // hand-maintained list — every registered strategy must appear,
+        // including ones added after the message was written.
         let err = DraftRegistry::global().resolve("warp").unwrap_err().to_string();
         for name in DraftRegistry::global().names() {
             assert!(err.contains(name), "error should list '{name}': {err}");
         }
+        assert!(err.contains("spectral"), "registry must ship spectral: {err}");
     }
 
     #[test]
@@ -618,6 +729,42 @@ mod tests {
         for c in 0..4 {
             assert!((lin[c] - ab[c]).abs() < 1e-5, "channel {c}");
         }
+    }
+
+    #[test]
+    fn spectral_is_exact_on_constant_trajectories() {
+        // All snapshots equal ⇒ Δ⁰ = a, Δ¹.. = 0; DCT orthogonality makes
+        // the snapshot weights sum to exactly 1 at every horizon.
+        for m in 1..=3usize {
+            let mut f = vec![vec![0.0f32; 2]; m + 1];
+            f[0] = vec![4.25, -1.5];
+            let h = TapHistory::new(&f, m, 5.0);
+            let mut out = vec![0.0f32; 2];
+            for k in [1.0f32, 3.0, 12.0] {
+                SpectralDraft::default().predict_into(&h, k, &mut out);
+                for c in 0..2 {
+                    assert!((out[c] - f[0][c]).abs() < 1e-5, "m={m} k={k} channel {c}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn spectral_usable_order_zero_is_reuse() {
+        let f = factors(2, 3);
+        let h = TapHistory::new(&f, 0, 5.0);
+        let mut out = vec![0.0f32; 3];
+        SpectralDraft::default().predict_into(&h, 7.0, &mut out);
+        assert_eq!(out, f[0]);
+    }
+
+    #[test]
+    fn spectral_damp_is_clamped_and_reported() {
+        assert_eq!(SpectralDraft::new(2.0).damp(), 1.0);
+        assert_eq!(SpectralDraft::new(-1.0).damp(), 0.0);
+        assert_eq!(SpectralDraft::default().damp(), 0.7);
+        assert_eq!(SpectralDraft::default().name(), "spectral");
+        assert_eq!(SpectralDraft::default().max_order(3), 3);
     }
 
     #[test]

@@ -14,7 +14,7 @@
 //!
 //! *How* a prediction is formed from the cached differences is pluggable:
 //! the [`draft`] submodule defines the object-safe
-//! [`DraftStrategy`](draft::DraftStrategy) trait, the five shipped
+//! [`DraftStrategy`](draft::DraftStrategy) trait, the six shipped
 //! strategies, and the name-keyed [`DraftRegistry`](draft::DraftRegistry)
 //! (DESIGN.md §10). The [`DraftKind`] enum is kept as the legacy reference
 //! implementation of the original three drafts; `tests/draft_parity.rs`
@@ -398,6 +398,7 @@ mod tests {
         assert_eq!(DraftKind::parse("AB"), Some(DraftKind::AdamsBashforth));
         assert_eq!(DraftKind::parse(" REUSE "), Some(DraftKind::Reuse));
         assert_eq!(DraftKind::parse("richardson"), None); // trait-only strategy
+        assert_eq!(DraftKind::parse("spectral"), None); // trait-only strategy
     }
 
     #[test]

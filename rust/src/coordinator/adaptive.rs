@@ -22,7 +22,13 @@
 //!   budget is exhausted) the controller routes every step to a full
 //!   forward pass. Streak-triggered fallback is probational: after
 //!   [`DENSE_PROBATION`] dense steps the controller retries speculation
-//!   at the most conservative rung. Budget-exhausted fallback is final.
+//!   at the most conservative rung. Budget-exhausted fallback is final;
+//! * **lookahead k-ladder** (DESIGN.md §16) — when the policy enables
+//!   lookahead-k speculation (`lookahead=<cap>` with cap ≥ 2), the
+//!   controller also owns the current run length k ∈ [1, cap]: every
+//!   [`LOOK_GROW_AFTER`] consecutive accepted verifications grow k by
+//!   one toward the policy cap, and any rejection halves it (integer,
+//!   floor 1). Static (non-adaptive) requests run at the cap directly.
 //!
 //! The controller's mutable state is a `Copy` scalar block
 //! ([`AdaptiveSnap`]) so the engine's tick-snapshot/rollback crash
@@ -42,6 +48,9 @@ pub const LOOSEN_AFTER: u32 = 3;
 pub const DENSE_PROBATION: u32 = 3;
 /// Floor of the tighten/loosen threshold multiplier.
 pub const TAU_SCALE_MIN: f64 = 0.25;
+/// Consecutive accepted verifications before the lookahead run length
+/// grows one step toward the policy cap (DESIGN.md §16).
+pub const LOOK_GROW_AFTER: u32 = 2;
 
 /// The controller's mutable scalar state.
 ///
@@ -68,10 +77,32 @@ pub struct AdaptiveSnap {
     pub probation: u32,
     /// Lifetime count of controller-forced dense steps (reporting).
     pub dense_steps: u64,
+    /// Current lookahead run length k (k-ladder position, ≥ 1; clamped
+    /// to the policy cap when read through
+    /// [`AdaptiveController::lookahead`]).
+    pub look: u32,
+    /// Consecutive accepted verifications since k last changed.
+    pub look_streak: u32,
+}
+
+impl AdaptiveSnap {
+    /// Accept threshold given this scalar state: the remaining budget
+    /// spread over the remaining steps, clamped by the schedule's τ and
+    /// scaled by the streak multiplier. Exposed on the snapshot (not
+    /// just the controller) because the engine's lookahead audit
+    /// re-evaluates intermediate steps against the controller state *at
+    /// run time* — i.e. against the tick snapshot taken before the
+    /// verify outcome mutated the live controller (DESIGN.md §16).
+    pub fn threshold(&self, base_tau: f64, steps_left: usize) -> f64 {
+        let allowance = self.budget_left / steps_left.max(1) as f64;
+        base_tau.min(allowance).max(0.0) * self.tau_scale
+    }
 }
 
 /// Serializable controller image carried by [`RequestCheckpoint`]
-/// (SPCK v2 appendix; see DESIGN.md §14 for the compatibility rules).
+/// (SPCK v2 appendix, extended with the k-ladder fields in v3 — v2
+/// images decode with `look = 1`; see DESIGN.md §14/§16 for the
+/// compatibility rules).
 ///
 /// [`RequestCheckpoint`]: crate::coordinator::state::RequestCheckpoint
 #[derive(Debug, Clone, PartialEq)]
@@ -99,6 +130,9 @@ pub struct AdaptiveController {
     /// from the configured draft plus the registry's conservative rungs;
     /// the hot loop only indexes it.
     ladder: Vec<Draft>,
+    /// Policy cap on the lookahead run length (the `lookahead=<k>` key;
+    /// 1 disables lookahead speculation entirely).
+    look_cap: u32,
     snap: AdaptiveSnap,
 }
 
@@ -122,10 +156,13 @@ fn build_ladder(configured: &Draft) -> Vec<Draft> {
 impl AdaptiveController {
     /// Fresh controller for a request admitted with `budget` total
     /// rel-error tolerance, speculating with `configured` at rung 0.
-    pub fn new(budget: f64, configured: &Draft) -> AdaptiveController {
+    /// `look_cap` is the policy's lookahead ceiling (clamped to ≥ 1); the
+    /// k-ladder starts at 1 and grows toward it on sustained acceptance.
+    pub fn new(budget: f64, configured: &Draft, look_cap: usize) -> AdaptiveController {
         AdaptiveController {
             total: budget,
             ladder: build_ladder(configured),
+            look_cap: look_cap.max(1).min(u32::MAX as usize) as u32,
             snap: AdaptiveSnap {
                 budget_left: budget,
                 tau_scale: 1.0,
@@ -135,6 +172,8 @@ impl AdaptiveController {
                 dense: false,
                 probation: 0,
                 dense_steps: 0,
+                look: 1,
+                look_streak: 0,
             },
         }
     }
@@ -143,15 +182,24 @@ impl AdaptiveController {
     /// recovered by matching the serialized draft name against the
     /// ladder rebuilt from the (re-attached) policy; an unknown name
     /// lands on the most conservative rung rather than failing resume.
-    pub fn from_checkpoint(c: &CtlCheckpoint, configured: &Draft) -> AdaptiveController {
+    /// The k-ladder position is clamped into the re-attached policy's
+    /// `[1, look_cap]` so a cap change across park/resume cannot leave a
+    /// run length the policy forbids.
+    pub fn from_checkpoint(
+        c: &CtlCheckpoint,
+        configured: &Draft,
+        look_cap: usize,
+    ) -> AdaptiveController {
         let ladder = build_ladder(configured);
         let rung = ladder
             .iter()
             .position(|d| d.name() == c.draft)
             .unwrap_or(ladder.len() - 1) as u32;
+        let look_cap = look_cap.max(1).min(u32::MAX as usize) as u32;
         let mut snap = c.snap;
         snap.rung = rung;
-        AdaptiveController { total: c.total, ladder, snap }
+        snap.look = snap.look.clamp(1, look_cap);
+        AdaptiveController { total: c.total, ladder, look_cap, snap }
     }
 
     /// Serializable image of this controller (park-time counterpart of
@@ -202,12 +250,59 @@ impl AdaptiveController {
     /// spread over the remaining steps, clamped by the schedule's τ_t
     /// and scaled by the streak multiplier.
     pub fn threshold(&self, base_tau: f64, steps_left: usize) -> f64 {
-        let allowance = self.snap.budget_left / steps_left.max(1) as f64;
-        base_tau.min(allowance).max(0.0) * self.snap.tau_scale
+        self.snap.threshold(base_tau, steps_left)
+    }
+
+    /// Current lookahead run length k — the k-ladder position clamped
+    /// into the policy's `[1, cap]`. The engine drafts runs of this
+    /// length between verify points.
+    ///
+    /// # Examples
+    ///
+    /// The ladder grows one step per [`LOOK_GROW_AFTER`] consecutive
+    /// accepted verifications, never past the cap, and any rejection
+    /// halves it (integer division, floor 1):
+    ///
+    /// ```
+    /// use speca::cache::Draft;
+    /// use speca::coordinator::AdaptiveController;
+    ///
+    /// let mut c = AdaptiveController::new(10.0, &Draft::taylor(), 4);
+    /// assert_eq!(c.lookahead(), 1); // adaptive requests start cautious
+    /// c.on_accept(0.01);
+    /// c.on_accept(0.01);
+    /// assert_eq!(c.lookahead(), 2); // LOOK_GROW_AFTER accepts grow k
+    /// c.on_accept(0.01);
+    /// c.on_accept(0.01);
+    /// assert_eq!(c.lookahead(), 3);
+    /// c.on_reject();
+    /// assert_eq!(c.lookahead(), 1); // a rejected prefix halves k: 3 → 1
+    /// for _ in 0..8 {
+    ///     c.on_accept(0.01);
+    /// }
+    /// assert_eq!(c.lookahead(), 4, "growth saturates at the policy cap");
+    /// ```
+    pub fn lookahead(&self) -> usize {
+        self.snap.look.clamp(1, self.look_cap) as usize
+    }
+
+    /// The policy's lookahead ceiling this controller was admitted with.
+    pub fn lookahead_cap(&self) -> usize {
+        self.look_cap as usize
+    }
+
+    /// Spend budget for the accepted prefix of a partially rejected
+    /// lookahead run (the audit's realized error at the last kept step).
+    /// Unlike [`AdaptiveController::on_accept`] this moves no streaks:
+    /// the run's verify outcome was a rejection and
+    /// [`AdaptiveController::on_reject`] has already recorded it.
+    pub fn spend(&mut self, e: f64) {
+        self.snap.budget_left -= e;
     }
 
     /// Observe an accepted verification with measured error `e` (spends
-    /// budget; sustained acceptance loosens).
+    /// budget; sustained acceptance loosens the threshold and grows the
+    /// lookahead run length toward the policy cap).
     pub fn on_accept(&mut self, e: f64) {
         self.snap.budget_left -= e;
         self.snap.reject_streak = 0;
@@ -217,10 +312,17 @@ impl AdaptiveController {
             self.snap.tau_scale = (self.snap.tau_scale * 2.0).min(1.0);
             self.snap.rung = self.snap.rung.saturating_sub(1);
         }
+        self.snap.look_streak += 1;
+        if self.snap.look_streak >= LOOK_GROW_AFTER {
+            self.snap.look_streak = 0;
+            self.snap.look = (self.snap.look + 1).min(self.look_cap);
+        }
     }
 
     /// Observe a rejected verification (tightens on streaks; off the
-    /// bottom rung, latches the dense fallback).
+    /// bottom rung, latches the dense fallback; always halves the
+    /// lookahead run length — a rejected prefix means the draft
+    /// overreached its horizon).
     pub fn on_reject(&mut self) {
         self.snap.accept_streak = 0;
         self.snap.reject_streak += 1;
@@ -234,6 +336,8 @@ impl AdaptiveController {
                 self.snap.probation = 0;
             }
         }
+        self.snap.look_streak = 0;
+        self.snap.look = (self.snap.look / 2).max(1);
     }
 
     /// Observe one controller-forced dense step. Probational fallbacks
@@ -258,7 +362,7 @@ mod tests {
     use super::*;
 
     fn ctl(budget: f64) -> AdaptiveController {
-        AdaptiveController::new(budget, &Draft::taylor())
+        AdaptiveController::new(budget, &Draft::taylor(), 1)
     }
 
     #[test]
@@ -267,7 +371,7 @@ mod tests {
         let names: Vec<&str> = c.ladder.iter().map(|d| d.name()).collect();
         assert_eq!(names, vec!["taylor", "adams-bashforth", "reuse"]);
         // a configured draft that *is* a fallback rung is not duplicated
-        let c = AdaptiveController::new(1.0, &Draft::named("reuse").unwrap());
+        let c = AdaptiveController::new(1.0, &Draft::named("reuse").unwrap(), 1);
         let names: Vec<&str> = c.ladder.iter().map(|d| d.name()).collect();
         assert_eq!(names, vec!["reuse", "adams-bashforth"]);
     }
@@ -382,14 +486,92 @@ mod tests {
         }
         let img = c.checkpoint();
         assert_eq!(img.draft, "adams-bashforth");
-        let back = AdaptiveController::from_checkpoint(&img, &Draft::taylor());
+        let back = AdaptiveController::from_checkpoint(&img, &Draft::taylor(), 1);
         assert_eq!(back.snap(), c.snap());
         assert_eq!(back.total_budget(), 3.0);
         assert_eq!(back.current_draft().name(), "adams-bashforth");
         // an unknown serialized name degrades to the deepest rung
         let mut img2 = img.clone();
         img2.draft = "no-such-draft".into();
-        let back = AdaptiveController::from_checkpoint(&img2, &Draft::taylor());
+        let back = AdaptiveController::from_checkpoint(&img2, &Draft::taylor(), 1);
         assert_eq!(back.current_draft().name(), "reuse");
+    }
+
+    #[test]
+    fn k_ladder_grows_on_streaks_and_halves_on_rejection() {
+        let mut c = AdaptiveController::new(10.0, &Draft::taylor(), 8);
+        assert_eq!(c.lookahead(), 1);
+        assert_eq!(c.lookahead_cap(), 8);
+        // LOOK_GROW_AFTER accepts per step; climb to 4
+        for _ in 0..(3 * LOOK_GROW_AFTER) {
+            c.on_accept(0.001);
+        }
+        assert_eq!(c.lookahead(), 4);
+        c.on_reject();
+        assert_eq!(c.lookahead(), 2, "rejection halves k");
+        c.on_reject();
+        c.on_reject();
+        assert_eq!(c.lookahead(), 1, "k never drops below 1");
+        // growth saturates at the cap
+        for _ in 0..100 {
+            c.on_accept(0.001);
+        }
+        assert_eq!(c.lookahead(), 8);
+    }
+
+    #[test]
+    fn k_ladder_is_inert_at_cap_one() {
+        // lookahead=1 policies (the default) must see today's behavior:
+        // whatever the streaks do, the effective k stays 1
+        let mut c = ctl(10.0);
+        for _ in 0..10 {
+            c.on_accept(0.001);
+        }
+        assert_eq!(c.lookahead(), 1);
+        c.on_reject();
+        assert_eq!(c.lookahead(), 1);
+    }
+
+    #[test]
+    fn spend_moves_budget_but_no_streaks() {
+        let mut c = AdaptiveController::new(1.0, &Draft::taylor(), 4);
+        c.on_accept(0.1);
+        let before = c.snap();
+        c.spend(0.25);
+        let after = c.snap();
+        assert!((after.budget_left - (before.budget_left - 0.25)).abs() < 1e-12);
+        assert_eq!(
+            AdaptiveSnap { budget_left: before.budget_left, ..after },
+            before,
+            "spend must touch nothing but the budget"
+        );
+    }
+
+    #[test]
+    fn k_ladder_checkpoint_clamps_to_reattached_cap() {
+        let mut c = AdaptiveController::new(10.0, &Draft::taylor(), 8);
+        for _ in 0..(3 * LOOK_GROW_AFTER) {
+            c.on_accept(0.001);
+        }
+        assert_eq!(c.lookahead(), 4);
+        let img = c.checkpoint();
+        // same cap: bitwise ladder state
+        let back = AdaptiveController::from_checkpoint(&img, &Draft::taylor(), 8);
+        assert_eq!(back.snap(), c.snap());
+        assert_eq!(back.lookahead(), 4);
+        // a smaller re-attached cap clamps the run length
+        let back = AdaptiveController::from_checkpoint(&img, &Draft::taylor(), 2);
+        assert_eq!(back.lookahead(), 2);
+    }
+
+    #[test]
+    fn snap_threshold_matches_controller_threshold() {
+        let mut c = ctl(1.0);
+        c.on_accept(0.3);
+        c.on_reject();
+        c.on_reject();
+        for (base, left) in [(0.5, 10), (0.02, 10), (0.5, 1), (1.0, 0)] {
+            assert_eq!(c.threshold(base, left), c.snap().threshold(base, left));
+        }
     }
 }

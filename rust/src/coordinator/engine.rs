@@ -14,6 +14,18 @@
 //!    discarded — later steps re-plan from the refreshed cache);
 //! 4. Skip/Blend/Elide handle the baseline policies.
 //!
+//! With `lookahead=k` (> 1) a SpeCa request does not verify every
+//! speculative step: it opens a *run* of up to k drafted steps, advances
+//! the latent through the first k−1 on predict+head alone (each boundary
+//! snapshotted into `ReqState::look_snaps`), and verifies only the run's
+//! final step. An accepted verify ratifies the whole run; a rejected one
+//! triggers a batched *audit* of the stored intermediate predictions, and
+//! the request rolls latent + bookkeeping back to the longest prefix whose
+//! per-step error stays under the (controller-clamped) threshold
+//! (`run_lookahead_audits`, DESIGN.md §16). At k = 1 every run is a single
+//! verified step and the engine is bitwise-identical to the pre-lookahead
+//! behavior.
+//!
 //! Different policies coexist in one engine; batches group by phase (and
 //! verify layer), not by policy — this is what enables the paper's
 //! sample-adaptive computation allocation to emerge per request.
@@ -131,6 +143,8 @@ struct TickSnapshot {
     blend_steps: usize,
     elided_steps: usize,
     rejects: usize,
+    /// open lookahead-run length entering this tick (0 = no run open)
+    spec_run: usize,
     /// sample-adaptive controller scalars (None for static requests)
     ctl: Option<AdaptiveSnap>,
 }
@@ -156,6 +170,8 @@ struct Scratch {
     heavy: Vec<usize>,
     /// light partition of a full phase (eps-only requests)
     light: Vec<usize>,
+    /// per-step audit errors of the lookahead run being audited
+    audit_e: Vec<f64>,
 }
 
 impl Scratch {
@@ -174,6 +190,7 @@ impl Scratch {
             chunks: Vec::with_capacity(max_inflight.max(1)),
             heavy: Vec::with_capacity(max_inflight.max(1)),
             light: Vec::with_capacity(max_inflight.max(1)),
+            audit_e: Vec::with_capacity(8),
         }
     }
 }
@@ -188,6 +205,8 @@ struct PlanScratch {
     full: Vec<usize>,
     spec_verify: Vec<usize>,
     spec_direct: Vec<usize>,
+    /// intermediate lookahead steps: draft + head this tick, verify later
+    spec_ahead: Vec<usize>,
     skip: Vec<usize>,
     blend: Vec<usize>,
     elide: Vec<usize>,
@@ -207,6 +226,7 @@ impl PlanScratch {
             full: Vec::with_capacity(n),
             spec_verify: Vec::with_capacity(n),
             spec_direct: Vec::with_capacity(n),
+            spec_ahead: Vec::with_capacity(n),
             skip: Vec::with_capacity(n),
             blend: Vec::with_capacity(n),
             elide: Vec::with_capacity(n),
@@ -221,6 +241,7 @@ impl PlanScratch {
         self.full.clear();
         self.spec_verify.clear();
         self.spec_direct.clear();
+        self.spec_ahead.clear();
         self.skip.clear();
         self.blend.clear();
         self.elide.clear();
@@ -376,6 +397,15 @@ impl<'a> Engine<'a> {
             accepts: st.stats.spec_steps,
             rejects: st.stats.rejects,
         })
+    }
+
+    /// Length of the open lookahead run of an in-flight request: how many
+    /// speculated steps it has advanced past its last verify point
+    /// (0 = no run open, the k = 1 steady state; `None` = not resident).
+    /// Observability hook for tests and the serving layer — a request
+    /// parked mid-run carries this in its checkpoint (DESIGN.md §16).
+    pub fn speculation_depth(&self, id: u64) -> Option<usize> {
+        self.active.iter().find(|st| st.spec.id == id).map(|st| st.spec_run)
     }
 
     /// Ids of queued units that are parked checkpoints — work already
@@ -617,6 +647,7 @@ impl<'a> Engine<'a> {
                 blend_steps: st.stats.blend_steps,
                 elided_steps: st.stats.elided_steps,
                 rejects: st.stats.rejects,
+                spec_run: st.spec_run,
                 ctl: st.ctl.as_ref().map(|c| c.snap()),
             });
         }
@@ -652,13 +683,41 @@ impl<'a> Engine<'a> {
                         // controller-forced dense step: budget spent or
                         // the rejection-streak fallback is latched
                         // (probational — the controller decides when to
-                        // retry speculation)
+                        // retry speculation). The controller only mutates
+                        // at verify points and dense steps, so this can
+                        // never fire with a lookahead run still open.
+                        debug_assert_eq!(st.spec_run, 0, "dense step inside an open run");
                         if let Some(c) = st.ctl.as_mut() {
                             c.on_dense_step();
                         }
                         tk.full.push(i);
                     } else if matches!(st.spec.policy, Policy::SpeCa(_)) {
-                        tk.spec_verify.push(i)
+                        // lookahead routing: a run verifies at its k-th
+                        // step, at the final serve step, and before any
+                        // step the policy would not speculate — otherwise
+                        // this is an intermediate step (draft + head only,
+                        // boundary snapshotted for the eventual audit)
+                        let cap = ReqState::look_cap_of(&st.spec.policy);
+                        let k_eff = st
+                            .ctl
+                            .as_ref()
+                            .map(|c| c.lookahead())
+                            .unwrap_or(cap)
+                            .clamp(1, cap);
+                        let is_vp = st.spec_run + 1 >= k_eff
+                            || st.step + 1 >= total
+                            || st.spec.policy.plan(
+                                st.step + 1,
+                                total,
+                                st.since_full + 1,
+                                st.tea_accum,
+                            ) != Plan::Spec;
+                        if is_vp {
+                            tk.spec_verify.push(i)
+                        } else {
+                            st.push_look_snap();
+                            tk.spec_ahead.push(i)
+                        }
                     } else {
                         tk.spec_direct.push(i)
                     }
@@ -705,44 +764,16 @@ impl<'a> Engine<'a> {
         total: usize,
     ) -> Result<()> {
         // --- speculative phase: draft predictions ------------------------
-        // The strategy is a trait object shared across shards (SpeCa
-        // carries its `Draft` handle in the policy; cache policies
-        // without one draft with the default Taylor strategy).
         for &i in tk.spec_verify.iter().chain(tk.spec_direct.iter()) {
-            let v = self.verify_layer_of(i);
-            let depth = model.entry().config.depth;
-            let st = &mut self.active[i];
-            let k = st.cache.k_for_step(st.step).expect("cache ready");
-            let strategy: &dyn DraftStrategy = match (&st.ctl, &st.spec.policy) {
-                // sample-adaptive requests draft with the controller's
-                // current ladder rung — mid-request strategy switching
-                // (DESIGN.md §14)
-                (Some(ctl), _) => ctl.strategy(st.spec.policy.order()).0,
-                (None, Policy::SpeCa(c)) => &*c.draft,
-                (None, _) => draft::taylor_default(),
-            };
-            // book prediction cost at the strategy's effective order, not
-            // the policy's configured one (reuse does order-0 work no
-            // matter what O= says; richardson always does order-2) — the
-            // per-draft FLOPs comparison depends on this being honest
-            let order = strategy.max_order(st.spec.policy.order());
-            let n_taps = st.tap_boundaries.len();
-            if matches!(st.spec.policy, Policy::SpeCa(_)) {
-                let tv = st.tap_of(v);
-                let tvo = st.tap_of(v + 1);
-                let tl = st.tap_of(depth);
-                st.cache.taps[tv].predict_with(strategy, k, &mut st.pred_vin);
-                st.cache.taps[tvo].predict_with(strategy, k, &mut st.pred_vout);
-                if tl != tvo {
-                    st.cache.taps[tl].predict_with(strategy, k, &mut st.pred_last);
-                } else {
-                    st.pred_last.copy_from_slice(&st.pred_vout);
-                }
-            } else {
-                let tl = st.tap_of(depth);
-                st.cache.taps[tl].predict_with(strategy, k, &mut st.pred_last);
-            }
-            self.flops_model.book_predict(&mut st.stats.flops, order, n_taps, 1);
+            self.run_predict(model, i);
+        }
+        // intermediate lookahead steps draft the same three taps, then
+        // stash the verify-pair prediction in the boundary snapshot taken
+        // at plan time — the eventual audit replays it if the run's
+        // verify point rejects
+        for &i in &tk.spec_ahead {
+            self.run_predict(model, i);
+            self.active[i].stash_look_preds();
         }
 
         // --- verification (grouped by verify layer) ----------------------
@@ -772,9 +803,17 @@ impl<'a> Engine<'a> {
             }
         }
 
-        // --- heads for accepted + direct speculations --------------------
+        // --- audits: rejected runs ratify their longest passing prefix ---
+        self.run_lookahead_audits(model, &tk.rejected, total)?;
+
+        // --- heads for accepted + direct + intermediate speculations -----
+        // the first `n_ratified` entries closed a lookahead run at an
+        // accepted verify point; run_heads commits the run's histogram
+        // event alongside their step advance
+        let n_ratified = tk.accepted.len();
         tk.accepted.extend_from_slice(&tk.spec_direct);
-        self.run_heads(&*model, &tk.accepted)?;
+        tk.accepted.extend_from_slice(&tk.spec_ahead);
+        self.run_heads(&*model, &tk.accepted, n_ratified)?;
 
         // --- skips --------------------------------------------------------
         for &i in &tk.skip {
@@ -792,19 +831,54 @@ impl<'a> Engine<'a> {
         self.run_blend(&*model, &tk.blend)?;
 
         // --- full passes (planned + rejected fallbacks) -------------------
+        // (reject bookkeeping — counters, histogram, draft reset — is
+        // committed per request by `run_lookahead_audits` above, at the
+        // same single mutation point as the prefix rollback)
         tk.full.extend_from_slice(&tk.rejected);
-        for &i in &tk.rejected {
-            self.active[i].stats.rejects += 1;
-            self.active[i].stats.flops.n_rejects += 1;
-            // the speculative run ended in rejection: fire the advisory
-            // reset hook on this request's strategy (instance-wide —
-            // DESIGN.md §10; no-op for the shipped stateless strategies)
-            if let Policy::SpeCa(c) = &self.active[i].spec.policy {
-                c.draft.reset();
-            }
-        }
         self.run_full(&*model, &tk.full)?;
         Ok(())
+    }
+
+    /// Draft-predict one request's tap features into its prediction
+    /// buffers. The strategy is a trait object shared across shards
+    /// (SpeCa carries its `Draft` handle in the policy; cache policies
+    /// without one draft with the default Taylor strategy). Infallible:
+    /// runs natively against the tap history, no backend dispatch.
+    fn run_predict(&mut self, model: &dyn ModelBackend, i: usize) {
+        let v = self.verify_layer_of(i);
+        let depth = model.entry().config.depth;
+        let st = &mut self.active[i];
+        let k = st.cache.k_for_step(st.step).expect("cache ready");
+        let strategy: &dyn DraftStrategy = match (&st.ctl, &st.spec.policy) {
+            // sample-adaptive requests draft with the controller's
+            // current ladder rung — mid-request strategy switching
+            // (DESIGN.md §14)
+            (Some(ctl), _) => ctl.strategy(st.spec.policy.order()).0,
+            (None, Policy::SpeCa(c)) => &*c.draft,
+            (None, _) => draft::taylor_default(),
+        };
+        // book prediction cost at the strategy's effective order, not
+        // the policy's configured one (reuse does order-0 work no
+        // matter what O= says; richardson always does order-2) — the
+        // per-draft FLOPs comparison depends on this being honest
+        let order = strategy.max_order(st.spec.policy.order());
+        let n_taps = st.tap_boundaries.len();
+        if matches!(st.spec.policy, Policy::SpeCa(_)) {
+            let tv = st.tap_of(v);
+            let tvo = st.tap_of(v + 1);
+            let tl = st.tap_of(depth);
+            st.cache.taps[tv].predict_with(strategy, k, &mut st.pred_vin);
+            st.cache.taps[tvo].predict_with(strategy, k, &mut st.pred_vout);
+            if tl != tvo {
+                st.cache.taps[tl].predict_with(strategy, k, &mut st.pred_last);
+            } else {
+                st.pred_last.copy_from_slice(&st.pred_vout);
+            }
+        } else {
+            let tl = st.tap_of(depth);
+            st.cache.taps[tl].predict_with(strategy, k, &mut st.pred_last);
+        }
+        self.flops_model.book_predict(&mut st.stats.flops, order, n_taps, 1);
     }
 
     fn verify_layer_of(&self, i: usize) -> usize {
@@ -831,6 +905,18 @@ impl<'a> Engine<'a> {
             }
             st.since_full = snap.since_full;
             st.tea_accum = snap.tea_accum;
+            // a committed audit whose accepted prefix was the whole run
+            // (j = m) leaves `step` unmoved yet bumps the histogram; the
+            // restored reject counter is the tell. Undo the event so a
+            // retried tick replays it exactly once. (Audits that rolled
+            // the latent back moved `step` and are kept above.)
+            if st.stats.rejects != snap.rejects {
+                if let Some(last) = st.stats.prefix_hist.len().checked_sub(1) {
+                    let b = snap.spec_run.min(last);
+                    st.stats.prefix_hist[b] = st.stats.prefix_hist[b].saturating_sub(1);
+                }
+            }
+            st.spec_run = snap.spec_run;
             st.stats.verify_trace.truncate(snap.trace_len);
             st.stats.flops = snap.flops;
             st.stats.full_steps = snap.full_steps;
@@ -1130,9 +1216,189 @@ impl<'a> Engine<'a> {
         Ok(())
     }
 
+    /// One prefix-histogram event: `ratified` steps were ratified at a
+    /// verify point (full-run accept: k steps; audited rejection: the
+    /// accepted prefix length j ∈ [0, k−1]). Clamped into the histogram,
+    /// which is sized cap+1 at admission; default-constructed stats carry
+    /// an empty histogram and count nothing.
+    fn bump_hist(stats: &mut crate::coordinator::state::RequestStats, ratified: usize) {
+        if let Some(last) = stats.prefix_hist.len().checked_sub(1) {
+            stats.prefix_hist[ratified.min(last)] += 1;
+        }
+    }
+
+    /// Accept-a-prefix audit of rejected lookahead runs (DESIGN.md §16).
+    ///
+    /// A run's intermediate steps execute on predict + head alone; only
+    /// its final step verifies. When that verify point rejects, this
+    /// sweep replays the stored intermediate predictions as one batched
+    /// verify-block dispatch per run (chunked like any other phase),
+    /// finds the longest prefix whose per-step error stays under the
+    /// threshold the controller would have applied *at that step* (the
+    /// pre-tick [`AdaptiveSnap`] — the run executed under that state),
+    /// and rolls latent + bookkeeping back to the boundary after the
+    /// last ratified step. All reject bookkeeping (counters, histogram,
+    /// budget spend, draft reset) commits at one mutation point per
+    /// request, after every audit chunk for that request succeeded, so a
+    /// mid-audit backend failure leaves the request untouched for the
+    /// boundary rollback. FLOPs booked for audit dispatches are never
+    /// un-booked on rollback: the work really ran.
+    fn run_lookahead_audits(
+        &mut self,
+        model: &dyn ModelBackend,
+        rejected: &[usize],
+        total: usize,
+    ) -> Result<()> {
+        let entry = model.entry();
+        let feat = entry.feat_len();
+        for &ri in rejected {
+            let m = self.active[ri].spec_run;
+            if m == 0 {
+                // single-step run (k = 1): nothing speculated beyond the
+                // rejected verify step — record the zero-length prefix
+                // and fall through to the full-pass fallback
+                let st = &mut self.active[ri];
+                Self::bump_hist(&mut st.stats, 0);
+                st.stats.rejects += 1;
+                st.stats.flops.n_rejects += 1;
+                // the speculative run ended in rejection: fire the
+                // advisory reset hook on this request's strategy
+                // (instance-wide — DESIGN.md §10; no-op for the shipped
+                // stateless strategies)
+                if let Policy::SpeCa(c) = &st.spec.policy {
+                    c.draft.reset();
+                }
+                continue;
+            }
+            let layer = self.verify_layer_of(ri);
+            self.scratch.audit_e.clear();
+            let mut chunks = std::mem::take(&mut self.scratch.chunks);
+            plan_chunks_into(m, &entry.config.buckets, self.cfg.strategy, &mut chunks);
+            for chunk in &chunks {
+                {
+                    // rows sit at *different* steps (one per snapshot),
+                    // so t is gathered per snapshot, not via gather_ty
+                    let Engine { active, scratch, .. } = &mut *self;
+                    let st = &active[ri];
+                    scratch.t.clear();
+                    scratch.t.resize(chunk.bucket, 0.0);
+                    scratch.y.clear();
+                    scratch.y.resize(chunk.bucket, 0);
+                    for (slot, p) in chunk.members().enumerate() {
+                        scratch.t[slot] = entry.schedule.t_model[st.look_snaps[p].step];
+                        scratch.y[slot] = st.spec.cond;
+                    }
+                    for slot in chunk.used()..chunk.bucket {
+                        scratch.t[slot] = scratch.t[0];
+                        scratch.y[slot] = scratch.y[0];
+                    }
+                    gather_rows_into(&mut scratch.feat, chunk, feat, |p, dst| {
+                        dst.copy_from_slice(&st.look_snaps[p].pred_vin)
+                    });
+                }
+                let dispatch = model.block(
+                    chunk.bucket,
+                    layer as i32,
+                    &self.scratch.feat,
+                    &self.scratch.t,
+                    &self.scratch.y,
+                );
+                let actual = match dispatch {
+                    Ok(out) => out,
+                    Err(e) => {
+                        self.scratch.chunks = chunks;
+                        return Err(e);
+                    }
+                };
+                {
+                    let Engine { active, scratch, .. } = &mut *self;
+                    let st = &active[ri];
+                    let Policy::SpeCa(c) = &st.spec.policy else { unreachable!() };
+                    for (slot, p) in chunk.members().enumerate() {
+                        scratch
+                            .audit_e
+                            .push(c.metric.eval(&st.look_snaps[p].pred_vout, actual.row(slot)));
+                    }
+                }
+                self.flops_model.book_verify(
+                    &mut self.active[ri].stats.flops,
+                    chunk.bucket,
+                    chunk.used(),
+                );
+            }
+            self.scratch.chunks = chunks;
+
+            // --- single mutation point: commit the audit verdict ---------
+            let Engine { active, snapshots, scratch, .. } = &mut *self;
+            let st = &mut active[ri];
+            debug_assert_eq!(snapshots[ri].id, st.spec.id, "audit ledger out of sync");
+            let snap_ctl = snapshots[ri].ctl;
+            let mut j = m;
+            {
+                let Policy::SpeCa(c) = &st.spec.policy else { unreachable!() };
+                for p in 0..m {
+                    let step = st.look_snaps[p].step;
+                    let base = c.tau_at(step, total);
+                    let tau = match snap_ctl {
+                        Some(s) => s.threshold(base, total - step),
+                        None => base,
+                    };
+                    st.stats.verify_trace.push((step, scratch.audit_e[p], tau));
+                    if j == m && scratch.audit_e[p] > tau {
+                        j = p;
+                    }
+                }
+            }
+            if j >= 1 {
+                if let Some(ctl) = st.ctl.as_mut() {
+                    // one budget spend per run, mirroring the accept
+                    // path's single on_accept at the verify point: the
+                    // last ratified step's error bounds the drift the
+                    // kept prefix actually incurred (errors within a run
+                    // grow from the same refresh, so summing them would
+                    // double-count the telescoped drift)
+                    ctl.spend(scratch.audit_e[j - 1]);
+                }
+            }
+            if j < m {
+                // roll latent + bookkeeping back to the boundary after
+                // the last ratified step; the tap cache needs no rollback
+                // (it only mutates at full steps, and a run contains none)
+                let snaps = std::mem::take(&mut st.look_snaps);
+                let snap = &snaps[j];
+                st.step = snap.step;
+                st.since_full = snap.since_full;
+                st.tea_accum = snap.tea_accum;
+                st.stats.spec_steps = snap.spec_steps;
+                st.traj.truncate(snap.traj_len);
+                st.x.copy_from_slice(&snap.x);
+                st.last_eps.clear();
+                st.last_eps.extend_from_slice(&snap.last_eps);
+                st.look_snaps = snaps;
+            }
+            Self::bump_hist(&mut st.stats, j);
+            st.spec_run = 0;
+            st.stats.rejects += 1;
+            st.stats.flops.n_rejects += 1;
+            if let Policy::SpeCa(c) = &st.spec.policy {
+                c.draft.reset();
+            }
+        }
+        Ok(())
+    }
+
     /// Output heads over predicted last-boundary features (accepted SpeCa +
-    /// TaylorSeer speculative steps).
-    fn run_heads(&mut self, model: &dyn ModelBackend, idxs: &[usize]) -> Result<()> {
+    /// TaylorSeer speculative steps). The first `n_ratified` entries of
+    /// `idxs` closed a lookahead run at an accepted verify point: their
+    /// run bookkeeping (histogram event, run reset) commits here, in the
+    /// same per-slot block as the step advance, so the boundary-rollback
+    /// invariant (step moved ⇔ this tick's mutations are kept) holds.
+    fn run_heads(
+        &mut self,
+        model: &dyn ModelBackend,
+        idxs: &[usize],
+        n_ratified: usize,
+    ) -> Result<()> {
         if idxs.is_empty() {
             return Ok(());
         }
@@ -1177,6 +1443,13 @@ impl<'a> Engine<'a> {
                 st.stats.spec_steps += 1;
                 st.step += 1;
                 st.since_full += 1;
+                if m < n_ratified {
+                    // the verify point ratified the whole run: a run of
+                    // `spec_run` intermediates plus the verified step
+                    let run = st.spec_run;
+                    st.spec_run = 0;
+                    Self::bump_hist(&mut st.stats, run + 1);
+                }
             }
         }
         self.scratch.chunks = chunks;

@@ -233,6 +233,12 @@ pub struct SubmitOptions {
     /// Under backlog, admission shrinks a low-priority job's budget
     /// deadline-aware (see [`JobManager::submit`]).
     pub adaptive: Option<f64>,
+    /// Lookahead cap override for SpeCa policies (the same surface as
+    /// the `lookahead=` policy key and the wire `lookahead` field): the
+    /// engine speculates runs of up to this many steps per verify point
+    /// (DESIGN.md §16). Clamped to ≥ 1; `None` keeps the policy's own
+    /// cap (default 1 = verify every speculative step).
+    pub lookahead: Option<usize>,
     /// Keep the final latent in the job record so `poll`/`wait` can
     /// return it (the wire `return_latent` field).
     pub return_latent: bool,
@@ -281,6 +287,13 @@ impl SubmitOptions {
     /// spread over the schedule) to this job's SpeCa policy.
     pub fn adaptive(mut self, budget: f64) -> SubmitOptions {
         self.adaptive = Some(budget);
+        self
+    }
+
+    /// Cap this job's lookahead runs at `k` speculated steps per verify
+    /// point (SpeCa policies only; clamped to ≥ 1 at submission).
+    pub fn lookahead(mut self, k: usize) -> SubmitOptions {
+        self.lookahead = Some(k);
         self
     }
 
@@ -1126,6 +1139,9 @@ impl JobManager {
         if let (Some(b), Policy::SpeCa(c)) = (adaptive, &mut policy) {
             c.adaptive = Some(b);
         }
+        if let Some(k) = opts.lookahead {
+            crate::workload::apply_lookahead(&mut policy, k);
+        }
         // service-time hint for work-weighted routing: the policy
         // family's own EWMA when it has completions, else the global one
         // (0 before any completion — the router then weighs this job at
@@ -1431,13 +1447,16 @@ mod tests {
             .return_latent(true)
             .preemptible(true)
             .adaptive(0.4)
+            .lookahead(3)
             .group(GroupId(3));
         assert_eq!(opts.priority, Priority::Low);
         assert_eq!(opts.deadline_ms, Some(250));
         assert!(opts.return_latent && opts.preemptible);
         assert_eq!(opts.adaptive, Some(0.4));
+        assert_eq!(opts.lookahead, Some(3));
         assert_eq!(opts.group, Some(GroupId(3)));
         assert_eq!(SubmitOptions::default().adaptive, None);
+        assert_eq!(SubmitOptions::default().lookahead, None, "lookahead is opt-in");
         assert!(!SubmitOptions::default().preemptible, "preemption is opt-in");
         assert_eq!(format!("{}", GroupId(3)), "group-3");
     }

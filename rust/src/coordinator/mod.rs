@@ -24,4 +24,4 @@ pub use pool::{
     EngineShardPool, PoolConfig, PoolOutcome, RouterPolicy, ShardRouter, ShardStats,
     SpilledCheckpoint,
 };
-pub use state::{Completion, ReqState, RequestCheckpoint, RequestSpec, RequestStats};
+pub use state::{Completion, LookSnap, ReqState, RequestCheckpoint, RequestSpec, RequestStats};

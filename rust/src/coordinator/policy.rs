@@ -120,6 +120,15 @@ pub struct SpeCaConfig {
     /// static policy; `Some(b)` attaches a per-request
     /// [`AdaptiveController`](crate::coordinator::adaptive::AdaptiveController))
     pub adaptive: Option<f64>,
+    /// Lookahead cap k (policy key `lookahead=<k>`, wire `"lookahead"`):
+    /// how many future steps one verification may cover. 1 (the
+    /// default) verifies every speculative step — byte-for-byte today's
+    /// behavior; k ≥ 2 lets the engine draft a run of up to k steps and
+    /// accept the longest verified prefix at the next verify point
+    /// (DESIGN.md §16). Sample-adaptive requests treat this as the
+    /// *ceiling* of the controller's k-ladder; static requests run at
+    /// exactly k.
+    pub lookahead: usize,
 }
 
 impl SpeCaConfig {
@@ -135,6 +144,7 @@ impl SpeCaConfig {
             draft: Draft::taylor(),
             metric: ErrorMetric::L2,
             adaptive: None,
+            lookahead: 1,
         }
     }
 
@@ -263,6 +273,9 @@ impl Policy {
                 );
                 if let Some(b) = c.adaptive {
                     s.push_str(&format!(",adaptive={b}"));
+                }
+                if c.lookahead > 1 {
+                    s.push_str(&format!(",lookahead={}", c.lookahead));
                 }
                 s
             }

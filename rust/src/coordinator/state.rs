@@ -51,6 +51,14 @@ pub struct RequestStats {
     pub flops: FlopsCounter,
     /// verification errors observed on speculative steps (step, e, tau)
     pub verify_trace: Vec<(usize, f64, f64)>,
+    /// Accepted-prefix-length histogram over lookahead verify events
+    /// (DESIGN.md §16): bucket j counts events that ratified exactly j
+    /// speculated steps — j = 0 is a rejected verify point with nothing
+    /// kept, the top bucket is a fully accepted run. Sized `cap + 1` at
+    /// admission; at the default `lookahead=1` only buckets 0/1 move
+    /// (plain reject/accept counts). Empty in a default-constructed
+    /// stats block.
+    pub prefix_hist: Vec<u64>,
 }
 
 impl RequestStats {
@@ -61,6 +69,53 @@ impl RequestStats {
                 / (self.full_steps + self.spec_steps).max(1) as f64;
         }
         (total_steps as u64 * full_step_flops) as f64 / self.flops.total() as f64
+    }
+}
+
+/// Rollback point for one intermediate step of a lookahead-k run
+/// (DESIGN.md §16): everything the engine must restore to put the
+/// request back at the boundary *before* that step executed, plus the
+/// draft predictions the step was served from (so the verify-point
+/// audit can re-score it in one batched dispatch). Captured into
+/// preallocated slots at plan time — steady-state speculation touches
+/// the allocator no more than the rest of the tick.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LookSnap {
+    /// Serve step this snapshot guards (the step executed from it).
+    pub step: usize,
+    /// `since_full` at the boundary.
+    pub since_full: usize,
+    /// TeaCache drift accumulator at the boundary.
+    pub tea_accum: f64,
+    /// `stats.spec_steps` at the boundary.
+    pub spec_steps: usize,
+    /// `traj.len()` at the boundary (rollback truncates to it).
+    pub traj_len: usize,
+    /// Latent x_t at the boundary.
+    pub x: Vec<f32>,
+    /// Last model output ε̂ at the boundary.
+    pub last_eps: Vec<f32>,
+    /// Draft-predicted verify-block input this step was served from.
+    pub pred_vin: Vec<f32>,
+    /// Draft-predicted verify-block output (the audit's yardstick).
+    pub pred_vout: Vec<f32>,
+}
+
+impl LookSnap {
+    /// An empty slot with capacities presized for a `latent`-channel
+    /// latent and `feat_len`-channel features (zero-alloc refills).
+    pub fn sized(latent: usize, feat_len: usize) -> LookSnap {
+        LookSnap {
+            step: 0,
+            since_full: 0,
+            tea_accum: 0.0,
+            spec_steps: 0,
+            traj_len: 0,
+            x: Vec::with_capacity(latent),
+            last_eps: Vec::with_capacity(latent),
+            pred_vin: Vec::with_capacity(feat_len),
+            pred_vout: Vec::with_capacity(feat_len),
+        }
     }
 }
 
@@ -105,6 +160,12 @@ pub struct ReqState {
     pub pred_vout: Vec<f32>,
     /// scratch: predicted head input.
     pub pred_last: Vec<f32>,
+    /// Unverified intermediate steps of the current lookahead run (0 at
+    /// every verify boundary; only ever > 0 under `lookahead >= 2`).
+    pub spec_run: usize,
+    /// Preallocated rollback slots for the run's intermediate steps
+    /// (`cap − 1` of them; the first [`Self::spec_run`] are live).
+    pub look_snaps: Vec<LookSnap>,
 }
 
 impl ReqState {
@@ -139,9 +200,13 @@ impl ReqState {
         let interval = spec.policy.interval();
         let cache = FeatureCache::new(taps.len(), order, feat_len, interval.max(1));
         let ctl = match &spec.policy {
-            Policy::SpeCa(c) => c.adaptive.map(|b| AdaptiveController::new(b, &c.draft)),
+            Policy::SpeCa(c) => {
+                c.adaptive.map(|b| AdaptiveController::new(b, &c.draft, c.lookahead))
+            }
             _ => None,
         };
+        let look_cap = Self::look_cap_of(&spec.policy);
+        let latent = x.len();
         ReqState {
             spec,
             x,
@@ -153,7 +218,10 @@ impl ReqState {
             blend_feat: Vec::new(),
             tea_accum: 0.0,
             tea_last_temb: Vec::new(),
-            stats: RequestStats::default(),
+            stats: RequestStats {
+                prefix_hist: vec![0; look_cap + 1],
+                ..RequestStats::default()
+            },
             traj: Vec::new(),
             started: Instant::now(),
             prior_ms: 0.0,
@@ -161,7 +229,55 @@ impl ReqState {
             pred_vin: vec![0.0; feat_len],
             pred_vout: vec![0.0; feat_len],
             pred_last: vec![0.0; feat_len],
+            spec_run: 0,
+            look_snaps: (0..look_cap - 1).map(|_| LookSnap::sized(latent, feat_len)).collect(),
         }
+    }
+
+    /// The policy's lookahead cap (1 for non-SpeCa policies): how many
+    /// steps one verification may ratify, sizing the rollback slots and
+    /// the accepted-prefix histogram.
+    pub fn look_cap_of(policy: &Policy) -> usize {
+        match policy {
+            Policy::SpeCa(c) => c.lookahead.max(1),
+            _ => 1,
+        }
+    }
+
+    /// Capture the boundary *before* the next intermediate step of a
+    /// lookahead run into the next preallocated slot and open that step
+    /// (engine plan phase; DESIGN.md §16). The slot's prediction fields
+    /// are filled later by [`Self::stash_look_preds`].
+    pub fn push_look_snap(&mut self) {
+        let i = self.spec_run;
+        if i >= self.look_snaps.len() {
+            // only reachable when a checkpoint was re-attached to a
+            // policy with a larger cap — grow rather than corrupt
+            self.look_snaps.push(LookSnap::sized(self.x.len(), self.pred_vin.len()));
+        }
+        let s = &mut self.look_snaps[i];
+        s.step = self.step;
+        s.since_full = self.since_full;
+        s.tea_accum = self.tea_accum;
+        s.spec_steps = self.stats.spec_steps;
+        s.traj_len = self.traj.len();
+        s.x.clear();
+        s.x.extend_from_slice(&self.x);
+        s.last_eps.clear();
+        s.last_eps.extend_from_slice(&self.last_eps);
+        self.spec_run = i + 1;
+    }
+
+    /// Record the draft predictions the just-opened intermediate step is
+    /// being served from (engine predict phase) so the verify-point
+    /// audit can re-score the step without re-drafting.
+    pub fn stash_look_preds(&mut self) {
+        let i = self.spec_run.checked_sub(1).expect("no open lookahead step");
+        let s = &mut self.look_snaps[i];
+        s.pred_vin.clear();
+        s.pred_vin.extend_from_slice(&self.pred_vin);
+        s.pred_vout.clear();
+        s.pred_vout.extend_from_slice(&self.pred_vout);
     }
 
     /// Cache tap index of a boundary.
@@ -180,6 +296,8 @@ impl ReqState {
     /// latency survives the migration.
     pub fn park(self) -> RequestCheckpoint {
         let feat_len = self.pred_vin.len();
+        let mut look = self.look_snaps;
+        look.truncate(self.spec_run); // only the live run slots travel
         RequestCheckpoint {
             spec: self.spec,
             x: self.x,
@@ -196,6 +314,7 @@ impl ReqState {
             prior_ms: self.prior_ms + self.started.elapsed().as_secs_f64() * 1e3,
             ctl: self.ctl.map(|c| c.checkpoint()),
             feat_len,
+            look,
         }
     }
 
@@ -212,10 +331,19 @@ impl ReqState {
         // requests keep making identical adaptive decisions
         let ctl = match (&ckpt.ctl, &ckpt.spec.policy) {
             (Some(img), Policy::SpeCa(c)) => {
-                Some(AdaptiveController::from_checkpoint(img, &c.draft))
+                Some(AdaptiveController::from_checkpoint(img, &c.draft, c.lookahead))
             }
             _ => None,
         };
+        // re-open the parked lookahead run in the first slots and top the
+        // pool back up to the (re-attached) policy cap
+        let look_cap = Self::look_cap_of(&ckpt.spec.policy);
+        let latent = ckpt.x.len();
+        let mut look_snaps = ckpt.look;
+        let spec_run = look_snaps.len();
+        while look_snaps.len() + 1 < look_cap {
+            look_snaps.push(LookSnap::sized(latent, ckpt.feat_len));
+        }
         ReqState {
             spec: ckpt.spec,
             x: ckpt.x,
@@ -235,6 +363,8 @@ impl ReqState {
             pred_vin: vec![0.0; ckpt.feat_len],
             pred_vout: vec![0.0; ckpt.feat_len],
             pred_last: vec![0.0; ckpt.feat_len],
+            spec_run,
+            look_snaps,
         }
     }
 }
@@ -287,13 +417,23 @@ pub struct RequestCheckpoint {
     pub ctl: Option<CtlCheckpoint>,
     /// Channels of the pred_* scratch buffers to rebuild on resume.
     pub feat_len: usize,
+    /// Live lookahead-run snapshots at the park boundary (SPCK v3
+    /// appendix; empty at every verify boundary, for `lookahead=1`
+    /// requests, and for every v1/v2 image). A request may park *inside*
+    /// a speculative run — resume reopens the run exactly where it was
+    /// (DESIGN.md §16).
+    pub look: Vec<LookSnap>,
 }
 
 /// Byte-codec magic ("SPCK") + version for [`RequestCheckpoint::to_bytes`].
 /// v2 appends the sample-adaptive controller image after the v1 layout;
-/// [`RequestCheckpoint::from_bytes`] still accepts v1 (controller absent).
+/// v3 extends the controller image with the k-ladder fields and appends
+/// the lookahead state (accepted-prefix histogram + flag-worded
+/// in-flight-run snapshots; DESIGN.md §16).
+/// [`RequestCheckpoint::from_bytes`] still accepts v1/v2 (controller
+/// and/or lookahead state absent → defaults).
 const CKPT_MAGIC: u32 = 0x5350_434b;
-const CKPT_VERSION: u32 = 2;
+const CKPT_VERSION: u32 = 3;
 const CKPT_MIN_VERSION: u32 = 1;
 
 struct ByteWriter {
@@ -462,7 +602,9 @@ impl RequestCheckpoint {
             w.f32s(t);
         }
         // v2 appendix: sample-adaptive controller image (flag 0 keeps
-        // static-policy images one word longer than v1, nothing more)
+        // static-policy images one word longer than v1, nothing more).
+        // v3 widens it with the k-ladder fields, between dense_steps and
+        // the draft name.
         match &self.ctl {
             None => w.u32(0),
             Some(c) => {
@@ -476,7 +618,32 @@ impl RequestCheckpoint {
                 w.u32(c.snap.dense as u32);
                 w.u32(c.snap.probation);
                 w.u64(c.snap.dense_steps);
+                w.u32(c.snap.look);
+                w.u32(c.snap.look_streak);
                 w.string(&c.draft);
+            }
+        }
+        // v3 appendix: accepted-prefix histogram, then a flag word for
+        // the in-flight lookahead run (1 iff parked mid-speculation)
+        w.u64(self.stats.prefix_hist.len() as u64);
+        for h in &self.stats.prefix_hist {
+            w.u64(*h);
+        }
+        if self.look.is_empty() {
+            w.u32(0);
+        } else {
+            w.u32(1);
+            w.u64(self.look.len() as u64);
+            for s in &self.look {
+                w.u64(s.step as u64);
+                w.u64(s.since_full as u64);
+                w.f64(s.tea_accum);
+                w.u64(s.spec_steps as u64);
+                w.u64(s.traj_len as u64);
+                w.f32s(&s.x);
+                w.f32s(&s.last_eps);
+                w.f32s(&s.pred_vin);
+                w.f32s(&s.pred_vout);
             }
         }
         w.buf
@@ -567,6 +734,9 @@ impl RequestCheckpoint {
                 let dense = r.bool32()?;
                 let probation = r.u32()?;
                 let dense_steps = r.u64()?;
+                // v3 widened the controller image with the k-ladder; v2
+                // images resume at the conservative ladder start
+                let (look, look_streak) = if v >= 3 { (r.u32()?, r.u32()?) } else { (1, 0) };
                 let draft = r.string()?;
                 Some(CtlCheckpoint {
                     total,
@@ -579,6 +749,8 @@ impl RequestCheckpoint {
                         dense,
                         probation,
                         dense_steps,
+                        look,
+                        look_streak,
                     },
                     draft,
                 })
@@ -587,6 +759,42 @@ impl RequestCheckpoint {
             }
         } else {
             None
+        };
+        // v3 appendix: accepted-prefix histogram + in-flight run; older
+        // images upgrade to an all-zero histogram sized by the
+        // re-attached policy's cap and an empty run
+        let look = if v >= 3 {
+            let n_hist = r.len()?;
+            stats.prefix_hist =
+                (0..n_hist).map(|_| r.u64()).collect::<Result<Vec<_>, _>>()?;
+            if r.bool32()? {
+                let n_look = r.len()?;
+                if n_look == 0 {
+                    // the encoder spells an empty run as flag 0 — keep
+                    // every decodable image canonically re-encodable
+                    return Err("checkpoint lookahead run flagged present but empty".into());
+                }
+                (0..n_look)
+                    .map(|_| {
+                        Ok::<_, String>(LookSnap {
+                            step: r.u64()? as usize,
+                            since_full: r.u64()? as usize,
+                            tea_accum: r.f64()?,
+                            spec_steps: r.u64()? as usize,
+                            traj_len: r.u64()? as usize,
+                            x: r.f32s()?,
+                            last_eps: r.f32s()?,
+                            pred_vin: r.f32s()?,
+                            pred_vout: r.f32s()?,
+                        })
+                    })
+                    .collect::<Result<Vec<_>, _>>()?
+            } else {
+                Vec::new()
+            }
+        } else {
+            stats.prefix_hist = vec![0; ReqState::look_cap_of(&policy) + 1];
+            Vec::new()
         };
         // a decodable image must be exactly one encoded checkpoint —
         // trailing garbage would silently vanish on re-encode otherwise
@@ -609,6 +817,7 @@ impl RequestCheckpoint {
             prior_ms,
             ctl,
             feat_len,
+            look,
         })
     }
 }
@@ -748,5 +957,41 @@ mod tests {
         let mut bad = bytes.clone();
         bad[0] ^= 0xff;
         assert!(RequestCheckpoint::from_bytes(&bad, Policy::Full, JobMeta::default()).is_err());
+    }
+
+    #[test]
+    fn mid_run_park_resume_reopens_the_lookahead_run() {
+        let mut cfg = SpeCaConfig::default_for_depth(8);
+        cfg.lookahead = 4;
+        let policy = Policy::SpeCa(cfg);
+        let mut st = ReqState::new(spec(policy.clone()), vec![0.5; 8], 8, 4);
+        assert_eq!(st.look_snaps.len(), 3, "cap − 1 preallocated slots");
+        assert_eq!(st.stats.prefix_hist.len(), 5, "cap + 1 histogram buckets");
+        // simulate two intermediate steps of a run
+        st.last_eps = vec![0.25; 8];
+        for s in 0..2 {
+            st.step = 3 + s;
+            st.since_full = 1 + s;
+            st.push_look_snap();
+            st.pred_vin.fill(s as f32);
+            st.pred_vout.fill(10.0 + s as f32);
+            st.stash_look_preds();
+        }
+        assert_eq!(st.spec_run, 2);
+        let snaps = st.look_snaps[..2].to_vec();
+        // in-memory park/resume
+        let ckpt = st.park();
+        assert_eq!(ckpt.look, snaps);
+        let back = ReqState::resume(ckpt);
+        assert_eq!(back.spec_run, 2);
+        assert_eq!(back.look_snaps.len(), 3, "slot pool topped back up");
+        assert_eq!(back.look_snaps[..2], snaps[..]);
+        // byte codec: v3 round-trips the run and the histogram
+        let bytes = back.park().to_bytes();
+        let dec = RequestCheckpoint::from_bytes(&bytes, policy, JobMeta::default()).unwrap();
+        assert_eq!(dec.look, snaps);
+        assert_eq!(dec.stats.prefix_hist, vec![0; 5]);
+        // canonical re-encode
+        assert_eq!(dec.to_bytes(), bytes);
     }
 }

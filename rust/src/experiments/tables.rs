@@ -57,6 +57,7 @@ pub fn run(args: &Args) -> Result<()> {
         "table8" => table8(args),
         "drafts" => drafts_table(args),
         "adaptive" => adaptive_bench(args),
+        "lookahead" => lookahead_bench(args),
         "serve-openloop" => serve_openloop(args),
         "fig2" => fig2(args),
         "fig6" => fig6(args),
@@ -464,8 +465,8 @@ fn table8(args: &Args) -> Result<()> {
 fn drafts_table(args: &Args) -> Result<()> {
     if args.opt("draft").is_some() {
         // RunOpts::from_args would thread --draft into every run_policy
-        // call, collapsing all five rows onto one strategy — reject it
-        // rather than emit a table that silently compares X with itself
+        // call, collapsing every registry row onto one strategy — reject
+        // it rather than emit a table that silently compares X with itself
         bail!("`bench drafts` sweeps every registered strategy; drop --draft");
     }
     with_backends("dit-sim", args, |model, cls| {
@@ -596,6 +597,105 @@ fn adaptive_bench(args: &Args) -> Result<()> {
         &csv,
     )?;
     println!("wrote results/adaptive.csv");
+    Ok(())
+}
+
+/// Lookahead-k sweep (EXPERIMENTS.md §Lookahead): run the scripted-drift
+/// backend at an easy and a hard difficulty bucket under every
+/// combination of lookahead cap k and draft strategy (reuse, taylor,
+/// spectral), and report FLOPs saved vs full compute, realized rel-L1
+/// against a dense run of the same scripts, and the accepted-prefix-
+/// length histogram (column `pj` = verify events that ratified exactly j
+/// steps), to `results/lookahead.csv`. The shapes to check: on the easy
+/// bucket `flops_saved` grows monotonically in k (fewer verify blocks
+/// for the same speculated steps, every run fully ratified → mass in the
+/// top histogram bucket), while the hard bucket's mass collapses onto
+/// the short-prefix buckets and saved stays flat — lookahead only pays
+/// where the drift lets runs survive.
+fn lookahead_bench(args: &Args) -> Result<()> {
+    use crate::workload::scripted::ScriptedBackend;
+
+    const KMAX: usize = 6;
+    let quick = args.bool("quick");
+    let n = if quick { 4 } else { args.usize("n", 16) };
+    let ks: &[usize] = if quick { &[1, 2, 4] } else { &[1, 2, 3, 4, 6] };
+    let drafts = ["reuse", "taylor", "spectral"];
+    let cfg = crate::config::ModelConfig::native_test();
+    let depth = cfg.depth;
+    let steps = cfg.serve_steps;
+    let buckets: &[(&str, &[f32])] = &[("easy", &[0.0005]), ("hard", &[0.5])];
+    println!("== lookahead: k × draft sweep over scripted difficulty buckets (n={n}) ==");
+    println!(
+        "{:<6} {:<10} {:>3} {:>8} {:>9} {:>7} {:>6} {:>6} {:>8}  prefix hist p0..p{KMAX}",
+        "bucket", "draft", "k", "saved", "rel_l1", "alpha", "full", "spec", "rejects"
+    );
+    let mut csv = Vec::new();
+    for (label, drift) in buckets {
+        let model = ScriptedBackend::new(cfg.clone(), drift);
+        let full_flops = crate::metrics::flops::FlopsModel::new(model.entry().flops.clone())
+            .full_step_flops();
+        let dense = run_scripted(&model, &parse_policy("full", depth)?, n)?;
+        for draft in drafts {
+            for &k in ks {
+                let desc = format!(
+                    "speca:N=8,O=1,tau0=0.3,beta=1,draft={draft},metric=l1,lookahead={k}"
+                );
+                let done = run_scripted(&model, &parse_policy(&desc, depth)?, n)?;
+                let mut saved = 0.0;
+                let mut rel_l1 = 0.0;
+                let mut alpha = 0.0;
+                let (mut fulls, mut specs, mut rejects) = (0u64, 0u64, 0u64);
+                let mut hist = [0u64; KMAX + 1];
+                for (c, d) in done.iter().zip(&dense) {
+                    debug_assert_eq!(c.id, d.id);
+                    saved += 1.0 - 1.0 / c.stats.speedup(full_flops, steps).max(1e-9);
+                    let num: f64 = c
+                        .latent
+                        .iter()
+                        .zip(&d.latent)
+                        .map(|(a, b)| (*a as f64 - *b as f64).abs())
+                        .sum();
+                    let den: f64 = d.latent.iter().map(|v| (*v as f64).abs()).sum();
+                    rel_l1 += num / (den + 1e-8);
+                    alpha += c.stats.flops.acceptance_rate();
+                    fulls += c.stats.full_steps as u64;
+                    specs += c.stats.spec_steps as u64;
+                    rejects += c.stats.rejects as u64;
+                    for (j, h) in c.stats.prefix_hist.iter().enumerate() {
+                        hist[j.min(KMAX)] += h;
+                    }
+                }
+                let inv = 1.0 / n as f64;
+                let (saved, rel_l1, alpha) = (saved * inv, rel_l1 * inv, alpha * inv);
+                let hist_cols =
+                    hist.iter().map(|h| h.to_string()).collect::<Vec<_>>().join(",");
+                println!(
+                    "{:<6} {:<10} {:>3} {:>7.1}% {:>9.5} {:>7.3} {:>6} {:>6} {:>8}  [{}]",
+                    label,
+                    draft,
+                    k,
+                    saved * 100.0,
+                    rel_l1,
+                    alpha,
+                    fulls,
+                    specs,
+                    rejects,
+                    hist_cols
+                );
+                csv.push(format!(
+                    "{label},{draft},{k},{saved:.5},{rel_l1:.6},{alpha:.4},{fulls},{specs},\
+                     {rejects},{hist_cols}"
+                ));
+            }
+        }
+    }
+    write_csv(
+        &results_path("lookahead.csv"),
+        "bucket,draft,k,flops_saved,rel_l1,alpha,full_steps,spec_steps,rejects,\
+         p0,p1,p2,p3,p4,p5,p6",
+        &csv,
+    )?;
+    println!("wrote results/lookahead.csv");
     Ok(())
 }
 

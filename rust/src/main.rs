@@ -5,7 +5,7 @@
 //!   generate [--model M] [--policy P] [--n N] [--shards S] ...  — closed-loop batch
 //!   serve    [--model M] [--addr A] [--shards S]                — TCP JSON-lines server
 //!   load     [--addr A] [--n N] [--conns C]                     — load generator
-//!   bench    <table1..8|drafts|adaptive|serve-openloop|fig…>    — experiment runners
+//!   bench    <table1..8|drafts|adaptive|lookahead|serve-openloop|fig…>  — experiment runners
 //!            (micro perf data: `cargo bench --bench micro_runtime`)
 //!
 //! Every command takes `--backend native|pjrt|auto` (default auto): the
@@ -156,6 +156,11 @@ COMMANDS:
   generate                   run a closed-loop batch through the engine
       --model dit-sim --policy speca:N=5,O=2,tau0=0.3,beta=0.05 --n 8
       --inflight 8 --shards 1 --strategy binary --seed 0 --dump-pgm out/
+      --lookahead K          cap SpeCa lookahead runs at K speculated
+                             steps per verify point (policy key
+                             lookahead=<k>, wire field lookahead:<k>;
+                             default 1 = verify every speculative step;
+                             DESIGN.md §16)
   serve                      start the TCP JSON-lines server (protocol v2:
       --model dit-sim --addr 127.0.0.1:7433 --inflight 8 --shards 4
       --router least-loaded|round-robin --max-queue 1024
@@ -195,6 +200,9 @@ COMMANDS:
       | adaptive (sample-adaptive error-budget sweep over scripted
         easy/medium/hard drift buckets → results/adaptive.csv;
         policy key adaptive=<budget>, wire field adaptive:<budget>)
+      | lookahead (lookahead-k sweep: k × draft over scripted easy/hard
+        drift buckets + accepted-prefix-length histogram →
+        results/lookahead.csv; EXPERIMENTS.md §Lookahead)
       [--quick] [--n N] [--shards S]
       (micro perf: cargo bench --bench micro_runtime — also writes
        results/bench_micro.json: ns/iter + allocs/iter per bench)
@@ -322,10 +330,13 @@ fn generate(args: &Args) -> Result<()> {
     let req = BackendRequest::from_args(args);
     resolve::with_model(&req, |model| {
         let entry = model.entry();
-        let policy = workload::parse_policy(
+        let mut policy = workload::parse_policy(
             &args.str("policy", "speca:N=5,O=2,tau0=0.3,beta=0.05"),
             entry.config.depth,
         )?;
+        if args.opt("lookahead").is_some() {
+            workload::apply_lookahead(&mut policy, args.usize("lookahead", 1));
+        }
         let opts = run_opts(args, args.usize("n", 8))?;
         let run = run_policy(&model, &policy, "generate", &opts)?;
         let n = opts.n;

@@ -188,7 +188,7 @@ pub(crate) struct ConnCtx {
 }
 
 /// Parse the v2 job options (`priority`, `deadline_ms`, `return_latent`,
-/// `preemptible`, `group`, `adaptive`) shared by `submit` and the v1
+/// `preemptible`, `group`, `adaptive`, `lookahead`) shared by `submit` and the v1
 /// `generate` shim. Built through the [`SubmitOptions`] builder — the
 /// struct is `#[non_exhaustive]`, so this is also the canonical
 /// construction path.
@@ -227,6 +227,15 @@ fn submit_options_from_json(req: &Json) -> Result<SubmitOptions> {
             bail!("'adaptive' must be non-negative, got {b}");
         }
         opts = opts.adaptive(b);
+    }
+    if let Some(l) = req.get("lookahead") {
+        let Some(k) = l.as_u64() else {
+            bail!("'lookahead' must be an integer >= 1 (speculated steps per verify point)");
+        };
+        if k < 1 {
+            bail!("'lookahead' must be >= 1, got {k}");
+        }
+        opts = opts.lookahead(k as usize);
     }
     Ok(opts)
 }

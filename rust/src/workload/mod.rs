@@ -23,6 +23,8 @@ use crate::util::rng::Rng;
 ///   `speca:N=5,O=2,tau0=0.3,beta=0.05,layer=7,draft=taylor,metric=l2`
 ///   `speca:N=5,adaptive=0.5` (sample-adaptive error budget; see
 ///   [`AdaptiveController`](crate::coordinator::adaptive::AdaptiveController))
+///   `speca:N=8,lookahead=4` (lookahead-k speculation: one verify may
+///   ratify a run of up to k steps; DESIGN.md §16)
 /// Unspecified keys take the defaults above (`layer` defaults to depth−1).
 /// Malformed numeric values are an error naming the key (a typo like
 /// `tau0=abc` must not silently run with the default). `draft=<name>`
@@ -94,6 +96,13 @@ pub fn parse_policy(desc: &str, depth: usize) -> Result<Policy> {
                 }
                 c.adaptive = Some(b);
             }
+            if kv.contains_key("lookahead") {
+                let k = get_u("lookahead", 1)?;
+                if k < 1 {
+                    bail!("policy '{desc}': key 'lookahead' expects an integer >= 1, got '{k}'");
+                }
+                c.lookahead = k;
+            }
             Policy::SpeCa(c)
         }
         _ => bail!("unknown policy '{name}'"),
@@ -123,7 +132,8 @@ pub fn policy_from_json_with(
     let desc = j.get("policy").and_then(|p| p.as_str()).unwrap_or("speca");
     // allow structured overrides: {"policy":"speca","tau0":0.5,...}
     let mut s = desc.to_string();
-    let keys = ["N", "O", "keep", "l", "R", "tau0", "beta", "layer", "metric", "adaptive"];
+    let keys =
+        ["N", "O", "keep", "l", "R", "tau0", "beta", "layer", "metric", "adaptive", "lookahead"];
     let mut parts = Vec::new();
     for k in keys {
         if let Some(v) = j.get(k) {
@@ -165,6 +175,15 @@ pub fn policy_from_json_with(
 pub fn apply_draft(policy: &mut Policy, draft: &Draft) {
     if let Policy::SpeCa(c) = policy {
         c.draft = draft.clone();
+    }
+}
+
+/// Override the lookahead cap of a SpeCa policy in place (no-op for
+/// other policies; clamped to ≥ 1). Shared by `--lookahead` handling on
+/// generate and the bench runners — see DESIGN.md §16.
+pub fn apply_lookahead(policy: &mut Policy, k: usize) {
+    if let Policy::SpeCa(c) = policy {
+        c.lookahead = k.max(1);
     }
 }
 
@@ -232,6 +251,7 @@ mod tests {
         assert_eq!(c.interval, 9);
         assert_eq!(c.verify_layer, 7);
         assert_eq!(c.adaptive, None, "adaptive allocation is opt-in");
+        assert_eq!(c.lookahead, 1, "lookahead-k speculation is opt-in");
     }
 
     #[test]
@@ -250,6 +270,39 @@ mod tests {
         let j = Json::parse(r#"{"policy":"speca","adaptive":0.25}"#).unwrap();
         let Policy::SpeCa(c) = policy_from_json(&j, 8).unwrap() else { panic!() };
         assert_eq!(c.adaptive, Some(0.25));
+    }
+
+    #[test]
+    fn lookahead_key_parses_and_validates() {
+        let Policy::SpeCa(c) = parse_policy("speca:N=8,lookahead=4", 8).unwrap() else {
+            panic!()
+        };
+        assert_eq!(c.lookahead, 4);
+        // k=1 is the explicit spelling of the default; 0 and garbage are not
+        let Policy::SpeCa(c) = parse_policy("speca:lookahead=1", 8).unwrap() else { panic!() };
+        assert_eq!(c.lookahead, 1);
+        let err = parse_policy("speca:lookahead=0", 8).unwrap_err().to_string();
+        assert!(err.contains("lookahead"), "{err}");
+        assert!(parse_policy("speca:lookahead=many", 8).is_err());
+        // describe() is the parse inverse: emitted only when non-default
+        let p = parse_policy("speca:N=8,lookahead=4", 8).unwrap();
+        assert!(p.describe().contains("lookahead=4"), "{}", p.describe());
+        let rt = parse_policy(&p.describe(), 8).unwrap();
+        assert_eq!(rt.describe(), p.describe());
+        let p1 = parse_policy("speca:lookahead=1", 8).unwrap();
+        assert!(!p1.describe().contains("lookahead"), "{}", p1.describe());
+        // and through the JSON structured-override surface
+        let j = Json::parse(r#"{"policy":"speca","lookahead":3}"#).unwrap();
+        let Policy::SpeCa(c) = policy_from_json(&j, 8).unwrap() else { panic!() };
+        assert_eq!(c.lookahead, 3);
+        // apply_lookahead is the CLI override hook and clamps to >= 1
+        let mut p = parse_policy("speca", 8).unwrap();
+        apply_lookahead(&mut p, 5);
+        let Policy::SpeCa(c) = &p else { panic!() };
+        assert_eq!(c.lookahead, 5);
+        apply_lookahead(&mut p, 0);
+        let Policy::SpeCa(c) = &p else { panic!() };
+        assert_eq!(c.lookahead, 1);
     }
 
     #[test]

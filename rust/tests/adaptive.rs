@@ -300,9 +300,9 @@ fn adaptive_park_resume_and_byte_codec_are_bitwise_at_every_boundary() {
     }
 }
 
-/// ISSUE acceptance (c): SPCK v1 images (no controller appendix) from a
-/// static request on the scripted backend still decode, upgrade to v2
-/// losslessly, and resume bitwise.
+/// ISSUE acceptance (c): SPCK v1 images (no controller appendix, no
+/// lookahead appendix) from a static request on the scripted backend
+/// still decode, upgrade to the current version, and resume bitwise.
 #[test]
 fn spck_v1_images_from_static_requests_decode_and_resume_bitwise() {
     let desc = "speca:N=5,O=1,tau0=0.05,beta=1,metric=l1";
@@ -314,16 +314,25 @@ fn spck_v1_images_from_static_requests_decode_and_resume_bitwise() {
         assert!(engine.tick().unwrap());
     }
     let ckpt = park_one(&mut engine, 4);
-    let v2 = ckpt.to_bytes();
-    // strip the zero controller-flag word and patch the version field —
-    // byte-for-byte the layout a v1 writer produced
-    assert_eq!(&v2[v2.len() - 4..], &[0u8; 4], "static requests carry no controller");
-    let mut v1 = v2[..v2.len() - 4].to_vec();
+    let v3 = ckpt.to_bytes();
+    // a static cap-1 image ends in [ctl flag 0][hist len 2][2 hist
+    // words][run flag 0]; strip the whole 32-byte tail and patch the
+    // version field — byte-for-byte the layout a v1 writer produced
+    let n = v3.len();
+    assert_eq!(&v3[n - 4..], &[0u8; 4], "static k=1 requests park outside a run");
+    assert_eq!(&v3[n - 28..n - 20], &2u64.to_le_bytes(), "cap-1 histogram length");
+    assert_eq!(&v3[n - 32..n - 28], &[0u8; 4], "static requests carry no controller");
+    let mut v1 = v3[..n - 32].to_vec();
     v1[4..8].copy_from_slice(&1u32.to_le_bytes());
     let decoded = RequestCheckpoint::from_bytes(&v1, ckpt.spec.policy.clone(), ckpt.spec.meta)
         .expect("v1 images must keep decoding");
     assert!(decoded.ctl.is_none(), "v1 images carry no controller state");
-    assert_eq!(decoded.to_bytes(), v2, "the v1→v2 upgrade adds only the zero flag");
+    assert!(decoded.look.is_empty(), "v1 images carry no in-flight run");
+    // the upgrade re-adds the two zero flags verbatim; the histogram is
+    // the one record a v1 writer never kept, so it comes back zeroed
+    let mut expect = v3.clone();
+    expect[n - 20..n - 4].fill(0);
+    assert_eq!(decoded.to_bytes(), expect, "the v1→v3 upgrade zeroes only the histogram");
     let reference = run_uninterrupted(&model, spec(0, depth, desc));
     let mut peer = Engine::new(model.clone(), EngineConfig::default());
     peer.submit_checkpoint(Box::new(decoded));

@@ -158,7 +158,21 @@ fn parked_blob(
     (ckpt.to_bytes(), ckpt.spec.policy.clone(), ckpt.spec.meta.clone())
 }
 
-/// Strip the v2 controller appendix (a single zero flag word on
+/// Strip the v3 lookahead appendix — on a static-policy (`lookahead`
+/// unset, so cap-1) image parked outside a run that is the two-bucket
+/// accepted-prefix histogram block plus a zero run-flag word — and
+/// patch the version field: byte-for-byte the layout a v2 writer
+/// produced.
+fn downgrade_to_v2(v3: &[u8]) -> Vec<u8> {
+    let n = v3.len();
+    assert_eq!(&v3[n - 4..], &[0u8; 4], "expected an image parked outside a run");
+    assert_eq!(&v3[n - 28..n - 20], &2u64.to_le_bytes(), "expected a cap-1 histogram");
+    let mut v2 = v3[..n - 28].to_vec();
+    v2[4..8].copy_from_slice(&2u32.to_le_bytes());
+    v2
+}
+
+/// Further strip the v2 controller appendix (a single zero flag word on
 /// static-policy images) and patch the version field — byte-for-byte
 /// the layout a v1 writer produced.
 fn downgrade_to_v1(v2: &[u8]) -> Vec<u8> {
@@ -173,12 +187,17 @@ fn spck_v1_images_still_decode_and_resume_bitwise() {
     let model = native_model();
     let depth = model.entry().config.depth;
     let desc = "speca:N=5,O=2,tau0=0.3,beta=0.05";
-    let (v2, policy, meta) = parked_blob(&model, desc, 4);
-    let v1 = downgrade_to_v1(&v2);
+    let (v3, policy, meta) = parked_blob(&model, desc, 4);
+    let v1 = downgrade_to_v1(&downgrade_to_v2(&v3));
     let decoded = RequestCheckpoint::from_bytes(&v1, policy, meta).unwrap();
     assert!(decoded.ctl.is_none(), "v1 images carry no controller state");
-    // re-encoding upgrades to v2; the upgrade adds only the zero flag
-    assert_eq!(decoded.to_bytes(), v2);
+    assert!(decoded.look.is_empty(), "v1 images carry no in-flight run");
+    // re-encoding upgrades to v3: the zero controller and run flags come
+    // back verbatim, and the accepted-prefix histogram — the one record
+    // a v1 writer never kept — returns zeroed
+    let mut expect = v3.clone();
+    expect[v3.len() - 20..v3.len() - 4].fill(0);
+    assert_eq!(decoded.to_bytes(), expect);
     let reference = run_uninterrupted(&model, spec(9, depth, desc));
     let mut peer = Engine::new(model.clone(), EngineConfig::default());
     peer.submit_checkpoint(Box::new(decoded));
@@ -187,23 +206,25 @@ fn spck_v1_images_still_decode_and_resume_bitwise() {
 }
 
 /// Structured fuzz over the SPCK codec: deterministic xorshift-driven
-/// truncation, single-bit flips and length-prefix blasts over v1 and v2
-/// images (with and without controller state). The invariants: decode
-/// never panics; an `Ok` decode of a v2 image re-encodes bitwise
-/// identically (the codec is canonical); an `Ok` decode of a v1 image
-/// upgrades to a stable v2 image; every `Err` carries a message.
+/// truncation, single-bit flips and length-prefix blasts over v1, v2
+/// and v3 images (with and without controller state, and one parked
+/// mid-speculation so the in-flight run appendix is exercised). The
+/// invariants: decode never panics; an `Ok` decode of a v3 image
+/// re-encodes bitwise identically (the codec is canonical); an `Ok`
+/// decode of a v1/v2 image upgrades to a stable v3 image; every `Err`
+/// carries a message.
 #[test]
 fn spck_codec_structured_fuzz_never_panics_and_stays_canonical() {
     fn check(bytes: &[u8], policy: &Policy, meta: &JobMeta) -> bool {
         match RequestCheckpoint::from_bytes(bytes, policy.clone(), meta.clone()) {
             Ok(ck) => {
                 let re = ck.to_bytes();
-                if bytes.len() >= 8 && bytes[4..8] == 2u32.to_le_bytes() {
-                    assert_eq!(re, bytes, "v2 decode∘encode must be the identity");
+                if bytes.len() >= 8 && bytes[4..8] == 3u32.to_le_bytes() {
+                    assert_eq!(re, bytes, "v3 decode∘encode must be the identity");
                 } else {
                     let again = RequestCheckpoint::from_bytes(&re, policy.clone(), meta.clone())
                         .expect("re-encoded image must decode");
-                    assert_eq!(again.to_bytes(), re, "v1→v2 upgrade must be stable");
+                    assert_eq!(again.to_bytes(), re, "v1/v2→v3 upgrade must be stable");
                 }
                 true
             }
@@ -219,12 +240,15 @@ fn spck_codec_structured_fuzz_never_panics_and_stays_canonical() {
     for (desc, ticks) in [
         ("speca:N=5,O=2,tau0=0.3,beta=0.05", 4),
         ("speca:N=4,O=1,tau0=0.3,beta=0.05,adaptive=0.5", 5),
+        ("speca:N=12,O=2,tau0=0.3,beta=0.05,lookahead=4", 4),
         ("teacache:l=0.6", 3),
     ] {
         blobs.push(parked_blob(&model, desc, ticks));
     }
-    let (v2, policy, meta) = blobs[0].clone();
-    blobs.push((downgrade_to_v1(&v2), policy, meta));
+    let (v3, policy, meta) = blobs[0].clone();
+    let v2 = downgrade_to_v2(&v3);
+    blobs.push((downgrade_to_v1(&v2), policy.clone(), meta.clone()));
+    blobs.push((v2, policy, meta));
 
     let mut rng = Rng::new(0x5943_F00D);
     for (bytes, policy, meta) in &blobs {

@@ -1,0 +1,283 @@
+//! Integration: lookahead-k speculative execution (DESIGN.md §16) on
+//! the deterministic error-injection backend. The drift script decides
+//! every verify and audit outcome in advance, so the accept-a-prefix
+//! machinery is pinned exactly: a rejected run ratifies precisely the
+//! engineered prefix j of k, `lookahead=1` is bitwise-identical to the
+//! pre-lookahead engine, the adaptive k-ladder grows on scripted accept
+//! streaks, a request parked mid-speculation round-trips through the
+//! SPCK v3 codec at every tick boundary, and the spectral draft matches
+//! a direct scalar DCT oracle.
+
+use std::f32::consts::PI;
+use std::sync::Arc;
+
+use speca::cache::{Draft, TapHistory};
+use speca::config::ModelConfig;
+use speca::coordinator::state::{Completion, RequestCheckpoint, RequestSpec};
+use speca::coordinator::{Admission, Engine, EngineConfig, JobMeta};
+use speca::runtime::ModelBackend;
+use speca::workload::parse_policy;
+use speca::workload::scripted::ScriptedBackend;
+
+/// Per-step rel error far below any threshold: every verify accepts.
+const EASY: &[f32] = &[0.0005];
+/// Alternating tiny/large drift: a mixed accept/reject trace.
+const MIXED: &[f32] = &[0.001, 0.35];
+/// One hard step (index 3) in an otherwise drift-free schedule: the
+/// first k=4 run verifies at step 4 against refresh 0 and rejects with
+/// e = 0.5, and its audit accepts exactly steps 1 and 2 (see
+/// `a_rejected_run_ratifies_exactly_the_passing_prefix`).
+const SPIKE: &[f32] = &[0.0, 0.0, 0.0, 0.5, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0];
+
+fn scripted(drift: &[f32]) -> Arc<ScriptedBackend> {
+    Arc::new(ScriptedBackend::new(ModelConfig::native_test(), drift))
+}
+
+fn spec(id: u64, depth: usize, desc: &str) -> RequestSpec {
+    RequestSpec {
+        id,
+        cond: (id % 4) as i32,
+        seed: 100 + id,
+        policy: parse_policy(desc, depth).unwrap(),
+        record_traj: false,
+        meta: JobMeta::default(),
+    }
+}
+
+/// The request run start-to-finish on one engine with no interruption —
+/// the reference every park/resume variant must match bitwise.
+fn run_uninterrupted(model: &Arc<ScriptedBackend>, s: RequestSpec) -> Completion {
+    let mut engine = Engine::new(model.clone(), EngineConfig::default());
+    engine.submit(s);
+    let mut done = engine.run_to_completion().unwrap();
+    assert_eq!(done.len(), 1);
+    done.pop().unwrap()
+}
+
+/// Everything observable about a completion except wall-clock latency
+/// must match exactly.
+fn assert_bitwise(a: &Completion, b: &Completion, what: &str) {
+    assert_eq!(a.id, b.id, "{what}: id");
+    assert_eq!(a.policy_name, b.policy_name, "{what}: policy");
+    assert_eq!(a.latent, b.latent, "{what}: final latent drifted");
+    assert_eq!(a.stats.full_steps, b.stats.full_steps, "{what}: full steps");
+    assert_eq!(a.stats.spec_steps, b.stats.spec_steps, "{what}: spec steps");
+    assert_eq!(a.stats.rejects, b.stats.rejects, "{what}: rejects");
+    assert_eq!(a.stats.verify_trace, b.stats.verify_trace, "{what}: verify trace");
+    assert_eq!(a.stats.prefix_hist, b.stats.prefix_hist, "{what}: prefix histogram");
+    assert_eq!(a.stats.flops.total(), b.stats.flops.total(), "{what}: booked FLOPs");
+}
+
+/// Park the engine's single in-flight request — mid-run boundaries are
+/// legal park points, so (unlike the `tests/adaptive.rs` twin) no step
+/// value is asserted here.
+fn park_one(engine: &mut Engine<'_>) -> Box<RequestCheckpoint> {
+    let mut units = engine.park_all();
+    assert_eq!(units.len(), 1, "expected one in-flight request");
+    let Some(Admission::Parked(ckpt)) = units.pop() else {
+        panic!("park_all returned a fresh spec");
+    };
+    ckpt
+}
+
+/// ISSUE acceptance: `lookahead=1` (and the key left unset, which
+/// defaults to 1) is bitwise-identical to the pre-lookahead engine —
+/// same latent, same verify trace, same booked FLOPs — for both static
+/// and adaptive requests on a mixed accept/reject script.
+#[test]
+fn lookahead_one_is_bitwise_identical_to_the_default() {
+    let model = scripted(MIXED);
+    let depth = model.entry().config.depth;
+    for base in [
+        "speca:N=5,O=1,tau0=0.05,beta=1,metric=l1",
+        "speca:N=12,O=1,tau0=0.3,beta=1,metric=l1,adaptive=10",
+    ] {
+        let with_key = format!("{base},lookahead=1");
+        let a = run_uninterrupted(&model, spec(0, depth, base));
+        let b = run_uninterrupted(&model, spec(0, depth, &with_key));
+        assert_bitwise(&a, &b, &format!("{base}: lookahead=1 vs unset"));
+    }
+}
+
+/// ISSUE acceptance: with an engineered drift spike the first k=4 run
+/// rejects at its verify point and the audit ratifies exactly the
+/// j=2-of-3 intermediate prefix; the engine rolls the latent back to
+/// the last accepted boundary, re-executes the rejected step densely,
+/// and the remaining runs accept whole. Every observable — step
+/// accounting, verify/audit trace, prefix histogram, final latent — is
+/// pinned.
+#[test]
+fn a_rejected_run_ratifies_exactly_the_passing_prefix() {
+    let desc = "speca:N=12,O=1,tau0=0.3,beta=1,draft=reuse,metric=l1,lookahead=4";
+    let model = scripted(SPIKE);
+    let depth = model.entry().config.depth;
+    let c4 = run_uninterrupted(&model, spec(0, depth, desc));
+
+    // step 0 refreshes (level 1); steps 1,2,3 speculate ahead; the
+    // verify at step 4 sees e = 1 − level(0)/level(4) = 0.5 > τ = 0.3
+    // and rejects; the audit replays the stored predictions: e(1) = 0,
+    // e(2) = 0, e(3) = 0.5 → prefix j = 2. The rolled-back step 3 runs
+    // densely in the same tick (second refresh, level 2), after which
+    // the runs 4-7 and 8-11 verify at e = 0 and ratify whole.
+    assert_eq!(c4.stats.full_steps, 2, "refresh at step 0 plus the rolled-back step 3");
+    assert_eq!(c4.stats.spec_steps, 10, "all other steps speculate");
+    assert_eq!(c4.stats.rejects, 1, "exactly the engineered rejection");
+    assert_eq!(
+        c4.stats.prefix_hist,
+        vec![0, 0, 1, 0, 2],
+        "one audited j=2 prefix, two whole k=4 runs"
+    );
+    assert_eq!(
+        c4.stats.verify_trace,
+        vec![
+            (4, 0.5, 0.3),  // the rejected verify point
+            (1, 0.0, 0.3),  // audit rows, ascending step order
+            (2, 0.0, 0.3),
+            (3, 0.5, 0.3),
+            (7, 0.0, 0.3),  // the two whole-run verifies
+            (11, 0.0, 0.3),
+        ],
+        "the verify + audit trace is pinned by the script"
+    );
+
+    // the k=1 engine walks the same accept/reject path step by step
+    // (reject at step 3, dense re-execution, accepts elsewhere), so the
+    // final latent must agree bitwise even though the traces differ
+    let c1 = run_uninterrupted(
+        &model,
+        spec(0, depth, "speca:N=12,O=1,tau0=0.3,beta=1,draft=reuse,metric=l1,lookahead=1"),
+    );
+    assert_eq!(c1.stats.full_steps, 2, "k=1 rejects the same step densely");
+    assert_eq!(c1.stats.rejects, 1);
+    assert_eq!(c4.latent, c1.latent, "prefix rollback must land on the k=1 trajectory");
+}
+
+/// The adaptive k-ladder grows on scripted accept streaks: starting at
+/// k=1, every [`speca::coordinator::adaptive::LOOK_GROW_AFTER`] (= 2)
+/// consecutive accepted verifies buy one more step of run length, and
+/// the prefix histogram records the longer runs as they appear.
+#[test]
+fn adaptive_k_ladder_grows_on_sustained_acceptance() {
+    let desc = "speca:N=12,O=1,tau0=0.3,beta=1,draft=reuse,metric=l1,adaptive=10,lookahead=4";
+    let model = scripted(EASY);
+    let depth = model.entry().config.depth;
+    let c = run_uninterrupted(&model, spec(0, depth, desc));
+    assert_eq!(c.stats.full_steps, 1, "only the step-0 refresh is dense");
+    assert_eq!(c.stats.spec_steps, 11, "every other step speculates");
+    assert_eq!(c.stats.rejects, 0, "the easy script never rejects");
+    // verifies at steps 1,2 (k=1, growing to 2), 4,6 (k=2, growing to
+    // 3), 9 (k=3, growing pending), 11 (run cut to 2 by the end of the
+    // schedule): runs of length 1,1,2,2,3,2
+    assert_eq!(
+        c.stats.prefix_hist,
+        vec![0, 2, 3, 1, 0],
+        "the ladder climbs 1 → 2 → 3 across the schedule"
+    );
+}
+
+/// ISSUE acceptance: a lookahead-4 request parks and resumes bitwise at
+/// *every* tick boundary — including mid-run boundaries with 1, 2 or 3
+/// unratified speculated steps in flight — through the SPCK v3 byte
+/// codec, on a different engine.
+#[test]
+fn spck_v3_round_trips_mid_speculation_at_every_boundary() {
+    let desc = "speca:N=12,O=1,tau0=0.3,beta=1,draft=reuse,metric=l1,lookahead=4";
+    let model = scripted(SPIKE);
+    let depth = model.entry().config.depth;
+    let reference = run_uninterrupted(&model, spec(0, depth, desc));
+    // open-run length after each tick: three runs of aheads broken by
+    // the audit tick (which nets zero step movement: rollback + dense
+    // re-execution) and the accepted verify points
+    let expect_run = [0usize, 1, 2, 3, 0, 1, 2, 3, 0, 1, 2, 3];
+    for (b, &run) in expect_run.iter().enumerate().map(|(i, r)| (i + 1, r)) {
+        let mut engine = Engine::new(model.clone(), EngineConfig::default());
+        engine.submit(spec(0, depth, desc));
+        for _ in 0..b {
+            assert!(engine.tick().unwrap(), "engine idle before tick {b}");
+        }
+        assert_eq!(
+            engine.speculation_depth(0),
+            Some(run),
+            "tick {b}: open-run depth while resident"
+        );
+        let ckpt = park_one(&mut engine);
+        let policy = ckpt.spec.policy.clone();
+        let meta = ckpt.spec.meta.clone();
+        let bytes = ckpt.to_bytes();
+        let decoded = RequestCheckpoint::from_bytes(&bytes, policy, meta)
+            .expect("a parked mid-run image must decode");
+        assert_eq!(decoded.to_bytes(), bytes, "tick {b}: codec not canonical");
+        assert_eq!(decoded.look.len(), run, "tick {b}: in-flight run snapshots");
+        let mut peer = Engine::new(model.clone(), EngineConfig::default());
+        peer.submit_checkpoint(Box::new(decoded));
+        let mut done = peer.run_to_completion().unwrap();
+        assert_eq!(done.len(), 1);
+        assert_eq!(peer.resumed, 1);
+        assert_bitwise(&reference, &done.pop().unwrap(), &format!("resume at tick {b}"));
+    }
+}
+
+/// The spectral draft's collapsed per-factor axpy sweep must match a
+/// direct scalar oracle: reconstruct the chronological refresh
+/// snapshots from the difference factors, take their DCT-II per
+/// channel, damp coefficient n by 0.7ⁿ (the registry default) and
+/// evaluate the basis at the fractional position p* = m + k/N past the
+/// window.
+#[test]
+fn spectral_draft_matches_a_direct_dct_oracle() {
+    let spectral = Draft::named("spectral").expect("spectral is a registry builtin");
+    assert_eq!(spectral.name(), "spectral");
+    // chronological refresh snapshots g₀ (oldest) .. g₂ (newest)
+    let g = [
+        vec![1.0f32, -2.0, 0.25, 8.0],
+        vec![1.5f32, -1.0, 0.20, 6.5],
+        vec![2.5f32, 0.5, 0.10, 5.75],
+    ];
+    let m = 2usize;
+    let interval = 4.0f32;
+    let damp = 0.7f32;
+    // backward differences at the newest snapshot: Δ⁰ = g₂,
+    // Δ¹ = g₂ − g₁, Δ² = g₂ − 2g₁ + g₀
+    let d0 = g[2].clone();
+    let d1: Vec<f32> = g[2].iter().zip(&g[1]).map(|(a, b)| a - b).collect();
+    let d2: Vec<f32> =
+        g[2].iter().zip(&g[1]).zip(&g[0]).map(|((a, b), c)| a - 2.0 * b + c).collect();
+    let factors = [d0.clone(), d1, d2];
+    let hist = TapHistory::new(&factors, m, interval);
+    for k in [1.0f32, 2.0, 3.0, 6.0] {
+        let mut out = vec![0.0f32; 4];
+        spectral.predict_into(&hist, k, &mut out);
+        let l = (m + 1) as f32;
+        let pstar = m as f32 + k / interval;
+        for c in 0..4 {
+            let mut oracle = 0.0f32;
+            for n in 0..=m {
+                let coeff: f32 = (0..=m)
+                    .map(|p| g[p][c] * (PI * n as f32 * (p as f32 + 0.5) / l).cos())
+                    .sum();
+                let scale = if n == 0 { 0.5 } else { damp.powi(n as i32) };
+                oracle += scale * coeff * (PI * n as f32 * (pstar + 0.5) / l).cos();
+            }
+            oracle *= 2.0 / l;
+            assert!(
+                (out[c] - oracle).abs() <= 1e-4 * (1.0 + oracle.abs()),
+                "k={k} channel {c}: draft {} vs oracle {oracle}",
+                out[c]
+            );
+        }
+    }
+    // the DCT weights sum to 1 at every horizon, so a constant
+    // trajectory is predicted exactly (up to f32 summation noise)
+    let flat = [vec![3.0f32; 2], vec![0.0f32; 2], vec![0.0f32; 2]];
+    let fh = TapHistory::new(&flat, m, interval);
+    let mut out = vec![0.0f32; 2];
+    spectral.predict_into(&fh, 5.0, &mut out);
+    for v in &out {
+        assert!((v - 3.0).abs() <= 1e-5, "constant trajectory must be DC-exact, got {v}");
+    }
+    // with no observed differences the draft degrades to feature reuse
+    let h0 = TapHistory::new(&factors, 0, interval);
+    let mut out = vec![0.0f32; 4];
+    spectral.predict_into(&h0, 3.0, &mut out);
+    assert_eq!(out, d0, "usable order 0 must reuse the newest snapshot");
+}
